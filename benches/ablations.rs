@@ -1,0 +1,190 @@
+//! Ablation benches (E2, E5, E6, E9-adjacent): the design-choice
+//! experiments DESIGN.md calls out.
+//!
+//! * E2 — prints the Table-2 recipe for all 8 variants and checks the
+//!   size arithmetic;
+//! * E5 — integer layer norm with vs without the `s' = 2^-10` factor
+//!   (quality collapse without it);
+//! * E6 — the §3.1.1 accumulator safe-depth table;
+//! * batching-policy sweep on the serving stack.
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use std::time::Duration;
+
+use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::lstm::{
+    FloatLstm, FloatState, IntegerState, LstmSpec, LstmWeights, QuantizeOptions,
+    StackEngine, StackWeights,
+};
+use iqrnn::lstm::quantize_lstm;
+use iqrnn::lstm::CalibrationStats;
+use iqrnn::model::lm::{CharLm, VOCAB};
+use iqrnn::quant::overflow::safe_accumulation_depth;
+use iqrnn::quant::recipe::{Gate, LstmRecipe, TensorRole, VariantFlags};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+fn recipe_table() {
+    println!("== E2: Table 2 — the quantization recipe (bits per tensor) ==\n");
+    let variants = VariantFlags::all_eight();
+    print!("{:<10}", "tensor");
+    for v in &variants {
+        print!("{:>10}", v.label());
+    }
+    println!();
+    let roles: Vec<(String, TensorRole)> = {
+        let mut r: Vec<(String, TensorRole)> = vec![
+            ("x".into(), TensorRole::Input),
+            ("W_i".into(), TensorRole::InputWeight(Gate::Input)),
+            ("R_i".into(), TensorRole::RecurrentWeight(Gate::Input)),
+            ("P_i".into(), TensorRole::Peephole(Gate::Input)),
+            ("b_i".into(), TensorRole::Bias(Gate::Input)),
+            ("W_proj".into(), TensorRole::ProjectionWeight),
+            ("b_proj".into(), TensorRole::ProjectionBias),
+            ("h".into(), TensorRole::Output),
+            ("c".into(), TensorRole::CellState),
+            ("L_i".into(), TensorRole::LayerNormWeight(Gate::Input)),
+            ("g_i".into(), TensorRole::GateOutput(Gate::Input)),
+            ("m".into(), TensorRole::Hidden),
+        ];
+        r.drain(..).collect()
+    };
+    for (name, role) in roles {
+        print!("{name:<10}");
+        for v in &variants {
+            let e = LstmRecipe::new(*v).entry(role);
+            if e.exists() {
+                print!("{:>10}", e.bits);
+            } else {
+                print!("{:>10}", "—");
+            }
+        }
+        println!();
+    }
+    // Size arithmetic (Table 1 size column driver).
+    let plain = LstmRecipe::new(VariantFlags::plain());
+    let q = plain.weight_bytes(512, 2048, 2048);
+    let f = plain.float_weight_bytes(512, 2048, 2048);
+    println!(
+        "\nsize check (2048-cell layer): float {:.1}MB -> integer {:.1}MB ({:.2}x; paper: 466->117MB ≈ 3.98x)\n",
+        f as f64 / 1e6,
+        q as f64 / 1e6,
+        f as f64 / q as f64
+    );
+}
+
+fn layernorm_ablation() {
+    println!("== E5: integer layer norm with vs without s' = 2^-10 ==\n");
+    let mut rng = Pcg32::seeded(21);
+    let spec = LstmSpec::plain(24, 48).with_layer_norm();
+    let weights = LstmWeights::random(spec, &mut rng);
+    let float = FloatLstm::new(weights.clone());
+    let calib: Vec<Vec<Vec<f32>>> = (0..8)
+        .map(|_| {
+            (0..24)
+                .map(|_| (0..24).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect()
+        })
+        .collect();
+    let stats = CalibrationStats::collect(&float, &calib);
+    let good = quantize_lstm(&weights, &stats, QuantizeOptions::default());
+    let naive = quantize_lstm(
+        &weights,
+        &stats,
+        QuantizeOptions { naive_layernorm: true, ..Default::default() },
+    );
+
+    let eval: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..24).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let mut fs = FloatState::zeros(&spec);
+    let fo = float.run_sequence(&eval, &mut fs);
+    let mut err_good = 0f64;
+    let mut err_naive = 0f64;
+    let mut n = 0usize;
+    let mut gs = IntegerState::zeros(&good);
+    let go = good.run_sequence(&eval, &mut gs);
+    let mut ns = IntegerState::zeros(&naive);
+    let no = naive.run_sequence(&eval, &mut ns);
+    for t in 0..eval.len() {
+        for j in 0..spec.n_output {
+            err_good += f64::from((fo[t][j] - go[t][j]).abs());
+            err_naive += f64::from((fo[t][j] - no[t][j]).abs());
+            n += 1;
+        }
+    }
+    println!(
+        "  mean |float − integer| divergence: with s' = {:.5}, without s' = {:.5} ({:.0}x worse)",
+        err_good / n as f64,
+        err_naive / n as f64,
+        err_naive / err_good.max(1e-12)
+    );
+    println!(
+        "  paper: without the factor, normalized values collapse to ~2.8 bits — \
+         \"catastrophic accuracy degradation\".\n"
+    );
+    assert!(err_naive > 3.0 * err_good);
+}
+
+fn overflow_table() {
+    println!("== E6: §3.1.1 accumulator safe-depth model ==\n");
+    println!("{:>12} {:>12} {:>16}", "input bits", "acc bits", "safe depth");
+    for &(ib, ab) in &[(8u32, 32u32), (8, 24), (8, 16 + 1), (16, 48), (4, 24)] {
+        println!("{:>12} {:>12} {:>16}", ib, ab, safe_accumulation_depth(ib, ab));
+    }
+    println!("\npaper: int8→int32 safe to 2^15 = {}; 24-bit acc only 2^7 = {}\n",
+             1 << 15, 1 << 7);
+    assert_eq!(safe_accumulation_depth(8, 32), 1 << 15);
+    assert_eq!(safe_accumulation_depth(8, 24), 1 << 7);
+}
+
+fn batching_sweep() {
+    println!("== batching policy sweep (integer engine, 2 workers) ==\n");
+    let mut rng = Pcg32::seeded(5);
+    let spec = LstmSpec::plain(VOCAB, 96);
+    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, 96);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 96, depth: 1 };
+    let calib: Vec<Vec<usize>> = (0..8)
+        .map(|_| (0..48).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let stats = lm.calibrate(&calib);
+    let trace = RequestTrace::generate(120, 2000.0, 40, VOCAB, 6);
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>10}",
+        "max_batch", "tput tok/s", "p50 ms", "p99 ms", "mean batch"
+    );
+    for &mb in &[1usize, 2, 4, 8, 16] {
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: mb, max_wait: Duration::from_millis(2) },
+                engine: StackEngine::Integer,
+                opts: QuantizeOptions::default(),
+            },
+        );
+        let report = server.run_trace(&trace, 50.0).unwrap();
+        println!(
+            "{:>10} {:>12.0} {:>10.2} {:>10.2} {:>10.2}",
+            mb,
+            report.throughput(),
+            report.latency.percentile(50.0),
+            report.latency.percentile(99.0),
+            report.mean_batch
+        );
+    }
+    println!();
+}
+
+fn main() {
+    recipe_table();
+    layernorm_ablation();
+    overflow_table();
+    batching_sweep();
+    println!("ablations OK");
+}

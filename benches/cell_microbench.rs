@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks: per-component cost of the integer cell —
+//! the profile that drives the §Perf optimization log in
+//! EXPERIMENTS.md. Run: `cargo bench --bench cell_microbench`.
+
+use iqrnn::fixedpoint::Rescale;
+use iqrnn::lstm::{
+    CalibrationStats, FloatLstm, FloatState, IntegerState, LstmSpec, LstmWeights,
+    QuantizeOptions,
+};
+use iqrnn::lstm::quantize_lstm;
+use iqrnn::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
+use iqrnn::sparse::SparseMatrixI8;
+use iqrnn::tensor::qmatmul::matvec_i8_i32;
+use iqrnn::tensor::{matvec_f32, Matrix};
+use iqrnn::util::timer::{bench, fmt_secs};
+use iqrnn::util::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(12);
+    let n = 512usize;
+
+    println!("== matvec kernels ({n}x{n}) ==");
+    let mut wf = Matrix::<f32>::zeros(n, n);
+    rng.fill_uniform_f32(&mut wf.data, -0.1, 0.1);
+    let xf: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut of = vec![0f32; n];
+    let t = bench(3, 51, || {
+        matvec_f32(&wf, &xf, &mut of);
+        of[0]
+    })
+    .median_secs();
+    println!("  f32 matvec        {}", fmt_secs(t));
+
+    let mut wq = Matrix::<i8>::zeros(n, n);
+    for v in &mut wq.data {
+        *v = rng.range_i32(-127, 127) as i8;
+    }
+    let xq: Vec<i8> = (0..n).map(|_| rng.range_i32(-128, 127) as i8).collect();
+    let bias = vec![0i32; n];
+    let mut oq = vec![0i32; n];
+    let t_i8 = bench(3, 51, || {
+        matvec_i8_i32(&wq, &xq, &bias, &mut oq);
+        oq[0]
+    })
+    .median_secs();
+    println!("  i8 matvec         {}  ({:.2}x vs f32)", fmt_secs(t_i8), t / t_i8);
+
+    // 50% sparse CSR.
+    let mut ws = wq.clone();
+    for v in ws.data.iter_mut() {
+        if rng.next_f64() < 0.5 {
+            *v = 0;
+        }
+    }
+    let sp = SparseMatrixI8::from_dense(&ws);
+    let t_sp = bench(3, 51, || {
+        sp.matvec_i32(&xq, &bias, &mut oq);
+        oq[0]
+    })
+    .median_secs();
+    println!(
+        "  i8 CSR 50% matvec {}  ({:.2}x vs dense i8, nnz={})",
+        fmt_secs(t_sp),
+        t_i8 / t_sp,
+        sp.nnz()
+    );
+
+    println!("\n== elementwise pipeline (len {n}) ==");
+    let xin: Vec<i16> = (0..n).map(|_| rng.range_i32(-32768, 32767) as i16).collect();
+    let mut out16 = vec![0i16; n];
+    let t_sig = bench(3, 101, || {
+        sigmoid_q15_slice(&xin, 3, &mut out16);
+        out16[0]
+    })
+    .median_secs();
+    let t_tanh = bench(3, 101, || {
+        tanh_q15_slice(&xin, 3, &mut out16);
+        out16[0]
+    })
+    .median_secs();
+    println!("  sigmoid_q15       {} ({:.1} ns/elem)", fmt_secs(t_sig), t_sig / n as f64 * 1e9);
+    println!("  tanh_q15          {} ({:.1} ns/elem)", fmt_secs(t_tanh), t_tanh / n as f64 * 1e9);
+
+    let acc: Vec<i32> = (0..n).map(|_| rng.range_i32(-1 << 20, 1 << 20)).collect();
+    let r = Rescale::from_scale(3.1e-4);
+    let mut out32 = vec![0i32; n];
+    let t_rescale = bench(3, 201, || {
+        for (o, &a) in out32.iter_mut().zip(&acc) {
+            *o = r.apply(a);
+        }
+        out32[0]
+    })
+    .median_secs();
+    println!("  rescale           {} ({:.1} ns/elem)", fmt_secs(t_rescale), t_rescale / n as f64 * 1e9);
+
+    println!("\n== full cell step (float vs integer) ==");
+    for &(n_input, n_cell) in &[(64usize, 128usize), (128, 256), (256, 512)] {
+        let spec = LstmSpec::plain(n_input, n_cell);
+        let weights = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(weights.clone());
+        let calib: Vec<Vec<Vec<f32>>> = (0..2)
+            .map(|_| {
+                (0..8)
+                    .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&weights, &stats, QuantizeOptions::default());
+        let x: Vec<f32> = (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let qx: Vec<i8> = x.iter().map(|&v| integer.input_q.quantize(f64::from(v))).collect();
+
+        let mut fs = FloatState::zeros(&spec);
+        let t_f = bench(3, 31, || {
+            float.step(&x, &mut fs);
+            fs.h[0]
+        })
+        .median_secs();
+        let mut is = IntegerState::zeros(&integer);
+        let t_i = bench(3, 31, || {
+            integer.step_q(&qx, &mut is);
+            is.h[0]
+        })
+        .median_secs();
+        println!(
+            "  {n_input:>4}x{n_cell:<4} float {} integer {} ({:.2}x)",
+            fmt_secs(t_f),
+            fmt_secs(t_i),
+            t_f / t_i
+        );
+    }
+}

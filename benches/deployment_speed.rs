@@ -1,0 +1,166 @@
+//! E4 — §6 deployment speed: integer vs hybrid vs float execution time
+//! (RT factor), plus the zero-point-folding ablation.
+//!
+//! Paper's shape: integer ≈ 5% faster than hybrid and ≈ 2x faster than
+//! float in RT factor; folding the zero points into the bias offline is
+//! what removes the per-element zero-point work from the inner loop.
+//! Run: `cargo bench --bench deployment_speed`.
+
+use iqrnn::eval::metrics::RtFactor;
+use iqrnn::lstm::{
+    FloatState, IntegerState, LstmSpec, QuantizeOptions, StackEngine, StackWeights,
+};
+use iqrnn::lstm::{LayerState, LstmStack};
+use iqrnn::tensor::qmatmul::{fold_zero_point, matvec_i8_i32, matvec_i8_i32_unfolded};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::timer::{bench, fmt_secs};
+use iqrnn::util::Pcg32;
+
+fn engine_stack(
+    weights: &StackWeights,
+    engine: StackEngine,
+    calib: &[Vec<Vec<f32>>],
+) -> LstmStack {
+    let stats = weights.calibrate(calib);
+    LstmStack::build(weights, engine, Some(&stats), QuantizeOptions::default())
+}
+
+fn time_stack(stack: &LstmStack, xs: &[Vec<f32>], reps: usize) -> f64 {
+    let n_out = stack.n_output();
+    let mut out = vec![0f32; n_out];
+    let sw = bench(1, reps, || {
+        let mut states = stack.zero_state();
+        for x in xs {
+            stack.step(x, &mut states, &mut out);
+        }
+        out[0]
+    });
+    sw.median_secs()
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(4);
+    println!("== E4: engine speed (single stream, per-step wall clock) ==\n");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "config", "float", "hybrid", "integer", "int/float", "int/hybrid"
+    );
+
+    for &(n_input, hidden, depth, steps) in
+        &[(64usize, 256usize, 1usize, 64usize), (256, 512, 2, 32), (96, 192, 2, 64)]
+    {
+        let spec = LstmSpec::plain(n_input, hidden);
+        let weights = StackWeights::random(n_input, spec, depth, &mut rng);
+        let calib: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|_| {
+                (0..16)
+                    .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let xs: Vec<Vec<f32>> = (0..steps)
+            .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+
+        let mut med = Vec::new();
+        for engine in StackEngine::ALL {
+            let stack = engine_stack(&weights, engine, &calib);
+            med.push(time_stack(&stack, &xs, 9) / steps as f64);
+        }
+        println!(
+            "{:<22} {:>12} {:>12} {:>12} {:>9.2}x {:>9.2}x",
+            format!("{depth}x{hidden} in={n_input}"),
+            fmt_secs(med[0]),
+            fmt_secs(med[1]),
+            fmt_secs(med[2]),
+            med[0] / med[2],
+            med[1] / med[2],
+        );
+    }
+
+    // RT factor on the standard config (paper reports RT factors).
+    {
+        let n_input = 96;
+        let spec = LstmSpec::plain(n_input, 192);
+        let weights = StackWeights::random(n_input, spec, 2, &mut rng);
+        let calib: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|_| {
+                (0..16)
+                    .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let tokens = 512usize;
+        let xs: Vec<Vec<f32>> = (0..tokens)
+            .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        println!("\n== RT factor (nominal {} tok/s stream) ==", RtFactor::NOMINAL_TOKENS_PER_SEC);
+        for engine in StackEngine::ALL {
+            let stack = engine_stack(&weights, engine, &calib);
+            let secs = time_stack(&stack, &xs, 5);
+            let rt = RtFactor::from_tokens(secs, tokens);
+            println!("  {:<8} RT factor {:.4}", engine.label(), rt.value());
+        }
+    }
+
+    // §6 ablation: folded vs unfolded zero-point handling in the gate
+    // matmul inner loop.
+    println!("\n== §6 ablation: zero-point folding in the int8 matvec ==");
+    for &(rows, cols) in &[(256usize, 256usize), (512, 512), (1024, 1024)] {
+        let mut w = Matrix::<i8>::zeros(rows, cols);
+        for v in &mut w.data {
+            *v = rng.range_i32(-127, 127) as i8;
+        }
+        let x: Vec<i8> = (0..cols).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        let bias: Vec<i32> = (0..rows).map(|_| rng.range_i32(-1000, 1000)).collect();
+        let zp = 12;
+        let folded = fold_zero_point(&w, &bias, zp);
+        let mut out = vec![0i32; rows];
+        let t_folded = bench(3, 31, || {
+            matvec_i8_i32(&w, &x, &folded, &mut out);
+            out[0]
+        })
+        .median_secs();
+        let t_unfolded = bench(3, 31, || {
+            matvec_i8_i32_unfolded(&w, &x, &bias, zp, &mut out);
+            out[0]
+        })
+        .median_secs();
+        println!(
+            "  {rows}x{cols}: folded {} unfolded {} ({:.2}x — \"about 5%\" class win)",
+            fmt_secs(t_folded),
+            fmt_secs(t_unfolded),
+            t_unfolded / t_folded
+        );
+    }
+
+    // State copy cost: confirm integer state (int16+int8) is 3x smaller
+    // than float state — the memory-bandwidth side of the speedup.
+    {
+        let hidden = 512;
+        let spec = LstmSpec::plain(64, hidden);
+        let weights = StackWeights::random(64, spec, 1, &mut rng);
+        let calib: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.5; 64]; 4]];
+        let stats = weights.calibrate(&calib);
+        let integer = LstmStack::build(
+            &weights,
+            StackEngine::Integer,
+            Some(&stats),
+            QuantizeOptions::default(),
+        );
+        let float_state_bytes = hidden * 4 * 2;
+        let st = integer.zero_state();
+        let int_state_bytes = match &st[0] {
+            LayerState::Integer(s) => s.c.len() * 2 + s.h.len(),
+            LayerState::Float(s) => (s.c.len() + s.h.len()) * 4,
+        };
+        println!(
+            "\nper-stream state: float {}B vs integer {}B ({:.2}x smaller)",
+            float_state_bytes,
+            int_state_bytes,
+            float_state_bytes as f64 / int_state_bytes as f64
+        );
+        let _ = (FloatState::zeros(&spec), IntegerState { c: vec![], h: vec![] });
+    }
+    println!("\npaper shape: integer ≥ hybrid > float in speed; ~2x vs float.");
+}

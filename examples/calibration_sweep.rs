@@ -1,0 +1,57 @@
+//! Experiment E9: how much calibration data does post-training
+//! quantization need?
+//!
+//! The paper (§5): "A fixed 100-utterances dataset is sufficient to
+//! quantize the model with negligible accuracy loss." This sweep
+//! quantizes the trained char-LM with calibration sets from 1 to 200
+//! sequences and reports the integer engine's quality at each size.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example calibration_sweep
+//! ```
+
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::CharLm;
+use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let lm = CharLm::load(&artifacts)?;
+    let corpus = std::path::Path::new(&artifacts).join("corpus.txt");
+
+    let sets = load_eval_sets(&corpus, 8, 128, 0, 1, 0.0, 44)?;
+    let eval = &sets[0];
+
+    let float = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let float_bpc: f64 = eval.sequences.iter().map(|s| float.bits_per_char(s)).sum::<f64>()
+        / eval.sequences.len() as f64;
+    println!("float baseline: {float_bpc:.4} bpc\n");
+    println!("{:>10} {:>12} {:>12}", "calib size", "integer bpc", "Δ vs float");
+
+    let mut at_100 = f64::NAN;
+    let mut at_1 = f64::NAN;
+    for &n in &[1usize, 2, 5, 10, 25, 50, 100, 200] {
+        let calib = calibration_sequences(&corpus, n, 64, 11)?;
+        let stats = lm.calibrate(&calib);
+        let integer = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+        let bpc: f64 = eval.sequences.iter().map(|s| integer.bits_per_char(s)).sum::<f64>()
+            / eval.sequences.len() as f64;
+        println!("{n:>10} {bpc:>12.4} {:>+12.4}", bpc - float_bpc);
+        if n == 100 {
+            at_100 = bpc;
+        }
+        if n == 1 {
+            at_1 = bpc;
+        }
+    }
+    println!(
+        "\npaper's claim: ~100 sequences suffice — Δ at 100 = {:+.4} bpc",
+        at_100 - float_bpc
+    );
+    anyhow::ensure!(at_100 - float_bpc < 0.1, "100-sequence calibration degraded too much");
+    // Tiny calibration sets should generally be no better (they can
+    // get lucky, so this is informational only).
+    println!("Δ at 1 = {:+.4} bpc (informational)", at_1 - float_bpc);
+    println!("calibration_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end driver (experiment E10): load the *trained* char-LM
+//! artifacts, serve a batched streaming request trace through all three
+//! engines, and report latency / throughput / RT factor plus quality
+//! parity — the full stack in one run:
+//!
+//!   python-trained weights → rust loader → post-training calibration →
+//!   Table-2 quantization → sticky-session coordinator → metrics,
+//!   with the PJRT runtime executing the AOT float artifact as a
+//!   cross-check of the serving numerics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+
+use std::time::Duration;
+
+use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::{one_hot_seq, CharLm, VOCAB};
+use iqrnn::runtime::pjrt::CharLmRuntime;
+use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets};
+use iqrnn::workload::synth::RequestTrace;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let lm = CharLm::load(&artifacts)?;
+    println!(
+        "loaded trained char-LM: hidden={} depth={} ({} params)",
+        lm.hidden,
+        lm.depth,
+        lm.stack_weights.param_count()
+    );
+
+    // Post-training calibration: 100 short sequences (the paper's §5
+    // finding: a fixed 100-utterance set suffices).
+    let corpus = std::path::Path::new(&artifacts).join("corpus.txt");
+    let calib = calibration_sequences(&corpus, 100, 64, 11)?;
+    let stats = lm.calibrate(&calib);
+    println!("calibrated on {} sequences", calib.len());
+
+    // --- Quality parity (Table-1 analog, abbreviated) ---------------
+    println!("\n== quality (bits/char on held-out corpus) ==");
+    let sets = load_eval_sets(&corpus, 8, 128, 1, 1500, 0.05, 21)?;
+    println!("{:<8} {:>9} {:>9} {:>9}", "set", "Float", "Hybrid", "Integer");
+    for set in &sets {
+        let mut row = Vec::new();
+        for engine in StackEngine::ALL {
+            let e = lm.engine(engine, Some(&stats), QuantizeOptions::default());
+            let bpc: f64 = set.sequences.iter().map(|s| e.bits_per_char(s)).sum::<f64>()
+                / set.sequences.len() as f64;
+            row.push(bpc);
+        }
+        println!(
+            "{:<8} {:>9.4} {:>9.4} {:>9.4}",
+            set.name, row[0], row[1], row[2]
+        );
+    }
+
+    // --- Serving: batched streaming requests -------------------------
+    println!("\n== serving (open-loop trace, 2 workers, batch<=8) ==");
+    let trace = RequestTrace::generate(150, 400.0, 80, VOCAB, 17);
+    println!(
+        "trace: {} requests, {} tokens, {:.1}s span",
+        trace.requests.len(),
+        trace.total_tokens(),
+        trace.span_secs()
+    );
+    let mut reports = Vec::new();
+    for engine in StackEngine::ALL {
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+                engine,
+                opts: QuantizeOptions::default(),
+            },
+        );
+        let report = server.run_trace(&trace, 4.0)?;
+        report.print();
+        reports.push(report);
+    }
+    let speedup_float = reports[0].compute_secs / reports[2].compute_secs;
+    let speedup_hybrid = reports[1].compute_secs / reports[2].compute_secs;
+    println!(
+        "integer speedup: {speedup_float:.2}x vs float, {speedup_hybrid:.2}x vs hybrid \
+         (paper §6: ~2x vs float, ~1.05x vs hybrid)"
+    );
+
+    // --- PJRT runtime cross-check ------------------------------------
+    println!("\n== PJRT runtime cross-check (AOT float artifact) ==");
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let runtime = CharLmRuntime::load(&client, &artifacts, 8, VOCAB, lm.hidden, lm.depth)?;
+    let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let seq = &sets[0].sequences[0][..32.min(sets[0].sequences[0].len())];
+    let mut rust_state = engine.new_state();
+    let mut rt_state = runtime.zero_state();
+    let mut x = vec![0f32; 8 * VOCAB];
+    let mut worst = 0f32;
+    for oh in one_hot_seq(seq) {
+        x[..VOCAB].copy_from_slice(&oh);
+        let logits = runtime.step(&x, &mut rt_state)?;
+        // Reconstruct the token index to drive the rust engine.
+        let tok = oh.iter().position(|&v| v == 1.0).unwrap();
+        engine.step_token(tok, &mut rust_state);
+        for (a, b) in rust_state.logits.iter().zip(&logits[..VOCAB]) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    println!("max |rust float − XLA runtime| logit divergence: {worst:.2e}");
+    anyhow::ensure!(worst < 2e-3, "runtime cross-check failed");
+
+    println!("\ne2e_serving OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: quantize an LSTM post-training and run it with integer
+//! arithmetic only.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use iqrnn::lstm::{
+    CalibrationStats, FloatLstm, FloatState, IntegerState, LstmSpec,
+    LstmWeights, QuantizeOptions,
+};
+use iqrnn::lstm::quantize_lstm;
+use iqrnn::util::Pcg32;
+
+fn main() {
+    // 1. A float LSTM (here random; in practice load trained weights).
+    //    Variants (peephole/projection/layer-norm/CIFG) are flags on
+    //    the spec — all are supported by the integer path.
+    let mut rng = Pcg32::seeded(7);
+    let spec = LstmSpec::plain(32, 64).with_peephole();
+    let weights = LstmWeights::random(spec, &mut rng);
+    let float = FloatLstm::new(weights.clone());
+
+    // 2. Post-training calibration (§4 of the paper): run a small
+    //    representative dataset through the float model, recording the
+    //    dynamic ranges of every tensor the recipe needs.
+    let calib: Vec<Vec<Vec<f32>>> = (0..16)
+        .map(|_| {
+            (0..32)
+                .map(|_| (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect()
+        })
+        .collect();
+    let stats = CalibrationStats::collect(&float, &calib);
+    println!(
+        "calibrated on {} sequences: x∈[{:.2},{:.2}] h∈[{:.2},{:.2}] |c|max={:.2}",
+        stats.sequences, stats.x.min, stats.x.max, stats.h.min, stats.h.max,
+        stats.c.max_abs()
+    );
+
+    // 3. Quantize with the Table-2 recipe: int8 weights, int16
+    //    cell/activations, int32 accumulators, no floats at inference.
+    let integer = quantize_lstm(&weights, &stats, QuantizeOptions::default());
+    println!(
+        "quantized: cell format Q{}.{}  weights {}B (float was {}B)",
+        integer.cell_ib,
+        15 - integer.cell_ib,
+        integer.weight_bytes(),
+        weights.param_count() * 4
+    );
+
+    // 4. Run both engines on fresh data and compare.
+    let mut fs = FloatState::zeros(&spec);
+    let mut is = IntegerState::zeros(&integer);
+    let mut worst = 0f32;
+    let mut h_int = vec![0f32; spec.n_output];
+    for t in 0..50 {
+        let x: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        float.step(&x, &mut fs);
+        integer.step(&x, &mut is);
+        integer.dequantize_h(&is, &mut h_int);
+        for (a, b) in fs.h.iter().zip(&h_int) {
+            worst = worst.max((a - b).abs());
+        }
+        if t % 10 == 0 {
+            println!("step {t:>2}: float h[0]={:+.4} integer h[0]={:+.4}", fs.h[0], h_int[0]);
+        }
+    }
+    println!("max |float - integer| divergence over 50 steps: {worst:.4}");
+    assert!(worst < 0.1);
+    println!("quickstart OK");
+}

@@ -1,0 +1,209 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust runtime.
+
+Emits HLO **text** (never ``.serialize()``): jax >= 0.5 writes protos
+with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts:
+  * ``model_b{1,8}.hlo.txt`` — the trained char-LM serving step
+    (weights baked as constants): (x_onehot, c0, h0, c1, h1, ...) ->
+    (logits, new states). Executed by ``rust/src/runtime`` on the
+    float serving path.
+  * ``qlstm_step.hlo.txt`` — the Pallas integer LSTM step (interpret
+    mode) with baked quantized parameters, for the cross-layer
+    numerical check.
+  * ``golden_qstep.bin`` — the same quantized parameters plus golden
+    input/output vectors, consumed by the Rust integration test that
+    asserts the Rust integer cell is bit-identical to the L1 kernel.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as M  # noqa: E402
+from .kernels import ref  # noqa: E402
+from .kernels.qlstm import make_qlstm_step  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights must survive the text
+    # round-trip (the default elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# Char-LM serving step.
+# ---------------------------------------------------------------------------
+
+
+def load_trained(out_dir: str):
+    import json
+
+    cfg_d = json.load(open(os.path.join(out_dir, "charlm.json")))
+    cfg = M.CharLmConfig(**cfg_d)
+    flat = dict(np.load(os.path.join(out_dir, "charlm.npz")))
+    layers = []
+    for d in range(cfg.depth):
+        layer = {}
+        for g in ("i", "f", "z", "o"):
+            layer[g] = {
+                "w": jnp.asarray(flat[f"layer{d}.{g}.w"]),
+                "r": jnp.asarray(flat[f"layer{d}.{g}.r"]),
+                "bias": jnp.asarray(flat[f"layer{d}.{g}.bias"]),
+            }
+        layers.append(layer)
+    params = {
+        "layers": layers,
+        "out_w": jnp.asarray(flat["out.w"]),
+        "out_b": jnp.asarray(flat["out.b"]),
+    }
+    return cfg, params
+
+
+def lower_charlm_step(out_dir: str, batch: int) -> str:
+    cfg, params = load_trained(out_dir)
+
+    def step(x_onehot, *flat_states):
+        states = [
+            (flat_states[2 * i], flat_states[2 * i + 1]) for i in range(cfg.depth)
+        ]
+        logits, new_states = M.lm_step(params, x_onehot, states)
+        outs = [logits]
+        for c, h in new_states:
+            outs.extend([c, h])
+        return tuple(outs)
+
+    spec_x = jax.ShapeDtypeStruct((batch, cfg.vocab), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((batch, cfg.hidden), jnp.float32)
+    lowered = jax.jit(step).lower(spec_x, *([spec_s] * (2 * cfg.depth)))
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Integer (Pallas) step + golden vectors.
+# ---------------------------------------------------------------------------
+
+GOLDEN_N_INPUT = 32
+GOLDEN_N_CELL = 64
+GOLDEN_BATCH = 4
+GOLDEN_STEPS = 6
+
+
+def golden_params(seed: int = 2024) -> ref.QLstmParams:
+    rng = np.random.default_rng(seed)
+
+    def gate():
+        return {
+            "w": rng.normal(0, 1 / np.sqrt(GOLDEN_N_INPUT), (GOLDEN_N_CELL, GOLDEN_N_INPUT)),
+            "r": rng.normal(0, 1 / np.sqrt(GOLDEN_N_CELL), (GOLDEN_N_CELL, GOLDEN_N_CELL)),
+            "bias": rng.normal(0, 0.2, GOLDEN_N_CELL),
+            "peephole": rng.normal(0, 0.1, GOLDEN_N_CELL),
+        }
+
+    fw = {n: gate() for n in ("i", "f", "z", "o")}
+    fw["z"]["peephole"] = None
+    stats = {"x": (-2.0, 2.5), "h": (-1.0, 1.0), "m": (-1.0, 1.0), "c_max_abs": 3.0}
+    return ref.quantize_params(fw, stats)
+
+
+def lower_qlstm_step(params: ref.QLstmParams) -> str:
+    step = make_qlstm_step(params, tile_b=4, tile_n=32)
+    spec_qx = jax.ShapeDtypeStruct((GOLDEN_BATCH, params.n_input), jnp.int8)
+    spec_c = jax.ShapeDtypeStruct((GOLDEN_BATCH, params.n_cell), jnp.int16)
+    spec_h = jax.ShapeDtypeStruct((GOLDEN_BATCH, params.n_output), jnp.int8)
+    lowered = jax.jit(step).lower(spec_qx, spec_c, spec_h)
+    return to_hlo_text(lowered)
+
+
+def dump_golden(params: ref.QLstmParams, path: str, seed: int = 77) -> None:
+    rng = np.random.default_rng(seed)
+    tensors: dict[str, np.ndarray] = {
+        "meta.dims": np.array(
+            [params.n_input, params.n_cell, params.n_output], np.int32
+        ),
+        "meta.cell_ib": np.array([params.cell_ib], np.int32),
+        "meta.cifg": np.array([int(params.cifg)], np.int32),
+        "meta.zp": np.array(
+            [
+                params.input_q.zero_point,
+                params.output_q.zero_point,
+                params.hidden_q.zero_point,
+            ],
+            np.int32,
+        ),
+        "meta.eff_hidden": np.array(list(params.eff_hidden), np.int32),
+    }
+    for name, g in params.gates.items():
+        tensors[f"gate.{name}.w"] = g.w
+        tensors[f"gate.{name}.r"] = g.r
+        tensors[f"gate.{name}.w_bias"] = g.w_bias
+        tensors[f"gate.{name}.r_bias"] = g.r_bias
+        tensors[f"gate.{name}.eff_x"] = np.array(list(g.eff_x), np.int32)
+        tensors[f"gate.{name}.eff_h"] = np.array(list(g.eff_h), np.int32)
+        if g.peephole is not None:
+            tensors[f"gate.{name}.peephole"] = g.peephole
+            tensors[f"gate.{name}.eff_c"] = np.array(list(g.eff_c), np.int32)
+
+    # Golden trajectory: several recurrent steps to exercise state flow.
+    qx = rng.integers(-128, 128, (GOLDEN_STEPS, GOLDEN_BATCH, params.n_input)).astype(np.int8)
+    c = np.zeros((GOLDEN_BATCH, params.n_cell), np.int16)
+    h = np.full((GOLDEN_BATCH, params.n_output), params.output_q.zero_point, np.int8)
+    tensors["golden.qx"] = qx
+    tensors["golden.c0"] = c.copy()
+    tensors["golden.h0"] = h.copy()
+    cs, hs = [], []
+    cj, hj = jnp.asarray(c), jnp.asarray(h)
+    for t in range(GOLDEN_STEPS):
+        cj, hj = ref.qlstm_step_ref(params, jnp.asarray(qx[t]), cj, hj)
+        cs.append(np.asarray(cj))
+        hs.append(np.asarray(hj))
+    tensors["golden.c_out"] = np.stack(cs)
+    tensors["golden.h_out"] = np.stack(hs)
+    M.write_tensors(path, tensors)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--skip-charlm", action="store_true",
+                   help="only emit the integer-step artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    params = golden_params()
+    qpath = os.path.join(args.out, "qlstm_step.hlo.txt")
+    with open(qpath, "w") as f:
+        f.write(lower_qlstm_step(params))
+    print(f"wrote {qpath}")
+    gpath = os.path.join(args.out, "golden_qstep.bin")
+    dump_golden(params, gpath)
+    print(f"wrote {gpath}")
+
+    if not args.skip_charlm:
+        for batch in (1, 8):
+            text = lower_charlm_step(args.out, batch)
+            path = os.path.join(args.out, f"model_b{batch}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

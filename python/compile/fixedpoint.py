@@ -1,0 +1,212 @@
+"""Integer fixed-point arithmetic in JAX — the L1/L2 mirror of
+``rust/src/fixedpoint`` and ``rust/src/nonlin``.
+
+Everything here operates on integer dtypes only (int32/int64), matching
+the Rust implementation bit-for-bit so cross-layer tests can assert
+exact equality. The algorithms are the gemmlowp family: saturating
+rounding doubling high multiply, rounding power-of-two shifts,
+barrel-shifted exponential, Newton-Raphson reciprocal.
+
+Requires ``jax_enable_x64`` (set in ``conftest.py`` / ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+I32_MAX = 2**31 - 1
+I32_MIN = -(2**31)
+
+
+def _trunc_div(a, b):
+    """C-style truncating division on integer arrays (jnp // floors)."""
+    q = jnp.abs(a) // jnp.abs(b)
+    return jnp.where((a < 0) != (b < 0), -q, q).astype(a.dtype)
+
+
+def srdhm(a, b):
+    """Saturating rounding doubling high mul of int32 arrays."""
+    a64 = a.astype(jnp.int64)
+    b64 = b.astype(jnp.int64)
+    ab = a64 * b64
+    nudge = jnp.where(ab >= 0, 1 << 30, 1 - (1 << 30)).astype(jnp.int64)
+    result = _trunc_div(ab + nudge, jnp.int64(1 << 31))
+    overflow = (a == I32_MIN) & (b == I32_MIN)
+    return jnp.where(overflow, I32_MAX, result).astype(jnp.int32)
+
+
+def rounding_divide_by_pot(x, exponent: int):
+    """Rounding (ties away from zero) right shift of int32 arrays."""
+    if exponent == 0:
+        return x
+    mask = jnp.int32((1 << exponent) - 1)
+    remainder = jnp.bitwise_and(x, mask)
+    threshold = (mask >> 1) + jnp.where(x < 0, 1, 0).astype(jnp.int32)
+    return (x >> exponent) + jnp.where(remainder > threshold, 1, 0).astype(
+        jnp.int32
+    )
+
+
+def saturating_rounding_multiply_by_pot(x, exponent: int):
+    """Multiply int32 arrays by 2^exponent, saturating."""
+    if exponent == 0:
+        return x
+    if exponent < 0:
+        return rounding_divide_by_pot(x, -exponent)
+    lo = jnp.int32(I32_MIN >> exponent)
+    hi = jnp.int32(I32_MAX >> exponent)
+    clamped = jnp.clip(x, lo, hi)
+    shifted = (clamped.astype(jnp.int64) << exponent).astype(jnp.int32)
+    return jnp.where(x > hi, I32_MAX, jnp.where(x < lo, I32_MIN, shifted))
+
+
+def rounding_half_sum(a, b):
+    s = a.astype(jnp.int64) + b.astype(jnp.int64)
+    sign = jnp.where(s >= 0, 1, -1).astype(jnp.int64)
+    return _trunc_div(s + sign, jnp.int64(2)).astype(jnp.int32)
+
+
+def quantize_multiplier(scale: float) -> tuple[int, int]:
+    """Decompose a real scale into (int32 multiplier, shift); mirrors
+    ``Rescale::from_scale``."""
+    assert scale >= 0.0 and math.isfinite(scale)
+    if scale == 0.0:
+        return 0, 0
+    shift = math.floor(math.log2(scale)) + 1
+    q = scale / (2.0**shift)
+    q_fixed = round(q * (2.0**31))
+    if q_fixed == 2**31:
+        q_fixed //= 2
+        shift += 1
+    if shift < -31:
+        return 0, 0
+    if shift > 30:
+        return I32_MAX, 30
+    return int(q_fixed), int(shift)
+
+
+def multiply_by_quantized_multiplier(x, multiplier: int, shift: int):
+    """Apply (multiplier, shift) to an int32 array; mirrors
+    ``Rescale::apply`` including the saturating pre-shift."""
+    left = max(shift, 0)
+    right = max(-shift, 0)
+    if left:
+        x = saturating_rounding_multiply_by_pot(x, left)
+    prod = srdhm(x, jnp.int32(multiplier))
+    return rounding_divide_by_pot(prod, right) if right else prod
+
+
+# ---------------------------------------------------------------------------
+# Integer transcendentals (Q_{ib.15-ib} int16 -> Q0.15 int16).
+# ---------------------------------------------------------------------------
+
+_EXP_BARREL = [
+    (-2, 1672461947),
+    (-1, 1302514674),
+    (0, 790015084),
+    (1, 290630308),
+    (2, 39332535),
+    (3, 720401),
+    (4, 242),
+]
+_CONSTANT_TERM = 1895147668  # exp(-1/8) in Q0.31
+_CONSTANT_1_OVER_3 = 715827883
+_CONSTANT_48_OVER_17 = 1515870810
+_CONSTANT_NEG_32_OVER_17 = -1010580540
+
+
+def _exp_interval(a):
+    """exp(a) for a in [-1/4, 0), Q0.31."""
+    x = a + jnp.int32(1 << 28)  # + 1/8
+    x2 = srdhm(x, x)
+    x3 = srdhm(x2, x)
+    x4 = srdhm(x2, x2)
+    x4_over_4 = rounding_divide_by_pot(x4, 2)
+    inner = srdhm(x4_over_4 + x3, jnp.int32(_CONSTANT_1_OVER_3)) + x2
+    poly = rounding_divide_by_pot(inner, 1)
+    ct = jnp.int32(_CONSTANT_TERM)
+    return ct + srdhm(ct, x + poly)
+
+
+def exp_on_negative_values(a, ib: int):
+    """exp(a) for a <= 0; input raw int32 with 31-ib fractional bits,
+    output Q0.31."""
+    frac_bits = 31 - ib
+    one_quarter = jnp.int32(1 << (frac_bits - 2))
+    mask = one_quarter - 1
+    a_mod = jnp.bitwise_and(a, mask) - one_quarter
+    interval_in = saturating_rounding_multiply_by_pot(a_mod, ib)
+    result = _exp_interval(interval_in)
+    remainder = (a_mod - a).astype(jnp.int32)
+    for exponent, multiplier in _EXP_BARREL:
+        if ib > exponent:
+            pos = frac_bits + exponent
+            if 0 <= pos < 31:
+                fire = jnp.bitwise_and(remainder, jnp.int32(1 << pos)) != 0
+                result = jnp.where(
+                    fire, srdhm(result, jnp.int32(multiplier)), result
+                )
+    if ib > 5:
+        clamp_raw = jnp.int32(-(1 << (frac_bits + 5)))
+        result = jnp.where(a < clamp_raw, 0, result)
+    return jnp.where(a == 0, I32_MAX, result)
+
+
+def _one_minus_over_one_plus(a):
+    """(1-x)/(1+x) for x in [0,1], Q0.31 -> Q0.31 (Newton-Raphson)."""
+    half_denominator = rounding_half_sum(a, jnp.int32(I32_MAX))
+    x = jnp.int32(_CONSTANT_48_OVER_17) + srdhm(
+        half_denominator, jnp.int32(_CONSTANT_NEG_32_OVER_17)
+    )
+    for _ in range(3):
+        hdx = srdhm(half_denominator, x)
+        one_minus = jnp.int32(1 << 29) - hdx
+        delta = saturating_rounding_multiply_by_pot(srdhm(x, one_minus), 2)
+        x = x + delta
+    # x ≈ 2/(1+a) in Q2.29; subtract one, widen to Q0.31.
+    return saturating_rounding_multiply_by_pot(x - jnp.int32(1 << 29), 2)
+
+
+def _one_over_one_plus(a):
+    """1/(1+x) for x in [0,1], Q0.31 -> Q0.31."""
+    half_denominator = rounding_half_sum(a, jnp.int32(I32_MAX))
+    x = jnp.int32(_CONSTANT_48_OVER_17) + srdhm(
+        half_denominator, jnp.int32(_CONSTANT_NEG_32_OVER_17)
+    )
+    for _ in range(3):
+        hdx = srdhm(half_denominator, x)
+        one_minus = jnp.int32(1 << 29) - hdx
+        delta = saturating_rounding_multiply_by_pot(srdhm(x, one_minus), 2)
+        x = x + delta
+    # x ≈ 2/(1+a) in Q2.29; halve then widen to Q0.31.
+    return saturating_rounding_multiply_by_pot(rounding_divide_by_pot(x, 1), 2)
+
+
+def _q31_to_q15_i16(raw):
+    q15 = rounding_divide_by_pot(raw, 16)
+    return jnp.clip(q15, -32768, 32767).astype(jnp.int16)
+
+
+def tanh_q15(x, ib: int):
+    """Integer tanh: int16 Q_{ib.15-ib} -> int16 Q0.15. Bit-exact mirror
+    of ``nonlin::tanh_q15``."""
+    widened = (x.astype(jnp.int32) << 16).astype(jnp.int32)
+    neg_abs = -jnp.abs(widened)
+    # Exact doubling = reinterpret with one more integer bit.
+    e = exp_on_negative_values(neg_abs, ib + 1)
+    t = _one_minus_over_one_plus(e)
+    out = jnp.where(widened == 0, 0, jnp.where(widened < 0, -t, t))
+    return _q31_to_q15_i16(out)
+
+
+def sigmoid_q15(x, ib: int):
+    """Integer sigmoid: int16 Q_{ib.15-ib} -> int16 Q0.15. Bit-exact
+    mirror of ``nonlin::sigmoid_q15``."""
+    widened = (x.astype(jnp.int32) << 16).astype(jnp.int32)
+    neg_abs = -jnp.abs(widened)
+    e = exp_on_negative_values(neg_abs, ib)
+    pos = _one_over_one_plus(e)
+    out = jnp.where(widened >= 0, pos, jnp.int32(I32_MAX) - pos)
+    return _q31_to_q15_i16(out)

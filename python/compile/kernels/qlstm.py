@@ -1,0 +1,192 @@
+"""Layer-1 Pallas kernels: the integer LSTM step, tiled for TPU.
+
+Hardware adaptation (DESIGN.md §5): the paper targets CPU SIMD / integer
+accelerators; on TPU the gate computation maps onto the MXU as
+int8×int8→int32 matmuls and the rescale/activation chain onto the VPU,
+with `BlockSpec` expressing the HBM↔VMEM tiling (weight panels of
+`[4, TILE_N, K]` stay resident in VMEM across the batch tile).
+
+The quantized parameters (multipliers, shifts, zero points) are *static*
+closure constants — exactly like the paper's precomputed scales — so the
+kernel body contains no dynamic control flow (principle #2 of §3).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls; numerics are validated through the
+interpret path against ``ref.py`` and against the Rust implementation
+via golden vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import fixedpoint as fp
+from .ref import QLstmParams
+
+# Gate order inside the stacked weight tensors.
+GATE_ORDER = ("i", "f", "z", "o")
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _stack_gates(params: QLstmParams, attr: str, fill_shape, dtype):
+    """Stack a per-gate tensor into [4, ...]; absent gates (CIFG input
+    gate) are zero-filled and skipped statically in the kernel."""
+    out = []
+    for name in GATE_ORDER:
+        g = params.gates.get(name)
+        v = getattr(g, attr) if g is not None else None
+        out.append(np.zeros(fill_shape, dtype) if v is None else v.astype(dtype))
+    return np.stack(out, axis=0)
+
+
+def make_qlstm_step(params: QLstmParams, tile_b: int = 8, tile_n: int = 128):
+    """Build the fused integer-LSTM-step function backed by Pallas.
+
+    Returns ``step(qx, c, h) -> (c_new, h_new)`` operating on int8/int16
+    arrays of shape [B, n_input], [B, n_cell], [B, n_output].
+    """
+    n_in, n_cell, n_out = params.n_input, params.n_cell, params.n_output
+    tile_n = min(tile_n, n_cell)
+
+    w_all = _stack_gates(params, "w", (n_cell, n_in), np.int8)
+    r_all = _stack_gates(params, "r", (n_cell, n_out), np.int8)
+    wb_all = _stack_gates(params, "w_bias", (n_cell,), np.int32)
+    rb_all = _stack_gates(params, "r_bias", (n_cell,), np.int32)
+    ph_all = _stack_gates(params, "peephole", (n_cell,), np.int16)
+
+    eff = {}
+    for name in GATE_ORDER:
+        g = params.gates.get(name)
+        if g is not None:
+            eff[name] = (g.eff_x, g.eff_h, g.eff_c)
+    zp_m = int(params.hidden_q.zero_point)
+    eff_hidden = params.eff_hidden
+    cell_ib = params.cell_ib
+    cifg = params.cifg
+
+    def gate_pre(gname: str, gi: int, x32, h32, w_ref, r_ref, wb_ref, rb_ref,
+                 ph_ref, c_for_ph):
+        eff_x, eff_h, eff_c = eff[gname]
+        acc_x = jnp.dot(x32, w_ref[gi].astype(jnp.int32).T) + wb_ref[gi][None, :]
+        acc_h = jnp.dot(h32, r_ref[gi].astype(jnp.int32).T) + rb_ref[gi][None, :]
+        pre = fp.multiply_by_quantized_multiplier(acc_x, *eff_x)
+        pre = pre + fp.multiply_by_quantized_multiplier(acc_h, *eff_h)
+        if eff_c is not None:
+            pc = ph_ref[gi][None, :].astype(jnp.int32) * c_for_ph
+            pre = pre + fp.multiply_by_quantized_multiplier(pc, *eff_c)
+        return jnp.clip(pre, -32768, 32767).astype(jnp.int16)
+
+    def cell_kernel(qx_ref, c_ref, h_ref, w_ref, r_ref, wb_ref, rb_ref,
+                    ph_ref, c_out_ref, m_out_ref):
+        # MXU part: int8 matmuls with int32 accumulation.
+        x32 = qx_ref[...].astype(jnp.int32)
+        h32 = h_ref[...].astype(jnp.int32)
+        c32 = c_ref[...].astype(jnp.int32)
+
+        f_pre = gate_pre("f", 1, x32, h32, w_ref, r_ref, wb_ref, rb_ref, ph_ref, c32)
+        z_pre = gate_pre("z", 2, x32, h32, w_ref, r_ref, wb_ref, rb_ref, ph_ref, c32)
+        f_act = fp.sigmoid_q15(f_pre, 3)
+        z_act = fp.tanh_q15(z_pre, 3)
+        if cifg:
+            i_act = jnp.minimum(32768 - f_act.astype(jnp.int32), 32767).astype(jnp.int16)
+        else:
+            i_pre = gate_pre("i", 0, x32, h32, w_ref, r_ref, wb_ref, rb_ref, ph_ref, c32)
+            i_act = fp.sigmoid_q15(i_pre, 3)
+
+        iz = i_act.astype(jnp.int32) * z_act.astype(jnp.int32)
+        fc = f_act.astype(jnp.int32) * c32
+        c_new32 = fp.rounding_divide_by_pot(iz, 15 + cell_ib) + \
+            fp.rounding_divide_by_pot(fc, 15)
+        c_new = jnp.clip(c_new32, -32768, 32767).astype(jnp.int16)
+        c_out_ref[...] = c_new
+
+        o_pre = gate_pre("o", 3, x32, h32, w_ref, r_ref, wb_ref, rb_ref, ph_ref,
+                         c_new.astype(jnp.int32))
+        o_act = fp.sigmoid_q15(o_pre, 3)
+        tanh_c = fp.tanh_q15(c_new, cell_ib)
+        prod = o_act.astype(jnp.int32) * tanh_c.astype(jnp.int32)
+        m = jnp.clip(
+            fp.multiply_by_quantized_multiplier(prod, *eff_hidden) + zp_m,
+            -128, 127,
+        ).astype(jnp.int8)
+        m_out_ref[...] = m
+
+    @functools.partial(jax.jit, static_argnums=())
+    def step(qx, c, h):
+        b = qx.shape[0]
+        tb = min(tile_b, b)
+        grid = (_cdiv(b, tb), _cdiv(n_cell, tile_n))
+        c_new, m = pl.pallas_call(
+            cell_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tb, n_in), lambda i, j: (i, 0)),
+                pl.BlockSpec((tb, tile_n), lambda i, j: (i, j)),
+                pl.BlockSpec((tb, n_out), lambda i, j: (i, 0)),
+                pl.BlockSpec((4, tile_n, n_in), lambda i, j: (0, j, 0)),
+                pl.BlockSpec((4, tile_n, n_out), lambda i, j: (0, j, 0)),
+                pl.BlockSpec((4, tile_n), lambda i, j: (0, j)),
+                pl.BlockSpec((4, tile_n), lambda i, j: (0, j)),
+                pl.BlockSpec((4, tile_n), lambda i, j: (0, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((tb, tile_n), lambda i, j: (i, j)),
+                pl.BlockSpec((tb, tile_n), lambda i, j: (i, j)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((b, n_cell), jnp.int16),
+                jax.ShapeDtypeStruct((b, n_cell), jnp.int8),
+            ],
+            interpret=True,
+        )(qx, c, h, w_all, r_all, wb_all, rb_all, ph_all)
+
+        if params.w_proj is not None:
+            h_new = qmatmul_rescale(
+                m, params.w_proj, params.proj_bias, params.eff_proj,
+                int(params.output_q.zero_point),
+            )
+        else:
+            h_new = m
+        return c_new, h_new
+
+    return step
+
+
+def qmatmul_rescale(x_i8, w_q, bias_i32, eff, zp_out, tile_n: int = 128):
+    """Generic int8 matmul + rescale + zero-point Pallas kernel
+    (projection layer, LM output head): `clip(rescale(W(x+zp)+b) + zp)`.
+
+    `x_i8` [B, K] int8; `w_q` [N, K] int8; returns [B, N] int8.
+    """
+    n, k = w_q.shape
+    b = x_i8.shape[0]
+    tile_n = min(tile_n, n)
+    mult, shift = eff
+
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        acc = jnp.dot(
+            x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32).T
+        ) + b_ref[...][None, :]
+        out = fp.multiply_by_quantized_multiplier(acc, mult, shift) + zp_out
+        o_ref[...] = jnp.clip(out, -128, 127).astype(jnp.int8)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(_cdiv(n, tile_n),),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((tile_n, k), lambda j: (j, 0)),
+            pl.BlockSpec((tile_n,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((b, tile_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int8),
+        interpret=True,
+    )(x_i8, jnp.asarray(w_q), jnp.asarray(bias_i32))

@@ -1,0 +1,295 @@
+"""Pure-jnp correctness oracle for the integer LSTM step.
+
+Mirrors ``rust/src/lstm/integer_cell.rs`` bit-for-bit for the
+plain / peephole / projection / CIFG variants: the Pallas kernels in
+this package are asserted equal to this reference, and the same
+quantized parameters + golden vectors are exported for the Rust side
+(``aot.py --golden``), closing the three-layer loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import fixedpoint as fp
+
+
+# ---------------------------------------------------------------------------
+# Quantization parameter derivation (mirrors rust quant::params / quantize).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AsymQuant:
+    scale: float
+    zero_point: int
+
+    @staticmethod
+    def from_min_max(lo: float, hi: float) -> "AsymQuant":
+        lo = min(lo, 0.0)
+        hi = max(hi, 0.0)
+        if lo == hi:
+            return AsymQuant(1.0 / 255.0, 0)
+        scale = (hi - lo) / 255.0
+        zp = int(np.clip(round(-128.0 - lo / scale), -128, 127))
+        return AsymQuant(scale, zp)
+
+    def quantize(self, v: np.ndarray) -> np.ndarray:
+        q = np.round(v / self.scale) + self.zero_point
+        return np.clip(q, -128, 127).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float64) - self.zero_point) * self.scale
+
+    @property
+    def folding_zp(self) -> int:
+        return -self.zero_point
+
+
+def sym_scale_i8(max_abs: float) -> float:
+    return (max_abs if max_abs > 0 else 1.0) / 127.0
+
+
+def sym_quant_i8(w: np.ndarray) -> tuple[np.ndarray, float]:
+    s = sym_scale_i8(float(np.max(np.abs(w))) if w.size else 0.0)
+    return np.clip(np.round(w / s), -127, 127).astype(np.int8), s
+
+
+def sym_quant_i16(v: np.ndarray) -> tuple[np.ndarray, float]:
+    m = float(np.max(np.abs(v))) if v.size else 0.0
+    s = (m if m > 0 else 1.0) / 32767.0
+    return np.clip(np.round(v / s), -32767, 32767).astype(np.int16), s
+
+
+def pot_integer_bits(max_abs: float) -> int:
+    m = 0
+    while 2.0**m < max_abs and m < 15:
+        m += 1
+    return m
+
+
+def fold_zero_point(w_q: np.ndarray, zp: int) -> np.ndarray:
+    """§6: bias'[i] = zp * Σ_j W[i, j] (int32)."""
+    return (w_q.astype(np.int64).sum(axis=1) * zp).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Quantized parameter bundle (plain variant + optional PH / proj / CIFG).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QGate:
+    w: np.ndarray  # int8 [n_cell, n_input]
+    r: np.ndarray  # int8 [n_cell, n_output]
+    w_bias: np.ndarray  # int32 [n_cell]
+    r_bias: np.ndarray  # int32 [n_cell] (zp fold + quantized bias)
+    eff_x: tuple[int, int]  # (multiplier, shift)
+    eff_h: tuple[int, int]
+    peephole: np.ndarray | None = None  # int16 [n_cell]
+    eff_c: tuple[int, int] | None = None
+
+
+@dataclass
+class QLstmParams:
+    n_input: int
+    n_cell: int
+    n_output: int
+    cifg: bool
+    gates: dict = field(default_factory=dict)  # name -> QGate (i/f/z/o)
+    input_q: AsymQuant | None = None
+    output_q: AsymQuant | None = None
+    hidden_q: AsymQuant | None = None
+    eff_hidden: tuple[int, int] = (0, 0)
+    cell_ib: int = 0
+    w_proj: np.ndarray | None = None  # int8 [n_output, n_cell]
+    proj_bias: np.ndarray | None = None  # int32 [n_output]
+    eff_proj: tuple[int, int] | None = None
+
+
+def quantize_params(float_weights: dict, stats: dict) -> QLstmParams:
+    """Apply the Table-2 recipe (no-LN variants) to float weights.
+
+    ``float_weights``: gate name -> dict(w, r, bias[, peephole]);
+    optionally 'proj' -> (w_proj, b_proj). ``stats``: observed ranges
+    dict(x=(lo,hi), h=(lo,hi), m=(lo,hi), c_max_abs=float).
+    """
+    gate_names = [n for n in ("i", "f", "z", "o") if n in float_weights]
+    any_gate = float_weights[gate_names[0]]
+    n_cell, n_input = any_gate["w"].shape
+    n_output = any_gate["r"].shape[1]
+    has_proj = "proj" in float_weights
+
+    input_q = AsymQuant.from_min_max(*stats["x"])
+    output_q = AsymQuant.from_min_max(*stats["h"])
+    hidden_q = AsymQuant.from_min_max(*stats["m"]) if has_proj else output_q
+    cell_ib = pot_integer_bits(stats["c_max_abs"])
+    s_c = 2.0 ** (cell_ib - 15)
+    q312 = 2.0**-12
+
+    params = QLstmParams(
+        n_input=n_input,
+        n_cell=n_cell,
+        n_output=n_output,
+        cifg="i" not in float_weights,
+        input_q=input_q,
+        output_q=output_q,
+        hidden_q=hidden_q,
+        eff_hidden=fp.quantize_multiplier(2.0**-30 / hidden_q.scale),
+        cell_ib=cell_ib,
+    )
+
+    for name in gate_names:
+        g = float_weights[name]
+        w_q, s_w = sym_quant_i8(g["w"])
+        r_q, s_r = sym_quant_i8(g["r"])
+        w_bias = fold_zero_point(w_q, input_q.folding_zp)
+        r_bias = fold_zero_point(r_q, output_q.folding_zp)
+        s_bias = s_r * output_q.scale
+        r_bias = (
+            r_bias.astype(np.int64)
+            + np.clip(
+                np.round(g["bias"] / s_bias), -(2**31 - 1), 2**31 - 1
+            ).astype(np.int64)
+        ).astype(np.int32)
+        qg = QGate(
+            w=w_q,
+            r=r_q,
+            w_bias=w_bias,
+            r_bias=r_bias,
+            eff_x=fp.quantize_multiplier(s_w * input_q.scale / q312),
+            eff_h=fp.quantize_multiplier(s_r * output_q.scale / q312),
+        )
+        if g.get("peephole") is not None and name != "z":
+            p_q, s_p = sym_quant_i16(g["peephole"])
+            qg.peephole = p_q
+            qg.eff_c = fp.quantize_multiplier(s_p * s_c / q312)
+        params.gates[name] = qg
+
+    if has_proj:
+        w_proj, b_proj = float_weights["proj"]
+        wp_q, s_wp = sym_quant_i8(w_proj)
+        s_bias = s_wp * hidden_q.scale
+        bias = fold_zero_point(wp_q, hidden_q.folding_zp).astype(np.int64)
+        if b_proj is not None:
+            bias = bias + np.clip(
+                np.round(b_proj / s_bias), -(2**31 - 1), 2**31 - 1
+            ).astype(np.int64)
+        params.w_proj = wp_q
+        params.proj_bias = bias.astype(np.int32)
+        params.eff_proj = fp.quantize_multiplier(s_bias / output_q.scale)
+
+    return params
+
+
+# ---------------------------------------------------------------------------
+# The integer step itself (pure jnp; batch-first).
+# ---------------------------------------------------------------------------
+
+
+def _matmul_i32(x_i8, w_i8, bias_i32):
+    """x [B, K] int8 @ w.T [K, N] -> [B, N] int32 + bias."""
+    acc = jnp.matmul(x_i8.astype(jnp.int32), w_i8.astype(jnp.int32).T)
+    return acc + bias_i32[None, :].astype(jnp.int32)
+
+
+def _gate_pre(g: QGate, qx, qh, c_for_ph):
+    acc_x = _matmul_i32(qx, g.w, g.w_bias)
+    acc_h = _matmul_i32(qh, g.r, g.r_bias)
+    pre = fp.multiply_by_quantized_multiplier(
+        acc_x, *g.eff_x
+    ) + fp.multiply_by_quantized_multiplier(acc_h, *g.eff_h)
+    if g.peephole is not None:
+        pc = g.peephole[None, :].astype(jnp.int32) * c_for_ph.astype(jnp.int32)
+        pre = pre + fp.multiply_by_quantized_multiplier(pc, *g.eff_c)
+    return jnp.clip(pre, -32768, 32767).astype(jnp.int16)
+
+
+def qlstm_step_ref(params: QLstmParams, qx, c, h):
+    """One integer LSTM step. qx [B, n_input] int8; c [B, n_cell] int16;
+    h [B, n_output] int8. Returns (c', h') with identical dtypes.
+
+    This is the oracle the Pallas kernel is tested against, and the
+    bit-exact mirror of ``IntegerLstm::step_q``."""
+    f_pre = _gate_pre(params.gates["f"], qx, h, c)
+    z_pre = _gate_pre(params.gates["z"], qx, h, c)
+    f_act = fp.sigmoid_q15(f_pre, 3)
+    z_act = fp.tanh_q15(z_pre, 3)
+    if params.cifg:
+        i_act = jnp.minimum(32768 - f_act.astype(jnp.int32), 32767).astype(
+            jnp.int16
+        )
+    else:
+        i_pre = _gate_pre(params.gates["i"], qx, h, c)
+        i_act = fp.sigmoid_q15(i_pre, 3)
+
+    iz = i_act.astype(jnp.int32) * z_act.astype(jnp.int32)
+    fc = f_act.astype(jnp.int32) * c.astype(jnp.int32)
+    c_new32 = fp.rounding_divide_by_pot(
+        iz, 15 + params.cell_ib
+    ) + fp.rounding_divide_by_pot(fc, 15)
+    c_new = jnp.clip(c_new32, -32768, 32767).astype(jnp.int16)
+
+    o_pre = _gate_pre(params.gates["o"], qx, h, c_new)
+    o_act = fp.sigmoid_q15(o_pre, 3)
+
+    tanh_c = fp.tanh_q15(c_new, params.cell_ib)
+    prod = o_act.astype(jnp.int32) * tanh_c.astype(jnp.int32)
+    m = jnp.clip(
+        fp.multiply_by_quantized_multiplier(prod, *params.eff_hidden)
+        + params.hidden_q.zero_point,
+        -128,
+        127,
+    ).astype(jnp.int8)
+
+    if params.w_proj is not None:
+        acc = _matmul_i32(m, params.w_proj, params.proj_bias)
+        h_new = jnp.clip(
+            fp.multiply_by_quantized_multiplier(acc, *params.eff_proj)
+            + params.output_q.zero_point,
+            -128,
+            127,
+        ).astype(jnp.int8)
+    else:
+        h_new = m
+    return c_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# Float reference step (training / calibration / the float HLO artifact).
+# ---------------------------------------------------------------------------
+
+
+def float_lstm_step(weights: dict, x, c, h):
+    """Float LSTM step matching ``FloatLstm::step`` for the plain /
+    peephole / projection / CIFG variants. Batch-first jnp arrays."""
+
+    def pre(g, c_for_ph):
+        out = x @ g["w"].T + h @ g["r"].T
+        if g.get("peephole") is not None:
+            out = out + g["peephole"][None, :] * c_for_ph
+        return out + g["bias"][None, :]
+
+    def sigmoid(v):
+        return 1.0 / (1.0 + jnp.exp(-v))
+
+    f = sigmoid(pre(weights["f"], c))
+    z = jnp.tanh(pre(weights["z"], c))
+    if "i" in weights:
+        i = sigmoid(pre(weights["i"], c))
+    else:
+        i = 1.0 - f
+    c_new = i * z + f * c
+    o = sigmoid(pre(weights["o"], c_new))
+    m = o * jnp.tanh(c_new)
+    if "proj" in weights:
+        w_proj, b_proj = weights["proj"]
+        h_new = m @ w_proj.T
+        if b_proj is not None:
+            h_new = h_new + b_proj[None, :]
+    else:
+        h_new = m
+    return c_new, h_new

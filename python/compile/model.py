@@ -1,0 +1,257 @@
+"""Layer-2 JAX model: a character-level LSTM language model.
+
+This is the "small real model" of the end-to-end experiments: trained at
+build time (``train.py``), lowered to HLO for the Rust runtime
+(``aot.py``), and exported as a weight file the Rust engines load for
+the Table-1 quality comparison.
+
+The LSTM cell here is the *same* plain-variant cell as
+``kernels/ref.py:float_lstm_step`` (and therefore as the Rust
+``FloatLstm``): weight layouts are `[n_cell, n_input]` row-major, gates
+i/f/z/o, forget bias +1.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import float_lstm_step
+
+# ---------------------------------------------------------------------------
+# Character vocabulary — shared with rust/src/workload/corpus.rs.
+# ---------------------------------------------------------------------------
+
+VOCAB = 96  # '\n' + ASCII 32..126
+
+
+def tokenize(text: str) -> np.ndarray:
+    ids = np.empty(len(text), np.int32)
+    for k, ch in enumerate(text):
+        o = ord(ch)
+        if ch == "\n":
+            ids[k] = 0
+        elif 32 <= o < 127:
+            ids[k] = o - 31
+        else:
+            ids[k] = 1  # space
+    return ids
+
+
+def detokenize(ids) -> str:
+    return "".join("\n" if i == 0 else chr(int(i) + 31) for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# Model definition.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CharLmConfig:
+    vocab: int = VOCAB
+    hidden: int = 256
+    depth: int = 2
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"vocab": self.vocab, "hidden": self.hidden, "depth": self.depth}
+        )
+
+
+def init_params(cfg: CharLmConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+
+    def gate(n_in, n_cell, forget=0.0):
+        return {
+            "w": rng.normal(0, 1 / np.sqrt(n_in), (n_cell, n_in)).astype(np.float32),
+            "r": rng.normal(0, 1 / np.sqrt(n_cell), (n_cell, n_cell)).astype(np.float32),
+            "bias": (forget + rng.normal(0, 0.1, n_cell)).astype(np.float32),
+        }
+
+    layers = []
+    for d in range(cfg.depth):
+        n_in = cfg.vocab if d == 0 else cfg.hidden
+        layers.append(
+            {
+                "i": gate(n_in, cfg.hidden),
+                "f": gate(n_in, cfg.hidden, forget=1.0),
+                "z": gate(n_in, cfg.hidden),
+                "o": gate(n_in, cfg.hidden),
+            }
+        )
+    out_w = rng.normal(0, 1 / np.sqrt(cfg.hidden), (cfg.vocab, cfg.hidden)).astype(
+        np.float32
+    )
+    out_b = np.zeros(cfg.vocab, np.float32)
+    return {"layers": layers, "out_w": out_w, "out_b": out_b}
+
+
+def zero_state(cfg: CharLmConfig, batch: int):
+    return [
+        (jnp.zeros((batch, cfg.hidden)), jnp.zeros((batch, cfg.hidden)))
+        for _ in range(cfg.depth)
+    ]
+
+
+def lm_step(params: dict, x_onehot, states):
+    """One step: x_onehot [B, V] -> (logits [B, V], new states)."""
+    inp = x_onehot
+    new_states = []
+    for layer, (c, h) in zip(params["layers"], states):
+        c, h = float_lstm_step(layer, inp, c, h)
+        new_states.append((c, h))
+        inp = h
+    logits = inp @ params["out_w"].T + params["out_b"][None, :]
+    return logits, new_states
+
+
+def lm_forward(params: dict, tokens, cfg: CharLmConfig):
+    """tokens [B, T] int32 -> logits [B, T, V] via scan over time."""
+    batch = tokens.shape[0]
+
+    def scan_fn(carry, x_t):
+        logits, new_states = lm_step(params, x_t, carry)
+        return new_states, logits
+
+    onehot = jax.nn.one_hot(tokens, cfg.vocab, axis=-1)  # [B, T, V]
+    xs = jnp.swapaxes(onehot, 0, 1)  # [T, B, V]
+    _, logits = jax.lax.scan(scan_fn, zero_state(cfg, batch), xs)
+    return jnp.swapaxes(logits, 0, 1)  # [B, T, V]
+
+
+def lm_loss(params: dict, tokens, cfg: CharLmConfig):
+    """Next-character cross-entropy in nats."""
+    logits = lm_forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax is not available in the offline image).
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Weight export: the binary format rust/src/model/weights.rs reads.
+# ---------------------------------------------------------------------------
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1,
+           np.dtype(np.int16): 2, np.dtype(np.int32): 3}
+MAGIC = 0x49515257  # "IQRW"
+
+
+def write_tensors(path: str, tensors: dict):
+    """Write named tensors in the little-endian format shared with Rust."""
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC, 1))
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def flatten_charlm(params: dict) -> dict:
+    tensors = {}
+    for li, layer in enumerate(params["layers"]):
+        for gname, g in layer.items():
+            for part in ("w", "r", "bias"):
+                tensors[f"layer{li}.{gname}.{part}"] = np.asarray(g[part], np.float32)
+    tensors["out.w"] = np.asarray(params["out_w"], np.float32)
+    tensors["out.b"] = np.asarray(params["out_b"], np.float32)
+    return tensors
+
+
+def export_charlm(params: dict, cfg: CharLmConfig, path: str):
+    tensors = flatten_charlm(params)
+    write_tensors(path, tensors)
+    # npz twin for python-side reloading (aot.py).
+    np.savez(path.replace(".bin", ".npz"), **tensors)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus generator (the data substitution of DESIGN.md §3):
+# a stochastic grammar with enough structure for a char-LM to learn.
+# ---------------------------------------------------------------------------
+
+_SUBJECTS = [
+    "the encoder", "a decoder", "the quantizer", "our model", "the gate",
+    "a kernel", "the scheduler", "this layer", "the cell state",
+    "the accumulator", "a tensor", "the compiler", "our pipeline",
+    "the server", "a stream", "the batch", "that request", "the profile",
+]
+_VERBS = [
+    "computes", "accumulates", "rescales", "quantizes", "normalizes",
+    "saturates", "clamps", "projects", "propagates", "emits", "folds",
+    "multiplies", "shifts", "stores", "loads", "schedules", "decodes",
+]
+_OBJECTS = [
+    "eight bit integers", "the hidden state", "a power of two scale",
+    "the forget gate", "an int32 accumulator", "the zero point",
+    "a fixed point product", "the output projection", "sixteen bit values",
+    "the peephole connection", "a calibration range", "the layer norm",
+    "the recurrent weights", "a saturating shift", "the effective scale",
+]
+_ADVERBS = [
+    "quickly", "safely", "exactly", "twice", "without overflow",
+    "in place", "per channel", "at runtime", "offline", "on device",
+]
+
+
+def generate_corpus(n_chars: int, seed: int = 1234) -> str:
+    rng = np.random.default_rng(seed)
+    parts: list[str] = []
+    total = 0
+    while total < n_chars:
+        s = _SUBJECTS[rng.integers(len(_SUBJECTS))]
+        v = _VERBS[rng.integers(len(_VERBS))]
+        o = _OBJECTS[rng.integers(len(_OBJECTS))]
+        sent = f"{s} {v} {o}"
+        if rng.random() < 0.4:
+            sent += f" {_ADVERBS[rng.integers(len(_ADVERBS))]}"
+        if rng.random() < 0.25:
+            sent += f" and {_VERBS[rng.integers(len(_VERBS))]} {_OBJECTS[rng.integers(len(_OBJECTS))]}"
+        if rng.random() < 0.1:
+            sent += f" {int(rng.integers(1, 32768))} times"
+        sent = sent[0].upper() + sent[1:] + "."
+        parts.append(sent)
+        total += len(sent) + 1
+        parts.append("\n" if rng.random() < 0.2 else " ")
+    return "".join(parts)[:n_chars]

@@ -1,0 +1,105 @@
+"""Build-time training of the char-LM used by the end-to-end experiments.
+
+Writes to ``artifacts/``:
+  * ``corpus.txt``       — the synthetic training/eval corpus,
+  * ``charlm.bin``       — trained float weights (rust binary format),
+  * ``charlm.json``      — model config,
+  * ``train_log.json``   — the loss curve (recorded in EXPERIMENTS.md).
+
+Usage: ``python -m compile.train --out ../artifacts [--steps 400]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    max_start = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, max_start, batch)
+        yield np.stack([tokens[s : s + seq + 1] for s in starts])
+
+
+def train(out_dir: str, steps: int, hidden: int, depth: int, batch: int,
+          seq: int, corpus_chars: int, lr: float, seed: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.CharLmConfig(hidden=hidden, depth=depth)
+
+    corpus_path = os.path.join(out_dir, "corpus.txt")
+    if os.path.exists(corpus_path):
+        text = open(corpus_path).read()
+        if len(text) < corpus_chars:
+            text = M.generate_corpus(corpus_chars, seed=1234)
+            open(corpus_path, "w").write(text)
+    else:
+        text = M.generate_corpus(corpus_chars, seed=1234)
+        open(corpus_path, "w").write(text)
+    tokens = M.tokenize(text)
+
+    params = M.init_params(cfg, seed=seed)
+    opt = M.adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks):
+        loss, grads = jax.value_and_grad(M.lm_loss)(params, toks, cfg)
+        params, opt = M.adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for i, toks in enumerate(batches(tokens, batch, seq, steps, seed + 1)):
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks))
+        if i % 20 == 0 or i == steps - 1:
+            entry = {
+                "step": i,
+                "loss_nats": float(loss),
+                "bits_per_char": float(loss) / np.log(2.0),
+                "elapsed_s": round(time.time() - t0, 1),
+            }
+            log.append(entry)
+            print(
+                f"step {i:4d}  loss {entry['loss_nats']:.4f} nats "
+                f"({entry['bits_per_char']:.3f} bpc)  {entry['elapsed_s']}s"
+            )
+
+    params = jax.device_get(params)
+    M.export_charlm(params, cfg, os.path.join(out_dir, "charlm.bin"))
+    with open(os.path.join(out_dir, "charlm.json"), "w") as f:
+        f.write(cfg.to_json())
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return {"final_loss": log[-1]["loss_nats"], "log": log}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--hidden", type=int, default=192)
+    p.add_argument("--depth", type=int, default=2)
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--corpus-chars", type=int, default=400_000)
+    p.add_argument("--lr", type=float, default=2e-3)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    result = train(
+        args.out, args.steps, args.hidden, args.depth, args.batch,
+        args.seq, args.corpus_chars, args.lr, args.seed,
+    )
+    print(f"final loss: {result['final_loss']:.4f} nats")
+
+
+if __name__ == "__main__":
+    main()

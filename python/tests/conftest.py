@@ -1,0 +1,4 @@
+"""Test configuration: the integer fixed-point mirrors need int64."""
+import jax
+
+jax.config.update("jax_enable_x64", True)

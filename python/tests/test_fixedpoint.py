@@ -1,0 +1,103 @@
+"""Fixed-point mirror tests: the jnp implementations must match the
+mathematical definitions (and hence the Rust side, which is asserted
+bit-exactly against the same definitions)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fp
+
+
+def test_srdhm_reference_cases():
+    a = jnp.array([1 << 30, 1 << 30, 123456789, -123456789, 0], jnp.int32)
+    b = jnp.array([1 << 30, -(1 << 30), 987654321, 987654321, 7], jnp.int32)
+    got = np.asarray(fp.srdhm(a, b))
+    want = np.round(2.0 * np.asarray(a, np.float64) * np.asarray(b, np.float64) / 2.0**32)
+    assert np.all(np.abs(got - want) <= 1)
+
+
+def test_srdhm_saturation():
+    a = jnp.array([fp.I32_MIN], jnp.int32)
+    assert int(fp.srdhm(a, a)[0]) == fp.I32_MAX
+
+
+@given(
+    x=st.integers(min_value=-(2**31), max_value=2**31 - 1),
+    e=st.integers(min_value=0, max_value=20),
+)
+@settings(max_examples=200, deadline=None)
+def test_rounding_divide_by_pot_matches_float(x, e):
+    got = int(fp.rounding_divide_by_pot(jnp.array([x], jnp.int32), e)[0])
+    want = x / 2.0**e
+    # Round half away from zero.
+    want_r = math.floor(want + 0.5) if want >= 0 else math.ceil(want - 0.5)
+    assert got == want_r
+
+
+@given(st.floats(min_value=1e-8, max_value=100.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_quantize_multiplier_roundtrip(scale):
+    mult, shift = fp.quantize_multiplier(scale)
+    approx = mult / 2.0**31 * 2.0**shift
+    assert approx == pytest.approx(scale, rel=1e-6)
+    assert mult >= 2**30
+
+
+@given(
+    scale=st.floats(min_value=1e-6, max_value=4.0),
+    x=st.integers(min_value=-(2**20), max_value=2**20),
+)
+@settings(max_examples=200, deadline=None)
+def test_multiply_by_quantized_multiplier(scale, x):
+    mult, shift = fp.quantize_multiplier(scale)
+    got = int(
+        fp.multiply_by_quantized_multiplier(jnp.array([x], jnp.int32), mult, shift)[0]
+    )
+    assert got == pytest.approx(x * scale, abs=1.0 + abs(x * scale) * 1e-6)
+
+
+@pytest.mark.parametrize("ib", [0, 1, 2, 3, 4, 5, 6])
+def test_exp_accuracy(ib):
+    xs = np.linspace(-(2.0**ib), 0.0, 997)
+    raw = np.clip(np.round(xs * 2.0 ** (31 - ib)), fp.I32_MIN, 0).astype(np.int32)
+    got = np.asarray(fp.exp_on_negative_values(jnp.asarray(raw), ib), np.float64) / 2.0**31
+    want = np.exp(raw.astype(np.float64) * 2.0 ** (ib - 31))
+    assert np.max(np.abs(got - want)) < 2e-6
+
+
+@pytest.mark.parametrize("ib", [0, 1, 2, 3, 4, 5, 6])
+def test_tanh_q15_accuracy(ib):
+    x = np.arange(-32768, 32768, 7, dtype=np.int32).astype(np.int16)
+    got = np.asarray(fp.tanh_q15(jnp.asarray(x), ib), np.float64) / 32768.0
+    want = np.tanh(x.astype(np.float64) * 2.0 ** (ib - 15))
+    assert np.max(np.abs(got - want)) * 32768.0 <= 4.0
+
+
+@pytest.mark.parametrize("ib", [0, 1, 2, 3, 4, 5, 6])
+def test_sigmoid_q15_accuracy(ib):
+    x = np.arange(-32768, 32768, 7, dtype=np.int32).astype(np.int16)
+    got = np.asarray(fp.sigmoid_q15(jnp.asarray(x), ib), np.float64) / 32768.0
+    want = 1.0 / (1.0 + np.exp(-x.astype(np.float64) * 2.0 ** (ib - 15)))
+    assert np.max(np.abs(got - want)) * 32768.0 <= 4.0
+
+
+def test_tanh_odd_and_monotone():
+    x = np.arange(-32768, 32768, 11, dtype=np.int32).astype(np.int16)
+    y = np.asarray(fp.tanh_q15(jnp.asarray(x), 3), np.int32)
+    assert np.all(np.diff(y) >= 0)
+    yneg = np.asarray(
+        fp.tanh_q15(jnp.asarray((-x.astype(np.int32)).clip(-32768, 32767).astype(np.int16)), 3),
+        np.int32,
+    )
+    assert np.all(np.abs(y + yneg) <= 1)
+
+
+def test_sigmoid_complement():
+    x = np.array([-30000, -5000, -100, 100, 5000, 30000], np.int16)
+    p = np.asarray(fp.sigmoid_q15(jnp.asarray(x), 3), np.int32)
+    n = np.asarray(fp.sigmoid_q15(jnp.asarray(-x), 3), np.int32)
+    assert np.all(np.abs(p + n - 32768) <= 2)

@@ -1,0 +1,165 @@
+"""Pallas kernel vs pure-jnp reference: must be bit-exact, across
+shapes, dtypes ranges and variants (hypothesis-driven)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qlstm import make_qlstm_step, qmatmul_rescale
+
+
+def random_float_weights(rng, n_input, n_cell, n_output, *, peephole=False,
+                         proj=False, cifg=False):
+    def gate():
+        return {
+            "w": rng.normal(0, 1 / np.sqrt(n_input), (n_cell, n_input)),
+            "r": rng.normal(0, 1 / np.sqrt(n_output), (n_cell, n_output)),
+            "bias": rng.normal(0, 0.1, n_cell),
+            "peephole": rng.normal(0, 0.1, n_cell) if peephole else None,
+        }
+
+    w = {name: gate() for name in (("f", "z", "o") if cifg else ("i", "f", "z", "o"))}
+    w["z"]["peephole"] = None
+    if proj:
+        w["proj"] = (
+            rng.normal(0, 1 / np.sqrt(n_cell), (n_output, n_cell)),
+            rng.normal(0, 0.05, n_output),
+        )
+    return w
+
+
+def make_params(rng, n_input, n_cell, n_output, **kw):
+    fw = random_float_weights(rng, n_input, n_cell, n_output, **kw)
+    stats = {
+        "x": (-2.5, 2.5),
+        "h": (-1.0, 1.0),
+        "m": (-1.0, 1.0),
+        "c_max_abs": 3.5,
+    }
+    return ref.quantize_params(fw, stats)
+
+
+def random_state(rng, params, batch):
+    qx = rng.integers(-128, 128, (batch, params.n_input)).astype(np.int8)
+    c = rng.integers(-8000, 8000, (batch, params.n_cell)).astype(np.int16)
+    h = rng.integers(-128, 128, (batch, params.n_output)).astype(np.int8)
+    return qx, c, h
+
+
+@pytest.mark.parametrize("variant", ["plain", "peephole", "proj", "cifg", "all"])
+def test_pallas_step_matches_ref(variant):
+    rng = np.random.default_rng(42)
+    kw = {
+        "plain": {},
+        "peephole": {"peephole": True},
+        "proj": {"proj": True},
+        "cifg": {"cifg": True},
+        "all": {"peephole": True, "proj": True, "cifg": True},
+    }[variant]
+    n_output = 12 if kw.get("proj") else 24
+    params = make_params(rng, 16, 24, n_output, **kw)
+    step = make_qlstm_step(params, tile_b=4, tile_n=8)
+    qx, c, h = random_state(rng, params, 8)
+    c1, h1 = step(jnp.asarray(qx), jnp.asarray(c), jnp.asarray(h))
+    c2, h2 = ref.qlstm_step_ref(params, jnp.asarray(qx), jnp.asarray(c), jnp.asarray(h))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+@given(
+    n_input=st.integers(min_value=1, max_value=40),
+    n_cell=st.integers(min_value=1, max_value=48),
+    batch=st.integers(min_value=1, max_value=9),
+    tile_n=st.sampled_from([4, 8, 16, 128]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=20, deadline=None)
+def test_pallas_step_shape_sweep(n_input, n_cell, batch, tile_n, seed):
+    rng = np.random.default_rng(seed)
+    params = make_params(rng, n_input, n_cell, n_cell)
+    step = make_qlstm_step(params, tile_b=4, tile_n=tile_n)
+    qx, c, h = random_state(rng, params, batch)
+    c1, h1 = step(jnp.asarray(qx), jnp.asarray(c), jnp.asarray(h))
+    c2, h2 = ref.qlstm_step_ref(params, jnp.asarray(qx), jnp.asarray(c), jnp.asarray(h))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+def test_multi_step_recurrence_stays_exact():
+    rng = np.random.default_rng(7)
+    params = make_params(rng, 12, 16, 16)
+    step = make_qlstm_step(params, tile_b=8, tile_n=16)
+    qx, c, h = random_state(rng, params, 4)
+    c_k, h_k, c_r, h_r = map(jnp.asarray, (c, h, c, h))
+    for t in range(12):
+        qxt = jnp.asarray(
+            rng.integers(-128, 128, (4, params.n_input)).astype(np.int8)
+        )
+        c_k, h_k = step(qxt, c_k, h_k)
+        c_r, h_r = ref.qlstm_step_ref(params, qxt, c_r, h_r)
+        np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r), err_msg=f"t={t}")
+        np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r), err_msg=f"t={t}")
+
+
+def test_qmatmul_rescale_matches_ref():
+    rng = np.random.default_rng(3)
+    w = rng.integers(-127, 128, (24, 16)).astype(np.int8)
+    bias = rng.integers(-(2**16), 2**16, 24).astype(np.int32)
+    x = rng.integers(-128, 128, (5, 16)).astype(np.int8)
+    from compile import fixedpoint as fp
+
+    eff = fp.quantize_multiplier(3.1e-4)
+    got = qmatmul_rescale(jnp.asarray(x), w, bias, eff, 3, tile_n=8)
+    acc = x.astype(np.int64) @ w.astype(np.int64).T + bias[None, :]
+    want = np.clip(
+        np.asarray(
+            fp.multiply_by_quantized_multiplier(jnp.asarray(acc, jnp.int32), *eff)
+        )
+        + 3,
+        -128,
+        127,
+    ).astype(np.int8)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_integer_step_tracks_float_step():
+    """End-to-end sanity: dequantized integer outputs track the float
+    cell (the quality claim, in miniature)."""
+    rng = np.random.default_rng(11)
+    fw = random_float_weights(rng, 12, 24, 24)
+    # Calibrate stats from an actual float rollout.
+    x_seq = rng.normal(0, 1, (30, 6, 12)).astype(np.float32)
+    c = jnp.zeros((6, 24))
+    h = jnp.zeros((6, 24))
+    jw = {
+        k: {kk: (jnp.asarray(vv) if vv is not None else None) for kk, vv in v.items()}
+        for k, v in fw.items()
+    }
+    c_lo = h_lo = 0.0
+    c_hi = h_hi = 0.0
+    for t in range(30):
+        c, h = ref.float_lstm_step(jw, jnp.asarray(x_seq[t]), c, h)
+        c_lo, c_hi = min(c_lo, float(c.min())), max(c_hi, float(c.max()))
+        h_lo, h_hi = min(h_lo, float(h.min())), max(h_hi, float(h.max()))
+    stats = {
+        "x": (float(x_seq.min()), float(x_seq.max())),
+        "h": (h_lo, h_hi),
+        "m": (h_lo, h_hi),
+        "c_max_abs": max(abs(c_lo), abs(c_hi)),
+    }
+    params = ref.quantize_params(fw, stats)
+
+    qc = jnp.zeros((6, 24), jnp.int16)
+    qh = jnp.full((6, 24), params.output_q.zero_point, jnp.int8)
+    c = jnp.zeros((6, 24))
+    h = jnp.zeros((6, 24))
+    errs = []
+    for t in range(30):
+        qx = jnp.asarray(params.input_q.quantize(x_seq[t]))
+        qc, qh = ref.qlstm_step_ref(params, qx, qc, qh)
+        c, h = ref.float_lstm_step(jw, jnp.asarray(x_seq[t]), c, h)
+        deq = params.output_q.dequantize(np.asarray(qh))
+        errs.append(np.mean(np.abs(deq - np.asarray(h))))
+    assert np.mean(errs) < 0.03, f"mean divergence {np.mean(errs)}"

@@ -1,0 +1,23 @@
+use iqrnn::lstm::*;
+use iqrnn::util::{Pcg32, timer::bench};
+fn main() {
+    let mut rng = Pcg32::seeded(4);
+    for &(n_input, hidden) in &[(256usize, 512usize), (96, 192)] {
+        let spec = LstmSpec::plain(n_input, hidden);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib: Vec<Vec<Vec<f32>>> = (0..2).map(|_| (0..8).map(|_| (0..n_input).map(|_| rng.normal_f32(0.0,1.0)).collect()).collect()).collect();
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&w, &stats, Default::default());
+        let hybrid = HybridLstm::from_weights(&w);
+        let x: Vec<f32> = (0..n_input).map(|_| rng.normal_f32(0.0,1.0)).collect();
+        let qx: Vec<i8> = x.iter().map(|&v| integer.input_q.quantize(v as f64)).collect();
+        let mut hs = FloatState::zeros(&spec);
+        let t_h = bench(5, 101, || { hybrid.step(&x, &mut hs); hs.h[0] }).median_secs();
+        let mut is = IntegerState::zeros(&integer);
+        let t_i = bench(5, 101, || { integer.step_q(&qx, &mut is); is.h[0] }).median_secs();
+        let mut is2 = IntegerState::zeros(&integer);
+        let t_if = bench(5, 101, || { integer.step(&x, &mut is2); is2.h[0] }).median_secs();
+        println!("{n_input}x{hidden}: hybrid {:.1}us integer(q) {:.1}us integer(f32-in) {:.1}us", t_h*1e6, t_i*1e6, t_if*1e6);
+    }
+}

@@ -1,0 +1,16 @@
+use iqrnn::lstm::*;
+use iqrnn::util::Pcg32;
+fn main() {
+    let mut rng = Pcg32::seeded(4);
+    let n_input = 256; let hidden = 512;
+    let spec = LstmSpec::plain(n_input, hidden);
+    let weights = StackWeights::random(n_input, spec, 2, &mut rng);
+    let calib: Vec<Vec<Vec<f32>>> = (0..4).map(|_| (0..16).map(|_| (0..n_input).map(|_| rng.normal_f32(0.0,1.0)).collect()).collect()).collect();
+    let stats = weights.calibrate(&calib);
+    let stack = LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
+    let xs: Vec<Vec<f32>> = (0..32).map(|_| (0..n_input).map(|_| rng.normal_f32(0.0,1.0)).collect()).collect();
+    let mut out = vec![0f32; stack.n_output()];
+    let mut states = stack.zero_state();
+    for _ in 0..40 { for x in &xs { stack.step(x, &mut states, &mut out); } }
+    std::hint::black_box(out[0]);
+}

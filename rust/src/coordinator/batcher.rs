@@ -1,0 +1,115 @@
+//! Bounded micro-batching with a latency deadline.
+//!
+//! Workers drain their queue into batches of at most `max_batch` items,
+//! waiting at most `max_wait` for stragglers once the first item is in
+//! hand — the standard throughput/latency dial of serving systems.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pull-side batcher over an mpsc receiver.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Batcher { rx, policy }
+    }
+
+    /// Block until at least one item, then gather up to `max_batch`
+    /// within the deadline. Returns `None` when the channel closed and
+    /// is drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = match self.rx.recv() {
+            Ok(item) => item,
+            Err(_) => return None,
+        };
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            // Fast path: drain without waiting.
+            match self.rx.try_recv() {
+                Ok(item) => {
+                    batch.push(item);
+                    continue;
+                }
+                Err(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        assert_eq!(b.next_batch().unwrap().len(), 8);
+        assert_eq!(b.next_batch().unwrap().len(), 8);
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_for_stragglers_within_deadline() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+        );
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+            tx.send(3).unwrap();
+            // Hold the channel open past the deadline.
+            std::thread::sleep(Duration::from_millis(200));
+            drop(tx);
+        });
+        let batch = b.next_batch().unwrap();
+        assert!(batch.len() >= 3, "got {batch:?}");
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+}

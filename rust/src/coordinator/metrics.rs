@@ -1,0 +1,46 @@
+//! Serving metrics: what the benchmark harness reports for E4/E10.
+
+use crate::eval::metrics::{LatencyStats, RtFactor};
+
+/// The report a serving run produces.
+#[derive(Debug)]
+pub struct ServingReport {
+    pub engine: &'static str,
+    pub requests: usize,
+    pub tokens: usize,
+    pub wall_secs: f64,
+    /// Total model-execution time across workers (excludes queueing).
+    pub compute_secs: f64,
+    pub latency: LatencyStats,
+    pub workers: usize,
+    pub mean_batch: f64,
+}
+
+impl ServingReport {
+    /// Tokens per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        self.tokens as f64 / self.wall_secs
+    }
+
+    /// RT factor against the nominal stream rate (compute time only —
+    /// the paper's RT factor is processing time per unit of audio).
+    pub fn rt_factor(&self) -> RtFactor {
+        RtFactor::from_tokens(self.compute_secs / self.workers as f64, self.tokens)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "  {:<8} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
+             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2}",
+            self.engine,
+            self.requests,
+            self.tokens,
+            self.wall_secs,
+            self.throughput(),
+            self.rt_factor().value(),
+            self.latency.percentile(50.0),
+            self.latency.percentile(99.0),
+            self.mean_batch,
+        );
+    }
+}

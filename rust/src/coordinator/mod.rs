@@ -1,0 +1,26 @@
+//! The L3 serving coordinator: a streaming stateful-RNN server.
+//!
+//! The paper's quantization exists to serve *streaming* RNN workloads
+//! (speech) on cheap hardware; what makes RNN serving distinctive — and
+//! what this coordinator implements — is that every stream carries
+//! persistent cell/hidden state across requests, so routing must be
+//! *sticky* and batching must group steps, not requests:
+//!
+//! * [`session`] — per-stream persistent LSTM state with lifecycle;
+//! * [`router`] — sticky hash routing of sessions onto workers;
+//! * [`batcher`] — bounded micro-batching with a latency deadline;
+//! * [`server`] — worker threads, each owning an engine instance and
+//!   its sessions; open-loop trace replay with latency accounting;
+//! * [`metrics`] — counters + the RT-factor / latency reports.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::ServingReport;
+pub use router::Router;
+pub use server::{Server, ServerConfig};
+pub use session::{Session, SessionId, SessionManager};

@@ -1,0 +1,64 @@
+//! Sticky session routing: a session's persistent LSTM state lives on
+//! exactly one worker, so the router must map a given session id to the
+//! same worker every time (consistent hashing over a fixed worker set).
+
+use super::session::SessionId;
+
+/// Maps sessions to workers.
+#[derive(Debug, Clone)]
+pub struct Router {
+    workers: usize,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Router { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The worker owning `session` (SplitMix64 finalizer — uniform and
+    /// stable across calls).
+    pub fn route(&self, session: SessionId) -> usize {
+        let mut z = session.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        (z % self.workers as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_sticky() {
+        let r = Router::new(4);
+        for id in 0..1000u64 {
+            assert_eq!(r.route(id), r.route(id));
+            assert!(r.route(id) < 4);
+        }
+    }
+
+    #[test]
+    fn routing_is_balanced() {
+        let r = Router::new(4);
+        let mut counts = [0usize; 4];
+        for id in 0..10_000u64 {
+            counts[r.route(id)] += 1;
+        }
+        for &c in &counts {
+            assert!((2000..3000).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let r = Router::new(1);
+        assert_eq!(r.route(123), 0);
+    }
+}

@@ -1,0 +1,249 @@
+//! The streaming serving loop: sticky-routed workers, each owning an
+//! engine instance and its sessions, fed by bounded micro-batching;
+//! open-loop trace replay with end-to-end latency accounting.
+
+use std::sync::mpsc::{channel, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::eval::metrics::LatencyStats;
+use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
+use crate::model::lm::{nll_bits, CharLm};
+use crate::workload::synth::RequestTrace;
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::ServingReport;
+use super::router::Router;
+use super::session::{SessionId, SessionManager};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    pub engine: StackEngine,
+    pub opts: QuantizeOptions,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+            engine: StackEngine::Integer,
+            opts: QuantizeOptions::default(),
+        }
+    }
+}
+
+/// One unit of work: a request's token chunk for a session.
+struct WorkItem {
+    session: SessionId,
+    tokens: Vec<usize>,
+    submitted: Instant,
+}
+
+/// Completion record sent back to the driver.
+struct Completion {
+    latency_ms: f64,
+    tokens: usize,
+    nll_bits_total: f64,
+}
+
+/// Per-worker execution summary.
+struct WorkerSummary {
+    compute_secs: f64,
+    batches: usize,
+    items: usize,
+}
+
+/// The server: binds a model + engine choice to a worker pool.
+pub struct Server<'a> {
+    lm: &'a CharLm,
+    stats: Option<&'a [CalibrationStats]>,
+    pub config: ServerConfig,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(
+        lm: &'a CharLm,
+        stats: Option<&'a [CalibrationStats]>,
+        config: ServerConfig,
+    ) -> Self {
+        if config.engine == StackEngine::Integer {
+            assert!(stats.is_some(), "integer engine needs calibration stats");
+        }
+        Server { lm, stats, config }
+    }
+
+    /// Replay a trace open-loop (arrival times compressed by
+    /// `speedup`), return the serving report.
+    pub fn run_trace(&self, trace: &RequestTrace, speedup: f64) -> Result<ServingReport> {
+        let router = Router::new(self.config.workers);
+        let (done_tx, done_rx) = channel::<Completion>();
+        let engine_label = self.config.engine.label();
+
+        let wall_start = Instant::now();
+        let summaries: Vec<WorkerSummary> = std::thread::scope(|scope| {
+            let mut senders: Vec<Sender<WorkItem>> = Vec::new();
+            let mut handles = Vec::new();
+            for _ in 0..self.config.workers {
+                let (tx, rx) = channel::<WorkItem>();
+                senders.push(tx);
+                let batcher = Batcher::new(rx, self.config.batch);
+                let done = done_tx.clone();
+                let lm = self.lm;
+                let stats = self.stats;
+                let engine_kind = self.config.engine;
+                let opts = self.config.opts;
+                handles.push(scope.spawn(move || {
+                    let engine = lm.engine(engine_kind, stats, opts);
+                    let mut sessions = SessionManager::new();
+                    let mut summary =
+                        WorkerSummary { compute_secs: 0.0, batches: 0, items: 0 };
+                    while let Some(batch) = batcher.next_batch() {
+                        summary.batches += 1;
+                        let t0 = Instant::now();
+                        for item in batch {
+                            summary.items += 1;
+                            let session = sessions.get_or_create(item.session, &engine);
+                            let mut nll = 0f64;
+                            for w in item.tokens.windows(2) {
+                                engine.step_token(w[0], &mut session.state);
+                                nll += nll_bits(&session.state.logits, w[1]);
+                            }
+                            if let Some(&last) = item.tokens.last() {
+                                engine.step_token(last, &mut session.state);
+                            }
+                            session.tokens_seen += item.tokens.len();
+                            session.nll_bits += nll;
+                            let _ = done.send(Completion {
+                                latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
+                                tokens: item.tokens.len(),
+                                nll_bits_total: nll,
+                            });
+                        }
+                        summary.compute_secs += t0.elapsed().as_secs_f64();
+                    }
+                    summary
+                }));
+            }
+            drop(done_tx);
+
+            // Open-loop submission on the driver thread.
+            let t0 = Instant::now();
+            for req in &trace.requests {
+                let target = Duration::from_secs_f64(req.arrival_ms / 1000.0 / speedup);
+                let now = t0.elapsed();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let worker = router.route(req.id);
+                senders[worker]
+                    .send(WorkItem {
+                        session: req.id,
+                        tokens: req.tokens.clone(),
+                        submitted: Instant::now(),
+                    })
+                    .expect("worker died");
+            }
+            drop(senders);
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+
+        let mut latency = LatencyStats::new();
+        let mut tokens = 0usize;
+        let mut requests = 0usize;
+        let mut _total_nll = 0f64;
+        for c in done_rx.iter() {
+            latency.record(c.latency_ms);
+            tokens += c.tokens;
+            requests += 1;
+            _total_nll += c.nll_bits_total;
+        }
+        let compute_secs: f64 = summaries.iter().map(|s| s.compute_secs).sum();
+        let batches: usize = summaries.iter().map(|s| s.batches).sum();
+        let items: usize = summaries.iter().map(|s| s.items).sum();
+
+        Ok(ServingReport {
+            engine: engine_label,
+            requests,
+            tokens,
+            wall_secs,
+            compute_secs,
+            latency,
+            workers: self.config.workers,
+            mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::{LstmSpec, StackWeights};
+    use crate::model::lm::{one_hot_seq, VOCAB};
+    use crate::tensor::Matrix;
+    use crate::util::Pcg32;
+
+    fn tiny_lm() -> CharLm {
+        let mut rng = Pcg32::seeded(31);
+        let spec = LstmSpec::plain(VOCAB, 24);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, 24);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 24, depth: 1 }
+    }
+
+    fn calib(lm: &CharLm) -> Vec<CalibrationStats> {
+        let mut rng = Pcg32::seeded(32);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        let oh: Vec<_> = seqs.iter().map(|s| one_hot_seq(s)).collect();
+        lm.stack_weights.calibrate(&oh)
+    }
+
+    #[test]
+    fn serves_trace_on_all_engines() {
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        let trace = RequestTrace::generate(24, 1000.0, 12, VOCAB, 3);
+        for engine in StackEngine::ALL {
+            let config = ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                engine,
+                opts: QuantizeOptions::default(),
+            };
+            let server = Server::new(&lm, Some(&stats), config);
+            let report = server.run_trace(&trace, 1000.0).unwrap();
+            assert_eq!(report.requests, 24, "{engine:?}");
+            assert_eq!(report.tokens, trace.total_tokens());
+            assert!(report.latency.percentile(50.0) >= 0.0);
+            assert!(report.throughput() > 0.0);
+            assert!(report.compute_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn sticky_sessions_accumulate_state() {
+        // Two requests with the same session id must be processed by
+        // the same worker against the same recurrent state.
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        let mut trace = RequestTrace::generate(2, 10_000.0, 8, VOCAB, 4);
+        trace.requests[1].id = trace.requests[0].id; // same session
+        let server = Server::new(&lm, Some(&stats), ServerConfig::default());
+        let report = server.run_trace(&trace, 1000.0).unwrap();
+        assert_eq!(report.requests, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "integer engine needs calibration stats")]
+    fn integer_without_stats_panics() {
+        let lm = tiny_lm();
+        let _ = Server::new(&lm, None, ServerConfig::default());
+    }
+}

@@ -1,0 +1,170 @@
+//! Per-stream sessions: the persistent LSTM state that makes RNN
+//! serving stateful (and quantization "numerically challenging" — the
+//! state carries quantization error across invocations).
+
+use std::collections::HashMap;
+
+use crate::model::lm::{CharLmEngine, LmState};
+
+pub type SessionId = u64;
+
+/// One live stream.
+pub struct Session {
+    pub id: SessionId,
+    pub state: LmState,
+    /// Tokens processed so far (stream position).
+    pub tokens_seen: usize,
+    /// Accumulated negative log2-likelihood (quality accounting).
+    pub nll_bits: f64,
+}
+
+impl Session {
+    pub fn new(id: SessionId, engine: &CharLmEngine) -> Self {
+        Session { id, state: engine.new_state(), tokens_seen: 0, nll_bits: 0.0 }
+    }
+
+    /// Mean bits-per-char over the stream so far.
+    pub fn bits_per_char(&self) -> f64 {
+        if self.tokens_seen <= 1 {
+            return f64::NAN;
+        }
+        self.nll_bits / (self.tokens_seen - 1) as f64
+    }
+}
+
+/// Session table for one worker.
+#[derive(Default)]
+pub struct SessionManager {
+    sessions: HashMap<SessionId, Session>,
+    created: u64,
+    evicted: u64,
+}
+
+impl SessionManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the session (sticky: a given id always lives on
+    /// the worker the router chose for it).
+    pub fn get_or_create(&mut self, id: SessionId, engine: &CharLmEngine) -> &mut Session {
+        if !self.sessions.contains_key(&id) {
+            self.created += 1;
+            self.sessions.insert(id, Session::new(id, engine));
+        }
+        self.sessions.get_mut(&id).unwrap()
+    }
+
+    pub fn remove(&mut self, id: SessionId) -> Option<Session> {
+        let s = self.sessions.remove(&id);
+        if s.is_some() {
+            self.evicted += 1;
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn created(&self) -> u64 {
+        self.created
+    }
+
+    /// Evict sessions idle beyond a token-count budget (memory
+    /// pressure control; state is the dominant per-stream cost).
+    pub fn evict_longest(&mut self, keep_at_most: usize) -> usize {
+        if self.sessions.len() <= keep_at_most {
+            return 0;
+        }
+        let mut ids: Vec<(usize, SessionId)> = self
+            .sessions
+            .values()
+            .map(|s| (s.tokens_seen, s.id))
+            .collect();
+        ids.sort_unstable_by(|a, b| b.cmp(a));
+        let n = self.sessions.len() - keep_at_most;
+        for &(_, id) in ids.iter().take(n) {
+            self.sessions.remove(&id);
+            self.evicted += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::{QuantizeOptions, StackEngine};
+    use crate::lstm::{LstmSpec, StackWeights};
+    use crate::model::lm::CharLm;
+    use crate::tensor::Matrix;
+    use crate::util::Pcg32;
+
+    fn tiny_lm() -> CharLm {
+        let mut rng = Pcg32::seeded(5);
+        let spec = LstmSpec::plain(crate::model::lm::VOCAB, 16);
+        let stack_weights = StackWeights::random(crate::model::lm::VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(crate::model::lm::VOCAB, 16);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm {
+            stack_weights,
+            out_w,
+            out_b: vec![0.0; crate::model::lm::VOCAB],
+            hidden: 16,
+            depth: 1,
+        }
+    }
+
+    #[test]
+    fn session_lifecycle() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        assert!(mgr.is_empty());
+        {
+            let s = mgr.get_or_create(42, &engine);
+            assert_eq!(s.id, 42);
+            s.tokens_seen = 10;
+        }
+        // Sticky: same id returns the same state.
+        assert_eq!(mgr.get_or_create(42, &engine).tokens_seen, 10);
+        assert_eq!(mgr.len(), 1);
+        assert_eq!(mgr.created(), 1);
+        assert!(mgr.remove(42).is_some());
+        assert!(mgr.remove(42).is_none());
+    }
+
+    #[test]
+    fn state_persists_across_steps() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        let s = mgr.get_or_create(1, &engine);
+        engine.step_token(3, &mut s.state);
+        let logits_after_one = s.state.logits.clone();
+        engine.step_token(3, &mut s.state);
+        // Recurrent state changed the prediction for the same input.
+        assert_ne!(logits_after_one, s.state.logits);
+    }
+
+    #[test]
+    fn eviction_removes_longest() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        for id in 0..10u64 {
+            let s = mgr.get_or_create(id, &engine);
+            s.tokens_seen = id as usize * 100;
+        }
+        let evicted = mgr.evict_longest(6);
+        assert_eq!(evicted, 4);
+        assert_eq!(mgr.len(), 6);
+        // The longest streams (ids 6..9) are gone.
+        assert!(mgr.get_or_create(0, &engine).tokens_seen == 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Metric containers and computations.
+
+/// Quality of one engine on one eval set (Table 1 analog row cell).
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub engine: &'static str,
+    pub eval_set: String,
+    /// Bits per character (lower is better; the WER analog).
+    pub bits_per_char: f64,
+    /// Mean |float output − engine output| divergence, when measured.
+    pub divergence: Option<f64>,
+}
+
+/// Real-time factor: processing time / audio (stream) time. The paper
+/// reports integer ≈ 2x faster than float in RT factor (§6). For the
+/// char-LM substitution we define stream time via a nominal
+/// tokens-per-second rate.
+#[derive(Debug, Clone, Copy)]
+pub struct RtFactor {
+    pub processing_secs: f64,
+    pub stream_secs: f64,
+}
+
+impl RtFactor {
+    pub const NOMINAL_TOKENS_PER_SEC: f64 = 1000.0;
+
+    pub fn from_tokens(processing_secs: f64, tokens: usize) -> Self {
+        RtFactor {
+            processing_secs,
+            stream_secs: tokens as f64 / Self::NOMINAL_TOKENS_PER_SEC,
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        self.processing_secs / self.stream_secs
+    }
+}
+
+/// Latency statistics over a set of request completions.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_ms.iter().fold(f64::NAN, |m, &v| if m.is_nan() { v } else { m.max(v) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rt_factor() {
+        let rt = RtFactor::from_tokens(0.5, 1000);
+        assert!((rt.value() - 0.5).abs() < 1e-12);
+        assert!((rt.stream_secs - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record(f64::from(i));
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((l.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(l.max(), 100.0);
+    }
+
+    #[test]
+    fn empty_latency_is_nan() {
+        let l = LatencyStats::new();
+        assert!(l.percentile(50.0).is_nan());
+        assert!(l.mean().is_nan());
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation metrics: quality (bits-per-char / divergence) and the
+//! serving metrics the paper reports (RT factor, latency percentiles).
+
+pub mod metrics;
+
+pub use metrics::{LatencyStats, QualityReport, RtFactor};

@@ -1,0 +1,33 @@
+//! Fixed-point arithmetic primitives for integer-only inference.
+//!
+//! This module implements the `Q_{m.n}` number format of §3.1.2 of the
+//! paper and the saturating integer arithmetic every integer kernel in
+//! the library is built from:
+//!
+//! * [`mul`] — saturating rounding doubling high multiply (the core
+//!   "multiply two fixed-point numbers" primitive) and rounding
+//!   power-of-two shifts,
+//! * [`q`] — the `Q_{m.n}` format helpers (ranges, resolution,
+//!   power-of-two extension of measured ranges per §3.2.2),
+//! * [`rescale`] — precomputed effective-scale rescaling (int32
+//!   multiplier + shift), the mechanism that moves values between the
+//!   int32 accumulator domain and each tensor's quantized domain with
+//!   *no* floating point at inference time (floats appear only at
+//!   quantization/calibration time, when the multipliers are derived).
+//!
+//! The arithmetic follows the widely deployed gemmlowp/TFLite fixed-point
+//! semantics, which is also what the paper's production implementation
+//! (TensorFlow Lite integer LSTM) uses.
+
+pub mod mul;
+pub mod q;
+pub mod rescale;
+
+pub use mul::{
+    rounding_divide_by_pot, saturating_rounding_doubling_high_mul,
+    saturating_rounding_multiply_by_pot,
+};
+pub use q::QFormat;
+pub use rescale::{
+    multiply_by_quantized_multiplier, quantize_multiplier, Rescale,
+};

@@ -1,0 +1,193 @@
+//! Core saturating rounding integer multiply/shift primitives.
+//!
+//! These are the three operations out of which every fixed-point
+//! computation in the library is composed. Semantics match gemmlowp's
+//! `fixedpoint.h` (and therefore TFLite's reference kernels), which is
+//! the de-facto specification for the integer LSTM the paper describes.
+
+/// Saturating rounding doubling high multiply.
+///
+/// Returns the high 32 bits of `2 * a * b`, rounded to nearest. This is
+/// the product of two fixed-point numbers with 31 fractional bits in a
+/// 32-bit register (ARM's `SQRDMULH`). The only overflow case,
+/// `a == b == i32::MIN`, saturates to `i32::MAX`.
+#[inline]
+pub fn saturating_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = i64::from(a) * i64::from(b);
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+    // Truncating division (not an arithmetic shift): rounds to nearest,
+    // ties away from zero — matches gemmlowp/ARM SQRDMULH exactly.
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// Rounding (to nearest, ties away from zero) arithmetic right shift.
+#[inline]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask: i32 = (1i64 << exponent) as i32 - 1;
+    let remainder = x & mask;
+    let threshold = (mask >> 1) + i32::from(x < 0);
+    (x >> exponent) + i32::from(remainder > threshold)
+}
+
+/// Rounding right shift for 64-bit accumulators (layer norm, bias adds).
+#[inline]
+pub fn rounding_divide_by_pot_i64(x: i64, exponent: i32) -> i64 {
+    debug_assert!((0..=63).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask: i64 = (1i64 << exponent) - 1;
+    let remainder = x & mask;
+    let threshold = (mask >> 1) + i64::from(x < 0);
+    (x >> exponent) + i64::from(remainder > threshold)
+}
+
+/// Multiply by a power of two with saturation.
+///
+/// `exponent > 0` is a saturating left shift; `exponent < 0` is a
+/// rounding right shift; `exponent == 0` is the identity.
+#[inline]
+pub fn saturating_rounding_multiply_by_pot(x: i32, exponent: i32) -> i32 {
+    if exponent == 0 {
+        x
+    } else if exponent < 0 {
+        rounding_divide_by_pot(x, -exponent)
+    } else {
+        debug_assert!(exponent <= 31);
+        let min = i32::MIN >> exponent;
+        let max = i32::MAX >> exponent;
+        if x > max {
+            i32::MAX
+        } else if x < min {
+            i32::MIN
+        } else {
+            x << exponent
+        }
+    }
+}
+
+/// Rounding half-sum `(a + b) / 2`, exact in 64-bit intermediate.
+#[inline]
+pub fn rounding_half_sum(a: i32, b: i32) -> i32 {
+    let sum = i64::from(a) + i64::from(b);
+    // Round to nearest, ties away from zero.
+    let sign: i64 = if sum >= 0 { 1 } else { -1 };
+    ((sum + sign) / 2) as i32
+}
+
+/// Saturating cast of an i64 accumulator to i32.
+#[inline]
+pub fn saturate_i64_to_i32(x: i64) -> i32 {
+    x.clamp(i64::from(i32::MIN), i64::from(i32::MAX)) as i32
+}
+
+/// Saturating cast of an i32 to i16 (the ubiquitous "store as int16").
+#[inline]
+pub fn saturate_i32_to_i16(x: i32) -> i16 {
+    x.clamp(i32::from(i16::MIN), i32::from(i16::MAX)) as i16
+}
+
+/// Saturating cast of an i32 to i8.
+#[inline]
+pub fn saturate_i32_to_i8(x: i32) -> i8 {
+    x.clamp(i32::from(i8::MIN), i32::from(i8::MAX)) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srdhm_matches_double_reference() {
+        let cases: [(i32, i32); 8] = [
+            (1 << 30, 1 << 30),
+            (1 << 30, -(1 << 30)),
+            (123456789, 987654321),
+            (-123456789, 987654321),
+            (i32::MAX, i32::MAX),
+            (i32::MIN + 1, i32::MAX),
+            (0, i32::MAX),
+            (3, 3),
+        ];
+        for (a, b) in cases {
+            let got = saturating_rounding_doubling_high_mul(a, b);
+            let want = ((2.0 * a as f64 * b as f64) / 2f64.powi(32)).round();
+            assert!(
+                (f64::from(got) - want).abs() <= 1.0,
+                "srdhm({a},{b}) = {got}, want ~{want}"
+            );
+        }
+    }
+
+    #[test]
+    fn srdhm_saturates_min_min() {
+        assert_eq!(
+            saturating_rounding_doubling_high_mul(i32::MIN, i32::MIN),
+            i32::MAX
+        );
+    }
+
+    #[test]
+    fn rdbp_rounds_to_nearest() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3 (away from zero)
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3);
+        assert_eq!(rounding_divide_by_pot(4, 1), 2);
+        assert_eq!(rounding_divide_by_pot(7, 2), 2); // 1.75 -> 2
+        assert_eq!(rounding_divide_by_pot(-7, 2), -2);
+        assert_eq!(rounding_divide_by_pot(1024, 10), 1);
+        assert_eq!(rounding_divide_by_pot(1535, 10), 1); // 1.499 -> 1
+        assert_eq!(rounding_divide_by_pot(1536, 10), 2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn rdbp_i64_agrees_with_i32() {
+        for &x in &[-1_000_000i32, -5, -4, -1, 0, 1, 4, 5, 1_000_000] {
+            for e in 0..16 {
+                assert_eq!(
+                    i64::from(rounding_divide_by_pot(x, e)),
+                    rounding_divide_by_pot_i64(i64::from(x), e),
+                    "x={x} e={e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn srmbp_left_shift_saturates() {
+        assert_eq!(saturating_rounding_multiply_by_pot(1 << 30, 2), i32::MAX);
+        assert_eq!(
+            saturating_rounding_multiply_by_pot(-(1 << 30), 2),
+            i32::MIN
+        );
+        assert_eq!(saturating_rounding_multiply_by_pot(3, 4), 48);
+        assert_eq!(saturating_rounding_multiply_by_pot(3, 0), 3);
+        assert_eq!(saturating_rounding_multiply_by_pot(48, -4), 3);
+    }
+
+    #[test]
+    fn half_sum_rounds_away_from_zero() {
+        assert_eq!(rounding_half_sum(3, 4), 4); // 3.5 -> 4
+        assert_eq!(rounding_half_sum(-3, -4), -4);
+        assert_eq!(rounding_half_sum(i32::MAX, i32::MAX), i32::MAX);
+        assert_eq!(rounding_half_sum(i32::MIN, i32::MIN), i32::MIN);
+        assert_eq!(rounding_half_sum(0, 0), 0);
+    }
+
+    #[test]
+    fn saturating_casts() {
+        assert_eq!(saturate_i32_to_i16(40000), i16::MAX);
+        assert_eq!(saturate_i32_to_i16(-40000), i16::MIN);
+        assert_eq!(saturate_i32_to_i16(123), 123);
+        assert_eq!(saturate_i32_to_i8(300), i8::MAX);
+        assert_eq!(saturate_i32_to_i8(-300), i8::MIN);
+        assert_eq!(saturate_i64_to_i32(1 << 40), i32::MAX);
+        assert_eq!(saturate_i64_to_i32(-(1 << 40)), i32::MIN);
+    }
+}

@@ -1,0 +1,137 @@
+//! The `Q_{m.n}` signed fixed-point format of §3.1.2.
+//!
+//! `m` integer bits, `n` fractional bits, `m + n + 1 ==` bit width.
+//! A `Q_{m.n}` value represents floats in `[-(2^m), 2^m - 2^-n]` with a
+//! resolution of `2^-n`.
+
+/// A `Q_{m.n}` format descriptor for a given storage width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits `m`.
+    pub integer_bits: u32,
+    /// Fractional bits `n`.
+    pub fractional_bits: u32,
+}
+
+impl QFormat {
+    /// `Q_{m.n}` with a total width of `m + n + 1` bits.
+    pub const fn new(integer_bits: u32, fractional_bits: u32) -> Self {
+        Self { integer_bits, fractional_bits }
+    }
+
+    /// The 16-bit format `Q_{m.15-m}` used for activations (§3.2.1).
+    pub const fn q16(integer_bits: u32) -> Self {
+        assert!(integer_bits <= 15);
+        Self { integer_bits, fractional_bits: 15 - integer_bits }
+    }
+
+    /// Total storage width in bits (sign included).
+    pub const fn bits(&self) -> u32 {
+        self.integer_bits + self.fractional_bits + 1
+    }
+
+    /// Scale of one least-significant bit: `2^-n`.
+    pub fn resolution(&self) -> f64 {
+        2f64.powi(-(self.fractional_bits as i32))
+    }
+
+    /// Largest representable value `2^m - 2^-n`.
+    pub fn max_value(&self) -> f64 {
+        2f64.powi(self.integer_bits as i32) - self.resolution()
+    }
+
+    /// Smallest representable value `-(2^m)`.
+    pub fn min_value(&self) -> f64 {
+        -(2f64.powi(self.integer_bits as i32))
+    }
+
+    /// Quantize a float to the raw integer domain, saturating.
+    pub fn quantize(&self, v: f64) -> i32 {
+        let raw = (v / self.resolution()).round();
+        let max = (1i64 << (self.bits() - 1)) - 1;
+        let min = -(1i64 << (self.bits() - 1));
+        (raw as i64).clamp(min, max) as i32
+    }
+
+    /// Dequantize a raw integer back to float.
+    pub fn dequantize(&self, raw: i32) -> f64 {
+        f64::from(raw) * self.resolution()
+    }
+}
+
+/// Extend `max(|x|)` to the next power of two (the `POT(max)` rule used
+/// for the cell state in §3.2.2 / Table 2). Returns the exponent `m`
+/// such that the range fits in `[-2^m, 2^m)`, i.e. cell state is stored
+/// as `Q_{m.15-m}` int16.
+pub fn pot_integer_bits(max_abs: f64) -> u32 {
+    assert!(max_abs.is_finite() && max_abs >= 0.0);
+    // Cell state must at least cover the tanh input sweet spot; never go
+    // below 1 integer bit so [-1, 1] products remain representable.
+    let mut m = 0u32;
+    while 2f64.powi(m as i32) < max_abs && m < 15 {
+        m += 1;
+    }
+    m
+}
+
+/// Power-of-two extended scale for a measured cell-state range:
+/// `POT(max) / 32768` (Table 2, row `c`).
+pub fn pot_cell_scale(max_abs: f64) -> f64 {
+    2f64.powi(pot_integer_bits(max_abs) as i32) / 32768.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q312_range_and_resolution() {
+        let q = QFormat::q16(3); // Q3.12
+        assert_eq!(q.bits(), 16);
+        assert!((q.resolution() - 2f64.powi(-12)).abs() < 1e-18);
+        assert!((q.max_value() - (8.0 - 2f64.powi(-12))).abs() < 1e-12);
+        assert!((q.min_value() + 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q015_maps_unit_interval() {
+        let q = QFormat::q16(0); // Q0.15: sigmoid/tanh outputs
+        assert_eq!(q.quantize(1.0), 32767); // clamped to 32767/32768
+        assert_eq!(q.quantize(-1.0), -32768);
+        assert_eq!(q.quantize(0.5), 16384);
+        assert!((q.dequantize(32767) - 32767.0 / 32768.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_below_half_lsb() {
+        let q = QFormat::q16(3);
+        for i in -800..800 {
+            let v = f64::from(i) / 100.0;
+            let r = q.dequantize(q.quantize(v));
+            assert!(
+                (r - v).abs() <= q.resolution() / 2.0 + 1e-12,
+                "v={v} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn pot_extension_examples_from_paper() {
+        // Paper §3.2.2: measured range [-3.2, 10] -> extend to [-16, 16) -> Q4.11.
+        assert_eq!(pot_integer_bits(10.0), 4);
+        assert!((pot_cell_scale(10.0) - 16.0 / 32768.0).abs() < 1e-15);
+        assert_eq!(pot_integer_bits(3.2), 2);
+        assert_eq!(pot_integer_bits(8.0), 3);
+        assert_eq!(pot_integer_bits(8.0001), 4);
+        assert_eq!(pot_integer_bits(0.0), 0);
+        assert_eq!(pot_integer_bits(1.0), 0);
+    }
+
+    #[test]
+    fn q32_formats() {
+        let q = QFormat::new(0, 31);
+        assert_eq!(q.bits(), 32);
+        assert_eq!(q.quantize(2.0), i32::MAX);
+        assert_eq!(q.quantize(-2.0), i32::MIN);
+    }
+}

@@ -1,0 +1,185 @@
+//! Effective-scale rescaling: the only place floating point touches the
+//! pipeline, and it happens *offline* (at quantization time).
+//!
+//! The paper's integer execution repeatedly rescales int32 accumulators
+//! into a target quantized domain with an *effective scale* such as
+//! `s_effx = 2^12 * s_W * s_x` (§3.2.4). At build time each effective
+//! scale is decomposed into a normalized int32 multiplier in
+//! `[2^30, 2^31)` and a power-of-two shift; at inference time the
+//! rescale is one saturating rounding doubling high multiply plus one
+//! rounding shift — no floats, no division, no lookup table.
+
+use super::mul::{
+    rounding_divide_by_pot, saturating_rounding_doubling_high_mul,
+};
+
+/// A precomputed fixed-point rescale: `x -> x * multiplier * 2^shift`
+/// with `multiplier` normalized into `[2^30, 2^31)` (or 0 for scale 0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rescale {
+    pub multiplier: i32,
+    /// Left shift if positive, right shift if negative.
+    pub shift: i32,
+}
+
+impl Rescale {
+    /// Identity rescale (scale 1.0).
+    pub const IDENTITY: Rescale = Rescale { multiplier: 1 << 30, shift: 1 };
+
+    /// Decompose a real effective scale into (multiplier, shift).
+    pub fn from_scale(scale: f64) -> Self {
+        let (multiplier, shift) = quantize_multiplier(scale);
+        Rescale { multiplier, shift }
+    }
+
+    /// Apply the rescale to an int32 accumulator value.
+    #[inline]
+    pub fn apply(&self, x: i32) -> i32 {
+        multiply_by_quantized_multiplier(x, self.multiplier, self.shift)
+    }
+
+    /// The real scale this rescale approximates (for tests/debugging).
+    pub fn to_scale(&self) -> f64 {
+        f64::from(self.multiplier) / 2f64.powi(31) * 2f64.powi(self.shift)
+    }
+}
+
+/// Decompose `scale` into a normalized int32 multiplier and shift such
+/// that `scale ≈ multiplier / 2^31 * 2^shift` with
+/// `multiplier ∈ [2^30, 2^31)`.
+///
+/// Matches TFLite's `QuantizeMultiplier`.
+pub fn quantize_multiplier(scale: f64) -> (i32, i32) {
+    assert!(scale.is_finite() && scale >= 0.0, "scale must be >= 0, got {scale}");
+    if scale == 0.0 {
+        return (0, 0);
+    }
+    let (mut q, mut shift) = {
+        // frexp: scale = q * 2^shift with q in [0.5, 1).
+        let shift = scale.log2().floor() as i32 + 1;
+        let q = scale / 2f64.powi(shift);
+        (q, shift)
+    };
+    let mut q_fixed = (q * 2f64.powi(31)).round() as i64;
+    debug_assert!(q_fixed <= 1i64 << 31);
+    if q_fixed == 1i64 << 31 {
+        q /= 2.0;
+        let _ = q;
+        q_fixed /= 2;
+        shift += 1;
+    }
+    if shift < -31 {
+        // Underflow: the scale is so small every output rounds to zero.
+        return (0, 0);
+    }
+    if shift > 30 {
+        // Saturate enormous scales (should not occur for sane models).
+        return (i32::MAX, 30);
+    }
+    (q_fixed as i32, shift)
+}
+
+/// Apply a quantized multiplier: `x * multiplier * 2^shift`, rounding,
+/// saturating. Matches TFLite's `MultiplyByQuantizedMultiplier`.
+#[inline]
+pub fn multiply_by_quantized_multiplier(x: i32, multiplier: i32, shift: i32) -> i32 {
+    let left_shift = if shift > 0 { shift } else { 0 };
+    let right_shift = if shift > 0 { 0 } else { -shift };
+    // The left shift can overflow for large accumulators with big scales;
+    // saturate rather than wrap (the paper's §3.1.1 overflow discipline).
+    let shifted = if left_shift == 0 {
+        x
+    } else if left_shift >= 31 {
+        if x > 0 { i32::MAX } else if x < 0 { i32::MIN } else { 0 }
+    } else {
+        let min = i32::MIN >> left_shift;
+        let max = i32::MAX >> left_shift;
+        if x > max {
+            i32::MAX
+        } else if x < min {
+            i32::MIN
+        } else {
+            x << left_shift
+        }
+    };
+    rounding_divide_by_pot(
+        saturating_rounding_doubling_high_mul(shifted, multiplier),
+        right_shift,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_scale(scale: f64) {
+        let r = Rescale::from_scale(scale);
+        assert!(
+            (r.to_scale() - scale).abs() <= scale * 1e-6,
+            "scale {scale} -> {:?} -> {}",
+            r,
+            r.to_scale()
+        );
+        if scale > 0.0 {
+            assert!(r.multiplier >= 1 << 30, "normalized: {:?}", r);
+        }
+    }
+
+    #[test]
+    fn multiplier_decomposition_roundtrips() {
+        for &s in &[
+            1.0, 0.5, 0.25, 2.0, 0.0003921568, 1.5e-5, 0.9999, 1.0001,
+            3.0517578125e-5, 123.456, 7.62939453125e-6,
+        ] {
+            check_scale(s);
+        }
+    }
+
+    #[test]
+    fn zero_scale_maps_to_zero() {
+        let r = Rescale::from_scale(0.0);
+        assert_eq!(r.apply(123456), 0);
+        assert_eq!(r.apply(-123456), 0);
+    }
+
+    #[test]
+    fn apply_matches_float_reference() {
+        for &s in &[0.0007, 0.03, 0.5, 1.0, 1.7, 2.5e-4] {
+            let r = Rescale::from_scale(s);
+            for &x in &[-100_000i32, -1234, -1, 0, 1, 999, 65_535, 1_000_000] {
+                let got = r.apply(x);
+                let want = (f64::from(x) * s).round();
+                assert!(
+                    (f64::from(got) - want).abs() <= 1.0,
+                    "x={x} s={s} got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_rescale() {
+        for &x in &[-5_000_000, -1, 0, 1, 5_000_000] {
+            assert_eq!(Rescale::IDENTITY.apply(x), x);
+        }
+    }
+
+    #[test]
+    fn tiny_scale_underflows_to_zero() {
+        let r = Rescale::from_scale(1e-30);
+        assert_eq!(r.apply(i32::MAX), 0);
+    }
+
+    #[test]
+    fn effective_scale_example_from_paper() {
+        // s_effx = 2^12 * s_W * s_x for typical int8 scales.
+        let s_w = 0.02; // max|W| = 2.54
+        let s_x = 4.0 / 255.0;
+        let eff = 2f64.powi(12) * s_w * s_x;
+        let r = Rescale::from_scale(eff);
+        // An accumulator of 1000 should land near 1000 * eff.
+        let got = r.apply(1000);
+        let want = (1000.0 * eff).round();
+        assert!((f64::from(got) - want).abs() <= 1.0);
+    }
+}

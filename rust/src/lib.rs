@@ -1,0 +1,29 @@
+//! # iqrnn — integer-only quantization of recurrent neural networks
+//!
+//! A production-quality reproduction of *"On the quantization of
+//! recurrent neural networks"* (Li & Alvarez, 2021): a complete
+//! integer-only inference stack for LSTM topologies — int8 weights,
+//! int8/int16 activations, int32 accumulators, fixed-point `Q_{m.n}`
+//! scales — with **no floating point on the inference path**, plus the
+//! calibration, serving, and benchmarking systems around it.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for the paper-vs-measured results.
+
+pub mod coordinator;
+pub mod eval;
+pub mod fixedpoint;
+pub mod lstm;
+pub mod model;
+pub mod nonlin;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub mod prelude {
+    pub use crate::fixedpoint::{QFormat, Rescale};
+    pub use crate::nonlin::{sigmoid_q15, tanh_q15};
+}

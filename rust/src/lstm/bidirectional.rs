@@ -1,0 +1,129 @@
+//! Bidirectional LSTM (§7): the paper notes that uni/bidirectional
+//! RNNs "have loops on top of LSTM cell and the quantization strategy
+//! described in this work can be directly applied" — this wrapper is
+//! that loop: a forward stack and a backward stack over the same input,
+//! outputs concatenated per step. Any engine (float/hybrid/integer)
+//! plugs in unchanged.
+
+use super::quantize::QuantizeOptions;
+use super::stack::{LstmStack, StackEngine, StackWeights};
+use crate::lstm::CalibrationStats;
+
+/// A bidirectional wrapper over two independent stacks.
+pub struct BiLstm {
+    pub forward: LstmStack,
+    pub backward: LstmStack,
+}
+
+impl BiLstm {
+    /// Build from two weight sets (they may differ — e.g. separately
+    /// trained directions).
+    pub fn build(
+        fwd: &StackWeights,
+        bwd: &StackWeights,
+        engine: StackEngine,
+        stats_fwd: Option<&[CalibrationStats]>,
+        stats_bwd: Option<&[CalibrationStats]>,
+        opts: QuantizeOptions,
+    ) -> Self {
+        BiLstm {
+            forward: LstmStack::build(fwd, engine, stats_fwd, opts),
+            backward: LstmStack::build(bwd, engine, stats_bwd, opts),
+        }
+    }
+
+    /// Concatenated output width.
+    pub fn n_output(&self) -> usize {
+        self.forward.n_output() + self.backward.n_output()
+    }
+
+    /// Run a full sequence (bidirectional processing is inherently
+    /// non-streaming): outputs `[T][fwd_out + bwd_out]`, where position
+    /// `t` concatenates the forward pass at `t` with the backward pass
+    /// at `t` (i.e. backward state has consumed `x[t..]`).
+    pub fn run_sequence(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut fwd_states = self.forward.zero_state();
+        let fo = self.forward.run_sequence(xs, &mut fwd_states);
+        let reversed: Vec<Vec<f32>> = xs.iter().rev().cloned().collect();
+        let mut bwd_states = self.backward.zero_state();
+        let mut bo = self.backward.run_sequence(&reversed, &mut bwd_states);
+        bo.reverse();
+        fo.into_iter()
+            .zip(bo)
+            .map(|(mut f, b)| {
+                f.extend(b);
+                f
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::LstmSpec;
+    use crate::util::Pcg32;
+
+    fn seqs(rng: &mut Pcg32, n: usize, t: usize, d: usize) -> Vec<Vec<Vec<f32>>> {
+        (0..n)
+            .map(|_| {
+                (0..t)
+                    .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn build_pair(seed: u64) -> (StackWeights, StackWeights, Vec<CalibrationStats>, Vec<CalibrationStats>, Vec<Vec<Vec<f32>>>) {
+        let mut rng = Pcg32::seeded(seed);
+        let spec = LstmSpec::plain(8, 16);
+        let fwd = StackWeights::random(8, spec, 2, &mut rng);
+        let bwd = StackWeights::random(8, spec, 2, &mut rng);
+        let calib = seqs(&mut rng, 4, 12, 8);
+        let rev: Vec<Vec<Vec<f32>>> = calib
+            .iter()
+            .map(|s| s.iter().rev().cloned().collect())
+            .collect();
+        let sf = fwd.calibrate(&calib);
+        let sb = bwd.calibrate(&rev);
+        (fwd, bwd, sf, sb, calib)
+    }
+
+    #[test]
+    fn integer_bidirectional_tracks_float() {
+        let (fwd, bwd, sf, sb, calib) = build_pair(61);
+        let float = BiLstm::build(&fwd, &bwd, StackEngine::Float, None, None, Default::default());
+        let integer = BiLstm::build(
+            &fwd, &bwd, StackEngine::Integer, Some(&sf), Some(&sb), Default::default(),
+        );
+        assert_eq!(float.n_output(), 32);
+        let seq = &calib[0];
+        let fo = float.run_sequence(seq);
+        let io = integer.run_sequence(seq);
+        assert_eq!(fo.len(), seq.len());
+        let mut worst = 0f64;
+        for (a, b) in fo.iter().zip(&io) {
+            assert_eq!(a.len(), 32);
+            for (&x, &y) in a.iter().zip(b) {
+                worst = worst.max(f64::from((x - y).abs()));
+            }
+        }
+        assert!(worst < 0.1, "bidirectional divergence {worst}");
+    }
+
+    #[test]
+    fn backward_direction_sees_future_context() {
+        // The backward half at t=0 must depend on the *last* input.
+        let (fwd, bwd, _, _, calib) = build_pair(62);
+        let float = BiLstm::build(&fwd, &bwd, StackEngine::Float, None, None, Default::default());
+        let mut seq = calib[0].clone();
+        let out1 = float.run_sequence(&seq);
+        let last = seq.len() - 1;
+        seq[last].iter_mut().for_each(|v| *v += 1.0);
+        let out2 = float.run_sequence(&seq);
+        // Forward half at t=0 unchanged; backward half changed.
+        let fwd_w = float.forward.n_output();
+        assert_eq!(&out1[0][..fwd_w], &out2[0][..fwd_w]);
+        assert_ne!(&out1[0][fwd_w..], &out2[0][fwd_w..]);
+    }
+}

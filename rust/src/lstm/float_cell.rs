@@ -1,0 +1,295 @@
+//! Float (f32) LSTM reference cell — eqs 1–7 of the paper, all
+//! variants. This is the Table-1 "Float" baseline, the calibration
+//! substrate (§4), and the correctness oracle for both quantized
+//! engines.
+
+use crate::quant::recipe::Gate;
+use super::layernorm::layernorm_f32;
+use super::spec::{LstmSpec, LstmWeights};
+use crate::tensor::matvec_f32;
+
+/// Float recurrent state.
+#[derive(Debug, Clone)]
+pub struct FloatState {
+    /// Cell state `c`: `[n_cell]`.
+    pub c: Vec<f32>,
+    /// Output `h`: `[n_output]`.
+    pub h: Vec<f32>,
+}
+
+impl FloatState {
+    pub fn zeros(spec: &LstmSpec) -> Self {
+        FloatState { c: vec![0.0; spec.n_cell], h: vec![0.0; spec.n_output] }
+    }
+}
+
+/// Scratch buffers reused across steps (no allocation on the hot path).
+#[derive(Debug, Clone)]
+struct Scratch {
+    pre: [Vec<f32>; 4],
+    tmp: Vec<f32>,
+    m: Vec<f32>,
+}
+
+/// The float LSTM engine.
+#[derive(Debug, Clone)]
+pub struct FloatLstm {
+    pub weights: LstmWeights,
+    scratch: std::cell::RefCell<Scratch>,
+}
+
+/// Observation taps for calibration (§4): the quantizer needs the
+/// ranges of tensors that only exist transiently inside a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tap {
+    /// Raw gate matmul output `W x + R h + P ⊙ c` *before* LN/bias —
+    /// the `g_g` rows of Table 2.
+    GateMatmul(Gate),
+    /// Hidden state `m` before projection.
+    Hidden,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl FloatLstm {
+    pub fn new(weights: LstmWeights) -> Self {
+        let n_cell = weights.spec.n_cell;
+        let scratch = Scratch {
+            pre: [
+                vec![0.0; n_cell],
+                vec![0.0; n_cell],
+                vec![0.0; n_cell],
+                vec![0.0; n_cell],
+            ],
+            tmp: vec![0.0; n_cell],
+            m: vec![0.0; n_cell],
+        };
+        FloatLstm { weights, scratch: std::cell::RefCell::new(scratch) }
+    }
+
+    pub fn spec(&self) -> &LstmSpec {
+        &self.weights.spec
+    }
+
+    /// Gate pre-activation *before* the non-linearity:
+    /// `W x + R h (+ P ⊙ c)`, then LN/bias per variant.
+    /// `c_for_peephole` is `c^{t-1}` for i/f and `c^t` for o (eq 5).
+    fn gate_pre(
+        &self,
+        g: Gate,
+        x: &[f32],
+        h: &[f32],
+        c_for_peephole: &[f32],
+        pre: &mut [f32],
+        tmp: &mut [f32],
+        observe: &mut Option<&mut dyn FnMut(Tap, &[f32])>,
+    ) {
+        let spec = self.spec();
+        let gw = self.weights.gate(g);
+        matvec_f32(&gw.w, x, pre);
+        matvec_f32(&gw.r, h, tmp);
+        for (p, t) in pre.iter_mut().zip(tmp.iter()) {
+            *p += *t;
+        }
+        if let Some(p_vec) = &gw.peephole {
+            for ((p, &pw), &cv) in
+                pre.iter_mut().zip(p_vec.iter()).zip(c_for_peephole.iter())
+            {
+                *p += pw * cv;
+            }
+        }
+        if let Some(obs) = observe {
+            obs(Tap::GateMatmul(g), pre);
+        }
+        if spec.flags.layer_norm {
+            let gamma = gw.ln_weight.as_ref().expect("LN variant needs L");
+            // norm() ⊙ L + b (eq 1): beta here is the gate bias.
+            tmp.copy_from_slice(pre);
+            layernorm_f32(tmp, gamma, &gw.bias, pre);
+        } else {
+            for (p, &b) in pre.iter_mut().zip(gw.bias.iter()) {
+                *p += b;
+            }
+        }
+    }
+
+    /// One time step for a single sequence. `x`: `[n_input]`; state is
+    /// updated in place. Returns nothing — read `state.h`.
+    pub fn step(&self, x: &[f32], state: &mut FloatState) {
+        self.step_traced(x, state, None);
+    }
+
+    /// [`Self::step`] with an optional calibration tap observer.
+    pub fn step_traced(
+        &self,
+        x: &[f32],
+        state: &mut FloatState,
+        mut observe: Option<&mut dyn FnMut(Tap, &[f32])>,
+    ) {
+        let spec = *self.spec();
+        assert_eq!(x.len(), spec.n_input);
+        let mut s = self.scratch.borrow_mut();
+        let Scratch { pre, tmp, m } = &mut *s;
+        let [pre_i, pre_f, pre_z, pre_o] = pre;
+
+        // Forget / update gates always exist.
+        self.gate_pre(Gate::Forget, x, &state.h, &state.c, pre_f, tmp, &mut observe);
+        self.gate_pre(Gate::Update, x, &state.h, &state.c, pre_z, tmp, &mut observe);
+        // Input gate: physical or coupled (CIFG, eq i = 1 - f).
+        if spec.has_input_gate() {
+            self.gate_pre(Gate::Input, x, &state.h, &state.c, pre_i, tmp, &mut observe);
+        }
+
+        for j in 0..spec.n_cell {
+            let f = sigmoid(pre_f[j]);
+            let i = if spec.has_input_gate() { sigmoid(pre_i[j]) } else { 1.0 - f };
+            let z = pre_z[j].tanh();
+            state.c[j] = i * z + f * state.c[j];
+        }
+
+        // Output gate peephole reads the *new* cell state (eq 5).
+        self.gate_pre(Gate::Output, x, &state.h, &state.c, pre_o, tmp, &mut observe);
+
+        for j in 0..spec.n_cell {
+            let o = sigmoid(pre_o[j]);
+            m[j] = o * state.c[j].tanh();
+        }
+        if let Some(obs) = &mut observe {
+            obs(Tap::Hidden, m);
+        }
+
+        if spec.flags.projection {
+            let w_proj = self.weights.w_proj.as_ref().unwrap();
+            matvec_f32(w_proj, m, &mut state.h);
+            if let Some(b) = &self.weights.b_proj {
+                for (h, &bv) in state.h.iter_mut().zip(b.iter()) {
+                    *h += bv;
+                }
+            }
+        } else {
+            state.h.copy_from_slice(m);
+        }
+    }
+
+    /// Run a full sequence, returning the outputs `[T][n_output]`.
+    pub fn run_sequence(&self, xs: &[Vec<f32>], state: &mut FloatState) -> Vec<Vec<f32>> {
+        xs.iter()
+            .map(|x| {
+                self.step(x, state);
+                state.h.clone()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::recipe::VariantFlags;
+    use crate::util::Pcg32;
+
+    fn run_variant(flags: VariantFlags) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(42);
+        let mut spec = LstmSpec::plain(8, 16);
+        spec.flags = flags;
+        if flags.projection {
+            spec.n_output = 12;
+        }
+        let w = LstmWeights::random(spec, &mut rng);
+        let lstm = FloatLstm::new(w);
+        let mut state = FloatState::zeros(&spec);
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let out = lstm.run_sequence(&xs, &mut state);
+        out.last().unwrap().clone()
+    }
+
+    #[test]
+    fn all_variants_run_and_are_bounded() {
+        for mut flags in VariantFlags::all_eight() {
+            let out = run_variant(flags);
+            for &v in &out {
+                assert!(v.is_finite());
+                if !flags.projection {
+                    // h = o * tanh(c) ∈ (-1, 1) without projection.
+                    assert!(v.abs() <= 1.0, "{flags:?}: {v}");
+                }
+            }
+            // CIFG on top of each variant also runs.
+            flags.cifg = true;
+            let out = run_variant(flags);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run_variant(VariantFlags::plain());
+        let b = run_variant(VariantFlags::plain());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_input_zero_state_is_near_zero_output() {
+        let mut rng = Pcg32::seeded(9);
+        let spec = LstmSpec::plain(4, 8);
+        let mut w = LstmWeights::random(spec, &mut rng);
+        // Zero all biases so gates sit at sigmoid(0) = 0.5, tanh(0) = 0.
+        for g in w.gates.iter_mut().flatten() {
+            g.bias.iter_mut().for_each(|b| *b = 0.0);
+        }
+        let lstm = FloatLstm::new(w);
+        let mut st = FloatState::zeros(&spec);
+        lstm.step(&[0.0; 4], &mut st);
+        // c = i*tanh(0) + f*0 = 0, h = o*tanh(0) = 0.
+        assert!(st.c.iter().all(|&v| v == 0.0));
+        assert!(st.h.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn forget_gate_saturation_preserves_cell() {
+        let mut rng = Pcg32::seeded(10);
+        let spec = LstmSpec::plain(4, 8);
+        let mut w = LstmWeights::random(spec, &mut rng);
+        // Huge forget bias -> f ≈ 1; zero update weights -> z = 0.
+        if let Some(g) = w.gate_mut(Gate::Forget) {
+            g.bias.iter_mut().for_each(|b| *b = 100.0);
+        }
+        if let Some(g) = w.gate_mut(Gate::Update) {
+            g.w.data.iter_mut().for_each(|v| *v = 0.0);
+            g.r.data.iter_mut().for_each(|v| *v = 0.0);
+            g.bias.iter_mut().for_each(|b| *b = 0.0);
+        }
+        let lstm = FloatLstm::new(w);
+        let mut st = FloatState::zeros(&spec);
+        st.c.iter_mut().enumerate().for_each(|(i, c)| *c = i as f32 * 0.1);
+        let c0 = st.c.clone();
+        let x: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        lstm.step(&x, &mut st);
+        for (a, b) in st.c.iter().zip(&c0) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cifg_couples_gates() {
+        // With CIFG and forget ≈ 1 (huge bias), input ≈ 0: cell barely
+        // accumulates new information.
+        let mut rng = Pcg32::seeded(11);
+        let spec = LstmSpec::plain(4, 8).with_cifg();
+        let mut w = LstmWeights::random(spec, &mut rng);
+        if let Some(g) = w.gate_mut(Gate::Forget) {
+            g.bias.iter_mut().for_each(|b| *b = 100.0);
+        }
+        let lstm = FloatLstm::new(w);
+        let mut st = FloatState::zeros(&spec);
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            lstm.step(&x, &mut st);
+        }
+        assert!(st.c.iter().all(|&c| c.abs() < 1e-3), "{:?}", st.c);
+    }
+}

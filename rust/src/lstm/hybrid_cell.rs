@@ -1,0 +1,310 @@
+//! Hybrid LSTM (the Table-1 middle column): int8 *weights*, dynamic
+//! floating-point activations — the strategy of ref. [6] the paper
+//! compares against.
+//!
+//! At every step the activation vector is quantized on the fly
+//! (symmetric, scale recomputed from the live min/max), multiplied
+//! against the int8 weights into int32, then immediately dequantized
+//! back to float for the elementwise parts. This gets the 4× weight
+//! memory win and most of the matmul speedup, but keeps floats on the
+//! execution path — exactly the hardware-portability gap the paper's
+//! integer-only strategy removes.
+
+use crate::quant::params::SymmetricQuant;
+use crate::quant::recipe::Gate;
+use crate::quant::quantize_symmetric_i8;
+use crate::tensor::qmatmul::matvec_i8_i32;
+use crate::tensor::Matrix;
+use super::float_cell::FloatState;
+use super::layernorm::layernorm_f32;
+use super::spec::{gate_index, LstmSpec, LstmWeights};
+
+/// One gate's quantized weights.
+#[derive(Debug, Clone)]
+struct HybridGate {
+    w: Matrix<i8>,
+    w_scale: f64,
+    r: Matrix<i8>,
+    r_scale: f64,
+    bias: Vec<f32>,
+    peephole: Option<Vec<f32>>,
+    ln_weight: Option<Vec<f32>>,
+}
+
+/// The hybrid engine. State remains float ([`FloatState`]).
+#[derive(Debug)]
+pub struct HybridLstm {
+    pub spec: LstmSpec,
+    gates: [Option<HybridGate>; 4],
+    w_proj: Option<(Matrix<i8>, f64)>,
+    b_proj: Option<Vec<f32>>,
+    scratch: std::cell::RefCell<Scratch>,
+}
+
+#[derive(Debug, Clone)]
+struct Scratch {
+    qx: Vec<i8>,
+    qh: Vec<i8>,
+    qm: Vec<i8>,
+    acc: Vec<i32>,
+    pre: [Vec<f32>; 4],
+    tmp: Vec<f32>,
+    m: Vec<f32>,
+}
+
+/// Dynamically quantize a float vector: symmetric int8 with live scale.
+fn dynamic_quantize(x: &[f32], out: &mut [i8]) -> f64 {
+    let max_abs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let q = SymmetricQuant::for_weights_i8(f64::from(max_abs));
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = q.quantize_i8(f64::from(v));
+    }
+    q.scale
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl HybridLstm {
+    /// Quantize float master weights into the hybrid form.
+    pub fn from_weights(weights: &LstmWeights) -> Self {
+        let spec = weights.spec;
+        let mk = |g: Gate| -> Option<HybridGate> {
+            weights.gate_opt(g).map(|gw| {
+                let (w, wq) = quantize_symmetric_i8(&gw.w);
+                let (r, rq) = quantize_symmetric_i8(&gw.r);
+                HybridGate {
+                    w,
+                    w_scale: wq.scale,
+                    r,
+                    r_scale: rq.scale,
+                    bias: gw.bias.clone(),
+                    peephole: gw.peephole.clone(),
+                    ln_weight: gw.ln_weight.clone(),
+                }
+            })
+        };
+        let gates = [mk(Gate::Input), mk(Gate::Forget), mk(Gate::Update), mk(Gate::Output)];
+        let w_proj = weights.w_proj.as_ref().map(|w| {
+            let (q, s) = quantize_symmetric_i8(w);
+            (q, s.scale)
+        });
+        let scratch = Scratch {
+            qx: vec![0; spec.n_input],
+            qh: vec![0; spec.n_output],
+            qm: vec![0; spec.n_cell],
+            acc: vec![0; spec.n_cell.max(spec.n_output)],
+            pre: std::array::from_fn(|_| vec![0.0; spec.n_cell]),
+            tmp: vec![0.0; spec.n_cell],
+            m: vec![0.0; spec.n_cell],
+        };
+        HybridLstm {
+            spec,
+            gates,
+            w_proj,
+            b_proj: weights.b_proj.clone(),
+            scratch: std::cell::RefCell::new(scratch),
+        }
+    }
+
+    /// Quantized-weight bytes (Table 1 size accounting).
+    pub fn weight_bytes(&self) -> usize {
+        let mut bytes = 0;
+        for g in self.gates.iter().flatten() {
+            bytes += g.w.len() + g.r.len() + 4 * g.bias.len();
+            bytes += g.peephole.as_ref().map_or(0, |p| 4 * p.len());
+            bytes += g.ln_weight.as_ref().map_or(0, |l| 4 * l.len());
+        }
+        if let Some((w, _)) = &self.w_proj {
+            bytes += w.len();
+        }
+        bytes += self.b_proj.as_ref().map_or(0, |b| 4 * b.len());
+        bytes
+    }
+
+    fn gate(&self, g: Gate) -> &HybridGate {
+        self.gates[gate_index(g)].as_ref().expect("gate absent")
+    }
+
+    /// One time step (single sequence).
+    pub fn step(&self, x: &[f32], state: &mut FloatState) {
+        let spec = self.spec;
+        assert_eq!(x.len(), spec.n_input);
+        let mut s = self.scratch.borrow_mut();
+        let Scratch { qx, qh, qm, acc, pre, tmp, m } = &mut *s;
+
+        // Dynamic quantization of the two activation vectors (the
+        // "on-the-fly" cost the integer path eliminates).
+        let sx = dynamic_quantize(x, qx);
+        let sh = dynamic_quantize(&state.h, qh);
+
+        let gate_list: [(Gate, usize); 4] = [
+            (Gate::Input, 0),
+            (Gate::Forget, 1),
+            (Gate::Update, 2),
+            (Gate::Output, 3),
+        ];
+        for (g, idx) in gate_list {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            let hg = self.gate(g);
+            let out = &mut pre[idx];
+            // W x (int8 matmul, dequantized with s_W * s_x).
+            matvec_i8_i32(&hg.w, qx, &[], &mut acc[..spec.n_cell]);
+            let kx = (hg.w_scale * sx) as f32;
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o = a as f32 * kx;
+            }
+            // + R h.
+            matvec_i8_i32(&hg.r, qh, &[], &mut acc[..spec.n_cell]);
+            let kh = (hg.r_scale * sh) as f32;
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o += a as f32 * kh;
+            }
+        }
+
+        // Peepholes on i/f read c^{t-1}; bias/LN; then the nonlinear
+        // part — all float, as in the hybrid strategy.
+        for (g, idx) in [(Gate::Input, 0), (Gate::Forget, 1), (Gate::Update, 2)] {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            let hg = self.gate(g);
+            if let Some(p) = &hg.peephole {
+                for ((o, &pw), &cv) in pre[idx].iter_mut().zip(p).zip(state.c.iter()) {
+                    *o += pw * cv;
+                }
+            }
+            self.finish_pre(hg, &mut pre[idx], tmp);
+        }
+
+        for j in 0..spec.n_cell {
+            let f = sigmoid(pre[1][j]);
+            let i = if spec.has_input_gate() { sigmoid(pre[0][j]) } else { 1.0 - f };
+            let z = pre[2][j].tanh();
+            state.c[j] = i * z + f * state.c[j];
+        }
+
+        // Output gate: peephole reads c^t.
+        {
+            let hg = self.gate(Gate::Output);
+            if let Some(p) = &hg.peephole {
+                for ((o, &pw), &cv) in pre[3].iter_mut().zip(p).zip(state.c.iter()) {
+                    *o += pw * cv;
+                }
+            }
+            self.finish_pre(hg, &mut pre[3], tmp);
+        }
+
+        for j in 0..spec.n_cell {
+            let o = sigmoid(pre[3][j]);
+            m[j] = o * state.c[j].tanh();
+        }
+
+        if let Some((w_proj, wp_scale)) = &self.w_proj {
+            let sm = dynamic_quantize(m, qm);
+            matvec_i8_i32(w_proj, qm, &[], &mut acc[..spec.n_output]);
+            let k = (wp_scale * sm) as f32;
+            for (h, &a) in state.h.iter_mut().zip(acc.iter()) {
+                *h = a as f32 * k;
+            }
+            if let Some(b) = &self.b_proj {
+                for (h, &bv) in state.h.iter_mut().zip(b) {
+                    *h += bv;
+                }
+            }
+        } else {
+            state.h.copy_from_slice(m);
+        }
+    }
+
+    fn finish_pre(&self, hg: &HybridGate, pre: &mut [f32], tmp: &mut [f32]) {
+        if self.spec.flags.layer_norm {
+            let gamma = hg.ln_weight.as_ref().expect("LN variant needs L");
+            tmp.copy_from_slice(pre);
+            layernorm_f32(tmp, gamma, &hg.bias, pre);
+        } else {
+            for (p, &b) in pre.iter_mut().zip(hg.bias.iter()) {
+                *p += b;
+            }
+        }
+    }
+
+    /// Run a full sequence.
+    pub fn run_sequence(&self, xs: &[Vec<f32>], state: &mut FloatState) -> Vec<Vec<f32>> {
+        xs.iter()
+            .map(|x| {
+                self.step(x, state);
+                state.h.clone()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::float_cell::FloatLstm;
+    use crate::quant::recipe::VariantFlags;
+    use crate::util::Pcg32;
+
+    fn compare_with_float(flags: VariantFlags, tol: f64) {
+        let mut rng = Pcg32::seeded(1234);
+        let mut spec = LstmSpec::plain(12, 24);
+        spec.flags = flags;
+        if flags.projection {
+            spec.n_output = 16;
+        }
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let hybrid = HybridLstm::from_weights(&w);
+        let mut fs = FloatState::zeros(&spec);
+        let mut hs = FloatState::zeros(&spec);
+        let xs: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..12).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let fo = float.run_sequence(&xs, &mut fs);
+        let ho = hybrid.run_sequence(&xs, &mut hs);
+        let mut worst = 0f64;
+        for (a, b) in fo.iter().zip(&ho) {
+            for (&x, &y) in a.iter().zip(b) {
+                worst = worst.max(f64::from((x - y).abs()));
+            }
+        }
+        assert!(worst < tol, "{flags:?}: worst output divergence {worst}");
+    }
+
+    #[test]
+    fn hybrid_tracks_float_plain() {
+        compare_with_float(VariantFlags::plain(), 0.05);
+    }
+
+    #[test]
+    fn hybrid_tracks_float_all_variants() {
+        for flags in VariantFlags::all_eight() {
+            compare_with_float(flags, 0.08);
+        }
+    }
+
+    #[test]
+    fn hybrid_tracks_float_cifg() {
+        let mut flags = VariantFlags::plain();
+        flags.cifg = true;
+        compare_with_float(flags, 0.05);
+        flags.layer_norm = true;
+        compare_with_float(flags, 0.08);
+    }
+
+    #[test]
+    fn weight_bytes_quarter_of_float() {
+        let mut rng = Pcg32::seeded(5);
+        let spec = LstmSpec::plain(128, 256);
+        let w = LstmWeights::random(spec, &mut rng);
+        let hybrid = HybridLstm::from_weights(&w);
+        let float_bytes = w.param_count() * 4;
+        let ratio = float_bytes as f64 / hybrid.weight_bytes() as f64;
+        assert!(ratio > 3.5, "ratio {ratio}");
+    }
+}

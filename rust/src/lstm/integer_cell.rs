@@ -1,0 +1,641 @@
+//! The paper's contribution: the integer-only LSTM cell (§3).
+//!
+//! Everything on this execution path is integer arithmetic:
+//!
+//! * gate matmuls: int8 × int8 → int32, zero points folded into the
+//!   bias offline (§6);
+//! * three accumulators (`Wx`, `Rh + b`, `P⊙c`) rescaled by
+//!   precomputed effective scales and saturating-added into the int16
+//!   gate pre-activation — `Q3.12` without LN (§3.2.4), measured-scale
+//!   int16 with LN (§3.2.5) followed by integer layer norm (§3.2.6);
+//! * sigmoid/tanh in 16-bit fixed point, outputs `Q0.15` (§3.2.1);
+//! * cell update with rounding shifts into `Q_{m.15-m}` int16 (§3.2.7);
+//! * hidden/projection back to asymmetric int8 (§3.2.7–3.2.8);
+//! * CIFG coupling as `min(32768 - f, 32767)` (§3.2.9).
+//!
+//! No floats, no branches in the elementwise loops, no lookup tables.
+
+use crate::fixedpoint::mul::{
+    rounding_divide_by_pot, saturate_i32_to_i16, saturate_i32_to_i8,
+};
+use crate::fixedpoint::Rescale;
+use crate::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
+use crate::quant::params::AsymmetricQuant;
+use crate::quant::recipe::Gate;
+use crate::sparse::SparseMatrixI8;
+use crate::tensor::qmatmul::matvec_i8_i32;
+use crate::tensor::Matrix;
+use super::layernorm::IntegerLayerNorm;
+use super::spec::{gate_index, LstmSpec};
+
+/// Dense or CSR weight matrix (the sparse rows of Table 1).
+#[derive(Debug, Clone)]
+pub enum WeightMat {
+    Dense(Matrix<i8>),
+    Sparse(SparseMatrixI8),
+}
+
+impl WeightMat {
+    pub fn rows(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.rows,
+            WeightMat::Sparse(s) => s.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.cols,
+            WeightMat::Sparse(s) => s.cols,
+        }
+    }
+
+    /// `out[r] = bias[r] + Σ_c w[r,c] x[c]`.
+    #[inline]
+    pub fn matvec(&self, x: &[i8], bias: &[i32], out: &mut [i32]) {
+        match self {
+            WeightMat::Dense(m) => matvec_i8_i32(m, x, bias, out),
+            WeightMat::Sparse(s) => s.matvec_i32(x, bias, out),
+        }
+    }
+
+    /// Storage bytes of the weight data.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.len(),
+            WeightMat::Sparse(s) => s.storage_bytes(),
+        }
+    }
+}
+
+/// One quantized gate (figs 2/3 and 5/6).
+#[derive(Debug, Clone)]
+pub struct IntegerGate {
+    pub w: WeightMat,
+    pub r: WeightMat,
+    /// Folded bias for the `W x` accumulator: `zp_x * Σ_j W[i,j]`.
+    pub w_bias: Vec<i32>,
+    /// Folded bias for the `R h` accumulator: `zp_h * Σ_j R[i,j]`, plus
+    /// the quantized gate bias (scale `s_R s_h`) when there is no LN.
+    pub r_bias: Vec<i32>,
+    /// `s_effx`: accumulator → gate-output domain.
+    pub eff_x: Rescale,
+    /// `s_effh`.
+    pub eff_h: Rescale,
+    /// Peephole weights (int16) and `s_effc`.
+    pub peephole: Option<(Vec<i16>, Rescale)>,
+    /// Integer layer norm (LN variants), producing `Q3.12`.
+    pub ln: Option<IntegerLayerNorm>,
+}
+
+/// Quantized projection (figs 14/15).
+#[derive(Debug, Clone)]
+pub struct IntegerProjection {
+    pub w: WeightMat,
+    /// Quantized projection bias (scale `s_Wproj s_m`) + `zp_m` fold.
+    pub bias: Vec<i32>,
+    /// `s_Wproj s_m / s_h`.
+    pub eff: Rescale,
+}
+
+/// The integer-only LSTM cell.
+#[derive(Debug, Clone)]
+pub struct IntegerLstm {
+    pub spec: LstmSpec,
+    pub gates: [Option<IntegerGate>; 4],
+    /// Input quantization (`x`, int8 asymmetric).
+    pub input_q: AsymmetricQuant,
+    /// Output quantization (`h`, int8 asymmetric).
+    pub output_q: AsymmetricQuant,
+    /// Hidden quantization (`m`; equals `output_q` without projection).
+    pub hidden_q: AsymmetricQuant,
+    /// `2^-30 / s_m`: gate ⊙ tanh(c) product → hidden domain.
+    pub eff_hidden: Rescale,
+    /// Integer bits `m` of the cell state `Q_{m.15-m}` (POT-extended).
+    pub cell_ib: u32,
+    pub proj: Option<IntegerProjection>,
+    scratch: std::cell::RefCell<Scratch>,
+    /// Input quantization buffer (separate cell so `step` can fill it
+    /// while `step_q` borrows the main scratch).
+    qx_buf: std::cell::RefCell<Vec<i8>>,
+}
+
+/// Integer recurrent state: the persistent tensors of §3.2.2/§3.2.7.
+#[derive(Debug, Clone)]
+pub struct IntegerState {
+    /// Cell state, int16 `Q_{m.15-m}`.
+    pub c: Vec<i16>,
+    /// Output, int8 asymmetric (raw stored values).
+    pub h: Vec<i8>,
+}
+
+impl IntegerState {
+    /// Zero state: `c = 0`; `h` at its zero point (so it dequantizes to
+    /// exactly 0.0 — guaranteed representable by the nudging of §3.2.4).
+    pub fn zeros(lstm: &IntegerLstm) -> Self {
+        IntegerState {
+            c: vec![0; lstm.spec.n_cell],
+            h: vec![lstm.output_q.zero_point as i8; lstm.spec.n_output],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Scratch {
+    acc_x: Vec<i32>,
+    acc_h: Vec<i32>,
+    gate_out: [Vec<i16>; 4],
+    gate_act: [Vec<i16>; 4],
+    ln_in: Vec<i16>,
+    tanh_c: Vec<i16>,
+    m: Vec<i8>,
+}
+
+impl IntegerLstm {
+    pub(super) fn new_with_parts(
+        spec: LstmSpec,
+        gates: [Option<IntegerGate>; 4],
+        input_q: AsymmetricQuant,
+        output_q: AsymmetricQuant,
+        hidden_q: AsymmetricQuant,
+        cell_ib: u32,
+        proj: Option<IntegerProjection>,
+    ) -> Self {
+        let s_m = hidden_q.scale;
+        let eff_hidden = Rescale::from_scale(2f64.powi(-30) / s_m);
+        let scratch = Scratch {
+            acc_x: vec![0; spec.n_cell.max(spec.n_output)],
+            acc_h: vec![0; spec.n_cell],
+            gate_out: std::array::from_fn(|_| vec![0; spec.n_cell]),
+            gate_act: std::array::from_fn(|_| vec![0; spec.n_cell]),
+            ln_in: vec![0; spec.n_cell],
+            tanh_c: vec![0; spec.n_cell],
+            m: vec![0; spec.n_cell],
+        };
+        IntegerLstm {
+            spec,
+            gates,
+            input_q,
+            output_q,
+            hidden_q,
+            eff_hidden,
+            cell_ib,
+            proj,
+            scratch: std::cell::RefCell::new(scratch),
+            qx_buf: std::cell::RefCell::new(vec![0; spec.n_input]),
+        }
+    }
+
+    /// Build directly from raw integer parts (multipliers, shifts, zero
+    /// points) — used by the cross-layer golden tests, where the
+    /// parameters come from the python quantizer and must be used
+    /// verbatim (bit-exactness would be lost re-deriving them from
+    /// float scales).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw_parts(
+        spec: LstmSpec,
+        gates: [Option<IntegerGate>; 4],
+        zp_x: i32,
+        zp_h: i32,
+        zp_m: i32,
+        eff_hidden: Rescale,
+        cell_ib: u32,
+        proj: Option<IntegerProjection>,
+    ) -> Self {
+        let mut cell = Self::new_with_parts(
+            spec,
+            gates,
+            AsymmetricQuant { scale: 1.0, zero_point: zp_x },
+            AsymmetricQuant { scale: 1.0, zero_point: zp_h },
+            AsymmetricQuant { scale: 1.0, zero_point: zp_m },
+            cell_ib,
+            proj,
+        );
+        cell.eff_hidden = eff_hidden;
+        cell
+    }
+
+    fn gate(&self, g: Gate) -> &IntegerGate {
+        self.gates[gate_index(g)].as_ref().expect("gate absent")
+    }
+
+    /// Quantized-weight bytes (Table 1 size accounting).
+    pub fn weight_bytes(&self) -> usize {
+        let mut bytes = 0;
+        for g in self.gates.iter().flatten() {
+            bytes += g.w.storage_bytes() + g.r.storage_bytes();
+            bytes += 4 * g.r_bias.len(); // int32 bias
+            if let Some((p, _)) = &g.peephole {
+                bytes += 2 * p.len();
+            }
+            if let Some(ln) = &g.ln {
+                bytes += 2 * ln.weight.len() + 4 * ln.bias.len();
+            }
+        }
+        if let Some(p) = &self.proj {
+            bytes += p.w.storage_bytes() + 4 * p.bias.len();
+        }
+        bytes
+    }
+
+    /// Compute one gate's int16 pre-activation (fig 3 / fig 6):
+    /// `rescale(Wx, effx) + rescale(Rh + b, effh) + rescale(P⊙c, effc)`,
+    /// then integer LN when present. Output is `Q3.12`.
+    fn gate_forward(
+        &self,
+        g: Gate,
+        qx: &[i8],
+        state: &IntegerState,
+        c_for_peephole: &[i16],
+        acc_x: &mut [i32],
+        acc_h: &mut [i32],
+        ln_in: &mut [i16],
+        out: &mut [i16],
+    ) {
+        let ig = self.gate(g);
+        let n = self.spec.n_cell;
+        ig.w.matvec(qx, &ig.w_bias, &mut acc_x[..n]);
+        ig.r.matvec(&state.h, &ig.r_bias, &mut acc_h[..n]);
+        let target: &mut [i16] =
+            if ig.ln.is_some() { &mut ln_in[..n] } else { &mut out[..n] };
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                // SAFETY: feature checked; fused kernels are bit-exact
+                // with the scalar fallback below (property-tested).
+                unsafe {
+                    match &ig.peephole {
+                        Some((p, eff_c)) => {
+                            crate::nonlin::simd::gate_rescale_peephole_avx2(
+                                &acc_x[..n], ig.eff_x, &acc_h[..n], ig.eff_h,
+                                p, c_for_peephole, *eff_c, target,
+                            );
+                        }
+                        None => crate::nonlin::simd::gate_rescale_avx2(
+                            &acc_x[..n], ig.eff_x, &acc_h[..n], ig.eff_h, target,
+                        ),
+                    }
+                }
+                if let Some(ln) = &ig.ln {
+                    ln.apply(&ln_in[..n], &mut out[..n]);
+                }
+                return;
+            }
+        }
+        match &ig.peephole {
+            Some((p, eff_c)) => {
+                for j in 0..n {
+                    // P⊙c: int16 × int16 → int32 (no accumulation, §3.2.4).
+                    let pc = i32::from(p[j]) * i32::from(c_for_peephole[j]);
+                    let sum = ig.eff_x.apply(acc_x[j])
+                        + ig.eff_h.apply(acc_h[j])
+                        + eff_c.apply(pc);
+                    target[j] = saturate_i32_to_i16(sum);
+                }
+            }
+            None => {
+                for j in 0..n {
+                    let sum = ig.eff_x.apply(acc_x[j]) + ig.eff_h.apply(acc_h[j]);
+                    target[j] = saturate_i32_to_i16(sum);
+                }
+            }
+        }
+        if let Some(ln) = &ig.ln {
+            ln.apply(&ln_in[..n], &mut out[..n]);
+        }
+    }
+
+    /// One time step with an int8 input (already in the `x` domain).
+    pub fn step_q(&self, qx: &[i8], state: &mut IntegerState) {
+        let spec = self.spec;
+        assert_eq!(qx.len(), spec.n_input);
+        assert_eq!(state.c.len(), spec.n_cell);
+        assert_eq!(state.h.len(), spec.n_output);
+        let mut s = self.scratch.borrow_mut();
+        let Scratch { acc_x, acc_h, gate_out, gate_act, ln_in, tanh_c, m } = &mut *s;
+        let n = spec.n_cell;
+
+        // Pre-activations for f, z (and i when physical); all Q3.12.
+        for (g, idx) in [(Gate::Forget, 1), (Gate::Update, 2), (Gate::Input, 0)] {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            let (a, b) = {
+                // Split borrows: gate_out[idx] vs scratch accumulators.
+                (&mut *acc_x, &mut *acc_h)
+            };
+            self.gate_forward(g, qx, state, &state.c, a, b, ln_in, &mut gate_out[idx]);
+        }
+
+        // Activations: σ for gates, tanh for the update (§3.2.1) —
+        // slice kernels (AVX2 when available).
+        sigmoid_q15_slice(&gate_out[1][..n], 3, &mut gate_act[1][..n]);
+        tanh_q15_slice(&gate_out[2][..n], 3, &mut gate_act[2][..n]);
+        if spec.has_input_gate() {
+            sigmoid_q15_slice(&gate_out[0][..n], 3, &mut gate_act[0][..n]);
+        } else {
+            // CIFG (§3.2.9): i = min(32768 - f, 32767), clamped into
+            // [1/32768, 32767/32768].
+            for j in 0..n {
+                gate_act[0][j] =
+                    saturate_i32_to_i16((32768 - i32::from(gate_act[1][j])).min(32767));
+            }
+        }
+
+        // Cell update (§3.2.7): c = shift(i⊙z) + shift(f⊙c), saturated
+        // into Q_{m.15-m}. i,z are Q0.15 (30 fractional bits in the
+        // product); the cell has 15-m fractional bits, so the product
+        // shifts right by 15+m; f⊙c has 15 extra fractional bits.
+        let iz_shift = 15 + self.cell_ib as i32;
+        for j in 0..n {
+            let iz = i32::from(gate_act[0][j]) * i32::from(gate_act[2][j]);
+            let fc = i32::from(gate_act[1][j]) * i32::from(state.c[j]);
+            let sum = rounding_divide_by_pot(iz, iz_shift)
+                + rounding_divide_by_pot(fc, 15);
+            state.c[j] = saturate_i32_to_i16(sum);
+        }
+
+        // Output gate (peephole reads the *new* c, eq 5).
+        {
+            let (a, b) = (&mut *acc_x, &mut *acc_h);
+            self.gate_forward(Gate::Output, qx, state, &state.c, a, b, ln_in, &mut gate_out[3]);
+        }
+        sigmoid_q15_slice(&gate_out[3][..n], 3, &mut gate_act[3][..n]);
+
+        // Hidden state (§3.2.7): m = rescale(o ⊙ tanh(c), 2^-30/s_m) + zp_m.
+        tanh_q15_slice(&state.c[..n], self.cell_ib, &mut tanh_c[..n]);
+        let zp_m = self.hidden_q.zero_point;
+        #[cfg(target_arch = "x86_64")]
+        let simd_done = if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked; bit-exact with the scalar loop.
+            unsafe {
+                crate::nonlin::simd::hidden_rescale_avx2(
+                    &gate_act[3][..n], &tanh_c[..n], self.eff_hidden, zp_m, &mut m[..n],
+                );
+            }
+            true
+        } else {
+            false
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let simd_done = false;
+        if !simd_done {
+            for j in 0..n {
+                let prod = i32::from(gate_act[3][j]) * i32::from(tanh_c[j]);
+                m[j] = saturate_i32_to_i8(self.eff_hidden.apply(prod) + zp_m);
+            }
+        }
+
+        // Projection (§3.2.8) or pass-through.
+        match &self.proj {
+            Some(p) => {
+                let n_out = spec.n_output;
+                p.w.matvec(m, &p.bias, &mut acc_x[..n_out]);
+                let zp_h = self.output_q.zero_point;
+                for j in 0..n_out {
+                    state.h[j] = saturate_i32_to_i8(p.eff.apply(acc_x[j]) + zp_h);
+                }
+            }
+            None => {
+                for j in 0..n {
+                    state.h[j] = m[j];
+                }
+            }
+        }
+    }
+
+    /// One step from a float input: quantize with the *precomputed*
+    /// input scale (a static transformation at the system boundary —
+    /// not the hybrid engine's dynamic on-the-fly requantization) and
+    /// run the integer path.
+    pub fn step(&self, x: &[f32], state: &mut IntegerState) {
+        let mut qx = self.qx_buf.borrow_mut();
+        for (q, &v) in qx.iter_mut().zip(x) {
+            *q = self.input_q.quantize(f64::from(v));
+        }
+        self.step_q(&qx, state);
+    }
+
+    /// Dequantize the output state to floats.
+    pub fn dequantize_h(&self, state: &IntegerState, out: &mut [f32]) {
+        for (o, &q) in out.iter_mut().zip(&state.h) {
+            *o = self.output_q.dequantize(q) as f32;
+        }
+    }
+
+    /// Dequantize the cell state (`Q_{m.15-m}`).
+    pub fn dequantize_c(&self, state: &IntegerState, out: &mut [f32]) {
+        let scale = 2f64.powi(self.cell_ib as i32 - 15);
+        for (o, &q) in out.iter_mut().zip(&state.c) {
+            *o = (f64::from(q) * scale) as f32;
+        }
+    }
+
+    /// Run a full float sequence, returning dequantized outputs.
+    pub fn run_sequence(&self, xs: &[Vec<f32>], state: &mut IntegerState) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut h = vec![0f32; self.spec.n_output];
+        for x in xs {
+            self.step(x, state);
+            self.dequantize_h(state, &mut h);
+            out.push(h.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::float_cell::{FloatLstm, FloatState};
+    use crate::lstm::quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
+    use crate::lstm::spec::LstmWeights;
+    use crate::quant::recipe::VariantFlags;
+    use crate::sparse::prune_magnitude;
+    use crate::util::Pcg32;
+
+    fn make_seqs(rng: &mut Pcg32, n: usize, t: usize, dim: usize) -> Vec<Vec<Vec<f32>>> {
+        (0..n)
+            .map(|_| {
+                (0..t)
+                    .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Calibrate + quantize + compare against float on held-out data.
+    /// Returns the mean absolute output divergence.
+    fn divergence(flags: VariantFlags, sparse: bool, seed: u64) -> f64 {
+        let mut rng = Pcg32::seeded(seed);
+        let mut spec = crate::lstm::spec::LstmSpec::plain(12, 32);
+        spec.flags = flags;
+        if flags.projection {
+            spec.n_output = 20;
+        }
+        let mut w = LstmWeights::random(spec, &mut rng);
+        if sparse {
+            for g in w.gates.iter_mut().flatten() {
+                prune_magnitude(&mut g.w, 0.5);
+                prune_magnitude(&mut g.r, 0.5);
+            }
+        }
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 8, 24, 12);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(
+            &w,
+            &stats,
+            QuantizeOptions { sparse_weights: sparse, naive_layernorm: false },
+        );
+
+        let eval = make_seqs(&mut rng, 4, 32, 12);
+        let mut total = 0f64;
+        let mut count = 0usize;
+        for seq in &eval {
+            let mut fs = FloatState::zeros(&spec);
+            let mut is = IntegerState::zeros(&integer);
+            let fo = float.run_sequence(seq, &mut fs);
+            let io = integer.run_sequence(seq, &mut is);
+            for (a, b) in fo.iter().zip(&io) {
+                for (&x, &y) in a.iter().zip(b) {
+                    total += f64::from((x - y).abs());
+                    count += 1;
+                }
+            }
+        }
+        total / count as f64
+    }
+
+    #[test]
+    fn integer_tracks_float_plain() {
+        let d = divergence(VariantFlags::plain(), false, 101);
+        assert!(d < 0.03, "mean divergence {d}");
+    }
+
+    #[test]
+    fn integer_tracks_float_all_eight_variants() {
+        for flags in VariantFlags::all_eight() {
+            let d = divergence(flags, false, 202);
+            assert!(d < 0.04, "{flags:?}: mean divergence {d}");
+        }
+    }
+
+    #[test]
+    fn integer_tracks_float_cifg_variants() {
+        for ln in [false, true] {
+            for ph in [false, true] {
+                let flags = VariantFlags {
+                    cifg: true,
+                    layer_norm: ln,
+                    peephole: ph,
+                    projection: false,
+                };
+                let d = divergence(flags, false, 303);
+                assert!(d < 0.04, "{flags:?}: mean divergence {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_tracks_float_sparse() {
+        let d = divergence(VariantFlags::plain(), true, 404);
+        assert!(d < 0.03, "sparse mean divergence {d}");
+        let mut flags = VariantFlags::plain();
+        flags.cifg = true;
+        let d = divergence(flags, true, 404);
+        assert!(d < 0.03, "sparse CIFG mean divergence {d}");
+    }
+
+    #[test]
+    fn long_sequence_error_does_not_blow_up() {
+        // The paper's YouTube result: robustness on long utterances.
+        // Error must stay bounded over 1000 steps, not accumulate.
+        let mut rng = Pcg32::seeded(55);
+        let spec = crate::lstm::spec::LstmSpec::plain(8, 24);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 6, 32, 8);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&w, &stats, QuantizeOptions::default());
+
+        let seq = make_seqs(&mut rng, 1, 1000, 8).pop().unwrap();
+        let mut fs = FloatState::zeros(&spec);
+        let mut is = IntegerState::zeros(&integer);
+        let fo = float.run_sequence(&seq, &mut fs);
+        let io = integer.run_sequence(&seq, &mut is);
+        let err_of = |lo: usize, hi: usize| -> f64 {
+            let mut tot = 0.0;
+            let mut n = 0;
+            for t in lo..hi {
+                for (a, b) in fo[t].iter().zip(&io[t]) {
+                    tot += f64::from((a - b).abs());
+                    n += 1;
+                }
+            }
+            tot / f64::from(n as u32)
+        };
+        let head = err_of(10, 110);
+        let tail = err_of(890, 990);
+        assert!(tail < 0.06, "tail error {tail}");
+        assert!(tail < head * 6.0 + 0.02, "head {head} tail {tail}: drift");
+    }
+
+    #[test]
+    fn integer_state_zero_dequantizes_to_zero() {
+        let mut rng = Pcg32::seeded(77);
+        let spec = crate::lstm::spec::LstmSpec::plain(4, 8);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 2, 8, 4);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&w, &stats, QuantizeOptions::default());
+        let st = IntegerState::zeros(&integer);
+        let mut h = vec![1f32; 8];
+        integer.dequantize_h(&st, &mut h);
+        assert!(h.iter().all(|&v| v == 0.0), "{h:?}");
+    }
+
+    #[test]
+    fn weight_bytes_quarter_of_float() {
+        let mut rng = Pcg32::seeded(88);
+        let spec = crate::lstm::spec::LstmSpec::plain(128, 128);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float_bytes = w.param_count() * 4;
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 2, 8, 128);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&w, &stats, QuantizeOptions::default());
+        let ratio = float_bytes as f64 / integer.weight_bytes() as f64;
+        assert!(ratio > 3.0, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn cifg_integer_coupling_range() {
+        // §3.2.9: coupled input gate lies in [1/32768, 32767/32768].
+        for f in [0i32, 1, 16384, 32767] {
+            let i = (32768 - f).min(32767);
+            assert!((1..=32767).contains(&i), "f={f} i={i}");
+        }
+    }
+
+    #[test]
+    fn step_q_equals_step_on_prequantized_input() {
+        let mut rng = Pcg32::seeded(99);
+        let spec = crate::lstm::spec::LstmSpec::plain(6, 12);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 2, 8, 6);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&w, &stats, QuantizeOptions::default());
+        let x: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let qx: Vec<i8> =
+            x.iter().map(|&v| integer.input_q.quantize(f64::from(v))).collect();
+        let mut s1 = IntegerState::zeros(&integer);
+        let mut s2 = IntegerState::zeros(&integer);
+        integer.step(&x, &mut s1);
+        integer.step_q(&qx, &mut s2);
+        assert_eq!(s1.c, s2.c);
+        assert_eq!(s1.h, s2.h);
+    }
+}

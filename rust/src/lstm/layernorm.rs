@@ -1,0 +1,283 @@
+//! Layer normalization: float reference and the paper's integer-only
+//! execution (§3.2.6, eqs 10–16).
+//!
+//! The integer path is where the paper's key numerical insight lives:
+//! normalized activations are confined to roughly `[-3, 3]` (≈2.8 bits)
+//! no matter how the input is scaled — any input scale cancels between
+//! numerator and denominator — so quantizing `x'` directly collapses
+//! resolution catastrophically. The fix is an explicit inference-side
+//! scaling factor `s' = 2^-10` applied to `x'` in the graph, restoring
+//! ~13 significant bits. [`IntegerLayerNorm::apply`] implements
+//! eqs 13–16; the `naive` mode (no `s'`) is kept for the E5 ablation.
+
+use crate::fixedpoint::mul::{saturate_i32_to_i16, saturate_i64_to_i32};
+use crate::fixedpoint::Rescale;
+
+/// `s' = 2^-10`: the paper's inference-side scaling factor, the
+/// "smallest power-of-two that won't cause overflows" in their models.
+pub const S_PRIME_BITS: u32 = 10;
+
+/// Float layer norm: `y = (x - mean)/std * gamma + beta` (eqs 10–12).
+pub fn layernorm_f32(x: &[f32], gamma: &[f32], beta: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    assert_eq!(gamma.len(), n);
+    assert_eq!(beta.len(), n);
+    assert_eq!(out.len(), n);
+    if n == 0 {
+        return;
+    }
+    let mean = x.iter().map(|&v| f64::from(v)).sum::<f64>() / n as f64;
+    let var = x
+        .iter()
+        .map(|&v| {
+            let d = f64::from(v) - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let inv_std = 1.0 / var.sqrt().max(1e-8);
+    for i in 0..n {
+        let norm = (f64::from(x[i]) - mean) * inv_std;
+        out[i] = (norm * f64::from(gamma[i]) + f64::from(beta[i])) as f32;
+    }
+}
+
+/// Integer-only layer normalization (eqs 13–16).
+#[derive(Debug, Clone)]
+pub struct IntegerLayerNorm {
+    /// `L` coefficients, int16, scale `s_L = max(|L|)/32767`.
+    pub weight: Vec<i16>,
+    /// Bias, int32, scale `s_b = 2^-10 * s_L`.
+    pub bias: Vec<i32>,
+    /// Rescale from the post-LN domain (`2^-10 * s_L`) to the gate
+    /// activation input domain (`Q3.12`, scale `2^-12`).
+    pub out_rescale: Rescale,
+    /// E5 ablation: skip the `s' = 2^-10` factor (catastrophic — kept
+    /// only to demonstrate why the factor exists).
+    pub naive: bool,
+}
+
+/// Integer square root of a non-negative i64 (bit-by-bit method — runs
+/// once per vector, not per element, so the branchy loop stays off the
+/// elementwise hot path).
+pub fn isqrt_i64(v: i64) -> i64 {
+    debug_assert!(v >= 0);
+    if v < 2 {
+        return v;
+    }
+    let mut x = v;
+    let mut result = 0i64;
+    // Highest power of four <= v.
+    let mut bit = 1i64 << (62 - (v.leading_zeros() & !1) as i64);
+    while bit > v {
+        bit >>= 2;
+    }
+    while bit != 0 {
+        if x >= result + bit {
+            x -= result + bit;
+            result = (result >> 1) + bit;
+        } else {
+            result >>= 1;
+        }
+        bit >>= 2;
+    }
+    result
+}
+
+impl IntegerLayerNorm {
+    /// Normalize `q` (int16, any scale — it cancels) into `out` (int16,
+    /// `Q3.12`), applying coefficients and bias.
+    pub fn apply(&self, q: &[i16], out: &mut [i16]) {
+        let n = q.len();
+        assert_eq!(self.weight.len(), n);
+        assert_eq!(self.bias.len(), n);
+        assert_eq!(out.len(), n);
+        assert!(n > 0 && n <= 1 << 21, "vector too long for i64 sums");
+        // eq 13: mean of 2^10-scaled inputs, rounded.
+        let sum: i64 = q.iter().map(|&v| i64::from(v)).sum();
+        let mean = div_round_i64(sum << S_PRIME_BITS, n as i64);
+        // eq 14: sigma = sqrt(2^20/n * Σq² - mean²), 2^10-scaled.
+        let sum_sq: i64 = q.iter().map(|&v| i64::from(v) * i64::from(v)).sum();
+        let var = div_round_i64(sum_sq << (2 * S_PRIME_BITS), n as i64)
+            - mean * mean;
+        let sigma = isqrt_i64(var.max(0)).max(1);
+        for i in 0..n {
+            // eq 15 (+ the 1/s' factor): q' = round((2^10 q - mean) / (sigma * s')).
+            let centered = (i64::from(q[i]) << S_PRIME_BITS) - mean;
+            let q_prime = if self.naive {
+                // Ablation: quantize x' directly (range ±3 -> ~2.8 bits).
+                div_round_i64(centered, sigma)
+            } else {
+                div_round_i64(centered << S_PRIME_BITS, sigma)
+            };
+            // eq 16: scale by L, add bias (both in the 2^-10 * s_L
+            // domain), then rescale to Q3.12. The naive path restores
+            // the 2^10 factor only *after* q' was already rounded — the
+            // resolution is gone, which is exactly the E5 ablation.
+            let q_scaled = if self.naive { q_prime << S_PRIME_BITS } else { q_prime };
+            let acc = q_scaled * i64::from(self.weight[i]) + i64::from(self.bias[i]);
+            out[i] = saturate_i32_to_i16(self.out_rescale.apply(saturate_i64_to_i32(acc)));
+        }
+    }
+}
+
+/// Rounded signed integer division (ties away from zero).
+#[inline]
+pub fn div_round_i64(num: i64, den: i64) -> i64 {
+    debug_assert!(den > 0);
+    if num >= 0 {
+        (num + den / 2) / den
+    } else {
+        -((-num + den / 2) / den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::params::SymmetricQuant;
+    use crate::util::{proptest, Pcg32};
+
+    #[test]
+    fn isqrt_exact() {
+        for v in 0..2000i64 {
+            let r = isqrt_i64(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "v={v} r={r}");
+        }
+        for &v in &[1i64 << 40, (1i64 << 62) - 1, 1i64 << 20] {
+            let r = isqrt_i64(v);
+            assert!(r * r <= v && (r + 1).checked_mul(r + 1).map_or(true, |s| s > v));
+        }
+    }
+
+    #[test]
+    fn div_round_ties() {
+        assert_eq!(div_round_i64(5, 2), 3);
+        assert_eq!(div_round_i64(-5, 2), -3);
+        assert_eq!(div_round_i64(4, 2), 2);
+        assert_eq!(div_round_i64(7, 3), 2);
+        assert_eq!(div_round_i64(-7, 3), -2);
+    }
+
+    #[test]
+    fn float_layernorm_basics() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let gamma = [1.0f32; 4];
+        let beta = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layernorm_f32(&x, &gamma, &beta, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    /// Build an integer LN matching float gamma/beta, with input scale
+    /// irrelevant (it cancels), output Q3.12.
+    fn build_int_ln(gamma: &[f32], beta: &[f32], naive: bool) -> (IntegerLayerNorm, f64) {
+        let max_l = gamma.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let s_l = SymmetricQuant::for_weights_i16(f64::from(max_l));
+        let weight: Vec<i16> =
+            gamma.iter().map(|&v| s_l.quantize_i16(f64::from(v))).collect();
+        let s_b = SymmetricQuant::with_scale(s_l.scale * 2f64.powi(-(S_PRIME_BITS as i32)));
+        let bias: Vec<i32> =
+            beta.iter().map(|&v| s_b.quantize_i32(f64::from(v))).collect();
+        let out_rescale =
+            Rescale::from_scale(s_b.scale / 2f64.powi(-12));
+        (IntegerLayerNorm { weight, bias, out_rescale, naive }, s_l.scale)
+    }
+
+    #[test]
+    fn integer_matches_float_layernorm() {
+        proptest::run_cases("int-ln-vs-float", 64, |rng| {
+            let n = 8 + rng.below(120) as usize;
+            let scale = rng.uniform(0.3, 3.0);
+            let x: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, scale as f32)).collect();
+            let gamma: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(1.0, 0.2)).collect();
+            let beta: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+            // Quantize input at a measured-symmetric int16 scale.
+            let max_abs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let s_in = SymmetricQuant::for_weights_i16(f64::from(max_abs));
+            let q: Vec<i16> =
+                x.iter().map(|&v| s_in.quantize_i16(f64::from(v))).collect();
+            let (ln, _) = build_int_ln(&gamma, &beta, false);
+            let mut got_q = vec![0i16; n];
+            ln.apply(&q, &mut got_q);
+            let mut want = vec![0f32; n];
+            layernorm_f32(&x, &gamma, &beta, &mut want);
+            for i in 0..n {
+                let got = f64::from(got_q[i]) * 2f64.powi(-12);
+                let w = f64::from(want[i]).clamp(-8.0, 8.0 - 2f64.powi(-12));
+                // Tolerance: int16 input quantization + Q3.12 output.
+                assert!(
+                    (got - w).abs() < 0.02,
+                    "n={n} i={i} got={got} want={w}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn naive_mode_is_catastrophically_coarse() {
+        // E5: without s', the normalized value is quantized to ~±3
+        // integer levels; with gamma = 1 the output collapses onto a
+        // tiny set of values.
+        let mut rng = Pcg32::seeded(77);
+        let n = 64;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        let gamma = vec![1.0f32; n];
+        let beta = vec![0.0f32; n];
+        let s_in = SymmetricQuant::for_weights_i16(6.0);
+        let q: Vec<i16> = x.iter().map(|&v| s_in.quantize_i16(f64::from(v))).collect();
+
+        let (ln_good, _) = build_int_ln(&gamma, &beta, false);
+        let (ln_naive, _) = build_int_ln(&gamma, &beta, true);
+        let mut good = vec![0i16; n];
+        let mut naive = vec![0i16; n];
+        ln_good.apply(&q, &mut good);
+        ln_naive.apply(&q, &mut naive);
+
+        let distinct = |v: &[i16]| {
+            let s: std::collections::HashSet<i16> = v.iter().copied().collect();
+            s.len()
+        };
+        assert!(distinct(&naive) <= 9, "naive kept {} levels", distinct(&naive));
+        assert!(distinct(&good) > n / 2, "good path lost resolution");
+        // And the naive error vs float is much larger.
+        let mut want = vec![0f32; n];
+        layernorm_f32(&x, &gamma, &beta, &mut want);
+        let err = |v: &[i16]| -> f64 {
+            v.iter()
+                .zip(&want)
+                .map(|(&g, &w)| {
+                    (f64::from(g) * 2f64.powi(-12) - f64::from(w)).abs()
+                })
+                .sum::<f64>()
+                / n as f64
+        };
+        assert!(err(&naive) > 5.0 * err(&good), "naive {} good {}", err(&naive), err(&good));
+    }
+
+    #[test]
+    fn scale_invariance_of_input() {
+        // The whole point of LN: doubling the input scale must not
+        // change the output (beyond rounding).
+        let mut rng = Pcg32::seeded(3);
+        let n = 32;
+        let q: Vec<i16> = (0..n).map(|_| rng.range_i32(-8000, 8000) as i16).collect();
+        let q2: Vec<i16> = q.iter().map(|&v| v * 2).collect();
+        let gamma = vec![1.0f32; n];
+        let beta = vec![0.0f32; n];
+        let (ln, _) = build_int_ln(&gamma, &beta, false);
+        let mut a = vec![0i16; n];
+        let mut b = vec![0i16; n];
+        ln.apply(&q, &mut a);
+        ln.apply(&q2, &mut b);
+        for i in 0..n {
+            assert!((i32::from(a[i]) - i32::from(b[i])).abs() <= 8, "i={i}: {} vs {}", a[i], b[i]);
+        }
+    }
+}

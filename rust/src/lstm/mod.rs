@@ -1,0 +1,26 @@
+//! The LSTM engines: float reference, hybrid (dynamic-range), and the
+//! paper's integer-only cell, for every topology variant of §2
+//! (peephole, projection, layer normalization, CIFG) — plus calibration
+//! statistics, the quantizer that applies the Table-2 recipe, and
+//! multi-layer stacks.
+//!
+//! The three engines share the same float master weights
+//! ([`spec::LstmWeights`]) so Table 1's float/hybrid/integer comparison
+//! is apples-to-apples.
+
+pub mod bidirectional;
+pub mod float_cell;
+pub mod hybrid_cell;
+pub mod integer_cell;
+pub mod layernorm;
+pub mod quantize;
+pub mod spec;
+pub mod stack;
+
+pub use bidirectional::BiLstm;
+pub use float_cell::{FloatLstm, FloatState, Tap};
+pub use hybrid_cell::HybridLstm;
+pub use integer_cell::{IntegerLstm, IntegerState};
+pub use quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
+pub use spec::{GateWeights, LstmSpec, LstmWeights};
+pub use stack::{LayerState, LstmStack, StackEngine, StackWeights};

@@ -1,0 +1,249 @@
+//! Post-training quantization (§4): collect statistics by running the
+//! float model over a calibration set, then apply the Table-2 recipe to
+//! build the integer cell.
+
+use crate::fixedpoint::q::pot_integer_bits;
+use crate::fixedpoint::Rescale;
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::params::{AsymmetricQuant, SymmetricQuant};
+use crate::quant::recipe::Gate;
+use crate::sparse::SparseMatrixI8;
+use crate::tensor::qmatmul::fold_zero_point;
+use crate::tensor::Matrix;
+use super::float_cell::{FloatLstm, FloatState, Tap};
+use super::integer_cell::{
+    IntegerGate, IntegerLstm, IntegerProjection, WeightMat,
+};
+use super::layernorm::{IntegerLayerNorm, S_PRIME_BITS};
+use super::spec::{gate_index, LstmWeights};
+
+/// Observed dynamic ranges of every calibrated tensor.
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationStats {
+    pub x: MinMaxObserver,
+    pub h: MinMaxObserver,
+    /// Hidden `m` (pre-projection). Without projection this is unused —
+    /// `h`'s stats rule.
+    pub m: MinMaxObserver,
+    pub c: MinMaxObserver,
+    /// Raw gate matmul outputs (LN variants; the `g_g` rows of Table 2).
+    pub gate_out: [MinMaxObserver; 4],
+    /// Sequences observed.
+    pub sequences: usize,
+}
+
+impl CalibrationStats {
+    /// Run the float model over a calibration set, recording ranges.
+    ///
+    /// The paper finds ~100 utterances suffice (§5); the E9 experiment
+    /// sweeps this.
+    pub fn collect(float: &FloatLstm, sequences: &[Vec<Vec<f32>>]) -> Self {
+        let mut stats = CalibrationStats::default();
+        for seq in sequences {
+            let mut state = FloatState::zeros(float.spec());
+            for x in seq {
+                stats.x.observe_slice(x);
+                let CalibrationStats { m, gate_out, .. } = &mut stats;
+                let mut observe = |tap: Tap, v: &[f32]| match tap {
+                    Tap::GateMatmul(g) => gate_out[gate_index(g)].observe_slice(v),
+                    Tap::Hidden => m.observe_slice(v),
+                };
+                float.step_traced(x, &mut state, Some(&mut observe));
+                stats.h.observe_slice(&state.h);
+                stats.c.observe_slice(&state.c);
+            }
+            stats.sequences += 1;
+        }
+        stats
+    }
+
+    /// Merge stats from parallel calibration shards.
+    pub fn merge(&mut self, other: &CalibrationStats) {
+        self.x.merge(&other.x);
+        self.h.merge(&other.h);
+        self.m.merge(&other.m);
+        self.c.merge(&other.c);
+        for (a, b) in self.gate_out.iter_mut().zip(&other.gate_out) {
+            a.merge(b);
+        }
+        self.sequences += other.sequences;
+    }
+}
+
+/// Quantizer options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantizeOptions {
+    /// Store gate weight matrices as CSR (for pruned models).
+    pub sparse_weights: bool,
+    /// E5 ablation: integer LN without the `s'` factor.
+    pub naive_layernorm: bool,
+}
+
+/// Build the integer cell from float weights + calibration statistics,
+/// following Table 2 exactly.
+pub fn quantize_lstm(
+    weights: &LstmWeights,
+    stats: &CalibrationStats,
+    opts: QuantizeOptions,
+) -> IntegerLstm {
+    let spec = weights.spec;
+    assert!(stats.sequences > 0, "calibration stats are empty");
+
+    // Activation quantizers (Table 2 rows x, h, m): range/255 asymmetric.
+    let (x_min, x_max) = stats.x.range();
+    let input_q = AsymmetricQuant::from_min_max(x_min, x_max);
+    let (h_min, h_max) = stats.h.range();
+    let output_q = AsymmetricQuant::from_min_max(h_min, h_max);
+    let hidden_q = if spec.flags.projection {
+        let (m_min, m_max) = stats.m.range();
+        AsymmetricQuant::from_min_max(m_min, m_max)
+    } else {
+        output_q
+    };
+
+    // Cell state (row c): POT-extended symmetric int16, Q_{m.15-m}.
+    let cell_ib = pot_integer_bits(stats.c.max_abs());
+    let s_c = 2f64.powi(cell_ib as i32 - 15);
+
+    // Gate output domain: Q3.12 without LN; measured 32767-symmetric
+    // with LN (§3.2.5).
+    let q312 = 2f64.powi(-12);
+
+    let mk_gate = |g: Gate| -> Option<IntegerGate> {
+        let gw = weights.gate_opt(g)?;
+        let (w_q, w_s) = quantize_weight(&gw.w, opts.sparse_weights);
+        let (r_q, r_s) = quantize_weight(&gw.r, opts.sparse_weights);
+
+        let gate_scale = if spec.flags.layer_norm {
+            let max = stats.gate_out[gate_index(g)].max_abs().max(1e-6);
+            max / 32767.0
+        } else {
+            q312
+        };
+
+        // Effective scales (§3.2.4/3.2.5): accumulator scale over the
+        // gate-output scale.
+        let eff_x = Rescale::from_scale(w_s.scale * input_q.scale / gate_scale);
+        let eff_h = Rescale::from_scale(r_s.scale * output_q.scale / gate_scale);
+
+        // Zero-point folding (§6): the kernels compute W(x + zp_fold).
+        let w_bias = fold_zero_point(
+            match &w_q {
+                WeightMat::Dense(m) => m,
+                WeightMat::Sparse(_) => unreachable!("fold before sparsify"),
+            },
+            &[],
+            input_q.folding_zp(),
+        );
+        let mut r_bias = fold_zero_point(
+            match &r_q {
+                WeightMat::Dense(m) => m,
+                WeightMat::Sparse(_) => unreachable!(),
+            },
+            &[],
+            output_q.folding_zp(),
+        );
+
+        // Bias (Table 2): without LN, quantize at s_R*s_h and add into
+        // the Rh accumulator (§3.2.4, fig 3). With LN the float bias
+        // moves into the LN block below.
+        let ln = if spec.flags.layer_norm {
+            let l = gw.ln_weight.as_ref().expect("LN variant needs L");
+            let max_l = l.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let s_l = SymmetricQuant::for_weights_i16(f64::from(max_l));
+            let weight: Vec<i16> =
+                l.iter().map(|&v| s_l.quantize_i16(f64::from(v))).collect();
+            let s_b = s_l.scale * 2f64.powi(-(S_PRIME_BITS as i32));
+            let bias: Vec<i32> = gw
+                .bias
+                .iter()
+                .map(|&v| SymmetricQuant::with_scale(s_b).quantize_i32(f64::from(v)))
+                .collect();
+            Some(IntegerLayerNorm {
+                weight,
+                bias,
+                out_rescale: Rescale::from_scale(s_b / q312),
+                naive: opts.naive_layernorm,
+            })
+        } else {
+            let s_bias = SymmetricQuant::with_scale(r_s.scale * output_q.scale);
+            for (rb, &b) in r_bias.iter_mut().zip(&gw.bias) {
+                *rb = rb.saturating_add(s_bias.quantize_i32(f64::from(b)));
+            }
+            None
+        };
+
+        // Peephole (§3.2.3): symmetric int16, product with the int16
+        // cell rescaled by s_P * s_c / gate_scale.
+        let peephole = gw.peephole.as_ref().map(|p| {
+            let max_p = p.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let s_p = SymmetricQuant::for_weights_i16(f64::from(max_p));
+            let q: Vec<i16> =
+                p.iter().map(|&v| s_p.quantize_i16(f64::from(v))).collect();
+            (q, Rescale::from_scale(s_p.scale * s_c / gate_scale))
+        });
+
+        Some(IntegerGate {
+            w: sparsify(w_q, opts.sparse_weights),
+            r: sparsify(r_q, opts.sparse_weights),
+            w_bias,
+            r_bias,
+            eff_x,
+            eff_h,
+            peephole,
+            ln,
+        })
+    };
+
+    let gates = [
+        mk_gate(Gate::Input),
+        mk_gate(Gate::Forget),
+        mk_gate(Gate::Update),
+        mk_gate(Gate::Output),
+    ];
+
+    // Projection (§3.2.8).
+    let proj = weights.w_proj.as_ref().map(|w| {
+        let (w_q, w_s) = quantize_weight(w, opts.sparse_weights);
+        let s_bias = w_s.scale * hidden_q.scale;
+        let mut bias = fold_zero_point(
+            match &w_q {
+                WeightMat::Dense(m) => m,
+                WeightMat::Sparse(_) => unreachable!(),
+            },
+            &[],
+            hidden_q.folding_zp(),
+        );
+        if let Some(b) = &weights.b_proj {
+            let sq = SymmetricQuant::with_scale(s_bias);
+            for (fb, &v) in bias.iter_mut().zip(b) {
+                *fb = fb.saturating_add(sq.quantize_i32(f64::from(v)));
+            }
+        }
+        IntegerProjection {
+            w: sparsify(w_q, opts.sparse_weights),
+            bias,
+            eff: Rescale::from_scale(s_bias / output_q.scale),
+        }
+    });
+
+    IntegerLstm::new_with_parts(
+        spec, gates, input_q, output_q, hidden_q, cell_ib, proj,
+    )
+}
+
+/// Symmetric int8 weight quantization, kept dense until the biases are
+/// folded.
+fn quantize_weight(w: &Matrix<f32>, _sparse: bool) -> (WeightMat, SymmetricQuant) {
+    let q = SymmetricQuant::for_weights_i8(f64::from(w.max_abs()));
+    let dense = w.map(|v| q.quantize_i8(f64::from(v)));
+    (WeightMat::Dense(dense), q)
+}
+
+/// Convert to CSR after folding if requested.
+fn sparsify(w: WeightMat, sparse: bool) -> WeightMat {
+    match (w, sparse) {
+        (WeightMat::Dense(m), true) => WeightMat::Sparse(SparseMatrixI8::from_dense(&m)),
+        (w, _) => w,
+    }
+}

@@ -1,0 +1,244 @@
+//! LSTM topology specification and float master weights (§2).
+
+use crate::quant::recipe::{Gate, VariantFlags};
+use crate::tensor::Matrix;
+use crate::util::Pcg32;
+
+/// Dimensions + variant flags of one LSTM cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LstmSpec {
+    pub n_input: usize,
+    pub n_cell: usize,
+    /// Output size: `n_cell` without projection, the projection size
+    /// with it.
+    pub n_output: usize,
+    pub flags: VariantFlags,
+}
+
+impl LstmSpec {
+    /// A plain LSTM (no LN/proj/PH/CIFG).
+    pub fn plain(n_input: usize, n_cell: usize) -> Self {
+        LstmSpec { n_input, n_cell, n_output: n_cell, flags: VariantFlags::plain() }
+    }
+
+    /// Builder-style flag setters.
+    pub fn with_layer_norm(mut self) -> Self {
+        self.flags.layer_norm = true;
+        self
+    }
+
+    pub fn with_peephole(mut self) -> Self {
+        self.flags.peephole = true;
+        self
+    }
+
+    pub fn with_projection(mut self, n_output: usize) -> Self {
+        self.flags.projection = true;
+        self.n_output = n_output;
+        self
+    }
+
+    pub fn with_cifg(mut self) -> Self {
+        self.flags.cifg = true;
+        self
+    }
+
+    /// Does this spec have a physical input gate? (CIFG couples it.)
+    pub fn has_input_gate(&self) -> bool {
+        !self.flags.cifg
+    }
+
+    /// Validate invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_input > 0 && self.n_cell > 0 && self.n_output > 0);
+        if self.flags.projection {
+            anyhow::ensure!(self.n_output <= self.n_cell, "projection must shrink");
+        } else {
+            anyhow::ensure!(self.n_output == self.n_cell, "no projection: n_output == n_cell");
+        }
+        // §3.1.1: accumulation depths must stay within the int8→int32
+        // safe bound.
+        let max_depth = self.n_input.max(self.n_cell).max(self.n_output);
+        anyhow::ensure!(
+            crate::quant::overflow::is_depth_safe_i8_i32(max_depth),
+            "dimension {} exceeds safe accumulation depth",
+            max_depth
+        );
+        Ok(())
+    }
+}
+
+/// Float weights for one gate.
+#[derive(Debug, Clone)]
+pub struct GateWeights {
+    /// Input weights `W_g`: `[n_cell, n_input]`.
+    pub w: Matrix<f32>,
+    /// Recurrent weights `R_g`: `[n_cell, n_output]`.
+    pub r: Matrix<f32>,
+    /// Bias `b_g`: `[n_cell]` (the post-LN bias in LN variants).
+    pub bias: Vec<f32>,
+    /// Peephole `P_g`: `[n_cell]` (input/forget/output gates only).
+    pub peephole: Option<Vec<f32>>,
+    /// Layer-norm coefficients `L_g`: `[n_cell]`.
+    pub ln_weight: Option<Vec<f32>>,
+}
+
+/// Float master weights for one LSTM cell.
+#[derive(Debug, Clone)]
+pub struct LstmWeights {
+    pub spec: LstmSpec,
+    /// Indexed by [`Gate`] order: input, forget, update, output.
+    /// `gates[0]` is `None` for CIFG.
+    pub gates: [Option<GateWeights>; 4],
+    /// Projection `W_proj`: `[n_output, n_cell]`.
+    pub w_proj: Option<Matrix<f32>>,
+    /// Projection bias: `[n_output]`.
+    pub b_proj: Option<Vec<f32>>,
+}
+
+/// Index of a gate in the weight array.
+pub fn gate_index(g: Gate) -> usize {
+    match g {
+        Gate::Input => 0,
+        Gate::Forget => 1,
+        Gate::Update => 2,
+        Gate::Output => 3,
+    }
+}
+
+impl LstmWeights {
+    /// Random weights with the standard `1/sqrt(fan_in)` scaling — used
+    /// for tests, benchmarks and synthetic workloads.
+    pub fn random(spec: LstmSpec, rng: &mut Pcg32) -> Self {
+        spec.validate().expect("invalid spec");
+        let gate = |rng: &mut Pcg32, forget_bias: f32| {
+            let std_w = 1.0 / (spec.n_input as f32).sqrt();
+            let std_r = 1.0 / (spec.n_output as f32).sqrt();
+            let mut w = Matrix::<f32>::zeros(spec.n_cell, spec.n_input);
+            let mut r = Matrix::<f32>::zeros(spec.n_cell, spec.n_output);
+            for v in &mut w.data {
+                *v = rng.normal_f32(0.0, std_w);
+            }
+            for v in &mut r.data {
+                *v = rng.normal_f32(0.0, std_r);
+            }
+            let bias = (0..spec.n_cell)
+                .map(|_| forget_bias + rng.normal_f32(0.0, 0.1))
+                .collect();
+            let peephole = if spec.flags.peephole {
+                Some((0..spec.n_cell).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+            } else {
+                None
+            };
+            let ln_weight = if spec.flags.layer_norm {
+                Some((0..spec.n_cell).map(|_| 1.0 + rng.normal_f32(0.0, 0.1)).collect())
+            } else {
+                None
+            };
+            GateWeights { w, r, bias, peephole, ln_weight }
+        };
+        let gates = [
+            if spec.has_input_gate() { Some(gate(rng, 0.0)) } else { None },
+            // Standard forget-gate bias of 1.0 stabilizes the dynamics.
+            Some(gate(rng, 1.0)),
+            {
+                // Update gate: no peephole (fig 1).
+                let mut g = gate(rng, 0.0);
+                g.peephole = None;
+                Some(g)
+            },
+            Some(gate(rng, 0.0)),
+        ];
+        let (w_proj, b_proj) = if spec.flags.projection {
+            let std = 1.0 / (spec.n_cell as f32).sqrt();
+            let mut w = Matrix::<f32>::zeros(spec.n_output, spec.n_cell);
+            for v in &mut w.data {
+                *v = rng.normal_f32(0.0, std);
+            }
+            let b = (0..spec.n_output).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+            (Some(w), Some(b))
+        } else {
+            (None, None)
+        };
+        LstmWeights { spec, gates, w_proj, b_proj }
+    }
+
+    /// Borrow a gate's weights (panics if absent — callers must respect
+    /// the variant flags).
+    pub fn gate(&self, g: Gate) -> &GateWeights {
+        self.gates[gate_index(g)]
+            .as_ref()
+            .unwrap_or_else(|| panic!("gate {g:?} absent in this variant"))
+    }
+
+    pub fn gate_opt(&self, g: Gate) -> Option<&GateWeights> {
+        self.gates[gate_index(g)].as_ref()
+    }
+
+    pub fn gate_mut(&mut self, g: Gate) -> Option<&mut GateWeights> {
+        self.gates[gate_index(g)].as_mut()
+    }
+
+    /// Total float parameter count.
+    pub fn param_count(&self) -> usize {
+        let mut n = 0;
+        for gw in self.gates.iter().flatten() {
+            n += gw.w.len() + gw.r.len() + gw.bias.len();
+            n += gw.peephole.as_ref().map_or(0, Vec::len);
+            n += gw.ln_weight.as_ref().map_or(0, Vec::len);
+        }
+        n += self.w_proj.as_ref().map_or(0, Matrix::len);
+        n += self.b_proj.as_ref().map_or(0, Vec::len);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builders() {
+        let s = LstmSpec::plain(64, 128)
+            .with_layer_norm()
+            .with_peephole()
+            .with_projection(96);
+        assert!(s.flags.layer_norm && s.flags.peephole && s.flags.projection);
+        assert_eq!(s.n_output, 96);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut s = LstmSpec::plain(64, 128);
+        s.n_output = 100; // no projection but n_output != n_cell
+        assert!(s.validate().is_err());
+        let s = LstmSpec::plain(64, 40_000); // exceeds safe depth
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn random_weights_shapes() {
+        let mut rng = Pcg32::seeded(1);
+        let spec = LstmSpec::plain(32, 64).with_peephole().with_projection(48);
+        let w = LstmWeights::random(spec, &mut rng);
+        let g = w.gate(Gate::Forget);
+        assert_eq!(g.w.rows, 64);
+        assert_eq!(g.w.cols, 32);
+        assert_eq!(g.r.cols, 48);
+        assert!(g.peephole.is_some());
+        // Update gate never has a peephole.
+        assert!(w.gate(Gate::Update).peephole.is_none());
+        assert_eq!(w.w_proj.as_ref().unwrap().rows, 48);
+        assert!(w.param_count() > 0);
+    }
+
+    #[test]
+    fn cifg_has_no_input_gate() {
+        let mut rng = Pcg32::seeded(2);
+        let spec = LstmSpec::plain(16, 32).with_cifg();
+        let w = LstmWeights::random(spec, &mut rng);
+        assert!(w.gate_opt(Gate::Input).is_none());
+        assert!(w.gate_opt(Gate::Forget).is_some());
+    }
+}

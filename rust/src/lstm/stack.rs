@@ -1,0 +1,407 @@
+//! Multi-layer LSTM stacks (the RNN-T-style deep models of §5) over a
+//! unified engine interface, so Table 1's Float/Hybrid/Integer columns
+//! run the *same* stack code.
+
+use crate::util::Pcg32;
+use super::float_cell::{FloatLstm, FloatState};
+use super::hybrid_cell::HybridLstm;
+use super::integer_cell::{IntegerLstm, IntegerState};
+use super::quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
+use super::spec::{LstmSpec, LstmWeights};
+
+/// Which engine executes the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StackEngine {
+    Float,
+    Hybrid,
+    Integer,
+}
+
+impl StackEngine {
+    pub const ALL: [StackEngine; 3] =
+        [StackEngine::Float, StackEngine::Hybrid, StackEngine::Integer];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StackEngine::Float => "Float",
+            StackEngine::Hybrid => "Hybrid",
+            StackEngine::Integer => "Integer",
+        }
+    }
+}
+
+/// Per-layer engine instance.
+enum LayerEngine {
+    Float(FloatLstm),
+    Hybrid(HybridLstm),
+    Integer(Box<IntegerLstm>),
+}
+
+/// Per-layer state.
+pub enum LayerState {
+    Float(FloatState),
+    Integer(IntegerState),
+}
+
+/// A stack of LSTM layers under one engine.
+pub struct LstmStack {
+    layers: Vec<LayerEngine>,
+    specs: Vec<LstmSpec>,
+    engine: StackEngine,
+    /// Ping-pong buffers for inter-layer handoff (no allocation per step).
+    inter: std::cell::RefCell<(Vec<f32>, Vec<f32>)>,
+    /// Integer fast path: layer `l+1`'s input quantization equals layer
+    /// `l`'s output quantization (both calibrated on the same tensor),
+    /// so int8 activations flow between layers without a
+    /// dequantize/requantize round trip.
+    q_inter: std::cell::RefCell<Vec<i8>>,
+    int8_handoff: bool,
+}
+
+/// The float master weights for a whole stack, plus calibration.
+pub struct StackWeights {
+    pub layers: Vec<LstmWeights>,
+}
+
+impl StackWeights {
+    /// Random deep stack: `depth` layers of `spec`, the first layer
+    /// taking `n_input`, the rest taking the previous layer's output.
+    pub fn random(n_input: usize, layer_spec: LstmSpec, depth: usize, rng: &mut Pcg32) -> Self {
+        assert!(depth >= 1);
+        let mut layers = Vec::with_capacity(depth);
+        for d in 0..depth {
+            let mut spec = layer_spec;
+            spec.n_input = if d == 0 { n_input } else { layer_spec.n_output };
+            layers.push(LstmWeights::random(spec, rng));
+        }
+        StackWeights { layers }
+    }
+
+    /// Float parameter count across the stack.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(LstmWeights::param_count).sum()
+    }
+
+    /// Collect calibration statistics for every layer by running the
+    /// float stack over the calibration sequences (§4): layer `l`'s
+    /// input is layer `l-1`'s float output.
+    pub fn calibrate(&self, sequences: &[Vec<Vec<f32>>]) -> Vec<CalibrationStats> {
+        let floats: Vec<FloatLstm> =
+            self.layers.iter().map(|w| FloatLstm::new(w.clone())).collect();
+        let mut per_layer: Vec<CalibrationStats> =
+            (0..floats.len()).map(|_| CalibrationStats::default()).collect();
+        let mut current: Vec<Vec<Vec<f32>>> = sequences.to_vec();
+        for (l, f) in floats.iter().enumerate() {
+            let stats = CalibrationStats::collect(f, &current);
+            // Produce this layer's outputs as the next layer's inputs.
+            if l + 1 < floats.len() {
+                current = current
+                    .iter()
+                    .map(|seq| {
+                        let mut st = FloatState::zeros(f.spec());
+                        f.run_sequence(seq, &mut st)
+                    })
+                    .collect();
+            }
+            per_layer[l] = stats;
+        }
+        per_layer
+    }
+}
+
+impl LstmStack {
+    /// Build a stack for `engine` from master weights (+ calibration
+    /// stats for the integer engine).
+    pub fn build(
+        weights: &StackWeights,
+        engine: StackEngine,
+        stats: Option<&[CalibrationStats]>,
+        opts: QuantizeOptions,
+    ) -> Self {
+        let specs: Vec<LstmSpec> = weights.layers.iter().map(|w| w.spec).collect();
+        let layers: Vec<LayerEngine> = weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| match engine {
+                StackEngine::Float => LayerEngine::Float(FloatLstm::new(w.clone())),
+                StackEngine::Hybrid => LayerEngine::Hybrid(HybridLstm::from_weights(w)),
+                StackEngine::Integer => {
+                    let st = &stats.expect("integer engine needs calibration stats")[i];
+                    LayerEngine::Integer(Box::new(quantize_lstm(w, st, opts)))
+                }
+            })
+            .collect();
+        let max_width = specs
+            .iter()
+            .map(|s| s.n_output.max(s.n_input))
+            .max()
+            .unwrap_or(0);
+        // Enable the int8 handoff only when consecutive quantization
+        // params agree exactly (they do when calibrated in one pass).
+        let int8_handoff = engine == StackEngine::Integer
+            && layers.windows(2).all(|w| match (&w[0], &w[1]) {
+                (LayerEngine::Integer(a), LayerEngine::Integer(b)) => {
+                    a.output_q == b.input_q
+                }
+                _ => false,
+            });
+        LstmStack {
+            layers,
+            specs,
+            engine,
+            inter: std::cell::RefCell::new((vec![0.0; max_width], vec![0.0; max_width])),
+            q_inter: std::cell::RefCell::new(vec![0; max_width]),
+            int8_handoff,
+        }
+    }
+
+    pub fn engine(&self) -> StackEngine {
+        self.engine
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn specs(&self) -> &[LstmSpec] {
+        &self.specs
+    }
+
+    /// Output width of the last layer.
+    pub fn n_output(&self) -> usize {
+        self.specs.last().unwrap().n_output
+    }
+
+    /// Fresh zero state for every layer.
+    pub fn zero_state(&self) -> Vec<LayerState> {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerEngine::Float(f) => LayerState::Float(FloatState::zeros(f.spec())),
+                LayerEngine::Hybrid(h) => LayerState::Float(FloatState::zeros(&h.spec)),
+                LayerEngine::Integer(i) => LayerState::Integer(IntegerState::zeros(i)),
+            })
+            .collect()
+    }
+
+    /// Weight bytes under this engine (Table 1 size column).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerEngine::Float(f) => f.weights.param_count() * 4,
+                LayerEngine::Hybrid(h) => h.weight_bytes(),
+                LayerEngine::Integer(i) => i.weight_bytes(),
+            })
+            .sum()
+    }
+
+    /// One step through the whole stack; returns the final output in
+    /// `out` (length `n_output`).
+    pub fn step(&self, x: &[f32], states: &mut [LayerState], out: &mut [f32]) {
+        assert_eq!(states.len(), self.layers.len());
+        if self.int8_handoff {
+            return self.step_int8(x, states, out);
+        }
+        let mut guard = self.inter.borrow_mut();
+        let (buf_a, buf_b) = &mut *guard;
+        let mut cur_is_a = true;
+        let mut input_width = x.len();
+        buf_a[..input_width].copy_from_slice(x);
+        for (idx, (layer, state)) in self.layers.iter().zip(states.iter_mut()).enumerate() {
+            let width = self.specs[idx].n_output;
+            let (input_buf, output_buf): (&Vec<f32>, &mut Vec<f32>) = if cur_is_a {
+                (&*buf_a, buf_b)
+            } else {
+                (&*buf_b, buf_a)
+            };
+            let input = &input_buf[..input_width];
+            match (layer, state) {
+                (LayerEngine::Float(f), LayerState::Float(st)) => {
+                    f.step(input, st);
+                    output_buf[..width].copy_from_slice(&st.h);
+                }
+                (LayerEngine::Hybrid(h), LayerState::Float(st)) => {
+                    h.step(input, st);
+                    output_buf[..width].copy_from_slice(&st.h);
+                }
+                (LayerEngine::Integer(i), LayerState::Integer(st)) => {
+                    i.step(input, st);
+                    i.dequantize_h(st, &mut output_buf[..width]);
+                }
+                _ => panic!("state/engine mismatch"),
+            }
+            cur_is_a = !cur_is_a;
+            input_width = width;
+        }
+        let final_buf: &Vec<f32> = if cur_is_a { buf_a } else { buf_b };
+        out.copy_from_slice(&final_buf[..out.len()]);
+    }
+
+    /// Integer fast path: quantize once at the boundary, pass int8
+    /// between layers, dequantize once at the end — no floats anywhere
+    /// in between (the paper's §3 principle, at stack scope).
+    fn step_int8(&self, x: &[f32], states: &mut [LayerState], out: &mut [f32]) {
+        let mut qbuf = self.q_inter.borrow_mut();
+        // Boundary quantization with layer 0's static input scale.
+        let first = match &self.layers[0] {
+            LayerEngine::Integer(i) => i,
+            _ => unreachable!(),
+        };
+        for (q, &v) in qbuf.iter_mut().zip(x) {
+            *q = first.input_q.quantize(f64::from(v));
+        }
+        let mut last: Option<&IntegerLstm> = None;
+        for (layer, state) in self.layers.iter().zip(states.iter_mut()) {
+            let (engine, st) = match (layer, state) {
+                (LayerEngine::Integer(i), LayerState::Integer(st)) => (i, st),
+                _ => unreachable!(),
+            };
+            engine.step_q(&qbuf[..engine.spec.n_input], st);
+            qbuf[..engine.spec.n_output].copy_from_slice(&st.h);
+            last = Some(engine);
+        }
+        if let (Some(engine), Some(LayerState::Integer(st))) =
+            (last, states.last())
+        {
+            engine.dequantize_h(st, out);
+        }
+    }
+
+    /// Run a sequence through the stack, returning final-layer outputs.
+    pub fn run_sequence(
+        &self,
+        xs: &[Vec<f32>],
+        states: &mut [LayerState],
+    ) -> Vec<Vec<f32>> {
+        let n_out = self.n_output();
+        let mut out = Vec::with_capacity(xs.len());
+        let mut buf = vec![0f32; n_out];
+        for x in xs {
+            self.step(x, states, &mut buf);
+            out.push(buf.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::recipe::VariantFlags;
+
+    fn make_seqs(rng: &mut Pcg32, n: usize, t: usize, dim: usize) -> Vec<Vec<Vec<f32>>> {
+        (0..n)
+            .map(|_| {
+                (0..t)
+                    .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn build_stack(
+        flags: VariantFlags,
+        depth: usize,
+        seed: u64,
+    ) -> (StackWeights, Vec<CalibrationStats>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut spec = LstmSpec::plain(10, 24);
+        spec.flags = flags;
+        if flags.projection {
+            spec.n_output = 16;
+        }
+        let weights = StackWeights::random(10, spec, depth, &mut rng);
+        let calib = make_seqs(&mut rng, 6, 16, 10);
+        let stats = weights.calibrate(&calib);
+        (weights, stats)
+    }
+
+    #[test]
+    fn three_engines_agree_on_deep_stack() {
+        let (weights, stats) = build_stack(VariantFlags::plain(), 3, 7);
+        let float = LstmStack::build(&weights, StackEngine::Float, None, Default::default());
+        let hybrid = LstmStack::build(&weights, StackEngine::Hybrid, None, Default::default());
+        let integer =
+            LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
+
+        let mut rng = Pcg32::seeded(8);
+        let seq = make_seqs(&mut rng, 1, 24, 10).pop().unwrap();
+        let mut fs = float.zero_state();
+        let mut hs = hybrid.zero_state();
+        let mut is = integer.zero_state();
+        let fo = float.run_sequence(&seq, &mut fs);
+        let ho = hybrid.run_sequence(&seq, &mut hs);
+        let io = integer.run_sequence(&seq, &mut is);
+        let mut worst_h = 0f64;
+        let mut worst_i = 0f64;
+        for t in 0..seq.len() {
+            for j in 0..float.n_output() {
+                worst_h = worst_h.max(f64::from((fo[t][j] - ho[t][j]).abs()));
+                worst_i = worst_i.max(f64::from((fo[t][j] - io[t][j]).abs()));
+            }
+        }
+        // Error accumulates in depth (the paper's challenge) but must
+        // stay small for a 3-layer stack.
+        assert!(worst_h < 0.15, "hybrid divergence {worst_h}");
+        assert!(worst_i < 0.2, "integer divergence {worst_i}");
+    }
+
+    #[test]
+    fn projected_ln_stack_runs_integer() {
+        let flags = VariantFlags {
+            layer_norm: true,
+            projection: true,
+            peephole: true,
+            cifg: false,
+        };
+        let (weights, stats) = build_stack(flags, 2, 9);
+        let integer =
+            LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
+        let mut rng = Pcg32::seeded(10);
+        let seq = make_seqs(&mut rng, 1, 16, 10).pop().unwrap();
+        let mut st = integer.zero_state();
+        let out = integer.run_sequence(&seq, &mut st);
+        assert!(out.iter().flatten().all(|v| v.is_finite()));
+        assert_eq!(out[0].len(), 16);
+    }
+
+    #[test]
+    fn stack_size_accounting() {
+        let (weights, stats) = build_stack(VariantFlags::plain(), 2, 11);
+        let float = LstmStack::build(&weights, StackEngine::Float, None, Default::default());
+        let integer =
+            LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
+        assert_eq!(float.weight_bytes(), weights.param_count() * 4);
+        assert!(integer.weight_bytes() * 3 < float.weight_bytes());
+        assert_eq!(float.depth(), 2);
+        assert_eq!(float.engine(), StackEngine::Float);
+    }
+
+    #[test]
+    fn sparse_integer_stack_runs() {
+        let mut rng = Pcg32::seeded(12);
+        let spec = LstmSpec::plain(10, 24);
+        let mut weights = StackWeights::random(10, spec, 2, &mut rng);
+        for layer in &mut weights.layers {
+            for g in layer.gates.iter_mut().flatten() {
+                crate::sparse::prune_magnitude(&mut g.w, 0.5);
+                crate::sparse::prune_magnitude(&mut g.r, 0.5);
+            }
+        }
+        let calib = make_seqs(&mut rng, 4, 12, 10);
+        let stats = weights.calibrate(&calib);
+        let opts = QuantizeOptions { sparse_weights: true, naive_layernorm: false };
+        let integer = LstmStack::build(&weights, StackEngine::Integer, Some(&stats), opts);
+        let dense = LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
+        let seq = make_seqs(&mut rng, 1, 12, 10).pop().unwrap();
+        let mut s1 = integer.zero_state();
+        let mut s2 = dense.zero_state();
+        let o1 = integer.run_sequence(&seq, &mut s1);
+        let o2 = dense.run_sequence(&seq, &mut s2);
+        // CSR vs dense execution of the same quantized weights must be
+        // bit-identical.
+        assert_eq!(o1, o2);
+    }
+}

@@ -1,0 +1,181 @@
+//! `iqrnn` — the leader binary: serve, evaluate, or inspect integer
+//! LSTM models from the command line.
+//!
+//! Subcommands:
+//!   serve    — replay a synthetic streaming trace through the serving
+//!              stack and print the report (engine selectable)
+//!   eval     — Table-1-style quality comparison on the trained model
+//!   recipe   — print the Table-2 quantization recipe for a variant
+//!   info     — inspect artifacts
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::CharLm;
+use iqrnn::quant::recipe::{Gate, LstmRecipe, TensorRole, VariantFlags};
+use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets};
+use iqrnn::workload::synth::RequestTrace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_engine(s: &str) -> Result<StackEngine> {
+    Ok(match s {
+        "float" => StackEngine::Float,
+        "hybrid" => StackEngine::Hybrid,
+        "integer" => StackEngine::Integer,
+        other => bail!("unknown engine `{other}` (float|hybrid|integer)"),
+    })
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let artifacts = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    match cmd {
+        "serve" => serve(args, &artifacts),
+        "eval" => eval(args, &artifacts),
+        "recipe" => recipe(args),
+        "info" => info(&artifacts),
+        _ => {
+            println!(
+                "iqrnn — integer-only quantization of recurrent neural networks\n\
+                 \n\
+                 usage: iqrnn <serve|eval|recipe|info> [options]\n\
+                 \n\
+                 serve  --engine float|hybrid|integer  --requests N  --workers N\n\
+                 \u{20}       --rate R (req/s)  --batch B  --artifacts DIR\n\
+                 eval   --artifacts DIR   (Table-1-style quality comparison)\n\
+                 recipe [--ln] [--proj] [--peephole] [--cifg]   (print Table 2)\n\
+                 info   --artifacts DIR"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &[String], artifacts: &str) -> Result<()> {
+    let engine = parse_engine(&flag(args, "--engine").unwrap_or_else(|| "integer".into()))?;
+    let requests: usize = flag(args, "--requests").unwrap_or_else(|| "200".into()).parse()?;
+    let workers: usize = flag(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
+    let rate: f64 = flag(args, "--rate").unwrap_or_else(|| "50".into()).parse()?;
+    let batch: usize = flag(args, "--batch").unwrap_or_else(|| "8".into()).parse()?;
+
+    let lm = CharLm::load(artifacts)
+        .with_context(|| format!("loading model from `{artifacts}` (run `make artifacts`)"))?;
+    let corpus = std::path::Path::new(artifacts).join("corpus.txt");
+    let calib = calibration_sequences(&corpus, 100, 64, 11)?;
+    let stats = lm.calibrate(&calib);
+
+    let trace = RequestTrace::generate(requests, rate, 60, iqrnn::model::lm::VOCAB, 17);
+    println!(
+        "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, engine={}",
+        trace.total_tokens(),
+        engine.label()
+    );
+    let server = Server::new(
+        &lm,
+        Some(&stats),
+        ServerConfig {
+            workers,
+            batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
+            engine,
+            opts: QuantizeOptions::default(),
+        },
+    );
+    let report = server.run_trace(&trace, 1.0)?;
+    report.print();
+    Ok(())
+}
+
+fn eval(args: &[String], artifacts: &str) -> Result<()> {
+    let _ = args;
+    let lm = CharLm::load(artifacts)?;
+    let corpus = std::path::Path::new(artifacts).join("corpus.txt");
+    let calib = calibration_sequences(&corpus, 100, 64, 11)?;
+    let stats = lm.calibrate(&calib);
+    let sets = load_eval_sets(&corpus, 12, 128, 2, 2000, 0.05, 21)?;
+
+    println!("{:<8} {:>10} {:>10} {:>10}  (bits/char; lower is better)",
+             "set", "Float", "Hybrid", "Integer");
+    for set in &sets {
+        let mut row = Vec::new();
+        for engine in StackEngine::ALL {
+            let e = lm.engine(engine, Some(&stats), QuantizeOptions::default());
+            let bpc: f64 = set.sequences.iter().map(|s| e.bits_per_char(s)).sum::<f64>()
+                / set.sequences.len() as f64;
+            row.push(bpc);
+        }
+        println!("{:<8} {:>10.4} {:>10.4} {:>10.4}", set.name, row[0], row[1], row[2]);
+    }
+    Ok(())
+}
+
+fn recipe(args: &[String]) -> Result<()> {
+    let flags = VariantFlags {
+        layer_norm: args.iter().any(|a| a == "--ln"),
+        projection: args.iter().any(|a| a == "--proj"),
+        peephole: args.iter().any(|a| a == "--peephole"),
+        cifg: args.iter().any(|a| a == "--cifg"),
+    };
+    let r = LstmRecipe::new(flags);
+    println!("Quantization recipe for variant: {}", flags.label());
+    println!("{:<24} {:>5}  {}", "tensor", "bits", "scale rule");
+    let mut rows: Vec<(String, TensorRole)> = vec![
+        ("x".into(), TensorRole::Input),
+        ("h".into(), TensorRole::Output),
+        ("c".into(), TensorRole::CellState),
+        ("m".into(), TensorRole::Hidden),
+        ("W_proj".into(), TensorRole::ProjectionWeight),
+        ("b_proj".into(), TensorRole::ProjectionBias),
+    ];
+    for g in Gate::ALL {
+        rows.push((format!("W_{g:?}"), TensorRole::InputWeight(g)));
+        rows.push((format!("R_{g:?}"), TensorRole::RecurrentWeight(g)));
+        rows.push((format!("b_{g:?}"), TensorRole::Bias(g)));
+        rows.push((format!("P_{g:?}"), TensorRole::Peephole(g)));
+        rows.push((format!("L_{g:?}"), TensorRole::LayerNormWeight(g)));
+        rows.push((format!("g_{g:?}"), TensorRole::GateOutput(g)));
+    }
+    for (name, role) in rows {
+        let e = r.entry(role);
+        if e.exists() {
+            println!("{:<24} {:>5}  {:?}", name, e.bits, e.rule);
+        }
+    }
+    Ok(())
+}
+
+fn info(artifacts: &str) -> Result<()> {
+    let lm = CharLm::load(artifacts)?;
+    println!("char-LM: hidden={} depth={} vocab={}", lm.hidden, lm.depth,
+             iqrnn::model::lm::VOCAB);
+    println!("float params: {} ({} bytes)", lm.stack_weights.param_count(),
+             lm.stack_weights.param_count() * 4);
+    for name in ["model_b1.hlo.txt", "model_b8.hlo.txt", "qlstm_step.hlo.txt",
+                 "golden_qstep.bin", "corpus.txt"] {
+        let p = std::path::Path::new(artifacts).join(name);
+        match std::fs::metadata(&p) {
+            Ok(m) => println!("{name}: {} bytes", m.len()),
+            Err(_) => println!("{name}: MISSING"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,292 @@
+//! The character-level LM assembled from the trained artifacts: an
+//! LSTM stack (any engine) plus a dense softmax head — the Rust side of
+//! the end-to-end quality experiments (Table 1 analog).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::lstm::{
+    CalibrationStats, LayerState, LstmSpec, LstmStack, LstmWeights,
+    QuantizeOptions, StackEngine, StackWeights,
+};
+use crate::quant::params::SymmetricQuant;
+use crate::quant::quantize_symmetric_i8;
+use crate::tensor::{matvec_f32, Matrix};
+use super::weights::TensorFile;
+
+/// Character vocabulary shared with `python/compile/model.py`.
+pub const VOCAB: usize = 96;
+
+/// Tokenize a character (0 = newline, 1..95 = ASCII 32..126, other -> space).
+pub fn tokenize_char(c: char) -> usize {
+    match c {
+        '\n' => 0,
+        c if (' '..='~').contains(&c) => (c as usize) - 31,
+        _ => 1,
+    }
+}
+
+/// Tokenize a string.
+pub fn tokenize(text: &str) -> Vec<usize> {
+    text.chars().map(tokenize_char).collect()
+}
+
+/// Float master weights of the whole LM (stack + head).
+pub struct CharLm {
+    pub stack_weights: StackWeights,
+    pub out_w: Matrix<f32>,
+    pub out_b: Vec<f32>,
+    pub hidden: usize,
+    pub depth: usize,
+}
+
+/// The head under a given engine: float weights or quantized int8.
+enum HeadEngine {
+    Float,
+    /// int8 symmetric weights; input h is requantized from f32 with the
+    /// static head input scale; accumulator dequantized to float logits.
+    Integer {
+        w_q: Matrix<i8>,
+        w_scale: f64,
+    },
+}
+
+/// A runnable LM: stack + head under one engine.
+pub struct CharLmEngine {
+    pub stack: LstmStack,
+    head: HeadEngine,
+    out_w: Matrix<f32>,
+    out_b: Vec<f32>,
+    kind: StackEngine,
+}
+
+/// Per-sequence state.
+pub struct LmState {
+    pub layers: Vec<LayerState>,
+    /// Scratch: last hidden output.
+    pub h: Vec<f32>,
+    /// Scratch: logits.
+    pub logits: Vec<f32>,
+}
+
+impl CharLm {
+    /// Load the trained artifacts (`charlm.bin` + `charlm.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let cfg_text = std::fs::read_to_string(dir.join("charlm.json"))
+            .context("reading charlm.json")?;
+        let hidden = parse_json_usize(&cfg_text, "hidden")?;
+        let depth = parse_json_usize(&cfg_text, "depth")?;
+        let vocab = parse_json_usize(&cfg_text, "vocab")?;
+        ensure!(vocab == VOCAB, "vocab mismatch: {vocab} != {VOCAB}");
+
+        let tf = TensorFile::load(dir.join("charlm.bin"))?;
+        let mut layers = Vec::with_capacity(depth);
+        for d in 0..depth {
+            let n_input = if d == 0 { VOCAB } else { hidden };
+            let spec = LstmSpec::plain(n_input, hidden);
+            let mut gates: [Option<crate::lstm::GateWeights>; 4] =
+                [None, None, None, None];
+            for (gi, gname) in ["i", "f", "z", "o"].iter().enumerate() {
+                let w = tf.get(&format!("layer{d}.{gname}.w"))?;
+                ensure!(w.shape == [hidden, n_input], "w shape for layer {d}");
+                let r = tf.get(&format!("layer{d}.{gname}.r"))?;
+                let bias = tf.get(&format!("layer{d}.{gname}.bias"))?;
+                gates[gi] = Some(crate::lstm::GateWeights {
+                    w: Matrix::from_vec(hidden, n_input, w.as_f32()?),
+                    r: Matrix::from_vec(hidden, hidden, r.as_f32()?),
+                    bias: bias.as_f32()?,
+                    peephole: None,
+                    ln_weight: None,
+                });
+            }
+            layers.push(LstmWeights { spec, gates, w_proj: None, b_proj: None });
+        }
+        let out_w_t = tf.get("out.w")?;
+        ensure!(out_w_t.shape == [VOCAB, hidden], "out.w shape");
+        let out_w = Matrix::from_vec(VOCAB, hidden, out_w_t.as_f32()?);
+        let out_b = tf.get("out.b")?.as_f32()?;
+        Ok(CharLm {
+            stack_weights: StackWeights { layers },
+            out_w,
+            out_b,
+            hidden,
+            depth,
+        })
+    }
+
+    /// Calibrate on token sequences (one-hot encoded internally).
+    pub fn calibrate(&self, token_seqs: &[Vec<usize>]) -> Vec<CalibrationStats> {
+        let seqs: Vec<Vec<Vec<f32>>> =
+            token_seqs.iter().map(|s| one_hot_seq(s)).collect();
+        self.stack_weights.calibrate(&seqs)
+    }
+
+    /// Build a runnable engine.
+    pub fn engine(
+        &self,
+        engine: StackEngine,
+        stats: Option<&[CalibrationStats]>,
+        opts: QuantizeOptions,
+    ) -> CharLmEngine {
+        let stack = LstmStack::build(&self.stack_weights, engine, stats, opts);
+        let head = match engine {
+            StackEngine::Float | StackEngine::Hybrid => HeadEngine::Float,
+            StackEngine::Integer => {
+                let (w_q, q) = quantize_symmetric_i8(&self.out_w);
+                HeadEngine::Integer { w_q, w_scale: q.scale }
+            }
+        };
+        CharLmEngine {
+            stack,
+            head,
+            out_w: self.out_w.clone(),
+            out_b: self.out_b.clone(),
+            kind: engine,
+        }
+    }
+}
+
+impl CharLmEngine {
+    pub fn engine_label(&self) -> &'static str {
+        self.kind.label()
+    }
+
+    pub fn new_state(&self) -> LmState {
+        LmState {
+            layers: self.stack.zero_state(),
+            h: vec![0.0; self.stack.n_output()],
+            logits: vec![0.0; VOCAB],
+        }
+    }
+
+    /// Feed one token; `state.logits` then holds next-char logits.
+    pub fn step_token(&self, token: usize, state: &mut LmState) {
+        debug_assert!(token < VOCAB);
+        let mut x = vec![0f32; VOCAB];
+        x[token] = 1.0;
+        self.stack.step(&x, &mut state.layers, &mut state.h);
+        match &self.head {
+            HeadEngine::Float => {
+                matvec_f32(&self.out_w, &state.h, &mut state.logits);
+            }
+            HeadEngine::Integer { w_q, w_scale } => {
+                // Static symmetric requantization of h (scale from the
+                // head weights' calibration-free rule: h ∈ [-1, 1] for
+                // the plain LM). Accumulate int32, dequantize once.
+                let s_h = 1.0 / 127.0;
+                let hq = SymmetricQuant::with_scale(s_h);
+                let mut qh = vec![0i8; state.h.len()];
+                for (q, &v) in qh.iter_mut().zip(&state.h) {
+                    *q = hq.quantize_i8(f64::from(v));
+                }
+                let mut acc = vec![0i32; VOCAB];
+                crate::tensor::matvec_i8_i32(w_q, &qh, &[], &mut acc);
+                let k = (w_scale * s_h) as f32;
+                for (l, &a) in state.logits.iter_mut().zip(&acc) {
+                    *l = a as f32 * k;
+                }
+            }
+        }
+        for (l, &b) in state.logits.iter_mut().zip(&self.out_b) {
+            *l += b;
+        }
+    }
+
+    /// Average next-char negative log2-likelihood over a token sequence
+    /// (bits per character — the quality metric of the E1 experiment).
+    pub fn bits_per_char(&self, tokens: &[usize]) -> f64 {
+        assert!(tokens.len() >= 2);
+        let mut state = self.new_state();
+        let mut total = 0f64;
+        for t in 0..tokens.len() - 1 {
+            self.step_token(tokens[t], &mut state);
+            total += nll_bits(&state.logits, tokens[t + 1]);
+        }
+        total / (tokens.len() - 1) as f64
+    }
+
+    /// Weight bytes (stack + head) for the Table-1 size column.
+    pub fn weight_bytes(&self) -> usize {
+        let head = match &self.head {
+            HeadEngine::Float => self.out_w.len() * 4,
+            HeadEngine::Integer { w_q, .. } => w_q.len(),
+        };
+        self.stack.weight_bytes() + head + self.out_b.len() * 4
+    }
+}
+
+/// -log2 softmax probability of `target`.
+pub fn nll_bits(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let sum_exp: f64 = logits.iter().map(|&v| f64::from(v - max).exp()).sum();
+    let logp = f64::from(logits[target] - max) - sum_exp.ln();
+    -logp / std::f64::consts::LN_2
+}
+
+/// One-hot encode a token sequence.
+pub fn one_hot_seq(tokens: &[usize]) -> Vec<Vec<f32>> {
+    tokens
+        .iter()
+        .map(|&t| {
+            let mut v = vec![0f32; VOCAB];
+            v[t] = 1.0;
+            v
+        })
+        .collect()
+}
+
+/// Tiny JSON number extractor (the config file is machine-written;
+/// avoids a JSON dependency).
+fn parse_json_usize(text: &str, key: &str) -> Result<usize> {
+    let pat = format!("\"{key}\":");
+    let pos = text.find(&pat).with_context(|| format!("key {key}"))?;
+    let rest = &text[pos + pat.len()..];
+    let digits: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().with_context(|| format!("parsing {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip_properties() {
+        assert_eq!(tokenize_char('\n'), 0);
+        assert_eq!(tokenize_char(' '), 1);
+        assert_eq!(tokenize_char('~'), 95);
+        assert_eq!(tokenize_char('\u{1F600}'), 1); // non-ASCII -> space
+        let toks = tokenize("Hi\n");
+        assert_eq!(toks, vec![('H' as usize) - 31, ('i' as usize) - 31, 0]);
+        assert!(toks.iter().all(|&t| t < VOCAB));
+    }
+
+    #[test]
+    fn json_parser_extracts_fields() {
+        let text = r#"{"vocab": 96, "hidden": 192, "depth": 2}"#;
+        assert_eq!(parse_json_usize(text, "vocab").unwrap(), 96);
+        assert_eq!(parse_json_usize(text, "hidden").unwrap(), 192);
+        assert_eq!(parse_json_usize(text, "depth").unwrap(), 2);
+        assert!(parse_json_usize(text, "missing").is_err());
+    }
+
+    #[test]
+    fn nll_bits_uniform() {
+        let logits = vec![0f32; VOCAB];
+        let bits = nll_bits(&logits, 5);
+        assert!((bits - (VOCAB as f64).log2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_hot_shape() {
+        let oh = one_hot_seq(&[0, 5, 95]);
+        assert_eq!(oh.len(), 3);
+        assert_eq!(oh[1][5], 1.0);
+        assert_eq!(oh[1].iter().sum::<f32>(), 1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Model artifacts: the binary tensor format shared with the python
+//! build path, and the character-level LM assembled from those tensors.
+
+pub mod lm;
+pub mod weights;
+
+pub use lm::{CharLm, CharLmEngine, LmState};
+pub use weights::{Dtype, TensorFile, TensorView};

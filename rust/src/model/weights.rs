@@ -1,0 +1,217 @@
+//! Reader/writer for the little-endian named-tensor format produced by
+//! `python/compile/model.py:write_tensors`.
+//!
+//! Layout: magic `0x49515257` ("IQRW"), version u32, tensor count u32,
+//! then per tensor: name (u32 len + utf8), dtype u8, ndim u32, dims
+//! u32×ndim, raw little-endian data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub const MAGIC: u32 = 0x4951_5257;
+
+/// Element type tags (must match `_DTYPES` in model.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32 = 0,
+    I8 = 1,
+    I16 = 2,
+    I32 = 3,
+}
+
+impl Dtype {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::I16,
+            3 => Dtype::I32,
+            other => bail!("unknown dtype tag {other}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl TensorView {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == Dtype::F32, "expected f32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        ensure!(self.dtype == Dtype::I8, "expected i8");
+        Ok(self.data.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn as_i16(&self) -> Result<Vec<i16>> {
+        ensure!(self.dtype == Dtype::I16, "expected i16");
+        Ok(self
+            .data
+            .chunks_exact(2)
+            .map(|b| i16::from_le_bytes([b[0], b[1]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        ensure!(self.dtype == Dtype::I32, "expected i32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// A parsed tensor file.
+#[derive(Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, TensorView>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl TensorFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::read(&mut f)
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Self> {
+        ensure!(read_u32(r)? == MAGIC, "bad magic (not an IQRW tensor file)");
+        let version = read_u32(r)?;
+        ensure!(version == 1, "unsupported version {version}");
+        let count = read_u32(r)? as usize;
+        ensure!(count < 1 << 20, "implausible tensor count {count}");
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            ensure!(name_len < 4096, "implausible name length");
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name utf8")?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let dtype = Dtype::from_u8(tag[0])?;
+            let ndim = read_u32(r)? as usize;
+            ensure!(ndim <= 8, "implausible rank {ndim}");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(r)? as usize);
+            }
+            let elems: usize = shape.iter().product();
+            ensure!(elems < 1 << 30, "implausible tensor size");
+            let mut data = vec![0u8; elems * dtype.size()];
+            r.read_exact(&mut data)?;
+            tensors.insert(name, TensorView { dtype, shape, data });
+        }
+        Ok(TensorFile { tensors })
+    }
+
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[t.dtype as u8])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            w.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        self.write(&mut f)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorView> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor `{name}`"))
+    }
+
+    /// Insert an f32 tensor (tests / round-trips).
+    pub fn put_f32(&mut self, name: &str, shape: Vec<usize>, data: &[f32]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let bytes = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.tensors.insert(
+            name.to_string(),
+            TensorView { dtype: Dtype::F32, shape, data: bytes },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.put_f32("a.w", vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        tf.put_f32("b", vec![1], &[42.0]);
+        let mut buf = Vec::new();
+        tf.write(&mut buf).unwrap();
+        let back = TensorFile::read(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        let a = back.get("a.w").unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.as_f32().unwrap(), vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        assert!(back.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = vec![0u8; 16];
+        assert!(TensorFile::read(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::F32.size(), 4);
+        assert_eq!(Dtype::I8.size(), 1);
+        assert_eq!(Dtype::I16.size(), 2);
+        assert_eq!(Dtype::I32.size(), 4);
+    }
+}

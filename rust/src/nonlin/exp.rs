@@ -1,0 +1,181 @@
+//! Integer-only `exp(x)` for `x <= 0` — the backbone of integer sigmoid
+//! and tanh.
+//!
+//! Range reduction: write `x = r + Σ_k b_k · (-2^k)` with
+//! `r ∈ (-1/4, 0]`; evaluate `exp(r)` with a 4th-order Taylor expansion
+//! around `-1/8`, then multiply by precomputed `Q0.31` constants
+//! `exp(-2^k)` selected by the bits `b_k` of the remainder (a "barrel
+//! shifter" — branchless in SIMD deployments, the paper's principle #2).
+//! This is gemmlowp's `exp_on_negative_values`, generalized to a runtime
+//! integer-bit count.
+
+use super::fx::Fx;
+
+/// `exp(a + 1/4) * exp(-1/4)`-style interval kernel:
+/// evaluates `exp(a)` for `a ∈ [-1/4, 0)` given in `Q0.31`.
+///
+/// Uses the Taylor expansion of `exp` around `-1/8`:
+/// `exp(-1/8) * (1 + x + x²/2 + x³/6 + x⁴/24)` with `x = a + 1/8`,
+/// computed as gemmlowp does (constants in `Q0.31`).
+pub(crate) fn exp_on_interval_between_negative_one_quarter_and_0_excl(a: Fx) -> Fx {
+    debug_assert_eq!(a.ib, 0);
+    debug_assert!(a.raw <= 0);
+    const CONSTANT_TERM: i32 = 1_895_147_668; // exp(-1/8) in Q0.31
+    const CONSTANT_1_OVER_3: i32 = 715_827_883; // 1/3 in Q0.31
+    let constant_term = Fx::from_raw(CONSTANT_TERM, 0);
+    let constant_1_over_3 = Fx::from_raw(CONSTANT_1_OVER_3, 0);
+    // x = a + 1/8 is the offset from the expansion point -1/8, so
+    // x ∈ [-1/8, 1/8) and exp(a) = exp(-1/8) * exp(x).
+    let x = a.add(Fx::constant_pot(-3, 0));
+    let x2 = x.mul(x);
+    let x3 = x2.mul(x);
+    let x4 = x2.mul(x2);
+    let x4_over_4 = x4.mul_by_pot(-2);
+    let x4_over_24_plus_x3_over_6_plus_x2_over_2 =
+        x4_over_4.add(x3).mul(constant_1_over_3).add(x2).mul_by_pot(-1);
+    constant_term.add(
+        constant_term.mul(x.add(x4_over_24_plus_x3_over_6_plus_x2_over_2)),
+    )
+}
+
+/// Barrel-shifter multipliers: `exp(-2^k) * 2^31` for
+/// `k = -2, -1, 0, 1, 2, 3, 4` (gemmlowp's constants).
+const EXP_BARREL: [(i32, i32); 7] = [
+    (-2, 1_672_461_947), // exp(-1/4)
+    (-1, 1_302_514_674), // exp(-1/2)
+    (0, 790_015_084),    // exp(-1)
+    (1, 290_630_308),    // exp(-2)
+    (2, 39_332_535),     // exp(-4)
+    (3, 720_401),        // exp(-8)
+    (4, 242),            // exp(-16)
+];
+
+/// `exp(a)` for `a <= 0`, input in `Q_{ib.31-ib}`, output in `Q0.31`.
+pub fn exp_on_negative_values(a: Fx) -> Fx {
+    debug_assert!(a.raw <= 0, "exp_on_negative_values requires a <= 0");
+    let ib = a.ib as i32;
+    let frac_bits = 31 - ib;
+    if ib == 0 {
+        // Input already in (-1, 0]; reduce within [-1/4, 0) directly.
+        return exp_ib0(a);
+    }
+    let one_quarter: i32 = 1 << (frac_bits - 2);
+    let mask = one_quarter - 1;
+    // a_mod_quarter_minus_one_quarter in [-1/4, 0).
+    let a_mod = (a.raw & mask) - one_quarter;
+    let interval_input = Fx::from_raw(a_mod, a.ib).rescale(0);
+    let mut result = exp_on_interval_between_negative_one_quarter_and_0_excl(interval_input);
+    // remainder holds which multiples of powers of two were subtracted.
+    let remainder = a_mod.wrapping_sub(a.raw);
+    for &(exponent, multiplier) in &EXP_BARREL {
+        if ib > exponent {
+            let shift = frac_bits + exponent;
+            if (0..31).contains(&shift) && remainder & (1 << shift) != 0 {
+                result = result.mul(Fx::from_raw(multiplier, 0));
+            }
+        }
+    }
+    if ib > 5 {
+        // Clamp: exp(x) for x < -32 is 0 at Q0.31 resolution.
+        let clamp_raw = -(1i64 << (frac_bits + 5)) as i32;
+        if a.raw < clamp_raw {
+            result = Fx::zero(0);
+        }
+    }
+    if a.raw == 0 {
+        result = Fx::one(0);
+    }
+    result
+}
+
+/// `exp` for the `ib == 0` case (`a ∈ (-1, 0]`).
+fn exp_ib0(a: Fx) -> Fx {
+    debug_assert_eq!(a.ib, 0);
+    let frac_bits = 31;
+    let one_quarter: i32 = 1 << (frac_bits - 2);
+    let mask = one_quarter - 1;
+    let a_mod = (a.raw & mask) - one_quarter;
+    let mut result =
+        exp_on_interval_between_negative_one_quarter_and_0_excl(Fx::from_raw(a_mod, 0));
+    let remainder = a_mod.wrapping_sub(a.raw);
+    // Only the k = -2 and k = -1 barrel steps can fire for |a| < 1.
+    for &(exponent, multiplier) in &EXP_BARREL[..2] {
+        let shift = frac_bits + exponent;
+        if remainder & (1 << shift) != 0 {
+            result = result.mul(Fx::from_raw(multiplier, 0));
+        }
+    }
+    if a.raw == 0 {
+        result = Fx::one(0);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_exp(ib: u32, tolerance: f64) {
+        let steps = 4001;
+        let min = -(2f64.powi(ib as i32));
+        for i in 0..steps {
+            let v = min * f64::from(i) / f64::from(steps - 1);
+            let a = Fx::from_f64(v, ib);
+            if a.raw > 0 {
+                continue;
+            }
+            let got = exp_on_negative_values(a).to_f64();
+            let want = a.to_f64().exp();
+            assert!(
+                (got - want).abs() < tolerance,
+                "ib={ib} x={v:.6} got={got:.9} want={want:.9}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_accuracy_q0() {
+        check_exp(0, 3e-7);
+    }
+
+    #[test]
+    fn exp_accuracy_q3() {
+        check_exp(3, 3e-7);
+    }
+
+    #[test]
+    fn exp_accuracy_q4() {
+        check_exp(4, 5e-7);
+    }
+
+    #[test]
+    fn exp_accuracy_q5() {
+        check_exp(5, 1e-6);
+    }
+
+    #[test]
+    fn exp_of_zero_is_one() {
+        for ib in 0..=6 {
+            let r = exp_on_negative_values(Fx::zero(ib));
+            assert!((r.to_f64() - 1.0).abs() < 1e-9, "ib={ib}");
+        }
+    }
+
+    #[test]
+    fn exp_clamps_below_minus_32() {
+        let a = Fx::from_f64(-40.0, 6);
+        assert_eq!(exp_on_negative_values(a).raw, 0);
+    }
+
+    #[test]
+    fn exp_monotone_nonincreasing_in_magnitude() {
+        let ib = 4;
+        let mut prev = f64::INFINITY;
+        for i in 0..1000 {
+            let v = -16.0 * f64::from(i) / 999.0;
+            let got = exp_on_negative_values(Fx::from_f64(v, ib)).to_f64();
+            assert!(got <= prev + 2e-9, "x={v} got={got} prev={prev}");
+            prev = got;
+        }
+    }
+}

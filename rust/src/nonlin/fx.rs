@@ -1,0 +1,187 @@
+//! A runtime-parameterized 32-bit fixed-point value type.
+//!
+//! `Fx` carries a raw `i32` plus its number of *integer bits* `ib`; the
+//! value represented is `raw * 2^-(31-ib)`. This mirrors gemmlowp's
+//! `FixedPoint<int32, tIntegerBits>` but with the integer-bit count as
+//! data rather than a type parameter, because the paper's recipe uses
+//! *measured* cell-state formats (`Q_{m.15-m}` with data-dependent `m`,
+//! §3.2.2) that are only known at quantization time.
+
+use crate::fixedpoint::mul::{
+    rounding_half_sum, saturating_rounding_doubling_high_mul,
+    saturating_rounding_multiply_by_pot,
+};
+
+/// A signed fixed-point number: value = `raw * 2^-(31 - ib)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fx {
+    pub raw: i32,
+    /// Integer bits; fractional bits are `31 - ib`.
+    pub ib: u32,
+}
+
+impl Fx {
+    #[inline]
+    pub const fn from_raw(raw: i32, ib: u32) -> Self {
+        Fx { raw, ib }
+    }
+
+    /// Fractional bit count.
+    #[inline]
+    pub const fn frac_bits(&self) -> u32 {
+        31 - self.ib
+    }
+
+    #[inline]
+    pub const fn zero(ib: u32) -> Self {
+        Fx { raw: 0, ib }
+    }
+
+    /// The representation of 1.0; saturated to `i32::MAX` when `ib == 0`
+    /// (gemmlowp convention: `Q0.31` cannot represent 1 exactly).
+    #[inline]
+    pub const fn one(ib: u32) -> Self {
+        if ib == 0 {
+            Fx { raw: i32::MAX, ib }
+        } else {
+            Fx { raw: 1 << (31 - ib), ib }
+        }
+    }
+
+    /// `2^exponent` as a fixed-point constant.
+    #[inline]
+    pub fn constant_pot(exponent: i32, ib: u32) -> Self {
+        let offset = 31 - ib as i32 + exponent;
+        assert!(
+            (0..31).contains(&offset),
+            "constant 2^{exponent} not representable with ib={ib}"
+        );
+        Fx { raw: 1 << offset, ib }
+    }
+
+    /// Build from a float (test/build-time only).
+    pub fn from_f64(v: f64, ib: u32) -> Self {
+        let scaled = v * 2f64.powi(31 - ib as i32);
+        Fx { raw: scaled.round().clamp(i32::MIN as f64, i32::MAX as f64) as i32, ib }
+    }
+
+    /// Convert to float (test/build-time only).
+    pub fn to_f64(&self) -> f64 {
+        f64::from(self.raw) * 2f64.powi(-(31 - self.ib as i32))
+    }
+
+    /// Saturating addition; operands must share the same format.
+    #[inline]
+    pub fn add(self, rhs: Fx) -> Fx {
+        debug_assert_eq!(self.ib, rhs.ib);
+        Fx { raw: self.raw.saturating_add(rhs.raw), ib: self.ib }
+    }
+
+    /// Saturating subtraction; operands must share the same format.
+    #[inline]
+    pub fn sub(self, rhs: Fx) -> Fx {
+        debug_assert_eq!(self.ib, rhs.ib);
+        Fx { raw: self.raw.saturating_sub(rhs.raw), ib: self.ib }
+    }
+
+    /// Negation (saturates `i32::MIN`).
+    #[inline]
+    pub fn neg(self) -> Fx {
+        Fx { raw: self.raw.saturating_neg(), ib: self.ib }
+    }
+
+    /// Fixed-point multiplication: result has `ib_a + ib_b` integer bits.
+    #[inline]
+    pub fn mul(self, rhs: Fx) -> Fx {
+        Fx {
+            raw: saturating_rounding_doubling_high_mul(self.raw, rhs.raw),
+            ib: self.ib + rhs.ib,
+        }
+    }
+
+    /// Exact multiply by a power of two (changes value, keeps format).
+    #[inline]
+    pub fn mul_by_pot(self, exponent: i32) -> Fx {
+        Fx {
+            raw: saturating_rounding_multiply_by_pot(self.raw, exponent),
+            ib: self.ib,
+        }
+    }
+
+    /// Convert to a different integer-bit count (same represented value,
+    /// saturating if it does not fit).
+    #[inline]
+    pub fn rescale(self, to_ib: u32) -> Fx {
+        let exponent = self.ib as i32 - to_ib as i32;
+        Fx {
+            raw: saturating_rounding_multiply_by_pot(self.raw, exponent),
+            ib: to_ib,
+        }
+    }
+
+    /// Rounding average of two same-format values.
+    #[inline]
+    pub fn half_sum(self, rhs: Fx) -> Fx {
+        debug_assert_eq!(self.ib, rhs.ib);
+        Fx { raw: rounding_half_sum(self.raw, rhs.raw), ib: self.ib }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f64() {
+        for &(v, ib) in &[(0.5, 0u32), (-0.25, 0), (3.75, 3), (-7.99, 3), (1.0, 2)] {
+            let f = Fx::from_f64(v, ib);
+            assert!((f.to_f64() - v).abs() < 1e-8, "{v} ib={ib} -> {}", f.to_f64());
+        }
+    }
+
+    #[test]
+    fn one_is_saturated_at_ib0() {
+        assert_eq!(Fx::one(0).raw, i32::MAX);
+        assert!((Fx::one(0).to_f64() - 1.0).abs() < 1e-9);
+        assert_eq!(Fx::one(2).raw, 1 << 29);
+    }
+
+    #[test]
+    fn mul_adds_integer_bits() {
+        let a = Fx::from_f64(0.5, 0);
+        let b = Fx::from_f64(0.5, 2);
+        let c = a.mul(b);
+        assert_eq!(c.ib, 2);
+        assert!((c.to_f64() - 0.25).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rescale_preserves_value() {
+        let a = Fx::from_f64(1.5, 4);
+        let b = a.rescale(2);
+        assert_eq!(b.ib, 2);
+        assert!((b.to_f64() - 1.5).abs() < 1e-7);
+        // Saturates when the value does not fit the narrower format.
+        let big = Fx::from_f64(7.5, 3);
+        let sat = big.rescale(0);
+        assert_eq!(sat.raw, i32::MAX);
+    }
+
+    #[test]
+    fn constant_pot_values() {
+        assert!((Fx::constant_pot(-2, 0).to_f64() - 0.25).abs() < 1e-12);
+        assert!((Fx::constant_pot(0, 2).to_f64() - 1.0).abs() < 1e-12);
+        assert!((Fx::constant_pot(1, 3).to_f64() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let a = Fx::from_f64(0.3, 0);
+        let b = Fx::from_f64(0.4, 0);
+        assert!((a.add(b).to_f64() - 0.7).abs() < 1e-8);
+        assert!((b.sub(a).to_f64() - 0.1).abs() < 1e-8);
+        assert!((a.neg().to_f64() + 0.3).abs() < 1e-8);
+        assert!((a.half_sum(b).to_f64() - 0.35).abs() < 1e-8);
+        assert!((a.mul_by_pot(1).to_f64() - 0.6).abs() < 1e-8);
+    }
+}

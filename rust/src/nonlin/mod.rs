@@ -1,0 +1,89 @@
+//! Integer-only non-linear activation functions (§3.2.1).
+//!
+//! Sigmoid and tanh evaluated entirely in 32-bit fixed point — no
+//! floating point, no lookup tables, no inner-loop branching (the three
+//! design principles of §3). Inputs are int16 in `Q_{m.15-m}` (the paper
+//! selects `Q3.12` as the optimum, see [`error`] for the analysis) and
+//! outputs are int16 in `Q0.15`, slightly clamped to
+//! `[-1, 32767/32768]`.
+//!
+//! The algorithms are the gemmlowp family used by TFLite's integer LSTM:
+//! range-reduced exponential with a barrel shifter of precomputed
+//! `exp(-2^k)` multipliers, and Newton–Raphson reciprocal for
+//! `1/(1+x)` — all expressed with saturating rounding doubling high
+//! multiplies.
+
+pub mod error;
+pub mod exp;
+pub mod fx;
+pub mod sigmoid;
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
+pub mod tanh;
+
+pub use exp::exp_on_negative_values;
+pub use fx::Fx;
+pub use sigmoid::{sigmoid_fx, sigmoid_q15};
+pub use tanh::{tanh_fx, tanh_q15};
+
+use crate::fixedpoint::mul::{rounding_divide_by_pot, saturate_i32_to_i16};
+
+/// Evaluate integer sigmoid over a slice of int16 `Q_{ib.15-ib}` values
+/// into int16 `Q0.15` outputs. Dispatches to the bit-exact AVX2 path
+/// when available.
+pub fn sigmoid_q15_slice(input: &[i16], integer_bits: u32, out: &mut [i16]) {
+    assert_eq!(input.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked.
+            unsafe { simd::sigmoid_q15_slice_avx2(input, integer_bits, out) };
+            return;
+        }
+    }
+    for (o, &x) in out.iter_mut().zip(input) {
+        *o = sigmoid_q15(x, integer_bits);
+    }
+}
+
+/// Evaluate integer tanh over a slice of int16 `Q_{ib.15-ib}` values
+/// into int16 `Q0.15` outputs. Dispatches to the bit-exact AVX2 path
+/// when available.
+pub fn tanh_q15_slice(input: &[i16], integer_bits: u32, out: &mut [i16]) {
+    assert_eq!(input.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked.
+            unsafe { simd::tanh_q15_slice_avx2(input, integer_bits, out) };
+            return;
+        }
+    }
+    for (o, &x) in out.iter_mut().zip(input) {
+        *o = tanh_q15(x, integer_bits);
+    }
+}
+
+/// Convert a `Q0.31` raw value to `Q0.15` int16 (rounding, saturating).
+#[inline]
+pub(crate) fn q31_to_q15(raw: i32) -> i16 {
+    saturate_i32_to_i16(rounding_divide_by_pot(raw, 16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_helpers_match_scalar() {
+        let xs: Vec<i16> = (-40..40).map(|i| (i * 800) as i16).collect();
+        let mut s = vec![0i16; xs.len()];
+        let mut t = vec![0i16; xs.len()];
+        sigmoid_q15_slice(&xs, 3, &mut s);
+        tanh_q15_slice(&xs, 3, &mut t);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(s[i], sigmoid_q15(x, 3));
+            assert_eq!(t[i], tanh_q15(x, 3));
+        }
+    }
+}

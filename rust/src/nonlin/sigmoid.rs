@@ -1,0 +1,129 @@
+//! Integer-only logistic sigmoid.
+//!
+//! `σ(x) = 1 / (1 + exp(-|x|))` for `x >= 0` and `1 - σ(|x|)` for
+//! `x < 0`, with the integer exponential of [`super::exp`] and a
+//! Newton–Raphson reciprocal (gemmlowp's `logistic`).
+
+use super::exp::exp_on_negative_values;
+use super::fx::Fx;
+use super::q31_to_q15;
+
+/// `1 / (1 + x)` for `x ∈ [0, 1]`, input/output `Q0.31`.
+pub(crate) fn one_over_one_plus_x_for_x_in_0_1(a: Fx) -> Fx {
+    debug_assert_eq!(a.ib, 0);
+    debug_assert!(a.raw >= 0);
+    let half_denominator = a.half_sum(Fx::one(0));
+    const CONSTANT_48_OVER_17: i32 = 1_515_870_810;
+    const CONSTANT_NEG_32_OVER_17: i32 = -1_010_580_540;
+    let mut x = Fx::from_raw(CONSTANT_48_OVER_17, 2)
+        .add(half_denominator.mul(Fx::from_raw(CONSTANT_NEG_32_OVER_17, 2)));
+    for _ in 0..3 {
+        let half_denominator_times_x = half_denominator.mul(x);
+        let one_minus_half_denominator_times_x =
+            Fx::one(2).sub(half_denominator_times_x);
+        x = x.add(x.mul(one_minus_half_denominator_times_x).rescale(2));
+    }
+    // x ≈ 2 / (1 + a) in Q2.29; halve and narrow to Q0.31.
+    x.mul_by_pot(-1).rescale(0)
+}
+
+/// Logistic sigmoid; input `Q_{ib.31-ib}`, output `Q0.31`.
+pub fn sigmoid_fx(a: Fx) -> Fx {
+    let neg_abs = Fx::from_raw(-(a.raw.saturating_abs()), a.ib);
+    let e = exp_on_negative_values(neg_abs);
+    let result_if_positive = one_over_one_plus_x_for_x_in_0_1(e);
+    if a.raw >= 0 {
+        result_if_positive
+    } else {
+        // 1 - σ(|a|); Q0.31 "one" is saturated, matching gemmlowp.
+        Fx::one(0).sub(result_if_positive)
+    }
+}
+
+/// Sigmoid on an int16 `Q_{ib.15-ib}` value, returning int16 `Q0.15`.
+#[inline]
+pub fn sigmoid_q15(x: i16, integer_bits: u32) -> i16 {
+    let widened = Fx::from_raw(i32::from(x) << 16, integer_bits);
+    q31_to_q15(sigmoid_fx(widened).raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reciprocal_accuracy() {
+        for i in 0..=1000 {
+            let v = f64::from(i) / 1000.0;
+            let a = Fx::from_f64(v, 0);
+            let got = one_over_one_plus_x_for_x_in_0_1(a).to_f64();
+            let want = 1.0 / (1.0 + v);
+            assert!((got - want).abs() < 1e-6, "x={v} got={got} want={want}");
+        }
+    }
+
+    fn check_sigmoid_q15(ib: u32, tol_lsb: f64) {
+        let mut max_err: f64 = 0.0;
+        for raw in (i32::from(i16::MIN)..=i32::from(i16::MAX)).step_by(7) {
+            let x = raw as i16;
+            let xf = f64::from(x) * 2f64.powi(-(15 - ib as i32));
+            let got = f64::from(sigmoid_q15(x, ib)) / 32768.0;
+            let want = 1.0 / (1.0 + (-xf).exp());
+            max_err = max_err.max((got - want).abs() * 32768.0);
+        }
+        assert!(max_err <= tol_lsb, "ib={ib}: max error {max_err} Q0.15 LSBs");
+    }
+
+    #[test]
+    fn sigmoid_q312_accurate_to_few_lsb() {
+        check_sigmoid_q15(3, 4.0);
+    }
+
+    #[test]
+    fn sigmoid_other_formats() {
+        for ib in [0u32, 1, 2, 4, 5, 6] {
+            check_sigmoid_q15(ib, 4.0);
+        }
+    }
+
+    #[test]
+    fn sigmoid_at_zero_is_half() {
+        for ib in 0..=6 {
+            let y = sigmoid_q15(0, ib);
+            assert!((i32::from(y) - 16384).abs() <= 1, "ib={ib} y={y}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_complement_symmetry() {
+        // σ(-x) = 1 - σ(x)
+        for x in [-30000i16, -5000, -100, 100, 5000, 30000] {
+            let p = i32::from(sigmoid_q15(x, 3));
+            let n = i32::from(sigmoid_q15(x.saturating_neg(), 3));
+            assert!(
+                (p + n - 32768).abs() <= 2,
+                "x={x}: σ(x)={p} σ(-x)={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigmoid_monotone_and_bounded() {
+        let mut prev = i16::MIN;
+        for raw in (i32::from(i16::MIN)..=i32::from(i16::MAX)).step_by(13) {
+            let y = sigmoid_q15(raw as i16, 3);
+            assert!(y >= prev);
+            assert!(y >= 0, "sigmoid must be nonnegative, got {y}");
+            prev = y;
+        }
+        // σ(8 - 2^-12) = 0.9996645 -> 32757 in Q0.15 (not saturated:
+        // unlike tanh, sigmoid at the Q3.12 edge is still well inside
+        // the representable range).
+        assert_eq!(sigmoid_q15(i16::MAX, 3), 32757);
+        // σ(-8) = 3.3535e-4 -> 11 in Q0.15.
+        assert_eq!(sigmoid_q15(i16::MIN, 3), 11);
+        // At wider formats the edges do saturate.
+        assert_eq!(sigmoid_q15(i16::MAX, 6), 32767);
+        assert_eq!(sigmoid_q15(i16::MIN, 6), 0);
+    }
+}

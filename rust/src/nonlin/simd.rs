@@ -1,0 +1,619 @@
+//! AVX2 8-lane implementation of the integer activations.
+//!
+//! **Bit-exact** with the scalar path in [`super::exp`]/[`super::tanh`]/
+//! [`super::sigmoid`] — asserted over the entire int16 input domain for
+//! every integer-bit count by `simd_matches_scalar_everywhere`. The
+//! barrel shifter and sign handling become branchless lane blends,
+//! which is also how the paper's "no inner loop branching" principle
+//! deploys on SIMD CPUs.
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+const I32_MAX_V: i32 = i32::MAX;
+
+/// Saturating i32 lane add (mirrors `i32::saturating_add`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sat_add(a: __m256i, b: __m256i) -> __m256i {
+    let sum = _mm256_add_epi32(a, b);
+    // Overflow iff sign(a) == sign(b) != sign(sum).
+    let ov = _mm256_and_si256(_mm256_xor_si256(a, sum), _mm256_xor_si256(b, sum));
+    let ov_mask = _mm256_srai_epi32(ov, 31);
+    // Saturated value: MAX if a >= 0 else MIN (a's sign picks).
+    let sat = _mm256_xor_si256(
+        _mm256_set1_epi32(I32_MAX_V),
+        _mm256_srai_epi32(a, 31),
+    );
+    _mm256_blendv_epi8(sum, sat, ov_mask)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sat_sub(a: __m256i, b: __m256i) -> __m256i {
+    let diff = _mm256_sub_epi32(a, b);
+    let ov = _mm256_and_si256(_mm256_xor_si256(a, b), _mm256_xor_si256(a, diff));
+    let ov_mask = _mm256_srai_epi32(ov, 31);
+    let sat = _mm256_xor_si256(
+        _mm256_set1_epi32(I32_MAX_V),
+        _mm256_srai_epi32(a, 31),
+    );
+    _mm256_blendv_epi8(diff, sat, ov_mask)
+}
+
+/// Saturating rounding doubling high multiply on 8 i32 lanes.
+///
+/// Mirrors `saturating_rounding_doubling_high_mul`: 64-bit product,
+/// nudge, truncating divide by 2^31, with the MIN*MIN saturation.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn srdhm(a: __m256i, b: __m256i) -> __m256i {
+    // Scalar computes trunc((ab + nudge) / 2^31) with nudge = 2^30 for
+    // ab >= 0 and 1 - 2^30 for ab < 0. Truncating division of a
+    // negative v by 2^31 equals floor((v + 2^31 - 1) / 2^31), and
+    // (1 - 2^30) + (2^31 - 1) = 2^30 — identical to the positive-path
+    // constant. So for *both* signs: result = (ab + 2^30) >> 31
+    // (floor), one add, no blends. The shift is a logical 64-bit shift:
+    // the result fits i32, so the low 32 bits are correct.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn half(a64: __m256i, b64: __m256i) -> __m256i {
+        let ab = _mm256_mul_epi32(a64, b64); // 4 × i64
+        let v = _mm256_add_epi64(ab, _mm256_set1_epi64x(1 << 30));
+        _mm256_srli_epi64(v, 31)
+    }
+    // Even lanes (0,2,4,6) already sit in i64-lane low halves.
+    let even = half(a, b);
+    // Odd lanes: shift them down into the low halves.
+    let odd = half(_mm256_srli_epi64(a, 32), _mm256_srli_epi64(b, 32));
+    // Interleave low 32 bits of each i64: even lanes keep position,
+    // odd go back up.
+    let result = _mm256_blend_epi32(even, _mm256_slli_epi64(odd, 32), 0b10101010);
+    // Saturate the MIN*MIN case.
+    let min = _mm256_set1_epi32(i32::MIN);
+    let both_min = _mm256_and_si256(_mm256_cmpeq_epi32(a, min), _mm256_cmpeq_epi32(b, min));
+    _mm256_blendv_epi8(result, _mm256_set1_epi32(I32_MAX_V), both_min)
+}
+
+/// Rounding divide by power of two (runtime exponent), 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rdbp(x: __m256i, exponent: i32) -> __m256i {
+    if exponent == 0 {
+        return x;
+    }
+    let mask = _mm256_set1_epi32(((1i64 << exponent) - 1) as i32);
+    let remainder = _mm256_and_si256(x, mask);
+    let one_if_neg = _mm256_srli_epi32(_mm256_srai_epi32(x, 31), 31);
+    let threshold = _mm256_add_epi32(_mm256_srai_epi32(mask, 1), one_if_neg);
+    let shifted = _mm256_sra_epi32(x, _mm_cvtsi32_si128(exponent));
+    let add_one = _mm256_srli_epi32(_mm256_cmpgt_epi32(remainder, threshold), 31);
+    _mm256_add_epi32(shifted, add_one)
+}
+
+/// Saturating multiply by 2^exponent (runtime exponent), 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn srmbp(x: __m256i, exponent: i32) -> __m256i {
+    if exponent == 0 {
+        x
+    } else if exponent < 0 {
+        rdbp(x, -exponent)
+    } else {
+        let hi = _mm256_set1_epi32(I32_MAX_V >> exponent);
+        let lo = _mm256_set1_epi32(i32::MIN >> exponent);
+        let over = _mm256_cmpgt_epi32(x, hi);
+        let under = _mm256_cmpgt_epi32(lo, x);
+        let shifted = _mm256_sll_epi32(
+            _mm256_max_epi32(lo, _mm256_min_epi32(hi, x)),
+            _mm_cvtsi32_si128(exponent),
+        );
+        let r = _mm256_blendv_epi8(shifted, _mm256_set1_epi32(I32_MAX_V), over);
+        _mm256_blendv_epi8(r, _mm256_set1_epi32(i32::MIN), under)
+    }
+}
+
+/// Rounding half sum (mirrors scalar `rounding_half_sum`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn half_sum(a: __m256i, b: __m256i) -> __m256i {
+    // Values here are in [0, 2^31-1] + [2^31-1] — the only caller uses
+    // a >= 0, b = i32::MAX — so sum >= 0 and (sum + 1) / 2 suffices; do
+    // it in 64-bit halves to avoid overflow.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn half(a64: __m256i, b64: __m256i) -> __m256i {
+        let mask = _mm256_set1_epi64x(0xFFFF_FFFF);
+        let s = _mm256_add_epi64(
+            _mm256_and_si256(a64, mask),
+            _mm256_and_si256(b64, mask),
+        );
+        // Inputs are nonnegative i32s: plain (s+1)>>1.
+        _mm256_srli_epi64(_mm256_add_epi64(s, _mm256_set1_epi64x(1)), 1)
+    }
+    let even = half(a, b);
+    let odd = half(_mm256_srli_epi64(a, 32), _mm256_srli_epi64(b, 32));
+    _mm256_blend_epi32(even, _mm256_slli_epi64(odd, 32), 0b10101010)
+}
+
+const EXP_BARREL: [(i32, i32); 7] = [
+    (-2, 1_672_461_947),
+    (-1, 1_302_514_674),
+    (0, 790_015_084),
+    (1, 290_630_308),
+    (2, 39_332_535),
+    (3, 720_401),
+    (4, 242),
+];
+
+/// exp on [-1/4, 0) interval, Q0.31 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn exp_interval(a: __m256i) -> __m256i {
+    let ct = _mm256_set1_epi32(1_895_147_668);
+    let third = _mm256_set1_epi32(715_827_883);
+    let x = sat_add(a, _mm256_set1_epi32(1 << 28));
+    let x2 = srdhm(x, x);
+    let x3 = srdhm(x2, x);
+    let x4 = srdhm(x2, x2);
+    let x4_over_4 = rdbp(x4, 2);
+    let inner = sat_add(srdhm(sat_add(x4_over_4, x3), third), x2);
+    let poly = rdbp(inner, 1);
+    sat_add(ct, srdhm(ct, sat_add(x, poly)))
+}
+
+/// exp(a) for a <= 0; lanes hold raw values with `31-ib` fractional
+/// bits; result Q0.31. Mirrors `exp_on_negative_values` exactly.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn exp_neg(a: __m256i, ib: i32) -> __m256i {
+    let frac_bits = 31 - ib;
+    let one_quarter = _mm256_set1_epi32(1 << (frac_bits - 2));
+    let mask = _mm256_set1_epi32((1 << (frac_bits - 2)) - 1);
+    let a_mod = _mm256_sub_epi32(_mm256_and_si256(a, mask), one_quarter);
+    let interval_in = srmbp(a_mod, ib);
+    let mut result = exp_interval(interval_in);
+    let remainder = _mm256_sub_epi32(a_mod, a); // wrapping, like scalar
+    for (exponent, multiplier) in EXP_BARREL {
+        if ib > exponent {
+            let pos = frac_bits + exponent;
+            if (0..31).contains(&pos) {
+                let bit = _mm256_set1_epi32(1 << pos);
+                let fire = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(remainder, bit),
+                    bit,
+                );
+                let mul = srdhm(result, _mm256_set1_epi32(multiplier));
+                result = _mm256_blendv_epi8(result, mul, fire);
+            }
+        }
+    }
+    if ib > 5 {
+        let clamp = _mm256_set1_epi32(-(1i64 << (frac_bits + 5)) as i32);
+        let below = _mm256_cmpgt_epi32(clamp, a);
+        result = _mm256_andnot_si256(below, result);
+    }
+    let zero_in = _mm256_cmpeq_epi32(a, _mm256_setzero_si256());
+    _mm256_blendv_epi8(result, _mm256_set1_epi32(I32_MAX_V), zero_in)
+}
+
+/// Newton–Raphson `2/(1+a)` core shared by both reciprocal forms.
+/// Input a in [0,1] Q0.31, output x ≈ 2/(1+a) in Q2.29.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn newton_two_over_one_plus(a: __m256i) -> __m256i {
+    let half_denominator = half_sum(a, _mm256_set1_epi32(I32_MAX_V));
+    let mut x = sat_add(
+        _mm256_set1_epi32(1_515_870_810),
+        srdhm(half_denominator, _mm256_set1_epi32(-1_010_580_540)),
+    );
+    for _ in 0..3 {
+        let hdx = srdhm(half_denominator, x);
+        let one_minus = sat_sub(_mm256_set1_epi32(1 << 29), hdx);
+        let delta = srmbp(srdhm(x, one_minus), 2);
+        x = sat_add(x, delta);
+    }
+    x
+}
+
+/// `(1-x)/(1+x)` on Q0.31 lanes (mirrors scalar).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn one_minus_over_one_plus(a: __m256i) -> __m256i {
+    let x = newton_two_over_one_plus(a);
+    srmbp(sat_sub(x, _mm256_set1_epi32(1 << 29)), 2)
+}
+
+/// `1/(1+x)` on Q0.31 lanes (mirrors scalar).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn one_over_one_plus(a: __m256i) -> __m256i {
+    let x = newton_two_over_one_plus(a);
+    srmbp(rdbp(x, 1), 2)
+}
+
+/// Q0.31 lanes -> Q0.15 int16 (matches scalar `q31_to_q15`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn q31_to_q15(raw: __m256i) -> __m256i {
+    let q = rdbp(raw, 16);
+    _mm256_max_epi32(
+        _mm256_set1_epi32(-32768),
+        _mm256_min_epi32(_mm256_set1_epi32(32767), q),
+    )
+}
+
+/// `-(x.saturating_abs())` per lane (scalar semantics: MIN maps to
+/// MIN+1, not MIN).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_abs_saturating(x: __m256i) -> __m256i {
+    let abs = _mm256_abs_epi32(x); // MIN wraps to MIN
+    let is_min = _mm256_cmpeq_epi32(x, _mm256_set1_epi32(i32::MIN));
+    let abs_sat = _mm256_blendv_epi8(abs, _mm256_set1_epi32(I32_MAX_V), is_min);
+    _mm256_sub_epi32(_mm256_setzero_si256(), abs_sat)
+}
+
+/// 8-lane tanh: input int16 `Q_{ib.15-ib}` widened in lanes, output
+/// int16 `Q0.15` in lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn tanh8(widened: __m256i, ib: i32) -> __m256i {
+    let zero = _mm256_setzero_si256();
+    let neg_abs = neg_abs_saturating(widened);
+    let e = exp_neg(neg_abs, ib + 1);
+    let t = one_minus_over_one_plus(e);
+    let negative = _mm256_cmpgt_epi32(zero, widened);
+    let signed = _mm256_blendv_epi8(t, _mm256_sub_epi32(zero, t), negative);
+    let is_zero = _mm256_cmpeq_epi32(widened, zero);
+    q31_to_q15(_mm256_andnot_si256(is_zero, signed))
+}
+
+/// 8-lane sigmoid.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sigmoid8(widened: __m256i, ib: i32) -> __m256i {
+    let zero = _mm256_setzero_si256();
+    let neg_abs = neg_abs_saturating(widened);
+    let e = exp_neg(neg_abs, ib);
+    let pos = one_over_one_plus(e);
+    let negative = _mm256_cmpgt_epi32(zero, widened);
+    let flipped = sat_sub(_mm256_set1_epi32(I32_MAX_V), pos);
+    q31_to_q15(_mm256_blendv_epi8(pos, flipped, negative))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load_widened(src: &[i16], i: usize) -> __m256i {
+    let x16 = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+    _mm256_slli_epi32(_mm256_cvtepi16_epi32(x16), 16)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn store_q15(dst: &mut [i16], i: usize, lanes: __m256i) {
+    // Lanes are already clamped to i16 range; pack via shuffle.
+    let packed = _mm256_packs_epi32(lanes, lanes); // duplicates per 128 lane
+    let lo = _mm256_castsi256_si128(packed);
+    let hi = _mm256_extracti128_si256(packed, 1);
+    let out = _mm_unpacklo_epi64(lo, hi);
+    _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, out);
+}
+
+/// AVX2 tanh over a slice (called from `nonlin::tanh_q15_slice`).
+///
+/// # Safety
+/// Caller must have verified AVX2 support.
+#[target_feature(enable = "avx2")]
+pub unsafe fn tanh_q15_slice_avx2(input: &[i16], ib: u32, out: &mut [i16]) {
+    let n = input.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let w = load_widened(input, i);
+        store_q15(out, i, tanh8(w, ib as i32));
+        i += 8;
+    }
+    for j in i..n {
+        out[j] = super::tanh::tanh_q15(input[j], ib);
+    }
+}
+
+/// AVX2 sigmoid over a slice.
+///
+/// # Safety
+/// Caller must have verified AVX2 support.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sigmoid_q15_slice_avx2(input: &[i16], ib: u32, out: &mut [i16]) {
+    let n = input.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let w = load_widened(input, i);
+        store_q15(out, i, sigmoid8(w, ib as i32));
+        i += 8;
+    }
+    for j in i..n {
+        out[j] = super::sigmoid::sigmoid_q15(input[j], ib);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::nonlin::{sigmoid_q15, tanh_q15};
+
+    fn avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[test]
+    fn simd_matches_scalar_everywhere() {
+        if !avx2() {
+            eprintln!("no AVX2; skipping");
+            return;
+        }
+        // Entire int16 domain for the formats the cell uses.
+        for ib in 0..=6u32 {
+            let input: Vec<i16> =
+                (i16::MIN..=i16::MAX).step_by(1).collect();
+            let mut got_t = vec![0i16; input.len()];
+            let mut got_s = vec![0i16; input.len()];
+            unsafe {
+                super::tanh_q15_slice_avx2(&input, ib, &mut got_t);
+                super::sigmoid_q15_slice_avx2(&input, ib, &mut got_s);
+            }
+            for (k, &x) in input.iter().enumerate() {
+                assert_eq!(got_t[k], tanh_q15(x, ib), "tanh ib={ib} x={x}");
+                assert_eq!(got_s[k], sigmoid_q15(x, ib), "sigmoid ib={ib} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_handles_short_tails() {
+        if !avx2() {
+            return;
+        }
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 17] {
+            let input: Vec<i16> = (0..n).map(|i| (i as i16) * 991).collect();
+            let mut out = vec![0i16; n];
+            unsafe { super::tanh_q15_slice_avx2(&input, 3, &mut out) };
+            for (k, &x) in input.iter().enumerate() {
+                assert_eq!(out[k], tanh_q15(x, 3));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused integer-cell elementwise kernels (used by lstm::integer_cell).
+// ---------------------------------------------------------------------
+
+use crate::fixedpoint::Rescale;
+
+/// `MultiplyByQuantizedMultiplier` on 8 lanes — mirrors
+/// `Rescale::apply` exactly (saturating pre-shift, srdhm, rounding
+/// post-shift).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn apply_rescale8(x: __m256i, r: Rescale) -> __m256i {
+    let left = if r.shift > 0 { r.shift } else { 0 };
+    let right = if r.shift > 0 { 0 } else { -r.shift };
+    let shifted = if left == 0 {
+        x
+    } else if left >= 31 {
+        // Mirror the scalar saturation-by-sign path.
+        let pos = _mm256_cmpgt_epi32(x, _mm256_setzero_si256());
+        let neg = _mm256_cmpgt_epi32(_mm256_setzero_si256(), x);
+        let mut v = _mm256_setzero_si256();
+        v = _mm256_blendv_epi8(v, _mm256_set1_epi32(I32_MAX_V), pos);
+        _mm256_blendv_epi8(v, _mm256_set1_epi32(i32::MIN), neg)
+    } else {
+        srmbp(x, left)
+    };
+    let prod = srdhm(shifted, _mm256_set1_epi32(r.multiplier));
+    if right == 0 { prod } else { rdbp(prod, right) }
+}
+
+/// Fused gate pre-activation (fig 3, no peephole):
+/// `out = sat_i16(rescale(acc_x, eff_x) + rescale(acc_h, eff_h))`.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; slices must share length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gate_rescale_avx2(
+    acc_x: &[i32],
+    eff_x: Rescale,
+    acc_h: &[i32],
+    eff_h: Rescale,
+    out: &mut [i16],
+) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let ax = _mm256_loadu_si256(acc_x.as_ptr().add(i) as *const __m256i);
+        let ah = _mm256_loadu_si256(acc_h.as_ptr().add(i) as *const __m256i);
+        // Scalar uses plain `+` between the two rescaled i32s (each
+        // bounded well inside i16 after saturation to the gate domain):
+        let sum = _mm256_add_epi32(apply_rescale8(ax, eff_x), apply_rescale8(ah, eff_h));
+        let clamped = _mm256_max_epi32(
+            _mm256_set1_epi32(-32768),
+            _mm256_min_epi32(_mm256_set1_epi32(32767), sum),
+        );
+        store_q15(out, i, clamped);
+        i += 8;
+    }
+    for j in i..n {
+        let sum = eff_x.apply(acc_x[j]) + eff_h.apply(acc_h[j]);
+        out[j] = crate::fixedpoint::mul::saturate_i32_to_i16(sum);
+    }
+}
+
+/// Fused gate pre-activation with peephole (`P ⊙ c` rescaled in):
+/// `out = sat_i16(rescale(acc_x) + rescale(acc_h) + rescale(P*c))`.
+///
+/// # Safety
+/// AVX2 must be available; slices must share length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gate_rescale_peephole_avx2(
+    acc_x: &[i32],
+    eff_x: Rescale,
+    acc_h: &[i32],
+    eff_h: Rescale,
+    peephole: &[i16],
+    c: &[i16],
+    eff_c: Rescale,
+    out: &mut [i16],
+) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let ax = _mm256_loadu_si256(acc_x.as_ptr().add(i) as *const __m256i);
+        let ah = _mm256_loadu_si256(acc_h.as_ptr().add(i) as *const __m256i);
+        let p = _mm256_cvtepi16_epi32(
+            _mm_loadu_si128(peephole.as_ptr().add(i) as *const __m128i),
+        );
+        let cc = _mm256_cvtepi16_epi32(
+            _mm_loadu_si128(c.as_ptr().add(i) as *const __m128i),
+        );
+        let pc = _mm256_mullo_epi32(p, cc);
+        let sum = _mm256_add_epi32(
+            _mm256_add_epi32(apply_rescale8(ax, eff_x), apply_rescale8(ah, eff_h)),
+            apply_rescale8(pc, eff_c),
+        );
+        let clamped = _mm256_max_epi32(
+            _mm256_set1_epi32(-32768),
+            _mm256_min_epi32(_mm256_set1_epi32(32767), sum),
+        );
+        store_q15(out, i, clamped);
+        i += 8;
+    }
+    for j in i..n {
+        let pc = i32::from(peephole[j]) * i32::from(c[j]);
+        let sum = eff_x.apply(acc_x[j]) + eff_h.apply(acc_h[j]) + eff_c.apply(pc);
+        out[j] = crate::fixedpoint::mul::saturate_i32_to_i16(sum);
+    }
+}
+
+/// Fused hidden-state production (§3.2.7):
+/// `m = sat_i8(rescale(o ⊙ tanh_c, eff) + zp)`.
+///
+/// # Safety
+/// AVX2 must be available; slices must share length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn hidden_rescale_avx2(
+    o_act: &[i16],
+    tanh_c: &[i16],
+    eff: Rescale,
+    zp: i32,
+    out: &mut [i8],
+) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let o = _mm256_cvtepi16_epi32(
+            _mm_loadu_si128(o_act.as_ptr().add(i) as *const __m128i),
+        );
+        let t = _mm256_cvtepi16_epi32(
+            _mm_loadu_si128(tanh_c.as_ptr().add(i) as *const __m128i),
+        );
+        let prod = _mm256_mullo_epi32(o, t);
+        let v = _mm256_add_epi32(apply_rescale8(prod, eff), _mm256_set1_epi32(zp));
+        let clamped = _mm256_max_epi32(
+            _mm256_set1_epi32(-128),
+            _mm256_min_epi32(_mm256_set1_epi32(127), v),
+        );
+        // Pack 8 × i32 -> 8 × i8.
+        let packed16 = _mm256_packs_epi32(clamped, clamped);
+        let lo = _mm256_castsi256_si128(packed16);
+        let hi = _mm256_extracti128_si256(packed16, 1);
+        let both16 = _mm_unpacklo_epi64(lo, hi);
+        let packed8 = _mm_packs_epi16(both16, both16);
+        let lanes: [i8; 16] = std::mem::transmute(packed8);
+        out[i..i + 8].copy_from_slice(&lanes[..8]);
+        i += 8;
+    }
+    for j in i..n {
+        let prod = i32::from(o_act[j]) * i32::from(tanh_c[j]);
+        out[j] = crate::fixedpoint::mul::saturate_i32_to_i8(eff.apply(prod) + zp);
+    }
+}
+
+#[cfg(test)]
+mod fused_tests {
+    use crate::fixedpoint::mul::{saturate_i32_to_i16, saturate_i32_to_i8};
+    use crate::fixedpoint::Rescale;
+    use crate::util::proptest;
+
+    fn avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[test]
+    fn gate_rescale_matches_scalar() {
+        if !avx2() {
+            return;
+        }
+        proptest::check("gate-rescale-simd", |rng| {
+            let n = rng.below(70) as usize;
+            let ax: Vec<i32> = (0..n).map(|_| rng.range_i32(-(1 << 24), 1 << 24)).collect();
+            let ah: Vec<i32> = (0..n).map(|_| rng.range_i32(-(1 << 24), 1 << 24)).collect();
+            let rx = Rescale::from_scale(rng.uniform(1e-6, 4.0));
+            let rh = Rescale::from_scale(rng.uniform(1e-6, 4.0));
+            let mut got = vec![0i16; n];
+            unsafe { super::gate_rescale_avx2(&ax, rx, &ah, rh, &mut got) };
+            for j in 0..n {
+                let want = saturate_i32_to_i16(rx.apply(ax[j]) + rh.apply(ah[j]));
+                assert_eq!(got[j], want, "j={j}");
+            }
+        });
+    }
+
+    #[test]
+    fn gate_rescale_peephole_matches_scalar() {
+        if !avx2() {
+            return;
+        }
+        proptest::check("gate-rescale-ph-simd", |rng| {
+            let n = rng.below(40) as usize;
+            let ax: Vec<i32> = (0..n).map(|_| rng.range_i32(-(1 << 24), 1 << 24)).collect();
+            let ah: Vec<i32> = (0..n).map(|_| rng.range_i32(-(1 << 24), 1 << 24)).collect();
+            let p: Vec<i16> = (0..n).map(|_| rng.range_i32(-32767, 32767) as i16).collect();
+            let c: Vec<i16> = (0..n).map(|_| rng.range_i32(-32768, 32767) as i16).collect();
+            let rx = Rescale::from_scale(rng.uniform(1e-6, 2.0));
+            let rh = Rescale::from_scale(rng.uniform(1e-6, 2.0));
+            let rc = Rescale::from_scale(rng.uniform(1e-9, 0.1));
+            let mut got = vec![0i16; n];
+            unsafe {
+                super::gate_rescale_peephole_avx2(&ax, rx, &ah, rh, &p, &c, rc, &mut got)
+            };
+            for j in 0..n {
+                let pc = i32::from(p[j]) * i32::from(c[j]);
+                let want =
+                    saturate_i32_to_i16(rx.apply(ax[j]) + rh.apply(ah[j]) + rc.apply(pc));
+                assert_eq!(got[j], want, "j={j}");
+            }
+        });
+    }
+
+    #[test]
+    fn hidden_rescale_matches_scalar() {
+        if !avx2() {
+            return;
+        }
+        proptest::check("hidden-rescale-simd", |rng| {
+            let n = rng.below(70) as usize;
+            let o: Vec<i16> = (0..n).map(|_| rng.range_i32(0, 32767) as i16).collect();
+            let t: Vec<i16> = (0..n).map(|_| rng.range_i32(-32768, 32767) as i16).collect();
+            let eff = Rescale::from_scale(rng.uniform(1e-9, 1e-3));
+            let zp = rng.range_i32(-128, 127);
+            let mut got = vec![0i8; n];
+            unsafe { super::hidden_rescale_avx2(&o, &t, eff, zp, &mut got) };
+            for j in 0..n {
+                let prod = i32::from(o[j]) * i32::from(t[j]);
+                let want = saturate_i32_to_i8(eff.apply(prod) + zp);
+                assert_eq!(got[j], want, "j={j}");
+            }
+        });
+    }
+}

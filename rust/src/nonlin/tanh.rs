@@ -1,0 +1,151 @@
+//! Integer-only hyperbolic tangent.
+//!
+//! `tanh(x) = sign(x) * (1 - exp(-2|x|)) / (1 + exp(-2|x|))`, computed
+//! with the integer exponential of [`super::exp`] and a Newton–Raphson
+//! reciprocal — gemmlowp's `tanh`, runtime-parameterized over the input
+//! integer-bit count so the cell state's measured `Q_{m.15-m}` format
+//! can feed tanh directly without a rescale (§3.2.2).
+
+use super::exp::exp_on_negative_values;
+use super::fx::Fx;
+use super::q31_to_q15;
+
+/// `(1 - x) / (1 + x)` for `x ∈ [0, 1]`, input/output `Q0.31`.
+///
+/// Newton–Raphson for the reciprocal of `(1 + x) / 2 ∈ [1/2, 1]`,
+/// starting from the classic `48/17 - 32/17 * d` estimate, three
+/// iterations (exact to Q0.31 resolution).
+pub(crate) fn one_minus_x_over_one_plus_x_for_x_in_0_1(a: Fx) -> Fx {
+    debug_assert_eq!(a.ib, 0);
+    debug_assert!(a.raw >= 0);
+    // half_denominator = (a + 1) / 2 in Q0.31, in [1/2, 1].
+    let half_denominator = a.half_sum(Fx::one(0));
+    // Newton-Raphson iterations in Q2.29.
+    const CONSTANT_48_OVER_17: i32 = 1_515_870_810;
+    const CONSTANT_NEG_32_OVER_17: i32 = -1_010_580_540;
+    let mut x = Fx::from_raw(CONSTANT_48_OVER_17, 2)
+        .add(half_denominator.mul(Fx::from_raw(CONSTANT_NEG_32_OVER_17, 2)));
+    for _ in 0..3 {
+        let half_denominator_times_x = half_denominator.mul(x); // ib 0+2=2
+        let one_minus_half_denominator_times_x =
+            Fx::one(2).sub(half_denominator_times_x);
+        x = x.add(x.mul(one_minus_half_denominator_times_x).rescale(2));
+    }
+    // x ≈ 2 / (1 + a) in Q2.29; result = x - 1 = (1 - a) / (1 + a).
+    x.sub(Fx::constant_pot(0, 2)).rescale(0)
+}
+
+/// tanh on a fixed-point value; input `Q_{ib.31-ib}`, output `Q0.31`.
+pub fn tanh_fx(a: Fx) -> Fx {
+    let neg_abs = Fx::from_raw(-(a.raw.saturating_abs()), a.ib);
+    // exp(-2|a|): the doubling is *exact* — reinterpret the same raw
+    // with one more integer bit (gemmlowp's `ExactMulByPot<1>`), so no
+    // saturation occurs even at the edge of the input range.
+    let exp_in = Fx::from_raw(neg_abs.raw, a.ib + 1);
+    let e = exp_on_negative_values(exp_in);
+    let t = one_minus_x_over_one_plus_x_for_x_in_0_1(e);
+    if a.raw == 0 {
+        Fx::zero(0)
+    } else if a.raw < 0 {
+        t.neg()
+    } else {
+        t
+    }
+}
+
+/// tanh on an int16 `Q_{ib.15-ib}` value, returning int16 `Q0.15`.
+///
+/// This is the activation the paper's gates use (§3.2.1): the 16-bit
+/// input is widened to `Q_{ib.31-ib}`, evaluated, and the `Q0.31`
+/// result is rounded back down to `Q0.15`, clamping the output to
+/// `[-1, 32767/32768]`.
+#[inline]
+pub fn tanh_q15(x: i16, integer_bits: u32) -> i16 {
+    let widened = Fx::from_raw(i32::from(x) << 16, integer_bits);
+    q31_to_q15(tanh_fx(widened).raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_minus_over_one_plus_accuracy() {
+        for i in 0..=1000 {
+            let v = f64::from(i) / 1000.0;
+            let a = Fx::from_f64(v, 0);
+            let got = one_minus_x_over_one_plus_x_for_x_in_0_1(a).to_f64();
+            let want = (1.0 - v) / (1.0 + v);
+            assert!((got - want).abs() < 1e-6, "x={v} got={got} want={want}");
+        }
+    }
+
+    fn check_tanh_q15(ib: u32, tol_lsb: f64) {
+        let mut max_err: f64 = 0.0;
+        for raw in (i32::from(i16::MIN)..=i32::from(i16::MAX)).step_by(7) {
+            let x = raw as i16;
+            let xf = f64::from(x) * 2f64.powi(-(15 - ib as i32));
+            let got = f64::from(tanh_q15(x, ib)) / 32768.0;
+            let want = xf.tanh();
+            max_err = max_err.max((got - want).abs() * 32768.0);
+        }
+        assert!(
+            max_err <= tol_lsb,
+            "ib={ib}: max error {max_err} Q0.15 LSBs"
+        );
+    }
+
+    #[test]
+    fn tanh_q312_accurate_to_few_lsb() {
+        // Q3.12: the paper's chosen activation format.
+        check_tanh_q15(3, 4.0);
+    }
+
+    #[test]
+    fn tanh_q411_accurate() {
+        // Q4.11: cell-state format fed directly to tanh (§3.2.2 example).
+        check_tanh_q15(4, 4.0);
+    }
+
+    #[test]
+    fn tanh_q015_and_wide_formats() {
+        check_tanh_q15(0, 4.0);
+        check_tanh_q15(1, 4.0);
+        check_tanh_q15(2, 4.0);
+        check_tanh_q15(5, 4.0);
+        check_tanh_q15(6, 4.0);
+    }
+
+    #[test]
+    fn tanh_odd_symmetry() {
+        for ib in [0u32, 3, 4] {
+            for x in [-30000i16, -12345, -512, -1, 0, 1, 512, 12345, 30000] {
+                let p = tanh_q15(x, ib);
+                let n = tanh_q15(x.saturating_neg(), ib);
+                assert!(
+                    (i32::from(p) + i32::from(n)).abs() <= 1,
+                    "ib={ib} x={x}: {p} vs {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tanh_monotone() {
+        let ib = 3;
+        let mut prev = i16::MIN;
+        for raw in (i32::from(i16::MIN)..=i32::from(i16::MAX)).step_by(11) {
+            let y = tanh_q15(raw as i16, ib);
+            assert!(y >= prev, "tanh not monotone at {raw}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn tanh_saturates_at_extremes() {
+        // tanh(8) = 0.99999977; in Q0.15 that rounds to 32767.
+        assert_eq!(tanh_q15(i16::MAX, 3), 32767);
+        assert_eq!(tanh_q15(i16::MIN, 3), -32768);
+        assert_eq!(tanh_q15(0, 3), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Quantization: scales, zero points, calibration observers, the
+//! Table-2 recipe engine, and the §3.1.1 overflow model.
+
+pub mod observer;
+pub mod overflow;
+pub mod params;
+pub mod recipe;
+
+pub use observer::MinMaxObserver;
+pub use params::{
+    quantize_asymmetric_i8, quantize_symmetric_i16, quantize_symmetric_i8,
+    AsymmetricQuant, SymmetricQuant,
+};
+pub use recipe::{LstmRecipe, TensorRole};

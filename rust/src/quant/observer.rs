@@ -1,0 +1,140 @@
+//! Calibration observers (§4): running min/max collectors attached to
+//! every dynamic tensor during post-training calibration.
+
+/// A running min/max (and simple moving statistics) observer.
+#[derive(Debug, Clone)]
+pub struct MinMaxObserver {
+    pub min: f64,
+    pub max: f64,
+    pub count: u64,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl Default for MinMaxObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MinMaxObserver {
+    pub fn new() -> Self {
+        MinMaxObserver {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn observe(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "observed non-finite value");
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+    }
+
+    /// Record a slice of values.
+    pub fn observe_slice(&mut self, vs: &[f32]) {
+        for &v in vs {
+            self.observe(f64::from(v));
+        }
+    }
+
+    /// Has anything been observed?
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest absolute value observed (symmetric scales).
+    pub fn max_abs(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.min.abs().max(self.max.abs())
+        }
+    }
+
+    /// `(min, max)` with empty observers defaulting to `(0, 0)`.
+    pub fn range(&self) -> (f64, f64) {
+        if self.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (self.min, self.max)
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.count as f64 - m * m).max(0.0).sqrt()
+    }
+
+    /// Merge another observer (for parallel calibration shards).
+    pub fn merge(&mut self, other: &MinMaxObserver) {
+        if other.is_empty() {
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_min_max_mean_std() {
+        let mut o = MinMaxObserver::new();
+        o.observe_slice(&[1.0, -3.0, 2.0, 0.0]);
+        assert_eq!(o.range(), (-3.0, 2.0));
+        assert_eq!(o.max_abs(), 3.0);
+        assert_eq!(o.count, 4);
+        assert!((o.mean() - 0.0).abs() < 1e-12);
+        assert!(o.std() > 0.0);
+    }
+
+    #[test]
+    fn empty_observer_defaults() {
+        let o = MinMaxObserver::new();
+        assert!(o.is_empty());
+        assert_eq!(o.range(), (0.0, 0.0));
+        assert_eq!(o.max_abs(), 0.0);
+        assert_eq!(o.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = MinMaxObserver::new();
+        let mut b = MinMaxObserver::new();
+        let mut all = MinMaxObserver::new();
+        for i in 0..100 {
+            let v = f64::from(i) * 0.37 - 18.0;
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+            all.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.range(), all.range());
+        assert_eq!(a.count, all.count);
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,89 @@
+//! The accumulator overflow model of §3.1.1.
+//!
+//! A "matmul" accumulating products of two `b`-bit integers into an
+//! `acc`-bit accumulator can be modeled as a random walk; the paper's
+//! safe-depth bound charges each step the full `2^b * 2^b = 2^(2b)`
+//! product range (conservative: it covers asymmetric inputs whose
+//! zero-point-adjusted magnitude reaches the full 2^b span, per §6).
+//! The safe depth is then `2^(acc-1) / 2^(2b)`: for int8 into int32
+//! that is `2^15` steps; a 24-bit accumulator is only safe to `2^7` —
+//! exactly the figures the paper quotes.
+
+/// Safe accumulation depth for products of two `input_bits` integers
+/// into an `acc_bits` signed accumulator, under the paper's
+/// full-range-per-step model.
+pub fn safe_accumulation_depth(input_bits: u32, acc_bits: u32) -> u64 {
+    assert!(input_bits >= 2 && acc_bits > 2 * input_bits);
+    // Charged product magnitude per step: 2^(2*input_bits).
+    // Accumulator headroom: 2^(acc_bits-1).
+    let per_step = 2u128.pow(2 * input_bits);
+    let headroom = 2u128.pow(acc_bits - 1);
+    (headroom / per_step) as u64
+}
+
+/// Is a matmul of the given inner dimension safe from overflow under
+/// the paper's int8→int32 discipline?
+pub fn is_depth_safe_i8_i32(depth: usize) -> bool {
+    (depth as u64) <= safe_accumulation_depth(8, 32)
+}
+
+/// Expected random-walk magnitude (the paper's statistical argument:
+/// quantization errors cancel during accumulation). For i.i.d.
+/// zero-mean products with per-step std `sigma`, the accumulated std
+/// after `n` steps grows as `sigma * sqrt(n)` — far below the
+/// deterministic bound, which is why real models "are safe from
+/// overflow" well past the worst case.
+pub fn random_walk_std(per_step_std: f64, depth: u64) -> f64 {
+    per_step_std * (depth as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn paper_depth_figures() {
+        // §3.1.1: int8 products into int32 are safe for 2^15 steps;
+        // a 24-bit accumulator only to 2^7.
+        assert_eq!(safe_accumulation_depth(8, 32), 1 << 15);
+        assert_eq!(safe_accumulation_depth(8, 24), 1 << 7);
+    }
+
+    #[test]
+    fn depth_check_helper() {
+        assert!(is_depth_safe_i8_i32(2048)); // typical LSTM width
+        assert!(is_depth_safe_i8_i32(32767));
+        assert!(!is_depth_safe_i8_i32(40000));
+    }
+
+    #[test]
+    fn empirical_no_overflow_at_worst_case_depth() {
+        // Exhaustive worst case: all inputs at extreme magnitudes, depth
+        // at the bound — accumulate in i64 and verify it fits i32.
+        let depth = safe_accumulation_depth(8, 32);
+        let acc: i64 = (0..depth).map(|_| 127i64 * 127i64).sum();
+        assert!(acc <= i64::from(i32::MAX));
+    }
+
+    #[test]
+    fn random_walk_well_below_bound() {
+        // Statistical cancellation: random ±products accumulate ~sqrt(n).
+        let mut rng = Pcg32::seeded(99);
+        let depth = 2048usize;
+        let mut worst: i64 = 0;
+        for _ in 0..64 {
+            let mut acc: i64 = 0;
+            for _ in 0..depth {
+                let a = rng.range_i32(-127, 127) as i64;
+                let b = rng.range_i32(-128, 127) as i64;
+                acc += a * b;
+            }
+            worst = worst.max(acc.abs());
+        }
+        let bound = 127i64 * 128 * depth as i64;
+        assert!(worst < bound / 10, "worst {worst} vs bound {bound}");
+        let predicted = random_walk_std(127.0 * 128.0 / 3.0, depth as u64);
+        assert!((worst as f64) < predicted * 8.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Quantization parameter derivation (§3.1, §3.2.4).
+//!
+//! * weights `W`, `R`: **symmetric** int8, scale `max(|T|)/127`,
+//!   values in `[-127, 127]` (note: -128 is excluded so the product
+//!   with an int8 activation fits the int16 SIMD lanes);
+//! * peephole `P`, layer-norm `L`: **symmetric** int16, scale
+//!   `max(|T|)/32767`;
+//! * activations `x`, `h`, hidden `m`: **asymmetric** int8, scale
+//!   `(max - min)/255`, with min/max *nudged* so the float zero maps
+//!   exactly to an integer zero point [7];
+//! * biases: int32, scale tied to an upstream accumulator scale.
+
+use crate::tensor::Matrix;
+
+/// Symmetric quantization parameters: `real = q * scale`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SymmetricQuant {
+    pub scale: f64,
+}
+
+impl SymmetricQuant {
+    /// int8 weight rule from Table 2: `scale = max(|T|)/127`.
+    pub fn for_weights_i8(max_abs: f64) -> Self {
+        let max_abs = if max_abs > 0.0 { max_abs } else { 1.0 };
+        SymmetricQuant { scale: max_abs / 127.0 }
+    }
+
+    /// int16 rule from Table 2 (peephole, layer norm): `max(|T|)/32767`.
+    pub fn for_weights_i16(max_abs: f64) -> Self {
+        let max_abs = if max_abs > 0.0 { max_abs } else { 1.0 };
+        SymmetricQuant { scale: max_abs / 32767.0 }
+    }
+
+    /// Explicit scale (derived scales: biases, gate outputs, cell).
+    pub fn with_scale(scale: f64) -> Self {
+        SymmetricQuant { scale }
+    }
+
+    pub fn quantize_i8(&self, v: f64) -> i8 {
+        (v / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    pub fn quantize_i16(&self, v: f64) -> i16 {
+        (v / self.scale).round().clamp(-32767.0, 32767.0) as i16
+    }
+
+    pub fn quantize_i32(&self, v: f64) -> i32 {
+        (v / self.scale)
+            .round()
+            .clamp(-f64::from(i32::MAX), f64::from(i32::MAX)) as i32
+    }
+
+    pub fn dequantize(&self, q: i32) -> f64 {
+        f64::from(q) * self.scale
+    }
+}
+
+/// Asymmetric quantization parameters: `real = (q - zero_point) * scale`,
+/// stored int8. The kernel-facing convention in this library is
+/// `W (x + zp)` (§6), so `zp` here is `-zero_point` of the usual form;
+/// we keep the TFLite convention (`zero_point` subtracted on reads) and
+/// negate at the single call site that folds it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsymmetricQuant {
+    pub scale: f64,
+    pub zero_point: i32,
+}
+
+impl AsymmetricQuant {
+    /// The Table-2 activation rule: `scale = (max - min)/255` with
+    /// min/max lightly nudged so zero is exactly representable [7].
+    pub fn from_min_max(min: f64, max: f64) -> Self {
+        // Ensure the range includes zero (required for padding/zeroing
+        // semantics and for the nudge to make sense).
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        if min == max {
+            return AsymmetricQuant { scale: 1.0 / 255.0, zero_point: 0 };
+        }
+        let scale = (max - min) / 255.0;
+        // Nudge: pick the integer zero point closest to the real one.
+        let zp_real = -128.0 - min / scale;
+        let zero_point = zp_real.round().clamp(-128.0, 127.0) as i32;
+        AsymmetricQuant { scale, zero_point }
+    }
+
+    pub fn quantize(&self, v: f64) -> i8 {
+        ((v / self.scale).round() + f64::from(self.zero_point))
+            .clamp(-128.0, 127.0) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f64 {
+        (f64::from(q) - f64::from(self.zero_point)) * self.scale
+    }
+
+    /// Zero point to *add* to stored values to recover `v/scale`
+    /// (the `W (x + zp)` convention of §6 / fig 3).
+    pub fn folding_zp(&self) -> i32 {
+        -self.zero_point
+    }
+}
+
+/// Quantize a float matrix symmetrically to int8 (weights).
+pub fn quantize_symmetric_i8(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
+    let q = SymmetricQuant::for_weights_i8(f64::from(w.max_abs()));
+    (w.map(|v| q.quantize_i8(f64::from(v))), q)
+}
+
+/// Quantize a float vector symmetrically to int16 (peephole / LN).
+pub fn quantize_symmetric_i16(v: &[f32]) -> (Vec<i16>, SymmetricQuant) {
+    let max_abs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let q = SymmetricQuant::for_weights_i16(f64::from(max_abs));
+    (v.iter().map(|&x| q.quantize_i16(f64::from(x))).collect(), q)
+}
+
+/// Quantize a float vector asymmetrically to int8 (activations), given
+/// observed min/max.
+pub fn quantize_asymmetric_i8(v: &[f32], quant: AsymmetricQuant) -> Vec<i8> {
+    v.iter().map(|&x| quant.quantize(f64::from(x))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn symmetric_i8_rule() {
+        let q = SymmetricQuant::for_weights_i8(2.54);
+        assert!((q.scale - 0.02).abs() < 1e-9);
+        assert_eq!(q.quantize_i8(2.54), 127);
+        assert_eq!(q.quantize_i8(-2.54), -127);
+        assert_eq!(q.quantize_i8(-99.0), -127); // clamps, never -128
+        assert_eq!(q.quantize_i8(0.0), 0);
+    }
+
+    #[test]
+    fn symmetric_i16_rule() {
+        let q = SymmetricQuant::for_weights_i16(1.0);
+        assert_eq!(q.quantize_i16(1.0), 32767);
+        assert_eq!(q.quantize_i16(-1.0), -32767);
+    }
+
+    #[test]
+    fn asymmetric_zero_is_exact() {
+        proptest::check("zero-exactness", |rng| {
+            let min = rng.uniform(-10.0, 0.0);
+            let max = rng.uniform(0.001, 10.0);
+            let q = AsymmetricQuant::from_min_max(min, max);
+            // Quantizing 0.0 and dequantizing must give exactly 0.0.
+            let qz = q.quantize(0.0);
+            assert_eq!(f64::from(qz), f64::from(q.zero_point));
+            assert_eq!(q.dequantize(qz), 0.0);
+        });
+    }
+
+    #[test]
+    fn asymmetric_roundtrip_error_half_lsb() {
+        proptest::check("asym-roundtrip", |rng| {
+            let min = rng.uniform(-8.0, -0.1);
+            let max = rng.uniform(0.1, 8.0);
+            let q = AsymmetricQuant::from_min_max(min, max);
+            for _ in 0..16 {
+                let v = rng.uniform(min, max);
+                let r = q.dequantize(q.quantize(v));
+                // Nudging can cost up to ~1 LSB at the range edges.
+                assert!((r - v).abs() <= q.scale * 1.0 + 1e-12, "v={v} r={r}");
+            }
+        });
+    }
+
+    #[test]
+    fn degenerate_ranges() {
+        let q = AsymmetricQuant::from_min_max(0.0, 0.0);
+        assert_eq!(q.quantize(0.0), 0);
+        // All-positive range still includes zero.
+        let q = AsymmetricQuant::from_min_max(3.0, 5.0);
+        assert_eq!(q.quantize(0.0), q.zero_point as i8);
+        assert_eq!(q.zero_point, -128);
+    }
+
+    #[test]
+    fn matrix_quantization() {
+        let w = Matrix::from_vec(1, 4, vec![0.5f32, -1.0, 0.25, 1.0]);
+        let (qw, q) = quantize_symmetric_i8(&w);
+        assert_eq!(qw.data, vec![64, -127, 32, 127]);
+        assert!((q.scale - 1.0 / 127.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,423 @@
+//! The quantization recipe — a programmatic Table 2.
+//!
+//! For every tensor in every LSTM variant (layer norm × projection ×
+//! peephole, plus CIFG), this module answers: how many bits, which
+//! scale rule, and whether the tensor exists at all. The integer cell
+//! builder ([`crate::lstm::quantize`]) consumes it, tests assert it
+//! against the paper's table, and `benches/ablations.rs` prints it in
+//! the paper's layout (experiment E2).
+
+/// LSTM variant flags (the Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VariantFlags {
+    pub layer_norm: bool,
+    pub projection: bool,
+    pub peephole: bool,
+    pub cifg: bool,
+}
+
+impl VariantFlags {
+    pub const fn plain() -> Self {
+        VariantFlags { layer_norm: false, projection: false, peephole: false, cifg: false }
+    }
+
+    /// All 8 LN×Proj×PH combinations (CIFG off), Table 2's columns.
+    pub fn all_eight() -> Vec<VariantFlags> {
+        let mut out = Vec::new();
+        for &ln in &[false, true] {
+            for &proj in &[false, true] {
+                for &ph in &[false, true] {
+                    out.push(VariantFlags {
+                        layer_norm: ln,
+                        projection: proj,
+                        peephole: ph,
+                        cifg: false,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Short human-readable label, e.g. "LN+Proj" or "plain".
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.layer_norm {
+            parts.push("LN");
+        }
+        if self.projection {
+            parts.push("Proj");
+        }
+        if self.peephole {
+            parts.push("PH");
+        }
+        if self.cifg {
+            parts.push("CIFG");
+        }
+        if parts.is_empty() {
+            "plain".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// The tensors of Table 2 (gate-indexed roles carry the gate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorRole {
+    /// Input activation `x`.
+    Input,
+    /// Input weights `W_g`.
+    InputWeight(Gate),
+    /// Recurrent weights `R_g`.
+    RecurrentWeight(Gate),
+    /// Peephole weights `P_g` (no update-gate peephole).
+    Peephole(Gate),
+    /// Gate bias `b_g`.
+    Bias(Gate),
+    /// Projection weights `W_proj`.
+    ProjectionWeight,
+    /// Projection bias `b_proj`.
+    ProjectionBias,
+    /// Cell output / recurrent activation `h`.
+    Output,
+    /// Cell state `c`.
+    CellState,
+    /// Layer-norm coefficients `L_g`.
+    LayerNormWeight(Gate),
+    /// Gate matmul output `g_g = Wx + Rh + P⊙c` (LN variants only).
+    GateOutput(Gate),
+    /// Hidden state `m` (distinct from `h` only with projection).
+    Hidden,
+}
+
+/// The four LSTM gates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gate {
+    Input,
+    Forget,
+    Update,
+    Output,
+}
+
+impl Gate {
+    pub const ALL: [Gate; 4] = [Gate::Input, Gate::Forget, Gate::Update, Gate::Output];
+}
+
+/// Scale rule names matching Table 2's cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleRule {
+    /// `range / 255` — asymmetric int8 activations.
+    RangeOver255,
+    /// `max(|T|) / 127` — symmetric int8 weights.
+    MaxOver127,
+    /// `max(|T|) / 32767` — symmetric int16 tensors.
+    MaxOver32767,
+    /// `POT(max) / 32768` — power-of-two extended cell state.
+    PotMaxOver32768,
+    /// `s_h × s_R` — bias tied to the recurrent accumulator (no LN).
+    RecurrentAccum,
+    /// `s_L × 2^-10` — LN bias rule.
+    LayerNormBias,
+    /// `s_Wproj × s_m` — projection bias rule.
+    ProjectionAccum,
+    /// Tensor does not exist in this variant.
+    Absent,
+}
+
+/// One row of the recipe for a specific variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecipeEntry {
+    pub bits: u32,
+    pub rule: ScaleRule,
+}
+
+impl RecipeEntry {
+    const fn absent() -> Self {
+        RecipeEntry { bits: 0, rule: ScaleRule::Absent }
+    }
+
+    const fn present(bits: u32, rule: ScaleRule) -> Self {
+        RecipeEntry { bits, rule }
+    }
+
+    pub fn exists(&self) -> bool {
+        self.rule != ScaleRule::Absent
+    }
+}
+
+/// The recipe engine: Table 2 as a function.
+#[derive(Debug, Clone, Copy)]
+pub struct LstmRecipe {
+    pub flags: VariantFlags,
+}
+
+impl LstmRecipe {
+    pub fn new(flags: VariantFlags) -> Self {
+        LstmRecipe { flags }
+    }
+
+    /// Look up bits + scale rule for a tensor under this variant.
+    pub fn entry(&self, role: TensorRole) -> RecipeEntry {
+        use ScaleRule::*;
+        use TensorRole::*;
+        let f = self.flags;
+        match role {
+            Input => RecipeEntry::present(8, RangeOver255),
+            Output => RecipeEntry::present(8, RangeOver255),
+            CellState => RecipeEntry::present(16, PotMaxOver32768),
+            InputWeight(g) | RecurrentWeight(g) => {
+                // CIFG removes the input gate entirely (the † rows).
+                if f.cifg && g == Gate::Input {
+                    RecipeEntry::absent()
+                } else {
+                    RecipeEntry::present(8, MaxOver127)
+                }
+            }
+            Peephole(g) => {
+                if !f.peephole || g == Gate::Update || (f.cifg && g == Gate::Input) {
+                    RecipeEntry::absent()
+                } else {
+                    RecipeEntry::present(16, MaxOver32767)
+                }
+            }
+            Bias(g) => {
+                if f.cifg && g == Gate::Input {
+                    RecipeEntry::absent()
+                } else if f.layer_norm {
+                    RecipeEntry::present(32, LayerNormBias)
+                } else {
+                    RecipeEntry::present(32, RecurrentAccum)
+                }
+            }
+            LayerNormWeight(g) | GateOutput(g) => {
+                if !f.layer_norm || (f.cifg && g == Gate::Input) {
+                    RecipeEntry::absent()
+                } else {
+                    RecipeEntry::present(16, MaxOver32767)
+                }
+            }
+            ProjectionWeight => {
+                if f.projection {
+                    RecipeEntry::present(8, MaxOver127)
+                } else {
+                    RecipeEntry::absent()
+                }
+            }
+            ProjectionBias => {
+                if f.projection {
+                    RecipeEntry::present(32, ProjectionAccum)
+                } else {
+                    RecipeEntry::absent()
+                }
+            }
+            Hidden => {
+                if f.projection {
+                    RecipeEntry::present(8, RangeOver255)
+                } else {
+                    // Without projection the hidden state *is* the
+                    // output h (§2), no separate tensor.
+                    RecipeEntry::absent()
+                }
+            }
+        }
+    }
+
+    /// Model size in bytes for given dimensions under this recipe
+    /// (weights only — the Table 1 "Size(MB)" column driver).
+    pub fn weight_bytes(&self, n_input: usize, n_cell: usize, n_output: usize) -> usize {
+        let mut bytes = 0usize;
+        let gates: &[Gate] = if self.flags.cifg {
+            &[Gate::Forget, Gate::Update, Gate::Output]
+        } else {
+            &Gate::ALL
+        };
+        for &g in gates {
+            bytes += n_cell * n_input; // W_g int8
+            bytes += n_cell * n_output; // R_g int8
+            bytes += 4 * n_cell; // bias int32
+            if self.entry(TensorRole::Peephole(g)).exists() {
+                bytes += 2 * n_cell;
+            }
+            if self.entry(TensorRole::LayerNormWeight(g)).exists() {
+                bytes += 2 * n_cell + 4 * n_cell; // L int16 + LN bias int32
+            }
+        }
+        if self.flags.projection {
+            bytes += n_output * n_cell + 4 * n_output;
+        }
+        bytes
+    }
+
+    /// Float model size in bytes for the same dimensions (baseline).
+    pub fn float_weight_bytes(&self, n_input: usize, n_cell: usize, n_output: usize) -> usize {
+        let mut floats = 0usize;
+        let gates: &[Gate] = if self.flags.cifg {
+            &[Gate::Forget, Gate::Update, Gate::Output]
+        } else {
+            &Gate::ALL
+        };
+        for &g in gates {
+            floats += n_cell * n_input + n_cell * n_output + n_cell;
+            if self.entry(TensorRole::Peephole(g)).exists() {
+                floats += n_cell;
+            }
+            if self.entry(TensorRole::LayerNormWeight(g)).exists() {
+                floats += 2 * n_cell;
+            }
+        }
+        if self.flags.projection {
+            floats += n_output * n_cell + n_output;
+        }
+        floats * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_variants_enumerated() {
+        let all = VariantFlags::all_eight();
+        assert_eq!(all.len(), 8);
+        let unique: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(unique.len(), 8);
+    }
+
+    #[test]
+    fn table2_input_and_output_rows() {
+        // x and h are 8-bit range/255 in *every* variant.
+        for flags in VariantFlags::all_eight() {
+            let r = LstmRecipe::new(flags);
+            assert_eq!(
+                r.entry(TensorRole::Input),
+                RecipeEntry { bits: 8, rule: ScaleRule::RangeOver255 }
+            );
+            assert_eq!(
+                r.entry(TensorRole::Output),
+                RecipeEntry { bits: 8, rule: ScaleRule::RangeOver255 }
+            );
+            assert_eq!(
+                r.entry(TensorRole::CellState),
+                RecipeEntry { bits: 16, rule: ScaleRule::PotMaxOver32768 }
+            );
+        }
+    }
+
+    #[test]
+    fn table2_weight_rows() {
+        for flags in VariantFlags::all_eight() {
+            let r = LstmRecipe::new(flags);
+            for g in Gate::ALL {
+                assert_eq!(
+                    r.entry(TensorRole::InputWeight(g)),
+                    RecipeEntry { bits: 8, rule: ScaleRule::MaxOver127 }
+                );
+                assert_eq!(
+                    r.entry(TensorRole::RecurrentWeight(g)),
+                    RecipeEntry { bits: 8, rule: ScaleRule::MaxOver127 }
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table2_bias_rule_depends_on_ln() {
+        let no_ln = LstmRecipe::new(VariantFlags::plain());
+        let ln = LstmRecipe::new(VariantFlags { layer_norm: true, ..VariantFlags::plain() });
+        for g in Gate::ALL {
+            assert_eq!(no_ln.entry(TensorRole::Bias(g)).rule, ScaleRule::RecurrentAccum);
+            assert_eq!(ln.entry(TensorRole::Bias(g)).rule, ScaleRule::LayerNormBias);
+            assert_eq!(ln.entry(TensorRole::Bias(g)).bits, 32);
+        }
+    }
+
+    #[test]
+    fn table2_peephole_rows() {
+        let ph = LstmRecipe::new(VariantFlags { peephole: true, ..VariantFlags::plain() });
+        let no_ph = LstmRecipe::new(VariantFlags::plain());
+        for g in [Gate::Input, Gate::Forget, Gate::Output] {
+            assert_eq!(
+                ph.entry(TensorRole::Peephole(g)),
+                RecipeEntry { bits: 16, rule: ScaleRule::MaxOver32767 }
+            );
+            assert!(!no_ph.entry(TensorRole::Peephole(g)).exists());
+        }
+        // No update-gate peephole (fig 1: "Cell gate does not have P and c").
+        assert!(!ph.entry(TensorRole::Peephole(Gate::Update)).exists());
+    }
+
+    #[test]
+    fn table2_projection_and_hidden_rows() {
+        let proj = LstmRecipe::new(VariantFlags { projection: true, ..VariantFlags::plain() });
+        let no_proj = LstmRecipe::new(VariantFlags::plain());
+        assert_eq!(
+            proj.entry(TensorRole::ProjectionWeight),
+            RecipeEntry { bits: 8, rule: ScaleRule::MaxOver127 }
+        );
+        assert_eq!(proj.entry(TensorRole::ProjectionBias).rule, ScaleRule::ProjectionAccum);
+        assert_eq!(
+            proj.entry(TensorRole::Hidden),
+            RecipeEntry { bits: 8, rule: ScaleRule::RangeOver255 }
+        );
+        assert!(!no_proj.entry(TensorRole::ProjectionWeight).exists());
+        assert!(!no_proj.entry(TensorRole::Hidden).exists());
+    }
+
+    #[test]
+    fn table2_ln_rows() {
+        let ln = LstmRecipe::new(VariantFlags { layer_norm: true, ..VariantFlags::plain() });
+        let no_ln = LstmRecipe::new(VariantFlags::plain());
+        for g in Gate::ALL {
+            assert_eq!(
+                ln.entry(TensorRole::LayerNormWeight(g)),
+                RecipeEntry { bits: 16, rule: ScaleRule::MaxOver32767 }
+            );
+            assert_eq!(
+                ln.entry(TensorRole::GateOutput(g)),
+                RecipeEntry { bits: 16, rule: ScaleRule::MaxOver32767 }
+            );
+            assert!(!no_ln.entry(TensorRole::LayerNormWeight(g)).exists());
+            assert!(!no_ln.entry(TensorRole::GateOutput(g)).exists());
+        }
+    }
+
+    #[test]
+    fn cifg_invalidates_input_gate_rows() {
+        let cifg = LstmRecipe::new(VariantFlags {
+            cifg: true,
+            peephole: true,
+            layer_norm: true,
+            projection: false,
+        });
+        assert!(!cifg.entry(TensorRole::InputWeight(Gate::Input)).exists());
+        assert!(!cifg.entry(TensorRole::RecurrentWeight(Gate::Input)).exists());
+        assert!(!cifg.entry(TensorRole::Bias(Gate::Input)).exists());
+        assert!(!cifg.entry(TensorRole::Peephole(Gate::Input)).exists());
+        assert!(!cifg.entry(TensorRole::LayerNormWeight(Gate::Input)).exists());
+        // Forget gate rows stay valid.
+        assert!(cifg.entry(TensorRole::InputWeight(Gate::Forget)).exists());
+    }
+
+    #[test]
+    fn quantized_size_is_quarter_of_float() {
+        // Matmul weights dominate, so int8 ≈ 1/4 of float (Table 1's
+        // 466MB -> 117MB is ~3.98x).
+        let r = LstmRecipe::new(VariantFlags::plain());
+        let q = r.weight_bytes(512, 2048, 2048);
+        let f = r.float_weight_bytes(512, 2048, 2048);
+        let ratio = f as f64 / q as f64;
+        assert!((3.5..=4.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn cifg_size_is_three_quarters_of_lstm() {
+        let lstm = LstmRecipe::new(VariantFlags::plain());
+        let cifg = LstmRecipe::new(VariantFlags { cifg: true, ..VariantFlags::plain() });
+        let a = lstm.weight_bytes(512, 2048, 2048);
+        let b = cifg.weight_bytes(512, 2048, 2048);
+        let ratio = b as f64 / a as f64;
+        assert!((0.74..=0.76).contains(&ratio), "ratio {ratio}");
+    }
+}

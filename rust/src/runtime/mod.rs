@@ -1,0 +1,7 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and
+//! execute them from the serving path.
+
+pub mod pjrt;
+
+pub use pjrt::{CharLmRuntime, HloExecutable};

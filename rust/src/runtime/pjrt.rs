@@ -1,0 +1,122 @@
+//! Thin wrapper over the `xla` crate (PJRT C API): HLO text →
+//! `HloModuleProto` → compile → execute. The interchange is HLO *text*
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects (see DESIGN.md / aot.py).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// A compiled HLO module plus its client.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl HloExecutable {
+    /// Load + compile an HLO text artifact on a shared CPU client.
+    pub fn load(client: &xla::PjRtClient, path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(HloExecutable { exe, path: path.display().to_string() })
+    }
+
+    /// Execute with literal inputs; returns the flattened result tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling: {e}"))
+    }
+}
+
+/// 2-D f32 literal from a row-major slice.
+pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    ensure!(data.len() == rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Extract an f32 vec from a literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+}
+
+/// The char-LM float serving runtime: the `model_b{B}.hlo.txt` artifact
+/// executing one step for a fixed batch size.
+///
+/// Signature (from aot.py): `(x_onehot [B,V], c0, h0, c1, h1, ...) ->
+/// (logits [B,V], c0', h0', c1', h1', ...)`.
+pub struct CharLmRuntime {
+    exe: HloExecutable,
+    pub batch: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub depth: usize,
+}
+
+/// Device-side state for one batch slot group.
+pub struct RuntimeState {
+    /// `[depth][2]` state tensors, each `[batch, hidden]` row-major.
+    pub flat: Vec<Vec<f32>>,
+}
+
+impl CharLmRuntime {
+    pub fn load(
+        client: &xla::PjRtClient,
+        artifacts_dir: impl AsRef<Path>,
+        batch: usize,
+        vocab: usize,
+        hidden: usize,
+        depth: usize,
+    ) -> Result<Self> {
+        let path = artifacts_dir
+            .as_ref()
+            .join(format!("model_b{batch}.hlo.txt"));
+        let exe = HloExecutable::load(client, path)?;
+        Ok(CharLmRuntime { exe, batch, vocab, hidden, depth })
+    }
+
+    pub fn zero_state(&self) -> RuntimeState {
+        RuntimeState {
+            flat: (0..2 * self.depth)
+                .map(|_| vec![0f32; self.batch * self.hidden])
+                .collect(),
+        }
+    }
+
+    /// One step: `x` is `[batch * vocab]` one-hot rows; returns logits
+    /// `[batch * vocab]` and updates `state` in place.
+    pub fn step(&self, x: &[f32], state: &mut RuntimeState) -> Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(1 + 2 * self.depth);
+        inputs.push(literal_f32_2d(x, self.batch, self.vocab)?);
+        for s in &state.flat {
+            inputs.push(literal_f32_2d(s, self.batch, self.hidden)?);
+        }
+        let outputs = self.exe.run(&inputs)?;
+        ensure!(
+            outputs.len() == 1 + 2 * self.depth,
+            "expected {} outputs, got {}",
+            1 + 2 * self.depth,
+            outputs.len()
+        );
+        let logits = literal_to_f32(&outputs[0])?;
+        for (i, out) in outputs.iter().skip(1).enumerate() {
+            state.flat[i] = literal_to_f32(out)?;
+        }
+        Ok(logits)
+    }
+}

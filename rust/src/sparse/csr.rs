@@ -1,0 +1,151 @@
+//! Compressed sparse row storage for int8 weights, with a sparse
+//! integer matvec kernel and byte-size accounting (the Table 1 size
+//! column for the sparse rows).
+
+use crate::tensor::Matrix;
+
+/// CSR int8 matrix: per-row column indices + values.
+#[derive(Debug, Clone)]
+pub struct SparseMatrixI8 {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row start offsets into `col_idx`/`values`, length `rows + 1`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u16>,
+    pub values: Vec<i8>,
+}
+
+impl SparseMatrixI8 {
+    /// Compress a dense int8 matrix (zeros dropped).
+    pub fn from_dense(w: &Matrix<i8>) -> Self {
+        assert!(w.cols <= u16::MAX as usize + 1, "cols exceed u16 index");
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..w.rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                if v != 0 {
+                    col_idx.push(c as u16);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        SparseMatrixI8 { rows: w.rows, cols: w.cols, row_ptr, col_idx, values }
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes: values (1B) + indices (2B) + row pointers (4B).
+    pub fn storage_bytes(&self) -> usize {
+        self.values.len() + 2 * self.col_idx.len() + 4 * self.row_ptr.len()
+    }
+
+    /// Sparse `out[r] = folded_bias[r] + Σ w[r,c] x[c]` over non-zeros.
+    pub fn matvec_i32(&self, x: &[i8], folded_bias: &[i32], out: &mut [i32]) {
+        assert_eq!(self.cols, x.len());
+        assert_eq!(self.rows, out.len());
+        for r in 0..self.rows {
+            let start = self.row_ptr[r] as usize;
+            let end = self.row_ptr[r + 1] as usize;
+            let mut acc = 0i32;
+            for i in start..end {
+                acc += i32::from(self.values[i])
+                    * i32::from(x[self.col_idx[i] as usize]);
+            }
+            out[r] = acc + folded_bias.get(r).copied().unwrap_or(0);
+        }
+    }
+
+    /// Decompress back to dense (tests).
+    pub fn to_dense(&self) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                w.set(r, self.col_idx[i] as usize, self.values[i]);
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::qmatmul::matvec_i8_i32;
+    use crate::util::{proptest, Pcg32};
+
+    fn random_sparse_dense(rng: &mut Pcg32, rows: usize, cols: usize) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(rows, cols);
+        for v in &mut w.data {
+            if rng.next_f64() < 0.5 {
+                *v = rng.range_i32(-127, 127) as i8;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn roundtrip_dense_sparse_dense() {
+        proptest::check("csr-roundtrip", |rng| {
+            let rows = 1 + rng.below(16) as usize;
+            let cols = 1 + rng.below(48) as usize;
+            let w = random_sparse_dense(rng, rows, cols);
+            let s = SparseMatrixI8::from_dense(&w);
+            assert_eq!(s.to_dense(), w);
+        });
+    }
+
+    #[test]
+    fn sparse_matvec_matches_dense() {
+        proptest::check("csr-matvec", |rng| {
+            let rows = 1 + rng.below(16) as usize;
+            let cols = 1 + rng.below(48) as usize;
+            let w = random_sparse_dense(rng, rows, cols);
+            let x: Vec<i8> =
+                (0..cols).map(|_| rng.range_i32(-128, 127) as i8).collect();
+            let bias: Vec<i32> =
+                (0..rows).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let s = SparseMatrixI8::from_dense(&w);
+            let mut dense_out = vec![0i32; rows];
+            let mut sparse_out = vec![0i32; rows];
+            matvec_i8_i32(&w, &x, &bias, &mut dense_out);
+            s.matvec_i32(&x, &bias, &mut sparse_out);
+            assert_eq!(dense_out, sparse_out);
+        });
+    }
+
+    #[test]
+    fn storage_shrinks_at_50_percent() {
+        let mut rng = Pcg32::seeded(12);
+        let w = random_sparse_dense(&mut rng, 128, 128);
+        let s = SparseMatrixI8::from_dense(&w);
+        let dense_bytes = 128 * 128;
+        // ~50% nnz at 3 bytes/nnz: CSR only wins for int8 below ~33%
+        // density; at 50% it is larger — which is exactly why the paper
+        // reports sparse-model sizes with *packed* formats. We assert
+        // the accounting is sane rather than a win:
+        assert!(s.nnz() < dense_bytes);
+        assert_eq!(
+            s.storage_bytes(),
+            s.nnz() * 3 + 4 * (128 + 1)
+        );
+    }
+
+    #[test]
+    fn empty_and_full_rows() {
+        let mut w = Matrix::<i8>::zeros(3, 4);
+        w.set(1, 0, 5);
+        w.set(1, 3, -5);
+        let s = SparseMatrixI8::from_dense(&w);
+        assert_eq!(s.nnz(), 2);
+        let x = vec![1i8, 2, 3, 4];
+        let mut out = vec![0i32; 3];
+        s.matvec_i32(&x, &[], &mut out);
+        assert_eq!(out, vec![0, 5 - 20, 0]);
+    }
+}

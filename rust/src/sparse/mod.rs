@@ -1,0 +1,12 @@
+//! Sparsity support for the Table 1 "Sparse LSTM" / "Sparse CIFG" rows.
+//!
+//! The paper evaluates 50%-sparse production models. We reproduce the
+//! mechanism: magnitude pruning to a target sparsity ([`prune`]) and a
+//! compressed block-row storage with a sparse int8 kernel ([`csr`]) so
+//! the size *and* speed implications of sparsity are measurable.
+
+pub mod csr;
+pub mod prune;
+
+pub use csr::SparseMatrixI8;
+pub use prune::{prune_magnitude, sparsity_of};

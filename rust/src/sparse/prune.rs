@@ -1,0 +1,127 @@
+//! Magnitude pruning: zero the smallest-magnitude fraction of weights.
+//!
+//! The paper's sparse models come from production pruning pipelines; we
+//! reproduce the standard magnitude criterion, optionally in blocks of
+//! 4 along the row (the shape ARM/TFLite sparse kernels exploit).
+
+use crate::tensor::Matrix;
+
+/// Zero the smallest-|w| `sparsity` fraction of entries (per-matrix
+/// global threshold). `sparsity` in `[0, 1]`.
+pub fn prune_magnitude(w: &mut Matrix<f32>, sparsity: f64) {
+    assert!((0.0..=1.0).contains(&sparsity));
+    if sparsity == 0.0 || w.is_empty() {
+        return;
+    }
+    let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((w.len() as f64) * sparsity).round() as usize;
+    if k == 0 {
+        return;
+    }
+    let threshold = mags[(k - 1).min(mags.len() - 1)];
+    let mut zeroed = 0usize;
+    for v in &mut w.data {
+        if v.abs() <= threshold && zeroed < k {
+            *v = 0.0;
+            zeroed += 1;
+        }
+    }
+}
+
+/// Block-of-4 magnitude pruning along rows: whole 4-wide blocks are
+/// kept or zeroed by their L1 norm, matching sparse-kernel-friendly
+/// structure.
+pub fn prune_magnitude_block4(w: &mut Matrix<f32>, sparsity: f64) {
+    assert!((0.0..=1.0).contains(&sparsity));
+    assert_eq!(w.cols % 4, 0, "block pruning needs cols % 4 == 0");
+    if sparsity == 0.0 || w.is_empty() {
+        return;
+    }
+    let blocks = w.len() / 4;
+    let mut norms: Vec<(f32, usize)> = (0..blocks)
+        .map(|b| {
+            let s: f32 = w.data[b * 4..b * 4 + 4].iter().map(|v| v.abs()).sum();
+            (s, b)
+        })
+        .collect();
+    norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let k = ((blocks as f64) * sparsity).round() as usize;
+    for &(_, b) in norms.iter().take(k) {
+        for v in &mut w.data[b * 4..b * 4 + 4] {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Fraction of exactly-zero entries.
+pub fn sparsity_of(w: &Matrix<f32>) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    let zeros = w.data.iter().filter(|v| **v == 0.0).count();
+    zeros as f64 / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_matrix(seed: u64, rows: usize, cols: usize) -> Matrix<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut w = Matrix::<f32>::zeros(rows, cols);
+        for v in &mut w.data {
+            *v = rng.normal_f32(0.0, 1.0);
+            if *v == 0.0 {
+                *v = 0.5;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn prunes_to_requested_sparsity() {
+        let mut w = random_matrix(1, 64, 64);
+        prune_magnitude(&mut w, 0.5);
+        let s = sparsity_of(&w);
+        assert!((s - 0.5).abs() < 0.01, "sparsity {s}");
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut w = Matrix::from_vec(1, 4, vec![0.1f32, -5.0, 0.2, 3.0]);
+        prune_magnitude(&mut w, 0.5);
+        assert_eq!(w.data, vec![0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn zero_sparsity_is_noop() {
+        let mut w = random_matrix(2, 8, 8);
+        let before = w.clone();
+        prune_magnitude(&mut w, 0.0);
+        assert_eq!(w, before);
+    }
+
+    #[test]
+    fn block4_prunes_whole_blocks() {
+        let mut w = random_matrix(3, 16, 64);
+        prune_magnitude_block4(&mut w, 0.5);
+        let s = sparsity_of(&w);
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+        // Every 4-block is all-zero or all-nonzero-ish (block either
+        // survived intact or was zeroed).
+        for b in 0..w.len() / 4 {
+            let blk = &w.data[b * 4..b * 4 + 4];
+            let zeros = blk.iter().filter(|v| **v == 0.0).count();
+            assert!(zeros == 0 || zeros == 4, "partial block {blk:?}");
+        }
+    }
+
+    #[test]
+    fn full_sparsity_zeroes_everything() {
+        let mut w = random_matrix(4, 8, 8);
+        prune_magnitude(&mut w, 1.0);
+        assert_eq!(sparsity_of(&w), 1.0);
+    }
+}

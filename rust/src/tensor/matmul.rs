@@ -1,0 +1,103 @@
+//! Float matrix kernels — the float baseline of Table 1 and the
+//! substrate for calibration.
+
+use super::dense::Matrix;
+
+/// `out[r] = Σ_c w[r,c] * x[c]` — float matrix-vector product.
+pub fn matvec_f32(w: &Matrix<f32>, x: &[f32], out: &mut [f32]) {
+    assert_eq!(w.cols, x.len());
+    assert_eq!(w.rows, out.len());
+    // 4-way unrolled accumulation: keeps the float baseline honest so
+    // the Table-1 speed ratios are not inflated by a strawman.
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = w.row(r);
+        let mut acc0 = 0f32;
+        let mut acc1 = 0f32;
+        let mut acc2 = 0f32;
+        let mut acc3 = 0f32;
+        let chunks = x.len() / 4 * 4;
+        let mut c = 0;
+        while c < chunks {
+            acc0 += row[c] * x[c];
+            acc1 += row[c + 1] * x[c + 1];
+            acc2 += row[c + 2] * x[c + 2];
+            acc3 += row[c + 3] * x[c + 3];
+            c += 4;
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for i in chunks..x.len() {
+            acc += row[i] * x[i];
+        }
+        *o = acc;
+    }
+}
+
+/// `out = a @ b` for row-major matrices.
+pub fn matmul_f32(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(r, k);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let orow = out.row_mut(r);
+            for c in 0..b.cols {
+                orow[c] += av * brow[c];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn matvec_small_known() {
+        let w = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0, 0.5, -1.0];
+        let mut out = [0.0; 2];
+        matvec_f32(&w, &x, &mut out);
+        assert_eq!(out, [-1.0, 0.5]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(5);
+        let mut a = Matrix::<f32>::zeros(7, 5);
+        let mut b = Matrix::<f32>::zeros(5, 9);
+        rng.fill_uniform_f32(&mut a.data, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut b.data, -1.0, 1.0);
+        let got = matmul_f32(&a, &b);
+        for r in 0..7 {
+            for c in 0..9 {
+                let mut want = 0f32;
+                for k in 0..5 {
+                    want += a.at(r, k) * b.at(k, c);
+                }
+                assert!((got.at(r, c) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::seeded(6);
+        let mut w = Matrix::<f32>::zeros(11, 13);
+        rng.fill_uniform_f32(&mut w.data, -2.0, 2.0);
+        let mut x = vec![0f32; 13];
+        rng.fill_uniform_f32(&mut x, -2.0, 2.0);
+        let xm = Matrix::from_vec(13, 1, x.clone());
+        let want = matmul_f32(&w, &xm);
+        let mut got = vec![0f32; 11];
+        matvec_f32(&w, &x, &mut got);
+        for r in 0..11 {
+            assert!((got[r] - want.at(r, 0)).abs() < 1e-4);
+        }
+    }
+}

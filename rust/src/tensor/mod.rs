@@ -1,0 +1,14 @@
+//! Dense tensors and the matrix-multiply kernels of the inference path.
+//!
+//! Matrix multiplication is the paper's "basic operation" (§3.1.1): the
+//! quantized path is int8 × int8 → int32 with the zero-point
+//! contribution folded into the bias offline (§6), so the inner loop is
+//! a pure symmetric integer dot product.
+
+pub mod dense;
+pub mod matmul;
+pub mod qmatmul;
+
+pub use dense::Matrix;
+pub use matmul::{matvec_f32, matmul_f32};
+pub use qmatmul::{fold_zero_point, matvec_i8_i32, matvec_i8_i32_batch};

@@ -1,0 +1,9 @@
+//! Small dependency-free utilities: deterministic RNG, timing, and a
+//! minimal property-testing helper used across the test suite.
+
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use timer::Stopwatch;

@@ -1,0 +1,57 @@
+//! A minimal property-testing harness (the `proptest` crate is not
+//! available offline).
+//!
+//! [`run_cases`] drives a closure with a deterministic RNG for N cases;
+//! on failure it reports the case index and seed so the exact failing
+//! input can be reproduced by rerunning with that seed.
+
+use super::rng::Pcg32;
+
+/// Number of cases property tests run by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `property` for `cases` deterministic cases. The property
+/// receives a per-case RNG; panic (assert) to signal failure.
+pub fn run_cases(name: &str, cases: usize, mut property: impl FnMut(&mut Pcg32)) {
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64
+            .wrapping_mul(case as u64 + 1)
+            ^ (name.len() as u64).rotate_left(17);
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Shorthand with the default case count.
+pub fn check(name: &str, property: impl FnMut(&mut Pcg32)) {
+    run_cases(name, DEFAULT_CASES, property);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u32-below", |rng| {
+            let n = 1 + rng.below(100);
+            assert!(rng.below(n) < n);
+        });
+    }
+
+    #[test]
+    fn reports_failure_case() {
+        let result = std::panic::catch_unwind(|| {
+            run_cases("always-fails", 3, |_| panic!("boom"));
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal timing utilities for the benchmark harnesses.
+//!
+//! Criterion is not available in the offline environment, so the
+//! `benches/` binaries use this stopwatch: warmup, repeated timed runs,
+//! and simple robust statistics (median + median absolute deviation).
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch that collects per-iteration wall-clock samples.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    samples: Vec<Duration>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one invocation of `f` and record the sample.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.samples.push(start.elapsed());
+        out
+    }
+
+    pub fn samples(&self) -> &[Duration] {
+        &self.samples
+    }
+
+    /// Median of the recorded samples in seconds.
+    pub fn median_secs(&self) -> f64 {
+        let mut s: Vec<f64> = self.samples.iter().map(Duration::as_secs_f64).collect();
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 { (s[mid - 1] + s[mid]) / 2.0 } else { s[mid] }
+    }
+
+    /// Median absolute deviation in seconds.
+    pub fn mad_secs(&self) -> f64 {
+        let med = self.median_secs();
+        let mut dev: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - med).abs())
+            .collect();
+        if dev.is_empty() {
+            return f64::NAN;
+        }
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = dev.len() / 2;
+        if dev.len() % 2 == 0 { (dev[mid - 1] + dev[mid]) / 2.0 } else { dev[mid] }
+    }
+
+    /// Total time across samples in seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.samples.iter().map(Duration::as_secs_f64).sum()
+    }
+}
+
+/// Run `f` for `warmup` unrecorded iterations then `iters` timed ones;
+/// returns the stopwatch. `black_box` the result inside `f` yourself if
+/// needed (use [`std::hint::black_box`]).
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stopwatch {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut sw = Stopwatch::new();
+    for _ in 0..iters {
+        sw.time(|| std::hint::black_box(f()));
+    }
+    sw
+}
+
+/// Format a duration-in-seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_statistics() {
+        let sw = bench(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(sw.samples().len(), 9);
+        assert!(sw.median_secs() > 0.0);
+        assert!(sw.mad_secs() >= 0.0);
+        assert!(sw.total_secs() >= sw.median_secs());
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" us"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,169 @@
+//! Evaluation sets carved from the corpus artifact — the analogs of the
+//! paper's three benchmark datasets (§5):
+//!
+//! * **Short** (VoiceSearch analog): many short utterances;
+//! * **Long** (YouTube analog): few very long utterances — this is the
+//!   robustness test, since quantization error can accumulate over
+//!   time;
+//! * **Noisy** (Telephony analog): short utterances with character
+//!   corruption, stressing out-of-calibration inputs.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::lm::{tokenize, VOCAB};
+use crate::util::Pcg32;
+
+/// One evaluation set: token sequences + a label.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub name: &'static str,
+    pub sequences: Vec<Vec<usize>>,
+}
+
+impl EvalSet {
+    pub fn total_tokens(&self) -> usize {
+        self.sequences.iter().map(Vec::len).sum()
+    }
+}
+
+/// Slice the held-out tail of the corpus into the three eval sets.
+///
+/// The first `train_frac` of the corpus was seen by the trainer; eval
+/// sets use only the tail.
+pub fn load_eval_sets(
+    corpus_path: impl AsRef<Path>,
+    short_count: usize,
+    short_len: usize,
+    long_count: usize,
+    long_len: usize,
+    noise_rate: f64,
+    seed: u64,
+) -> Result<Vec<EvalSet>> {
+    let text = std::fs::read_to_string(corpus_path.as_ref())
+        .with_context(|| format!("reading {}", corpus_path.as_ref().display()))?;
+    let tokens = tokenize(&text);
+    // Hold out the last 20% (the trainer samples uniformly, so this is
+    // only approximately unseen; quality deltas are still meaningful
+    // because all three engines see identical data).
+    let tail = &tokens[tokens.len() * 4 / 5..];
+    ensure!(
+        tail.len() > long_len + short_len,
+        "corpus too small for requested eval sets"
+    );
+    let mut rng = Pcg32::seeded(seed);
+
+    let sample = |rng: &mut Pcg32, count: usize, len: usize| -> Vec<Vec<usize>> {
+        (0..count)
+            .map(|_| {
+                let start = rng.below((tail.len() - len) as u32) as usize;
+                tail[start..start + len].to_vec()
+            })
+            .collect()
+    };
+
+    let short = sample(&mut rng, short_count, short_len);
+    let long = sample(&mut rng, long_count, long_len);
+    let mut noisy = sample(&mut rng, short_count, short_len);
+    for seq in &mut noisy {
+        for t in seq.iter_mut() {
+            if rng.next_f64() < noise_rate {
+                *t = rng.below(VOCAB as u32) as usize;
+            }
+        }
+    }
+
+    Ok(vec![
+        EvalSet { name: "Short", sequences: short },
+        EvalSet { name: "Long", sequences: long },
+        EvalSet { name: "Noisy", sequences: noisy },
+    ])
+}
+
+/// Calibration sequences (§4): a small sample from the *training*
+/// region, as post-training quantization would use in practice. The
+/// paper finds ~100 utterances suffice.
+pub fn calibration_sequences(
+    corpus_path: impl AsRef<Path>,
+    count: usize,
+    len: usize,
+    seed: u64,
+) -> Result<Vec<Vec<usize>>> {
+    let text = std::fs::read_to_string(corpus_path.as_ref())?;
+    let tokens = tokenize(&text);
+    let head = &tokens[..tokens.len() * 4 / 5];
+    ensure!(head.len() > len + 1, "corpus too small");
+    let mut rng = Pcg32::seeded(seed);
+    Ok((0..count)
+        .map(|_| {
+            let start = rng.below((head.len() - len) as u32) as usize;
+            head[start..start + len].to_vec()
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn eval_sets_from_synthetic_corpus() {
+        let dir = std::env::temp_dir().join("iqrnn_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        let mut text = String::new();
+        for i in 0..3000 {
+            text.push_str(&format!("sentence number {i} about kernels. "));
+        }
+        f.write_all(text.as_bytes()).unwrap();
+        drop(f);
+
+        let sets = load_eval_sets(&path, 10, 64, 2, 1000, 0.05, 42).unwrap();
+        assert_eq!(sets.len(), 3);
+        assert_eq!(sets[0].name, "Short");
+        assert_eq!(sets[0].sequences.len(), 10);
+        assert_eq!(sets[0].sequences[0].len(), 64);
+        assert_eq!(sets[1].sequences[0].len(), 1000);
+        assert!(sets.iter().all(|s| s
+            .sequences
+            .iter()
+            .flatten()
+            .all(|&t| t < VOCAB)));
+
+        let calib = calibration_sequences(&path, 5, 32, 1).unwrap();
+        assert_eq!(calib.len(), 5);
+        assert_eq!(calib[0].len(), 32);
+
+        // Deterministic for a fixed seed.
+        let sets2 = load_eval_sets(&path, 10, 64, 2, 1000, 0.05, 42).unwrap();
+        assert_eq!(sets[0].sequences, sets2[0].sequences);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn noisy_set_differs_from_short() {
+        let dir = std::env::temp_dir().join("iqrnn_corpus_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.txt");
+        std::fs::write(&path, "abcdefgh ".repeat(2000)).unwrap();
+        let sets = load_eval_sets(&path, 4, 128, 1, 500, 0.2, 7).unwrap();
+        // With 20% corruption the noisy set should differ from clean
+        // resamples in a noticeable fraction of positions.
+        let noisy = &sets[2].sequences;
+        let mut diffs = 0usize;
+        let mut total = 0usize;
+        for seq in noisy {
+            for w in seq.windows(2) {
+                total += 1;
+                if w[0] != w[1] {
+                    diffs += 1;
+                }
+            }
+        }
+        assert!(diffs * 10 > total, "noise did not perturb the stream");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation: the three evaluation "datasets" of the Table-1
+//! analog (DESIGN.md §3 substitutions) and synthetic streaming traffic
+//! for the serving experiments.
+
+pub mod corpus;
+pub mod synth;
+
+pub use corpus::{EvalSet, load_eval_sets};
+pub use synth::{RequestTrace, TraceRequest};

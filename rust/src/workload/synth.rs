@@ -1,0 +1,88 @@
+//! Synthetic streaming request traces for the serving experiments
+//! (E4/E10): Poisson arrivals of variable-length utterances, shaped
+//! like the paper's speech traffic (VoiceSearch-like short requests,
+//! occasional YouTube-like long streams).
+
+use crate::util::Pcg32;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival offset from trace start, in milliseconds.
+    pub arrival_ms: f64,
+    /// Token sequence to stream through the model.
+    pub tokens: Vec<usize>,
+}
+
+/// A generated trace.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl RequestTrace {
+    /// Poisson arrivals at `rate_per_s`, length distribution: 90% short
+    /// (geometric around `mean_len`), 10% long (4x), token alphabet
+    /// `vocab`.
+    pub fn generate(
+        count: usize,
+        rate_per_s: f64,
+        mean_len: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let mut t_ms = 0f64;
+        let mut requests = Vec::with_capacity(count);
+        for id in 0..count {
+            // Exponential inter-arrival.
+            let u = rng.next_f64().max(1e-12);
+            t_ms += -u.ln() / rate_per_s * 1000.0;
+            let long = rng.next_f64() < 0.1;
+            let base = if long { mean_len * 4 } else { mean_len };
+            let len = (base as f64 * (0.5 + rng.next_f64())).round().max(2.0) as usize;
+            let tokens = (0..len).map(|_| rng.below(vocab as u32) as usize).collect();
+            requests.push(TraceRequest { id: id as u64, arrival_ms: t_ms, tokens });
+        }
+        RequestTrace { requests }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens.len()).sum()
+    }
+
+    /// Duration from first to last arrival, seconds.
+    pub fn span_secs(&self) -> f64 {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(a), Some(b)) => (b.arrival_ms - a.arrival_ms) / 1000.0,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shape() {
+        let trace = RequestTrace::generate(200, 50.0, 40, 96, 1);
+        assert_eq!(trace.requests.len(), 200);
+        assert!(trace.requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        assert!(trace.requests.iter().all(|r| r.tokens.iter().all(|&t| t < 96)));
+        assert!(trace.total_tokens() > 200 * 10);
+        // Mean arrival rate roughly matches.
+        let span = trace.span_secs();
+        let rate = 200.0 / span;
+        assert!((20.0..120.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = RequestTrace::generate(50, 10.0, 20, 96, 7);
+        let b = RequestTrace::generate(50, 10.0, 20, 96, 7);
+        assert_eq!(a.requests.len(), b.requests.len());
+        assert_eq!(a.requests[17].tokens, b.requests[17].tokens);
+    }
+}

@@ -1,0 +1,108 @@
+//! Cross-layer golden test: the Rust integer cell must be
+//! **bit-identical** to the L1/L2 python implementation.
+//!
+//! `python -m compile.aot` quantizes a seeded model with the python
+//! quantizer (which mirrors Table 2), runs the pure-jnp reference —
+//! itself asserted equal to the Pallas kernel by pytest — for several
+//! recurrent steps, and dumps parameters + trajectory to
+//! `artifacts/golden_qstep.bin`. This test reconstructs the Rust
+//! `IntegerLstm` from those exact integer parameters and replays the
+//! trajectory.
+
+use iqrnn::fixedpoint::Rescale;
+use iqrnn::lstm::integer_cell::{IntegerGate, IntegerLstm, IntegerState, WeightMat};
+use iqrnn::lstm::LstmSpec;
+use iqrnn::model::weights::TensorFile;
+use iqrnn::tensor::Matrix;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn rescale_of(tf: &TensorFile, name: &str) -> Rescale {
+    let v = tf.get(name).unwrap().as_i32().unwrap();
+    Rescale { multiplier: v[0], shift: v[1] }
+}
+
+#[test]
+fn rust_integer_cell_matches_python_golden() {
+    let path = artifacts_dir().join("golden_qstep.bin");
+    if !path.exists() {
+        eprintln!("skipping: {} not built (run `make artifacts`)", path.display());
+        return;
+    }
+    let tf = TensorFile::load(&path).unwrap();
+    let dims = tf.get("meta.dims").unwrap().as_i32().unwrap();
+    let (n_input, n_cell, n_output) =
+        (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+    let cell_ib = tf.get("meta.cell_ib").unwrap().as_i32().unwrap()[0] as u32;
+    let cifg = tf.get("meta.cifg").unwrap().as_i32().unwrap()[0] != 0;
+    let zp = tf.get("meta.zp").unwrap().as_i32().unwrap();
+    let eff_hidden = rescale_of(&tf, "meta.eff_hidden");
+
+    let mut spec = LstmSpec::plain(n_input, n_cell);
+    assert_eq!(n_output, n_cell, "golden model has no projection");
+    spec.flags.peephole = true;
+    if cifg {
+        spec.flags.cifg = true;
+    }
+
+    let gate = |name: &str| -> Option<IntegerGate> {
+        tf.get(&format!("gate.{name}.w")).ok()?;
+        let w = tf.get(&format!("gate.{name}.w")).unwrap();
+        let r = tf.get(&format!("gate.{name}.r")).unwrap();
+        let peephole = tf
+            .get(&format!("gate.{name}.peephole"))
+            .ok()
+            .map(|p| (p.as_i16().unwrap(), rescale_of(&tf, &format!("gate.{name}.eff_c"))));
+        Some(IntegerGate {
+            w: WeightMat::Dense(Matrix::from_vec(n_cell, n_input, w.as_i8().unwrap())),
+            r: WeightMat::Dense(Matrix::from_vec(n_cell, n_output, r.as_i8().unwrap())),
+            w_bias: tf.get(&format!("gate.{name}.w_bias")).unwrap().as_i32().unwrap(),
+            r_bias: tf.get(&format!("gate.{name}.r_bias")).unwrap().as_i32().unwrap(),
+            eff_x: rescale_of(&tf, &format!("gate.{name}.eff_x")),
+            eff_h: rescale_of(&tf, &format!("gate.{name}.eff_h")),
+            peephole,
+            ln: None,
+        })
+    };
+    let gates = [gate("i"), gate("f"), gate("z"), gate("o")];
+    assert!(gates[1].is_some() && gates[2].is_some() && gates[3].is_some());
+
+    let lstm = IntegerLstm::from_raw_parts(
+        spec, gates, zp[0], zp[1], zp[2], eff_hidden, cell_ib, None,
+    );
+
+    // Replay the golden trajectory.
+    let qx = tf.get("golden.qx").unwrap();
+    let steps = qx.shape[0];
+    let batch = qx.shape[1];
+    let qx_data = qx.as_i8().unwrap();
+    let c0 = tf.get("golden.c0").unwrap().as_i16().unwrap();
+    let h0 = tf.get("golden.h0").unwrap().as_i8().unwrap();
+    let c_out = tf.get("golden.c_out").unwrap().as_i16().unwrap();
+    let h_out = tf.get("golden.h_out").unwrap().as_i8().unwrap();
+
+    // Per batch row: rust steps one sequence at a time.
+    for b in 0..batch {
+        let mut state = IntegerState {
+            c: c0[b * n_cell..(b + 1) * n_cell].to_vec(),
+            h: h0[b * n_output..(b + 1) * n_output].to_vec(),
+        };
+        for t in 0..steps {
+            let x = &qx_data[(t * batch + b) * n_input..(t * batch + b + 1) * n_input];
+            lstm.step_q(x, &mut state);
+            let want_c = &c_out[(t * batch + b) * n_cell..(t * batch + b + 1) * n_cell];
+            let want_h = &h_out[(t * batch + b) * n_output..(t * batch + b + 1) * n_output];
+            assert_eq!(
+                state.c, want_c,
+                "cell state diverged at batch {b} step {t}"
+            );
+            assert_eq!(
+                state.h, want_h,
+                "hidden state diverged at batch {b} step {t}"
+            );
+        }
+    }
+    println!("golden trajectory: {steps} steps x {batch} sequences bit-exact");
+}

@@ -1,0 +1,69 @@
+//! Serving-stack integration: the coordinator must deliver identical
+//! quality accounting across engines and survive concurrency.
+
+use std::time::Duration;
+
+use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{one_hot_seq, CharLm, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+fn tiny_lm(hidden: usize, depth: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(99);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+#[test]
+fn serving_under_load_completes_everything() {
+    let lm = tiny_lm(32, 2);
+    let mut rng = Pcg32::seeded(100);
+    let calib: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..32).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let oh: Vec<_> = calib.iter().map(|s| one_hot_seq(s)).collect();
+    let stats = lm.stack_weights.calibrate(&oh);
+
+    let trace = RequestTrace::generate(60, 500.0, 16, VOCAB, 8);
+    let config = ServerConfig {
+        workers: 4,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        engine: StackEngine::Integer,
+        opts: QuantizeOptions::default(),
+    };
+    let server = Server::new(&lm, Some(&stats), config);
+    let report = server.run_trace(&trace, 100.0).unwrap();
+    assert_eq!(report.requests, 60);
+    assert_eq!(report.tokens, trace.total_tokens());
+    assert!(report.mean_batch >= 1.0);
+    assert!(report.rt_factor().value() > 0.0);
+}
+
+#[test]
+fn engines_report_comparable_throughput_ordering() {
+    // Not a perf assertion (debug build) — just that all three engines
+    // produce sane reports on the same trace.
+    let lm = tiny_lm(24, 1);
+    let mut rng = Pcg32::seeded(101);
+    let calib: Vec<Vec<usize>> = (0..3)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let oh: Vec<_> = calib.iter().map(|s| one_hot_seq(s)).collect();
+    let stats = lm.stack_weights.calibrate(&oh);
+    let trace = RequestTrace::generate(20, 2000.0, 10, VOCAB, 9);
+    for engine in StackEngine::ALL {
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig { engine, workers: 2, ..ServerConfig::default() },
+        );
+        let report = server.run_trace(&trace, 1000.0).unwrap();
+        assert_eq!(report.requests, 20, "{engine:?}");
+        assert!(report.throughput() > 0.0);
+    }
+}
