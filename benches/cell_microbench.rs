@@ -4,13 +4,13 @@
 
 use iqrnn::fixedpoint::Rescale;
 use iqrnn::lstm::{
-    CalibrationStats, FloatLstm, FloatState, IntegerState, LstmSpec, LstmWeights,
-    QuantizeOptions,
+    CalibrationStats, FloatLstm, FloatState, IntegerBatchState, IntegerState,
+    LstmSpec, LstmWeights, QuantizeOptions,
 };
 use iqrnn::lstm::quantize_lstm;
 use iqrnn::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use iqrnn::sparse::SparseMatrixI8;
-use iqrnn::tensor::qmatmul::matvec_i8_i32;
+use iqrnn::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
 use iqrnn::tensor::{matvec_f32, Matrix};
 use iqrnn::util::timer::{bench, fmt_secs};
 use iqrnn::util::Pcg32;
@@ -64,6 +64,37 @@ fn main() {
         t_i8 / t_sp,
         sp.nnz()
     );
+
+    // Batch-major GEMM vs per-lane matvec: the amortization that the
+    // batch-major refactor rides on.
+    println!("\n== i8 GEMM vs per-lane matvec ({n}x{n}) ==");
+    for &batch in &[1usize, 4, 8, 16, 32] {
+        let mut xb = Matrix::<i8>::zeros(batch, n);
+        for v in &mut xb.data {
+            *v = rng.range_i32(-128, 127) as i8;
+        }
+        let mut ob = Matrix::<i32>::zeros(batch, n);
+        let t_gemm = bench(3, 31, || {
+            gemm_i8_i32(&wq, &xb, &bias, &mut ob);
+            ob.at(0, 0)
+        })
+        .median_secs();
+        let t_lanes = bench(3, 31, || {
+            for b in 0..batch {
+                let or = &mut ob.data[b * n..(b + 1) * n];
+                matvec_i8_i32(&wq, &xb.data[b * n..(b + 1) * n], &bias, or);
+            }
+            ob.at(0, 0)
+        })
+        .median_secs();
+        println!(
+            "  batch {batch:>2}: gemm {} per-lane {} ({:.2}x, {:.1} ns/row-token)",
+            fmt_secs(t_gemm),
+            fmt_secs(t_lanes),
+            t_lanes / t_gemm,
+            t_gemm / batch as f64 * 1e9
+        );
+    }
 
     println!("\n== elementwise pipeline (len {n}) ==");
     let xin: Vec<i16> = (0..n).map(|_| rng.range_i32(-32768, 32767) as i16).collect();
@@ -128,5 +159,52 @@ fn main() {
             fmt_secs(t_i),
             t_f / t_i
         );
+    }
+
+    // Batched integer cell: per-token cost of step_batch_q vs repeated
+    // step_q at growing batch sizes.
+    println!("\n== integer cell step_batch_q (per-token cost) ==");
+    {
+        let (n_input, n_cell) = (128usize, 256usize);
+        let spec = LstmSpec::plain(n_input, n_cell);
+        let weights = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(weights.clone());
+        let calib: Vec<Vec<Vec<f32>>> = (0..2)
+            .map(|_| {
+                (0..8)
+                    .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let stats = CalibrationStats::collect(&float, &calib);
+        let integer = quantize_lstm(&weights, &stats, QuantizeOptions::default());
+        for &batch in &[1usize, 4, 8, 16, 32] {
+            let mut qx = Matrix::<i8>::zeros(batch, n_input);
+            for v in &mut qx.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let mut bstate = IntegerBatchState::zeros(&integer, batch);
+            let t_batch = bench(2, 15, || {
+                integer.step_batch_q(&qx, &mut bstate);
+                bstate.h.at(0, 0)
+            })
+            .median_secs();
+            let mut states: Vec<IntegerState> =
+                (0..batch).map(|_| IntegerState::zeros(&integer)).collect();
+            let t_seq = bench(2, 15, || {
+                for (b, st) in states.iter_mut().enumerate() {
+                    integer.step_q(qx.row(b), st);
+                }
+                states[0].h[0]
+            })
+            .median_secs();
+            println!(
+                "  batch {batch:>2}: batched {} sequential {} ({:.2}x, {:.1} us/token)",
+                fmt_secs(t_batch),
+                fmt_secs(t_seq),
+                t_seq / t_batch,
+                t_batch / batch as f64 * 1e6
+            );
+        }
     }
 }

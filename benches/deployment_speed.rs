@@ -16,6 +16,9 @@ use iqrnn::tensor::Matrix;
 use iqrnn::util::timer::{bench, fmt_secs};
 use iqrnn::util::Pcg32;
 
+/// Batch sizes of the batch-major sweep.
+const BATCH_SWEEP: [usize; 5] = [1, 4, 8, 16, 32];
+
 fn engine_stack(
     weights: &StackWeights,
     engine: StackEngine,
@@ -100,6 +103,74 @@ fn main() {
             let secs = time_stack(&stack, &xs, 5);
             let rt = RtFactor::from_tokens(secs, tokens);
             println!("  {:<8} RT factor {:.4}", engine.label(), rt.value());
+        }
+    }
+
+    // Batch-major sweep: tokens/sec vs batch for every engine through
+    // `step_batch` — the perf trajectory of the batch-major refactor.
+    // Emits BENCH_batch.json for trend tracking.
+    {
+        let n_input = 64usize;
+        let hidden = 256usize;
+        let depth = 1usize;
+        let steps = 32usize;
+        let spec = LstmSpec::plain(n_input, hidden);
+        let weights = StackWeights::random(n_input, spec, depth, &mut rng);
+        let calib: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|_| {
+                (0..16)
+                    .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        println!("\n== batch-major sweep ({depth}x{hidden} in={n_input}, tokens/sec) ==");
+        println!("{:<8} {:>6} {:>12} {:>14}", "engine", "batch", "per-token", "tokens/sec");
+        let mut entries: Vec<String> = Vec::new();
+        for engine in StackEngine::ALL {
+            let stack = engine_stack(&weights, engine, &calib);
+            for &batch in &BATCH_SWEEP {
+                let xs: Vec<Matrix<f32>> = (0..steps)
+                    .map(|_| {
+                        let mut m = Matrix::<f32>::zeros(batch, n_input);
+                        rng.fill_uniform_f32(&mut m.data, -1.5, 1.5);
+                        m
+                    })
+                    .collect();
+                let mut out = Matrix::<f32>::zeros(batch, stack.n_output());
+                let secs = bench(1, 7, || {
+                    let mut states = stack.zero_batch_state(batch);
+                    for x in &xs {
+                        stack.step_batch(x, &mut states, &mut out);
+                    }
+                    out.at(0, 0)
+                })
+                .median_secs();
+                let tokens = (batch * steps) as f64;
+                let tps = tokens / secs;
+                println!(
+                    "{:<8} {:>6} {:>12} {:>13.0}",
+                    engine.label(),
+                    batch,
+                    fmt_secs(secs / tokens),
+                    tps
+                );
+                entries.push(format!(
+                    "    {{\"engine\": \"{}\", \"batch\": {}, \"tokens_per_sec\": {:.1}}}",
+                    engine.label(),
+                    batch,
+                    tps
+                ));
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"batch_sweep\",\n  \"config\": {{\"n_input\": {n_input}, \
+             \"hidden\": {hidden}, \"depth\": {depth}, \"steps\": {steps}}},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_batch.json", &json) {
+            Ok(()) => println!("wrote BENCH_batch.json"),
+            Err(e) => eprintln!("could not write BENCH_batch.json: {e}"),
         }
     }
 

@@ -16,9 +16,8 @@ use std::time::Duration;
 
 use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
-use iqrnn::model::lm::{one_hot_seq, CharLm, VOCAB};
-use iqrnn::runtime::pjrt::CharLmRuntime;
-use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets};
+use iqrnn::model::lm::{CharLm, VOCAB};
+use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets, EvalSet};
 use iqrnn::workload::synth::RequestTrace;
 
 fn main() -> anyhow::Result<()> {
@@ -88,10 +87,21 @@ fn main() -> anyhow::Result<()> {
          (paper §6: ~2x vs float, ~1.05x vs hybrid)"
     );
 
-    // --- PJRT runtime cross-check ------------------------------------
+    // --- PJRT runtime cross-check (needs the xla-runtime feature) ----
+    pjrt_cross_check(&artifacts, &lm, &sets)?;
+
+    println!("\ne2e_serving OK");
+    Ok(())
+}
+
+#[cfg(feature = "xla-runtime")]
+fn pjrt_cross_check(artifacts: &str, lm: &CharLm, sets: &[EvalSet]) -> anyhow::Result<()> {
+    use iqrnn::model::lm::one_hot_seq;
+    use iqrnn::runtime::pjrt::CharLmRuntime;
+
     println!("\n== PJRT runtime cross-check (AOT float artifact) ==");
     let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let runtime = CharLmRuntime::load(&client, &artifacts, 8, VOCAB, lm.hidden, lm.depth)?;
+    let runtime = CharLmRuntime::load(&client, artifacts, 8, VOCAB, lm.hidden, lm.depth)?;
     let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
     let seq = &sets[0].sequences[0][..32.min(sets[0].sequences[0].len())];
     let mut rust_state = engine.new_state();
@@ -110,7 +120,14 @@ fn main() -> anyhow::Result<()> {
     }
     println!("max |rust float − XLA runtime| logit divergence: {worst:.2e}");
     anyhow::ensure!(worst < 2e-3, "runtime cross-check failed");
+    Ok(())
+}
 
-    println!("\ne2e_serving OK");
+#[cfg(not(feature = "xla-runtime"))]
+fn pjrt_cross_check(_artifacts: &str, _lm: &CharLm, _sets: &[EvalSet]) -> anyhow::Result<()> {
+    println!(
+        "\n(PJRT runtime cross-check skipped: add `xla = \"0.1\"` to [dependencies] \
+         and build with --features xla-runtime)"
+    );
     Ok(())
 }

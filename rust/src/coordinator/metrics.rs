@@ -1,4 +1,5 @@
-//! Serving metrics: what the benchmark harness reports for E4/E10.
+//! Serving metrics: what the benchmark harness reports for E4/E10,
+//! including batch-occupancy of the batch-major execution path.
 
 use crate::eval::metrics::{LatencyStats, RtFactor};
 
@@ -14,12 +15,31 @@ pub struct ServingReport {
     pub latency: LatencyStats,
     pub workers: usize,
     pub mean_batch: f64,
+    /// Batched step invocations across all workers (one per token
+    /// position per wave).
+    pub batched_steps: usize,
+    /// Lane-steps executed across all workers (equals tokens processed
+    /// through the batched path).
+    pub lane_steps: usize,
+    /// Widest cross-session batch any worker ran.
+    pub peak_lanes: usize,
 }
 
 impl ServingReport {
     /// Tokens per wall-clock second.
     pub fn throughput(&self) -> f64 {
         self.tokens as f64 / self.wall_secs
+    }
+
+    /// Mean lanes per batched step — how much of each GEMM invocation
+    /// the batcher actually filled. 1.0 means the batch-major path ran
+    /// degenerate single-stream; higher is better amortization.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batched_steps as f64
+        }
     }
 
     /// RT factor against the nominal stream rate (compute time only —
@@ -31,7 +51,7 @@ impl ServingReport {
     pub fn print(&self) {
         println!(
             "  {:<8} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
-             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2}",
+             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} peak={}",
             self.engine,
             self.requests,
             self.tokens,
@@ -41,6 +61,8 @@ impl ServingReport {
             self.latency.percentile(50.0),
             self.latency.percentile(99.0),
             self.mean_batch,
+            self.mean_occupancy(),
+            self.peak_lanes,
         );
     }
 }

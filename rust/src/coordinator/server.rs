@@ -1,7 +1,15 @@
 //! The streaming serving loop: sticky-routed workers, each owning an
 //! engine instance and its sessions, fed by bounded micro-batching;
 //! open-loop trace replay with end-to-end latency accounting.
+//!
+//! Execution is batch-major end to end: each worker drains its
+//! [`Batcher`] into a cross-session batch, packs the touched sessions'
+//! recurrent states into one [`LmBatchState`], runs a *single* batched
+//! step per token position through the whole stack (one int8 GEMM per
+//! gate instead of per-session matvecs), and scatters the advanced
+//! lanes back into the session table.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
 use std::time::{Duration, Instant};
 
@@ -9,7 +17,7 @@ use anyhow::Result;
 
 use crate::eval::metrics::LatencyStats;
 use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
-use crate::model::lm::{nll_bits, CharLm};
+use crate::model::lm::{nll_bits, CharLm, CharLmEngine, LmBatchState};
 use crate::workload::synth::RequestTrace;
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServingReport;
@@ -55,6 +63,93 @@ struct WorkerSummary {
     compute_secs: f64,
     batches: usize,
     items: usize,
+    /// Batched step invocations (one per token position per wave).
+    batched_steps: usize,
+    /// Lane-steps executed (= tokens); `lane_steps / batched_steps` is
+    /// the mean batch occupancy of the GEMM path.
+    lane_steps: usize,
+    /// Widest batch observed.
+    peak_lanes: usize,
+}
+
+/// Execute one wave: distinct sessions, one work item per lane, all
+/// lanes stepped together batch-major. Lanes are packed longest-first,
+/// so the active set is always a prefix — when the shortest lanes run
+/// out of tokens they are scattered back and the batch state simply
+/// truncates, keeping the GEMM working only on live lanes.
+fn run_wave(
+    engine: &CharLmEngine,
+    sessions: &mut SessionManager,
+    mut wave: Vec<WorkItem>,
+    state_cache: &mut Option<LmBatchState>,
+    done: &Sender<Completion>,
+    summary: &mut WorkerSummary,
+) {
+    wave.sort_by(|a, b| b.tokens.len().cmp(&a.tokens.len()));
+    let lanes = wave.len();
+    if lanes == 0 {
+        return;
+    }
+    summary.peak_lanes = summary.peak_lanes.max(lanes);
+    let max_len = wave[0].tokens.len();
+    // One batch state per worker, resized (allocation-reusing) per
+    // wave; every lane is gathered below, so stale contents are fine.
+    let bs = state_cache.get_or_insert_with(|| engine.new_batch_state(lanes));
+    engine.resize_batch_state(bs, lanes);
+    for (lane, item) in wave.iter().enumerate() {
+        let session = sessions.get_or_create(item.session, engine);
+        engine.gather_session(&session.state, bs, lane);
+    }
+    let mut nll = vec![0f64; lanes];
+    let mut toks: Vec<usize> = Vec::with_capacity(lanes);
+    let mut active = lanes;
+    for t in 0..max_len {
+        // Lanes whose items are exhausted form a suffix: finish them.
+        let still = wave.iter().take_while(|it| it.tokens.len() > t).count();
+        if still < active {
+            for lane in still..active {
+                finish_lane(engine, sessions, bs, &wave[lane], lane, nll[lane], done);
+            }
+            engine.truncate_batch(bs, still);
+            active = still;
+        }
+        toks.clear();
+        toks.extend(wave[..active].iter().map(|it| it.tokens[t]));
+        engine.step_tokens(&toks, bs);
+        summary.batched_steps += 1;
+        summary.lane_steps += active;
+        for lane in 0..active {
+            if let Some(&next) = wave[lane].tokens.get(t + 1) {
+                nll[lane] += nll_bits(bs.logits.row(lane), next);
+            }
+        }
+    }
+    for lane in 0..active {
+        finish_lane(engine, sessions, bs, &wave[lane], lane, nll[lane], done);
+    }
+}
+
+/// Scatter a finished lane back into its session and report completion.
+fn finish_lane(
+    engine: &CharLmEngine,
+    sessions: &mut SessionManager,
+    bs: &LmBatchState,
+    item: &WorkItem,
+    lane: usize,
+    nll: f64,
+    done: &Sender<Completion>,
+) {
+    let session = sessions.get_or_create(item.session, engine);
+    if !item.tokens.is_empty() {
+        engine.scatter_session(bs, &mut session.state, lane);
+    }
+    session.tokens_seen += item.tokens.len();
+    session.nll_bits += nll;
+    let _ = done.send(Completion {
+        latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
+        tokens: item.tokens.len(),
+        nll_bits_total: nll,
+    });
 }
 
 /// The server: binds a model + engine choice to a worker pool.
@@ -99,29 +194,43 @@ impl<'a> Server<'a> {
                 handles.push(scope.spawn(move || {
                     let engine = lm.engine(engine_kind, stats, opts);
                     let mut sessions = SessionManager::new();
-                    let mut summary =
-                        WorkerSummary { compute_secs: 0.0, batches: 0, items: 0 };
+                    let mut state_cache: Option<LmBatchState> = None;
+                    let mut summary = WorkerSummary {
+                        compute_secs: 0.0,
+                        batches: 0,
+                        items: 0,
+                        batched_steps: 0,
+                        lane_steps: 0,
+                        peak_lanes: 0,
+                    };
                     while let Some(batch) = batcher.next_batch() {
                         summary.batches += 1;
                         let t0 = Instant::now();
+                        // Split same-session items into consecutive
+                        // waves so each wave holds at most one item per
+                        // session (a stream's state must advance in
+                        // arrival order).
+                        let mut waves: Vec<Vec<WorkItem>> = Vec::new();
+                        let mut seen: HashMap<SessionId, usize> = HashMap::new();
                         for item in batch {
                             summary.items += 1;
-                            let session = sessions.get_or_create(item.session, &engine);
-                            let mut nll = 0f64;
-                            for w in item.tokens.windows(2) {
-                                engine.step_token(w[0], &mut session.state);
-                                nll += nll_bits(&session.state.logits, w[1]);
+                            let slot = seen.entry(item.session).or_insert(0);
+                            let w = *slot;
+                            *slot += 1;
+                            if waves.len() <= w {
+                                waves.push(Vec::new());
                             }
-                            if let Some(&last) = item.tokens.last() {
-                                engine.step_token(last, &mut session.state);
-                            }
-                            session.tokens_seen += item.tokens.len();
-                            session.nll_bits += nll;
-                            let _ = done.send(Completion {
-                                latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
-                                tokens: item.tokens.len(),
-                                nll_bits_total: nll,
-                            });
+                            waves[w].push(item);
+                        }
+                        for wave in waves {
+                            run_wave(
+                                &engine,
+                                &mut sessions,
+                                wave,
+                                &mut state_cache,
+                                &done,
+                                &mut summary,
+                            );
                         }
                         summary.compute_secs += t0.elapsed().as_secs_f64();
                     }
@@ -165,6 +274,9 @@ impl<'a> Server<'a> {
         let compute_secs: f64 = summaries.iter().map(|s| s.compute_secs).sum();
         let batches: usize = summaries.iter().map(|s| s.batches).sum();
         let items: usize = summaries.iter().map(|s| s.items).sum();
+        let batched_steps: usize = summaries.iter().map(|s| s.batched_steps).sum();
+        let lane_steps: usize = summaries.iter().map(|s| s.lane_steps).sum();
+        let peak_lanes: usize = summaries.iter().map(|s| s.peak_lanes).max().unwrap_or(0);
 
         Ok(ServingReport {
             engine: engine_label,
@@ -175,6 +287,9 @@ impl<'a> Server<'a> {
             latency,
             workers: self.config.workers,
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            batched_steps,
+            lane_steps,
+            peak_lanes,
         })
     }
 }

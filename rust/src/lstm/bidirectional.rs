@@ -8,6 +8,7 @@
 use super::quantize::QuantizeOptions;
 use super::stack::{LstmStack, StackEngine, StackWeights};
 use crate::lstm::CalibrationStats;
+use crate::tensor::Matrix;
 
 /// A bidirectional wrapper over two independent stacks.
 pub struct BiLstm {
@@ -53,6 +54,41 @@ impl BiLstm {
             .map(|(mut f, b)| {
                 f.extend(b);
                 f
+            })
+            .collect()
+    }
+
+    /// Batch-major bidirectional run over a batch of equal-length
+    /// sequences: `xs[t]` is `[batch, n_input]`; output `[T]` of
+    /// `[batch, fwd_out + bwd_out]`. Both directions run the batched
+    /// stack path, so all engines execute the same batch-major code.
+    pub fn run_sequence_batch(&self, xs: &[Matrix<f32>]) -> Vec<Matrix<f32>> {
+        let Some(first) = xs.first() else {
+            return Vec::new();
+        };
+        let batch = first.rows;
+        let mut fwd_states = self.forward.zero_batch_state(batch);
+        let fo = self.forward.run_sequence_batch(xs, &mut fwd_states);
+        // Backward pass iterates the inputs in reverse in place — no
+        // reversed copy of the batch.
+        let mut bwd_states = self.backward.zero_batch_state(batch);
+        let bwd_out = self.backward.n_output();
+        let mut bo = Vec::with_capacity(xs.len());
+        for x in xs.iter().rev() {
+            let mut out = Matrix::zeros(batch, bwd_out);
+            self.backward.step_batch(x, &mut bwd_states, &mut out);
+            bo.push(out);
+        }
+        bo.reverse();
+        fo.into_iter()
+            .zip(bo)
+            .map(|(f, b)| {
+                let mut m = Matrix::zeros(batch, f.cols + b.cols);
+                for lane in 0..batch {
+                    m.row_mut(lane)[..f.cols].copy_from_slice(f.row(lane));
+                    m.row_mut(lane)[f.cols..].copy_from_slice(b.row(lane));
+                }
+                m
             })
             .collect()
     }

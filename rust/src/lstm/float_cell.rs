@@ -6,7 +6,7 @@
 use crate::quant::recipe::Gate;
 use super::layernorm::layernorm_f32;
 use super::spec::{LstmSpec, LstmWeights};
-use crate::tensor::matvec_f32;
+use crate::tensor::{gemm_f32, matvec_f32, Matrix};
 
 /// Float recurrent state.
 #[derive(Debug, Clone)]
@@ -23,6 +23,49 @@ impl FloatState {
     }
 }
 
+/// Batch-major float recurrent state: lane `b` is row `b` of each
+/// matrix, so packing/unpacking a session is a row copy.
+#[derive(Debug, Clone)]
+pub struct FloatBatchState {
+    /// Cell states `[batch, n_cell]`.
+    pub c: Matrix<f32>,
+    /// Outputs `[batch, n_output]`.
+    pub h: Matrix<f32>,
+}
+
+impl FloatBatchState {
+    pub fn zeros(spec: &LstmSpec, batch: usize) -> Self {
+        FloatBatchState {
+            c: Matrix::zeros(batch, spec.n_cell),
+            h: Matrix::zeros(batch, spec.n_output),
+        }
+    }
+
+    /// Live lane count.
+    pub fn batch(&self) -> usize {
+        self.c.rows
+    }
+
+    /// Pack one session's state into lane `lane`.
+    pub fn gather(&mut self, lane: usize, s: &FloatState) {
+        self.c.row_mut(lane).copy_from_slice(&s.c);
+        self.h.row_mut(lane).copy_from_slice(&s.h);
+    }
+
+    /// Unpack lane `lane` back into a session's state.
+    pub fn scatter(&self, lane: usize, s: &mut FloatState) {
+        s.c.copy_from_slice(self.c.row(lane));
+        s.h.copy_from_slice(self.h.row(lane));
+    }
+
+    /// Drop lanes `k..` (scatter them out first); the surviving prefix
+    /// stays in place so no repacking is needed.
+    pub fn truncate(&mut self, k: usize) {
+        self.c.truncate_rows(k);
+        self.h.truncate_rows(k);
+    }
+}
+
 /// Scratch buffers reused across steps (no allocation on the hot path).
 #[derive(Debug, Clone)]
 struct Scratch {
@@ -31,11 +74,42 @@ struct Scratch {
     m: Vec<f32>,
 }
 
+/// Batch-major scratch, lazily resized to the live batch.
+#[derive(Debug, Clone)]
+struct BatchScratch {
+    pre: [Matrix<f32>; 4],
+    tmp: Matrix<f32>,
+    m: Matrix<f32>,
+}
+
+impl BatchScratch {
+    fn empty() -> Self {
+        BatchScratch {
+            pre: std::array::from_fn(|_| Matrix::zeros(0, 0)),
+            tmp: Matrix::zeros(0, 0),
+            m: Matrix::zeros(0, 0),
+        }
+    }
+
+    fn ensure(&mut self, batch: usize, n_cell: usize) {
+        if self.m.rows != batch || self.m.cols != n_cell {
+            // Every buffer is fully overwritten before it is read, so
+            // resize-in-place (allocation-reusing) is safe.
+            for p in &mut self.pre {
+                p.resize(batch, n_cell);
+            }
+            self.tmp.resize(batch, n_cell);
+            self.m.resize(batch, n_cell);
+        }
+    }
+}
+
 /// The float LSTM engine.
 #[derive(Debug, Clone)]
 pub struct FloatLstm {
     pub weights: LstmWeights,
     scratch: std::cell::RefCell<Scratch>,
+    batch_scratch: std::cell::RefCell<BatchScratch>,
 }
 
 /// Observation taps for calibration (§4): the quantizer needs the
@@ -66,7 +140,11 @@ impl FloatLstm {
             tmp: vec![0.0; n_cell],
             m: vec![0.0; n_cell],
         };
-        FloatLstm { weights, scratch: std::cell::RefCell::new(scratch) }
+        FloatLstm {
+            weights,
+            scratch: std::cell::RefCell::new(scratch),
+            batch_scratch: std::cell::RefCell::new(BatchScratch::empty()),
+        }
     }
 
     pub fn spec(&self) -> &LstmSpec {
@@ -170,6 +248,107 @@ impl FloatLstm {
             }
         } else {
             state.h.copy_from_slice(m);
+        }
+    }
+
+    /// Batch-major gate pre-activation: the same math as
+    /// [`Self::gate_pre`] applied lane-by-lane (bit-exact), with the two
+    /// matmuls batched through [`gemm_f32`].
+    fn gate_pre_batch(
+        &self,
+        g: Gate,
+        x: &Matrix<f32>,
+        h: &Matrix<f32>,
+        c_for_peephole: &Matrix<f32>,
+        pre: &mut Matrix<f32>,
+        tmp: &mut Matrix<f32>,
+    ) {
+        let spec = self.spec();
+        let gw = self.weights.gate(g);
+        gemm_f32(&gw.w, x, pre);
+        gemm_f32(&gw.r, h, tmp);
+        for (p, t) in pre.data.iter_mut().zip(tmp.data.iter()) {
+            *p += *t;
+        }
+        if let Some(p_vec) = &gw.peephole {
+            for b in 0..x.rows {
+                for ((p, &pw), &cv) in pre
+                    .row_mut(b)
+                    .iter_mut()
+                    .zip(p_vec.iter())
+                    .zip(c_for_peephole.row(b).iter())
+                {
+                    *p += pw * cv;
+                }
+            }
+        }
+        if spec.flags.layer_norm {
+            let gamma = gw.ln_weight.as_ref().expect("LN variant needs L");
+            // LN normalizes across the hidden dimension, so it stays a
+            // per-lane operation.
+            for b in 0..x.rows {
+                tmp.row_mut(b).copy_from_slice(pre.row(b));
+                layernorm_f32(tmp.row(b), gamma, &gw.bias, pre.row_mut(b));
+            }
+        } else {
+            for b in 0..x.rows {
+                for (p, &bv) in pre.row_mut(b).iter_mut().zip(gw.bias.iter()) {
+                    *p += bv;
+                }
+            }
+        }
+    }
+
+    /// One batch-major time step: row `b` of `x` (`[batch, n_input]`)
+    /// advances lane `b` of `state`, bit-exactly equal to running
+    /// [`Self::step`] on each lane independently.
+    pub fn step_batch(&self, x: &Matrix<f32>, state: &mut FloatBatchState) {
+        let spec = *self.spec();
+        let batch = x.rows;
+        assert_eq!(x.cols, spec.n_input);
+        assert_eq!(state.c.rows, batch);
+        assert_eq!(state.h.rows, batch);
+        let mut s = self.batch_scratch.borrow_mut();
+        s.ensure(batch, spec.n_cell);
+        let BatchScratch { pre, tmp, m } = &mut *s;
+        let [pre_i, pre_f, pre_z, pre_o] = pre;
+
+        self.gate_pre_batch(Gate::Forget, x, &state.h, &state.c, pre_f, tmp);
+        self.gate_pre_batch(Gate::Update, x, &state.h, &state.c, pre_z, tmp);
+        if spec.has_input_gate() {
+            self.gate_pre_batch(Gate::Input, x, &state.h, &state.c, pre_i, tmp);
+        }
+
+        // Elementwise parts run over the flat `[batch * n_cell]` buffers
+        // — every element sees the same scalar ops as the sequential
+        // path, in the same order.
+        for (j, c) in state.c.data.iter_mut().enumerate() {
+            let f = sigmoid(pre_f.data[j]);
+            let i = if spec.has_input_gate() { sigmoid(pre_i.data[j]) } else { 1.0 - f };
+            let z = pre_z.data[j].tanh();
+            *c = i * z + f * *c;
+        }
+
+        // Output gate peephole reads the *new* cell state (eq 5).
+        self.gate_pre_batch(Gate::Output, x, &state.h, &state.c, pre_o, tmp);
+
+        for (j, mv) in m.data.iter_mut().enumerate() {
+            let o = sigmoid(pre_o.data[j]);
+            *mv = o * state.c.data[j].tanh();
+        }
+
+        if spec.flags.projection {
+            let w_proj = self.weights.w_proj.as_ref().unwrap();
+            gemm_f32(w_proj, m, &mut state.h);
+            if let Some(bias) = &self.weights.b_proj {
+                for b in 0..batch {
+                    for (h, &bv) in state.h.row_mut(b).iter_mut().zip(bias.iter()) {
+                        *h += bv;
+                    }
+                }
+            }
+        } else {
+            state.h.data.copy_from_slice(&m.data);
         }
     }
 

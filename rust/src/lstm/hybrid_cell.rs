@@ -13,9 +13,9 @@
 use crate::quant::params::SymmetricQuant;
 use crate::quant::recipe::Gate;
 use crate::quant::quantize_symmetric_i8;
-use crate::tensor::qmatmul::matvec_i8_i32;
+use crate::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
 use crate::tensor::Matrix;
-use super::float_cell::FloatState;
+use super::float_cell::{FloatBatchState, FloatState};
 use super::layernorm::layernorm_f32;
 use super::spec::{gate_index, LstmSpec, LstmWeights};
 
@@ -39,6 +39,59 @@ pub struct HybridLstm {
     w_proj: Option<(Matrix<i8>, f64)>,
     b_proj: Option<Vec<f32>>,
     scratch: std::cell::RefCell<Scratch>,
+    batch_scratch: std::cell::RefCell<BatchScratch>,
+}
+
+/// Batch-major scratch: per-lane dynamic-quantization scales plus
+/// batched accumulators, lazily resized to the live batch.
+#[derive(Debug, Clone)]
+struct BatchScratch {
+    qx: Matrix<i8>,
+    qh: Matrix<i8>,
+    qm: Matrix<i8>,
+    sx: Vec<f64>,
+    sh: Vec<f64>,
+    acc_cell: Matrix<i32>,
+    acc_out: Matrix<i32>,
+    pre: [Matrix<f32>; 4],
+    tmp: Vec<f32>,
+    m: Matrix<f32>,
+}
+
+impl BatchScratch {
+    fn empty() -> Self {
+        BatchScratch {
+            qx: Matrix::zeros(0, 0),
+            qh: Matrix::zeros(0, 0),
+            qm: Matrix::zeros(0, 0),
+            sx: Vec::new(),
+            sh: Vec::new(),
+            acc_cell: Matrix::zeros(0, 0),
+            acc_out: Matrix::zeros(0, 0),
+            pre: std::array::from_fn(|_| Matrix::zeros(0, 0)),
+            tmp: Vec::new(),
+            m: Matrix::zeros(0, 0),
+        }
+    }
+
+    fn ensure(&mut self, spec: &LstmSpec, batch: usize) {
+        if self.m.rows != batch || self.m.cols != spec.n_cell {
+            // Every buffer is fully overwritten before it is read, so
+            // resize-in-place (allocation-reusing) is safe.
+            self.qx.resize(batch, spec.n_input);
+            self.qh.resize(batch, spec.n_output);
+            self.qm.resize(batch, spec.n_cell);
+            self.sx.resize(batch, 0.0);
+            self.sh.resize(batch, 0.0);
+            self.acc_cell.resize(batch, spec.n_cell);
+            self.acc_out.resize(batch, spec.n_output);
+            for p in &mut self.pre {
+                p.resize(batch, spec.n_cell);
+            }
+            self.tmp.resize(spec.n_cell, 0.0);
+            self.m.resize(batch, spec.n_cell);
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -105,6 +158,7 @@ impl HybridLstm {
             w_proj,
             b_proj: weights.b_proj.clone(),
             scratch: std::cell::RefCell::new(scratch),
+            batch_scratch: std::cell::RefCell::new(BatchScratch::empty()),
         }
     }
 
@@ -217,6 +271,125 @@ impl HybridLstm {
             }
         } else {
             state.h.copy_from_slice(m);
+        }
+    }
+
+    /// One batch-major time step: row `b` of `x` advances lane `b`,
+    /// bit-exactly equal to per-lane [`Self::step`] — each lane's
+    /// activation scale is still computed from that lane alone, so
+    /// dynamic quantization is unchanged by batching.
+    pub fn step_batch(&self, x: &Matrix<f32>, state: &mut FloatBatchState) {
+        let spec = self.spec;
+        let batch = x.rows;
+        assert_eq!(x.cols, spec.n_input);
+        assert_eq!(state.c.rows, batch);
+        assert_eq!(state.h.rows, batch);
+        let mut s = self.batch_scratch.borrow_mut();
+        s.ensure(&spec, batch);
+        let BatchScratch { qx, qh, qm, sx, sh, acc_cell, acc_out, pre, tmp, m } =
+            &mut *s;
+
+        for b in 0..batch {
+            sx[b] = dynamic_quantize(x.row(b), qx.row_mut(b));
+            sh[b] = dynamic_quantize(state.h.row(b), qh.row_mut(b));
+        }
+
+        let gate_list: [(Gate, usize); 4] = [
+            (Gate::Input, 0),
+            (Gate::Forget, 1),
+            (Gate::Update, 2),
+            (Gate::Output, 3),
+        ];
+        for (g, idx) in gate_list {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            let hg = self.gate(g);
+            gemm_i8_i32(&hg.w, qx, &[], acc_cell);
+            for b in 0..batch {
+                let kx = (hg.w_scale * sx[b]) as f32;
+                for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
+                    *o = a as f32 * kx;
+                }
+            }
+            gemm_i8_i32(&hg.r, qh, &[], acc_cell);
+            for b in 0..batch {
+                let kh = (hg.r_scale * sh[b]) as f32;
+                for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
+                    *o += a as f32 * kh;
+                }
+            }
+        }
+
+        for (g, idx) in [(Gate::Input, 0), (Gate::Forget, 1), (Gate::Update, 2)] {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            let hg = self.gate(g);
+            if let Some(p) = &hg.peephole {
+                for b in 0..batch {
+                    for ((o, &pw), &cv) in
+                        pre[idx].row_mut(b).iter_mut().zip(p).zip(state.c.row(b).iter())
+                    {
+                        *o += pw * cv;
+                    }
+                }
+            }
+            for b in 0..batch {
+                self.finish_pre(hg, pre[idx].row_mut(b), tmp);
+            }
+        }
+
+        for (j, c) in state.c.data.iter_mut().enumerate() {
+            let f = sigmoid(pre[1].data[j]);
+            let i = if spec.has_input_gate() { sigmoid(pre[0].data[j]) } else { 1.0 - f };
+            let z = pre[2].data[j].tanh();
+            *c = i * z + f * *c;
+        }
+
+        // Output gate: peephole reads c^t.
+        {
+            let hg = self.gate(Gate::Output);
+            if let Some(p) = &hg.peephole {
+                for b in 0..batch {
+                    for ((o, &pw), &cv) in
+                        pre[3].row_mut(b).iter_mut().zip(p).zip(state.c.row(b).iter())
+                    {
+                        *o += pw * cv;
+                    }
+                }
+            }
+            for b in 0..batch {
+                self.finish_pre(hg, pre[3].row_mut(b), tmp);
+            }
+        }
+
+        for (j, mv) in m.data.iter_mut().enumerate() {
+            let o = sigmoid(pre[3].data[j]);
+            *mv = o * state.c.data[j].tanh();
+        }
+
+        if let Some((w_proj, wp_scale)) = &self.w_proj {
+            for b in 0..batch {
+                let sm = dynamic_quantize(m.row(b), qm.row_mut(b));
+                sx[b] = sm; // reuse the lane-scale scratch for `m`
+            }
+            gemm_i8_i32(w_proj, qm, &[], acc_out);
+            for b in 0..batch {
+                let k = (wp_scale * sx[b]) as f32;
+                for (h, &a) in state.h.row_mut(b).iter_mut().zip(acc_out.row(b)) {
+                    *h = a as f32 * k;
+                }
+            }
+            if let Some(bias) = &self.b_proj {
+                for b in 0..batch {
+                    for (h, &bv) in state.h.row_mut(b).iter_mut().zip(bias) {
+                        *h += bv;
+                    }
+                }
+            }
+        } else {
+            state.h.data.copy_from_slice(&m.data);
         }
     }
 

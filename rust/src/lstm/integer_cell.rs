@@ -23,7 +23,7 @@ use crate::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use crate::quant::params::AsymmetricQuant;
 use crate::quant::recipe::Gate;
 use crate::sparse::SparseMatrixI8;
-use crate::tensor::qmatmul::matvec_i8_i32;
+use crate::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
 use crate::tensor::Matrix;
 use super::layernorm::IntegerLayerNorm;
 use super::spec::{gate_index, LstmSpec};
@@ -56,6 +56,24 @@ impl WeightMat {
         match self {
             WeightMat::Dense(m) => matvec_i8_i32(m, x, bias, out),
             WeightMat::Sparse(s) => s.matvec_i32(x, bias, out),
+        }
+    }
+
+    /// Batched `out[b,r] = bias[r] + Σ_c w[r,c] x[b,c]`: dense weights
+    /// go through the blocked GEMM, CSR weights fall back to per-lane
+    /// matvec (both bit-exact with [`Self::matvec`] per lane).
+    #[inline]
+    pub fn matmul_batch(&self, x: &Matrix<i8>, bias: &[i32], out: &mut Matrix<i32>) {
+        match self {
+            WeightMat::Dense(m) => gemm_i8_i32(m, x, bias, out),
+            WeightMat::Sparse(s) => {
+                debug_assert_eq!(out.cols, s.rows);
+                debug_assert_eq!(out.rows, x.rows);
+                for b in 0..x.rows {
+                    let or = &mut out.data[b * s.rows..(b + 1) * s.rows];
+                    s.matvec_i32(x.row(b), bias, or);
+                }
+            }
         }
     }
 
@@ -118,6 +136,10 @@ pub struct IntegerLstm {
     /// Input quantization buffer (separate cell so `step` can fill it
     /// while `step_q` borrows the main scratch).
     qx_buf: std::cell::RefCell<Vec<i8>>,
+    batch_scratch: std::cell::RefCell<BatchScratch>,
+    /// Batched input quantization buffer (separate cell, same reason as
+    /// `qx_buf`).
+    batch_qx: std::cell::RefCell<Matrix<i8>>,
 }
 
 /// Integer recurrent state: the persistent tensors of §3.2.2/§3.2.7.
@@ -140,6 +162,54 @@ impl IntegerState {
     }
 }
 
+/// Batch-major integer recurrent state: lane `b` is row `b` of each
+/// matrix, so packing/unpacking a session is a row copy — with int16
+/// cell + int8 hidden this is ~3 bytes per element, the cheapness that
+/// makes per-token gather/scatter viable in the serving loop.
+#[derive(Debug, Clone)]
+pub struct IntegerBatchState {
+    /// Cell states, int16 `Q_{m.15-m}`: `[batch, n_cell]`.
+    pub c: Matrix<i16>,
+    /// Outputs, int8 asymmetric: `[batch, n_output]`.
+    pub h: Matrix<i8>,
+}
+
+impl IntegerBatchState {
+    /// Zero state for `batch` lanes (`h` at its zero point, like
+    /// [`IntegerState::zeros`]).
+    pub fn zeros(lstm: &IntegerLstm, batch: usize) -> Self {
+        let mut h = Matrix::zeros(batch, lstm.spec.n_output);
+        for v in &mut h.data {
+            *v = lstm.output_q.zero_point as i8;
+        }
+        IntegerBatchState { c: Matrix::zeros(batch, lstm.spec.n_cell), h }
+    }
+
+    /// Live lane count.
+    pub fn batch(&self) -> usize {
+        self.c.rows
+    }
+
+    /// Pack one session's state into lane `lane`.
+    pub fn gather(&mut self, lane: usize, s: &IntegerState) {
+        self.c.row_mut(lane).copy_from_slice(&s.c);
+        self.h.row_mut(lane).copy_from_slice(&s.h);
+    }
+
+    /// Unpack lane `lane` back into a session's state.
+    pub fn scatter(&self, lane: usize, s: &mut IntegerState) {
+        s.c.copy_from_slice(self.c.row(lane));
+        s.h.copy_from_slice(self.h.row(lane));
+    }
+
+    /// Drop lanes `k..` (scatter them out first); the surviving prefix
+    /// stays in place so no repacking is needed.
+    pub fn truncate(&mut self, k: usize) {
+        self.c.truncate_rows(k);
+        self.h.truncate_rows(k);
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Scratch {
     acc_x: Vec<i32>,
@@ -149,6 +219,53 @@ struct Scratch {
     ln_in: Vec<i16>,
     tanh_c: Vec<i16>,
     m: Vec<i8>,
+}
+
+/// Batch-major scratch: the [`Scratch`] buffers widened to
+/// `[batch, n]`, lazily resized to the live batch.
+#[derive(Debug, Clone)]
+struct BatchScratch {
+    acc_x: Matrix<i32>,
+    acc_h: Matrix<i32>,
+    acc_proj: Matrix<i32>,
+    gate_out: [Vec<i16>; 4],
+    gate_act: [Vec<i16>; 4],
+    ln_in: Vec<i16>,
+    tanh_c: Vec<i16>,
+    m: Matrix<i8>,
+}
+
+impl BatchScratch {
+    fn empty() -> Self {
+        BatchScratch {
+            acc_x: Matrix::zeros(0, 0),
+            acc_h: Matrix::zeros(0, 0),
+            acc_proj: Matrix::zeros(0, 0),
+            gate_out: std::array::from_fn(|_| Vec::new()),
+            gate_act: std::array::from_fn(|_| Vec::new()),
+            ln_in: Vec::new(),
+            tanh_c: Vec::new(),
+            m: Matrix::zeros(0, 0),
+        }
+    }
+
+    fn ensure(&mut self, spec: &LstmSpec, batch: usize) {
+        if self.m.rows != batch || self.m.cols != spec.n_cell {
+            // Every buffer is fully overwritten before it is read, so
+            // resize-in-place (allocation-reusing) is safe — per-wave
+            // batch changes in the serving loop must not reallocate.
+            let total = batch * spec.n_cell;
+            self.acc_x.resize(batch, spec.n_cell);
+            self.acc_h.resize(batch, spec.n_cell);
+            self.acc_proj.resize(batch, spec.n_output);
+            for v in self.gate_out.iter_mut().chain(self.gate_act.iter_mut()) {
+                v.resize(total, 0);
+            }
+            self.ln_in.resize(total, 0);
+            self.tanh_c.resize(total, 0);
+            self.m.resize(batch, spec.n_cell);
+        }
+    }
 }
 
 impl IntegerLstm {
@@ -183,6 +300,8 @@ impl IntegerLstm {
             proj,
             scratch: std::cell::RefCell::new(scratch),
             qx_buf: std::cell::RefCell::new(vec![0; spec.n_input]),
+            batch_scratch: std::cell::RefCell::new(BatchScratch::empty()),
+            batch_qx: std::cell::RefCell::new(Matrix::zeros(0, 0)),
         }
     }
 
@@ -401,6 +520,210 @@ impl IntegerLstm {
                     state.h[j] = m[j];
                 }
             }
+        }
+    }
+
+    /// Batch-major gate pre-activation: [`Self::gate_forward`] with the
+    /// two matmuls batched and the fused rescale kernels run per lane —
+    /// identical per-element operations, so bit-exact with sequential.
+    #[allow(clippy::too_many_arguments)]
+    fn gate_forward_batch(
+        &self,
+        g: Gate,
+        qx: &Matrix<i8>,
+        h: &Matrix<i8>,
+        c_for_peephole: &Matrix<i16>,
+        acc_x: &mut Matrix<i32>,
+        acc_h: &mut Matrix<i32>,
+        ln_in: &mut [i16],
+        out: &mut [i16],
+    ) {
+        let ig = self.gate(g);
+        let n = self.spec.n_cell;
+        let batch = qx.rows;
+        ig.w.matmul_batch(qx, &ig.w_bias, acc_x);
+        ig.r.matmul_batch(h, &ig.r_bias, acc_h);
+        for b in 0..batch {
+            let ax = acc_x.row(b);
+            let ah = acc_h.row(b);
+            let target: &mut [i16] = if ig.ln.is_some() {
+                &mut ln_in[b * n..(b + 1) * n]
+            } else {
+                &mut out[b * n..(b + 1) * n]
+            };
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    // SAFETY: feature checked; kernels are bit-exact
+                    // with the scalar fallback (property-tested).
+                    unsafe {
+                        match &ig.peephole {
+                            Some((p, eff_c)) => {
+                                crate::nonlin::simd::gate_rescale_peephole_avx2(
+                                    ax, ig.eff_x, ah, ig.eff_h,
+                                    p, c_for_peephole.row(b), *eff_c, target,
+                                );
+                            }
+                            None => crate::nonlin::simd::gate_rescale_avx2(
+                                ax, ig.eff_x, ah, ig.eff_h, target,
+                            ),
+                        }
+                    }
+                    continue;
+                }
+            }
+            match &ig.peephole {
+                Some((p, eff_c)) => {
+                    let c_row = c_for_peephole.row(b);
+                    for j in 0..n {
+                        let pc = i32::from(p[j]) * i32::from(c_row[j]);
+                        let sum = ig.eff_x.apply(ax[j])
+                            + ig.eff_h.apply(ah[j])
+                            + eff_c.apply(pc);
+                        target[j] = saturate_i32_to_i16(sum);
+                    }
+                }
+                None => {
+                    for j in 0..n {
+                        let sum = ig.eff_x.apply(ax[j]) + ig.eff_h.apply(ah[j]);
+                        target[j] = saturate_i32_to_i16(sum);
+                    }
+                }
+            }
+        }
+        if let Some(ln) = &ig.ln {
+            // Integer LN normalizes across the hidden dimension: per lane.
+            for b in 0..batch {
+                ln.apply(&ln_in[b * n..(b + 1) * n], &mut out[b * n..(b + 1) * n]);
+            }
+        }
+    }
+
+    /// One batch-major time step with int8 inputs already in the `x`
+    /// domain: row `b` of `qx` advances lane `b` of `state`. Bit-exact
+    /// with running [`Self::step_q`] on each lane independently (the
+    /// acceptance property of the batch-major refactor).
+    pub fn step_batch_q(&self, qx: &Matrix<i8>, state: &mut IntegerBatchState) {
+        let spec = self.spec;
+        let batch = qx.rows;
+        assert_eq!(qx.cols, spec.n_input);
+        assert_eq!(state.c.rows, batch);
+        assert_eq!(state.h.rows, batch);
+        let mut s = self.batch_scratch.borrow_mut();
+        s.ensure(&spec, batch);
+        let BatchScratch { acc_x, acc_h, acc_proj, gate_out, gate_act, ln_in, tanh_c, m } =
+            &mut *s;
+        let n = spec.n_cell;
+        let total = batch * n;
+
+        // Pre-activations for f, z (and i when physical); all Q3.12.
+        for (g, idx) in [(Gate::Forget, 1), (Gate::Update, 2), (Gate::Input, 0)] {
+            if g == Gate::Input && !spec.has_input_gate() {
+                continue;
+            }
+            self.gate_forward_batch(
+                g, qx, &state.h, &state.c, acc_x, acc_h, ln_in, &mut gate_out[idx],
+            );
+        }
+
+        // Activations over the flat `[batch * n_cell]` buffers — the
+        // slice kernels are elementwise, so grouping lanes into one call
+        // changes nothing per element.
+        sigmoid_q15_slice(&gate_out[1][..total], 3, &mut gate_act[1][..total]);
+        tanh_q15_slice(&gate_out[2][..total], 3, &mut gate_act[2][..total]);
+        if spec.has_input_gate() {
+            sigmoid_q15_slice(&gate_out[0][..total], 3, &mut gate_act[0][..total]);
+        } else {
+            // CIFG (§3.2.9).
+            for j in 0..total {
+                gate_act[0][j] =
+                    saturate_i32_to_i16((32768 - i32::from(gate_act[1][j])).min(32767));
+            }
+        }
+
+        // Cell update (§3.2.7).
+        let iz_shift = 15 + self.cell_ib as i32;
+        for j in 0..total {
+            let iz = i32::from(gate_act[0][j]) * i32::from(gate_act[2][j]);
+            let fc = i32::from(gate_act[1][j]) * i32::from(state.c.data[j]);
+            let sum = rounding_divide_by_pot(iz, iz_shift)
+                + rounding_divide_by_pot(fc, 15);
+            state.c.data[j] = saturate_i32_to_i16(sum);
+        }
+
+        // Output gate (peephole reads the *new* c, eq 5).
+        self.gate_forward_batch(
+            Gate::Output, qx, &state.h, &state.c, acc_x, acc_h, ln_in, &mut gate_out[3],
+        );
+        sigmoid_q15_slice(&gate_out[3][..total], 3, &mut gate_act[3][..total]);
+
+        // Hidden state (§3.2.7).
+        tanh_q15_slice(&state.c.data[..total], self.cell_ib, &mut tanh_c[..total]);
+        let zp_m = self.hidden_q.zero_point;
+        #[cfg(target_arch = "x86_64")]
+        let simd_done = if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked; bit-exact with the scalar loop.
+            unsafe {
+                crate::nonlin::simd::hidden_rescale_avx2(
+                    &gate_act[3][..total],
+                    &tanh_c[..total],
+                    self.eff_hidden,
+                    zp_m,
+                    &mut m.data[..total],
+                );
+            }
+            true
+        } else {
+            false
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let simd_done = false;
+        if !simd_done {
+            for j in 0..total {
+                let prod = i32::from(gate_act[3][j]) * i32::from(tanh_c[j]);
+                m.data[j] = saturate_i32_to_i8(self.eff_hidden.apply(prod) + zp_m);
+            }
+        }
+
+        // Projection (§3.2.8) or pass-through.
+        match &self.proj {
+            Some(p) => {
+                p.w.matmul_batch(m, &p.bias, acc_proj);
+                let zp_h = self.output_q.zero_point;
+                for (hv, &a) in state.h.data.iter_mut().zip(acc_proj.data.iter()) {
+                    *hv = saturate_i32_to_i8(p.eff.apply(a) + zp_h);
+                }
+            }
+            None => state.h.data.copy_from_slice(&m.data),
+        }
+    }
+
+    /// Batch-major step from float inputs: static input quantization per
+    /// lane, then [`Self::step_batch_q`].
+    pub fn step_batch(&self, x: &Matrix<f32>, state: &mut IntegerBatchState) {
+        assert_eq!(x.cols, self.spec.n_input);
+        let mut qx = self.batch_qx.borrow_mut();
+        qx.resize(x.rows, x.cols);
+        for (q, &v) in qx.data.iter_mut().zip(x.data.iter()) {
+            *q = self.input_q.quantize(f64::from(v));
+        }
+        self.step_batch_q(&qx, state);
+    }
+
+    /// Dequantize one lane of the batched output state.
+    pub fn dequantize_h_lane(&self, state: &IntegerBatchState, lane: usize, out: &mut [f32]) {
+        for (o, &q) in out.iter_mut().zip(state.h.row(lane)) {
+            *o = self.output_q.dequantize(q) as f32;
+        }
+    }
+
+    /// Dequantize the whole batched output state (`out` is
+    /// `[batch, n_output]`).
+    pub fn dequantize_h_batch(&self, state: &IntegerBatchState, out: &mut Matrix<f32>) {
+        assert_eq!(out.rows, state.h.rows);
+        assert_eq!(out.cols, state.h.cols);
+        for (o, &q) in out.data.iter_mut().zip(state.h.data.iter()) {
+            *o = self.output_q.dequantize(q) as f32;
         }
     }
 

@@ -2,10 +2,11 @@
 //! unified engine interface, so Table 1's Float/Hybrid/Integer columns
 //! run the *same* stack code.
 
+use crate::tensor::Matrix;
 use crate::util::Pcg32;
-use super::float_cell::{FloatLstm, FloatState};
+use super::float_cell::{FloatBatchState, FloatLstm, FloatState};
 use super::hybrid_cell::HybridLstm;
-use super::integer_cell::{IntegerLstm, IntegerState};
+use super::integer_cell::{IntegerBatchState, IntegerLstm, IntegerState};
 use super::quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
 use super::spec::{LstmSpec, LstmWeights};
 
@@ -43,6 +44,25 @@ pub enum LayerState {
     Integer(IntegerState),
 }
 
+/// Per-layer batch-major state: lane `b` of every matrix is one
+/// independent stream. Lanes gather/scatter against [`LayerState`]s so
+/// the serving coordinator can pack per-session states into a
+/// cross-session batch and unpack them afterwards.
+pub enum BatchLayerState {
+    Float(FloatBatchState),
+    Integer(IntegerBatchState),
+}
+
+impl BatchLayerState {
+    /// Live lane count.
+    pub fn batch(&self) -> usize {
+        match self {
+            BatchLayerState::Float(s) => s.batch(),
+            BatchLayerState::Integer(s) => s.batch(),
+        }
+    }
+}
+
 /// A stack of LSTM layers under one engine.
 pub struct LstmStack {
     layers: Vec<LayerEngine>,
@@ -56,6 +76,14 @@ pub struct LstmStack {
     /// dequantize/requantize round trip.
     q_inter: std::cell::RefCell<Vec<i8>>,
     int8_handoff: bool,
+    /// Batch-major inter-layer buffers: entry `l` (for `l >= 1`) holds
+    /// layer `l`'s `[batch, n_input]` float input; entry 0 is unused
+    /// (layer 0 reads the caller's input directly).
+    batch_inter: std::cell::RefCell<Vec<Matrix<f32>>>,
+    /// Batch-major int8 handoff buffers: entry `l` holds layer `l`'s
+    /// `[batch, n_input]` quantized input (entry 0 is the boundary
+    /// quantization of the caller's float input).
+    batch_q_inter: std::cell::RefCell<Vec<Matrix<i8>>>,
 }
 
 /// The float master weights for a whole stack, plus calibration.
@@ -146,6 +174,7 @@ impl LstmStack {
                 }
                 _ => false,
             });
+        let depth = layers.len();
         LstmStack {
             layers,
             specs,
@@ -153,6 +182,8 @@ impl LstmStack {
             inter: std::cell::RefCell::new((vec![0.0; max_width], vec![0.0; max_width])),
             q_inter: std::cell::RefCell::new(vec![0; max_width]),
             int8_handoff,
+            batch_inter: std::cell::RefCell::new(vec![Matrix::zeros(0, 0); depth]),
+            batch_q_inter: std::cell::RefCell::new(vec![Matrix::zeros(0, 0); depth]),
         }
     }
 
@@ -183,6 +214,71 @@ impl LstmStack {
                 LayerEngine::Integer(i) => LayerState::Integer(IntegerState::zeros(i)),
             })
             .collect()
+    }
+
+    /// Fresh zero state for `batch` lanes in every layer.
+    pub fn zero_batch_state(&self, batch: usize) -> Vec<BatchLayerState> {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerEngine::Float(f) => {
+                    BatchLayerState::Float(FloatBatchState::zeros(f.spec(), batch))
+                }
+                LayerEngine::Hybrid(h) => {
+                    BatchLayerState::Float(FloatBatchState::zeros(&h.spec, batch))
+                }
+                LayerEngine::Integer(i) => {
+                    BatchLayerState::Integer(IntegerBatchState::zeros(i, batch))
+                }
+            })
+            .collect()
+    }
+
+    /// Pack one session's per-layer states into lane `lane` of a batch
+    /// state.
+    pub fn gather_lane(
+        &self,
+        session: &[LayerState],
+        batch: &mut [BatchLayerState],
+        lane: usize,
+    ) {
+        assert_eq!(session.len(), batch.len());
+        for (s, b) in session.iter().zip(batch.iter_mut()) {
+            match (s, b) {
+                (LayerState::Float(s), BatchLayerState::Float(b)) => b.gather(lane, s),
+                (LayerState::Integer(s), BatchLayerState::Integer(b)) => b.gather(lane, s),
+                _ => panic!("state/engine mismatch"),
+            }
+        }
+    }
+
+    /// Unpack lane `lane` of a batch state back into a session's
+    /// per-layer states.
+    pub fn scatter_lane(
+        &self,
+        batch: &[BatchLayerState],
+        session: &mut [LayerState],
+        lane: usize,
+    ) {
+        assert_eq!(session.len(), batch.len());
+        for (b, s) in batch.iter().zip(session.iter_mut()) {
+            match (b, s) {
+                (BatchLayerState::Float(b), LayerState::Float(s)) => b.scatter(lane, s),
+                (BatchLayerState::Integer(b), LayerState::Integer(s)) => b.scatter(lane, s),
+                _ => panic!("state/engine mismatch"),
+            }
+        }
+    }
+
+    /// Drop lanes `k..` of every layer's batch state (scatter them out
+    /// first).
+    pub fn truncate_batch(&self, batch: &mut [BatchLayerState], k: usize) {
+        for b in batch {
+            match b {
+                BatchLayerState::Float(s) => s.truncate(k),
+                BatchLayerState::Integer(s) => s.truncate(k),
+            }
+        }
     }
 
     /// Weight bytes under this engine (Table 1 size column).
@@ -267,6 +363,130 @@ impl LstmStack {
         {
             engine.dequantize_h(st, out);
         }
+    }
+
+    /// One batch-major step through the whole stack: row `b` of `x`
+    /// (`[batch, n_input]`) advances lane `b` of every layer; the final
+    /// layer's outputs land in the first `n_output` columns of `out`'s
+    /// rows. Bit-exact with per-lane [`Self::step`].
+    pub fn step_batch(
+        &self,
+        x: &Matrix<f32>,
+        states: &mut [BatchLayerState],
+        out: &mut Matrix<f32>,
+    ) {
+        assert_eq!(states.len(), self.layers.len());
+        let batch = x.rows;
+        assert_eq!(x.cols, self.specs[0].n_input);
+        assert_eq!(out.rows, batch);
+        assert!(out.cols >= self.n_output());
+        if self.int8_handoff {
+            return self.step_batch_int8(x, states, out);
+        }
+        let mut bufs = self.batch_inter.borrow_mut();
+        for (l, buf) in bufs.iter_mut().enumerate().skip(1) {
+            buf.resize(batch, self.specs[l].n_input);
+        }
+        let depth = self.layers.len();
+        for idx in 0..depth {
+            let (head, tail) = bufs.split_at_mut(idx + 1);
+            let input: &Matrix<f32> = if idx == 0 { x } else { &head[idx] };
+            let is_last = idx + 1 == depth;
+            let width = self.specs[idx].n_output;
+            match (&self.layers[idx], &mut states[idx]) {
+                (LayerEngine::Float(f), BatchLayerState::Float(st)) => {
+                    f.step_batch(input, st);
+                    if is_last {
+                        for b in 0..batch {
+                            out.row_mut(b)[..width].copy_from_slice(st.h.row(b));
+                        }
+                    } else {
+                        tail[0].data.copy_from_slice(&st.h.data);
+                    }
+                }
+                (LayerEngine::Hybrid(h), BatchLayerState::Float(st)) => {
+                    h.step_batch(input, st);
+                    if is_last {
+                        for b in 0..batch {
+                            out.row_mut(b)[..width].copy_from_slice(st.h.row(b));
+                        }
+                    } else {
+                        tail[0].data.copy_from_slice(&st.h.data);
+                    }
+                }
+                (LayerEngine::Integer(i), BatchLayerState::Integer(st)) => {
+                    i.step_batch(input, st);
+                    if is_last {
+                        for b in 0..batch {
+                            i.dequantize_h_lane(st, b, &mut out.row_mut(b)[..width]);
+                        }
+                    } else {
+                        i.dequantize_h_batch(st, &mut tail[0]);
+                    }
+                }
+                _ => panic!("state/engine mismatch"),
+            }
+        }
+    }
+
+    /// Batched integer fast path: quantize once at the boundary, pass
+    /// int8 `[batch, width]` activations between layers, dequantize once
+    /// at the end — the §3 principle at stack scope, batch-major.
+    fn step_batch_int8(
+        &self,
+        x: &Matrix<f32>,
+        states: &mut [BatchLayerState],
+        out: &mut Matrix<f32>,
+    ) {
+        let batch = x.rows;
+        let mut bufs = self.batch_q_inter.borrow_mut();
+        for (l, buf) in bufs.iter_mut().enumerate() {
+            buf.resize(batch, self.specs[l].n_input);
+        }
+        // Boundary quantization with layer 0's static input scale.
+        let first = match &self.layers[0] {
+            LayerEngine::Integer(i) => i,
+            _ => unreachable!(),
+        };
+        for (q, &v) in bufs[0].data.iter_mut().zip(x.data.iter()) {
+            *q = first.input_q.quantize(f64::from(v));
+        }
+        let depth = self.layers.len();
+        for idx in 0..depth {
+            let (head, tail) = bufs.split_at_mut(idx + 1);
+            let input = &head[idx];
+            let (engine, st) = match (&self.layers[idx], &mut states[idx]) {
+                (LayerEngine::Integer(i), BatchLayerState::Integer(st)) => (i, st),
+                _ => unreachable!(),
+            };
+            engine.step_batch_q(input, st);
+            if idx + 1 == depth {
+                let width = self.specs[idx].n_output;
+                for b in 0..batch {
+                    engine.dequantize_h_lane(st, b, &mut out.row_mut(b)[..width]);
+                }
+            } else {
+                tail[0].data.copy_from_slice(&st.h.data);
+            }
+        }
+    }
+
+    /// Run a batch of equal-length sequences: `xs[t]` is
+    /// `[batch, n_input]`. Returns per-step outputs, each
+    /// `[batch, n_output]`.
+    pub fn run_sequence_batch(
+        &self,
+        xs: &[Matrix<f32>],
+        states: &mut [BatchLayerState],
+    ) -> Vec<Matrix<f32>> {
+        let n_out = self.n_output();
+        let mut outs = Vec::with_capacity(xs.len());
+        for x in xs {
+            let mut out = Matrix::zeros(x.rows, n_out);
+            self.step_batch(x, states, &mut out);
+            outs.push(out);
+        }
+        outs
     }
 
     /// Run a sequence through the stack, returning final-layer outputs.

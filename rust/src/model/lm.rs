@@ -7,12 +7,12 @@ use std::path::Path;
 use anyhow::{ensure, Context, Result};
 
 use crate::lstm::{
-    CalibrationStats, LayerState, LstmSpec, LstmStack, LstmWeights,
-    QuantizeOptions, StackEngine, StackWeights,
+    BatchLayerState, CalibrationStats, LayerState, LstmSpec, LstmStack,
+    LstmWeights, QuantizeOptions, StackEngine, StackWeights,
 };
 use crate::quant::params::SymmetricQuant;
 use crate::quant::quantize_symmetric_i8;
-use crate::tensor::{matvec_f32, Matrix};
+use crate::tensor::{gemm_f32, gemm_i8_i32, matvec_f32, Matrix};
 use super::weights::TensorFile;
 
 /// Character vocabulary shared with `python/compile/model.py`.
@@ -68,6 +68,32 @@ pub struct LmState {
     pub h: Vec<f32>,
     /// Scratch: logits.
     pub logits: Vec<f32>,
+}
+
+/// Batch-major LM state: lane `b` of every matrix is one session's
+/// stream. Built by [`CharLmEngine::new_batch_state`], filled by
+/// [`CharLmEngine::gather_session`], advanced by
+/// [`CharLmEngine::step_tokens`], and drained by
+/// [`CharLmEngine::scatter_session`].
+pub struct LmBatchState {
+    pub layers: Vec<BatchLayerState>,
+    /// Last hidden outputs `[batch, n_output]`.
+    pub h: Matrix<f32>,
+    /// Next-char logits `[batch, VOCAB]`.
+    pub logits: Matrix<f32>,
+    /// One-hot input scratch `[batch, VOCAB]`.
+    x: Matrix<f32>,
+    /// Quantized-head scratch `[batch, n_output]`.
+    qh: Matrix<i8>,
+    /// Head accumulator scratch `[batch, VOCAB]`.
+    acc: Matrix<i32>,
+}
+
+impl LmBatchState {
+    /// Live lane count.
+    pub fn batch(&self) -> usize {
+        self.h.rows
+    }
 }
 
 impl CharLm {
@@ -191,6 +217,103 @@ impl CharLmEngine {
         }
         for (l, &b) in state.logits.iter_mut().zip(&self.out_b) {
             *l += b;
+        }
+    }
+
+    /// Fresh batch-major state for `batch` lanes.
+    pub fn new_batch_state(&self, batch: usize) -> LmBatchState {
+        let n_out = self.stack.n_output();
+        LmBatchState {
+            layers: self.stack.zero_batch_state(batch),
+            h: Matrix::zeros(batch, n_out),
+            logits: Matrix::zeros(batch, VOCAB),
+            x: Matrix::zeros(batch, VOCAB),
+            qh: Matrix::zeros(batch, n_out),
+            acc: Matrix::zeros(batch, VOCAB),
+        }
+    }
+
+    /// Pack one session's state into lane `lane` of a batch state.
+    pub fn gather_session(&self, s: &LmState, bs: &mut LmBatchState, lane: usize) {
+        self.stack.gather_lane(&s.layers, &mut bs.layers, lane);
+    }
+
+    /// Unpack lane `lane` back into a session's state (recurrent layers
+    /// plus the hidden/logits scratch, so the session observes exactly
+    /// what sequential stepping would have left behind).
+    pub fn scatter_session(&self, bs: &LmBatchState, s: &mut LmState, lane: usize) {
+        self.stack.scatter_lane(&bs.layers, &mut s.layers, lane);
+        s.h.copy_from_slice(bs.h.row(lane));
+        s.logits.copy_from_slice(bs.logits.row(lane));
+    }
+
+    /// Resize a batch state to `batch` lanes in place, reusing every
+    /// allocation (the serving loop reuses one state across waves).
+    /// Contents of grown lanes are unspecified — callers must gather
+    /// into every lane before stepping.
+    pub fn resize_batch_state(&self, bs: &mut LmBatchState, batch: usize) {
+        for layer in &mut bs.layers {
+            match layer {
+                BatchLayerState::Float(s) => {
+                    s.c.resize(batch, s.c.cols);
+                    s.h.resize(batch, s.h.cols);
+                }
+                BatchLayerState::Integer(s) => {
+                    s.c.resize(batch, s.c.cols);
+                    s.h.resize(batch, s.h.cols);
+                }
+            }
+        }
+        bs.h.resize(batch, bs.h.cols);
+        bs.logits.resize(batch, bs.logits.cols);
+        bs.x.resize(batch, bs.x.cols);
+        bs.qh.resize(batch, bs.qh.cols);
+        bs.acc.resize(batch, bs.acc.cols);
+    }
+
+    /// Drop lanes `k..` of a batch state (scatter them out first); the
+    /// surviving prefix stays in place.
+    pub fn truncate_batch(&self, bs: &mut LmBatchState, k: usize) {
+        self.stack.truncate_batch(&mut bs.layers, k);
+        bs.h.truncate_rows(k);
+        bs.logits.truncate_rows(k);
+        bs.x.truncate_rows(k);
+        bs.qh.truncate_rows(k);
+        bs.acc.truncate_rows(k);
+    }
+
+    /// Feed one token per lane (`tokens.len()` must equal the live
+    /// batch); row `b` of `state.logits` then holds lane `b`'s next-char
+    /// logits. Bit-exact with per-lane [`Self::step_token`].
+    pub fn step_tokens(&self, tokens: &[usize], state: &mut LmBatchState) {
+        let batch = tokens.len();
+        assert_eq!(batch, state.h.rows);
+        let LmBatchState { layers, h, logits, x, qh, acc } = state;
+        x.data.iter_mut().for_each(|v| *v = 0.0);
+        for (b, &t) in tokens.iter().enumerate() {
+            debug_assert!(t < VOCAB);
+            x.row_mut(b)[t] = 1.0;
+        }
+        self.stack.step_batch(x, layers, h);
+        match &self.head {
+            HeadEngine::Float => gemm_f32(&self.out_w, h, logits),
+            HeadEngine::Integer { w_q, w_scale } => {
+                let s_h = 1.0 / 127.0;
+                let hq = SymmetricQuant::with_scale(s_h);
+                for (q, &v) in qh.data.iter_mut().zip(h.data.iter()) {
+                    *q = hq.quantize_i8(f64::from(v));
+                }
+                gemm_i8_i32(w_q, qh, &[], acc);
+                let k = (w_scale * s_h) as f32;
+                for (l, &a) in logits.data.iter_mut().zip(acc.data.iter()) {
+                    *l = a as f32 * k;
+                }
+            }
+        }
+        for b in 0..batch {
+            for (l, &bv) in logits.row_mut(b).iter_mut().zip(&self.out_b) {
+                *l += bv;
+            }
         }
     }
 

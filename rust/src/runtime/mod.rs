@@ -1,7 +1,15 @@
 //! PJRT runtime: load the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py`, compile them on the CPU PJRT client, and
 //! execute them from the serving path.
+//!
+//! The wrapper depends on the external `xla` crate (PJRT C API
+//! bindings), which cannot be built in the offline environment, so the
+//! whole module is gated behind the `xla-runtime` cargo feature. The
+//! rest of the crate — including the entire integer inference stack and
+//! the serving coordinator — builds and runs without it.
 
+#[cfg(feature = "xla-runtime")]
 pub mod pjrt;
 
+#[cfg(feature = "xla-runtime")]
 pub use pjrt::{CharLmRuntime, HloExecutable};

@@ -53,6 +53,27 @@ impl<T: Copy + Default> Matrix<T> {
         }
     }
 
+    /// Drop rows `k..`, keeping the prefix in place (batch-major engines
+    /// use this to shed finished lanes without repacking). `Vec::truncate`
+    /// retains capacity, so shrinking never deallocates.
+    pub fn truncate_rows(&mut self, k: usize) {
+        assert!(k <= self.rows, "truncate {k} > rows {}", self.rows);
+        self.rows = k;
+        self.data.truncate(k * self.cols);
+    }
+
+    /// Resize to `rows × cols`, reusing the existing allocation when
+    /// capacity suffices (the batch-scratch resize path: per-wave batch
+    /// changes must not reallocate every buffer).
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        if self.cols != cols {
+            self.cols = cols;
+            self.data.clear();
+        }
+        self.rows = rows;
+        self.data.resize(rows * cols, T::default());
+    }
+
     /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()

@@ -3,32 +3,61 @@
 
 use super::dense::Matrix;
 
+/// 4-way unrolled dot product — the one accumulation order shared by
+/// [`matvec_f32`] and [`gemm_f32`], so the batch-major path is bit-exact
+/// with the sequential path (float accumulation order matters).
+#[inline]
+fn dot_f32(row: &[f32], x: &[f32]) -> f32 {
+    let mut acc0 = 0f32;
+    let mut acc1 = 0f32;
+    let mut acc2 = 0f32;
+    let mut acc3 = 0f32;
+    let chunks = x.len() / 4 * 4;
+    let mut c = 0;
+    while c < chunks {
+        acc0 += row[c] * x[c];
+        acc1 += row[c + 1] * x[c + 1];
+        acc2 += row[c + 2] * x[c + 2];
+        acc3 += row[c + 3] * x[c + 3];
+        c += 4;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks..x.len() {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
 /// `out[r] = Σ_c w[r,c] * x[c]` — float matrix-vector product.
+/// 4-way unrolled accumulation: keeps the float baseline honest so
+/// the Table-1 speed ratios are not inflated by a strawman.
 pub fn matvec_f32(w: &Matrix<f32>, x: &[f32], out: &mut [f32]) {
     assert_eq!(w.cols, x.len());
     assert_eq!(w.rows, out.len());
-    // 4-way unrolled accumulation: keeps the float baseline honest so
-    // the Table-1 speed ratios are not inflated by a strawman.
     for (r, o) in out.iter_mut().enumerate() {
-        let row = w.row(r);
-        let mut acc0 = 0f32;
-        let mut acc1 = 0f32;
-        let mut acc2 = 0f32;
-        let mut acc3 = 0f32;
-        let chunks = x.len() / 4 * 4;
-        let mut c = 0;
-        while c < chunks {
-            acc0 += row[c] * x[c];
-            acc1 += row[c + 1] * x[c + 1];
-            acc2 += row[c + 2] * x[c + 2];
-            acc3 += row[c + 3] * x[c + 3];
-            c += 4;
+        *o = dot_f32(w.row(r), x);
+    }
+}
+
+/// Batch-major float GEMM: `x` is `[batch, cols]` activations, `out` is
+/// `[batch, rows]` with `out[b,r] = Σ_c w[r,c] * x[b,c]`. Batch lanes
+/// are blocked in groups of 4 so each weight row stays cache-hot across
+/// lanes; every output element runs the exact [`dot_f32`] accumulation,
+/// so results are bit-identical to per-lane [`matvec_f32`].
+pub fn gemm_f32(w: &Matrix<f32>, x: &Matrix<f32>, out: &mut Matrix<f32>) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!(out.rows, x.rows);
+    assert_eq!(out.cols, w.rows);
+    let mut b = 0usize;
+    while b < x.rows {
+        let bn = (x.rows - b).min(4);
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for i in 0..bn {
+                out.data[(b + i) * w.rows + r] = dot_f32(row, x.row(b + i));
+            }
         }
-        let mut acc = acc0 + acc1 + acc2 + acc3;
-        for i in chunks..x.len() {
-            acc += row[i] * x[i];
-        }
-        *o = acc;
+        b += bn;
     }
 }
 
@@ -81,6 +110,26 @@ mod tests {
                     want += a.at(r, k) * b.at(k, c);
                 }
                 assert!((got.at(r, c) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bit_exact_with_matvec() {
+        let mut rng = Pcg32::seeded(7);
+        for &(rows, cols, batch) in &[(11usize, 13usize, 1usize), (8, 32, 4), (5, 7, 9)] {
+            let mut w = Matrix::<f32>::zeros(rows, cols);
+            rng.fill_uniform_f32(&mut w.data, -1.0, 1.0);
+            let mut x = Matrix::<f32>::zeros(batch, cols);
+            rng.fill_uniform_f32(&mut x.data, -2.0, 2.0);
+            let mut out = Matrix::<f32>::zeros(batch, rows);
+            gemm_f32(&w, &x, &mut out);
+            for b in 0..batch {
+                let mut single = vec![0f32; rows];
+                matvec_f32(&w, x.row(b), &mut single);
+                // Bit-exact, not approximately equal: the batch path
+                // reuses the sequential accumulation order.
+                assert_eq!(out.row(b), &single[..]);
             }
         }
     }

@@ -10,5 +10,5 @@ pub mod matmul;
 pub mod qmatmul;
 
 pub use dense::Matrix;
-pub use matmul::{matvec_f32, matmul_f32};
-pub use qmatmul::{fold_zero_point, matvec_i8_i32, matvec_i8_i32_batch};
+pub use matmul::{gemm_f32, matmul_f32, matvec_f32};
+pub use qmatmul::{fold_zero_point, gemm_i8_i32, matvec_i8_i32};

@@ -115,21 +115,121 @@ pub fn matvec_i8_i32(w: &Matrix<i8>, x: &[i8], folded_bias: &[i32], out: &mut [i
     }
 }
 
-/// Batched variant: `x` is `[batch, cols]` row-major, `out` is
-/// `[batch, rows]` row-major.
-pub fn matvec_i8_i32_batch(
+/// Blocked int8 × int8 → int32 GEMM — the batch-major hot loop of the
+/// serving path. `x` is `[batch, cols]` row-major activations, `out` is
+/// `[batch, rows]`: `out[b,r] = folded_bias[r] + Σ_c w[r,c] * x[b,c]`.
+///
+/// The batch dimension is register-tiled in blocks of 4 lanes so each
+/// 32-byte weight-row chunk is loaded once and multiplied against four
+/// activation rows (the amortization that makes batch > 1 cheaper per
+/// token than repeated [`matvec_i8_i32`] calls). Integer accumulation
+/// is associative, so every tiling is bit-exact with the per-lane
+/// matvec — batch-major engines are property-tested on exactly that.
+pub fn gemm_i8_i32(w: &Matrix<i8>, x: &Matrix<i8>, folded_bias: &[i32], out: &mut Matrix<i32>) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!(out.rows, x.rows);
+    assert_eq!(out.cols, w.rows);
+    assert!(folded_bias.is_empty() || folded_bias.len() == w.rows);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked at runtime.
+            unsafe { gemm_i8_i32_avx2(w, x, folded_bias, out) };
+            return;
+        }
+    }
+    gemm_i8_i32_scalar(w, x, folded_bias, out);
+}
+
+/// Scalar fallback: 4 batch lanes share each weight-row pass so the row
+/// stays hot in cache.
+fn gemm_i8_i32_scalar(
     w: &Matrix<i8>,
     x: &Matrix<i8>,
     folded_bias: &[i32],
     out: &mut Matrix<i32>,
 ) {
-    assert_eq!(x.cols, w.cols);
-    assert_eq!(out.rows, x.rows);
-    assert_eq!(out.cols, w.rows);
-    for b in 0..x.rows {
-        let xr = &x.data[b * x.cols..(b + 1) * x.cols];
+    let mut b = 0usize;
+    while b < x.rows {
+        let bn = (x.rows - b).min(4);
+        for r in 0..w.rows {
+            let row = w.row(r);
+            let bias = folded_bias.get(r).copied().unwrap_or(0);
+            for i in 0..bn {
+                out.data[(b + i) * w.rows + r] = dot_i8_scalar(row, x.row(b + i)) + bias;
+            }
+        }
+        b += bn;
+    }
+}
+
+/// AVX2 inner kernel: a 1×4 register tile — each 32-byte weight-row
+/// chunk is sign-extended once and `pmaddwd`-accumulated against four
+/// batch lanes. Remainder lanes (< 4) fall back to the matvec kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_i8_i32_avx2(
+    w: &Matrix<i8>,
+    x: &Matrix<i8>,
+    folded_bias: &[i32],
+    out: &mut Matrix<i32>,
+) {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(acc: __m256i) -> i32 {
+        let hi128 = _mm256_extracti128_si256(acc, 1);
+        let lo128 = _mm256_castsi256_si128(acc);
+        let sum128 = _mm_add_epi32(hi128, lo128);
+        let shuf = _mm_add_epi32(sum128, _mm_shuffle_epi32(sum128, 0b00_00_11_10));
+        let shuf2 = _mm_add_epi32(shuf, _mm_shuffle_epi32(shuf, 0b00_00_00_01));
+        _mm_cvtsi128_si32(shuf2)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen(v: __m256i) -> (__m256i, __m256i) {
+        (
+            _mm256_cvtepi8_epi16(_mm256_castsi256_si128(v)),
+            _mm256_cvtepi8_epi16(_mm256_extracti128_si256(v, 1)),
+        )
+    }
+
+    let n = w.cols;
+    let mut b = 0usize;
+    while b + 4 <= x.rows {
+        let lanes = [x.row(b), x.row(b + 1), x.row(b + 2), x.row(b + 3)];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let mut i = 0usize;
+            while i + 32 <= n {
+                let wv = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+                let (w_lo, w_hi) = widen(wv);
+                for (l, a) in lanes.iter().zip(acc.iter_mut()) {
+                    let xv = _mm256_loadu_si256(l.as_ptr().add(i) as *const __m256i);
+                    let (x_lo, x_hi) = widen(xv);
+                    *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_lo, x_lo));
+                    *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_hi, x_hi));
+                }
+                i += 32;
+            }
+            let bias = folded_bias.get(r).copied().unwrap_or(0);
+            for (li, (l, a)) in lanes.iter().zip(acc.iter()).enumerate() {
+                let mut total = hsum_epi32(*a);
+                for j in i..n {
+                    total += i32::from(*row.get_unchecked(j)) * i32::from(*l.get_unchecked(j));
+                }
+                out.data[(b + li) * w.rows + r] = total + bias;
+            }
+        }
+        b += 4;
+    }
+    while b < x.rows {
         let or = &mut out.data[b * w.rows..(b + 1) * w.rows];
-        matvec_i8_i32(w, xr, folded_bias, or);
+        matvec_i8_i32(w, x.row(b), folded_bias, or);
+        b += 1;
     }
 }
 
@@ -221,12 +321,54 @@ mod tests {
         }
         let bias: Vec<i32> = (0..8).map(|_| rng.range_i32(-100, 100)).collect();
         let mut out = Matrix::<i32>::zeros(4, 8);
-        matvec_i8_i32_batch(&w, &x, &bias, &mut out);
+        gemm_i8_i32(&w, &x, &bias, &mut out);
         for b in 0..4 {
             let mut single = vec![0i32; 8];
             matvec_i8_i32(&w, x.row(b), &bias, &mut single);
             assert_eq!(out.row(b), &single[..]);
         }
+    }
+
+    #[test]
+    fn gemm_matches_matvec_per_lane() {
+        // The batch-major GEMM must be bit-exact with the per-lane
+        // matvec for every shape, including non-multiple-of-32 depths
+        // and non-multiple-of-4 batches (tile remainders).
+        proptest::check("gemm-i8-eq-matvec", |rng| {
+            let rows = 1 + rng.below(24) as usize;
+            let cols = 1 + rng.below(80) as usize;
+            let batch = 1 + rng.below(9) as usize;
+            let w = random_w(rng, rows, cols);
+            let mut x = Matrix::<i8>::zeros(batch, cols);
+            for v in &mut x.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let bias: Vec<i32> =
+                (0..rows).map(|_| rng.range_i32(-100_000, 100_000)).collect();
+            let mut out = Matrix::<i32>::zeros(batch, rows);
+            gemm_i8_i32(&w, &x, &bias, &mut out);
+            for b in 0..batch {
+                let mut single = vec![0i32; rows];
+                matvec_i8_i32(&w, x.row(b), &bias, &mut single);
+                assert_eq!(out.row(b), &single[..], "lane {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_scalar_matches_dispatch() {
+        let mut rng = Pcg32::seeded(41);
+        let w = random_w(&mut rng, 13, 70);
+        let mut x = Matrix::<i8>::zeros(6, 70);
+        for v in &mut x.data {
+            *v = rng.range_i32(-128, 127) as i8;
+        }
+        let bias: Vec<i32> = (0..13).map(|_| rng.range_i32(-500, 500)).collect();
+        let mut out_a = Matrix::<i32>::zeros(6, 13);
+        let mut out_b = Matrix::<i32>::zeros(6, 13);
+        gemm_i8_i32(&w, &x, &bias, &mut out_a);
+        gemm_i8_i32_scalar(&w, &x, &bias, &mut out_b);
+        assert_eq!(out_a.data, out_b.data);
     }
 
     #[test]

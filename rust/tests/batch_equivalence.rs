@@ -1,0 +1,335 @@
+//! Batch/sequential equivalence: the batch-major refactor's contract is
+//! that `step_batch` is **bit-exact** with N independent `step` calls —
+//! for all three engines, across every topology variant (peephole,
+//! projection, LN, CIFG), at the cell, stack, and bidirectional levels —
+//! and that `BatchState` gather/scatter round-trips lanes losslessly.
+//!
+//! Float exactness holds because the batched GEMM reuses the sequential
+//! kernels' accumulation order; integer exactness holds because integer
+//! addition is associative; hybrid exactness holds because dynamic
+//! activation scales are still computed per lane.
+
+use iqrnn::lstm::{
+    quantize_lstm, BiLstm, CalibrationStats, FloatBatchState, FloatLstm,
+    FloatState, IntegerBatchState, IntegerState, LstmSpec, LstmStack,
+    LstmWeights, QuantizeOptions, StackEngine, StackWeights,
+};
+use iqrnn::lstm::hybrid_cell::HybridLstm;
+use iqrnn::quant::recipe::VariantFlags;
+use iqrnn::tensor::Matrix;
+use iqrnn::util::{proptest, Pcg32};
+
+/// All 16 topology combinations: the 8 LN/proj/peephole variants, each
+/// with and without CIFG.
+fn variant_specs() -> Vec<LstmSpec> {
+    let mut specs = Vec::new();
+    for flags in VariantFlags::all_eight() {
+        for cifg in [false, true] {
+            let mut f = flags;
+            f.cifg = cifg;
+            let mut spec = LstmSpec::plain(6, 12);
+            spec.flags = f;
+            if f.projection {
+                spec.n_output = 8;
+            }
+            specs.push(spec);
+        }
+    }
+    specs
+}
+
+fn random_input(rng: &mut Pcg32, batch: usize, dim: usize) -> Matrix<f32> {
+    let mut x = Matrix::<f32>::zeros(batch, dim);
+    for v in &mut x.data {
+        *v = rng.normal_f32(0.0, 1.0);
+    }
+    x
+}
+
+fn calib_seqs(rng: &mut Pcg32, n: usize, t: usize, dim: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..n)
+        .map(|_| {
+            (0..t)
+                .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn float_step_batch_bit_exact_all_variants() {
+    for spec in variant_specs() {
+        proptest::run_cases(&format!("float-batch-{}", spec.flags.label()), 8, |rng| {
+            let w = LstmWeights::random(spec, rng);
+            let cell = FloatLstm::new(w);
+            let batch = 1 + rng.below(5) as usize;
+            let steps = 1 + rng.below(5) as usize;
+            let mut seq: Vec<FloatState> =
+                (0..batch).map(|_| FloatState::zeros(&spec)).collect();
+            let mut bs = FloatBatchState::zeros(&spec, batch);
+            for _ in 0..steps {
+                let x = random_input(rng, batch, spec.n_input);
+                for (lane, st) in seq.iter_mut().enumerate() {
+                    cell.step(x.row(lane), st);
+                }
+                cell.step_batch(&x, &mut bs);
+            }
+            for (lane, st) in seq.iter().enumerate() {
+                let mut unpacked = FloatState::zeros(&spec);
+                bs.scatter(lane, &mut unpacked);
+                assert_eq!(unpacked.c, st.c, "lane {lane} cell state");
+                assert_eq!(unpacked.h, st.h, "lane {lane} output");
+            }
+        });
+    }
+}
+
+#[test]
+fn hybrid_step_batch_bit_exact_all_variants() {
+    for spec in variant_specs() {
+        proptest::run_cases(&format!("hybrid-batch-{}", spec.flags.label()), 8, |rng| {
+            let w = LstmWeights::random(spec, rng);
+            let cell = HybridLstm::from_weights(&w);
+            let batch = 1 + rng.below(5) as usize;
+            let steps = 1 + rng.below(5) as usize;
+            let mut seq: Vec<FloatState> =
+                (0..batch).map(|_| FloatState::zeros(&spec)).collect();
+            let mut bs = FloatBatchState::zeros(&spec, batch);
+            for _ in 0..steps {
+                let x = random_input(rng, batch, spec.n_input);
+                for (lane, st) in seq.iter_mut().enumerate() {
+                    cell.step(x.row(lane), st);
+                }
+                cell.step_batch(&x, &mut bs);
+            }
+            for (lane, st) in seq.iter().enumerate() {
+                let mut unpacked = FloatState::zeros(&spec);
+                bs.scatter(lane, &mut unpacked);
+                assert_eq!(unpacked.c, st.c, "lane {lane} cell state");
+                assert_eq!(unpacked.h, st.h, "lane {lane} output");
+            }
+        });
+    }
+}
+
+#[test]
+fn integer_step_batch_bit_exact_all_variants() {
+    for spec in variant_specs() {
+        for sparse in [false, true] {
+            proptest::run_cases(
+                &format!("int-batch-{}-sp{}", spec.flags.label(), sparse),
+                4,
+                |rng| {
+                    let w = LstmWeights::random(spec, rng);
+                    let float = FloatLstm::new(w.clone());
+                    let calib = calib_seqs(rng, 2, 6, spec.n_input);
+                    let stats = CalibrationStats::collect(&float, &calib);
+                    let opts = QuantizeOptions {
+                        sparse_weights: sparse,
+                        naive_layernorm: false,
+                    };
+                    let cell = quantize_lstm(&w, &stats, opts);
+                    let batch = 1 + rng.below(5) as usize;
+                    let steps = 1 + rng.below(5) as usize;
+                    let mut seq: Vec<IntegerState> =
+                        (0..batch).map(|_| IntegerState::zeros(&cell)).collect();
+                    let mut bs = IntegerBatchState::zeros(&cell, batch);
+                    for _ in 0..steps {
+                        let x = random_input(rng, batch, spec.n_input);
+                        for (lane, st) in seq.iter_mut().enumerate() {
+                            cell.step(x.row(lane), st);
+                        }
+                        cell.step_batch(&x, &mut bs);
+                    }
+                    for (lane, st) in seq.iter().enumerate() {
+                        let mut unpacked = IntegerState::zeros(&cell);
+                        bs.scatter(lane, &mut unpacked);
+                        assert_eq!(unpacked.c, st.c, "lane {lane} cell state");
+                        assert_eq!(unpacked.h, st.h, "lane {lane} output");
+                    }
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_state_gather_scatter_round_trips() {
+    proptest::run_cases("gather-scatter-roundtrip", 32, |rng| {
+        let spec = LstmSpec::plain(5, 9);
+        let batch = 2 + rng.below(4) as usize;
+        // Float round trip through a random lane permutation.
+        let mut states: Vec<FloatState> = (0..batch)
+            .map(|_| {
+                let mut s = FloatState::zeros(&spec);
+                for v in &mut s.c {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                for v in &mut s.h {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                s
+            })
+            .collect();
+        let mut bs = FloatBatchState::zeros(&spec, batch);
+        for (lane, s) in states.iter().enumerate() {
+            bs.gather(lane, s);
+        }
+        let originals = states.clone();
+        // Clobber, then scatter back.
+        for s in &mut states {
+            s.c.iter_mut().for_each(|v| *v = f32::NAN);
+            s.h.iter_mut().for_each(|v| *v = f32::NAN);
+        }
+        for (lane, s) in states.iter_mut().enumerate() {
+            bs.scatter(lane, s);
+        }
+        for (a, b) in states.iter().zip(&originals) {
+            assert_eq!(a.c, b.c);
+            assert_eq!(a.h, b.h);
+        }
+        // Truncation keeps the prefix lanes intact.
+        bs.truncate(batch - 1);
+        assert_eq!(bs.batch(), batch - 1);
+        for lane in 0..batch - 1 {
+            let mut s = FloatState::zeros(&spec);
+            bs.scatter(lane, &mut s);
+            assert_eq!(s.c, originals[lane].c);
+        }
+    });
+}
+
+fn build_stack_pair(
+    flags: VariantFlags,
+    depth: usize,
+    seed: u64,
+) -> (StackWeights, Vec<CalibrationStats>) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut spec = LstmSpec::plain(7, 10);
+    spec.flags = flags;
+    if flags.projection {
+        spec.n_output = 8;
+    }
+    let weights = StackWeights::random(7, spec, depth, &mut rng);
+    let calib = calib_seqs(&mut rng, 3, 8, 7);
+    let stats = weights.calibrate(&calib);
+    (weights, stats)
+}
+
+#[test]
+fn stack_step_batch_bit_exact_three_engines() {
+    // Covers the int8 inter-layer handoff fast path (integer engine,
+    // uniform calibration) and the float handoff path.
+    let mut cases: Vec<VariantFlags> = vec![VariantFlags::plain()];
+    let mut ln_proj = VariantFlags::plain();
+    ln_proj.layer_norm = true;
+    ln_proj.peephole = true;
+    cases.push(ln_proj);
+    let mut cifg = VariantFlags::plain();
+    cifg.cifg = true;
+    cases.push(cifg);
+    for flags in cases {
+        let (weights, stats) = build_stack_pair(flags, 3, 71);
+        for engine in StackEngine::ALL {
+            let stats_opt =
+                if engine == StackEngine::Integer { Some(&stats[..]) } else { None };
+            let stack = LstmStack::build(&weights, engine, stats_opt, Default::default());
+            let mut rng = Pcg32::seeded(72);
+            let batch = 4usize;
+            let steps = 6usize;
+            let mut seq_states: Vec<_> = (0..batch).map(|_| stack.zero_state()).collect();
+            let mut bstate = stack.zero_batch_state(batch);
+            let n_out = stack.n_output();
+            let mut seq_out = vec![0f32; n_out];
+            let mut batch_out = Matrix::<f32>::zeros(batch, n_out);
+            for _ in 0..steps {
+                let x = random_input(&mut rng, batch, 7);
+                stack.step_batch(&x, &mut bstate, &mut batch_out);
+                for (lane, states) in seq_states.iter_mut().enumerate() {
+                    stack.step(x.row(lane), states, &mut seq_out);
+                    assert_eq!(
+                        batch_out.row(lane),
+                        &seq_out[..],
+                        "{engine:?} {flags:?} lane {lane} output"
+                    );
+                }
+            }
+            // Per-layer states agree bit-exactly after the run.
+            for (lane, states) in seq_states.iter_mut().enumerate() {
+                let mut unpacked = stack.zero_state();
+                stack.scatter_lane(&bstate, &mut unpacked, lane);
+                for (a, b) in unpacked.iter().zip(states.iter()) {
+                    match (a, b) {
+                        (
+                            iqrnn::lstm::LayerState::Float(a),
+                            iqrnn::lstm::LayerState::Float(b),
+                        ) => {
+                            assert_eq!(a.c, b.c);
+                            assert_eq!(a.h, b.h);
+                        }
+                        (
+                            iqrnn::lstm::LayerState::Integer(a),
+                            iqrnn::lstm::LayerState::Integer(b),
+                        ) => {
+                            assert_eq!(a.c, b.c);
+                            assert_eq!(a.h, b.h);
+                        }
+                        _ => panic!("layer state kind mismatch"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bidirectional_batch_matches_sequential() {
+    let mut rng = Pcg32::seeded(91);
+    let spec = LstmSpec::plain(6, 10);
+    let fwd = StackWeights::random(6, spec, 2, &mut rng);
+    let bwd = StackWeights::random(6, spec, 2, &mut rng);
+    let calib = calib_seqs(&mut rng, 3, 8, 6);
+    let rev: Vec<Vec<Vec<f32>>> =
+        calib.iter().map(|s| s.iter().rev().cloned().collect()).collect();
+    let sf = fwd.calibrate(&calib);
+    let sb = bwd.calibrate(&rev);
+    for engine in StackEngine::ALL {
+        let (of, ob) = if engine == StackEngine::Integer {
+            (Some(&sf[..]), Some(&sb[..]))
+        } else {
+            (None, None)
+        };
+        let bi = BiLstm::build(&fwd, &bwd, engine, of, ob, Default::default());
+        let batch = 3usize;
+        let steps = 7usize;
+        let seqs: Vec<Vec<Vec<f32>>> = (0..batch)
+            .map(|_| {
+                (0..steps)
+                    .map(|_| (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        // Batch-major inputs: xs[t] packs lane b's step-t vector.
+        let xs: Vec<Matrix<f32>> = (0..steps)
+            .map(|t| {
+                let mut m = Matrix::<f32>::zeros(batch, 6);
+                for b in 0..batch {
+                    m.row_mut(b).copy_from_slice(&seqs[b][t]);
+                }
+                m
+            })
+            .collect();
+        let batched = bi.run_sequence_batch(&xs);
+        assert_eq!(batched.len(), steps);
+        for (lane, seq) in seqs.iter().enumerate() {
+            let sequential = bi.run_sequence(seq);
+            for t in 0..steps {
+                assert_eq!(
+                    batched[t].row(lane),
+                    &sequential[t][..],
+                    "{engine:?} lane {lane} step {t}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored shim provides exactly the subset the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait (on both
+//! `Result` and `Option`), and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Error values carry a chain of context strings; `{:#}`
+//! formatting prints the whole chain like real anyhow.
+
+use std::fmt;
+
+/// A string-chained error value. The head of the chain is the most
+/// recently attached context; `{}` prints the head, `{:#}` the full
+/// `head: ...: root` chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Attach outer context (becomes the new chain head).
+    pub fn push_context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join("\n\nCaused by:\n    "))
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion never overlaps with `From<Error> for Error`
+// (the same trick real anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension, implemented for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("parsing number")?;
+        ensure!(n < 100, "number {n} too large");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversion_and_context_chain() {
+        let e = parse("abc").unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing number: "), "{full}");
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("123").unwrap_err();
+        assert_eq!(format!("{e}"), "number 123 too large");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        let e = anyhow!("boom {}", 7);
+        assert_eq!(format!("{e}"), "boom 7");
+        fn f() -> Result<()> {
+            bail!("bad");
+        }
+        assert!(f().is_err());
+        fn g() -> Result<()> {
+            ensure!(1 + 1 == 2);
+            Ok(())
+        }
+        assert!(g().is_ok());
+    }
+}
