@@ -12,7 +12,7 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{
     FloatLstm, FloatState, IntegerState, LstmSpec, LstmWeights, QuantizeOptions,
     StackEngine, StackWeights,
@@ -166,6 +166,7 @@ fn batching_sweep() {
                 batch: BatchPolicy { max_batch: mb, max_wait: Duration::from_millis(2) },
                 engine: StackEngine::Integer,
                 opts: QuantizeOptions::default(),
+                mode: SchedulerMode::Continuous,
             },
         );
         let report = server.run_trace(&trace, 50.0).unwrap();

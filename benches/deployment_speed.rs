@@ -6,15 +6,18 @@
 //! what removes the per-element zero-point work from the inner loop.
 //! Run: `cargo bench --bench deployment_speed`.
 
+use iqrnn::coordinator::{simulate_trace, SchedulerMode};
 use iqrnn::eval::metrics::RtFactor;
 use iqrnn::lstm::{
     FloatState, IntegerState, LstmSpec, QuantizeOptions, StackEngine, StackWeights,
 };
 use iqrnn::lstm::{LayerState, LstmStack};
+use iqrnn::model::lm::{CharLm, VOCAB};
 use iqrnn::tensor::qmatmul::{fold_zero_point, matvec_i8_i32, matvec_i8_i32_unfolded};
 use iqrnn::tensor::Matrix;
 use iqrnn::util::timer::{bench, fmt_secs};
 use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
 
 /// Batch sizes of the batch-major sweep.
 const BATCH_SWEEP: [usize; 5] = [1, 4, 8, 16, 32];
@@ -171,6 +174,85 @@ fn main() {
         match std::fs::write("BENCH_batch.json", &json) {
             Ok(()) => println!("wrote BENCH_batch.json"),
             Err(e) => eprintln!("could not write BENCH_batch.json: {e}"),
+        }
+    }
+
+    // Continuous-batching sweep: deterministic virtual-time replay of
+    // Poisson / bursty / staggered traces through the lane scheduler,
+    // wave-at-a-time vs continuous. Occupancy here is exactly
+    // reproducible (no threads, no wall clock); tokens/sec is the
+    // compute-side throughput of the replay. Emits BENCH_continuous.json.
+    {
+        let mut rng2 = Pcg32::seeded(7);
+        let spec = LstmSpec::plain(VOCAB, 96);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng2);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, 96);
+        rng2.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 96, depth: 1 };
+        let calib: Vec<Vec<usize>> = (0..6)
+            .map(|_| (0..48).map(|_| rng2.below(VOCAB as u32) as usize).collect())
+            .collect();
+        let stats = lm.calibrate(&calib);
+        let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+
+        let traces: Vec<(&str, RequestTrace)> = vec![
+            ("poisson", RequestTrace::generate(96, 900.0, 48, VOCAB, 5)),
+            ("bursty", RequestTrace::generate_bursty(6, 16, 30.0, 48, VOCAB, 6)),
+            ("staggered", RequestTrace::generate_staggered(24, 6.0, 64, VOCAB, 7)),
+        ];
+        println!("\n== continuous batching vs wave-at-a-time (8 lanes, Integer) ==");
+        println!(
+            "{:<10} {:<11} {:>12} {:>10} {:>8} {:>6}",
+            "trace", "mode", "tokens/sec", "occupancy", "steps", "peak"
+        );
+        let mut entries: Vec<String> = Vec::new();
+        for (name, trace) in &traces {
+            let mut occs = Vec::new();
+            for mode in [SchedulerMode::Wave, SchedulerMode::Continuous] {
+                let t0 = std::time::Instant::now();
+                let (sched, done) = simulate_trace(&engine, trace, 8, mode, 1.0);
+                let secs = t0.elapsed().as_secs_f64();
+                assert_eq!(done.len(), trace.requests.len());
+                let st = sched.stats();
+                let tps = st.lane_steps as f64 / secs;
+                println!(
+                    "{:<10} {:<11} {:>12.0} {:>10.3} {:>8} {:>6}",
+                    name,
+                    mode.label(),
+                    tps,
+                    st.mean_occupancy(),
+                    st.batched_steps,
+                    st.peak_lanes
+                );
+                entries.push(format!(
+                    "    {{\"trace\": \"{}\", \"mode\": \"{}\", \"tokens_per_sec\": {:.1}, \
+                     \"occupancy\": {:.4}, \"batched_steps\": {}, \"peak_lanes\": {}}}",
+                    name,
+                    mode.label(),
+                    tps,
+                    st.mean_occupancy(),
+                    st.batched_steps,
+                    st.peak_lanes
+                ));
+                occs.push(st.mean_occupancy());
+            }
+            if occs[1] > occs[0] {
+                println!(
+                    "  -> {name}: continuous lifts occupancy {:.3} -> {:.3} ({:+.1}%)",
+                    occs[0],
+                    occs[1],
+                    (occs[1] / occs[0] - 1.0) * 100.0
+                );
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"continuous_batching\",\n  \"config\": {{\"hidden\": 96, \
+             \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0}},\n  \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_continuous.json", &json) {
+            Ok(()) => println!("wrote BENCH_continuous.json"),
+            Err(e) => eprintln!("could not write BENCH_continuous.json: {e}"),
         }
     }
 

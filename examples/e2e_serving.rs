@@ -14,7 +14,7 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{CharLm, VOCAB};
 use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets, EvalSet};
@@ -74,11 +74,36 @@ fn main() -> anyhow::Result<()> {
                 batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
                 engine,
                 opts: QuantizeOptions::default(),
+                mode: SchedulerMode::Continuous,
             },
         );
         let report = server.run_trace(&trace, 4.0)?;
         report.print();
         reports.push(report);
+    }
+
+    // --- Continuous batching vs the PR 1 wave-at-a-time baseline -----
+    println!("\n== scheduler A/B: wave-at-a-time vs continuous (Integer) ==");
+    for mode in [SchedulerMode::Wave, SchedulerMode::Continuous] {
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+                engine: StackEngine::Integer,
+                opts: QuantizeOptions::default(),
+                mode,
+            },
+        );
+        let report = server.run_trace(&trace, 4.0)?;
+        report.print();
+        if mode == SchedulerMode::Continuous {
+            println!(
+                "  (lanes turned over {} times; mean admission wait {:.2}ms)",
+                report.lane_admissions, report.mean_admission_ms
+            );
+        }
     }
     let speedup_float = reports[0].compute_secs / reports[2].compute_secs;
     let speedup_hybrid = reports[1].compute_secs / reports[2].compute_secs;

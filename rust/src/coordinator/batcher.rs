@@ -4,8 +4,19 @@
 //! waiting at most `max_wait` for stragglers once the first item is in
 //! hand — the standard throughput/latency dial of serving systems.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
+
+/// Result of a non-blocking [`Batcher::poll_batch`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Poll<T> {
+    /// One or more items were waiting (at most `max_batch`).
+    Items(Vec<T>),
+    /// Nothing queued right now; the channel is still open.
+    Empty,
+    /// The channel is closed and fully drained.
+    Closed,
+}
 
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy)]
@@ -63,6 +74,29 @@ impl<T> Batcher<T> {
         }
         Some(batch)
     }
+
+    /// Non-blocking drain: gather whatever is queued right now, up to
+    /// `max_batch`, without waiting for stragglers. This is the
+    /// continuous-batching ingest path — the worker calls it *between
+    /// token positions* so newly-arrived sessions can join live waves
+    /// instead of queueing behind a whole wave.
+    pub fn poll_batch(&self) -> Poll<T> {
+        let mut items = Vec::new();
+        while items.len() < self.policy.max_batch {
+            match self.rx.try_recv() {
+                Ok(item) => items.push(item),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    return if items.is_empty() { Poll::Closed } else { Poll::Items(items) };
+                }
+            }
+        }
+        if items.is_empty() {
+            Poll::Empty
+        } else {
+            Poll::Items(items)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +145,65 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn next_batch_flushes_at_max_without_waiting_deadline() {
+        // The max-batch flush trigger must fire immediately even under
+        // an absurd deadline — if it waited, this test would hang.
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn poll_batch_is_non_blocking_on_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(60) },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.poll_batch(), Poll::Empty);
+        // Never waits for the straggler deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        drop(tx);
+        assert_eq!(b.poll_batch(), Poll::Closed);
+    }
+
+    #[test]
+    fn poll_batch_drains_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.poll_batch(), Poll::Items(vec![0, 1, 2, 3]));
+        assert_eq!(b.poll_batch(), Poll::Items(vec![4, 5, 6, 7]));
+        assert_eq!(b.poll_batch(), Poll::Items(vec![8, 9]));
+        assert_eq!(b.poll_batch(), Poll::Empty);
+    }
+
+    #[test]
+    fn poll_batch_yields_remainder_then_closed() {
+        let (tx, rx) = channel();
+        tx.send(7u32).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert_eq!(b.poll_batch(), Poll::Items(vec![7, 8]));
+        assert_eq!(b.poll_batch(), Poll::Closed);
+        assert_eq!(b.poll_batch(), Poll::Closed);
     }
 }

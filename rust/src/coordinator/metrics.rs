@@ -7,6 +7,8 @@ use crate::eval::metrics::{LatencyStats, RtFactor};
 #[derive(Debug)]
 pub struct ServingReport {
     pub engine: &'static str,
+    /// Scheduling discipline ("continuous" or "wave").
+    pub mode: &'static str,
     pub requests: usize,
     pub tokens: usize,
     pub wall_secs: f64,
@@ -14,6 +16,10 @@ pub struct ServingReport {
     pub compute_secs: f64,
     pub latency: LatencyStats,
     pub workers: usize,
+    /// Mean items per *ingest* (batcher pull that yielded items). In
+    /// wave mode this approximates execution batch width; in continuous
+    /// mode it measures arrival burstiness only — compare execution
+    /// width across modes with [`Self::mean_occupancy`], not this.
     pub mean_batch: f64,
     /// Batched step invocations across all workers (one per token
     /// position per wave).
@@ -23,6 +29,12 @@ pub struct ServingReport {
     pub lane_steps: usize,
     /// Widest cross-session batch any worker ran.
     pub peak_lanes: usize,
+    /// Lane turnover: admissions into live waves across all workers.
+    pub lane_admissions: usize,
+    /// Lane turnover: retirements out of live waves across all workers.
+    pub lane_retirements: usize,
+    /// Mean submission→admission wait across admitted items.
+    pub mean_admission_ms: f64,
 }
 
 impl ServingReport {
@@ -50,9 +62,11 @@ impl ServingReport {
 
     pub fn print(&self) {
         println!(
-            "  {:<8} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
-             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} peak={}",
+            "  {:<8} {:<10} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
+             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} peak={} \
+             adm={} wait={:.2}ms",
             self.engine,
+            self.mode,
             self.requests,
             self.tokens,
             self.wall_secs,
@@ -63,6 +77,8 @@ impl ServingReport {
             self.mean_batch,
             self.mean_occupancy(),
             self.peak_lanes,
+            self.lane_admissions,
+            self.mean_admission_ms,
         );
     }
 }

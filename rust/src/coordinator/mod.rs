@@ -8,7 +8,11 @@
 //!
 //! * [`session`] — per-stream persistent LSTM state with lifecycle;
 //! * [`router`] — sticky hash routing of sessions onto workers;
-//! * [`batcher`] — bounded micro-batching with a latency deadline;
+//! * [`batcher`] — bounded micro-batching with a latency deadline,
+//!   plus the non-blocking `poll_batch` continuous-batching ingest;
+//! * [`scheduler`] — the continuous-batching lane scheduler (admit /
+//!   retire / compact between token positions) and its deterministic
+//!   virtual-time simulator;
 //! * [`server`] — worker threads, each owning an engine instance and
 //!   its sessions; open-loop trace replay with latency accounting;
 //! * [`metrics`] — counters + the RT-factor / latency reports.
@@ -16,11 +20,16 @@
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, Poll};
 pub use metrics::ServingReport;
 pub use router::Router;
+pub use scheduler::{
+    simulate_trace, ContinuousScheduler, SchedulerMode, SchedulerStats,
+    StreamDone, StreamItem,
+};
 pub use server::{Server, ServerConfig};
 pub use session::{Session, SessionId, SessionManager};

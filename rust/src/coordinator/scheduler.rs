@@ -1,0 +1,461 @@
+//! Continuous batching: the lane scheduler that keeps the batched
+//! int8 path saturated under streaming arrivals.
+//!
+//! PR 1's coordinator packed *waves*: every lane of a batch started and
+//! (modulo prefix truncation) ended together, so occupancy collapsed
+//! whenever sessions arrived mid-wave or finished at different lengths.
+//! This scheduler runs one *persistent* wave whose lanes turn over
+//! independently:
+//!
+//! * between token positions, pending sessions are admitted into free
+//!   lanes ([`ContinuousScheduler::admit_ready`] →
+//!   [`CharLmEngine::admit_lane`]);
+//! * every [`ContinuousScheduler::step`] advances all live lanes one
+//!   token position with a single batched step;
+//! * lanes whose items are exhausted are scattered back to their
+//!   sessions and compacted out
+//!   ([`CharLmEngine::compact_lanes`]), so live lanes stay a dense
+//!   prefix and the GEMM never touches dead rows.
+//!
+//! Scheduling invariants (locked down by
+//! `rust/tests/continuous_batching.rs`):
+//!
+//! 1. at most one lane per session at any time (a stream's state must
+//!    advance in arrival order);
+//! 2. the batch width always equals the live lane count;
+//! 3. every session's output is bit-exact with running it alone on the
+//!    sequential `step` path — admission order, lane moves, and
+//!    compaction never touch the numerics.
+//!
+//! The scheduler is deliberately free of threads and wall-clock
+//! decisions: the serving worker drives it from a [`Batcher`], and
+//! [`simulate_trace`] drives it from a virtual clock so tests and
+//! benches get deterministic, replayable schedules.
+//!
+//! [`Batcher`]: super::batcher::Batcher
+//! [`CharLmEngine::admit_lane`]: crate::model::lm::CharLmEngine::admit_lane
+//! [`CharLmEngine::compact_lanes`]: crate::model::lm::CharLmEngine::compact_lanes
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::model::lm::{nll_bits, CharLmEngine, LmBatchState};
+use crate::workload::synth::RequestTrace;
+use super::session::{SessionId, SessionManager};
+
+/// Which scheduling discipline the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// PR 1 baseline: admit only into an empty batch — every wave is
+    /// packed once and runs to completion.
+    Wave,
+    /// Admit into free lanes between token positions.
+    Continuous,
+}
+
+impl SchedulerMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerMode::Wave => "wave",
+            SchedulerMode::Continuous => "continuous",
+        }
+    }
+}
+
+/// One unit of work: a request's token chunk for a session.
+pub struct StreamItem {
+    pub session: SessionId,
+    pub tokens: Vec<usize>,
+    /// When the request entered the system (end-to-end latency base).
+    pub submitted: Instant,
+}
+
+/// Completion record for one finished item.
+#[derive(Debug, Clone)]
+pub struct StreamDone {
+    pub session: SessionId,
+    pub tokens: usize,
+    /// Total next-char negative log2-likelihood over the item.
+    pub nll_bits: f64,
+    pub latency_ms: f64,
+}
+
+/// One live lane of the persistent wave.
+struct Lane {
+    session: SessionId,
+    tokens: Vec<usize>,
+    /// Next token position to feed.
+    pos: usize,
+    /// Accumulated nll over this item (token order, f64).
+    nll: f64,
+    submitted: Instant,
+}
+
+/// Counters the scheduler keeps about its own behaviour.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    /// Batched step invocations (one per token position of the wave).
+    pub batched_steps: usize,
+    /// Lane-steps executed (= tokens through the batched path).
+    pub lane_steps: usize,
+    /// Widest live batch observed.
+    pub peak_lanes: usize,
+    /// Lane turnover: admissions into the wave.
+    pub admissions: usize,
+    /// Lane turnover: retirements out of the wave.
+    pub retirements: usize,
+    /// Total time items waited between submission and admission.
+    pub admission_wait_ms: f64,
+}
+
+impl SchedulerStats {
+    /// Mean lanes per batched step — the occupancy this whole refactor
+    /// exists to lift.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+
+    /// Mean wait between submission and lane admission.
+    pub fn mean_admission_ms(&self) -> f64 {
+        if self.admissions == 0 {
+            0.0
+        } else {
+            self.admission_wait_ms / self.admissions as f64
+        }
+    }
+}
+
+/// The continuous-batching lane scheduler for one worker.
+pub struct ContinuousScheduler<'a> {
+    engine: &'a CharLmEngine,
+    sessions: SessionManager,
+    bs: LmBatchState,
+    lanes: Vec<Lane>,
+    pending: VecDeque<StreamItem>,
+    done: Vec<StreamDone>,
+    toks: Vec<usize>,
+    max_lanes: usize,
+    mode: SchedulerMode,
+    stats: SchedulerStats,
+}
+
+impl<'a> ContinuousScheduler<'a> {
+    /// Continuous-mode scheduler with at most `max_lanes` live lanes.
+    pub fn new(engine: &'a CharLmEngine, max_lanes: usize) -> Self {
+        Self::with_mode(engine, max_lanes, SchedulerMode::Continuous)
+    }
+
+    pub fn with_mode(
+        engine: &'a CharLmEngine,
+        max_lanes: usize,
+        mode: SchedulerMode,
+    ) -> Self {
+        assert!(max_lanes >= 1, "need at least one lane");
+        ContinuousScheduler {
+            engine,
+            sessions: SessionManager::new(),
+            bs: engine.new_batch_state(0),
+            lanes: Vec::new(),
+            pending: VecDeque::new(),
+            done: Vec::new(),
+            toks: Vec::new(),
+            max_lanes,
+            mode,
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    /// Enqueue an item for admission (FIFO per session).
+    pub fn offer(&mut self, item: StreamItem) {
+        self.pending.push_back(item);
+    }
+
+    /// Move pending items into free lanes: at most `max_lanes` live
+    /// lanes, at most one lane per session, earliest pending item per
+    /// session first. In wave mode admission only happens into an empty
+    /// batch. Returns how many lanes were admitted.
+    pub fn admit_ready(&mut self) -> usize {
+        if self.mode == SchedulerMode::Wave && !self.lanes.is_empty() {
+            return 0;
+        }
+        let engine = self.engine;
+        let mut admitted = 0;
+        let mut i = 0;
+        while self.lanes.len() < self.max_lanes && i < self.pending.len() {
+            let sess = self.pending[i].session;
+            if self.lanes.iter().any(|l| l.session == sess) {
+                // A lane for this session is live; its next chunk must
+                // wait so the stream's state advances in order.
+                i += 1;
+                continue;
+            }
+            let item = self.pending.remove(i).expect("index in bounds");
+            if item.tokens.is_empty() {
+                // Nothing to execute: complete immediately.
+                self.done.push(StreamDone {
+                    session: item.session,
+                    tokens: 0,
+                    nll_bits: 0.0,
+                    latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
+                });
+                continue;
+            }
+            self.stats.admissions += 1;
+            self.stats.admission_wait_ms +=
+                item.submitted.elapsed().as_secs_f64() * 1e3;
+            let lane = {
+                let state = &self.sessions.get_or_create(item.session, engine).state;
+                engine.admit_lane(state, &mut self.bs)
+            };
+            debug_assert_eq!(lane, self.lanes.len());
+            self.lanes.push(Lane {
+                session: item.session,
+                tokens: item.tokens,
+                pos: 0,
+                nll: 0.0,
+                submitted: item.submitted,
+            });
+            admitted += 1;
+        }
+        self.stats.peak_lanes = self.stats.peak_lanes.max(self.lanes.len());
+        admitted
+    }
+
+    /// Advance every live lane one token position with a single batched
+    /// step, then scatter finished lanes back to their sessions and
+    /// compact them out. No-op when no lane is live.
+    pub fn step(&mut self) {
+        if self.lanes.is_empty() {
+            return;
+        }
+        debug_assert_eq!(self.bs.batch(), self.lanes.len());
+        let engine = self.engine;
+        self.toks.clear();
+        self.toks.extend(self.lanes.iter().map(|l| l.tokens[l.pos]));
+        engine.step_tokens(&self.toks, &mut self.bs);
+        self.stats.batched_steps += 1;
+        self.stats.lane_steps += self.lanes.len();
+        for (lane, l) in self.lanes.iter_mut().enumerate() {
+            if let Some(&next) = l.tokens.get(l.pos + 1) {
+                l.nll += nll_bits(self.bs.logits.row(lane), next);
+            }
+            l.pos += 1;
+        }
+        if self.lanes.iter().any(|l| l.pos >= l.tokens.len()) {
+            let mut keep = Vec::with_capacity(self.lanes.len());
+            for (lane, l) in self.lanes.iter().enumerate() {
+                let finished = l.pos >= l.tokens.len();
+                keep.push(!finished);
+                if finished {
+                    let session = self.sessions.get_or_create(l.session, engine);
+                    engine.scatter_session(&self.bs, &mut session.state, lane);
+                    session.tokens_seen += l.tokens.len();
+                    session.nll_bits += l.nll;
+                    self.stats.retirements += 1;
+                    self.done.push(StreamDone {
+                        session: l.session,
+                        tokens: l.tokens.len(),
+                        nll_bits: l.nll,
+                        latency_ms: l.submitted.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+            }
+            engine.compact_lanes(&mut self.bs, &keep);
+            let mut it = keep.into_iter();
+            self.lanes.retain(|_| it.next().unwrap());
+        }
+    }
+
+    /// Drain the completion buffer.
+    pub fn take_completed(&mut self) -> Vec<StreamDone> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// True while anything is live or waiting (including buffered
+    /// completions not yet drained).
+    pub fn has_live_work(&self) -> bool {
+        !self.lanes.is_empty() || !self.pending.is_empty() || !self.done.is_empty()
+    }
+
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Current width of the underlying batch state (must always equal
+    /// [`Self::live_lanes`] — an invariant the test suite checks).
+    pub fn batch_width(&self) -> usize {
+        self.bs.batch()
+    }
+
+    /// Session ids of the live lanes, in lane order.
+    pub fn lane_sessions(&self) -> Vec<SessionId> {
+        self.lanes.iter().map(|l| l.session).collect()
+    }
+
+    pub fn mode(&self) -> SchedulerMode {
+        self.mode
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        self.stats
+    }
+
+    pub fn sessions(&self) -> &SessionManager {
+        &self.sessions
+    }
+}
+
+/// Deterministic virtual-time replay of a [`RequestTrace`]: one batched
+/// step consumes `tick_ms` of virtual time, requests are offered when
+/// their arrival time is due, and idle gaps jump straight to the next
+/// arrival. No threads, no wall clock — the same trace, mode, and tick
+/// always produce the same schedule, so occupancy comparisons and
+/// bit-exactness assertions are replayable.
+///
+/// Returns the scheduler (for stats and final session states) and all
+/// completions in completion order.
+pub fn simulate_trace<'a>(
+    engine: &'a CharLmEngine,
+    trace: &RequestTrace,
+    max_lanes: usize,
+    mode: SchedulerMode,
+    tick_ms: f64,
+) -> (ContinuousScheduler<'a>, Vec<StreamDone>) {
+    assert!(tick_ms > 0.0);
+    let mut sched = ContinuousScheduler::with_mode(engine, max_lanes, mode);
+    let mut completed = Vec::new();
+    let mut next = 0usize;
+    let mut now_ms = 0f64;
+    while next < trace.requests.len() || sched.has_live_work() {
+        while next < trace.requests.len() && trace.requests[next].arrival_ms <= now_ms {
+            let r = &trace.requests[next];
+            sched.offer(StreamItem {
+                session: r.id,
+                tokens: r.tokens.clone(),
+                submitted: Instant::now(),
+            });
+            next += 1;
+        }
+        sched.admit_ready();
+        if sched.live_lanes() == 0 {
+            completed.append(&mut sched.take_completed());
+            if next < trace.requests.len() {
+                // Idle: jump to the next arrival.
+                now_ms = now_ms.max(trace.requests[next].arrival_ms);
+                continue;
+            }
+            break;
+        }
+        sched.step();
+        completed.append(&mut sched.take_completed());
+        now_ms += tick_ms;
+    }
+    (sched, completed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+    use crate::model::lm::{CharLm, VOCAB};
+    use crate::tensor::Matrix;
+    use crate::util::Pcg32;
+
+    fn tiny_lm() -> CharLm {
+        let mut rng = Pcg32::seeded(41);
+        let spec = LstmSpec::plain(VOCAB, 16);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, 16);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 16, depth: 1 }
+    }
+
+    fn item(session: SessionId, tokens: Vec<usize>) -> StreamItem {
+        StreamItem { session, tokens, submitted: Instant::now() }
+    }
+
+    #[test]
+    fn continuous_admits_mid_flight_wave_does_not() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        for (mode, expect_mid_wave) in
+            [(SchedulerMode::Continuous, true), (SchedulerMode::Wave, false)]
+        {
+            let mut sched = ContinuousScheduler::with_mode(&engine, 4, mode);
+            sched.offer(item(1, vec![3; 6]));
+            assert_eq!(sched.admit_ready(), 1);
+            sched.step();
+            // A second session arrives while lane 0 is mid-flight.
+            sched.offer(item(2, vec![5; 4]));
+            let admitted = sched.admit_ready();
+            assert_eq!(admitted == 1, expect_mid_wave, "{mode:?}");
+            while sched.has_live_work() {
+                sched.admit_ready();
+                sched.step();
+                sched.take_completed();
+            }
+            assert_eq!(sched.stats().retirements, 2, "{mode:?}");
+            assert_eq!(sched.stats().lane_steps, 10, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn same_session_chunks_never_coexist() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 4);
+        sched.offer(item(9, vec![1; 5]));
+        sched.offer(item(9, vec![2; 5]));
+        sched.offer(item(7, vec![3; 3]));
+        while sched.has_live_work() {
+            sched.admit_ready();
+            let ids = sched.lane_sessions();
+            let unique: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(unique.len(), ids.len(), "session double-occupied: {ids:?}");
+            assert_eq!(sched.batch_width(), ids.len());
+            sched.step();
+            sched.take_completed();
+        }
+        let s = sched.sessions().get(9).unwrap();
+        assert_eq!(s.tokens_seen, 10);
+    }
+
+    #[test]
+    fn empty_item_completes_immediately() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 2);
+        sched.offer(item(5, Vec::new()));
+        sched.admit_ready();
+        let done = sched.take_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, 0);
+        assert_eq!(sched.live_lanes(), 0);
+        assert!(!sched.has_live_work());
+    }
+
+    #[test]
+    fn simulate_trace_completes_everything_deterministically() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let trace = RequestTrace::generate(12, 800.0, 10, VOCAB, 3);
+        let (s1, d1) = simulate_trace(&engine, &trace, 4, SchedulerMode::Continuous, 1.0);
+        let (s2, d2) = simulate_trace(&engine, &trace, 4, SchedulerMode::Continuous, 1.0);
+        assert_eq!(d1.len(), 12);
+        assert_eq!(d2.len(), 12);
+        assert_eq!(s1.stats().batched_steps, s2.stats().batched_steps);
+        assert_eq!(s1.stats().lane_steps, s2.stats().lane_steps);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert_eq!(a.session, b.session);
+            assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
+        }
+    }
+}

@@ -2,27 +2,29 @@
 //! engine instance and its sessions, fed by bounded micro-batching;
 //! open-loop trace replay with end-to-end latency accounting.
 //!
-//! Execution is batch-major end to end: each worker drains its
-//! [`Batcher`] into a cross-session batch, packs the touched sessions'
-//! recurrent states into one [`LmBatchState`], runs a *single* batched
-//! step per token position through the whole stack (one int8 GEMM per
-//! gate instead of per-session matvecs), and scatters the advanced
-//! lanes back into the session table.
+//! Execution is batch-major and *continuously batched*: each worker
+//! runs one persistent wave through a [`ContinuousScheduler`] — newly
+//! arrived sessions are admitted into free lanes between token
+//! positions (non-blocking [`Batcher::poll_batch`] ingest), every step
+//! advances all live lanes through a single batched stack step (one
+//! int8 GEMM per gate instead of per-session matvecs), and lanes whose
+//! items finish are scattered back to their sessions and compacted out
+//! so the GEMM only ever touches live rows. The PR 1 wave-at-a-time
+//! discipline is kept as [`SchedulerMode::Wave`] for A/B comparison.
 
-use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::eval::metrics::LatencyStats;
 use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
-use crate::model::lm::{nll_bits, CharLm, CharLmEngine, LmBatchState};
+use crate::model::lm::CharLm;
 use crate::workload::synth::RequestTrace;
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, Poll};
 use super::metrics::ServingReport;
 use super::router::Router;
-use super::session::{SessionId, SessionManager};
+use super::scheduler::{ContinuousScheduler, SchedulerMode, StreamItem};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -31,6 +33,8 @@ pub struct ServerConfig {
     pub batch: BatchPolicy,
     pub engine: StackEngine,
     pub opts: QuantizeOptions,
+    /// Scheduling discipline (continuous batching by default).
+    pub mode: SchedulerMode,
 }
 
 impl Default for ServerConfig {
@@ -40,15 +44,9 @@ impl Default for ServerConfig {
             batch: BatchPolicy::default(),
             engine: StackEngine::Integer,
             opts: QuantizeOptions::default(),
+            mode: SchedulerMode::Continuous,
         }
     }
-}
-
-/// One unit of work: a request's token chunk for a session.
-struct WorkItem {
-    session: SessionId,
-    tokens: Vec<usize>,
-    submitted: Instant,
 }
 
 /// Completion record sent back to the driver.
@@ -63,93 +61,18 @@ struct WorkerSummary {
     compute_secs: f64,
     batches: usize,
     items: usize,
-    /// Batched step invocations (one per token position per wave).
+    /// Batched step invocations (one per token position of the wave).
     batched_steps: usize,
     /// Lane-steps executed (= tokens); `lane_steps / batched_steps` is
     /// the mean batch occupancy of the GEMM path.
     lane_steps: usize,
     /// Widest batch observed.
     peak_lanes: usize,
-}
-
-/// Execute one wave: distinct sessions, one work item per lane, all
-/// lanes stepped together batch-major. Lanes are packed longest-first,
-/// so the active set is always a prefix — when the shortest lanes run
-/// out of tokens they are scattered back and the batch state simply
-/// truncates, keeping the GEMM working only on live lanes.
-fn run_wave(
-    engine: &CharLmEngine,
-    sessions: &mut SessionManager,
-    mut wave: Vec<WorkItem>,
-    state_cache: &mut Option<LmBatchState>,
-    done: &Sender<Completion>,
-    summary: &mut WorkerSummary,
-) {
-    wave.sort_by(|a, b| b.tokens.len().cmp(&a.tokens.len()));
-    let lanes = wave.len();
-    if lanes == 0 {
-        return;
-    }
-    summary.peak_lanes = summary.peak_lanes.max(lanes);
-    let max_len = wave[0].tokens.len();
-    // One batch state per worker, resized (allocation-reusing) per
-    // wave; every lane is gathered below, so stale contents are fine.
-    let bs = state_cache.get_or_insert_with(|| engine.new_batch_state(lanes));
-    engine.resize_batch_state(bs, lanes);
-    for (lane, item) in wave.iter().enumerate() {
-        let session = sessions.get_or_create(item.session, engine);
-        engine.gather_session(&session.state, bs, lane);
-    }
-    let mut nll = vec![0f64; lanes];
-    let mut toks: Vec<usize> = Vec::with_capacity(lanes);
-    let mut active = lanes;
-    for t in 0..max_len {
-        // Lanes whose items are exhausted form a suffix: finish them.
-        let still = wave.iter().take_while(|it| it.tokens.len() > t).count();
-        if still < active {
-            for lane in still..active {
-                finish_lane(engine, sessions, bs, &wave[lane], lane, nll[lane], done);
-            }
-            engine.truncate_batch(bs, still);
-            active = still;
-        }
-        toks.clear();
-        toks.extend(wave[..active].iter().map(|it| it.tokens[t]));
-        engine.step_tokens(&toks, bs);
-        summary.batched_steps += 1;
-        summary.lane_steps += active;
-        for lane in 0..active {
-            if let Some(&next) = wave[lane].tokens.get(t + 1) {
-                nll[lane] += nll_bits(bs.logits.row(lane), next);
-            }
-        }
-    }
-    for lane in 0..active {
-        finish_lane(engine, sessions, bs, &wave[lane], lane, nll[lane], done);
-    }
-}
-
-/// Scatter a finished lane back into its session and report completion.
-fn finish_lane(
-    engine: &CharLmEngine,
-    sessions: &mut SessionManager,
-    bs: &LmBatchState,
-    item: &WorkItem,
-    lane: usize,
-    nll: f64,
-    done: &Sender<Completion>,
-) {
-    let session = sessions.get_or_create(item.session, engine);
-    if !item.tokens.is_empty() {
-        engine.scatter_session(bs, &mut session.state, lane);
-    }
-    session.tokens_seen += item.tokens.len();
-    session.nll_bits += nll;
-    let _ = done.send(Completion {
-        latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
-        tokens: item.tokens.len(),
-        nll_bits_total: nll,
-    });
+    /// Lane turnover: admissions into / retirements out of the wave.
+    admissions: usize,
+    retirements: usize,
+    /// Total submission→admission wait across admitted items.
+    admission_wait_ms: f64,
 }
 
 /// The server: binds a model + engine choice to a worker pool.
@@ -180,10 +103,10 @@ impl<'a> Server<'a> {
 
         let wall_start = Instant::now();
         let summaries: Vec<WorkerSummary> = std::thread::scope(|scope| {
-            let mut senders: Vec<Sender<WorkItem>> = Vec::new();
+            let mut senders: Vec<Sender<StreamItem>> = Vec::new();
             let mut handles = Vec::new();
             for _ in 0..self.config.workers {
-                let (tx, rx) = channel::<WorkItem>();
+                let (tx, rx) = channel::<StreamItem>();
                 senders.push(tx);
                 let batcher = Batcher::new(rx, self.config.batch);
                 let done = done_tx.clone();
@@ -191,50 +114,75 @@ impl<'a> Server<'a> {
                 let stats = self.stats;
                 let engine_kind = self.config.engine;
                 let opts = self.config.opts;
+                let mode = self.config.mode;
+                let max_lanes = self.config.batch.max_batch;
                 handles.push(scope.spawn(move || {
                     let engine = lm.engine(engine_kind, stats, opts);
-                    let mut sessions = SessionManager::new();
-                    let mut state_cache: Option<LmBatchState> = None;
-                    let mut summary = WorkerSummary {
-                        compute_secs: 0.0,
-                        batches: 0,
-                        items: 0,
-                        batched_steps: 0,
-                        lane_steps: 0,
-                        peak_lanes: 0,
-                    };
-                    while let Some(batch) = batcher.next_batch() {
-                        summary.batches += 1;
-                        let t0 = Instant::now();
-                        // Split same-session items into consecutive
-                        // waves so each wave holds at most one item per
-                        // session (a stream's state must advance in
-                        // arrival order).
-                        let mut waves: Vec<Vec<WorkItem>> = Vec::new();
-                        let mut seen: HashMap<SessionId, usize> = HashMap::new();
-                        for item in batch {
-                            summary.items += 1;
-                            let slot = seen.entry(item.session).or_insert(0);
-                            let w = *slot;
-                            *slot += 1;
-                            if waves.len() <= w {
-                                waves.push(Vec::new());
+                    let mut sched =
+                        ContinuousScheduler::with_mode(&engine, max_lanes, mode);
+                    let mut compute_secs = 0f64;
+                    let mut batches = 0usize;
+                    let mut items = 0usize;
+                    let mut open = true;
+                    loop {
+                        // Ingest: block only when idle; between token
+                        // positions only drain what is already queued.
+                        if open {
+                            if sched.has_live_work() {
+                                match batcher.poll_batch() {
+                                    Poll::Items(new) => {
+                                        batches += 1;
+                                        for item in new {
+                                            items += 1;
+                                            sched.offer(item);
+                                        }
+                                    }
+                                    Poll::Empty => {}
+                                    Poll::Closed => open = false,
+                                }
+                            } else {
+                                match batcher.next_batch() {
+                                    Some(new) => {
+                                        batches += 1;
+                                        for item in new {
+                                            items += 1;
+                                            sched.offer(item);
+                                        }
+                                    }
+                                    None => open = false,
+                                }
                             }
-                            waves[w].push(item);
                         }
-                        for wave in waves {
-                            run_wave(
-                                &engine,
-                                &mut sessions,
-                                wave,
-                                &mut state_cache,
-                                &done,
-                                &mut summary,
-                            );
+                        if !sched.has_live_work() {
+                            if !open {
+                                break;
+                            }
+                            continue;
                         }
-                        summary.compute_secs += t0.elapsed().as_secs_f64();
+                        let t0 = Instant::now();
+                        sched.admit_ready();
+                        sched.step();
+                        compute_secs += t0.elapsed().as_secs_f64();
+                        for c in sched.take_completed() {
+                            let _ = done.send(Completion {
+                                latency_ms: c.latency_ms,
+                                tokens: c.tokens,
+                                nll_bits_total: c.nll_bits,
+                            });
+                        }
                     }
-                    summary
+                    let st = sched.stats();
+                    WorkerSummary {
+                        compute_secs,
+                        batches,
+                        items,
+                        batched_steps: st.batched_steps,
+                        lane_steps: st.lane_steps,
+                        peak_lanes: st.peak_lanes,
+                        admissions: st.admissions,
+                        retirements: st.retirements,
+                        admission_wait_ms: st.admission_wait_ms,
+                    }
                 }));
             }
             drop(done_tx);
@@ -242,14 +190,15 @@ impl<'a> Server<'a> {
             // Open-loop submission on the driver thread.
             let t0 = Instant::now();
             for req in &trace.requests {
-                let target = Duration::from_secs_f64(req.arrival_ms / 1000.0 / speedup);
+                let target =
+                    std::time::Duration::from_secs_f64(req.arrival_ms / 1000.0 / speedup);
                 let now = t0.elapsed();
                 if target > now {
                     std::thread::sleep(target - now);
                 }
                 let worker = router.route(req.id);
                 senders[worker]
-                    .send(WorkItem {
+                    .send(StreamItem {
                         session: req.id,
                         tokens: req.tokens.clone(),
                         submitted: Instant::now(),
@@ -277,9 +226,13 @@ impl<'a> Server<'a> {
         let batched_steps: usize = summaries.iter().map(|s| s.batched_steps).sum();
         let lane_steps: usize = summaries.iter().map(|s| s.lane_steps).sum();
         let peak_lanes: usize = summaries.iter().map(|s| s.peak_lanes).max().unwrap_or(0);
+        let lane_admissions: usize = summaries.iter().map(|s| s.admissions).sum();
+        let lane_retirements: usize = summaries.iter().map(|s| s.retirements).sum();
+        let admission_wait_ms: f64 = summaries.iter().map(|s| s.admission_wait_ms).sum();
 
         Ok(ServingReport {
             engine: engine_label,
+            mode: self.config.mode.label(),
             requests,
             tokens,
             wall_secs,
@@ -290,6 +243,13 @@ impl<'a> Server<'a> {
             batched_steps,
             lane_steps,
             peak_lanes,
+            lane_admissions,
+            lane_retirements,
+            mean_admission_ms: if lane_admissions == 0 {
+                0.0
+            } else {
+                admission_wait_ms / lane_admissions as f64
+            },
         })
     }
 }
@@ -301,6 +261,7 @@ mod tests {
     use crate::model::lm::{one_hot_seq, VOCAB};
     use crate::tensor::Matrix;
     use crate::util::Pcg32;
+    use std::time::Duration;
 
     fn tiny_lm() -> CharLm {
         let mut rng = Pcg32::seeded(31);
@@ -311,7 +272,7 @@ mod tests {
         CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 24, depth: 1 }
     }
 
-    fn calib(lm: &CharLm) -> Vec<CalibrationStats> {
+    fn calib(lm: &CharLm) -> Vec<crate::lstm::CalibrationStats> {
         let mut rng = Pcg32::seeded(32);
         let seqs: Vec<Vec<usize>> = (0..4)
             .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
@@ -321,24 +282,28 @@ mod tests {
     }
 
     #[test]
-    fn serves_trace_on_all_engines() {
+    fn serves_trace_on_all_engines_and_modes() {
         let lm = tiny_lm();
         let stats = calib(&lm);
         let trace = RequestTrace::generate(24, 1000.0, 12, VOCAB, 3);
-        for engine in StackEngine::ALL {
-            let config = ServerConfig {
-                workers: 2,
-                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-                engine,
-                opts: QuantizeOptions::default(),
-            };
-            let server = Server::new(&lm, Some(&stats), config);
-            let report = server.run_trace(&trace, 1000.0).unwrap();
-            assert_eq!(report.requests, 24, "{engine:?}");
-            assert_eq!(report.tokens, trace.total_tokens());
-            assert!(report.latency.percentile(50.0) >= 0.0);
-            assert!(report.throughput() > 0.0);
-            assert!(report.compute_secs > 0.0);
+        for mode in [SchedulerMode::Continuous, SchedulerMode::Wave] {
+            for engine in StackEngine::ALL {
+                let config = ServerConfig {
+                    workers: 2,
+                    batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    engine,
+                    opts: QuantizeOptions::default(),
+                    mode,
+                };
+                let server = Server::new(&lm, Some(&stats), config);
+                let report = server.run_trace(&trace, 1000.0).unwrap();
+                assert_eq!(report.requests, 24, "{engine:?} {mode:?}");
+                assert_eq!(report.tokens, trace.total_tokens());
+                assert_eq!(report.lane_retirements, report.lane_admissions);
+                assert!(report.latency.percentile(50.0) >= 0.0);
+                assert!(report.throughput() > 0.0);
+                assert!(report.compute_secs > 0.0);
+            }
         }
     }
 

@@ -55,6 +55,11 @@ impl SessionManager {
         self.sessions.get_mut(&id).unwrap()
     }
 
+    /// Look up a session without creating it.
+    pub fn get(&self, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
     pub fn remove(&mut self, id: SessionId) -> Option<Session> {
         let s = self.sessions.remove(&id);
         if s.is_some() {
@@ -150,6 +155,29 @@ mod tests {
         engine.step_token(3, &mut s.state);
         // Recurrent state changed the prediction for the same input.
         assert_ne!(logits_after_one, s.state.logits);
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_on_ties() {
+        // Equal stream lengths: the (tokens_seen, id) sort breaks ties
+        // by id descending, so eviction is a pure function of the table
+        // contents — no hash-iteration nondeterminism.
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        for _ in 0..2 {
+            let mut mgr = SessionManager::new();
+            for id in 0..10u64 {
+                mgr.get_or_create(id, &engine).tokens_seen = 5;
+            }
+            assert_eq!(mgr.evict_longest(7), 3);
+            // Highest ids evicted first on ties.
+            for id in 0..7u64 {
+                assert!(mgr.get(id).is_some(), "id {id} wrongly evicted");
+            }
+            for id in 7..10u64 {
+                assert!(mgr.get(id).is_none(), "id {id} wrongly kept");
+            }
+        }
     }
 
     #[test]

@@ -30,7 +30,10 @@ pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
     if exponent == 0 {
         return x;
     }
-    let mask: i32 = (1i64 << exponent) as i32 - 1;
+    // Mask of the low `exponent` bits, computed in unsigned space: the
+    // signed form `(1 << 31) - 1` would overflow at the boundary
+    // exponent 31 (reachable via `Rescale` shifts of -31).
+    let mask: i32 = ((1u32 << exponent) - 1) as i32;
     let remainder = x & mask;
     let threshold = (mask >> 1) + i32::from(x < 0);
     (x >> exponent) + i32::from(remainder > threshold)
@@ -43,7 +46,8 @@ pub fn rounding_divide_by_pot_i64(x: i64, exponent: i32) -> i64 {
     if exponent == 0 {
         return x;
     }
-    let mask: i64 = (1i64 << exponent) - 1;
+    // Unsigned-space mask — see `rounding_divide_by_pot`.
+    let mask: i64 = ((1u64 << exponent) - 1) as i64;
     let remainder = x & mask;
     let threshold = (mask >> 1) + i64::from(x < 0);
     (x >> exponent) + i64::from(remainder > threshold)

@@ -92,6 +92,93 @@ impl BiLstm {
             })
             .collect()
     }
+
+    /// Batch-major run over a *ragged* batch of variable-length
+    /// sequences. Lanes are ordered longest-first so the live set is
+    /// always a dense prefix, and each direction sheds lanes by
+    /// truncation as its stream runs out (forward: the sequence ends;
+    /// backward: the reversed stream ends — every lane starts its
+    /// reversed sequence at reverse step 0, which is valid because the
+    /// backward pass is independent per sequence). Outputs are
+    /// bit-exact with running [`Self::run_sequence`] on each sequence
+    /// alone.
+    pub fn run_sequences(&self, seqs: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+        let mut outs: Vec<Vec<Vec<f32>>> =
+            seqs.iter().map(|s| vec![Vec::new(); s.len()]).collect();
+        let t_max = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+        if t_max == 0 {
+            return outs;
+        }
+        let mut live: Vec<usize> =
+            (0..seqs.len()).filter(|&i| !seqs[i].is_empty()).collect();
+        live.sort_by(|&a, &b| seqs[b].len().cmp(&seqs[a].len()).then(a.cmp(&b)));
+        let n_live = live.len();
+        let fwd_w = self.forward.n_output();
+        let bwd_w = self.backward.n_output();
+
+        // Both direction loops reuse one input and one output buffer,
+        // shrunk in place as lanes retire (no per-step allocation).
+        // Forward: all lanes start together, truncate as they finish.
+        {
+            let n_in = self.forward.specs()[0].n_input;
+            let mut states = self.forward.zero_batch_state(n_live);
+            let mut active = n_live;
+            let mut x = Matrix::<f32>::zeros(n_live, n_in);
+            let mut out = Matrix::<f32>::zeros(n_live, fwd_w);
+            for t in 0..t_max {
+                let still = live.iter().take_while(|&&i| seqs[i].len() > t).count();
+                if still < active {
+                    self.forward.truncate_batch(&mut states, still);
+                    x.truncate_rows(still);
+                    out.truncate_rows(still);
+                    active = still;
+                }
+                if active == 0 {
+                    break;
+                }
+                for (lane, &i) in live[..active].iter().enumerate() {
+                    x.row_mut(lane).copy_from_slice(&seqs[i][t]);
+                }
+                self.forward.step_batch(&x, &mut states, &mut out);
+                for (lane, &i) in live[..active].iter().enumerate() {
+                    let dst = &mut outs[i][t];
+                    dst.reserve_exact(fwd_w + bwd_w);
+                    dst.extend_from_slice(out.row(lane));
+                }
+            }
+        }
+
+        // Backward: lane `i`'s reverse step `r` consumes
+        // `seqs[i][len_i - 1 - r]`, so its output lands at that
+        // original position (appended after the forward half).
+        {
+            let n_in = self.backward.specs()[0].n_input;
+            let mut states = self.backward.zero_batch_state(n_live);
+            let mut active = n_live;
+            let mut x = Matrix::<f32>::zeros(n_live, n_in);
+            let mut out = Matrix::<f32>::zeros(n_live, bwd_w);
+            for r in 0..t_max {
+                let still = live.iter().take_while(|&&i| seqs[i].len() > r).count();
+                if still < active {
+                    self.backward.truncate_batch(&mut states, still);
+                    x.truncate_rows(still);
+                    out.truncate_rows(still);
+                    active = still;
+                }
+                if active == 0 {
+                    break;
+                }
+                for (lane, &i) in live[..active].iter().enumerate() {
+                    x.row_mut(lane).copy_from_slice(&seqs[i][seqs[i].len() - 1 - r]);
+                }
+                self.backward.step_batch(&x, &mut states, &mut out);
+                for (lane, &i) in live[..active].iter().enumerate() {
+                    outs[i][seqs[i].len() - 1 - r].extend_from_slice(out.row(lane));
+                }
+            }
+        }
+        outs
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +232,38 @@ mod tests {
             }
         }
         assert!(worst < 0.1, "bidirectional divergence {worst}");
+    }
+
+    #[test]
+    fn ragged_batch_matches_per_sequence() {
+        // Variable-length lanes through the lane-truncating batch path
+        // must be bit-exact with each sequence run alone, for the float
+        // oracle and the integer engine alike.
+        let (fwd, bwd, sf, sb, _) = build_pair(63);
+        let engines = [
+            BiLstm::build(&fwd, &bwd, StackEngine::Float, None, None, Default::default()),
+            BiLstm::build(
+                &fwd, &bwd, StackEngine::Integer, Some(&sf), Some(&sb), Default::default(),
+            ),
+        ];
+        let mut rng = Pcg32::seeded(64);
+        let lens = [1usize, 5, 12, 12, 7, 3];
+        let seqs_in: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&t| seqs(&mut rng, 1, t, 8).pop().unwrap())
+            .collect();
+        for bi in &engines {
+            let ragged = bi.run_sequences(&seqs_in);
+            for (i, s) in seqs_in.iter().enumerate() {
+                let solo = bi.run_sequence(s);
+                assert_eq!(ragged[i], solo, "seq {i} (len {})", s.len());
+            }
+        }
+        // Degenerate lanes: empty batch and an empty sequence.
+        assert!(engines[0].run_sequences(&[]).is_empty());
+        let with_empty = engines[0].run_sequences(&[Vec::new(), seqs_in[1].clone()]);
+        assert!(with_empty[0].is_empty());
+        assert_eq!(with_empty[1], engines[0].run_sequence(&seqs_in[1]));
     }
 
     #[test]

@@ -64,6 +64,21 @@ impl FloatBatchState {
         self.c.truncate_rows(k);
         self.h.truncate_rows(k);
     }
+
+    /// Resize to `batch` lanes in place (allocation-reusing). Existing
+    /// lanes keep their contents; grown lanes are unspecified — gather
+    /// into them before stepping.
+    pub fn resize(&mut self, batch: usize) {
+        self.c.resize(batch, self.c.cols);
+        self.h.resize(batch, self.h.cols);
+    }
+
+    /// Copy lane `src` over lane `dst` (continuous-batching compaction:
+    /// survivors move down so live lanes stay a dense prefix).
+    pub fn copy_lane(&mut self, src: usize, dst: usize) {
+        self.c.copy_row_within(src, dst);
+        self.h.copy_row_within(src, dst);
+    }
 }
 
 /// Scratch buffers reused across steps (no allocation on the hot path).

@@ -281,6 +281,48 @@ impl LstmStack {
         }
     }
 
+    /// Resize every layer's batch state to `batch` lanes in place
+    /// (allocation-reusing). Existing lanes keep their contents; grown
+    /// lanes are unspecified — gather into them before stepping.
+    pub fn resize_batch(&self, batch: &mut [BatchLayerState], k: usize) {
+        for b in batch {
+            match b {
+                BatchLayerState::Float(s) => s.resize(k),
+                BatchLayerState::Integer(s) => s.resize(k),
+            }
+        }
+    }
+
+    /// Copy lane `src` over lane `dst` in every layer — the compaction
+    /// primitive of continuous batching (a survivor moves into a
+    /// retired lane's slot so live lanes stay a dense prefix).
+    pub fn copy_lane_batch(&self, batch: &mut [BatchLayerState], src: usize, dst: usize) {
+        for b in batch {
+            match b {
+                BatchLayerState::Float(s) => s.copy_lane(src, dst),
+                BatchLayerState::Integer(s) => s.copy_lane(src, dst),
+            }
+        }
+    }
+
+    /// Order-preserving lane compaction across every layer: lanes with
+    /// `keep[lane]` survive, packed to the front; the rest are dropped
+    /// (scatter them out first). Returns the surviving lane count.
+    pub fn compact_batch(&self, batch: &mut [BatchLayerState], keep: &[bool]) -> usize {
+        debug_assert!(batch.iter().all(|s| s.batch() == keep.len()));
+        let mut dst = 0;
+        for (src, &k) in keep.iter().enumerate() {
+            if k {
+                if src != dst {
+                    self.copy_lane_batch(batch, src, dst);
+                }
+                dst += 1;
+            }
+        }
+        self.truncate_batch(batch, dst);
+        dst
+    }
+
     /// Weight bytes under this engine (Table 1 size column).
     pub fn weight_bytes(&self) -> usize {
         self.layers

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::CharLm;
 use iqrnn::quant::recipe::{Gate, LstmRecipe, TensorRole, VariantFlags};
@@ -98,6 +98,7 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
             batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
             engine,
             opts: QuantizeOptions::default(),
+            mode: SchedulerMode::Continuous,
         },
     );
     let report = server.run_trace(&trace, 1.0)?;

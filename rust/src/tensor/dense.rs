@@ -62,6 +62,19 @@ impl<T: Copy + Default> Matrix<T> {
         self.data.truncate(k * self.cols);
     }
 
+    /// Copy row `src` over row `dst` in place (no-op when equal). The
+    /// lane-compaction primitive of continuous batching: retiring a
+    /// middle lane moves a survivor's row down so live lanes stay a
+    /// dense prefix.
+    pub fn copy_row_within(&mut self, src: usize, dst: usize) {
+        debug_assert!(src < self.rows && dst < self.rows);
+        if src == dst {
+            return;
+        }
+        let c = self.cols;
+        self.data.copy_within(src * c..(src + 1) * c, dst * c);
+    }
+
     /// Resize to `rows × cols`, reusing the existing allocation when
     /// capacity suffices (the batch-scratch resize path: per-wave batch
     /// changes must not reallocate every buffer).

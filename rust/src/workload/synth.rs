@@ -48,6 +48,58 @@ impl RequestTrace {
         RequestTrace { requests }
     }
 
+    /// Bursty arrivals (flash-crowd shape): `bursts` bursts of
+    /// `burst_size` requests each, every request in a burst arriving at
+    /// the same instant, bursts separated by `gap_ms`. Length
+    /// distribution matches [`Self::generate`] — this is the adversarial
+    /// arrival pattern for the continuous-batching scheduler (a burst
+    /// overfills the lanes, then the queue drains between bursts).
+    pub fn generate_bursty(
+        bursts: usize,
+        burst_size: usize,
+        gap_ms: f64,
+        mean_len: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let mut requests = Vec::with_capacity(bursts * burst_size);
+        let mut id = 0u64;
+        for b in 0..bursts {
+            let t_ms = b as f64 * gap_ms;
+            for _ in 0..burst_size {
+                let long = rng.next_f64() < 0.1;
+                let base = if long { mean_len * 4 } else { mean_len };
+                let len = (base as f64 * (0.5 + rng.next_f64())).round().max(2.0) as usize;
+                let tokens = (0..len).map(|_| rng.below(vocab as u32) as usize).collect();
+                requests.push(TraceRequest { id, arrival_ms: t_ms, tokens });
+                id += 1;
+            }
+        }
+        RequestTrace { requests }
+    }
+
+    /// Evenly staggered arrivals of equal-length streams — the
+    /// construction where continuous batching provably beats
+    /// wave-at-a-time (each new stream arrives mid-wave).
+    pub fn generate_staggered(
+        count: usize,
+        gap_ms: f64,
+        len: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let requests = (0..count)
+            .map(|i| TraceRequest {
+                id: i as u64,
+                arrival_ms: i as f64 * gap_ms,
+                tokens: (0..len).map(|_| rng.below(vocab as u32) as usize).collect(),
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+
     pub fn total_tokens(&self) -> usize {
         self.requests.iter().map(|r| r.tokens.len()).sum()
     }
@@ -84,5 +136,30 @@ mod tests {
         let b = RequestTrace::generate(50, 10.0, 20, 96, 7);
         assert_eq!(a.requests.len(), b.requests.len());
         assert_eq!(a.requests[17].tokens, b.requests[17].tokens);
+    }
+
+    #[test]
+    fn bursty_trace_shape() {
+        let trace = RequestTrace::generate_bursty(4, 6, 50.0, 20, 96, 3);
+        assert_eq!(trace.requests.len(), 24);
+        // Non-decreasing arrivals, grouped into 4 distinct instants.
+        assert!(trace.requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut instants: Vec<f64> = trace.requests.iter().map(|r| r.arrival_ms).collect();
+        instants.dedup();
+        assert_eq!(instants, vec![0.0, 50.0, 100.0, 150.0]);
+        assert!(trace.requests.iter().all(|r| r.tokens.len() >= 2));
+        // Deterministic.
+        let again = RequestTrace::generate_bursty(4, 6, 50.0, 20, 96, 3);
+        assert_eq!(trace.requests[13].tokens, again.requests[13].tokens);
+    }
+
+    #[test]
+    fn staggered_trace_shape() {
+        let trace = RequestTrace::generate_staggered(5, 8.0, 16, 96, 2);
+        assert_eq!(trace.requests.len(), 5);
+        for (i, r) in trace.requests.iter().enumerate() {
+            assert_eq!(r.arrival_ms, i as f64 * 8.0);
+            assert_eq!(r.tokens.len(), 16);
+        }
     }
 }

@@ -11,8 +11,8 @@
 
 use iqrnn::lstm::{
     quantize_lstm, BiLstm, CalibrationStats, FloatBatchState, FloatLstm,
-    FloatState, IntegerBatchState, IntegerState, LstmSpec, LstmStack,
-    LstmWeights, QuantizeOptions, StackEngine, StackWeights,
+    FloatState, IntegerBatchState, IntegerState, LayerState, LstmSpec,
+    LstmStack, LstmWeights, QuantizeOptions, StackEngine, StackWeights,
 };
 use iqrnn::lstm::hybrid_cell::HybridLstm;
 use iqrnn::quant::recipe::VariantFlags;
@@ -149,6 +149,131 @@ fn integer_step_batch_bit_exact_all_variants() {
                     }
                 },
             );
+        }
+    }
+}
+
+/// Per-layer bit-exact comparison between two per-session state sets.
+fn assert_layer_states_eq(a: &[LayerState], b: &[LayerState], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: depth");
+    for (d, (la, lb)) in a.iter().zip(b).enumerate() {
+        match (la, lb) {
+            (LayerState::Float(x), LayerState::Float(y)) => {
+                assert_eq!(x.c, y.c, "{ctx}: layer {d} cell");
+                assert_eq!(x.h, y.h, "{ctx}: layer {d} hidden");
+            }
+            (LayerState::Integer(x), LayerState::Integer(y)) => {
+                assert_eq!(x.c, y.c, "{ctx}: layer {d} cell");
+                assert_eq!(x.h, y.h, "{ctx}: layer {d} hidden");
+            }
+            _ => panic!("{ctx}: layer {d} engine mismatch"),
+        }
+    }
+}
+
+/// Continuous batching's lane lifecycle — admit into a grown lane,
+/// retire by swap-remove, compact by keep-mask — interleaved randomly
+/// with batched steps, must preserve every surviving lane's state
+/// bit-for-bit against a per-lane sequential mirror. All three engines,
+/// all 16 topology variants, 2-layer stacks (so the inter-layer handoff
+/// paths are exercised too).
+#[test]
+fn lane_admit_retire_compact_bit_exact_all_engines() {
+    for spec in variant_specs() {
+        for engine_kind in StackEngine::ALL {
+            let name = format!(
+                "lane-ops-{}-{}",
+                engine_kind.label(),
+                spec.flags.label()
+            );
+            proptest::run_cases(&name, 3, |rng| {
+                let weights = StackWeights::random(spec.n_input, spec, 2, rng);
+                let stack = if engine_kind == StackEngine::Integer {
+                    let calib = calib_seqs(rng, 2, 5, spec.n_input);
+                    let stats = weights.calibrate(&calib);
+                    LstmStack::build(&weights, engine_kind, Some(&stats), Default::default())
+                } else {
+                    LstmStack::build(&weights, engine_kind, None, Default::default())
+                };
+                let n_out = stack.n_output();
+                let mut out = vec![0f32; n_out];
+                let mut bout = Matrix::<f32>::zeros(0, 0);
+                // Sequential mirror: lane `i` of the batch must always
+                // equal `mirror[i]`.
+                let mut mirror: Vec<Vec<LayerState>> =
+                    (0..1 + rng.below(3) as usize).map(|_| stack.zero_state()).collect();
+                let mut batch = stack.zero_batch_state(mirror.len());
+                for op in 0..14 {
+                    match rng.below(5) {
+                        // Step all lanes (batched vs per-lane sequential).
+                        0 | 1 => {
+                            let lanes = mirror.len();
+                            let x = random_input(rng, lanes, spec.n_input);
+                            for (lane, st) in mirror.iter_mut().enumerate() {
+                                stack.step(x.row(lane), st, &mut out);
+                            }
+                            bout.resize(lanes, n_out);
+                            stack.step_batch(&x, &mut batch, &mut bout);
+                        }
+                        // Admit a fresh lane (optionally pre-advanced a
+                        // few sequential steps, like a returning session).
+                        2 => {
+                            if mirror.len() >= 6 {
+                                continue;
+                            }
+                            let mut st = stack.zero_state();
+                            for _ in 0..rng.below(4) {
+                                let x: Vec<f32> = (0..spec.n_input)
+                                    .map(|_| rng.normal_f32(0.0, 1.0))
+                                    .collect();
+                                stack.step(&x, &mut st, &mut out);
+                            }
+                            let lane = mirror.len();
+                            stack.resize_batch(&mut batch, lane + 1);
+                            stack.gather_lane(&st, &mut batch, lane);
+                            mirror.push(st);
+                        }
+                        // Retire one lane by swap-remove.
+                        3 => {
+                            if mirror.len() <= 1 {
+                                continue;
+                            }
+                            let lane = rng.below(mirror.len() as u32) as usize;
+                            let last = mirror.len() - 1;
+                            if lane != last {
+                                stack.copy_lane_batch(&mut batch, last, lane);
+                            }
+                            stack.truncate_batch(&mut batch, last);
+                            mirror.swap_remove(lane);
+                        }
+                        // Compact by random keep-mask (order-preserving).
+                        _ => {
+                            if mirror.len() <= 1 {
+                                continue;
+                            }
+                            let mut keep: Vec<bool> =
+                                (0..mirror.len()).map(|_| rng.below(2) == 1).collect();
+                            if keep.iter().all(|&k| !k) {
+                                keep[0] = true;
+                            }
+                            let survivors = stack.compact_batch(&mut batch, &keep);
+                            let mut it = keep.iter();
+                            mirror.retain(|_| *it.next().unwrap());
+                            assert_eq!(survivors, mirror.len());
+                        }
+                    }
+                    // Every surviving lane must equal its mirror.
+                    for (lane, st) in mirror.iter().enumerate() {
+                        let mut unpacked = stack.zero_state();
+                        stack.scatter_lane(&batch, &mut unpacked, lane);
+                        assert_layer_states_eq(
+                            &unpacked,
+                            st,
+                            &format!("{name} op {op} lane {lane}"),
+                        );
+                    }
+                }
+            });
         }
     }
 }

@@ -1,0 +1,314 @@
+//! Deterministic scheduler-simulation suite for continuous batching.
+//!
+//! The contract being locked down: the continuous-batching coordinator
+//! may reorder *scheduling* freely (admit mid-wave, compact lanes,
+//! interleave sessions), but it may never touch the *numerics* — every
+//! session's state, logits, and nll accounting must be bit-exact with
+//! running that session alone on the sequential `step_token` path. On
+//! top of that, the scheduler must never double-occupy a lane with one
+//! session, its batch width must always equal its live lane count, and
+//! under staggered arrivals it must strictly beat the PR 1
+//! wave-at-a-time baseline on occupancy.
+//!
+//! All tests are seeded and thread-free (the scheduler is driven
+//! directly or through the virtual-time simulator), so failures are
+//! replayable.
+
+use std::time::Instant;
+
+use iqrnn::coordinator::{
+    simulate_trace, ContinuousScheduler, SchedulerMode, StreamItem,
+};
+use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+fn tiny_lm(hidden: usize, depth: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(1234);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+    let mut rng = Pcg32::seeded(1235);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
+    (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect()
+}
+
+fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
+    StreamItem { session, tokens, submitted: Instant::now() }
+}
+
+/// Sequential oracle: run a session's chunks alone on the per-token
+/// path, mirroring the scheduler's nll grouping (per-chunk accumulator
+/// folded into the total, so the f64 sums are bit-identical too).
+fn sequential_reference(
+    engine: &CharLmEngine,
+    chunks: &[Vec<usize>],
+) -> (LmState, f64, usize) {
+    let mut state = engine.new_state();
+    let mut total_nll = 0f64;
+    let mut tokens = 0usize;
+    for chunk in chunks {
+        let mut chunk_nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                chunk_nll += nll_bits(&state.logits, next);
+            }
+        }
+        total_nll += chunk_nll;
+        tokens += chunk.len();
+    }
+    (state, total_nll, tokens)
+}
+
+/// Assert a scheduler-produced session equals the sequential oracle
+/// bit-for-bit.
+fn assert_session_bit_exact(
+    sched: &ContinuousScheduler,
+    session: u64,
+    chunks: &[Vec<usize>],
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let s = sched
+        .sessions()
+        .get(session)
+        .unwrap_or_else(|| panic!("{ctx}: session {session} missing"));
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: session {session} nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+/// Drive a scheduler over step-indexed arrivals, checking the lane
+/// invariants at every position. Returns the scheduler for inspection.
+fn drive<'e>(
+    engine: &'e CharLmEngine,
+    max_lanes: usize,
+    mode: SchedulerMode,
+    arrivals: &[(usize, u64, Vec<usize>)], // (arrival_step, session, tokens)
+    ctx: &str,
+) -> ContinuousScheduler<'e> {
+    let mut sched = ContinuousScheduler::with_mode(engine, max_lanes, mode);
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < arrivals.len() || sched.has_live_work() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            sched.offer(item(arrivals[next].1, arrivals[next].2.clone()));
+            next += 1;
+        }
+        sched.admit_ready();
+        // Invariant (b): no lane is ever double-occupied, and the batch
+        // state is exactly as wide as the live lane set.
+        let ids = sched.lane_sessions();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "{ctx}: double-occupied lane: {ids:?}");
+        assert_eq!(sched.batch_width(), ids.len(), "{ctx}: batch width drift");
+        assert!(ids.len() <= max_lanes, "{ctx}: over-admitted");
+        sched.step();
+        sched.take_completed();
+        step += 1;
+        assert!(step < 1_000_000, "{ctx}: scheduler failed to drain");
+    }
+    sched
+}
+
+#[test]
+fn staggered_arrivals_bit_exact_on_all_engines() {
+    let lm = tiny_lm(20, 2);
+    let stats = calib(&lm);
+    let mut rng = Pcg32::seeded(77);
+    let arrivals: Vec<(usize, u64, Vec<usize>)> = (0..10)
+        .map(|i| {
+            let len = 8 + rng.below(24) as usize;
+            (i * 3, i as u64, random_tokens(&mut rng, len))
+        })
+        .collect();
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let ctx = format!("staggered/{engine_kind:?}");
+        let sched = drive(&engine, 6, SchedulerMode::Continuous, &arrivals, &ctx);
+        assert_eq!(sched.stats().retirements, arrivals.len());
+        for (_, session, tokens) in &arrivals {
+            assert_session_bit_exact(&sched, *session, &[tokens.clone()], &engine, &ctx);
+        }
+    }
+}
+
+#[test]
+fn staggered_occupancy_strictly_beats_wave_baseline() {
+    // 8 equal-length streams arriving every 4 virtual ms, lanes for 8.
+    // Wave-at-a-time packs {s0} alone, then {s1..s7}: occupancy 4.0.
+    // Continuous admits each stream as it arrives: occupancy 256/60.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let trace = RequestTrace::generate_staggered(8, 4.0, 32, VOCAB, 21);
+
+    let (cont, done_c) = simulate_trace(&engine, &trace, 8, SchedulerMode::Continuous, 1.0);
+    let (wave, done_w) = simulate_trace(&engine, &trace, 8, SchedulerMode::Wave, 1.0);
+    assert_eq!(done_c.len(), 8);
+    assert_eq!(done_w.len(), 8);
+    assert_eq!(cont.stats().lane_steps, trace.total_tokens());
+    assert_eq!(wave.stats().lane_steps, trace.total_tokens());
+
+    let occ_c = cont.stats().mean_occupancy();
+    let occ_w = wave.stats().mean_occupancy();
+    assert!(
+        occ_c > occ_w,
+        "continuous occupancy {occ_c:.3} must strictly exceed wave {occ_w:.3}"
+    );
+
+    // (a) Scheduling discipline never touches the numerics: both modes
+    // match the sequential oracle (hence each other) bit-for-bit.
+    for r in &trace.requests {
+        assert_session_bit_exact(&cont, r.id, &[r.tokens.clone()], &engine, "cont");
+        assert_session_bit_exact(&wave, r.id, &[r.tokens.clone()], &engine, "wave");
+    }
+}
+
+#[test]
+fn mixed_lengths_bit_exact_with_lane_turnover() {
+    // Wildly mixed lengths force constant retire/compact/admit churn.
+    let lm = tiny_lm(20, 2);
+    let stats = calib(&lm);
+    let mut rng = Pcg32::seeded(88);
+    let lens = [2usize, 40, 5, 31, 3, 17, 2, 29, 11, 4, 23, 6];
+    let arrivals: Vec<(usize, u64, Vec<usize>)> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| (i / 2, i as u64, random_tokens(&mut rng, len)))
+        .collect();
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let ctx = format!("mixed/{engine_kind:?}");
+        let sched = drive(&engine, 4, SchedulerMode::Continuous, &arrivals, &ctx);
+        // 12 items through 4 lanes: lanes must have turned over.
+        assert_eq!(sched.stats().admissions, 12);
+        assert_eq!(sched.stats().retirements, 12);
+        assert!(sched.stats().peak_lanes <= 4);
+        for (_, session, tokens) in &arrivals {
+            assert_session_bit_exact(&sched, *session, &[tokens.clone()], &engine, &ctx);
+        }
+    }
+}
+
+#[test]
+fn bursty_arrivals_bit_exact_and_bounded() {
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let trace = RequestTrace::generate_bursty(3, 6, 25.0, 12, VOCAB, 9);
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        // Lanes deliberately smaller than a burst: the queue must
+        // absorb the overflow without ever over-admitting.
+        let (sched, done) =
+            simulate_trace(&engine, &trace, 4, SchedulerMode::Continuous, 1.0);
+        assert_eq!(done.len(), trace.requests.len(), "{engine_kind:?}");
+        assert_eq!(sched.stats().peak_lanes, 4, "{engine_kind:?}");
+        for r in &trace.requests {
+            assert_session_bit_exact(
+                &sched,
+                r.id,
+                &[r.tokens.clone()],
+                &engine,
+                &format!("bursty/{engine_kind:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn single_session_degenerate_case() {
+    // One stream: occupancy is exactly 1.0 and the continuous machinery
+    // reduces to the sequential path bit-for-bit.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let mut rng = Pcg32::seeded(5);
+    let tokens = random_tokens(&mut rng, 48);
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let arrivals = vec![(0usize, 1u64, tokens.clone())];
+        let ctx = format!("single/{engine_kind:?}");
+        let sched = drive(&engine, 8, SchedulerMode::Continuous, &arrivals, &ctx);
+        let st = sched.stats();
+        assert_eq!(st.batched_steps, 48);
+        assert_eq!(st.lane_steps, 48);
+        assert_eq!(st.peak_lanes, 1);
+        assert!((st.mean_occupancy() - 1.0).abs() < 1e-12);
+        assert_session_bit_exact(&sched, 1, &[tokens.clone()], &engine, &ctx);
+    }
+}
+
+#[test]
+fn multi_chunk_sessions_advance_in_order() {
+    // One session streams three chunks (all queued up front) while
+    // other sessions churn through the lanes; the chunks must be
+    // applied strictly in order against one evolving state.
+    let lm = tiny_lm(20, 2);
+    let stats = calib(&lm);
+    let mut rng = Pcg32::seeded(99);
+    let chunks: Vec<Vec<usize>> = (0..3).map(|_| random_tokens(&mut rng, 10)).collect();
+    let other_a = random_tokens(&mut rng, 25);
+    let other_b = random_tokens(&mut rng, 7);
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let arrivals = vec![
+            (0usize, 1u64, chunks[0].clone()),
+            (0, 1, chunks[1].clone()),
+            (1, 2, other_a.clone()),
+            (2, 1, chunks[2].clone()),
+            (3, 3, other_b.clone()),
+        ];
+        let ctx = format!("chunks/{engine_kind:?}");
+        let sched = drive(&engine, 3, SchedulerMode::Continuous, &arrivals, &ctx);
+        assert_session_bit_exact(&sched, 1, &chunks, &engine, &ctx);
+        assert_session_bit_exact(&sched, 2, &[other_a.clone()], &engine, &ctx);
+        assert_session_bit_exact(&sched, 3, &[other_b.clone()], &engine, &ctx);
+    }
+}
+
+#[test]
+fn poisson_trace_wave_and_continuous_agree_bit_for_bit() {
+    // Whatever the schedule, the outputs are a pure function of the
+    // per-session token streams.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let trace = RequestTrace::generate(30, 700.0, 14, VOCAB, 13);
+    let (cont, dc) = simulate_trace(&engine, &trace, 6, SchedulerMode::Continuous, 1.0);
+    let (wave, dw) = simulate_trace(&engine, &trace, 6, SchedulerMode::Wave, 1.0);
+    assert_eq!(dc.len(), trace.requests.len());
+    assert_eq!(dw.len(), trace.requests.len());
+    for r in &trace.requests {
+        let a = cont.sessions().get(r.id).unwrap();
+        let b = wave.sessions().get(r.id).unwrap();
+        assert_eq!(a.state.h, b.state.h, "session {}", r.id);
+        assert_eq!(a.state.logits, b.state.logits, "session {}", r.id);
+        assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits(), "session {}", r.id);
+    }
+    // Continuous should also not do *worse* than wave here.
+    assert!(cont.stats().mean_occupancy() >= wave.stats().mean_occupancy() - 1e-9);
+}

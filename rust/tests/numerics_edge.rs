@@ -1,0 +1,268 @@
+//! Saturation-boundary and approximation-error edge cases for the
+//! fixed-point primitives and the integer nonlinearities.
+//!
+//! These inputs (i32::MIN, shift-by-zero, full-range activation sweeps)
+//! are exactly the ones where debug and `--release` arithmetic can
+//! diverge if a kernel ever reaches for wrapping ops — CI runs this
+//! suite under both profiles. The activation tolerance is the paper's
+//! §3.2.1 budget: with ≤8-bit activations the approximation error must
+//! stay below one 8-bit LSB (2^-8), and the gemmlowp-style kernels are
+//! in fact accurate to a few Q0.15 LSBs.
+
+use iqrnn::fixedpoint::mul::{
+    rounding_divide_by_pot_i64, rounding_half_sum, saturate_i32_to_i16,
+    saturate_i32_to_i8, saturate_i64_to_i32,
+};
+use iqrnn::fixedpoint::{
+    multiply_by_quantized_multiplier, quantize_multiplier, rounding_divide_by_pot,
+    saturating_rounding_doubling_high_mul, saturating_rounding_multiply_by_pot,
+    Rescale,
+};
+use iqrnn::nonlin::{sigmoid_q15, tanh_q15};
+
+// ---------------------------------------------------------------- mul
+
+#[test]
+fn rounding_shift_by_zero_is_identity() {
+    for &x in &[i32::MIN, i32::MIN + 1, -1, 0, 1, i32::MAX - 1, i32::MAX] {
+        assert_eq!(rounding_divide_by_pot(x, 0), x);
+        assert_eq!(saturating_rounding_multiply_by_pot(x, 0), x);
+        assert_eq!(rounding_divide_by_pot_i64(i64::from(x), 0), i64::from(x));
+    }
+}
+
+#[test]
+fn rounding_shift_of_i32_min_is_exact_for_every_exponent() {
+    // i32::MIN is the one value whose negation overflows; the masked
+    // remainder path must still divide it exactly (no remainder, so no
+    // rounding nudge) for every legal exponent.
+    for e in 1..=31 {
+        let want = -(1i64 << (31 - e)) as i32;
+        assert_eq!(rounding_divide_by_pot(i32::MIN, e), want, "e={e}");
+        assert_eq!(
+            rounding_divide_by_pot_i64(i64::from(i32::MIN), e),
+            i64::from(want),
+            "e={e}"
+        );
+    }
+    // MIN+1 has a remainder: -(2^31 - 1)/2 = -1073741823.5 rounds away
+    // from zero to -1073741824.
+    assert_eq!(rounding_divide_by_pot(i32::MIN + 1, 1), -(1 << 30));
+}
+
+#[test]
+fn rounding_shift_ties_away_from_zero_near_boundaries() {
+    assert_eq!(rounding_divide_by_pot(i32::MAX, 31), 1); // 0.9999… -> 1
+    assert_eq!(rounding_divide_by_pot(i32::MAX, 1), 1 << 30); // (2^31-1)/2 -> 2^30
+    assert_eq!(rounding_divide_by_pot(-(1 << 30) - 1, 31), -1);
+    assert_eq!(rounding_divide_by_pot(1 << 30, 31), 1); // exactly 0.5 -> 1
+    assert_eq!(rounding_divide_by_pot(-(1 << 30), 31), -1); // -0.5 -> -1
+}
+
+#[test]
+fn srdhm_saturation_corners() {
+    // The single overflow case saturates…
+    assert_eq!(
+        saturating_rounding_doubling_high_mul(i32::MIN, i32::MIN),
+        i32::MAX
+    );
+    // …and its neighbours are exact.
+    assert_eq!(
+        saturating_rounding_doubling_high_mul(i32::MIN, i32::MAX),
+        i32::MIN + 1
+    );
+    assert_eq!(
+        saturating_rounding_doubling_high_mul(i32::MAX, i32::MAX),
+        i32::MAX - 1
+    );
+    assert_eq!(saturating_rounding_doubling_high_mul(i32::MIN, 0), 0);
+    assert_eq!(
+        saturating_rounding_doubling_high_mul(i32::MIN, 1 << 30),
+        -(1 << 30)
+    );
+}
+
+#[test]
+fn pot_multiply_saturates_at_the_rails() {
+    assert_eq!(saturating_rounding_multiply_by_pot(i32::MAX, 1), i32::MAX);
+    assert_eq!(saturating_rounding_multiply_by_pot(i32::MIN, 1), i32::MIN);
+    assert_eq!(saturating_rounding_multiply_by_pot(1, 31), i32::MAX);
+    assert_eq!(saturating_rounding_multiply_by_pot(-1, 31), i32::MIN);
+    // Right shifts of the rails round exactly.
+    assert_eq!(saturating_rounding_multiply_by_pot(i32::MIN, -31), -1);
+}
+
+#[test]
+fn saturating_casts_clamp_at_the_rails() {
+    assert_eq!(saturate_i32_to_i16(i32::MAX), i16::MAX);
+    assert_eq!(saturate_i32_to_i16(i32::MIN), i16::MIN);
+    assert_eq!(saturate_i32_to_i8(i32::MAX), i8::MAX);
+    assert_eq!(saturate_i32_to_i8(i32::MIN), i8::MIN);
+    assert_eq!(saturate_i64_to_i32(i64::MAX), i32::MAX);
+    assert_eq!(saturate_i64_to_i32(i64::MIN), i32::MIN);
+    // (MIN + MAX) / 2 = -0.5 rounds away from zero.
+    assert_eq!(rounding_half_sum(i32::MIN, i32::MAX), -1);
+}
+
+// ------------------------------------------------------------ rescale
+
+#[test]
+fn quantized_multiplier_shift_zero_path() {
+    // Scales in [0.5, 1) decompose with shift exactly 0: neither the
+    // left-shift nor the right-shift branch of the apply path runs.
+    for &s in &[0.5f64, 0.625, 0.75, 0.999] {
+        let (_m, shift) = quantize_multiplier(s);
+        assert_eq!(shift, 0, "scale {s}");
+        let r = Rescale::from_scale(s);
+        for &x in &[-1_000_000i32, -3, 0, 3, 101, 1_000_000] {
+            let want = (f64::from(x) * s).round();
+            let got = r.apply(x);
+            assert!(
+                (f64::from(got) - want).abs() <= 1.0,
+                "s={s} x={x} got={got} want={want}"
+            );
+        }
+        assert_eq!(r.apply(100), (100.0 * s).round() as i32);
+    }
+}
+
+#[test]
+fn rescale_of_i32_min_right_shift_is_exact() {
+    // Pure right-shift scales divide i32::MIN exactly — no saturation
+    // is involved on this path.
+    let r = Rescale::from_scale(0.25);
+    assert_eq!(r.apply(i32::MIN), -(1 << 29));
+    let r = Rescale::from_scale(0.5);
+    assert_eq!(r.apply(i32::MIN), -(1 << 30));
+}
+
+#[test]
+fn rescale_left_shift_saturates_instead_of_wrapping() {
+    // Scales > 1 left-shift the accumulator first; the shift saturates
+    // (§3.1.1 overflow discipline) rather than wrapping. The saturated
+    // intermediate then passes through the 0.5-domain multiplier, so
+    // the extreme points land at ±2^30 × m — deterministic in debug and
+    // release alike, never UB, never a wrap.
+    let r = Rescale::from_scale(4.0);
+    assert_eq!(r.apply(100), 400);
+    assert_eq!(r.apply(-100), -400);
+    // i32::MAX << 3 saturates to i32::MAX, then × 0.5 (the normalized
+    // multiplier) gives 2^30; symmetrically for i32::MIN.
+    assert_eq!(r.apply(i32::MAX), 1 << 30);
+    assert_eq!(r.apply(i32::MIN), -(1 << 30));
+    // The identity rescale (multiplier 2^30, shift +1) is exact on
+    // [-2^30, 2^30 - 1]; beyond that the pre-shift doubling saturates
+    // and both rails collapse to ±2^30 — deterministic, never a wrap.
+    assert_eq!(Rescale::IDENTITY.apply(1 << 29), 1 << 29);
+    assert_eq!(Rescale::IDENTITY.apply((1 << 30) - 1), (1 << 30) - 1);
+    assert_eq!(Rescale::IDENTITY.apply(-(1 << 30)), -(1 << 30));
+    assert_eq!(Rescale::IDENTITY.apply(i32::MAX), 1 << 30);
+    assert_eq!(Rescale::IDENTITY.apply(i32::MIN), -(1 << 30));
+}
+
+#[test]
+fn degenerate_scales_are_total() {
+    // Zero, underflowing, and absurdly large scales must all decompose
+    // to something that maps every i32 to a defined value.
+    for &s in &[0.0f64, 1e-300, 1e-12, 1e9] {
+        let r = Rescale::from_scale(s);
+        for &x in &[i32::MIN, -1, 0, 1, i32::MAX] {
+            let _ = r.apply(x); // must not panic or overflow
+        }
+    }
+    assert_eq!(Rescale::from_scale(0.0).apply(i32::MAX), 0);
+    assert_eq!(Rescale::from_scale(1e-300).apply(i32::MAX), 0);
+    assert_eq!(multiply_by_quantized_multiplier(5, 0, 0), 0);
+}
+
+// ----------------------------------------------------- nonlinearities
+
+/// Paper tolerance: one 8-bit-activation LSB, in Q0.15 units.
+const TOL_8BIT_Q15: f64 = 128.0; // 2^-8 * 2^15
+
+/// Observed-kernel tolerance: the gemmlowp algorithms are accurate to a
+/// few Q0.15 LSBs (existing unit tests assert 4 on a coarse grid; the
+/// dense sweep allows a little slack).
+const TOL_KERNEL_Q15: f64 = 8.0;
+
+/// Sweep every int16 input in Q3.12 (the gate format — covers the full
+/// i8-scaled input range and far beyond) and return the worst absolute
+/// error in Q0.15 LSBs plus the worst monotonicity dip in LSBs.
+fn sweep(f: impl Fn(i16) -> i16, reference: impl Fn(f64) -> f64, ib: u32) -> (f64, i32) {
+    let mut max_err = 0f64;
+    let mut worst_dip = 0i32;
+    let mut prev = i32::MIN;
+    for raw in i32::from(i16::MIN)..=i32::from(i16::MAX) {
+        let x = raw as i16;
+        let y = i32::from(f(x));
+        if raw > i32::from(i16::MIN) {
+            worst_dip = worst_dip.max(prev - y);
+        }
+        prev = y;
+        let xf = f64::from(x) * 2f64.powi(-(15 - ib as i32));
+        let err = (y as f64 / 32768.0 - reference(xf)).abs() * 32768.0;
+        if err > max_err {
+            max_err = err;
+        }
+    }
+    (max_err, worst_dip)
+}
+
+#[test]
+fn sigmoid_q312_full_range_within_8bit_budget() {
+    let (max_err, worst_dip) =
+        sweep(|x| sigmoid_q15(x, 3), |x| 1.0 / (1.0 + (-x).exp()), 3);
+    assert!(
+        max_err <= TOL_KERNEL_Q15,
+        "sigmoid max error {max_err} Q0.15 LSBs"
+    );
+    assert!(max_err <= TOL_8BIT_Q15);
+    // Monotone up to final-rounding jitter (a couple of LSBs); a
+    // saturation/wrap bug would dip by thousands.
+    assert!(worst_dip <= 2, "sigmoid dips {worst_dip} LSBs");
+}
+
+#[test]
+fn tanh_q312_full_range_within_8bit_budget() {
+    let (max_err, worst_dip) = sweep(|x| tanh_q15(x, 3), f64::tanh, 3);
+    assert!(max_err <= TOL_KERNEL_Q15, "tanh max error {max_err} Q0.15 LSBs");
+    assert!(max_err <= TOL_8BIT_Q15);
+    assert!(worst_dip <= 2, "tanh dips {worst_dip} LSBs");
+}
+
+#[test]
+fn cell_state_formats_stay_within_8bit_budget() {
+    // The cell state feeds tanh in Q_{m.15-m} for measured m (§3.2.2);
+    // every format the quantizer can emit must stay inside the paper's
+    // activation budget (coarser grid — the dense sweep above covers
+    // the rounding structure).
+    for ib in 0u32..=6 {
+        let mut max_err = 0f64;
+        for raw in (i32::from(i16::MIN)..=i32::from(i16::MAX)).step_by(13) {
+            let x = raw as i16;
+            let xf = f64::from(x) * 2f64.powi(-(15 - ib as i32));
+            let err = (f64::from(tanh_q15(x, ib)) / 32768.0 - xf.tanh()).abs() * 32768.0;
+            max_err = max_err.max(err);
+        }
+        assert!(max_err <= TOL_8BIT_Q15, "ib={ib}: {max_err} LSBs");
+    }
+}
+
+#[test]
+fn activation_symmetries_at_the_rails() {
+    // tanh is odd and sigmoid complements — except at i16::MIN, whose
+    // negation does not exist; the kernels handle it via saturating_abs.
+    for x in [i16::MIN + 1, -30000, -4096, -1, 0, 1, 4096, 30000, i16::MAX] {
+        assert_eq!(tanh_q15(-x, 3), -tanh_q15(x, 3), "tanh odd at {x}");
+        let s_pos = i32::from(sigmoid_q15(x, 3));
+        let s_neg = i32::from(sigmoid_q15(-x, 3));
+        assert!((s_pos + s_neg - 32768).abs() <= 2, "σ complement at {x}");
+    }
+    // The unnegatable point i16::MIN (x = -8.0 in Q3.12) goes through
+    // saturating_abs and must land within a rounding LSB of the true
+    // values: tanh(-8) ≈ -0.9999998, σ(-8) ≈ 3.3535e-4 (≈ 11 LSBs).
+    assert!(i32::from(tanh_q15(i16::MIN, 3)) <= -32766);
+    let s_min = i32::from(sigmoid_q15(i16::MIN, 3));
+    assert!((s_min - 11).abs() <= 2, "σ(i16::MIN) = {s_min} LSBs");
+    assert_eq!(tanh_q15(0, 3), 0);
+}

@@ -3,7 +3,7 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
 use iqrnn::model::lm::{one_hot_seq, CharLm, VOCAB};
 use iqrnn::tensor::Matrix;
@@ -30,18 +30,22 @@ fn serving_under_load_completes_everything() {
     let stats = lm.stack_weights.calibrate(&oh);
 
     let trace = RequestTrace::generate(60, 500.0, 16, VOCAB, 8);
-    let config = ServerConfig {
-        workers: 4,
-        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        engine: StackEngine::Integer,
-        opts: QuantizeOptions::default(),
-    };
-    let server = Server::new(&lm, Some(&stats), config);
-    let report = server.run_trace(&trace, 100.0).unwrap();
-    assert_eq!(report.requests, 60);
-    assert_eq!(report.tokens, trace.total_tokens());
-    assert!(report.mean_batch >= 1.0);
-    assert!(report.rt_factor().value() > 0.0);
+    for mode in [SchedulerMode::Continuous, SchedulerMode::Wave] {
+        let config = ServerConfig {
+            workers: 4,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            engine: StackEngine::Integer,
+            opts: QuantizeOptions::default(),
+            mode,
+        };
+        let server = Server::new(&lm, Some(&stats), config);
+        let report = server.run_trace(&trace, 100.0).unwrap();
+        assert_eq!(report.requests, 60, "{mode:?}");
+        assert_eq!(report.tokens, trace.total_tokens());
+        assert!(report.mean_batch >= 1.0);
+        assert!(report.rt_factor().value() > 0.0);
+        assert_eq!(report.lane_admissions, report.lane_retirements);
+    }
 }
 
 #[test]
