@@ -6,7 +6,9 @@
 //! what removes the per-element zero-point work from the inner loop.
 //! Run: `cargo bench --bench deployment_speed`.
 
-use iqrnn::coordinator::{simulate_trace, SchedulerMode};
+use iqrnn::coordinator::{
+    shard_home, simulate_shard_trace, simulate_trace, SchedulerMode, ShardConfig,
+};
 use iqrnn::eval::metrics::RtFactor;
 use iqrnn::lstm::{
     FloatState, IntegerState, LstmSpec, QuantizeOptions, StackEngine, StackWeights,
@@ -253,6 +255,87 @@ fn main() {
         match std::fs::write("BENCH_continuous.json", &json) {
             Ok(()) => println!("wrote BENCH_continuous.json"),
             Err(e) => eprintln!("could not write BENCH_continuous.json: {e}"),
+        }
+
+        // Sharded-serving sweep: the same deterministic replay through
+        // a whole worker pool (workers 1–8), under uniform vs skewed
+        // session routing, with work stealing on and off. Pool
+        // occupancy (lane-steps per worker-tick) and makespan ticks are
+        // exactly reproducible; tokens/sec is the compute-side
+        // throughput of the replay. Emits BENCH_shard.json.
+        println!("\n== sharded serving sweep (8 lanes/worker, Integer) ==");
+        println!(
+            "{:<8} {:<8} {:<6} {:>12} {:>10} {:>8} {:>7}",
+            "workers", "routing", "steal", "tokens/sec", "pool occ", "ticks", "steals"
+        );
+        let base = RequestTrace::generate(128, 1200.0, 48, VOCAB, 11);
+        let mut entries: Vec<String> = Vec::new();
+        for &workers in &[1usize, 2, 4, 8] {
+            for routing in ["uniform", "skewed"] {
+                let mut trace = base.clone();
+                if routing == "skewed" {
+                    // Every session hash-homes to worker 0.
+                    trace.reassign_ids(|id| shard_home(id, workers) == 0);
+                }
+                let mut occs = Vec::new();
+                for steal in [false, true] {
+                    let cfg = ShardConfig {
+                        workers,
+                        max_lanes: 8,
+                        mode: SchedulerMode::Continuous,
+                        steal,
+                        session_budget: None,
+                        tick_ms: 1.0,
+                    };
+                    let t0 = std::time::Instant::now();
+                    let (_scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+                    let secs = t0.elapsed().as_secs_f64();
+                    assert_eq!(rep.completions.len(), trace.requests.len());
+                    let tps = rep.lane_steps() as f64 / secs;
+                    println!(
+                        "{:<8} {:<8} {:<6} {:>12.0} {:>10.3} {:>8} {:>7}",
+                        workers,
+                        routing,
+                        if steal { "on" } else { "off" },
+                        tps,
+                        rep.pool_occupancy(),
+                        rep.ticks,
+                        rep.total_stolen()
+                    );
+                    entries.push(format!(
+                        "    {{\"workers\": {}, \"routing\": \"{}\", \"steal\": {}, \
+                         \"tokens_per_sec\": {:.1}, \"pool_occupancy\": {:.4}, \
+                         \"ticks\": {}, \"stolen_sessions\": {}}}",
+                        workers,
+                        routing,
+                        steal,
+                        tps,
+                        rep.pool_occupancy(),
+                        rep.ticks,
+                        rep.total_stolen()
+                    ));
+                    occs.push(rep.pool_occupancy());
+                }
+                if workers > 1 && routing == "skewed" && occs[1] > occs[0] {
+                    println!(
+                        "  -> {workers} workers skewed: stealing lifts pool occupancy \
+                         {:.3} -> {:.3} ({:+.1}%)",
+                        occs[0],
+                        occs[1],
+                        (occs[1] / occs[0] - 1.0) * 100.0
+                    );
+                }
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"shard_sweep\",\n  \"config\": {{\"hidden\": 96, \
+             \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0, \"requests\": 128}},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_shard.json", &json) {
+            Ok(()) => println!("wrote BENCH_shard.json"),
+            Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
         }
     }
 

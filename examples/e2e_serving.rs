@@ -14,7 +14,7 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
+use iqrnn::coordinator::{shard_home, BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{CharLm, VOCAB};
 use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets, EvalSet};
@@ -75,6 +75,8 @@ fn main() -> anyhow::Result<()> {
                 engine,
                 opts: QuantizeOptions::default(),
                 mode: SchedulerMode::Continuous,
+                steal: true,
+                session_budget: None,
             },
         );
         let report = server.run_trace(&trace, 4.0)?;
@@ -94,6 +96,8 @@ fn main() -> anyhow::Result<()> {
                 engine: StackEngine::Integer,
                 opts: QuantizeOptions::default(),
                 mode,
+                steal: true,
+                session_budget: None,
             },
         );
         let report = server.run_trace(&trace, 4.0)?;
@@ -105,6 +109,37 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // --- Sharded serving: skewed routing, work stealing A/B ----------
+    // Every session hash-homes to worker 0 — the adversarial case for
+    // static sticky routing. Stealing lets the other workers pull the
+    // backlog over; `--workers 1` stays the single-worker baseline.
+    println!("\n== sharded serving: skewed routing, steal A/B (Integer) ==");
+    for &workers in &[1usize, 2, 4] {
+        let mut skewed = RequestTrace::generate(120, 600.0, 40, VOCAB, 23);
+        skewed.reassign_ids(|id| shard_home(id, workers) == 0);
+        for steal in [false, true] {
+            let server = Server::new(
+                &lm,
+                Some(&stats),
+                ServerConfig {
+                    workers,
+                    batch: BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_millis(2),
+                    },
+                    engine: StackEngine::Integer,
+                    opts: QuantizeOptions::default(),
+                    mode: SchedulerMode::Continuous,
+                    steal,
+                    session_budget: None,
+                },
+            );
+            let report = server.run_trace(&skewed, 4.0)?;
+            print!("  workers={workers} steal={}", if steal { "on " } else { "off" });
+            report.print();
+        }
+    }
+
     let speedup_float = reports[0].compute_secs / reports[2].compute_secs;
     let speedup_hybrid = reports[1].compute_secs / reports[2].compute_secs;
     println!(

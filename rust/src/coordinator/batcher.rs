@@ -3,6 +3,17 @@
 //! Workers drain their queue into batches of at most `max_batch` items,
 //! waiting at most `max_wait` for stragglers once the first item is in
 //! hand — the standard throughput/latency dial of serving systems.
+//!
+//! **Not on the serving path.** The sharded server ingests through
+//! [`ShardRouter`](super::router::ShardRouter) (whose polls are
+//! capacity-bounded by the same [`BatchPolicy::max_batch`]) and never
+//! constructs a `Batcher`; in particular `max_wait` has **no effect**
+//! on [`Server`](super::server::Server) runs — continuous ingest is
+//! deliberately non-blocking between token positions. `Batcher` stays
+//! as a tested, standalone single-queue ingest primitive (blocking
+//! deadline batching over an mpsc channel) for embedders that drive a
+//! [`ContinuousScheduler`](super::scheduler::ContinuousScheduler)
+//! directly without the sharded router.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
@@ -21,7 +32,11 @@ pub enum Poll<T> {
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Maximum items per batch — in the serving loop this also bounds
+    /// the live lanes of each worker's wave.
     pub max_batch: usize,
+    /// How long [`Batcher::next_batch`] waits for stragglers once the
+    /// first item is in hand (ignored by the non-blocking paths).
     pub max_wait: Duration,
 }
 
@@ -34,10 +49,12 @@ impl Default for BatchPolicy {
 /// Pull-side batcher over an mpsc receiver.
 pub struct Batcher<T> {
     rx: Receiver<T>,
+    /// The batch formation policy this batcher drains under.
     pub policy: BatchPolicy,
 }
 
 impl<T> Batcher<T> {
+    /// A batcher draining `rx` under `policy`.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
         Batcher { rx, policy }
     }

@@ -1,22 +1,66 @@
 //! Serving metrics: what the benchmark harness reports for E4/E10,
-//! including batch-occupancy of the batch-major execution path.
+//! including batch-occupancy of the batch-major execution path and the
+//! per-worker load/steal breakdown of the sharded server.
 
 use crate::eval::metrics::{LatencyStats, RtFactor};
+
+/// Per-worker load breakdown of one serving run: how much of the work
+/// each shard executed, how wide its wave ran, and how much work it
+/// pulled over from peers.
+#[derive(Debug, Clone)]
+pub struct WorkerLoad {
+    /// Worker (shard) index.
+    pub worker: usize,
+    /// Batched step invocations on this worker (one per token position
+    /// of its wave).
+    pub batched_steps: usize,
+    /// Lane-steps (tokens) this worker executed.
+    pub lane_steps: usize,
+    /// Widest live batch this worker ran.
+    pub peak_lanes: usize,
+    /// Admissions into this worker's wave.
+    pub admissions: usize,
+    /// Retirements out of this worker's wave.
+    pub retirements: usize,
+    /// Steal invocations this worker performed (as thief).
+    pub steal_events: usize,
+    /// Sessions this worker stole from peers (as thief).
+    pub stolen_sessions: usize,
+    /// Sessions the session budget evicted on this worker.
+    pub evictions: usize,
+}
+
+impl WorkerLoad {
+    /// Mean lanes per batched step on this worker.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+}
 
 /// The report a serving run produces.
 #[derive(Debug)]
 pub struct ServingReport {
+    /// Engine label ("float"/"hybrid"/"integer").
     pub engine: &'static str,
     /// Scheduling discipline ("continuous" or "wave").
     pub mode: &'static str,
+    /// Requests completed.
     pub requests: usize,
+    /// Tokens executed.
     pub tokens: usize,
+    /// Wall-clock seconds of the whole replay.
     pub wall_secs: f64,
     /// Total model-execution time across workers (excludes queueing).
     pub compute_secs: f64,
+    /// End-to-end request latency distribution.
     pub latency: LatencyStats,
+    /// Worker (shard) count the run used.
     pub workers: usize,
-    /// Mean items per *ingest* (batcher pull that yielded items). In
+    /// Mean items per *ingest* (router pull that yielded items). In
     /// wave mode this approximates execution batch width; in continuous
     /// mode it measures arrival burstiness only — compare execution
     /// width across modes with [`Self::mean_occupancy`], not this.
@@ -35,6 +79,14 @@ pub struct ServingReport {
     pub lane_retirements: usize,
     /// Mean submission→admission wait across admitted items.
     pub mean_admission_ms: f64,
+    /// Sessions moved between workers by work stealing (0 when
+    /// stealing is disabled or `workers == 1`).
+    pub steals: usize,
+    /// Sessions evicted under the session budget across all workers.
+    pub evictions: usize,
+    /// Per-worker load breakdown (occupancy, turnover, steals), indexed
+    /// by worker.
+    pub per_worker: Vec<WorkerLoad>,
 }
 
 impl ServingReport {
@@ -60,11 +112,12 @@ impl ServingReport {
         RtFactor::from_tokens(self.compute_secs / self.workers as f64, self.tokens)
     }
 
+    /// Print the one-line summary of the run.
     pub fn print(&self) {
         println!(
             "  {:<8} {:<10} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
              RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} peak={} \
-             adm={} wait={:.2}ms",
+             adm={} wait={:.2}ms steals={} evict={}",
             self.engine,
             self.mode,
             self.requests,
@@ -79,6 +132,28 @@ impl ServingReport {
             self.peak_lanes,
             self.lane_admissions,
             self.mean_admission_ms,
+            self.steals,
+            self.evictions,
         );
+    }
+
+    /// Print one line per worker: occupancy, turnover, and steals —
+    /// the load-balance view of a sharded run.
+    pub fn print_workers(&self) {
+        for w in &self.per_worker {
+            println!(
+                "    worker {:<2} steps={:<6} lanes={:<7} occ={:.2} peak={} \
+                 adm={} ret={} stole={} evict={}",
+                w.worker,
+                w.batched_steps,
+                w.lane_steps,
+                w.mean_occupancy(),
+                w.peak_lanes,
+                w.admissions,
+                w.retirements,
+                w.stolen_sessions,
+                w.evictions,
+            );
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! The L3 serving coordinator: a streaming stateful-RNN server.
+//! The L3 serving coordinator: a sharded streaming stateful-RNN
+//! server.
 //!
 //! The paper's quantization exists to serve *streaming* RNN workloads
 //! (speech) on cheap hardware; what makes RNN serving distinctive — and
@@ -6,16 +7,28 @@
 //! persistent cell/hidden state across requests, so routing must be
 //! *sticky* and batching must group steps, not requests:
 //!
-//! * [`session`] — per-stream persistent LSTM state with lifecycle;
-//! * [`router`] — sticky hash routing of sessions onto workers;
-//! * [`batcher`] — bounded micro-batching with a latency deadline,
-//!   plus the non-blocking `poll_batch` continuous-batching ingest;
+//! * [`session`] — per-stream persistent LSTM state with lifecycle and
+//!   budget-driven eviction;
+//! * [`router`] — hash-homed session placement over sharded ingest
+//!   queues, with work stealing of untouched sessions so occupancy
+//!   survives skewed routing;
+//! * [`batcher`] — standalone bounded micro-batching with a latency
+//!   deadline (not used by the sharded server; kept for embedders
+//!   driving a scheduler directly);
 //! * [`scheduler`] — the continuous-batching lane scheduler (admit /
-//!   retire / compact between token positions) and its deterministic
-//!   virtual-time simulator;
-//! * [`server`] — worker threads, each owning an engine instance and
-//!   its sessions; open-loop trace replay with latency accounting;
-//! * [`metrics`] — counters + the RT-factor / latency reports.
+//!   retire / compact between token positions) plus the deterministic
+//!   virtual-time simulators for one worker ([`simulate_trace`]) and a
+//!   whole stealing pool ([`simulate_shard_trace`]);
+//! * [`server`] — the worker pool: one engine instance, session table,
+//!   and persistent wave per worker; open-loop trace replay with
+//!   latency accounting;
+//! * [`metrics`] — counters + the RT-factor / latency / occupancy /
+//!   steal reports.
+//!
+//! See `docs/SERVING.md` for the operator-facing guide (architecture,
+//! CLI flags, report fields, tuning cookbook).
+
+#![deny(missing_docs)]
 
 pub mod batcher;
 pub mod metrics;
@@ -25,11 +38,11 @@ pub mod server;
 pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Poll};
-pub use metrics::ServingReport;
-pub use router::Router;
+pub use metrics::{ServingReport, WorkerLoad};
+pub use router::{shard_home, Router, ShardPoll, ShardRouter};
 pub use scheduler::{
-    simulate_trace, ContinuousScheduler, SchedulerMode, SchedulerStats,
-    StreamDone, StreamItem,
+    simulate_shard_trace, simulate_trace, ContinuousScheduler, SchedulerMode,
+    SchedulerStats, ShardConfig, ShardSimReport, StreamDone, StreamItem,
 };
 pub use server::{Server, ServerConfig};
 pub use session::{Session, SessionId, SessionManager};

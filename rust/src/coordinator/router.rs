@@ -1,39 +1,369 @@
-//! Sticky session routing: a session's persistent LSTM state lives on
-//! exactly one worker, so the router must map a given session id to the
-//! same worker every time (consistent hashing over a fixed worker set).
+//! Session routing: sticky hashing plus the sharded ingest queues with
+//! work stealing that keep every worker's wave occupied.
+//!
+//! A session's persistent LSTM state must live on exactly one worker
+//! (streams are stateful), so routing must be *sticky*. Static hashing
+//! alone ([`Router`]) leaves occupancy on the floor under skewed id
+//! distributions: one worker's queue backs up while its peers idle.
+//! [`ShardRouter`] keeps the stickiness but makes the *initial
+//! placement* negotiable: a session is hash-routed to a **home** queue,
+//! and only becomes **bound** to a worker when that worker first drains
+//! one of its chunks — or when an idle worker *steals* it. Stealing
+//! moves whole sessions (every queued chunk at once), only ever
+//! sessions no worker has touched, and binds them to the thief; from
+//! then on every future chunk of that session follows the binding. The
+//! result: work moves, state never does, and every session still
+//! executes its chunks in arrival order on exactly one worker — which
+//! is what keeps the sharded path bit-exact with the sequential one
+//! (locked down by `rust/tests/sharded_serving.rs`).
 
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use super::scheduler::StreamItem;
 use super::session::SessionId;
 
-/// Maps sessions to workers.
+/// The home worker a session id hashes to among `workers` shards
+/// (SplitMix64 finalizer — uniform and stable across calls and
+/// processes, so traces can be constructed to target a shard).
+pub fn shard_home(session: SessionId, workers: usize) -> usize {
+    let mut z = session.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % workers as u64) as usize
+}
+
+/// Static sticky routing: maps a session id to the same worker every
+/// time, with no queues and no stealing. Kept as the baseline placement
+/// function; the serving path proper uses [`ShardRouter`].
 #[derive(Debug, Clone)]
 pub struct Router {
     workers: usize,
 }
 
 impl Router {
+    /// A router over a fixed worker set (`workers >= 1`).
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         Router { workers }
     }
 
+    /// The worker count routed over.
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// The worker owning `session` (SplitMix64 finalizer — uniform and
-    /// stable across calls).
+    /// The worker owning `session` (see [`shard_home`]).
     pub fn route(&self, session: SessionId) -> usize {
-        let mut z = session.wrapping_add(0x9e37_79b9_7f4a_7c15);
-        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-        z ^= z >> 31;
-        (z % self.workers as u64) as usize
+        shard_home(session, self.workers)
+    }
+}
+
+/// Result of one non-blocking [`ShardRouter::poll`].
+#[derive(Debug)]
+pub enum ShardPoll {
+    /// Items drained from the worker's own ingest queue, in arrival
+    /// order. Their sessions are now bound to this worker.
+    Items(Vec<StreamItem>),
+    /// Whole sessions stolen from a backlogged peer's queue (every
+    /// queued chunk of each stolen session, in their original order).
+    /// The stolen sessions are now bound to the thief.
+    Stolen {
+        /// The stolen items.
+        items: Vec<StreamItem>,
+        /// The worker the items were stolen from.
+        victim: usize,
+    },
+    /// Nothing available for this worker right now; ingest is open or
+    /// peers still hold bound work of their own.
+    Empty,
+    /// Ingest is closed, this worker's queue is drained, and nothing
+    /// anywhere is stealable: the worker may exit once its scheduler
+    /// drains.
+    Closed,
+}
+
+/// Everything mutable, under one lock: the per-worker queues, the
+/// session→worker binding map, and the steal accounting.
+struct ShardState {
+    queues: Vec<VecDeque<StreamItem>>,
+    /// A session appears here from the moment any worker drains or
+    /// steals one of its chunks; bindings never change afterwards, so a
+    /// session's chunks execute on exactly one worker, in order.
+    bound: HashMap<SessionId, usize>,
+    closed: bool,
+    /// Steal invocations per thief worker.
+    steal_events: Vec<usize>,
+    /// Sessions stolen per thief worker.
+    stolen_sessions: Vec<usize>,
+    /// Items re-queued because their binding changed while queued
+    /// (defensive path; cannot occur under the submit/steal protocol).
+    forwards: usize,
+}
+
+/// The sharded ingest front of the multi-worker server: one queue per
+/// worker, hash-homed submission, and a work-stealing drain path.
+///
+/// Invariants the router maintains (the basis of the sharded path's
+/// bit-exactness):
+///
+/// 1. all queued chunks of an *unbound* session sit in its home queue,
+///    in submission order;
+/// 2. once bound, every chunk of a session is delivered to its bound
+///    worker, in submission order;
+/// 3. stealing only takes unbound sessions, and takes every queued
+///    chunk of a stolen session in one atomic move.
+///
+/// All operations are safe to call from any thread; the deterministic
+/// shard simulator drives the same type single-threaded.
+pub struct ShardRouter {
+    workers: usize,
+    steal: bool,
+    state: Mutex<ShardState>,
+    work: Condvar,
+}
+
+impl ShardRouter {
+    /// A router over `workers` ingest queues; `steal` enables the
+    /// work-stealing drain path (off reproduces static sticky routing).
+    pub fn new(workers: usize, steal: bool) -> Self {
+        assert!(workers > 0);
+        ShardRouter {
+            workers,
+            steal,
+            state: Mutex::new(ShardState {
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                bound: HashMap::new(),
+                closed: false,
+                steal_events: vec![0; workers],
+                stolen_sessions: vec![0; workers],
+                forwards: 0,
+            }),
+            work: Condvar::new(),
+        }
+    }
+
+    /// The worker count routed over.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Whether the stealing drain path is enabled.
+    pub fn steal_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// The home queue `session` hashes to (its initial placement; the
+    /// binding may move it once, at steal time).
+    pub fn home(&self, session: SessionId) -> usize {
+        shard_home(session, self.workers)
+    }
+
+    /// Submit one item: appended to its session's bound worker's queue
+    /// if the session is bound, else to its home queue. Panics after
+    /// [`Self::close`].
+    pub fn submit(&self, item: StreamItem) {
+        let mut st = self.state.lock().expect("router lock");
+        assert!(!st.closed, "submit after close");
+        let target = st
+            .bound
+            .get(&item.session)
+            .copied()
+            .unwrap_or_else(|| shard_home(item.session, self.workers));
+        st.queues[target].push_back(item);
+        drop(st);
+        self.work.notify_all();
+    }
+
+    /// Close ingest: no further [`Self::submit`] calls may happen, and
+    /// workers start observing [`ShardPoll::Closed`] once drained.
+    pub fn close(&self) {
+        self.state.lock().expect("router lock").closed = true;
+        self.work.notify_all();
+    }
+
+    /// Non-blocking drain-or-steal for `worker`. `max_items` is the
+    /// caller's free lane capacity: the own-queue drain takes at most
+    /// that many items (backlog beyond it stays in the shared queue,
+    /// where peers can steal it), and the steal path takes at most
+    /// that many *sessions* — but a stolen session comes with **every**
+    /// queued chunk it has, so a steal may return more items than
+    /// `max_items` (the extra chunks could not have run elsewhere
+    /// anyway; they queue behind the session's lane).
+    ///
+    /// Own queue first: drained items' sessions are bound to `worker`.
+    /// If the own queue yields nothing and stealing is enabled, whole
+    /// unbound sessions are taken from the deepest peer queue holding
+    /// any. With nothing to do, returns [`ShardPoll::Closed`] after
+    /// [`Self::close`] (the worker may exit) or [`ShardPoll::Empty`]
+    /// before it.
+    pub fn poll(&self, worker: usize, max_items: usize) -> ShardPoll {
+        assert!(worker < self.workers, "worker index");
+        if max_items == 0 {
+            return ShardPoll::Empty;
+        }
+        let mut guard = self.state.lock().expect("router lock");
+        let st = &mut *guard;
+
+        // Drain the worker's own queue, binding what it takes.
+        let mut taken = Vec::new();
+        while taken.len() < max_items {
+            let Some(item) = st.queues[worker].pop_front() else { break };
+            match st.bound.get(&item.session).copied() {
+                Some(owner) if owner != worker => {
+                    // Binding changed while queued (defensive; the
+                    // submit/steal protocol never produces this).
+                    st.forwards += 1;
+                    st.queues[owner].push_back(item);
+                }
+                _ => {
+                    st.bound.insert(item.session, worker);
+                    taken.push(item);
+                }
+            }
+        }
+        if !taken.is_empty() {
+            return ShardPoll::Items(taken);
+        }
+
+        // Own queue dry: steal whole unbound sessions from the deepest
+        // peer queue that holds any (queue depth descending, ties by
+        // lowest index — deterministic for the single-threaded
+        // simulator). Scanning one candidate victim at a time keeps
+        // the common case O(one queue) instead of pre-counting every
+        // peer's stealable items under the lock.
+        if self.steal {
+            let mut order: Vec<usize> =
+                (0..self.workers).filter(|&w| w != worker).collect();
+            order.sort_by_key(|&w| std::cmp::Reverse(st.queues[w].len()));
+            for v in order {
+                if st.queues[v].is_empty() {
+                    break;
+                }
+                let mut chosen: Vec<SessionId> = Vec::new();
+                for it in st.queues[v].iter() {
+                    if st.bound.contains_key(&it.session) || chosen.contains(&it.session) {
+                        continue;
+                    }
+                    chosen.push(it.session);
+                    if chosen.len() >= max_items {
+                        break;
+                    }
+                }
+                if chosen.is_empty() {
+                    continue;
+                }
+                let mut items = Vec::new();
+                let mut keep = VecDeque::with_capacity(st.queues[v].len());
+                for it in st.queues[v].drain(..) {
+                    if chosen.contains(&it.session) {
+                        items.push(it);
+                    } else {
+                        keep.push_back(it);
+                    }
+                }
+                st.queues[v] = keep;
+                for &s in &chosen {
+                    st.bound.insert(s, worker);
+                }
+                st.steal_events[worker] += 1;
+                st.stolen_sessions[worker] += chosen.len();
+                return ShardPoll::Stolen { items, victim: v };
+            }
+        }
+
+        if st.closed {
+            ShardPoll::Closed
+        } else {
+            ShardPoll::Empty
+        }
+    }
+
+    /// Block until `worker` plausibly has something to do: its own
+    /// queue is non-empty, a peer holds a stealable session (when
+    /// stealing is enabled), or ingest closed. May wake spuriously —
+    /// callers re-[`Self::poll`] in a loop.
+    pub fn wait_for_work(&self, worker: usize) {
+        assert!(worker < self.workers, "worker index");
+        let mut st = self.state.lock().expect("router lock");
+        loop {
+            if st.closed || !st.queues[worker].is_empty() {
+                return;
+            }
+            if self.steal {
+                let stealable = st.queues.iter().enumerate().any(|(w, q)| {
+                    w != worker && q.iter().any(|it| !st.bound.contains_key(&it.session))
+                });
+                if stealable {
+                    return;
+                }
+            }
+            st = self.work.wait(st).expect("router lock");
+        }
+    }
+
+    /// Session ids with items currently queued for `worker`,
+    /// deduplicated. The budget-eviction path protects these: their
+    /// next chunk is already in flight, so dropping their state would
+    /// reset the stream mid-flight (see
+    /// [`ContinuousScheduler::enforce_session_budget`]).
+    ///
+    /// [`ContinuousScheduler::enforce_session_budget`]:
+    ///     super::scheduler::ContinuousScheduler::enforce_session_budget
+    pub fn queued_sessions(&self, worker: usize) -> Vec<SessionId> {
+        let st = self.state.lock().expect("router lock");
+        let mut ids: Vec<SessionId> =
+            st.queues[worker].iter().map(|it| it.session).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Current depth of every ingest queue (backlog snapshot).
+    pub fn backlogs(&self) -> Vec<usize> {
+        let st = self.state.lock().expect("router lock");
+        st.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// True when every ingest queue is empty.
+    pub fn is_drained(&self) -> bool {
+        let st = self.state.lock().expect("router lock");
+        st.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// The worker `session` is bound to, if any worker has drained or
+    /// stolen one of its chunks yet.
+    pub fn owner(&self, session: SessionId) -> Option<usize> {
+        self.state.lock().expect("router lock").bound.get(&session).copied()
+    }
+
+    /// Steal invocations per worker (as thief).
+    pub fn steal_events(&self) -> Vec<usize> {
+        self.state.lock().expect("router lock").steal_events.clone()
+    }
+
+    /// Sessions stolen per worker (as thief).
+    pub fn stolen_sessions(&self) -> Vec<usize> {
+        self.state.lock().expect("router lock").stolen_sessions.clone()
+    }
+
+    /// Items re-queued because their binding changed while queued
+    /// (always 0 under the submit/steal protocol; exposed so tests can
+    /// assert the defensive path never fires).
+    pub fn forwards(&self) -> usize {
+        self.state.lock().expect("router lock").forwards
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
+
+    fn item(session: SessionId, tok: usize) -> StreamItem {
+        StreamItem { session, tokens: vec![tok], submitted: Instant::now() }
+    }
 
     #[test]
     fn routing_is_sticky() {
@@ -60,5 +390,119 @@ mod tests {
     fn single_worker_takes_all() {
         let r = Router::new(1);
         assert_eq!(r.route(123), 0);
+    }
+
+    #[test]
+    fn submit_goes_home_then_follows_binding() {
+        let router = ShardRouter::new(4, true);
+        // Find an id homed on worker 2.
+        let id = (0..).find(|&i| shard_home(i, 4) == 2).unwrap();
+        router.submit(item(id, 1));
+        assert_eq!(router.backlogs()[2], 1);
+        assert_eq!(router.owner(id), None);
+        // Worker 2 drains it and becomes the binding.
+        match router.poll(2, 8) {
+            ShardPoll::Items(v) => assert_eq!(v.len(), 1),
+            other => panic!("expected Items, got {other:?}"),
+        }
+        assert_eq!(router.owner(id), Some(2));
+        // The next chunk follows the binding, not the hash.
+        router.submit(item(id, 2));
+        assert_eq!(router.backlogs()[2], 1);
+    }
+
+    #[test]
+    fn steal_takes_whole_unbound_sessions_and_rebinds() {
+        let router = ShardRouter::new(2, true);
+        let hot: Vec<u64> = (0..).filter(|&i| shard_home(i, 2) == 0).take(3).collect();
+        // Session hot[0] gets two chunks; hot[1], hot[2] one each. All
+        // land on worker 0's queue.
+        router.submit(item(hot[0], 1));
+        router.submit(item(hot[1], 1));
+        router.submit(item(hot[0], 2));
+        router.submit(item(hot[2], 1));
+        assert_eq!(router.backlogs(), vec![4, 0]);
+
+        // Worker 1 is idle: it steals up to 2 sessions — the two
+        // earliest-queued unbound ones, hot[0] (both chunks) and hot[1].
+        match router.poll(1, 2) {
+            ShardPoll::Stolen { items, victim } => {
+                assert_eq!(victim, 0);
+                let ids: Vec<u64> = items.iter().map(|i| i.session).collect();
+                assert_eq!(ids, vec![hot[0], hot[1], hot[0]]);
+                // Chunk order within the stolen session is preserved.
+                assert_eq!(items[0].tokens, vec![1]);
+                assert_eq!(items[2].tokens, vec![2]);
+            }
+            other => panic!("expected Stolen, got {other:?}"),
+        }
+        assert_eq!(router.owner(hot[0]), Some(1));
+        assert_eq!(router.owner(hot[1]), Some(1));
+        assert_eq!(router.owner(hot[2]), None);
+        assert_eq!(router.backlogs(), vec![1, 0]);
+        assert_eq!(router.stolen_sessions(), vec![0, 2]);
+        assert_eq!(router.steal_events(), vec![0, 1]);
+
+        // Future chunks of a stolen session follow the thief.
+        router.submit(item(hot[0], 3));
+        assert_eq!(router.backlogs(), vec![1, 1]);
+        assert_eq!(router.forwards(), 0);
+    }
+
+    #[test]
+    fn bound_sessions_are_never_stolen() {
+        let router = ShardRouter::new(2, true);
+        let id = (0..).find(|&i| shard_home(i, 2) == 0).unwrap();
+        router.submit(item(id, 1));
+        // Worker 0 drains (binds) the first chunk, then a second chunk
+        // arrives while worker 0 is busy.
+        match router.poll(0, 8) {
+            ShardPoll::Items(v) => assert_eq!(v.len(), 1),
+            other => panic!("expected Items, got {other:?}"),
+        }
+        router.submit(item(id, 2));
+        // Worker 1 finds nothing stealable.
+        match router.poll(1, 8) {
+            ShardPoll::Empty => {}
+            other => panic!("expected Empty, got {other:?}"),
+        }
+        assert_eq!(router.backlogs(), vec![1, 0]);
+    }
+
+    #[test]
+    fn steal_disabled_reproduces_static_routing() {
+        let router = ShardRouter::new(2, false);
+        let id = (0..).find(|&i| shard_home(i, 2) == 0).unwrap();
+        router.submit(item(id, 1));
+        match router.poll(1, 8) {
+            ShardPoll::Empty => {}
+            other => panic!("expected Empty, got {other:?}"),
+        }
+        router.close();
+        // Worker 1 may exit even though worker 0 still has a backlog.
+        match router.poll(1, 8) {
+            ShardPoll::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Worker 0 still drains its own queue after close.
+        match router.poll(0, 8) {
+            ShardPoll::Items(v) => assert_eq!(v.len(), 1),
+            other => panic!("expected Items, got {other:?}"),
+        }
+        match router.poll(0, 8) {
+            ShardPoll::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_capacity_polls_are_empty() {
+        let router = ShardRouter::new(1, true);
+        router.submit(item(7, 1));
+        match router.poll(0, 0) {
+            ShardPoll::Empty => {}
+            other => panic!("expected Empty, got {other:?}"),
+        }
+        assert_eq!(router.backlogs(), vec![1]);
     }
 }

@@ -18,7 +18,8 @@
 //!   prefix and the GEMM never touches dead rows.
 //!
 //! Scheduling invariants (locked down by
-//! `rust/tests/continuous_batching.rs`):
+//! `rust/tests/continuous_batching.rs` and
+//! `rust/tests/sharded_serving.rs`):
 //!
 //! 1. at most one lane per session at any time (a stream's state must
 //!    advance in arrival order);
@@ -28,11 +29,13 @@
 //!    compaction never touch the numerics.
 //!
 //! The scheduler is deliberately free of threads and wall-clock
-//! decisions: the serving worker drives it from a [`Batcher`], and
-//! [`simulate_trace`] drives it from a virtual clock so tests and
-//! benches get deterministic, replayable schedules.
+//! decisions: the serving worker drives it from a [`ShardRouter`],
+//! [`simulate_trace`] drives one instance from a virtual clock, and
+//! [`simulate_shard_trace`] drives a whole worker pool (with work
+//! stealing) the same way — so tests and benches get deterministic,
+//! replayable schedules.
 //!
-//! [`Batcher`]: super::batcher::Batcher
+//! [`ShardRouter`]: super::router::ShardRouter
 //! [`CharLmEngine::admit_lane`]: crate::model::lm::CharLmEngine::admit_lane
 //! [`CharLmEngine::compact_lanes`]: crate::model::lm::CharLmEngine::compact_lanes
 
@@ -41,6 +44,7 @@ use std::time::Instant;
 
 use crate::model::lm::{nll_bits, CharLmEngine, LmBatchState};
 use crate::workload::synth::RequestTrace;
+use super::router::{ShardPoll, ShardRouter};
 use super::session::{SessionId, SessionManager};
 
 /// Which scheduling discipline the coordinator runs.
@@ -54,6 +58,7 @@ pub enum SchedulerMode {
 }
 
 impl SchedulerMode {
+    /// Short name used in reports and bench JSON ("wave"/"continuous").
     pub fn label(&self) -> &'static str {
         match self {
             SchedulerMode::Wave => "wave",
@@ -63,8 +68,12 @@ impl SchedulerMode {
 }
 
 /// One unit of work: a request's token chunk for a session.
+#[derive(Debug)]
 pub struct StreamItem {
+    /// The stream this chunk belongs to (scheduling is sticky per
+    /// session: chunks apply to one evolving state, in order).
     pub session: SessionId,
+    /// The token chunk to feed through the model.
     pub tokens: Vec<usize>,
     /// When the request entered the system (end-to-end latency base).
     pub submitted: Instant,
@@ -73,10 +82,13 @@ pub struct StreamItem {
 /// Completion record for one finished item.
 #[derive(Debug, Clone)]
 pub struct StreamDone {
+    /// The stream the finished chunk belonged to.
     pub session: SessionId,
+    /// Tokens executed for this item.
     pub tokens: usize,
     /// Total next-char negative log2-likelihood over the item.
     pub nll_bits: f64,
+    /// Submission→completion latency in milliseconds.
     pub latency_ms: f64,
 }
 
@@ -106,6 +118,8 @@ pub struct SchedulerStats {
     pub retirements: usize,
     /// Total time items waited between submission and admission.
     pub admission_wait_ms: f64,
+    /// Sessions evicted by [`ContinuousScheduler::enforce_session_budget`].
+    pub evictions: usize,
 }
 
 impl SchedulerStats {
@@ -149,6 +163,8 @@ impl<'a> ContinuousScheduler<'a> {
         Self::with_mode(engine, max_lanes, SchedulerMode::Continuous)
     }
 
+    /// A scheduler with an explicit [`SchedulerMode`] (the wave mode is
+    /// the PR 1 baseline kept for A/B runs).
     pub fn with_mode(
         engine: &'a CharLmEngine,
         max_lanes: usize,
@@ -270,6 +286,34 @@ impl<'a> ContinuousScheduler<'a> {
         }
     }
 
+    /// Enforce a resident-session memory budget: evict the
+    /// longest-seen *idle* sessions until at most `keep_at_most`
+    /// remain. Sessions currently holding a lane, sessions with
+    /// pending chunks, and the ids in `also_protected` are never
+    /// evicted — callers pass the sessions whose next chunk is already
+    /// queued at the ingest layer ([`ShardRouter::queued_sessions`]),
+    /// so a stream with any in-flight work is never reset. The count
+    /// can therefore stay above the budget while the wave is wide.
+    ///
+    /// Evicting a truly idle session *is* a stream reset: if a chunk
+    /// for it arrives later, it restarts from zero state. Returns the
+    /// evicted ids — a deterministic pure function of the session
+    /// table and the protected sets (see
+    /// [`SessionManager::evict_longest_protected`]).
+    pub fn enforce_session_budget(
+        &mut self,
+        keep_at_most: usize,
+        also_protected: &[SessionId],
+    ) -> Vec<SessionId> {
+        let mut protected: Vec<SessionId> =
+            self.lanes.iter().map(|l| l.session).collect();
+        protected.extend(self.pending.iter().map(|p| p.session));
+        protected.extend_from_slice(also_protected);
+        let evicted = self.sessions.evict_longest_protected(keep_at_most, &protected);
+        self.stats.evictions += evicted.len();
+        evicted
+    }
+
     /// Drain the completion buffer.
     pub fn take_completed(&mut self) -> Vec<StreamDone> {
         std::mem::take(&mut self.done)
@@ -281,10 +325,12 @@ impl<'a> ContinuousScheduler<'a> {
         !self.lanes.is_empty() || !self.pending.is_empty() || !self.done.is_empty()
     }
 
+    /// Number of live lanes in the wave.
     pub fn live_lanes(&self) -> usize {
         self.lanes.len()
     }
 
+    /// Number of items queued for admission.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -300,14 +346,17 @@ impl<'a> ContinuousScheduler<'a> {
         self.lanes.iter().map(|l| l.session).collect()
     }
 
+    /// The scheduling discipline this scheduler runs.
     pub fn mode(&self) -> SchedulerMode {
         self.mode
     }
 
+    /// Snapshot of the scheduler's behaviour counters.
     pub fn stats(&self) -> SchedulerStats {
         self.stats
     }
 
+    /// The worker's session table (persistent stream states).
     pub fn sessions(&self) -> &SessionManager {
         &self.sessions
     }
@@ -359,6 +408,194 @@ pub fn simulate_trace<'a>(
         now_ms += tick_ms;
     }
     (sched, completed)
+}
+
+/// Configuration of one multi-worker shard pool (threaded server and
+/// virtual-time simulator share this shape).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Worker (shard) count; each worker owns one persistent wave.
+    pub workers: usize,
+    /// Maximum live lanes per worker wave.
+    pub max_lanes: usize,
+    /// Scheduling discipline of every worker.
+    pub mode: SchedulerMode,
+    /// Whether idle workers steal unbound sessions from backlogged
+    /// peers (see [`ShardRouter`]).
+    pub steal: bool,
+    /// Per-worker cap on resident sessions (`None` = unbounded); see
+    /// [`ContinuousScheduler::enforce_session_budget`].
+    pub session_budget: Option<usize>,
+    /// Virtual milliseconds one batched step consumes in simulation.
+    pub tick_ms: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            workers: 2,
+            max_lanes: 8,
+            mode: SchedulerMode::Continuous,
+            steal: true,
+            session_budget: None,
+            tick_ms: 1.0,
+        }
+    }
+}
+
+/// What one [`simulate_shard_trace`] run reports.
+#[derive(Debug, Clone)]
+pub struct ShardSimReport {
+    /// Worker count the pool ran with.
+    pub workers: usize,
+    /// All completions, in completion order (worker index order within
+    /// one tick).
+    pub completions: Vec<StreamDone>,
+    /// Per-worker scheduler counters.
+    pub worker_stats: Vec<SchedulerStats>,
+    /// Steal invocations per worker (as thief).
+    pub steal_events: Vec<usize>,
+    /// Sessions stolen per worker (as thief).
+    pub stolen_sessions: Vec<usize>,
+    /// Virtual ticks in which at least one worker stepped — the
+    /// makespan of the replay.
+    pub ticks: usize,
+    /// Sessions evicted per worker under the session budget, in
+    /// eviction order.
+    pub evicted: Vec<Vec<SessionId>>,
+}
+
+impl ShardSimReport {
+    /// Total lane-steps (tokens) executed across the pool.
+    pub fn lane_steps(&self) -> usize {
+        self.worker_stats.iter().map(|s| s.lane_steps).sum()
+    }
+
+    /// Pool occupancy: lane-steps per worker-tick. 1.0 means every
+    /// worker averaged one live lane per tick; `max_lanes` is the
+    /// ceiling. This is the metric stealing exists to lift: with
+    /// skewed routing and no stealing, idle workers burn ticks at zero
+    /// lanes while the hot worker's queue backs up.
+    pub fn pool_occupancy(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.lane_steps() as f64 / (self.workers * self.ticks) as f64
+        }
+    }
+
+    /// Total sessions moved between workers by stealing.
+    pub fn total_stolen(&self) -> usize {
+        self.stolen_sessions.iter().sum()
+    }
+
+    /// Total sessions evicted under the session budget.
+    pub fn total_evicted(&self) -> usize {
+        self.evicted.iter().map(|e| e.len()).sum()
+    }
+}
+
+/// Deterministic virtual-time replay of a [`RequestTrace`] through a
+/// whole sharded worker pool: `cfg.workers` schedulers fed by one
+/// [`ShardRouter`], all driven from a single thread on a virtual clock
+/// (one batched step per worker per tick). Each tick, workers ingest in
+/// index order — draining their own queue first, then stealing whole
+/// unbound sessions from the most-backlogged peer — then every worker
+/// with live lanes steps once. Identical inputs always produce
+/// identical schedules, steal decisions, and completions, so the
+/// sharded-serving suite can assert bit-exactness and occupancy wins
+/// reproducibly.
+///
+/// Returns the schedulers (for final session states) and the report.
+pub fn simulate_shard_trace<'a>(
+    engine: &'a CharLmEngine,
+    trace: &RequestTrace,
+    cfg: &ShardConfig,
+) -> (Vec<ContinuousScheduler<'a>>, ShardSimReport) {
+    assert!(cfg.tick_ms > 0.0);
+    assert!(cfg.workers > 0);
+    let router = ShardRouter::new(cfg.workers, cfg.steal);
+    let mut scheds: Vec<ContinuousScheduler<'a>> = (0..cfg.workers)
+        .map(|_| ContinuousScheduler::with_mode(engine, cfg.max_lanes, cfg.mode))
+        .collect();
+    let mut completions = Vec::new();
+    let mut evicted: Vec<Vec<SessionId>> = vec![Vec::new(); cfg.workers];
+    let mut steal_storm_guard = 0usize;
+    let mut next = 0usize;
+    let mut now_ms = 0f64;
+    let mut ticks = 0usize;
+    let mut closed = false;
+    loop {
+        while next < trace.requests.len() && trace.requests[next].arrival_ms <= now_ms {
+            let r = &trace.requests[next];
+            router.submit(StreamItem {
+                session: r.id,
+                tokens: r.tokens.clone(),
+                submitted: Instant::now(),
+            });
+            next += 1;
+        }
+        if next >= trace.requests.len() && !closed {
+            router.close();
+            closed = true;
+        }
+        // Ingest + admit, worker index order (deterministic).
+        for (w, sched) in scheds.iter_mut().enumerate() {
+            let capacity = cfg
+                .max_lanes
+                .saturating_sub(sched.live_lanes() + sched.pending_len());
+            if capacity > 0 {
+                match router.poll(w, capacity) {
+                    ShardPoll::Items(new) | ShardPoll::Stolen { items: new, .. } => {
+                        for item in new {
+                            sched.offer(item);
+                        }
+                    }
+                    ShardPoll::Empty | ShardPoll::Closed => {}
+                }
+            }
+            sched.admit_ready();
+        }
+        // Step every live wave; drain completions and enforce budgets.
+        let mut stepped = false;
+        for (w, sched) in scheds.iter_mut().enumerate() {
+            if sched.live_lanes() > 0 {
+                sched.step();
+                stepped = true;
+            }
+            if let Some(budget) = cfg.session_budget {
+                evicted[w].extend(
+                    sched.enforce_session_budget(budget, &router.queued_sessions(w)),
+                );
+            }
+            completions.append(&mut sched.take_completed());
+        }
+        if stepped {
+            ticks += 1;
+            now_ms += cfg.tick_ms;
+        } else {
+            if next < trace.requests.len() {
+                // Idle: jump to the next arrival.
+                now_ms = now_ms.max(trace.requests[next].arrival_ms);
+                continue;
+            }
+            if scheds.iter().all(|s| !s.has_live_work()) && router.is_drained() {
+                break;
+            }
+            steal_storm_guard += 1;
+            assert!(steal_storm_guard < 1_000_000, "shard simulation failed to drain");
+        }
+    }
+    let report = ShardSimReport {
+        workers: cfg.workers,
+        completions,
+        worker_stats: scheds.iter().map(|s| s.stats()).collect(),
+        steal_events: router.steal_events(),
+        stolen_sessions: router.stolen_sessions(),
+        ticks,
+        evicted,
+    };
+    (scheds, report)
 }
 
 #[cfg(test)]
@@ -457,5 +694,63 @@ mod tests {
             assert_eq!(a.session, b.session);
             assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
         }
+    }
+
+    #[test]
+    fn session_budget_never_evicts_live_or_pending_sessions() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 2);
+        // Retire sessions 1 and 2 fully, then park 3 and 4 live with 5
+        // pending behind them.
+        sched.offer(item(1, vec![1; 2]));
+        sched.offer(item(2, vec![2; 2]));
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+        }
+        sched.offer(item(3, vec![3; 8]));
+        sched.offer(item(4, vec![4; 8]));
+        sched.offer(item(5, vec![5; 8]));
+        sched.admit_ready();
+        sched.step();
+        assert_eq!(sched.lane_sessions(), vec![3, 4]);
+        // Budget 0: only the idle sessions (1, 2) may go.
+        let evicted = sched.enforce_session_budget(0, &[]);
+        assert_eq!(evicted, vec![2, 1], "longest-first, ties by id desc");
+        assert!(sched.sessions().get(3).is_some());
+        assert!(sched.sessions().get(4).is_some());
+        assert_eq!(sched.stats().evictions, 2);
+        // Drain; the protected sessions completed untouched.
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+        }
+        assert_eq!(sched.sessions().get(3).unwrap().tokens_seen, 8);
+        assert_eq!(sched.sessions().get(5).unwrap().tokens_seen, 8);
+    }
+
+    #[test]
+    fn session_budget_honours_externally_protected_sessions() {
+        // A session whose next chunk is still queued at the ingest
+        // layer is passed via `also_protected` and must survive even
+        // when it is the longest idle stream.
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 2);
+        sched.offer(item(1, vec![1; 6]));
+        sched.offer(item(2, vec![2; 3]));
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+        }
+        // Session 1 is the longest idle stream but its next chunk is
+        // "in flight" upstream: only 2 may be evicted.
+        let evicted = sched.enforce_session_budget(0, &[1]);
+        assert_eq!(evicted, vec![2]);
+        assert!(sched.sessions().get(1).is_some());
     }
 }

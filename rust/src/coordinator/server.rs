@@ -1,16 +1,25 @@
-//! The streaming serving loop: sticky-routed workers, each owning an
-//! engine instance and its sessions, fed by bounded micro-batching;
-//! open-loop trace replay with end-to-end latency accounting.
+//! The streaming serving loop: a sharded worker pool with work
+//! stealing, each worker owning an engine instance, its sessions, and
+//! one persistent continuously-batched wave; open-loop trace replay
+//! with end-to-end latency accounting.
 //!
 //! Execution is batch-major and *continuously batched*: each worker
 //! runs one persistent wave through a [`ContinuousScheduler`] — newly
 //! arrived sessions are admitted into free lanes between token
-//! positions (non-blocking [`Batcher::poll_batch`] ingest), every step
-//! advances all live lanes through a single batched stack step (one
-//! int8 GEMM per gate instead of per-session matvecs), and lanes whose
-//! items finish are scattered back to their sessions and compacted out
-//! so the GEMM only ever touches live rows. The PR 1 wave-at-a-time
-//! discipline is kept as [`SchedulerMode::Wave`] for A/B comparison.
+//! positions, every step advances all live lanes through a single
+//! batched stack step (one int8 GEMM per gate instead of per-session
+//! matvecs), and lanes whose items finish are scattered back to their
+//! sessions and compacted out so the GEMM only ever touches live rows.
+//!
+//! Ingest is sharded: the driver hash-routes each request's session to
+//! a home queue on the shared [`ShardRouter`]; workers drain their own
+//! queue between token positions, and a worker that runs dry *steals*
+//! whole unbound sessions from the most-backlogged peer, so occupancy
+//! survives skewed session routing. A worker only ingests up to its
+//! free lane capacity, which deliberately leaves overload in the shared
+//! queue where peers can take it. The PR 1 wave-at-a-time discipline is
+//! kept as [`SchedulerMode::Wave`] for A/B comparison, and
+//! `steal: false` reproduces static sticky routing.
 
 use std::sync::mpsc::{channel, Sender};
 use std::time::Instant;
@@ -21,20 +30,37 @@ use crate::eval::metrics::LatencyStats;
 use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
 use crate::model::lm::CharLm;
 use crate::workload::synth::RequestTrace;
-use super::batcher::{BatchPolicy, Batcher, Poll};
-use super::metrics::ServingReport;
-use super::router::Router;
-use super::scheduler::{ContinuousScheduler, SchedulerMode, StreamItem};
+use super::batcher::BatchPolicy;
+use super::metrics::{ServingReport, WorkerLoad};
+use super::router::{ShardPoll, ShardRouter};
+use super::scheduler::{ContinuousScheduler, SchedulerMode, SchedulerStats, StreamItem};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Worker (shard) count; each worker owns one persistent wave.
     pub workers: usize,
+    /// Batch policy. Only `max_batch` is consulted by the server: it
+    /// bounds the live lanes per worker wave (and how many items one
+    /// ingest pull may take). `max_wait` is a [`Batcher`] dial with no
+    /// effect on this path — sharded ingest is non-blocking between
+    /// token positions.
+    ///
+    /// [`Batcher`]: super::batcher::Batcher
     pub batch: BatchPolicy,
+    /// Execution engine for every worker.
     pub engine: StackEngine,
+    /// Quantization options used to build the engine.
     pub opts: QuantizeOptions,
     /// Scheduling discipline (continuous batching by default).
     pub mode: SchedulerMode,
+    /// Work stealing between workers (on by default; off reproduces
+    /// static sticky routing).
+    pub steal: bool,
+    /// Per-worker cap on resident sessions (`None` = unbounded). The
+    /// longest-seen idle sessions are evicted between token positions;
+    /// sessions holding or awaiting a lane are never evicted.
+    pub session_budget: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +71,8 @@ impl Default for ServerConfig {
             engine: StackEngine::Integer,
             opts: QuantizeOptions::default(),
             mode: SchedulerMode::Continuous,
+            steal: true,
+            session_budget: None,
         }
     }
 }
@@ -61,28 +89,20 @@ struct WorkerSummary {
     compute_secs: f64,
     batches: usize,
     items: usize,
-    /// Batched step invocations (one per token position of the wave).
-    batched_steps: usize,
-    /// Lane-steps executed (= tokens); `lane_steps / batched_steps` is
-    /// the mean batch occupancy of the GEMM path.
-    lane_steps: usize,
-    /// Widest batch observed.
-    peak_lanes: usize,
-    /// Lane turnover: admissions into / retirements out of the wave.
-    admissions: usize,
-    retirements: usize,
-    /// Total submission→admission wait across admitted items.
-    admission_wait_ms: f64,
+    stats: SchedulerStats,
 }
 
 /// The server: binds a model + engine choice to a worker pool.
 pub struct Server<'a> {
     lm: &'a CharLm,
     stats: Option<&'a [CalibrationStats]>,
+    /// The pool configuration the server runs with.
     pub config: ServerConfig,
 }
 
 impl<'a> Server<'a> {
+    /// Bind a model (and, for the integer engine, its calibration
+    /// stats) to a pool configuration.
     pub fn new(
         lm: &'a CharLm,
         stats: Option<&'a [CalibrationStats]>,
@@ -97,25 +117,23 @@ impl<'a> Server<'a> {
     /// Replay a trace open-loop (arrival times compressed by
     /// `speedup`), return the serving report.
     pub fn run_trace(&self, trace: &RequestTrace, speedup: f64) -> Result<ServingReport> {
-        let router = Router::new(self.config.workers);
+        let router = ShardRouter::new(self.config.workers, self.config.steal);
         let (done_tx, done_rx) = channel::<Completion>();
         let engine_label = self.config.engine.label();
 
         let wall_start = Instant::now();
         let summaries: Vec<WorkerSummary> = std::thread::scope(|scope| {
-            let mut senders: Vec<Sender<StreamItem>> = Vec::new();
+            let router = &router;
             let mut handles = Vec::new();
-            for _ in 0..self.config.workers {
-                let (tx, rx) = channel::<StreamItem>();
-                senders.push(tx);
-                let batcher = Batcher::new(rx, self.config.batch);
-                let done = done_tx.clone();
+            for w in 0..self.config.workers {
+                let done: Sender<Completion> = done_tx.clone();
                 let lm = self.lm;
                 let stats = self.stats;
                 let engine_kind = self.config.engine;
                 let opts = self.config.opts;
                 let mode = self.config.mode;
                 let max_lanes = self.config.batch.max_batch;
+                let session_budget = self.config.session_budget;
                 handles.push(scope.spawn(move || {
                     let engine = lm.engine(engine_kind, stats, opts);
                     let mut sched =
@@ -123,38 +141,37 @@ impl<'a> Server<'a> {
                     let mut compute_secs = 0f64;
                     let mut batches = 0usize;
                     let mut items = 0usize;
-                    let mut open = true;
                     loop {
-                        // Ingest: block only when idle; between token
-                        // positions only drain what is already queued.
-                        if open {
-                            if sched.has_live_work() {
-                                match batcher.poll_batch() {
-                                    Poll::Items(new) => {
-                                        batches += 1;
-                                        for item in new {
-                                            items += 1;
-                                            sched.offer(item);
-                                        }
+                        // Ingest up to the free lane capacity: backlog
+                        // beyond it stays in the shared queue, where an
+                        // idle peer can steal it.
+                        let capacity = max_lanes
+                            .saturating_sub(sched.live_lanes() + sched.pending_len());
+                        let mut closed = false;
+                        if capacity > 0 {
+                            match router.poll(w, capacity) {
+                                ShardPoll::Items(new)
+                                | ShardPoll::Stolen { items: new, .. } => {
+                                    batches += 1;
+                                    for item in new {
+                                        items += 1;
+                                        sched.offer(item);
                                     }
-                                    Poll::Empty => {}
-                                    Poll::Closed => open = false,
                                 }
-                            } else {
-                                match batcher.next_batch() {
-                                    Some(new) => {
-                                        batches += 1;
-                                        for item in new {
-                                            items += 1;
-                                            sched.offer(item);
-                                        }
+                                ShardPoll::Empty => {
+                                    if !sched.has_live_work() {
+                                        // Fully idle: block until there
+                                        // is something to drain, steal,
+                                        // or shut down for.
+                                        router.wait_for_work(w);
+                                        continue;
                                     }
-                                    None => open = false,
                                 }
+                                ShardPoll::Closed => closed = true,
                             }
                         }
                         if !sched.has_live_work() {
-                            if !open {
+                            if closed {
                                 break;
                             }
                             continue;
@@ -163,6 +180,12 @@ impl<'a> Server<'a> {
                         sched.admit_ready();
                         sched.step();
                         compute_secs += t0.elapsed().as_secs_f64();
+                        if let Some(budget) = session_budget {
+                            sched.enforce_session_budget(
+                                budget,
+                                &router.queued_sessions(w),
+                            );
+                        }
                         for c in sched.take_completed() {
                             let _ = done.send(Completion {
                                 latency_ms: c.latency_ms,
@@ -171,17 +194,11 @@ impl<'a> Server<'a> {
                             });
                         }
                     }
-                    let st = sched.stats();
                     WorkerSummary {
                         compute_secs,
                         batches,
                         items,
-                        batched_steps: st.batched_steps,
-                        lane_steps: st.lane_steps,
-                        peak_lanes: st.peak_lanes,
-                        admissions: st.admissions,
-                        retirements: st.retirements,
-                        admission_wait_ms: st.admission_wait_ms,
+                        stats: sched.stats(),
                     }
                 }));
             }
@@ -196,16 +213,13 @@ impl<'a> Server<'a> {
                 if target > now {
                     std::thread::sleep(target - now);
                 }
-                let worker = router.route(req.id);
-                senders[worker]
-                    .send(StreamItem {
-                        session: req.id,
-                        tokens: req.tokens.clone(),
-                        submitted: Instant::now(),
-                    })
-                    .expect("worker died");
+                router.submit(StreamItem {
+                    session: req.id,
+                    tokens: req.tokens.clone(),
+                    submitted: Instant::now(),
+                });
             }
-            drop(senders);
+            router.close();
             handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
         });
         let wall_secs = wall_start.elapsed().as_secs_f64();
@@ -220,15 +234,36 @@ impl<'a> Server<'a> {
             requests += 1;
             _total_nll += c.nll_bits_total;
         }
+        let steal_events = router.steal_events();
+        let stolen_sessions = router.stolen_sessions();
+        let per_worker: Vec<WorkerLoad> = summaries
+            .iter()
+            .enumerate()
+            .map(|(i, s)| WorkerLoad {
+                worker: i,
+                batched_steps: s.stats.batched_steps,
+                lane_steps: s.stats.lane_steps,
+                peak_lanes: s.stats.peak_lanes,
+                admissions: s.stats.admissions,
+                retirements: s.stats.retirements,
+                steal_events: steal_events[i],
+                stolen_sessions: stolen_sessions[i],
+                evictions: s.stats.evictions,
+            })
+            .collect();
         let compute_secs: f64 = summaries.iter().map(|s| s.compute_secs).sum();
         let batches: usize = summaries.iter().map(|s| s.batches).sum();
         let items: usize = summaries.iter().map(|s| s.items).sum();
-        let batched_steps: usize = summaries.iter().map(|s| s.batched_steps).sum();
-        let lane_steps: usize = summaries.iter().map(|s| s.lane_steps).sum();
-        let peak_lanes: usize = summaries.iter().map(|s| s.peak_lanes).max().unwrap_or(0);
-        let lane_admissions: usize = summaries.iter().map(|s| s.admissions).sum();
-        let lane_retirements: usize = summaries.iter().map(|s| s.retirements).sum();
-        let admission_wait_ms: f64 = summaries.iter().map(|s| s.admission_wait_ms).sum();
+        let batched_steps: usize = summaries.iter().map(|s| s.stats.batched_steps).sum();
+        let lane_steps: usize = summaries.iter().map(|s| s.stats.lane_steps).sum();
+        let peak_lanes: usize =
+            summaries.iter().map(|s| s.stats.peak_lanes).max().unwrap_or(0);
+        let lane_admissions: usize = summaries.iter().map(|s| s.stats.admissions).sum();
+        let lane_retirements: usize =
+            summaries.iter().map(|s| s.stats.retirements).sum();
+        let admission_wait_ms: f64 =
+            summaries.iter().map(|s| s.stats.admission_wait_ms).sum();
+        let evictions: usize = summaries.iter().map(|s| s.stats.evictions).sum();
 
         Ok(ServingReport {
             engine: engine_label,
@@ -250,6 +285,9 @@ impl<'a> Server<'a> {
             } else {
                 admission_wait_ms / lane_admissions as f64
             },
+            steals: stolen_sessions.iter().sum(),
+            evictions,
+            per_worker,
         })
     }
 }
@@ -294,12 +332,15 @@ mod tests {
                     engine,
                     opts: QuantizeOptions::default(),
                     mode,
+                    steal: true,
+                    session_budget: None,
                 };
                 let server = Server::new(&lm, Some(&stats), config);
                 let report = server.run_trace(&trace, 1000.0).unwrap();
                 assert_eq!(report.requests, 24, "{engine:?} {mode:?}");
                 assert_eq!(report.tokens, trace.total_tokens());
                 assert_eq!(report.lane_retirements, report.lane_admissions);
+                assert_eq!(report.per_worker.len(), 2);
                 assert!(report.latency.percentile(50.0) >= 0.0);
                 assert!(report.throughput() > 0.0);
                 assert!(report.compute_secs > 0.0);
@@ -318,6 +359,23 @@ mod tests {
         let server = Server::new(&lm, Some(&stats), ServerConfig::default());
         let report = server.run_trace(&trace, 1000.0).unwrap();
         assert_eq!(report.requests, 2);
+    }
+
+    #[test]
+    fn single_worker_reports_no_steals() {
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        let trace = RequestTrace::generate(12, 2000.0, 8, VOCAB, 6);
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig { workers: 1, ..ServerConfig::default() },
+        );
+        let report = server.run_trace(&trace, 1000.0).unwrap();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.steals, 0);
+        assert_eq!(report.per_worker.len(), 1);
+        assert_eq!(report.per_worker[0].lane_steps, report.lane_steps);
     }
 
     #[test]

@@ -6,11 +6,15 @@ use std::collections::HashMap;
 
 use crate::model::lm::{CharLmEngine, LmState};
 
+/// Identifier of one stream; routing and session tables key on it.
 pub type SessionId = u64;
 
 /// One live stream.
 pub struct Session {
+    /// The stream's id.
     pub id: SessionId,
+    /// The persistent recurrent state (cell/hidden per layer plus the
+    /// last hidden/logits scratch).
     pub state: LmState,
     /// Tokens processed so far (stream position).
     pub tokens_seen: usize,
@@ -19,6 +23,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// A fresh session with the engine's zero state.
     pub fn new(id: SessionId, engine: &CharLmEngine) -> Self {
         Session { id, state: engine.new_state(), tokens_seen: 0, nll_bits: 0.0 }
     }
@@ -41,6 +46,7 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
+    /// An empty session table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -60,6 +66,7 @@ impl SessionManager {
         self.sessions.get(&id)
     }
 
+    /// Remove one session, returning it (counts as an eviction).
     pub fn remove(&mut self, id: SessionId) -> Option<Session> {
         let s = self.sessions.remove(&id);
         if s.is_some() {
@@ -68,36 +75,67 @@ impl SessionManager {
         s
     }
 
+    /// Number of resident sessions.
     pub fn len(&self) -> usize {
         self.sessions.len()
     }
 
+    /// True when no session is resident.
     pub fn is_empty(&self) -> bool {
         self.sessions.is_empty()
     }
 
+    /// Sessions ever created on this table.
     pub fn created(&self) -> u64 {
         self.created
     }
 
+    /// Sessions ever removed or evicted from this table.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
     /// Evict sessions idle beyond a token-count budget (memory
     /// pressure control; state is the dominant per-stream cost).
+    /// Returns how many sessions were evicted.
     pub fn evict_longest(&mut self, keep_at_most: usize) -> usize {
+        self.evict_longest_protected(keep_at_most, &[]).len()
+    }
+
+    /// Evict the longest-seen sessions until at most `keep_at_most`
+    /// remain, never touching ids in `protected` (the serving loop
+    /// passes the sessions currently holding a lane or queued for one —
+    /// their state is live in the wave and must not be dropped). The
+    /// resident count can therefore stay above the budget while many
+    /// lanes are live.
+    ///
+    /// Eviction order is a pure function of the table contents: sort by
+    /// `(tokens_seen, id)` descending, so ties break by id and repeated
+    /// runs evict identical sets — no hash-iteration nondeterminism.
+    /// Returns the evicted ids in eviction order.
+    pub fn evict_longest_protected(
+        &mut self,
+        keep_at_most: usize,
+        protected: &[SessionId],
+    ) -> Vec<SessionId> {
         if self.sessions.len() <= keep_at_most {
-            return 0;
+            return Vec::new();
         }
         let mut ids: Vec<(usize, SessionId)> = self
             .sessions
             .values()
+            .filter(|s| !protected.contains(&s.id))
             .map(|s| (s.tokens_seen, s.id))
             .collect();
         ids.sort_unstable_by(|a, b| b.cmp(a));
-        let n = self.sessions.len() - keep_at_most;
-        for &(_, id) in ids.iter().take(n) {
+        let over = self.sessions.len() - keep_at_most;
+        let mut out = Vec::with_capacity(over.min(ids.len()));
+        for &(_, id) in ids.iter().take(over) {
             self.sessions.remove(&id);
             self.evicted += 1;
+            out.push(id);
         }
-        n
+        out
     }
 }
 
@@ -142,6 +180,7 @@ mod tests {
         assert_eq!(mgr.created(), 1);
         assert!(mgr.remove(42).is_some());
         assert!(mgr.remove(42).is_none());
+        assert_eq!(mgr.evicted(), 1);
     }
 
     #[test]
@@ -194,5 +233,27 @@ mod tests {
         assert_eq!(mgr.len(), 6);
         // The longest streams (ids 6..9) are gone.
         assert!(mgr.get_or_create(0, &engine).tokens_seen == 0);
+    }
+
+    #[test]
+    fn protected_sessions_survive_eviction() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        for id in 0..6u64 {
+            mgr.get_or_create(id, &engine).tokens_seen = id as usize * 10;
+        }
+        // Protect the two longest: eviction must fall through to the
+        // next-longest unprotected sessions.
+        let evicted = mgr.evict_longest_protected(2, &[5, 4]);
+        assert_eq!(evicted, vec![3, 2, 1, 0]);
+        assert_eq!(mgr.len(), 2);
+        assert!(mgr.get(5).is_some());
+        assert!(mgr.get(4).is_some());
+        // With everything protected, nothing is evicted even over
+        // budget.
+        let evicted = mgr.evict_longest_protected(0, &[5, 4]);
+        assert!(evicted.is_empty());
+        assert_eq!(mgr.len(), 2);
     }
 }

@@ -61,7 +61,8 @@ fn run(args: &[String]) -> Result<()> {
                  usage: iqrnn <serve|eval|recipe|info> [options]\n\
                  \n\
                  serve  --engine float|hybrid|integer  --requests N  --workers N\n\
-                 \u{20}       --rate R (req/s)  --batch B  --artifacts DIR\n\
+                 \u{20}       --rate R (req/s)  --batch B  --mode continuous|wave\n\
+                 \u{20}       --no-steal  --session-budget N  --artifacts DIR\n\
                  eval   --artifacts DIR   (Table-1-style quality comparison)\n\
                  recipe [--ln] [--proj] [--peephole] [--cifg]   (print Table 2)\n\
                  info   --artifacts DIR"
@@ -77,6 +78,15 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     let workers: usize = flag(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let rate: f64 = flag(args, "--rate").unwrap_or_else(|| "50".into()).parse()?;
     let batch: usize = flag(args, "--batch").unwrap_or_else(|| "8".into()).parse()?;
+    let mode = match flag(args, "--mode").unwrap_or_else(|| "continuous".into()).as_str() {
+        "continuous" => SchedulerMode::Continuous,
+        "wave" => SchedulerMode::Wave,
+        other => bail!("unknown scheduler mode `{other}` (continuous|wave)"),
+    };
+    let steal = !args.iter().any(|a| a == "--no-steal");
+    let session_budget = flag(args, "--session-budget")
+        .map(|v| v.parse::<usize>())
+        .transpose()?;
 
     let lm = CharLm::load(artifacts)
         .with_context(|| format!("loading model from `{artifacts}` (run `make artifacts`)"))?;
@@ -86,9 +96,12 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
 
     let trace = RequestTrace::generate(requests, rate, 60, iqrnn::model::lm::VOCAB, 17);
     println!(
-        "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, engine={}",
+        "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, \
+         engine={}, mode={}, steal={}",
         trace.total_tokens(),
-        engine.label()
+        engine.label(),
+        mode.label(),
+        if steal { "on" } else { "off" },
     );
     let server = Server::new(
         &lm,
@@ -98,11 +111,16 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
             batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
             engine,
             opts: QuantizeOptions::default(),
-            mode: SchedulerMode::Continuous,
+            mode,
+            steal,
+            session_budget,
         },
     );
     let report = server.run_trace(&trace, 1.0)?;
     report.print();
+    if workers > 1 {
+        report.print_workers();
+    }
     Ok(())
 }
 

@@ -42,7 +42,7 @@ pub fn matvec_f32(w: &Matrix<f32>, x: &[f32], out: &mut [f32]) {
 /// Batch-major float GEMM: `x` is `[batch, cols]` activations, `out` is
 /// `[batch, rows]` with `out[b,r] = Σ_c w[r,c] * x[b,c]`. Batch lanes
 /// are blocked in groups of 4 so each weight row stays cache-hot across
-/// lanes; every output element runs the exact [`dot_f32`] accumulation,
+/// lanes; every output element runs the exact `dot_f32` accumulation,
 /// so results are bit-identical to per-lane [`matvec_f32`].
 pub fn gemm_f32(w: &Matrix<f32>, x: &Matrix<f32>, out: &mut Matrix<f32>) {
     assert_eq!(x.cols, w.cols);

@@ -100,6 +100,32 @@ impl RequestTrace {
         RequestTrace { requests }
     }
 
+    /// Remap every session id in place to the smallest fresh ids
+    /// accepted by `keep`, preserving chunk grouping (requests that
+    /// shared an id still share one) and arrival order. This is how the
+    /// sharded-serving experiments build *routing-skewed* traces: with
+    /// `keep = |id| shard_home(id, workers) == hot`, every session
+    /// hash-homes to one worker, which is the adversarial arrival
+    /// pattern for static sticky routing (and the showcase for work
+    /// stealing). Deterministic: the mapping depends only on the trace
+    /// and the predicate.
+    pub fn reassign_ids(&mut self, mut keep: impl FnMut(u64) -> bool) {
+        use std::collections::HashMap;
+        let mut map: HashMap<u64, u64> = HashMap::new();
+        let mut candidate = 0u64;
+        for req in &mut self.requests {
+            let new = *map.entry(req.id).or_insert_with(|| {
+                while !keep(candidate) {
+                    candidate += 1;
+                }
+                let id = candidate;
+                candidate += 1;
+                id
+            });
+            req.id = new;
+        }
+    }
+
     pub fn total_tokens(&self) -> usize {
         self.requests.iter().map(|r| r.tokens.len()).sum()
     }
@@ -151,6 +177,31 @@ mod tests {
         // Deterministic.
         let again = RequestTrace::generate_bursty(4, 6, 50.0, 20, 96, 3);
         assert_eq!(trace.requests[13].tokens, again.requests[13].tokens);
+    }
+
+    #[test]
+    fn reassign_ids_preserves_grouping_and_is_deterministic() {
+        let mut trace = RequestTrace::generate(20, 100.0, 8, 96, 4);
+        // Give the trace some multi-chunk sessions.
+        trace.requests[5].id = trace.requests[2].id;
+        trace.requests[9].id = trace.requests[2].id;
+        let mut again = trace.clone();
+        trace.reassign_ids(|id| id % 3 == 1);
+        again.reassign_ids(|id| id % 3 == 1);
+        assert!(trace.requests.iter().all(|r| r.id % 3 == 1));
+        // Chunk grouping survives the remap.
+        assert_eq!(trace.requests[5].id, trace.requests[2].id);
+        assert_eq!(trace.requests[9].id, trace.requests[2].id);
+        assert_ne!(trace.requests[3].id, trace.requests[2].id);
+        // Distinct sessions stay distinct.
+        let mut ids: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 18); // 20 requests, 3 sharing one id
+        // Deterministic.
+        for (a, b) in trace.requests.iter().zip(&again.requests) {
+            assert_eq!(a.id, b.id);
+        }
     }
 
     #[test]

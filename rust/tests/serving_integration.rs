@@ -3,7 +3,7 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
+use iqrnn::coordinator::{shard_home, BatchPolicy, SchedulerMode, Server, ServerConfig};
 use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
 use iqrnn::model::lm::{one_hot_seq, CharLm, VOCAB};
 use iqrnn::tensor::Matrix;
@@ -37,6 +37,8 @@ fn serving_under_load_completes_everything() {
             engine: StackEngine::Integer,
             opts: QuantizeOptions::default(),
             mode,
+            steal: true,
+            session_budget: None,
         };
         let server = Server::new(&lm, Some(&stats), config);
         let report = server.run_trace(&trace, 100.0).unwrap();
@@ -46,6 +48,71 @@ fn serving_under_load_completes_everything() {
         assert!(report.rt_factor().value() > 0.0);
         assert_eq!(report.lane_admissions, report.lane_retirements);
     }
+}
+
+#[test]
+fn skewed_routing_completes_with_and_without_stealing() {
+    // Every session homes on worker 0 of 4; with stealing off only
+    // worker 0 executes, with stealing on the peers pull sessions over.
+    // Either way nothing is lost and quality accounting balances.
+    let lm = tiny_lm(24, 1);
+    let mut rng = Pcg32::seeded(102);
+    let calib: Vec<Vec<usize>> = (0..3)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let oh: Vec<_> = calib.iter().map(|s| one_hot_seq(s)).collect();
+    let stats = lm.stack_weights.calibrate(&oh);
+    let mut trace = RequestTrace::generate(40, 800.0, 12, VOCAB, 10);
+    trace.reassign_ids(|id| shard_home(id, 4) == 0);
+    for steal in [false, true] {
+        let config = ServerConfig {
+            workers: 4,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            engine: StackEngine::Integer,
+            opts: QuantizeOptions::default(),
+            mode: SchedulerMode::Continuous,
+            steal,
+            session_budget: None,
+        };
+        let server = Server::new(&lm, Some(&stats), config);
+        let report = server.run_trace(&trace, 200.0).unwrap();
+        assert_eq!(report.requests, 40, "steal={steal}");
+        assert_eq!(report.tokens, trace.total_tokens());
+        assert_eq!(report.lane_admissions, report.lane_retirements);
+        if !steal {
+            // Static sticky routing: only the home worker executes.
+            assert_eq!(report.steals, 0);
+            assert_eq!(report.per_worker[1].lane_steps, 0);
+            assert_eq!(report.per_worker[0].lane_steps, report.lane_steps);
+        }
+    }
+}
+
+#[test]
+fn session_budget_under_load_loses_nothing() {
+    let lm = tiny_lm(24, 1);
+    let mut rng = Pcg32::seeded(103);
+    let calib: Vec<Vec<usize>> = (0..3)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let oh: Vec<_> = calib.iter().map(|s| one_hot_seq(s)).collect();
+    let stats = lm.stack_weights.calibrate(&oh);
+    let trace = RequestTrace::generate(50, 1500.0, 10, VOCAB, 12);
+    let config = ServerConfig {
+        workers: 2,
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        engine: StackEngine::Integer,
+        opts: QuantizeOptions::default(),
+        mode: SchedulerMode::Continuous,
+        steal: true,
+        session_budget: Some(3),
+    };
+    let server = Server::new(&lm, Some(&stats), config);
+    let report = server.run_trace(&trace, 500.0).unwrap();
+    // Every request still completes; the budget only drops idle state.
+    assert_eq!(report.requests, 50);
+    assert_eq!(report.tokens, trace.total_tokens());
+    assert!(report.evictions > 0, "50 sessions through budget 3/worker must evict");
 }
 
 #[test]

@@ -1,0 +1,517 @@
+//! Multi-worker sharded-serving suite: the scheduler-simulation
+//! contract of `continuous_batching.rs`, extended to a whole worker
+//! pool with work stealing.
+//!
+//! What is locked down:
+//!
+//! * **Bit-exactness** — however sessions are placed, stolen, or
+//!   interleaved across workers, every session's final state and nll
+//!   accounting equals running it alone on the sequential `step_token`
+//!   path (3 engines × uniform/skewed/bursty traces).
+//! * **Locality** — a session's chunks execute on exactly one worker
+//!   (work moves before first execution, state never moves).
+//! * **Baseline** — one worker with the shard machinery reproduces the
+//!   single-worker `simulate_trace` schedule exactly.
+//! * **The win** — on a skewed-routing trace, stealing strictly beats
+//!   no-stealing on pool occupancy and makespan.
+//! * **Eviction** — the session budget is deterministic and never
+//!   drops a session that holds or awaits a lane.
+//!
+//! Everything runs on the deterministic virtual-time shard simulator
+//! (no threads), so failures are replayable.
+
+use std::time::Instant;
+
+use iqrnn::coordinator::{
+    shard_home, simulate_shard_trace, simulate_trace, ContinuousScheduler,
+    SchedulerMode, ShardConfig, StreamItem,
+};
+use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::{RequestTrace, TraceRequest};
+
+fn tiny_lm(hidden: usize, depth: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(4321);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+    let mut rng = Pcg32::seeded(4322);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
+    (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect()
+}
+
+/// Sequential oracle: run a session's chunks alone on the per-token
+/// path, mirroring the scheduler's nll grouping (per-chunk accumulator
+/// folded into the total, so the f64 sums are bit-identical too).
+fn sequential_reference(
+    engine: &CharLmEngine,
+    chunks: &[Vec<usize>],
+) -> (LmState, f64, usize) {
+    let mut state = engine.new_state();
+    let mut total_nll = 0f64;
+    let mut tokens = 0usize;
+    for chunk in chunks {
+        let mut chunk_nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                chunk_nll += nll_bits(&state.logits, next);
+            }
+        }
+        total_nll += chunk_nll;
+        tokens += chunk.len();
+    }
+    (state, total_nll, tokens)
+}
+
+/// The session's chunk sequence, in arrival order, from a trace.
+fn chunks_of(trace: &RequestTrace, session: u64) -> Vec<Vec<usize>> {
+    trace
+        .requests
+        .iter()
+        .filter(|r| r.id == session)
+        .map(|r| r.tokens.clone())
+        .collect()
+}
+
+/// Find the one worker holding `session`, assert it is exactly one,
+/// and check the session against the sequential oracle bit-for-bit.
+fn assert_shard_session_bit_exact(
+    scheds: &[ContinuousScheduler],
+    trace: &RequestTrace,
+    session: u64,
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let holders: Vec<usize> = scheds
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.sessions().get(session).is_some())
+        .map(|(w, _)| w)
+        .collect();
+    assert_eq!(
+        holders.len(),
+        1,
+        "{ctx}: session {session} resident on workers {holders:?} (must be exactly one)"
+    );
+    let s = scheds[holders[0]].sessions().get(session).unwrap();
+    let chunks = chunks_of(trace, session);
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: session {session} nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+fn session_ids(trace: &RequestTrace) -> Vec<u64> {
+    let mut ids: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+#[test]
+fn multi_worker_bit_exact_on_all_engines_and_traces() {
+    let lm = tiny_lm(20, 2);
+    let stats = calib(&lm);
+    let uniform = RequestTrace::generate(24, 900.0, 10, VOCAB, 31);
+    let mut skewed = RequestTrace::generate(24, 900.0, 10, VOCAB, 32);
+    skewed.reassign_ids(|id| shard_home(id, 3) == 0);
+    let bursty = RequestTrace::generate_bursty(3, 8, 20.0, 10, VOCAB, 33);
+    for (name, trace) in [("uniform", &uniform), ("skewed", &skewed), ("bursty", &bursty)]
+    {
+        for engine_kind in StackEngine::ALL {
+            let engine =
+                lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+            let cfg = ShardConfig {
+                workers: 3,
+                max_lanes: 4,
+                mode: SchedulerMode::Continuous,
+                steal: true,
+                session_budget: None,
+                tick_ms: 1.0,
+            };
+            let (scheds, rep) = simulate_shard_trace(&engine, trace, &cfg);
+            let ctx = format!("{name}/{engine_kind:?}");
+            assert_eq!(rep.completions.len(), trace.requests.len(), "{ctx}");
+            let total_ret: usize =
+                rep.worker_stats.iter().map(|s| s.retirements).sum();
+            assert_eq!(total_ret, trace.requests.len(), "{ctx}");
+            assert_eq!(rep.lane_steps(), trace.total_tokens(), "{ctx}");
+            for id in session_ids(trace) {
+                assert_shard_session_bit_exact(&scheds, trace, id, &engine, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn wave_mode_shard_pool_is_bit_exact_too() {
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let mut trace = RequestTrace::generate(18, 700.0, 9, VOCAB, 35);
+    trace.reassign_ids(|id| shard_home(id, 2) == 0);
+    let cfg = ShardConfig {
+        workers: 2,
+        max_lanes: 4,
+        mode: SchedulerMode::Wave,
+        steal: true,
+        session_budget: None,
+        tick_ms: 1.0,
+    };
+    let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+    assert_eq!(rep.completions.len(), 18);
+    for id in session_ids(&trace) {
+        assert_shard_session_bit_exact(&scheds, &trace, id, &engine, "wave-shard");
+    }
+}
+
+#[test]
+fn one_worker_reproduces_the_single_worker_simulator() {
+    // `--workers 1` is the baseline: same schedule, same stats, same
+    // bits as the plain single-scheduler simulator.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let trace = RequestTrace::generate(20, 800.0, 12, VOCAB, 36);
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let (single, done_single) =
+            simulate_trace(&engine, &trace, 6, SchedulerMode::Continuous, 1.0);
+        let cfg = ShardConfig {
+            workers: 1,
+            max_lanes: 6,
+            mode: SchedulerMode::Continuous,
+            steal: true,
+            session_budget: None,
+            tick_ms: 1.0,
+        };
+        let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+        assert_eq!(rep.total_stolen(), 0, "{engine_kind:?}: nothing to steal");
+        assert_eq!(rep.completions.len(), done_single.len(), "{engine_kind:?}");
+        for (a, b) in rep.completions.iter().zip(&done_single) {
+            assert_eq!(a.session, b.session, "{engine_kind:?}: completion order");
+            assert_eq!(a.tokens, b.tokens, "{engine_kind:?}");
+            assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits(), "{engine_kind:?}");
+        }
+        let st = rep.worker_stats[0];
+        assert_eq!(st.batched_steps, single.stats().batched_steps, "{engine_kind:?}");
+        assert_eq!(st.lane_steps, single.stats().lane_steps, "{engine_kind:?}");
+        assert_eq!(st.peak_lanes, single.stats().peak_lanes, "{engine_kind:?}");
+        assert_eq!(st.admissions, single.stats().admissions, "{engine_kind:?}");
+        for id in session_ids(&trace) {
+            let a = scheds[0].sessions().get(id).unwrap();
+            let b = single.sessions().get(id).unwrap();
+            assert_eq!(a.state.h, b.state.h, "{engine_kind:?}: session {id}");
+            assert_eq!(
+                a.nll_bits.to_bits(),
+                b.nll_bits.to_bits(),
+                "{engine_kind:?}: session {id}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_simulation_is_deterministic() {
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let mut trace = RequestTrace::generate(40, 1500.0, 10, VOCAB, 37);
+    trace.reassign_ids(|id| shard_home(id, 4) == 0);
+    let cfg = ShardConfig {
+        workers: 4,
+        max_lanes: 4,
+        mode: SchedulerMode::Continuous,
+        steal: true,
+        session_budget: Some(4),
+        tick_ms: 1.0,
+    };
+    let (_s1, r1) = simulate_shard_trace(&engine, &trace, &cfg);
+    let (_s2, r2) = simulate_shard_trace(&engine, &trace, &cfg);
+    assert_eq!(r1.ticks, r2.ticks);
+    assert_eq!(r1.steal_events, r2.steal_events);
+    assert_eq!(r1.stolen_sessions, r2.stolen_sessions);
+    assert_eq!(r1.evicted, r2.evicted);
+    assert_eq!(r1.completions.len(), r2.completions.len());
+    for (a, b) in r1.completions.iter().zip(&r2.completions) {
+        assert_eq!(a.session, b.session);
+        assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
+    }
+    for (a, b) in r1.worker_stats.iter().zip(&r2.worker_stats) {
+        assert_eq!(a.batched_steps, b.batched_steps);
+        assert_eq!(a.lane_steps, b.lane_steps);
+        assert_eq!(a.admissions, b.admissions);
+    }
+}
+
+#[test]
+fn stealing_strictly_beats_no_stealing_on_skewed_routing() {
+    // The tentpole claim: under skewed routing (every session homes on
+    // worker 0), stealing lifts pool occupancy and shrinks the
+    // makespan, while the numerics stay bit-identical to the
+    // no-stealing run.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let mut trace = RequestTrace::generate(48, 2000.0, 14, VOCAB, 38);
+    trace.reassign_ids(|id| shard_home(id, 4) == 0);
+    let cfg = |steal: bool| ShardConfig {
+        workers: 4,
+        max_lanes: 4,
+        mode: SchedulerMode::Continuous,
+        steal,
+        session_budget: None,
+        tick_ms: 1.0,
+    };
+    let (scheds_on, with_steal) = simulate_shard_trace(&engine, &trace, &cfg(true));
+    let (scheds_off, without) = simulate_shard_trace(&engine, &trace, &cfg(false));
+    assert_eq!(with_steal.completions.len(), 48);
+    assert_eq!(without.completions.len(), 48);
+    assert_eq!(with_steal.lane_steps(), without.lane_steps());
+
+    // Without stealing only worker 0 executes anything.
+    for (w, st) in without.worker_stats.iter().enumerate().skip(1) {
+        assert_eq!(st.lane_steps, 0, "worker {w} idle");
+    }
+    assert_eq!(without.total_stolen(), 0);
+    assert!(with_steal.total_stolen() > 0, "steals must happen on a skewed trace");
+
+    let occ_on = with_steal.pool_occupancy();
+    let occ_off = without.pool_occupancy();
+    assert!(
+        occ_on > occ_off,
+        "steal occupancy {occ_on:.3} must strictly exceed no-steal {occ_off:.3}"
+    );
+    assert!(
+        with_steal.ticks < without.ticks,
+        "steal makespan {} must beat no-steal {}",
+        with_steal.ticks,
+        without.ticks
+    );
+
+    // Placement never touches numerics: both runs match the oracle.
+    for id in session_ids(&trace) {
+        assert_shard_session_bit_exact(&scheds_on, &trace, id, &engine, "steal-on");
+        assert_shard_session_bit_exact(&scheds_off, &trace, id, &engine, "steal-off");
+    }
+}
+
+#[test]
+fn steal_storm_burst_drains_and_stays_bit_exact() {
+    // A flash crowd of sessions all homed on worker 0, far more than
+    // its lanes: peers must steal aggressively (a "steal storm") and
+    // still never split a session.
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let mut trace = RequestTrace::generate_bursty(2, 24, 10.0, 10, VOCAB, 39);
+    trace.reassign_ids(|id| shard_home(id, 6) == 0);
+    let cfg = ShardConfig {
+        workers: 6,
+        max_lanes: 3,
+        mode: SchedulerMode::Continuous,
+        steal: true,
+        session_budget: None,
+        tick_ms: 1.0,
+    };
+    let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+    assert_eq!(rep.completions.len(), trace.requests.len());
+    assert!(
+        rep.total_stolen() >= 5,
+        "a 24-session burst into 3 lanes must trigger a steal storm (got {})",
+        rep.total_stolen()
+    );
+    // Several peers (not just one) must have taken part of the burst.
+    let active = rep.worker_stats.iter().filter(|s| s.lane_steps > 0).count();
+    assert!(active >= 3, "only {active} workers executed work");
+    for id in session_ids(&trace) {
+        assert_shard_session_bit_exact(&scheds, &trace, id, &engine, "storm");
+    }
+}
+
+#[test]
+fn multi_chunk_sessions_never_split_across_workers() {
+    // Sessions stream several chunks; all home on worker 0 of 3.
+    // Stealing may move a whole session before it first executes, but
+    // every chunk must then run on that worker, in order.
+    let lm = tiny_lm(20, 2);
+    let stats = calib(&lm);
+    let mut rng = Pcg32::seeded(40);
+    let mut requests = Vec::new();
+    let hot: Vec<u64> = (0..).filter(|&i| shard_home(i, 3) == 0).take(6).collect();
+    for (i, &id) in hot.iter().enumerate() {
+        for c in 0..3 {
+            requests.push(TraceRequest {
+                id,
+                arrival_ms: (i as f64) * 2.0 + (c as f64) * 7.0,
+                tokens: random_tokens(&mut rng, 6 + (c * 3 + i) % 9),
+            });
+        }
+    }
+    requests.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    let trace = RequestTrace { requests };
+    for engine_kind in StackEngine::ALL {
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let cfg = ShardConfig {
+            workers: 3,
+            max_lanes: 2,
+            mode: SchedulerMode::Continuous,
+            steal: true,
+            session_budget: None,
+            tick_ms: 1.0,
+        };
+        let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+        assert_eq!(rep.completions.len(), trace.requests.len(), "{engine_kind:?}");
+        for &id in &hot {
+            assert_shard_session_bit_exact(
+                &scheds,
+                &trace,
+                id,
+                &engine,
+                &format!("chunks/{engine_kind:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn eviction_is_deterministic_across_worker_counts_and_spares_live_lanes() {
+    let lm = tiny_lm(16, 1);
+    let stats = calib(&lm);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let trace = RequestTrace::generate(36, 1200.0, 10, VOCAB, 41);
+    for workers in [1usize, 2, 4] {
+        let cfg = ShardConfig {
+            workers,
+            max_lanes: 4,
+            mode: SchedulerMode::Continuous,
+            steal: true,
+            session_budget: Some(3),
+            tick_ms: 1.0,
+        };
+        let (scheds, r1) = simulate_shard_trace(&engine, &trace, &cfg);
+        let (_s2, r2) = simulate_shard_trace(&engine, &trace, &cfg);
+        // Deterministic: identical eviction streams per worker.
+        assert_eq!(r1.evicted, r2.evicted, "workers={workers}");
+        assert!(r1.total_evicted() > 0, "workers={workers}: budget must bite");
+        // All work still completes.
+        assert_eq!(r1.completions.len(), 36, "workers={workers}");
+        // Whatever survived respects the budget now that all lanes are
+        // free (nothing was live at exit).
+        for (w, s) in scheds.iter().enumerate() {
+            assert_eq!(s.live_lanes(), 0);
+            assert!(
+                s.sessions().len() <= 3,
+                "workers={workers} worker {w}: {} resident over budget",
+                s.sessions().len()
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_never_resets_a_session_with_a_queued_chunk() {
+    // Session 1 streams two chunks; chunk 2 is still in the router
+    // queue (capacity-bounded ingest) when chunk 1 retires and the
+    // budget fires. The router-queued protection must keep session 1's
+    // state, so chunk 2's nll continues bit-exactly from chunk 1 —
+    // without it, the longest-idle eviction would reset the stream.
+    let lm = tiny_lm(16, 1);
+    let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let mut rng = Pcg32::seeded(43);
+    let s_chunks: Vec<Vec<usize>> = (0..2).map(|_| random_tokens(&mut rng, 6)).collect();
+    let a_tokens = random_tokens(&mut rng, 30);
+    let trace = RequestTrace {
+        requests: vec![
+            TraceRequest { id: 1, arrival_ms: 0.0, tokens: s_chunks[0].clone() },
+            TraceRequest { id: 2, arrival_ms: 0.0, tokens: a_tokens },
+            TraceRequest { id: 1, arrival_ms: 0.0, tokens: s_chunks[1].clone() },
+        ],
+    };
+    let cfg = ShardConfig {
+        workers: 1,
+        max_lanes: 2,
+        mode: SchedulerMode::Continuous,
+        steal: true,
+        session_budget: Some(1),
+        tick_ms: 1.0,
+    };
+    let (_scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+    assert_eq!(rep.completions.len(), 3);
+
+    // Oracle: session 1's per-chunk nll with state carried across.
+    let mut state = engine.new_state();
+    let mut chunk_nlls = Vec::new();
+    for chunk in &s_chunks {
+        let mut nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                nll += nll_bits(&state.logits, next);
+            }
+        }
+        chunk_nlls.push(nll);
+    }
+    let got: Vec<f64> = rep
+        .completions
+        .iter()
+        .filter(|c| c.session == 1)
+        .map(|c| c.nll_bits)
+        .collect();
+    assert_eq!(got.len(), 2);
+    for (g, r) in got.iter().zip(&chunk_nlls) {
+        assert_eq!(g.to_bits(), r.to_bits(), "chunk nll diverged: stream was reset");
+    }
+}
+
+#[test]
+fn budget_never_evicts_a_session_holding_a_lane_driven_manually() {
+    // Drive a scheduler by hand so we can check the protection at the
+    // exact step eviction happens (the sim only sees the aftermath).
+    let lm = tiny_lm(16, 1);
+    let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let mut sched = ContinuousScheduler::new(&engine, 3);
+    let mut rng = Pcg32::seeded(42);
+    for id in 0..9u64 {
+        sched.offer(StreamItem {
+            session: id,
+            tokens: random_tokens(&mut rng, 4 + (id as usize % 5)),
+            submitted: Instant::now(),
+        });
+    }
+    let mut guard = 0;
+    while sched.has_live_work() {
+        sched.admit_ready();
+        sched.step();
+        let live = sched.lane_sessions();
+        let evicted = sched.enforce_session_budget(1, &[]);
+        for id in &evicted {
+            assert!(!live.contains(id), "evicted live session {id}");
+        }
+        sched.take_completed();
+        guard += 1;
+        assert!(guard < 10_000);
+    }
+    assert!(sched.stats().evictions > 0);
+    assert!(sched.sessions().len() <= 1 + 3, "at most budget + lanes resident");
+}
