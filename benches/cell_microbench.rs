@@ -10,7 +10,7 @@ use iqrnn::lstm::{
 use iqrnn::lstm::quantize_lstm;
 use iqrnn::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use iqrnn::sparse::SparseMatrixI8;
-use iqrnn::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
+use iqrnn::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32, PackedWeightsI8};
 use iqrnn::tensor::{matvec_f32, Matrix};
 use iqrnn::util::timer::{bench, fmt_secs};
 use iqrnn::util::Pcg32;
@@ -94,6 +94,43 @@ fn main() {
             t_lanes / t_gemm,
             t_gemm / batch as f64 * 1e9
         );
+    }
+
+    // Packed panel kernel vs the unpacked blocked kernel, on the ragged
+    // shapes continuous batching actually produces (odd live widths,
+    // n_cell off the 32-byte grid) — where the unpacked kernel decays
+    // into scalar tails and the packed one doesn't.
+    println!("\n== packed panel GEMM vs unpacked blocked GEMM ==");
+    for &(rows, cols) in &[(512usize, 512usize), (513, 511), (192, 200)] {
+        let mut wr = Matrix::<i8>::zeros(rows, cols);
+        for v in &mut wr.data {
+            *v = rng.range_i32(-127, 127) as i8;
+        }
+        let packed = PackedWeightsI8::pack(wr.clone());
+        let biasr = vec![0i32; rows];
+        for &batch in &[1usize, 3, 5, 7, 8] {
+            let mut xb = Matrix::<i8>::zeros(batch, cols);
+            for v in &mut xb.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let mut ob = Matrix::<i32>::zeros(batch, rows);
+            let t_packed = bench(3, 31, || {
+                packed.gemm(&xb, &biasr, &mut ob);
+                ob.at(0, 0)
+            })
+            .median_secs();
+            let t_unpacked = bench(3, 31, || {
+                gemm_i8_i32(&wr, &xb, &biasr, &mut ob);
+                ob.at(0, 0)
+            })
+            .median_secs();
+            println!(
+                "  {rows}x{cols} batch {batch}: packed {} unpacked {} ({:.2}x)",
+                fmt_secs(t_packed),
+                fmt_secs(t_unpacked),
+                t_unpacked / t_packed
+            );
+        }
     }
 
     println!("\n== elementwise pipeline (len {n}) ==");

@@ -21,8 +21,18 @@ use iqrnn::util::timer::{bench, fmt_secs};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
 
-/// Batch sizes of the batch-major sweep.
-const BATCH_SWEEP: [usize; 5] = [1, 4, 8, 16, 32];
+/// Batch sizes of the batch-major sweep. Includes the ragged widths
+/// (3, 5) that continuous batching actually produces after compaction —
+/// the shapes the lane-padding + packed-kernel work targets.
+const BATCH_SWEEP: [usize; 7] = [1, 3, 4, 5, 8, 16, 32];
+
+/// CI smoke mode (`PALLAS_BENCH_QUICK=1`): shrink every sweep so the
+/// whole bench runs in seconds. The point of the quick run is not
+/// numbers — it proves the bench binary executes end to end and emits
+/// every `BENCH_*.json` artifact on every PR.
+fn quick() -> bool {
+    iqrnn::util::env_flag("PALLAS_BENCH_QUICK")
+}
 
 fn engine_stack(
     weights: &StackWeights,
@@ -48,15 +58,23 @@ fn time_stack(stack: &LstmStack, xs: &[Vec<f32>], reps: usize) -> f64 {
 
 fn main() {
     let mut rng = Pcg32::seeded(4);
+    let quick = quick();
+    if quick {
+        println!("(quick mode: CI smoke sweep, numbers are not comparable)\n");
+    }
     println!("== E4: engine speed (single stream, per-step wall clock) ==\n");
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>10} {:>10}",
         "config", "float", "hybrid", "integer", "int/float", "int/hybrid"
     );
 
-    for &(n_input, hidden, depth, steps) in
-        &[(64usize, 256usize, 1usize, 64usize), (256, 512, 2, 32), (96, 192, 2, 64)]
-    {
+    let speed_cfgs: &[(usize, usize, usize, usize)] = if quick {
+        &[(32, 64, 1, 8)]
+    } else {
+        &[(64, 256, 1, 64), (256, 512, 2, 32), (96, 192, 2, 64)]
+    };
+    let reps = if quick { 3 } else { 9 };
+    for &(n_input, hidden, depth, steps) in speed_cfgs {
         let spec = LstmSpec::plain(n_input, hidden);
         let weights = StackWeights::random(n_input, spec, depth, &mut rng);
         let calib: Vec<Vec<Vec<f32>>> = (0..4)
@@ -73,7 +91,7 @@ fn main() {
         let mut med = Vec::new();
         for engine in StackEngine::ALL {
             let stack = engine_stack(&weights, engine, &calib);
-            med.push(time_stack(&stack, &xs, 9) / steps as f64);
+            med.push(time_stack(&stack, &xs, reps) / steps as f64);
         }
         println!(
             "{:<22} {:>12} {:>12} {:>12} {:>9.2}x {:>9.2}x",
@@ -89,7 +107,8 @@ fn main() {
     // RT factor on the standard config (paper reports RT factors).
     {
         let n_input = 96;
-        let spec = LstmSpec::plain(n_input, 192);
+        let hidden = if quick { 48 } else { 192 };
+        let spec = LstmSpec::plain(n_input, hidden);
         let weights = StackWeights::random(n_input, spec, 2, &mut rng);
         let calib: Vec<Vec<Vec<f32>>> = (0..4)
             .map(|_| {
@@ -98,14 +117,14 @@ fn main() {
                     .collect()
             })
             .collect();
-        let tokens = 512usize;
+        let tokens = if quick { 32usize } else { 512usize };
         let xs: Vec<Vec<f32>> = (0..tokens)
             .map(|_| (0..n_input).map(|_| rng.normal_f32(0.0, 1.0)).collect())
             .collect();
         println!("\n== RT factor (nominal {} tok/s stream) ==", RtFactor::NOMINAL_TOKENS_PER_SEC);
         for engine in StackEngine::ALL {
             let stack = engine_stack(&weights, engine, &calib);
-            let secs = time_stack(&stack, &xs, 5);
+            let secs = time_stack(&stack, &xs, if quick { 2 } else { 5 });
             let rt = RtFactor::from_tokens(secs, tokens);
             println!("  {:<8} RT factor {:.4}", engine.label(), rt.value());
         }
@@ -116,9 +135,11 @@ fn main() {
     // Emits BENCH_batch.json for trend tracking.
     {
         let n_input = 64usize;
-        let hidden = 256usize;
+        // Quick mode keeps a ragged hidden width so the CI smoke run
+        // exercises the packed kernel's padded K path.
+        let hidden = if quick { 40usize } else { 256 };
         let depth = 1usize;
-        let steps = 32usize;
+        let steps = if quick { 8usize } else { 32 };
         let spec = LstmSpec::plain(n_input, hidden);
         let weights = StackWeights::random(n_input, spec, depth, &mut rng);
         let calib: Vec<Vec<Vec<f32>>> = (0..4)
@@ -133,7 +154,7 @@ fn main() {
         let mut entries: Vec<String> = Vec::new();
         for engine in StackEngine::ALL {
             let stack = engine_stack(&weights, engine, &calib);
-            for &batch in &BATCH_SWEEP {
+            for &batch in BATCH_SWEEP.iter().filter(|&&b| !quick || b <= 8) {
                 let xs: Vec<Matrix<f32>> = (0..steps)
                     .map(|_| {
                         let mut m = Matrix::<f32>::zeros(batch, n_input);
@@ -142,7 +163,7 @@ fn main() {
                     })
                     .collect();
                 let mut out = Matrix::<f32>::zeros(batch, stack.n_output());
-                let secs = bench(1, 7, || {
+                let secs = bench(1, if quick { 3 } else { 7 }, || {
                     let mut states = stack.zero_batch_state(batch);
                     for x in &xs {
                         stack.step_batch(x, &mut states, &mut out);
@@ -186,26 +207,37 @@ fn main() {
     // compute-side throughput of the replay. Emits BENCH_continuous.json.
     {
         let mut rng2 = Pcg32::seeded(7);
-        let spec = LstmSpec::plain(VOCAB, 96);
+        // Quick mode uses a ragged hidden width (packed-K coverage) and
+        // small traces.
+        let hidden = if quick { 40usize } else { 96 };
+        let spec = LstmSpec::plain(VOCAB, hidden);
         let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng2);
-        let mut out_w = Matrix::<f32>::zeros(VOCAB, 96);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
         rng2.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-        let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 96, depth: 1 };
-        let calib: Vec<Vec<usize>> = (0..6)
+        let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 };
+        let calib: Vec<Vec<usize>> = (0..if quick { 3 } else { 6 })
             .map(|_| (0..48).map(|_| rng2.below(VOCAB as u32) as usize).collect())
             .collect();
         let stats = lm.calibrate(&calib);
         let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
 
-        let traces: Vec<(&str, RequestTrace)> = vec![
-            ("poisson", RequestTrace::generate(96, 900.0, 48, VOCAB, 5)),
-            ("bursty", RequestTrace::generate_bursty(6, 16, 30.0, 48, VOCAB, 6)),
-            ("staggered", RequestTrace::generate_staggered(24, 6.0, 64, VOCAB, 7)),
-        ];
+        let traces: Vec<(&str, RequestTrace)> = if quick {
+            vec![
+                ("poisson", RequestTrace::generate(24, 300.0, 16, VOCAB, 5)),
+                ("bursty", RequestTrace::generate_bursty(3, 8, 30.0, 16, VOCAB, 6)),
+                ("staggered", RequestTrace::generate_staggered(12, 6.0, 20, VOCAB, 7)),
+            ]
+        } else {
+            vec![
+                ("poisson", RequestTrace::generate(96, 900.0, 48, VOCAB, 5)),
+                ("bursty", RequestTrace::generate_bursty(6, 16, 30.0, 48, VOCAB, 6)),
+                ("staggered", RequestTrace::generate_staggered(24, 6.0, 64, VOCAB, 7)),
+            ]
+        };
         println!("\n== continuous batching vs wave-at-a-time (8 lanes, Integer) ==");
         println!(
-            "{:<10} {:<11} {:>12} {:>10} {:>8} {:>6}",
-            "trace", "mode", "tokens/sec", "occupancy", "steps", "peak"
+            "{:<10} {:<11} {:>12} {:>10} {:>8} {:>8} {:>6}",
+            "trace", "mode", "tokens/sec", "occupancy", "padded", "steps", "peak"
         );
         let mut entries: Vec<String> = Vec::new();
         for (name, trace) in &traces {
@@ -218,21 +250,24 @@ fn main() {
                 let st = sched.stats();
                 let tps = st.lane_steps as f64 / secs;
                 println!(
-                    "{:<10} {:<11} {:>12.0} {:>10.3} {:>8} {:>6}",
+                    "{:<10} {:<11} {:>12.0} {:>10.3} {:>8.3} {:>8} {:>6}",
                     name,
                     mode.label(),
                     tps,
                     st.mean_occupancy(),
+                    st.padded_occupancy(),
                     st.batched_steps,
                     st.peak_lanes
                 );
                 entries.push(format!(
                     "    {{\"trace\": \"{}\", \"mode\": \"{}\", \"tokens_per_sec\": {:.1}, \
-                     \"occupancy\": {:.4}, \"batched_steps\": {}, \"peak_lanes\": {}}}",
+                     \"occupancy\": {:.4}, \"padded_occupancy\": {:.4}, \
+                     \"batched_steps\": {}, \"peak_lanes\": {}}}",
                     name,
                     mode.label(),
                     tps,
                     st.mean_occupancy(),
+                    st.padded_occupancy(),
                     st.batched_steps,
                     st.peak_lanes
                 ));
@@ -248,7 +283,7 @@ fn main() {
             }
         }
         let json = format!(
-            "{{\n  \"bench\": \"continuous_batching\",\n  \"config\": {{\"hidden\": 96, \
+            "{{\n  \"bench\": \"continuous_batching\",\n  \"config\": {{\"hidden\": {hidden}, \
              \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0}},\n  \"results\": [\n{}\n  ]\n}}\n",
             entries.join(",\n")
         );
@@ -268,9 +303,14 @@ fn main() {
             "{:<8} {:<8} {:<6} {:>12} {:>10} {:>8} {:>7}",
             "workers", "routing", "steal", "tokens/sec", "pool occ", "ticks", "steals"
         );
-        let base = RequestTrace::generate(128, 1200.0, 48, VOCAB, 11);
+        let base = if quick {
+            RequestTrace::generate(32, 400.0, 16, VOCAB, 11)
+        } else {
+            RequestTrace::generate(128, 1200.0, 48, VOCAB, 11)
+        };
+        let worker_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
         let mut entries: Vec<String> = Vec::new();
-        for &workers in &[1usize, 2, 4, 8] {
+        for &workers in worker_sweep {
             for routing in ["uniform", "skewed"] {
                 let mut trace = base.clone();
                 if routing == "skewed" {
@@ -328,9 +368,10 @@ fn main() {
             }
         }
         let json = format!(
-            "{{\n  \"bench\": \"shard_sweep\",\n  \"config\": {{\"hidden\": 96, \
-             \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0, \"requests\": 128}},\n  \
+            "{{\n  \"bench\": \"shard_sweep\",\n  \"config\": {{\"hidden\": {hidden}, \
+             \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0, \"requests\": {}}},\n  \
              \"results\": [\n{}\n  ]\n}}\n",
+            base.requests.len(),
             entries.join(",\n")
         );
         match std::fs::write("BENCH_shard.json", &json) {
@@ -342,7 +383,12 @@ fn main() {
     // §6 ablation: folded vs unfolded zero-point handling in the gate
     // matmul inner loop.
     println!("\n== §6 ablation: zero-point folding in the int8 matvec ==");
-    for &(rows, cols) in &[(256usize, 256usize), (512, 512), (1024, 1024)] {
+    let ablation_cfgs: &[(usize, usize)] = if quick {
+        &[(128, 128)]
+    } else {
+        &[(256, 256), (512, 512), (1024, 1024)]
+    };
+    for &(rows, cols) in ablation_cfgs {
         let mut w = Matrix::<i8>::zeros(rows, cols);
         for v in &mut w.data {
             *v = rng.range_i32(-127, 127) as i8;
@@ -373,7 +419,7 @@ fn main() {
     // State copy cost: confirm integer state (int16+int8) is 3x smaller
     // than float state — the memory-bandwidth side of the speedup.
     {
-        let hidden = 512;
+        let hidden = if quick { 64 } else { 512 };
         let spec = LstmSpec::plain(64, hidden);
         let weights = StackWeights::random(64, spec, 1, &mut rng);
         let calib: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.5; 64]; 4]];

@@ -16,6 +16,9 @@ pub struct WorkerLoad {
     pub batched_steps: usize,
     /// Lane-steps (tokens) this worker executed.
     pub lane_steps: usize,
+    /// Lane-slots this worker executed including SIMD tile padding
+    /// (physical GEMM width summed per step; `>= lane_steps`).
+    pub padded_lane_steps: usize,
     /// Widest live batch this worker ran.
     pub peak_lanes: usize,
     /// Admissions into this worker's wave.
@@ -37,6 +40,16 @@ impl WorkerLoad {
             0.0
         } else {
             self.lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+
+    /// Mean physical (tile-padded) lanes per batched step on this
+    /// worker — what its GEMMs actually executed.
+    pub fn padded_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.padded_lane_steps as f64 / self.batched_steps as f64
         }
     }
 }
@@ -71,6 +84,13 @@ pub struct ServingReport {
     /// Lane-steps executed across all workers (equals tokens processed
     /// through the batched path).
     pub lane_steps: usize,
+    /// Lane-slots executed across all workers including SIMD tile
+    /// padding: the physical GEMM width summed per batched step. The
+    /// padding contract rounds every live batch up to the register-tile
+    /// width so the int8 kernels never run scalar tails; the gap
+    /// between this and `lane_steps` is the price paid for that
+    /// (reported separately so `occ` stays an honest live-lane metric).
+    pub padded_lane_steps: usize,
     /// Widest cross-session batch any worker ran.
     pub peak_lanes: usize,
     /// Lane turnover: admissions into live waves across all workers.
@@ -106,6 +126,17 @@ impl ServingReport {
         }
     }
 
+    /// Mean *physical* lanes per batched step, pad lanes included —
+    /// what the tile-padded GEMMs actually executed (`pad` in the
+    /// report line; always `>=` [`Self::mean_occupancy`]).
+    pub fn padded_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.padded_lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+
     /// RT factor against the nominal stream rate (compute time only —
     /// the paper's RT factor is processing time per unit of audio).
     pub fn rt_factor(&self) -> RtFactor {
@@ -116,7 +147,7 @@ impl ServingReport {
     pub fn print(&self) {
         println!(
             "  {:<8} {:<10} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
-             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} peak={} \
+             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} pad={:.2} peak={} \
              adm={} wait={:.2}ms steals={} evict={}",
             self.engine,
             self.mode,
@@ -129,6 +160,7 @@ impl ServingReport {
             self.latency.percentile(99.0),
             self.mean_batch,
             self.mean_occupancy(),
+            self.padded_occupancy(),
             self.peak_lanes,
             self.lane_admissions,
             self.mean_admission_ms,
@@ -142,12 +174,13 @@ impl ServingReport {
     pub fn print_workers(&self) {
         for w in &self.per_worker {
             println!(
-                "    worker {:<2} steps={:<6} lanes={:<7} occ={:.2} peak={} \
+                "    worker {:<2} steps={:<6} lanes={:<7} occ={:.2} pad={:.2} peak={} \
                  adm={} ret={} stole={} evict={}",
                 w.worker,
                 w.batched_steps,
                 w.lane_steps,
                 w.mean_occupancy(),
+                w.padded_occupancy(),
                 w.peak_lanes,
                 w.admissions,
                 w.retirements,

@@ -110,6 +110,12 @@ pub struct SchedulerStats {
     pub batched_steps: usize,
     /// Lane-steps executed (= tokens through the batched path).
     pub lane_steps: usize,
+    /// Lane-slots executed including SIMD tile padding: the *physical*
+    /// GEMM width summed per batched step (always `>= lane_steps`).
+    /// The gap between this and `lane_steps` is the zero-lane work the
+    /// padding contract trades for tail-free full-tile kernels — kept
+    /// separate so `mean_occupancy` stays an honest live-lane metric.
+    pub padded_lane_steps: usize,
     /// Widest live batch observed.
     pub peak_lanes: usize,
     /// Lane turnover: admissions into the wave.
@@ -139,6 +145,27 @@ impl SchedulerStats {
             0.0
         } else {
             self.admission_wait_ms / self.admissions as f64
+        }
+    }
+
+    /// Mean *physical* lanes per batched step — what the GEMMs actually
+    /// executed, pad lanes included (always `>=` [`Self::mean_occupancy`]).
+    pub fn padded_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.padded_lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+
+    /// Fraction of executed lane-slots that carried a live stream
+    /// (`lane_steps / padded_lane_steps`; 1.0 = no padding waste —
+    /// every live width was already a tile multiple).
+    pub fn padding_efficiency(&self) -> f64 {
+        if self.padded_lane_steps == 0 {
+            1.0
+        } else {
+            self.lane_steps as f64 / self.padded_lane_steps as f64
         }
     }
 }
@@ -255,6 +282,7 @@ impl<'a> ContinuousScheduler<'a> {
         engine.step_tokens(&self.toks, &mut self.bs);
         self.stats.batched_steps += 1;
         self.stats.lane_steps += self.lanes.len();
+        self.stats.padded_lane_steps += self.bs.padded_batch();
         for (lane, l) in self.lanes.iter_mut().enumerate() {
             if let Some(&next) = l.tokens.get(l.pos + 1) {
                 l.nll += nll_bits(self.bs.logits.row(lane), next);

@@ -243,6 +243,7 @@ impl<'a> Server<'a> {
                 worker: i,
                 batched_steps: s.stats.batched_steps,
                 lane_steps: s.stats.lane_steps,
+                padded_lane_steps: s.stats.padded_lane_steps,
                 peak_lanes: s.stats.peak_lanes,
                 admissions: s.stats.admissions,
                 retirements: s.stats.retirements,
@@ -256,6 +257,8 @@ impl<'a> Server<'a> {
         let items: usize = summaries.iter().map(|s| s.items).sum();
         let batched_steps: usize = summaries.iter().map(|s| s.stats.batched_steps).sum();
         let lane_steps: usize = summaries.iter().map(|s| s.stats.lane_steps).sum();
+        let padded_lane_steps: usize =
+            summaries.iter().map(|s| s.stats.padded_lane_steps).sum();
         let peak_lanes: usize =
             summaries.iter().map(|s| s.stats.peak_lanes).max().unwrap_or(0);
         let lane_admissions: usize = summaries.iter().map(|s| s.stats.admissions).sum();
@@ -277,6 +280,7 @@ impl<'a> Server<'a> {
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
             batched_steps,
             lane_steps,
+            padded_lane_steps,
             peak_lanes,
             lane_admissions,
             lane_retirements,
@@ -340,6 +344,10 @@ mod tests {
                 assert_eq!(report.requests, 24, "{engine:?} {mode:?}");
                 assert_eq!(report.tokens, trace.total_tokens());
                 assert_eq!(report.lane_retirements, report.lane_admissions);
+                assert!(
+                    report.padded_lane_steps >= report.lane_steps,
+                    "physical width below live width"
+                );
                 assert_eq!(report.per_worker.len(), 2);
                 assert!(report.latency.percentile(50.0) >= 0.0);
                 assert!(report.throughput() > 0.0);

@@ -79,6 +79,18 @@ impl FloatBatchState {
         self.c.copy_row_within(src, dst);
         self.h.copy_row_within(src, dst);
     }
+
+    /// Zero lanes `from..` — the SIMD padding contract: a serving batch
+    /// is rounded up to the register-tile width, and the pad lanes are
+    /// zeroed here so they carry a deterministic zero stream. They are
+    /// stepped (so [`gemm_f32`] always sees full lane blocks) but never
+    /// gathered into, scattered out, or read back.
+    pub fn clear_lanes(&mut self, from: usize) {
+        let c0 = from.min(self.c.rows) * self.c.cols;
+        self.c.data[c0..].fill(0.0);
+        let h0 = from.min(self.h.rows) * self.h.cols;
+        self.h.data[h0..].fill(0.0);
+    }
 }
 
 /// Scratch buffers reused across steps (no allocation on the hot path).

@@ -13,18 +13,20 @@
 use crate::quant::params::SymmetricQuant;
 use crate::quant::recipe::Gate;
 use crate::quant::quantize_symmetric_i8;
-use crate::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
+use crate::tensor::qmatmul::PackedWeightsI8;
 use crate::tensor::Matrix;
 use super::float_cell::{FloatBatchState, FloatState};
 use super::layernorm::layernorm_f32;
 use super::spec::{gate_index, LstmSpec, LstmWeights};
 
-/// One gate's quantized weights.
+/// One gate's quantized weights, pre-packed at build time for the
+/// register-tiled batched GEMM (the sequential matvec path reads the
+/// retained row-major form).
 #[derive(Debug, Clone)]
 struct HybridGate {
-    w: Matrix<i8>,
+    w: PackedWeightsI8,
     w_scale: f64,
-    r: Matrix<i8>,
+    r: PackedWeightsI8,
     r_scale: f64,
     bias: Vec<f32>,
     peephole: Option<Vec<f32>>,
@@ -36,7 +38,7 @@ struct HybridGate {
 pub struct HybridLstm {
     pub spec: LstmSpec,
     gates: [Option<HybridGate>; 4],
-    w_proj: Option<(Matrix<i8>, f64)>,
+    w_proj: Option<(PackedWeightsI8, f64)>,
     b_proj: Option<Vec<f32>>,
     scratch: std::cell::RefCell<Scratch>,
     batch_scratch: std::cell::RefCell<BatchScratch>,
@@ -128,9 +130,9 @@ impl HybridLstm {
                 let (w, wq) = quantize_symmetric_i8(&gw.w);
                 let (r, rq) = quantize_symmetric_i8(&gw.r);
                 HybridGate {
-                    w,
+                    w: PackedWeightsI8::pack(w),
                     w_scale: wq.scale,
-                    r,
+                    r: PackedWeightsI8::pack(r),
                     r_scale: rq.scale,
                     bias: gw.bias.clone(),
                     peephole: gw.peephole.clone(),
@@ -141,7 +143,7 @@ impl HybridLstm {
         let gates = [mk(Gate::Input), mk(Gate::Forget), mk(Gate::Update), mk(Gate::Output)];
         let w_proj = weights.w_proj.as_ref().map(|w| {
             let (q, s) = quantize_symmetric_i8(w);
-            (q, s.scale)
+            (PackedWeightsI8::pack(q), s.scale)
         });
         let scratch = Scratch {
             qx: vec![0; spec.n_input],
@@ -166,12 +168,12 @@ impl HybridLstm {
     pub fn weight_bytes(&self) -> usize {
         let mut bytes = 0;
         for g in self.gates.iter().flatten() {
-            bytes += g.w.len() + g.r.len() + 4 * g.bias.len();
+            bytes += g.w.storage_bytes() + g.r.storage_bytes() + 4 * g.bias.len();
             bytes += g.peephole.as_ref().map_or(0, |p| 4 * p.len());
             bytes += g.ln_weight.as_ref().map_or(0, |l| 4 * l.len());
         }
         if let Some((w, _)) = &self.w_proj {
-            bytes += w.len();
+            bytes += w.storage_bytes();
         }
         bytes += self.b_proj.as_ref().map_or(0, |b| 4 * b.len());
         bytes
@@ -206,13 +208,13 @@ impl HybridLstm {
             let hg = self.gate(g);
             let out = &mut pre[idx];
             // W x (int8 matmul, dequantized with s_W * s_x).
-            matvec_i8_i32(&hg.w, qx, &[], &mut acc[..spec.n_cell]);
+            hg.w.matvec(qx, &[], &mut acc[..spec.n_cell]);
             let kx = (hg.w_scale * sx) as f32;
             for (o, &a) in out.iter_mut().zip(acc.iter()) {
                 *o = a as f32 * kx;
             }
             // + R h.
-            matvec_i8_i32(&hg.r, qh, &[], &mut acc[..spec.n_cell]);
+            hg.r.matvec(qh, &[], &mut acc[..spec.n_cell]);
             let kh = (hg.r_scale * sh) as f32;
             for (o, &a) in out.iter_mut().zip(acc.iter()) {
                 *o += a as f32 * kh;
@@ -259,7 +261,7 @@ impl HybridLstm {
 
         if let Some((w_proj, wp_scale)) = &self.w_proj {
             let sm = dynamic_quantize(m, qm);
-            matvec_i8_i32(w_proj, qm, &[], &mut acc[..spec.n_output]);
+            w_proj.matvec(qm, &[], &mut acc[..spec.n_output]);
             let k = (wp_scale * sm) as f32;
             for (h, &a) in state.h.iter_mut().zip(acc.iter()) {
                 *h = a as f32 * k;
@@ -305,14 +307,14 @@ impl HybridLstm {
                 continue;
             }
             let hg = self.gate(g);
-            gemm_i8_i32(&hg.w, qx, &[], acc_cell);
+            hg.w.gemm(qx, &[], acc_cell);
             for b in 0..batch {
                 let kx = (hg.w_scale * sx[b]) as f32;
                 for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
                     *o = a as f32 * kx;
                 }
             }
-            gemm_i8_i32(&hg.r, qh, &[], acc_cell);
+            hg.r.gemm(qh, &[], acc_cell);
             for b in 0..batch {
                 let kh = (hg.r_scale * sh[b]) as f32;
                 for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
@@ -374,7 +376,7 @@ impl HybridLstm {
                 let sm = dynamic_quantize(m.row(b), qm.row_mut(b));
                 sx[b] = sm; // reuse the lane-scale scratch for `m`
             }
-            gemm_i8_i32(w_proj, qm, &[], acc_out);
+            w_proj.gemm(qm, &[], acc_out);
             for b in 0..batch {
                 let k = (wp_scale * sx[b]) as f32;
                 for (h, &a) in state.h.row_mut(b).iter_mut().zip(acc_out.row(b)) {

@@ -23,29 +23,38 @@ use crate::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use crate::quant::params::AsymmetricQuant;
 use crate::quant::recipe::Gate;
 use crate::sparse::SparseMatrixI8;
-use crate::tensor::qmatmul::{gemm_i8_i32, matvec_i8_i32};
+use crate::tensor::qmatmul::PackedWeightsI8;
 use crate::tensor::Matrix;
 use super::layernorm::IntegerLayerNorm;
 use super::spec::{gate_index, LstmSpec};
 
 /// Dense or CSR weight matrix (the sparse rows of Table 1).
+///
+/// Dense weights are held pre-packed ([`PackedWeightsI8`]): packing
+/// happens once, at quantization time, so the batched step never packs
+/// or hits scalar remainder tails.
 #[derive(Debug, Clone)]
 pub enum WeightMat {
-    Dense(Matrix<i8>),
+    Dense(PackedWeightsI8),
     Sparse(SparseMatrixI8),
 }
 
 impl WeightMat {
+    /// Wrap a dense int8 matrix, packing it for the tiled batched GEMM.
+    pub fn dense(m: Matrix<i8>) -> Self {
+        WeightMat::Dense(PackedWeightsI8::pack(m))
+    }
+
     pub fn rows(&self) -> usize {
         match self {
-            WeightMat::Dense(m) => m.rows,
+            WeightMat::Dense(m) => m.rows(),
             WeightMat::Sparse(s) => s.rows,
         }
     }
 
     pub fn cols(&self) -> usize {
         match self {
-            WeightMat::Dense(m) => m.cols,
+            WeightMat::Dense(m) => m.cols(),
             WeightMat::Sparse(s) => s.cols,
         }
     }
@@ -54,18 +63,19 @@ impl WeightMat {
     #[inline]
     pub fn matvec(&self, x: &[i8], bias: &[i32], out: &mut [i32]) {
         match self {
-            WeightMat::Dense(m) => matvec_i8_i32(m, x, bias, out),
+            WeightMat::Dense(m) => m.matvec(x, bias, out),
             WeightMat::Sparse(s) => s.matvec_i32(x, bias, out),
         }
     }
 
     /// Batched `out[b,r] = bias[r] + Σ_c w[r,c] x[b,c]`: dense weights
-    /// go through the blocked GEMM, CSR weights fall back to per-lane
-    /// matvec (both bit-exact with [`Self::matvec`] per lane).
+    /// go through the packed register-tiled GEMM (no scalar tails for
+    /// any batch or depth), CSR weights fall back to per-lane matvec
+    /// (both bit-exact with [`Self::matvec`] per lane).
     #[inline]
     pub fn matmul_batch(&self, x: &Matrix<i8>, bias: &[i32], out: &mut Matrix<i32>) {
         match self {
-            WeightMat::Dense(m) => gemm_i8_i32(m, x, bias, out),
+            WeightMat::Dense(m) => m.gemm(x, bias, out),
             WeightMat::Sparse(s) => {
                 debug_assert_eq!(out.cols, s.rows);
                 debug_assert_eq!(out.rows, x.rows);
@@ -77,10 +87,11 @@ impl WeightMat {
         }
     }
 
-    /// Storage bytes of the weight data.
+    /// Storage bytes of the weight data (logical — the dense packing
+    /// copy is an execution detail, not model size).
     pub fn storage_bytes(&self) -> usize {
         match self {
-            WeightMat::Dense(m) => m.len(),
+            WeightMat::Dense(m) => m.storage_bytes(),
             WeightMat::Sparse(s) => s.storage_bytes(),
         }
     }
@@ -222,6 +233,18 @@ impl IntegerBatchState {
     pub fn copy_lane(&mut self, src: usize, dst: usize) {
         self.c.copy_row_within(src, dst);
         self.h.copy_row_within(src, dst);
+    }
+
+    /// Zero lanes `from..` — the SIMD padding contract: a serving batch
+    /// is rounded up to the register-tile width, and the pad lanes are
+    /// zeroed here so they carry a deterministic zero stream. They are
+    /// stepped (that is the point: the GEMM always sees full tiles) but
+    /// never gathered into, scattered out, or read back.
+    pub fn clear_lanes(&mut self, from: usize) {
+        let c0 = from.min(self.c.rows) * self.c.cols;
+        self.c.data[c0..].fill(0);
+        let h0 = from.min(self.h.rows) * self.h.cols;
+        self.h.data[h0..].fill(0);
     }
 }
 
@@ -394,7 +417,7 @@ impl IntegerLstm {
             if ig.ln.is_some() { &mut ln_in[..n] } else { &mut out[..n] };
         #[cfg(target_arch = "x86_64")]
         {
-            if std::arch::is_x86_feature_detected!("avx2") {
+            if crate::util::avx2_enabled() {
                 // SAFETY: feature checked; fused kernels are bit-exact
                 // with the scalar fallback below (property-tested).
                 unsafe {
@@ -500,7 +523,7 @@ impl IntegerLstm {
         tanh_q15_slice(&state.c[..n], self.cell_ib, &mut tanh_c[..n]);
         let zp_m = self.hidden_q.zero_point;
         #[cfg(target_arch = "x86_64")]
-        let simd_done = if std::arch::is_x86_feature_detected!("avx2") {
+        let simd_done = if crate::util::avx2_enabled() {
             // SAFETY: feature checked; bit-exact with the scalar loop.
             unsafe {
                 crate::nonlin::simd::hidden_rescale_avx2(
@@ -568,7 +591,7 @@ impl IntegerLstm {
             };
             #[cfg(target_arch = "x86_64")]
             {
-                if std::arch::is_x86_feature_detected!("avx2") {
+                if crate::util::avx2_enabled() {
                     // SAFETY: feature checked; kernels are bit-exact
                     // with the scalar fallback (property-tested).
                     unsafe {
@@ -676,7 +699,7 @@ impl IntegerLstm {
         tanh_q15_slice(&state.c.data[..total], self.cell_ib, &mut tanh_c[..total]);
         let zp_m = self.hidden_q.zero_point;
         #[cfg(target_arch = "x86_64")]
-        let simd_done = if std::arch::is_x86_feature_detected!("avx2") {
+        let simd_done = if crate::util::avx2_enabled() {
             // SAFETY: feature checked; bit-exact with the scalar loop.
             unsafe {
                 crate::nonlin::simd::hidden_rescale_avx2(

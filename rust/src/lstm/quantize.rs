@@ -111,8 +111,8 @@ pub fn quantize_lstm(
 
     let mk_gate = |g: Gate| -> Option<IntegerGate> {
         let gw = weights.gate_opt(g)?;
-        let (w_q, w_s) = quantize_weight(&gw.w, opts.sparse_weights);
-        let (r_q, r_s) = quantize_weight(&gw.r, opts.sparse_weights);
+        let (w_q, w_s) = quantize_weight(&gw.w);
+        let (r_q, r_s) = quantize_weight(&gw.r);
 
         let gate_scale = if spec.flags.layer_norm {
             let max = stats.gate_out[gate_index(g)].max_abs().max(1e-6);
@@ -127,22 +127,8 @@ pub fn quantize_lstm(
         let eff_h = Rescale::from_scale(r_s.scale * output_q.scale / gate_scale);
 
         // Zero-point folding (§6): the kernels compute W(x + zp_fold).
-        let w_bias = fold_zero_point(
-            match &w_q {
-                WeightMat::Dense(m) => m,
-                WeightMat::Sparse(_) => unreachable!("fold before sparsify"),
-            },
-            &[],
-            input_q.folding_zp(),
-        );
-        let mut r_bias = fold_zero_point(
-            match &r_q {
-                WeightMat::Dense(m) => m,
-                WeightMat::Sparse(_) => unreachable!(),
-            },
-            &[],
-            output_q.folding_zp(),
-        );
+        let w_bias = fold_zero_point(&w_q, &[], input_q.folding_zp());
+        let mut r_bias = fold_zero_point(&r_q, &[], output_q.folding_zp());
 
         // Bias (Table 2): without LN, quantize at s_R*s_h and add into
         // the Rh accumulator (§3.2.4, fig 3). With LN the float bias
@@ -204,16 +190,9 @@ pub fn quantize_lstm(
 
     // Projection (§3.2.8).
     let proj = weights.w_proj.as_ref().map(|w| {
-        let (w_q, w_s) = quantize_weight(w, opts.sparse_weights);
+        let (w_q, w_s) = quantize_weight(w);
         let s_bias = w_s.scale * hidden_q.scale;
-        let mut bias = fold_zero_point(
-            match &w_q {
-                WeightMat::Dense(m) => m,
-                WeightMat::Sparse(_) => unreachable!(),
-            },
-            &[],
-            hidden_q.folding_zp(),
-        );
+        let mut bias = fold_zero_point(&w_q, &[], hidden_q.folding_zp());
         if let Some(b) = &weights.b_proj {
             let sq = SymmetricQuant::with_scale(s_bias);
             for (fb, &v) in bias.iter_mut().zip(b) {
@@ -232,18 +211,21 @@ pub fn quantize_lstm(
     )
 }
 
-/// Symmetric int8 weight quantization, kept dense until the biases are
-/// folded.
-fn quantize_weight(w: &Matrix<f32>, _sparse: bool) -> (WeightMat, SymmetricQuant) {
+/// Symmetric int8 weight quantization, kept dense (row-major) until the
+/// biases are folded and the storage form is chosen.
+fn quantize_weight(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
     let q = SymmetricQuant::for_weights_i8(f64::from(w.max_abs()));
     let dense = w.map(|v| q.quantize_i8(f64::from(v)));
-    (WeightMat::Dense(dense), q)
+    (dense, q)
 }
 
-/// Convert to CSR after folding if requested.
-fn sparsify(w: WeightMat, sparse: bool) -> WeightMat {
-    match (w, sparse) {
-        (WeightMat::Dense(m), true) => WeightMat::Sparse(SparseMatrixI8::from_dense(&m)),
-        (w, _) => w,
+/// Choose the storage form after folding: CSR for pruned models,
+/// otherwise the packed register-tiled form — packing happens here, at
+/// quantization time, never on the step path.
+fn sparsify(m: Matrix<i8>, sparse: bool) -> WeightMat {
+    if sparse {
+        WeightMat::Sparse(SparseMatrixI8::from_dense(&m))
+    } else {
+        WeightMat::dense(m)
     }
 }

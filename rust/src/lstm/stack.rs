@@ -305,6 +305,22 @@ impl LstmStack {
         }
     }
 
+    /// Zero lanes `from..` in every layer — the SIMD padding contract:
+    /// the serving batch state rounds its physical width up to
+    /// [`crate::tensor::LANE_TILE`] so the batched GEMMs always run
+    /// full register tiles, and the pad lanes are zeroed here. Pad
+    /// lanes are stepped (that is the point) but never gathered into,
+    /// scattered out, or read back, and lane independence keeps them
+    /// from ever affecting a live lane's bits.
+    pub fn clear_pad_lanes(&self, batch: &mut [BatchLayerState], from: usize) {
+        for b in batch {
+            match b {
+                BatchLayerState::Float(s) => s.clear_lanes(from),
+                BatchLayerState::Integer(s) => s.clear_lanes(from),
+            }
+        }
+    }
+
     /// Order-preserving lane compaction across every layer: lanes with
     /// `keep[lane]` survive, packed to the front; the rest are dropped
     /// (scatter them out first). Returns the surviving lane count.

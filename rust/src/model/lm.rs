@@ -12,7 +12,7 @@ use crate::lstm::{
 };
 use crate::quant::params::SymmetricQuant;
 use crate::quant::quantize_symmetric_i8;
-use crate::tensor::{gemm_f32, gemm_i8_i32, matvec_f32, Matrix};
+use crate::tensor::{gemm_f32, matvec_f32, pad_lanes, Matrix, PackedWeightsI8};
 use super::weights::TensorFile;
 
 /// Character vocabulary shared with `python/compile/model.py`.
@@ -44,10 +44,11 @@ pub struct CharLm {
 /// The head under a given engine: float weights or quantized int8.
 enum HeadEngine {
     Float,
-    /// int8 symmetric weights; input h is requantized from f32 with the
-    /// static head input scale; accumulator dequantized to float logits.
+    /// int8 symmetric weights (pre-packed for the tiled batched GEMM);
+    /// input h is requantized from f32 with the static head input
+    /// scale; accumulator dequantized to float logits.
     Integer {
-        w_q: Matrix<i8>,
+        w_q: PackedWeightsI8,
         w_scale: f64,
     },
 }
@@ -75,23 +76,43 @@ pub struct LmState {
 /// [`CharLmEngine::gather_session`], advanced by
 /// [`CharLmEngine::step_tokens`], and drained by
 /// [`CharLmEngine::scatter_session`].
+///
+/// # The SIMD padding contract
+///
+/// The physical lane count of every matrix is the live count rounded
+/// up to the register-tile width ([`pad_lanes`]), so the batched GEMMs
+/// always execute full lane tiles regardless of how many sessions are
+/// actually live (the 3-, 5-, 7-lane widths continuous batching leaves
+/// behind after compaction). Pad lanes are zero-initialized, advance as
+/// zero-input streams when stepped, and are **never** gathered into,
+/// scattered out, or read back — lane indices in the public API always
+/// refer to the live prefix `0..batch()`.
 pub struct LmBatchState {
     pub layers: Vec<BatchLayerState>,
-    /// Last hidden outputs `[batch, n_output]`.
+    /// Last hidden outputs `[padded, n_output]`.
     pub h: Matrix<f32>,
-    /// Next-char logits `[batch, VOCAB]`.
+    /// Next-char logits `[padded, VOCAB]`.
     pub logits: Matrix<f32>,
-    /// One-hot input scratch `[batch, VOCAB]`.
+    /// Live lane count (`<=` the physical row count of every matrix).
+    live: usize,
+    /// One-hot input scratch `[padded, VOCAB]`.
     x: Matrix<f32>,
-    /// Quantized-head scratch `[batch, n_output]`.
+    /// Quantized-head scratch `[padded, n_output]`.
     qh: Matrix<i8>,
-    /// Head accumulator scratch `[batch, VOCAB]`.
+    /// Head accumulator scratch `[padded, VOCAB]`.
     acc: Matrix<i32>,
 }
 
 impl LmBatchState {
-    /// Live lane count.
+    /// Live lane count (the scheduler-facing batch width).
     pub fn batch(&self) -> usize {
+        self.live
+    }
+
+    /// Physical lane count the GEMMs execute: [`Self::batch`] rounded
+    /// up to the register-tile width. The padded-occupancy metrics
+    /// report this against the live count.
+    pub fn padded_batch(&self) -> usize {
         self.h.rows
     }
 }
@@ -161,7 +182,10 @@ impl CharLm {
             StackEngine::Float | StackEngine::Hybrid => HeadEngine::Float,
             StackEngine::Integer => {
                 let (w_q, q) = quantize_symmetric_i8(&self.out_w);
-                HeadEngine::Integer { w_q, w_scale: q.scale }
+                HeadEngine::Integer {
+                    w_q: PackedWeightsI8::pack(w_q),
+                    w_scale: q.scale,
+                }
             }
         };
         CharLmEngine {
@@ -208,7 +232,7 @@ impl CharLmEngine {
                     *q = hq.quantize_i8(f64::from(v));
                 }
                 let mut acc = vec![0i32; VOCAB];
-                crate::tensor::matvec_i8_i32(w_q, &qh, &[], &mut acc);
+                w_q.matvec(&qh, &[], &mut acc);
                 let k = (w_scale * s_h) as f32;
                 for (l, &a) in state.logits.iter_mut().zip(&acc) {
                     *l = a as f32 * k;
@@ -220,21 +244,29 @@ impl CharLmEngine {
         }
     }
 
-    /// Fresh batch-major state for `batch` lanes.
+    /// Fresh batch-major state for `batch` live lanes (physically
+    /// padded to the register-tile width; pad lanes zeroed).
     pub fn new_batch_state(&self, batch: usize) -> LmBatchState {
         let n_out = self.stack.n_output();
+        let physical = pad_lanes(batch);
+        let mut layers = self.stack.zero_batch_state(physical);
+        // Zero-state != all-zeroes for the integer engine (h sits at its
+        // zero point); the padding contract wants pad lanes all-zero.
+        self.stack.clear_pad_lanes(&mut layers, batch);
         LmBatchState {
-            layers: self.stack.zero_batch_state(batch),
-            h: Matrix::zeros(batch, n_out),
-            logits: Matrix::zeros(batch, VOCAB),
-            x: Matrix::zeros(batch, VOCAB),
-            qh: Matrix::zeros(batch, n_out),
-            acc: Matrix::zeros(batch, VOCAB),
+            layers,
+            h: Matrix::zeros(physical, n_out),
+            logits: Matrix::zeros(physical, VOCAB),
+            live: batch,
+            x: Matrix::zeros(physical, VOCAB),
+            qh: Matrix::zeros(physical, n_out),
+            acc: Matrix::zeros(physical, VOCAB),
         }
     }
 
     /// Pack one session's state into lane `lane` of a batch state.
     pub fn gather_session(&self, s: &LmState, bs: &mut LmBatchState, lane: usize) {
+        debug_assert!(lane < bs.live, "gather into pad lane {lane}");
         self.stack.gather_lane(&s.layers, &mut bs.layers, lane);
     }
 
@@ -242,22 +274,40 @@ impl CharLmEngine {
     /// plus the hidden/logits scratch, so the session observes exactly
     /// what sequential stepping would have left behind).
     pub fn scatter_session(&self, bs: &LmBatchState, s: &mut LmState, lane: usize) {
+        debug_assert!(lane < bs.live, "scatter from pad lane {lane}");
         self.stack.scatter_lane(&bs.layers, &mut s.layers, lane);
         s.h.copy_from_slice(bs.h.row(lane));
         s.logits.copy_from_slice(bs.logits.row(lane));
     }
 
-    /// Resize a batch state to `batch` lanes in place, reusing every
-    /// allocation (the serving loop reuses one state across waves).
-    /// Contents of grown lanes are unspecified — callers must gather
-    /// into every lane before stepping.
+    /// Resize a batch state to `batch` live lanes in place, reusing
+    /// every allocation (the serving loop reuses one state across
+    /// waves). The physical width is rounded up to the register-tile
+    /// width and the pad lanes are zeroed. Contents of grown *live*
+    /// lanes are unspecified — callers must gather into every live lane
+    /// before stepping.
     pub fn resize_batch_state(&self, bs: &mut LmBatchState, batch: usize) {
-        self.stack.resize_batch(&mut bs.layers, batch);
-        bs.h.resize(batch, bs.h.cols);
-        bs.logits.resize(batch, bs.logits.cols);
-        bs.x.resize(batch, bs.x.cols);
-        bs.qh.resize(batch, bs.qh.cols);
-        bs.acc.resize(batch, bs.acc.cols);
+        let physical = pad_lanes(batch);
+        if batch < bs.live {
+            // Shrink to the live prefix first so the pad region comes
+            // back zeroed when the matrices regrow below.
+            self.stack.truncate_batch(&mut bs.layers, batch);
+            bs.h.truncate_rows(batch);
+            bs.logits.truncate_rows(batch);
+            bs.x.truncate_rows(batch);
+            bs.qh.truncate_rows(batch);
+            bs.acc.truncate_rows(batch);
+        }
+        self.stack.resize_batch(&mut bs.layers, physical);
+        bs.h.resize(physical, bs.h.cols);
+        bs.logits.resize(physical, bs.logits.cols);
+        bs.x.resize(physical, bs.x.cols);
+        bs.qh.resize(physical, bs.qh.cols);
+        bs.acc.resize(physical, bs.acc.cols);
+        self.stack.clear_pad_lanes(&mut bs.layers, batch);
+        bs.h.data[batch * bs.h.cols..].fill(0.0);
+        bs.logits.data[batch * bs.logits.cols..].fill(0.0);
+        bs.live = batch;
     }
 
     /// Admit a session into a fresh lane appended at the end of the
@@ -274,6 +324,7 @@ impl CharLmEngine {
     /// `dst`. The pure scratch buffers (`x`, `qh`, `acc`) are rewritten
     /// from scratch every step and need no copy.
     pub fn copy_lane(&self, bs: &mut LmBatchState, src: usize, dst: usize) {
+        debug_assert!(src < bs.live && dst < bs.live, "copy touches pad lanes");
         self.stack.copy_lane_batch(&mut bs.layers, src, dst);
         bs.h.copy_row_within(src, dst);
         bs.logits.copy_row_within(src, dst);
@@ -296,12 +347,18 @@ impl CharLmEngine {
         moved
     }
 
-    /// Order-preserving lane compaction: lanes with `keep[lane]`
+    /// Order-preserving lane compaction: live lanes with `keep[lane]`
     /// survive, packed to the front; the rest are dropped (scatter them
-    /// out first). Returns the surviving lane count.
+    /// out first). The physical width re-pads to the register-tile
+    /// width of the surviving count, with pad lanes zeroed. Returns the
+    /// surviving (live) lane count.
     pub fn compact_lanes(&self, bs: &mut LmBatchState, keep: &[bool]) -> usize {
         assert_eq!(keep.len(), bs.batch(), "keep mask width");
-        let survivors = self.stack.compact_batch(&mut bs.layers, keep);
+        // Extend the mask over the physical pad lanes: always dropped
+        // here, re-created zeroed by the resize below.
+        let mut keep_phys = keep.to_vec();
+        keep_phys.resize(bs.padded_batch(), false);
+        let survivors = self.stack.compact_batch(&mut bs.layers, &keep_phys);
         let mut dst = 0;
         for (src, &k) in keep.iter().enumerate() {
             if k {
@@ -313,32 +370,33 @@ impl CharLmEngine {
             }
         }
         debug_assert_eq!(dst, survivors);
-        bs.h.truncate_rows(dst);
-        bs.logits.truncate_rows(dst);
-        bs.x.truncate_rows(dst);
-        bs.qh.truncate_rows(dst);
-        bs.acc.truncate_rows(dst);
+        // bs.live still holds the pre-compaction count, so this takes
+        // resize_batch_state's shrink path: every matrix truncates to
+        // the survivor prefix, then re-pads zeroed.
+        self.resize_batch_state(bs, dst);
         dst
     }
 
-    /// Drop lanes `k..` of a batch state (scatter them out first); the
-    /// surviving prefix stays in place.
+    /// Drop live lanes `k..` of a batch state (scatter them out first);
+    /// the surviving prefix stays in place and the physical width
+    /// re-pads to the register-tile width.
     pub fn truncate_batch(&self, bs: &mut LmBatchState, k: usize) {
-        self.stack.truncate_batch(&mut bs.layers, k);
-        bs.h.truncate_rows(k);
-        bs.logits.truncate_rows(k);
-        bs.x.truncate_rows(k);
-        bs.qh.truncate_rows(k);
-        bs.acc.truncate_rows(k);
+        assert!(k <= bs.live, "truncate {k} > live {}", bs.live);
+        self.resize_batch_state(bs, k);
     }
 
-    /// Feed one token per lane (`tokens.len()` must equal the live
+    /// Feed one token per live lane (`tokens.len()` must equal the live
     /// batch); row `b` of `state.logits` then holds lane `b`'s next-char
     /// logits. Bit-exact with per-lane [`Self::step_token`].
+    ///
+    /// Execution runs at the *physical* (tile-padded) width: pad lanes
+    /// see an all-zero one-hot row and advance their zero stream, so
+    /// every GEMM below processes full register tiles with no scalar
+    /// remainders. Pad-lane outputs are never read.
     pub fn step_tokens(&self, tokens: &[usize], state: &mut LmBatchState) {
-        let batch = tokens.len();
-        assert_eq!(batch, state.h.rows);
-        let LmBatchState { layers, h, logits, x, qh, acc } = state;
+        assert_eq!(tokens.len(), state.live, "one token per live lane");
+        let LmBatchState { layers, h, logits, x, qh, acc, .. } = state;
+        let physical = h.rows;
         x.data.iter_mut().for_each(|v| *v = 0.0);
         for (b, &t) in tokens.iter().enumerate() {
             debug_assert!(t < VOCAB);
@@ -353,14 +411,14 @@ impl CharLmEngine {
                 for (q, &v) in qh.data.iter_mut().zip(h.data.iter()) {
                     *q = hq.quantize_i8(f64::from(v));
                 }
-                gemm_i8_i32(w_q, qh, &[], acc);
+                w_q.gemm(qh, &[], acc);
                 let k = (w_scale * s_h) as f32;
                 for (l, &a) in logits.data.iter_mut().zip(acc.data.iter()) {
                     *l = a as f32 * k;
                 }
             }
         }
-        for b in 0..batch {
+        for b in 0..physical {
             for (l, &bv) in logits.row_mut(b).iter_mut().zip(&self.out_b) {
                 *l += bv;
             }
@@ -384,7 +442,7 @@ impl CharLmEngine {
     pub fn weight_bytes(&self) -> usize {
         let head = match &self.head {
             HeadEngine::Float => self.out_w.len() * 4,
-            HeadEngine::Integer { w_q, .. } => w_q.len(),
+            HeadEngine::Integer { w_q, .. } => w_q.storage_bytes(),
         };
         self.stack.weight_bytes() + head + self.out_b.len() * 4
     }

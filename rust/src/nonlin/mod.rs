@@ -35,7 +35,7 @@ pub fn sigmoid_q15_slice(input: &[i16], integer_bits: u32, out: &mut [i16]) {
     assert_eq!(input.len(), out.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") {
+        if crate::util::avx2_enabled() {
             // SAFETY: feature checked.
             unsafe { simd::sigmoid_q15_slice_avx2(input, integer_bits, out) };
             return;
@@ -53,7 +53,7 @@ pub fn tanh_q15_slice(input: &[i16], integer_bits: u32, out: &mut [i16]) {
     assert_eq!(input.len(), out.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") {
+        if crate::util::avx2_enabled() {
             // SAFETY: feature checked.
             unsafe { simd::tanh_q15_slice_avx2(input, integer_bits, out) };
             return;

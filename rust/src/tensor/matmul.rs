@@ -41,9 +41,17 @@ pub fn matvec_f32(w: &Matrix<f32>, x: &[f32], out: &mut [f32]) {
 
 /// Batch-major float GEMM: `x` is `[batch, cols]` activations, `out` is
 /// `[batch, rows]` with `out[b,r] = Σ_c w[r,c] * x[b,c]`. Batch lanes
-/// are blocked in groups of 4 so each weight row stays cache-hot across
-/// lanes; every output element runs the exact `dot_f32` accumulation,
-/// so results are bit-identical to per-lane [`matvec_f32`].
+/// are blocked in groups of [`crate::tensor::LANE_TILE`] so each weight
+/// row stays cache-hot across lanes; every output element runs the
+/// exact `dot_f32` accumulation, so results are bit-identical to
+/// per-lane [`matvec_f32`].
+///
+/// The serving path shares the int8 kernels' lane-padding contract: the
+/// batch state rounds its physical width up to the tile, so this kernel
+/// always sees full 4-lane blocks there (pad lanes are zero rows whose
+/// outputs are never read). Ragged widths from direct callers still
+/// work — the remainder block just amortizes the weight pass over
+/// fewer lanes.
 pub fn gemm_f32(w: &Matrix<f32>, x: &Matrix<f32>, out: &mut Matrix<f32>) {
     assert_eq!(x.cols, w.cols);
     assert_eq!(out.rows, x.rows);

@@ -1,5 +1,6 @@
-//! Small dependency-free utilities: deterministic RNG, timing, and a
-//! minimal property-testing helper used across the test suite.
+//! Small dependency-free utilities: deterministic RNG, timing, a
+//! minimal property-testing helper used across the test suite, and the
+//! SIMD-dispatch switch shared by every runtime-dispatched kernel.
 
 pub mod proptest;
 pub mod rng;
@@ -7,3 +8,37 @@ pub mod timer;
 
 pub use rng::Pcg32;
 pub use timer::Stopwatch;
+
+/// Read a boolean environment flag: set means any non-empty value
+/// other than `"0"`. One parse rule for every `PALLAS_*` switch
+/// (kernel dispatch, bench quick mode) so they can never drift apart.
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// True when the `PALLAS_FORCE_SCALAR` environment override is set.
+/// The CI kernel matrix sets this to run the whole test suite against
+/// the scalar reference kernels, proving the scalar and AVX2 paths
+/// bit-exact on every PR. Read once and cached: dispatch sits on the
+/// per-step hot path.
+pub fn force_scalar() -> bool {
+    static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCE.get_or_init(|| env_flag("PALLAS_FORCE_SCALAR"))
+}
+
+/// True when the runtime-dispatched AVX2 kernels should run: the CPU
+/// reports AVX2 and [`force_scalar`] is not in effect. Every
+/// `is_x86_feature_detected!` dispatch site in the crate routes through
+/// this, so one environment variable flips the entire execution path.
+#[inline]
+pub fn avx2_enabled() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !force_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+            return true;
+        }
+    }
+    false
+}

@@ -56,8 +56,8 @@ fn rust_integer_cell_matches_python_golden() {
             .ok()
             .map(|p| (p.as_i16().unwrap(), rescale_of(&tf, &format!("gate.{name}.eff_c"))));
         Some(IntegerGate {
-            w: WeightMat::Dense(Matrix::from_vec(n_cell, n_input, w.as_i8().unwrap())),
-            r: WeightMat::Dense(Matrix::from_vec(n_cell, n_output, r.as_i8().unwrap())),
+            w: WeightMat::dense(Matrix::from_vec(n_cell, n_input, w.as_i8().unwrap())),
+            r: WeightMat::dense(Matrix::from_vec(n_cell, n_output, r.as_i8().unwrap())),
             w_bias: tf.get(&format!("gate.{name}.w_bias")).unwrap().as_i32().unwrap(),
             r_bias: tf.get(&format!("gate.{name}.r_bias")).unwrap().as_i32().unwrap(),
             eff_x: rescale_of(&tf, &format!("gate.{name}.eff_x")),

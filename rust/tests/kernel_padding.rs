@@ -1,0 +1,228 @@
+//! The SIMD padding contract, locked down end to end.
+//!
+//! The register-tiled int8 GEMM packs its weights into zero-padded
+//! K-major panels and the serving batch state rounds its physical lane
+//! count up to the tile width, so the batched step path executes **zero
+//! scalar-tail multiply-accumulate iterations** for any live-lane count
+//! and any `n_cell`. This suite asserts exactly that (via the
+//! debug-build tail counter), plus the two contracts the padding leans
+//! on: pad lanes never change a live lane's bits, and the scheduler's
+//! occupancy metrics report live and padded widths separately.
+
+use iqrnn::coordinator::{simulate_trace, ContinuousScheduler, SchedulerMode, StreamItem};
+use iqrnn::lstm::{BatchLayerState, LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::tensor::qmatmul::tail_audit;
+use iqrnn::tensor::{pad_lanes, Matrix, LANE_TILE};
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+use std::time::Instant;
+
+/// A tiny LM with a deliberately ragged hidden width: 33 = 32 + 1 puts
+/// every recurrent GEMM (K = 33) and the head GEMM (K = 33, rows = 96)
+/// on the worst-case remainder shapes.
+fn ragged_lm(hidden: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(97);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+}
+
+fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
+    let stats = if kind == StackEngine::Integer {
+        let mut rng = Pcg32::seeded(98);
+        let calib: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        Some(lm.calibrate(&calib))
+    } else {
+        None
+    };
+    lm.engine(kind, stats.as_deref(), QuantizeOptions::default())
+}
+
+fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
+    StreamItem { session, tokens, submitted: Instant::now() }
+}
+
+/// Acceptance criterion of the register-tiling refactor: drive the
+/// batched int8 path through every awkward live-lane count (1, 3, 5, 7
+/// — the widths continuous batching leaves behind after compaction) on
+/// a ragged `n_cell`, and assert the thread-local tail counter never
+/// moves. (In release builds the counter is compiled out and this
+/// degenerates to 0 == 0; the CI debug jobs carry the real check.)
+#[test]
+fn batched_integer_serving_path_is_tail_free() {
+    let lm = ragged_lm(33);
+    let engine = build_engine(&lm, StackEngine::Integer);
+    let mut sched = ContinuousScheduler::new(&engine, 7);
+    tail_audit::reset();
+    // Staggered lengths so the live width sweeps 7 -> 1 as lanes retire.
+    for s in 0..7u64 {
+        sched.offer(item(s, vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize]));
+    }
+    let mut widths = std::collections::HashSet::new();
+    while sched.has_live_work() {
+        sched.admit_ready();
+        widths.insert(sched.live_lanes());
+        sched.step();
+        sched.take_completed();
+    }
+    assert_eq!(
+        tail_audit::count(),
+        0,
+        "batched integer step path executed scalar-tail iterations"
+    );
+    // The sweep really did exercise ragged widths, not just full tiles.
+    assert!(widths.contains(&7) && widths.contains(&3) && widths.contains(&1));
+}
+
+/// The same tail-free property for the hybrid engine (int8 weights,
+/// per-lane dynamic activation scales) — its gate and projection GEMMs
+/// run the identical packed kernel.
+#[test]
+fn batched_hybrid_serving_path_is_tail_free() {
+    let lm = ragged_lm(33);
+    let engine = build_engine(&lm, StackEngine::Hybrid);
+    tail_audit::reset();
+    let trace = RequestTrace::generate_staggered(9, 4.0, 21, VOCAB, 13);
+    let (_, done) = simulate_trace(&engine, &trace, 5, SchedulerMode::Continuous, 1.0);
+    assert_eq!(done.len(), 9);
+    assert_eq!(
+        tail_audit::count(),
+        0,
+        "batched hybrid step path executed scalar-tail iterations"
+    );
+}
+
+/// Pad lanes are execution filler, never data: poison every pad lane
+/// with garbage, step the batch, and the live lanes must still scatter
+/// out bit-identical to sequential execution. Run on all three engines.
+#[test]
+fn poisoned_pad_lanes_never_change_live_lanes() {
+    let lm = ragged_lm(20);
+    for kind in StackEngine::ALL {
+        let engine = build_engine(&lm, kind);
+        let streams: Vec<Vec<usize>> = (0..3)
+            .map(|s| (0..12).map(|t| (7 * s + 3 * t + 1) % VOCAB).collect())
+            .collect();
+
+        // Sequential reference.
+        let mut seq: Vec<LmState> = (0..3).map(|_| engine.new_state()).collect();
+        for (s, toks) in seq.iter_mut().zip(&streams) {
+            for &t in toks {
+                engine.step_token(t, s);
+            }
+        }
+
+        // Batched: 3 live lanes -> 1 pad lane. Poison the pad lane
+        // before stepping.
+        let mut bs = engine.new_batch_state(0);
+        for _ in 0..3 {
+            let fresh = engine.new_state();
+            engine.admit_lane(&fresh, &mut bs);
+        }
+        assert_eq!(bs.batch(), 3, "{kind:?}");
+        assert_eq!(bs.padded_batch(), 4, "{kind:?}");
+        for layer in &mut bs.layers {
+            match layer {
+                BatchLayerState::Float(st) => {
+                    for r in 3..st.c.rows {
+                        st.c.row_mut(r).fill(1e6);
+                        st.h.row_mut(r).fill(-1e6);
+                    }
+                }
+                BatchLayerState::Integer(st) => {
+                    for r in 3..st.c.rows {
+                        st.c.row_mut(r).fill(i16::MAX);
+                        st.h.row_mut(r).fill(-77);
+                    }
+                }
+            }
+        }
+        for r in 3..bs.h.rows {
+            bs.h.row_mut(r).fill(f32::MAX);
+            bs.logits.row_mut(r).fill(f32::MIN);
+        }
+        for t in 0..12 {
+            let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+            engine.step_tokens(&toks, &mut bs);
+        }
+        for lane in 0..3 {
+            let mut got = engine.new_state();
+            engine.scatter_session(&bs, &mut got, lane);
+            for (a, b) in got.h.iter().zip(&seq[lane].h) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} lane {lane} h");
+            }
+            for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} lane {lane} logits");
+            }
+        }
+    }
+}
+
+/// The batch state's physical width always rounds the live width up to
+/// the register tile, through admission, compaction, truncation, and
+/// retirement.
+#[test]
+fn physical_width_tracks_live_width() {
+    let lm = ragged_lm(16);
+    let engine = build_engine(&lm, StackEngine::Float);
+    let mut bs = engine.new_batch_state(0);
+    assert_eq!(bs.padded_batch(), 0);
+    for live in 1..=9usize {
+        let fresh = engine.new_state();
+        let lane = engine.admit_lane(&fresh, &mut bs);
+        assert_eq!(lane, live - 1);
+        assert_eq!(bs.batch(), live);
+        assert_eq!(bs.padded_batch(), pad_lanes(live));
+        assert_eq!(bs.padded_batch() % LANE_TILE, 0);
+    }
+    // Compact 9 -> 5 survivors: physical re-pads to 8.
+    let keep = [true, false, true, false, true, false, true, false, true];
+    assert_eq!(engine.compact_lanes(&mut bs, &keep), 5);
+    assert_eq!(bs.batch(), 5);
+    assert_eq!(bs.padded_batch(), 8);
+    // Retire the middle lane by swap-remove: 4 live, physical 4.
+    engine.retire_lane(&mut bs, 2);
+    assert_eq!(bs.batch(), 4);
+    assert_eq!(bs.padded_batch(), 4);
+    // Truncate to 2: physical 4.
+    engine.truncate_batch(&mut bs, 2);
+    assert_eq!(bs.batch(), 2);
+    assert_eq!(bs.padded_batch(), 4);
+    engine.truncate_batch(&mut bs, 0);
+    assert_eq!(bs.padded_batch(), 0);
+}
+
+/// The scheduler keeps live and padded occupancy as separate honest
+/// numbers: live occupancy is unchanged by the padding, padded
+/// occupancy is a tile-multiple per step and bounds it from above.
+#[test]
+fn scheduler_reports_padded_and_live_occupancy_separately() {
+    let lm = ragged_lm(16);
+    let engine = build_engine(&lm, StackEngine::Integer);
+    let trace = RequestTrace::generate_staggered(11, 5.0, 18, VOCAB, 29);
+    let (sched, done) = simulate_trace(&engine, &trace, 6, SchedulerMode::Continuous, 1.0);
+    assert_eq!(done.len(), 11);
+    let st = sched.stats();
+    assert!(st.lane_steps > 0);
+    assert!(
+        st.padded_lane_steps >= st.lane_steps,
+        "padded {} < live {}",
+        st.padded_lane_steps,
+        st.lane_steps
+    );
+    // Every step's physical width is a whole number of register tiles.
+    assert_eq!(st.padded_lane_steps % LANE_TILE, 0);
+    assert!(st.padded_occupancy() >= st.mean_occupancy());
+    let eff = st.padding_efficiency();
+    assert!(eff > 0.0 && eff <= 1.0, "padding efficiency {eff}");
+    // Padding must never exceed one tile minus one lane per step.
+    assert!(
+        st.padded_lane_steps - st.lane_steps < st.batched_steps * LANE_TILE,
+        "more than a tile of padding per step"
+    );
+}
