@@ -167,8 +167,7 @@ fn batching_sweep() {
                 engine: StackEngine::Integer,
                 opts: QuantizeOptions::default(),
                 mode: SchedulerMode::Continuous,
-                steal: true,
-                session_budget: None,
+                ..ServerConfig::default()
             },
         );
         let report = server.run_trace(&trace, 50.0).unwrap();

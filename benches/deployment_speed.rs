@@ -7,7 +7,8 @@
 //! Run: `cargo bench --bench deployment_speed`.
 
 use iqrnn::coordinator::{
-    shard_home, simulate_shard_trace, simulate_trace, SchedulerMode, ShardConfig,
+    shard_home, simulate_multi_shard_trace, simulate_shard_trace, simulate_trace,
+    ModelId, SchedulerMode, ShardConfig,
 };
 use iqrnn::eval::metrics::RtFactor;
 use iqrnn::lstm::{
@@ -322,10 +323,8 @@ fn main() {
                     let cfg = ShardConfig {
                         workers,
                         max_lanes: 8,
-                        mode: SchedulerMode::Continuous,
                         steal,
-                        session_budget: None,
-                        tick_ms: 1.0,
+                        ..ShardConfig::default()
                     };
                     let t0 = std::time::Instant::now();
                     let (_scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
@@ -377,6 +376,86 @@ fn main() {
         match std::fs::write("BENCH_shard.json", &json) {
             Ok(()) => println!("wrote BENCH_shard.json"),
             Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
+        }
+
+        // Multi-model sweep: 1/2/4 resident model variants sharing one
+        // pool (the registry serving shape), swept over worker counts.
+        // Each variant is an integer engine instance of the same
+        // weights, so the sweep isolates the scheduling cost of wave
+        // multiplexing: per-model occupancy falls as variants split the
+        // lane budget, while pool occupancy and bit-exactness hold.
+        // Emits BENCH_multimodel.json.
+        println!("\n== multi-model sweep (8 lanes/worker, Integer x N variants) ==");
+        println!(
+            "{:<8} {:<8} {:>12} {:>10} {:>10} {:>8} {:>7}",
+            "models", "workers", "tokens/sec", "pool occ", "model occ", "ticks", "steals"
+        );
+        let mm_trace_base = if quick {
+            RequestTrace::generate(24, 400.0, 12, VOCAB, 13)
+        } else {
+            RequestTrace::generate(96, 1200.0, 32, VOCAB, 13)
+        };
+        let model_sweep: &[usize] = &[1, 2, 4];
+        let mm_workers: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+        let mut entries: Vec<String> = Vec::new();
+        for &n_models in model_sweep {
+            let engines: Vec<_> = (0..n_models)
+                .map(|_| {
+                    lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default())
+                })
+                .collect();
+            for &workers in mm_workers {
+                let residency: Vec<Vec<usize>> =
+                    (0..n_models).map(|_| (0..workers).collect()).collect();
+                let mut trace = mm_trace_base.clone();
+                trace.assign_models(|id| (id % n_models as u64) as ModelId);
+                let cfg = ShardConfig { workers, max_lanes: 8, ..ShardConfig::default() };
+                let t0 = std::time::Instant::now();
+                let (_scheds, rep) =
+                    simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+                let secs = t0.elapsed().as_secs_f64();
+                assert_eq!(rep.completions.len(), trace.requests.len());
+                let tps = rep.lane_steps() as f64 / secs;
+                let model_occ: f64 = rep
+                    .per_model
+                    .iter()
+                    .map(|s| s.mean_occupancy())
+                    .sum::<f64>()
+                    / n_models as f64;
+                println!(
+                    "{:<8} {:<8} {:>12.0} {:>10.3} {:>10.3} {:>8} {:>7}",
+                    n_models,
+                    workers,
+                    tps,
+                    rep.pool_occupancy(),
+                    model_occ,
+                    rep.ticks,
+                    rep.total_stolen()
+                );
+                entries.push(format!(
+                    "    {{\"models\": {}, \"workers\": {}, \"tokens_per_sec\": {:.1}, \
+                     \"pool_occupancy\": {:.4}, \"mean_model_occupancy\": {:.4}, \
+                     \"ticks\": {}, \"stolen_sessions\": {}}}",
+                    n_models,
+                    workers,
+                    tps,
+                    rep.pool_occupancy(),
+                    model_occ,
+                    rep.ticks,
+                    rep.total_stolen()
+                ));
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"multimodel_sweep\",\n  \"config\": {{\"hidden\": {hidden}, \
+             \"depth\": 1, \"max_lanes\": 8, \"tick_ms\": 1.0, \"requests\": {}}},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            mm_trace_base.requests.len(),
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_multimodel.json", &json) {
+            Ok(()) => println!("wrote BENCH_multimodel.json"),
+            Err(e) => eprintln!("could not write BENCH_multimodel.json: {e}"),
         }
     }
 

@@ -14,7 +14,10 @@
 
 use std::time::Duration;
 
-use iqrnn::coordinator::{shard_home, BatchPolicy, SchedulerMode, Server, ServerConfig};
+use iqrnn::coordinator::{
+    shard_home, BatchPolicy, ModelRegistry, ModelSpec, Residency, SchedulerMode,
+    Server, ServerConfig,
+};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{CharLm, VOCAB};
 use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets, EvalSet};
@@ -75,8 +78,7 @@ fn main() -> anyhow::Result<()> {
                 engine,
                 opts: QuantizeOptions::default(),
                 mode: SchedulerMode::Continuous,
-                steal: true,
-                session_budget: None,
+                ..ServerConfig::default()
             },
         );
         let report = server.run_trace(&trace, 4.0)?;
@@ -96,8 +98,7 @@ fn main() -> anyhow::Result<()> {
                 engine: StackEngine::Integer,
                 opts: QuantizeOptions::default(),
                 mode,
-                steal: true,
-                session_budget: None,
+                ..ServerConfig::default()
             },
         );
         let report = server.run_trace(&trace, 4.0)?;
@@ -131,13 +132,52 @@ fn main() -> anyhow::Result<()> {
                     opts: QuantizeOptions::default(),
                     mode: SchedulerMode::Continuous,
                     steal,
-                    session_budget: None,
+                    ..ServerConfig::default()
                 },
             );
             let report = server.run_trace(&skewed, 4.0)?;
             print!("  workers={workers} steal={}", if steal { "on " } else { "off" });
             report.print();
         }
+    }
+
+    // --- Multi-model serving: one registry, several variants ---------
+    // The trained artifact registered twice — an integer variant and a
+    // hybrid A/B recipe — served as a mixed trace over one pool. The
+    // per-model lines break out occupancy, steals, evictions, and the
+    // resident weight bytes each variant costs the fleet.
+    println!("\n== multi-model serving: integer + hybrid A/B over one pool ==");
+    {
+        let mut registry = ModelRegistry::new();
+        registry.register(ModelSpec {
+            name: "int-prod".into(),
+            lm: &lm,
+            engine: StackEngine::Integer,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        registry.register(ModelSpec {
+            name: "hybrid-ab".into(),
+            lm: &lm,
+            engine: StackEngine::Hybrid,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        let mut mixed = RequestTrace::generate(120, 500.0, 40, VOCAB, 29);
+        mixed.assign_models(|id| (id % 2) as iqrnn::coordinator::ModelId);
+        let server = Server::with_registry(
+            registry,
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+                ..ServerConfig::default()
+            },
+        );
+        let report = server.run_trace(&mixed, 4.0)?;
+        report.print();
+        report.print_models();
     }
 
     let speedup_float = reports[0].compute_secs / reports[2].compute_secs;

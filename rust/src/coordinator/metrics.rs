@@ -1,36 +1,40 @@
 //! Serving metrics: what the benchmark harness reports for E4/E10,
-//! including batch-occupancy of the batch-major execution path and the
-//! per-worker load/steal breakdown of the sharded server.
+//! including batch-occupancy of the batch-major execution path, the
+//! per-worker load/steal breakdown of the sharded server, and the
+//! per-model breakdown of a registry deployment.
 
 use crate::eval::metrics::{LatencyStats, RtFactor};
+use super::registry::ModelId;
 
 /// Per-worker load breakdown of one serving run: how much of the work
-/// each shard executed, how wide its wave ran, and how much work it
+/// each shard executed, how wide its waves ran, and how much work it
 /// pulled over from peers.
 #[derive(Debug, Clone)]
 pub struct WorkerLoad {
     /// Worker (shard) index.
     pub worker: usize,
     /// Batched step invocations on this worker (one per token position
-    /// of its wave).
+    /// per model wave).
     pub batched_steps: usize,
     /// Lane-steps (tokens) this worker executed.
     pub lane_steps: usize,
     /// Lane-slots this worker executed including SIMD tile padding
     /// (physical GEMM width summed per step; `>= lane_steps`).
     pub padded_lane_steps: usize,
-    /// Widest live batch this worker ran.
+    /// Widest live batch this worker ran (total across model waves).
     pub peak_lanes: usize,
-    /// Admissions into this worker's wave.
+    /// Admissions into this worker's waves.
     pub admissions: usize,
-    /// Retirements out of this worker's wave.
+    /// Retirements out of this worker's waves.
     pub retirements: usize,
     /// Steal invocations this worker performed (as thief).
     pub steal_events: usize,
     /// Sessions this worker stole from peers (as thief).
     pub stolen_sessions: usize,
-    /// Sessions the session budget evicted on this worker.
+    /// Sessions the session-count budget evicted on this worker.
     pub evictions: usize,
+    /// Sessions the idle-age policy evicted on this worker.
+    pub idle_evictions: usize,
 }
 
 impl WorkerLoad {
@@ -54,13 +58,83 @@ impl WorkerLoad {
     }
 }
 
+/// Per-model breakdown of one serving run under the model registry:
+/// the occupancy, turnover, steal, eviction, and memory accounting of
+/// one registered variant across the whole pool.
+#[derive(Debug, Clone)]
+pub struct ModelLoad {
+    /// The registry id of this model.
+    pub model: ModelId,
+    /// Operator-facing model name.
+    pub name: String,
+    /// Engine label ("Float"/"Hybrid"/"Integer").
+    pub engine: &'static str,
+    /// Workers holding this model's weights.
+    pub resident_workers: usize,
+    /// Packed weight bytes of one replica.
+    pub weight_bytes: usize,
+    /// Weight bytes resident across the pool
+    /// (`weight_bytes * resident_workers`) — the dominant memory cost
+    /// the registry's residency policy trades against occupancy.
+    pub resident_weight_bytes: usize,
+    /// Sessions of this model resident at the end of the run, across
+    /// all workers.
+    pub resident_sessions: usize,
+    /// Bytes of resident per-stream state at the end of the run
+    /// (`resident_sessions` × per-stream state size).
+    pub resident_state_bytes: usize,
+    /// Batched step invocations on this model's waves.
+    pub batched_steps: usize,
+    /// Lane-steps (tokens) executed for this model.
+    pub lane_steps: usize,
+    /// Lane-slots executed including SIMD tile padding.
+    pub padded_lane_steps: usize,
+    /// Widest wave any worker ran for this model.
+    pub peak_lanes: usize,
+    /// Admissions into this model's waves.
+    pub admissions: usize,
+    /// Retirements out of this model's waves.
+    pub retirements: usize,
+    /// Sessions of this model moved between workers by stealing.
+    pub steals: usize,
+    /// Sessions of this model evicted by the session-count budget.
+    pub evictions: usize,
+    /// Sessions of this model evicted by the idle-age policy.
+    pub idle_evictions: usize,
+}
+
+impl ModelLoad {
+    /// Mean lanes per batched step on this model's waves.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+
+    /// Mean physical (tile-padded) lanes per batched step on this
+    /// model's waves.
+    pub fn padded_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.padded_lane_steps as f64 / self.batched_steps as f64
+        }
+    }
+}
+
 /// The report a serving run produces.
 #[derive(Debug)]
 pub struct ServingReport {
-    /// Engine label ("float"/"hybrid"/"integer").
+    /// Engine label of a single-model run ("Float"/"Hybrid"/"Integer"),
+    /// or `"multi"` when the registry serves more than one model (see
+    /// [`Self::per_model`] for the per-variant engines).
     pub engine: &'static str,
     /// Scheduling discipline ("continuous" or "wave").
     pub mode: &'static str,
+    /// Models resident in the registry for this run.
+    pub models: usize,
     /// Requests completed.
     pub requests: usize,
     /// Tokens executed.
@@ -79,7 +153,7 @@ pub struct ServingReport {
     /// width across modes with [`Self::mean_occupancy`], not this.
     pub mean_batch: f64,
     /// Batched step invocations across all workers (one per token
-    /// position per wave).
+    /// position per model wave).
     pub batched_steps: usize,
     /// Lane-steps executed across all workers (equals tokens processed
     /// through the batched path).
@@ -102,11 +176,20 @@ pub struct ServingReport {
     /// Sessions moved between workers by work stealing (0 when
     /// stealing is disabled or `workers == 1`).
     pub steals: usize,
-    /// Sessions evicted under the session budget across all workers.
+    /// Sessions evicted under the session-count budget across all
+    /// workers.
     pub evictions: usize,
+    /// Sessions evicted under the idle-age policy across all workers.
+    pub idle_evictions: usize,
+    /// Packed weight bytes resident across the pool (every model ×
+    /// its resident worker count).
+    pub resident_weight_bytes: usize,
     /// Per-worker load breakdown (occupancy, turnover, steals), indexed
     /// by worker.
     pub per_worker: Vec<WorkerLoad>,
+    /// Per-model breakdown (occupancy, steals, evictions, memory),
+    /// indexed by [`ModelId`].
+    pub per_model: Vec<ModelLoad>,
 }
 
 impl ServingReport {
@@ -146,11 +229,12 @@ impl ServingReport {
     /// Print the one-line summary of the run.
     pub fn print(&self) {
         println!(
-            "  {:<8} {:<10} reqs={:<5} tokens={:<7} wall={:>7.2}s tput={:>9.0} tok/s \
-             RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} pad={:.2} peak={} \
-             adm={} wait={:.2}ms steals={} evict={}",
+            "  {:<8} {:<10} models={:<2} reqs={:<5} tokens={:<7} wall={:>7.2}s \
+             tput={:>9.0} tok/s RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} \
+             pad={:.2} peak={} adm={} wait={:.2}ms steals={} evict={} evictI={}",
             self.engine,
             self.mode,
+            self.models,
             self.requests,
             self.tokens,
             self.wall_secs,
@@ -166,6 +250,7 @@ impl ServingReport {
             self.mean_admission_ms,
             self.steals,
             self.evictions,
+            self.idle_evictions,
         );
     }
 
@@ -175,7 +260,7 @@ impl ServingReport {
         for w in &self.per_worker {
             println!(
                 "    worker {:<2} steps={:<6} lanes={:<7} occ={:.2} pad={:.2} peak={} \
-                 adm={} ret={} stole={} evict={}",
+                 adm={} ret={} stole={} evict={} evictI={}",
                 w.worker,
                 w.batched_steps,
                 w.lane_steps,
@@ -186,6 +271,34 @@ impl ServingReport {
                 w.retirements,
                 w.stolen_sessions,
                 w.evictions,
+                w.idle_evictions,
+            );
+        }
+    }
+
+    /// Print one line per model: occupancy, steals, evictions, and the
+    /// resident memory accounting — the registry view of a multi-model
+    /// run.
+    pub fn print_models(&self) {
+        for m in &self.per_model {
+            println!(
+                "    model {:<2} {:<12} {:<8} workers={:<2} weights={:<9}B \
+                 ({}B resident) lanes={:<7} occ={:.2} peak={} steals={} evict={} \
+                 evictI={} sessions={} ({}B state)",
+                m.model,
+                m.name,
+                m.engine,
+                m.resident_workers,
+                m.weight_bytes,
+                m.resident_weight_bytes,
+                m.lane_steps,
+                m.mean_occupancy(),
+                m.peak_lanes,
+                m.steals,
+                m.evictions,
+                m.idle_evictions,
+                m.resident_sessions,
+                m.resident_state_bytes,
             );
         }
     }

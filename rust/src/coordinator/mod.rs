@@ -7,23 +7,30 @@
 //! persistent cell/hidden state across requests, so routing must be
 //! *sticky* and batching must group steps, not requests:
 //!
-//! * [`session`] — per-stream persistent LSTM state with lifecycle and
-//!   budget-driven eviction;
+//! * [`registry`] — the model registry: several quantized model
+//!   variants (each with its own packed int8 weights, quantization
+//!   recipe, and engine kind) sharded over one worker pool, with
+//!   per-model residency and memory accounting;
+//! * [`session`] — per-stream persistent LSTM state (keyed by
+//!   `(model, session)`) with lifecycle, budget-driven eviction, and
+//!   idle-age aging;
 //! * [`router`] — hash-homed session placement over sharded ingest
-//!   queues, with work stealing of untouched sessions so occupancy
-//!   survives skewed routing;
+//!   queues (among each model's resident workers), with work stealing
+//!   of untouched sessions so occupancy survives skewed routing;
 //! * [`batcher`] — standalone bounded micro-batching with a latency
 //!   deadline (not used by the sharded server; kept for embedders
 //!   driving a scheduler directly);
 //! * [`scheduler`] — the continuous-batching lane scheduler (admit /
-//!   retire / compact between token positions) plus the deterministic
-//!   virtual-time simulators for one worker ([`simulate_trace`]) and a
-//!   whole stealing pool ([`simulate_shard_trace`]);
-//! * [`server`] — the worker pool: one engine instance, session table,
-//!   and persistent wave per worker; open-loop trace replay with
-//!   latency accounting;
+//!   retire / compact between token positions; one wave per resident
+//!   model, lanes never mixing models) plus the deterministic
+//!   virtual-time simulators for one worker ([`simulate_trace`]), a
+//!   whole stealing pool ([`simulate_shard_trace`]), and a multi-model
+//!   pool ([`simulate_multi_shard_trace`]);
+//! * [`server`] — the worker pool: per-resident-model engine
+//!   instances, one session table, and one persistent wave per model
+//!   per worker; open-loop trace replay with latency accounting;
 //! * [`metrics`] — counters + the RT-factor / latency / occupancy /
-//!   steal reports.
+//!   steal reports, with per-worker and per-model breakdowns.
 //!
 //! See `docs/SERVING.md` for the operator-facing guide (architecture,
 //! CLI flags, report fields, tuning cookbook).
@@ -32,17 +39,20 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Poll};
-pub use metrics::{ServingReport, WorkerLoad};
-pub use router::{shard_home, Router, ShardPoll, ShardRouter};
+pub use metrics::{ModelLoad, ServingReport, WorkerLoad};
+pub use registry::{ModelId, ModelRegistry, ModelSpec, Residency};
+pub use router::{shard_home, shard_home_model, Router, ShardPoll, ShardRouter};
 pub use scheduler::{
-    simulate_shard_trace, simulate_trace, ContinuousScheduler, SchedulerMode,
-    SchedulerStats, ShardConfig, ShardSimReport, StreamDone, StreamItem,
+    simulate_multi_shard_trace, simulate_registry_trace, simulate_shard_trace,
+    simulate_trace, ContinuousScheduler, SchedulerMode, SchedulerStats, ShardConfig,
+    ShardSimReport, StreamDone, StreamItem,
 };
 pub use server::{Server, ServerConfig};
-pub use session::{Session, SessionId, SessionManager};
+pub use session::{Session, SessionId, SessionKey, SessionManager};

@@ -1,0 +1,368 @@
+//! The model registry: several quantized LSTM variants served over one
+//! worker pool.
+//!
+//! The paper's economics argument — 8-bit integer LSTMs are cheap
+//! enough to deploy widely — plays out in production as *many* model
+//! variants resident on one CPU fleet: per-locale heads, A/B
+//! quantization recipes, fully-integer vs. hybrid engines. Packed int8
+//! weights are the dominant resident cost, so which workers hold which
+//! model's weights is a first-class placement decision.
+//!
+//! A [`ModelRegistry`] holds N registered variants ([`ModelSpec`]:
+//! float master weights, calibration stats, quantization recipe, and
+//! engine kind). Each variant gets a dense [`ModelId`] and a
+//! [`Residency`] policy mapping it onto a subset of the pool's
+//! workers. The rest of the coordinator keys on `(model, session)`:
+//!
+//! * the [`router`] homes sessions onto workers where the model is
+//!   resident and only lets a thief steal sessions whose model it
+//!   hosts;
+//! * the [`scheduler`] runs one [`LmBatchState`] wave **per resident
+//!   model per worker** — lanes never mix models;
+//! * the session/budget machinery accounts state per model, and the
+//!   [`ServingReport`] breaks out per-model occupancy, steals,
+//!   evictions, and resident weight bytes.
+//!
+//! Engines are **instantiated per worker** (their step scratch is not
+//! shareable across threads); the registry is the shared, immutable
+//! description the workers instantiate from.
+//!
+//! [`router`]: super::router
+//! [`scheduler`]: super::scheduler
+//! [`LmBatchState`]: crate::model::lm::LmBatchState
+//! [`ServingReport`]: super::metrics::ServingReport
+
+use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
+use crate::model::lm::{CharLm, CharLmEngine};
+
+/// Identifier of a registered model: the dense index assigned by
+/// [`ModelRegistry::register`], in registration order.
+pub type ModelId = u32;
+
+/// Which workers hold a model's weights (and therefore its sessions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Residency {
+    /// Resident on every worker of the pool (the default; best
+    /// occupancy, highest memory).
+    All,
+    /// Resident on `n` workers, placed round-robin from the model id
+    /// (`(model + i) % workers` for `i < n`) — deterministic and
+    /// spreads models across the pool.
+    Count(usize),
+    /// Resident on an explicit worker set (indices outside the pool are
+    /// ignored; the effective set must stay non-empty).
+    Workers(Vec<usize>),
+}
+
+/// Everything needed to build one model variant's engine.
+pub struct ModelSpec<'a> {
+    /// Operator-facing name ("en-US", "recipe-B", ...).
+    pub name: String,
+    /// Float master weights (stack + head).
+    pub lm: &'a CharLm,
+    /// Execution engine kind for this variant.
+    pub engine: StackEngine,
+    /// Calibration statistics (required for the integer engine).
+    pub stats: Option<&'a [CalibrationStats]>,
+    /// Quantization recipe options for this variant.
+    pub opts: QuantizeOptions,
+    /// Which workers hold this model.
+    pub residency: Residency,
+}
+
+struct Registered<'a> {
+    spec: ModelSpec<'a>,
+    weight_bytes: usize,
+    state_bytes: usize,
+}
+
+/// The registry: an ordered set of model variants sharded over one
+/// worker pool. Immutable once serving starts; shared by reference
+/// across worker threads (it holds no engine instances, only the
+/// specs to build them from).
+#[derive(Default)]
+pub struct ModelRegistry<'a> {
+    models: Vec<Registered<'a>>,
+}
+
+impl<'a> ModelRegistry<'a> {
+    /// An empty registry.
+    pub fn new() -> Self {
+        ModelRegistry { models: Vec::new() }
+    }
+
+    /// Register one model variant and return its [`ModelId`]. Builds a
+    /// probe engine once, at load time, to validate the spec (the
+    /// integer engine requires calibration stats) and to record the
+    /// packed weight and per-stream state footprints for the memory
+    /// accounting. The probe is a deliberate trade-off: exact byte
+    /// accounting needs the built engine (CSR sizes under
+    /// `sparse_weights` depend on the actual weight values, not just
+    /// the spec), and registration happens once per variant at load
+    /// time, never on the serving path.
+    pub fn register(&mut self, spec: ModelSpec<'a>) -> ModelId {
+        if spec.engine == StackEngine::Integer {
+            assert!(spec.stats.is_some(), "integer engine needs calibration stats");
+        }
+        if let Residency::Workers(ws) = &spec.residency {
+            assert!(!ws.is_empty(), "explicit residency must name a worker");
+        }
+        if let Residency::Count(n) = spec.residency {
+            assert!(n > 0, "residency count must be at least 1");
+        }
+        let probe = spec.lm.engine(spec.engine, spec.stats, spec.opts);
+        let id = self.models.len() as ModelId;
+        self.models.push(Registered {
+            weight_bytes: probe.weight_bytes(),
+            state_bytes: probe.state_bytes(),
+            spec,
+        });
+        id
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Operator-facing name of a model.
+    pub fn name(&self, model: ModelId) -> &str {
+        &self.models[model as usize].spec.name
+    }
+
+    /// Engine kind of a model.
+    pub fn engine_kind(&self, model: ModelId) -> StackEngine {
+        self.models[model as usize].spec.engine
+    }
+
+    /// Packed weight bytes of one replica of a model (stack + head
+    /// under its engine).
+    pub fn weight_bytes(&self, model: ModelId) -> usize {
+        self.models[model as usize].weight_bytes
+    }
+
+    /// Bytes of one stream's persistent state under this model's
+    /// engine (recurrent layers + hidden/logits scratch).
+    pub fn state_bytes(&self, model: ModelId) -> usize {
+        self.models[model as usize].state_bytes
+    }
+
+    /// The sorted worker set a model is resident on, for a pool of
+    /// `workers` workers.
+    pub fn resident_workers(&self, model: ModelId, workers: usize) -> Vec<usize> {
+        assert!(workers > 0);
+        match &self.models[model as usize].spec.residency {
+            Residency::All => (0..workers).collect(),
+            Residency::Count(n) => {
+                let n = (*n).min(workers);
+                let mut ws: Vec<usize> =
+                    (0..n).map(|i| (model as usize + i) % workers).collect();
+                ws.sort_unstable();
+                ws
+            }
+            Residency::Workers(ws) => {
+                let mut ws: Vec<usize> =
+                    ws.iter().copied().filter(|&w| w < workers).collect();
+                ws.sort_unstable();
+                ws.dedup();
+                assert!(
+                    !ws.is_empty(),
+                    "model {model} has no resident worker in a pool of {workers}"
+                );
+                ws
+            }
+        }
+    }
+
+    /// Per-model resident worker sets for a pool of `workers` workers
+    /// (the shape [`ShardRouter::with_residency`] consumes).
+    ///
+    /// [`ShardRouter::with_residency`]:
+    ///     super::router::ShardRouter::with_residency
+    pub fn residency(&self, workers: usize) -> Vec<Vec<usize>> {
+        (0..self.models.len())
+            .map(|m| self.resident_workers(m as ModelId, workers))
+            .collect()
+    }
+
+    /// Whether `model` is resident on `worker` in a pool of `workers`.
+    pub fn resident_on(&self, model: ModelId, worker: usize, workers: usize) -> bool {
+        self.resident_workers(model, workers).contains(&worker)
+    }
+
+    /// Build engine instances for the models resident on `worker`
+    /// (index = [`ModelId`]; `None` for models not resident there).
+    /// Each worker thread calls this once — engines carry per-step
+    /// scratch and are not shareable across threads.
+    pub fn instantiate(&self, worker: usize, workers: usize) -> Vec<Option<CharLmEngine>> {
+        self.models
+            .iter()
+            .enumerate()
+            .map(|(m, r)| {
+                if self.resident_on(m as ModelId, worker, workers) {
+                    Some(r.spec.lm.engine(r.spec.engine, r.spec.stats, r.spec.opts))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Build one engine instance per model, regardless of residency —
+    /// the form the single-threaded simulators and sequential oracles
+    /// use (one instance can serve every simulated worker).
+    pub fn instantiate_all(&self) -> Vec<CharLmEngine> {
+        self.models
+            .iter()
+            .map(|r| r.spec.lm.engine(r.spec.engine, r.spec.stats, r.spec.opts))
+            .collect()
+    }
+
+    /// Total packed weight bytes resident across the pool: each
+    /// model's replica size times its resident worker count — the
+    /// number the "weights are the dominant resident cost" trade-off
+    /// is made against.
+    pub fn total_resident_weight_bytes(&self, workers: usize) -> usize {
+        (0..self.models.len())
+            .map(|m| {
+                self.weight_bytes(m as ModelId)
+                    * self.resident_workers(m as ModelId, workers).len()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::{LstmSpec, StackWeights};
+    use crate::model::lm::VOCAB;
+    use crate::tensor::Matrix;
+    use crate::util::Pcg32;
+
+    fn tiny_lm(seed: u64, hidden: usize) -> CharLm {
+        let mut rng = Pcg32::seeded(seed);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+    }
+
+    #[test]
+    fn register_assigns_dense_ids_and_accounts_weights() {
+        let a = tiny_lm(1, 16);
+        let b = tiny_lm(2, 24);
+        let mut reg = ModelRegistry::new();
+        let ida = reg.register(ModelSpec {
+            name: "a".into(),
+            lm: &a,
+            engine: StackEngine::Float,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        let idb = reg.register(ModelSpec {
+            name: "b".into(),
+            lm: &b,
+            engine: StackEngine::Hybrid,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::Count(1),
+        });
+        assert_eq!((ida, idb), (0, 1));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.name(1), "b");
+        assert_eq!(reg.engine_kind(0), StackEngine::Float);
+        assert!(reg.weight_bytes(0) > 0);
+        assert!(reg.state_bytes(0) > 0);
+        // Hybrid packs int8 weights: smaller than the float replica of
+        // a wider model.
+        assert!(reg.weight_bytes(1) < reg.weight_bytes(0) * 4);
+        // Resident bytes: model 0 on all 4 workers, model 1 on one.
+        assert_eq!(
+            reg.total_resident_weight_bytes(4),
+            reg.weight_bytes(0) * 4 + reg.weight_bytes(1)
+        );
+    }
+
+    #[test]
+    fn residency_policies_place_deterministically() {
+        let a = tiny_lm(3, 16);
+        let mut reg = ModelRegistry::new();
+        for (i, res) in [
+            Residency::All,
+            Residency::Count(2),
+            Residency::Workers(vec![3, 1, 1, 9]),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let id = reg.register(ModelSpec {
+                name: format!("m{i}"),
+                lm: &a,
+                engine: StackEngine::Float,
+                stats: None,
+                opts: QuantizeOptions::default(),
+                residency: res,
+            });
+            assert_eq!(id as usize, i);
+        }
+        assert_eq!(reg.resident_workers(0, 4), vec![0, 1, 2, 3]);
+        // Count(2) for model 1: workers (1, 2).
+        assert_eq!(reg.resident_workers(1, 4), vec![1, 2]);
+        // Explicit set: out-of-range 9 dropped, duplicates deduped.
+        assert_eq!(reg.resident_workers(2, 4), vec![1, 3]);
+        assert!(reg.resident_on(1, 2, 4));
+        assert!(!reg.resident_on(1, 0, 4));
+        // Count never exceeds the pool.
+        assert_eq!(reg.resident_workers(1, 1), vec![0]);
+    }
+
+    #[test]
+    fn instantiate_respects_residency() {
+        let a = tiny_lm(4, 16);
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec {
+            name: "everywhere".into(),
+            lm: &a,
+            engine: StackEngine::Float,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        reg.register(ModelSpec {
+            name: "pinned".into(),
+            lm: &a,
+            engine: StackEngine::Float,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::Workers(vec![1]),
+        });
+        let w0 = reg.instantiate(0, 2);
+        let w1 = reg.instantiate(1, 2);
+        assert!(w0[0].is_some() && w0[1].is_none());
+        assert!(w1[0].is_some() && w1[1].is_some());
+        assert_eq!(reg.instantiate_all().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "integer engine needs calibration stats")]
+    fn integer_without_stats_panics() {
+        let a = tiny_lm(5, 16);
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec {
+            name: "bad".into(),
+            lm: &a,
+            engine: StackEngine::Integer,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+    }
+}

@@ -1,37 +1,51 @@
 //! Session routing: sticky hashing plus the sharded ingest queues with
 //! work stealing that keep every worker's wave occupied.
 //!
-//! A session's persistent LSTM state must live on exactly one worker
-//! (streams are stateful), so routing must be *sticky*. Static hashing
-//! alone ([`Router`]) leaves occupancy on the floor under skewed id
-//! distributions: one worker's queue backs up while its peers idle.
-//! [`ShardRouter`] keeps the stickiness but makes the *initial
-//! placement* negotiable: a session is hash-routed to a **home** queue,
-//! and only becomes **bound** to a worker when that worker first drains
-//! one of its chunks — or when an idle worker *steals* it. Stealing
-//! moves whole sessions (every queued chunk at once), only ever
-//! sessions no worker has touched, and binds them to the thief; from
-//! then on every future chunk of that session follows the binding. The
-//! result: work moves, state never does, and every session still
-//! executes its chunks in arrival order on exactly one worker — which
-//! is what keeps the sharded path bit-exact with the sequential one
-//! (locked down by `rust/tests/sharded_serving.rs`).
+//! A stream's persistent LSTM state must live on exactly one worker
+//! (streams are stateful), so routing must be *sticky* — and with the
+//! model registry a stream is a `(model, session)` pair, so the sticky
+//! unit is that key. Static hashing alone ([`Router`]) leaves occupancy
+//! on the floor under skewed id distributions: one worker's queue backs
+//! up while its peers idle. [`ShardRouter`] keeps the stickiness but
+//! makes the *initial placement* negotiable: a session is hash-routed
+//! to a **home** queue among the workers its model is resident on, and
+//! only becomes **bound** to a worker when that worker first drains one
+//! of its chunks — or when an idle worker *steals* it. Stealing moves
+//! whole sessions (every queued chunk at once), only ever sessions no
+//! worker has touched, only to thieves **where the session's model is
+//! resident** (a worker without the weights cannot execute the work),
+//! and binds them to the thief; from then on every future chunk of that
+//! session follows the binding. The result: work moves, state never
+//! does, and every session still executes its chunks in arrival order
+//! on exactly one worker — which is what keeps the sharded path
+//! bit-exact with the sequential one (locked down by
+//! `rust/tests/sharded_serving.rs` and `rust/tests/multi_model.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
+use super::registry::ModelId;
 use super::scheduler::StreamItem;
-use super::session::SessionId;
+use super::session::{SessionId, SessionKey};
 
-/// The home worker a session id hashes to among `workers` shards
-/// (SplitMix64 finalizer — uniform and stable across calls and
-/// processes, so traces can be constructed to target a shard).
+/// The home worker a model-0 session id hashes to among `workers`
+/// shards (kept as the stable single-model hash so traces can be
+/// constructed to target a shard; see [`shard_home_model`]).
 pub fn shard_home(session: SessionId, workers: usize) -> usize {
-    let mut z = session.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    shard_home_model(0, session, workers)
+}
+
+/// The home index a `(model, session)` key hashes to among `n` slots
+/// (SplitMix64 finalizer over the model-mixed key — uniform and stable
+/// across calls and processes). For model 0 this equals the historical
+/// [`shard_home`] hash, so single-model traces keep their placement.
+pub fn shard_home_model(model: ModelId, session: SessionId, n: usize) -> usize {
+    let key = session ^ (model as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+    let mut z = key.wrapping_add(0x9e37_79b9_7f4a_7c15);
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
     z ^= z >> 31;
-    (z % workers as u64) as usize
+    (z % n as u64) as usize
 }
 
 /// Static sticky routing: maps a session id to the same worker every
@@ -85,25 +99,29 @@ pub enum ShardPoll {
 }
 
 /// Everything mutable, under one lock: the per-worker queues, the
-/// session→worker binding map, and the steal accounting.
+/// `(model, session)`→worker binding map, and the steal accounting.
 struct ShardState {
     queues: Vec<VecDeque<StreamItem>>,
     /// A session appears here from the moment any worker drains or
     /// steals one of its chunks; bindings never change afterwards, so a
     /// session's chunks execute on exactly one worker, in order.
-    bound: HashMap<SessionId, usize>,
+    bound: HashMap<SessionKey, usize>,
     closed: bool,
     /// Steal invocations per thief worker.
     steal_events: Vec<usize>,
     /// Sessions stolen per thief worker.
     stolen_sessions: Vec<usize>,
+    /// Sessions stolen per model (indexed by [`ModelId`], grown on
+    /// demand).
+    stolen_by_model: Vec<usize>,
     /// Items re-queued because their binding changed while queued
     /// (defensive path; cannot occur under the submit/steal protocol).
     forwards: usize,
 }
 
 /// The sharded ingest front of the multi-worker server: one queue per
-/// worker, hash-homed submission, and a work-stealing drain path.
+/// worker, hash-homed submission over each model's resident worker
+/// set, and a work-stealing drain path.
 ///
 /// Invariants the router maintains (the basis of the sharded path's
 /// bit-exactness):
@@ -112,32 +130,62 @@ struct ShardState {
 ///    in submission order;
 /// 2. once bound, every chunk of a session is delivered to its bound
 ///    worker, in submission order;
-/// 3. stealing only takes unbound sessions, and takes every queued
-///    chunk of a stolen session in one atomic move.
+/// 3. stealing only takes unbound sessions, only onto workers where
+///    the session's model is resident, and takes every queued chunk of
+///    a stolen session in one atomic move.
 ///
 /// All operations are safe to call from any thread; the deterministic
-/// shard simulator drives the same type single-threaded.
+/// shard simulators drive the same type single-threaded.
 pub struct ShardRouter {
     workers: usize,
     steal: bool,
+    /// Per-model sorted resident worker sets; `None` means every model
+    /// is resident everywhere (the single-model configuration).
+    residency: Option<Vec<Vec<usize>>>,
     state: Mutex<ShardState>,
     work: Condvar,
 }
 
 impl ShardRouter {
-    /// A router over `workers` ingest queues; `steal` enables the
-    /// work-stealing drain path (off reproduces static sticky routing).
+    /// A router over `workers` ingest queues with every model resident
+    /// on every worker; `steal` enables the work-stealing drain path
+    /// (off reproduces static sticky routing).
     pub fn new(workers: usize, steal: bool) -> Self {
+        Self::build(workers, steal, None)
+    }
+
+    /// A router with an explicit per-model residency map (index =
+    /// [`ModelId`]; each entry the sorted worker set holding that
+    /// model's weights, as produced by
+    /// [`ModelRegistry::residency`]). Sessions home only onto resident
+    /// workers and steal only toward them.
+    ///
+    /// [`ModelRegistry::residency`]:
+    ///     super::registry::ModelRegistry::residency
+    pub fn with_residency(workers: usize, steal: bool, residency: Vec<Vec<usize>>) -> Self {
+        for (m, ws) in residency.iter().enumerate() {
+            assert!(!ws.is_empty(), "model {m} resident nowhere");
+            assert!(
+                ws.iter().all(|&w| w < workers),
+                "model {m} residency names worker outside the pool"
+            );
+        }
+        Self::build(workers, steal, Some(residency))
+    }
+
+    fn build(workers: usize, steal: bool, residency: Option<Vec<Vec<usize>>>) -> Self {
         assert!(workers > 0);
         ShardRouter {
             workers,
             steal,
+            residency,
             state: Mutex::new(ShardState {
                 queues: (0..workers).map(|_| VecDeque::new()).collect(),
                 bound: HashMap::new(),
                 closed: false,
                 steal_events: vec![0; workers],
                 stolen_sessions: vec![0; workers],
+                stolen_by_model: Vec::new(),
                 forwards: 0,
             }),
             work: Condvar::new(),
@@ -154,23 +202,51 @@ impl ShardRouter {
         self.steal
     }
 
-    /// The home queue `session` hashes to (its initial placement; the
-    /// binding may move it once, at steal time).
-    pub fn home(&self, session: SessionId) -> usize {
-        shard_home(session, self.workers)
+    /// Whether `model` is resident on `worker` under this router's
+    /// residency map (always true without one).
+    pub fn resident_on(&self, model: ModelId, worker: usize) -> bool {
+        match &self.residency {
+            None => true,
+            Some(res) => res
+                .get(model as usize)
+                .map(|ws| ws.contains(&worker))
+                .unwrap_or(false),
+        }
     }
 
-    /// Submit one item: appended to its session's bound worker's queue
-    /// if the session is bound, else to its home queue. Panics after
+    /// The home queue a model-0 `session` hashes to (single-model
+    /// convenience for [`Self::home_of`]).
+    pub fn home(&self, session: SessionId) -> usize {
+        self.home_of(0, session)
+    }
+
+    /// The home queue a `(model, session)` stream hashes to: a
+    /// [`shard_home_model`] pick among the model's resident workers
+    /// (its initial placement; the binding may move it once, at steal
+    /// time).
+    pub fn home_of(&self, model: ModelId, session: SessionId) -> usize {
+        match &self.residency {
+            None => shard_home_model(model, session, self.workers),
+            Some(res) => {
+                let ws = res
+                    .get(model as usize)
+                    .unwrap_or_else(|| panic!("model {model} not registered"));
+                ws[shard_home_model(model, session, ws.len())]
+            }
+        }
+    }
+
+    /// Submit one item: appended to its stream's bound worker's queue
+    /// if the stream is bound, else to its home queue. Panics after
     /// [`Self::close`].
     pub fn submit(&self, item: StreamItem) {
         let mut st = self.state.lock().expect("router lock");
         assert!(!st.closed, "submit after close");
         let target = st
             .bound
-            .get(&item.session)
+            .get(&(item.model, item.session))
             .copied()
-            .unwrap_or_else(|| shard_home(item.session, self.workers));
+            .unwrap_or_else(|| self.home_of(item.model, item.session));
         st.queues[target].push_back(item);
         drop(st);
         self.work.notify_all();
@@ -192,12 +268,12 @@ impl ShardRouter {
     /// `max_items` (the extra chunks could not have run elsewhere
     /// anyway; they queue behind the session's lane).
     ///
-    /// Own queue first: drained items' sessions are bound to `worker`.
+    /// Own queue first: drained items' streams are bound to `worker`.
     /// If the own queue yields nothing and stealing is enabled, whole
-    /// unbound sessions are taken from the deepest peer queue holding
-    /// any. With nothing to do, returns [`ShardPoll::Closed`] after
-    /// [`Self::close`] (the worker may exit) or [`ShardPoll::Empty`]
-    /// before it.
+    /// unbound sessions **whose model is resident on this worker** are
+    /// taken from the deepest peer queue holding any. With nothing to
+    /// do, returns [`ShardPoll::Closed`] after [`Self::close`] (the
+    /// worker may exit) or [`ShardPoll::Empty`] before it.
     pub fn poll(&self, worker: usize, max_items: usize) -> ShardPoll {
         assert!(worker < self.workers, "worker index");
         if max_items == 0 {
@@ -210,7 +286,7 @@ impl ShardRouter {
         let mut taken = Vec::new();
         while taken.len() < max_items {
             let Some(item) = st.queues[worker].pop_front() else { break };
-            match st.bound.get(&item.session).copied() {
+            match st.bound.get(&(item.model, item.session)).copied() {
                 Some(owner) if owner != worker => {
                     // Binding changed while queued (defensive; the
                     // submit/steal protocol never produces this).
@@ -218,7 +294,7 @@ impl ShardRouter {
                     st.queues[owner].push_back(item);
                 }
                 _ => {
-                    st.bound.insert(item.session, worker);
+                    st.bound.insert((item.model, item.session), worker);
                     taken.push(item);
                 }
             }
@@ -227,12 +303,12 @@ impl ShardRouter {
             return ShardPoll::Items(taken);
         }
 
-        // Own queue dry: steal whole unbound sessions from the deepest
-        // peer queue that holds any (queue depth descending, ties by
-        // lowest index — deterministic for the single-threaded
-        // simulator). Scanning one candidate victim at a time keeps
-        // the common case O(one queue) instead of pre-counting every
-        // peer's stealable items under the lock.
+        // Own queue dry: steal whole unbound, resident-here sessions
+        // from the deepest peer queue that holds any (queue depth
+        // descending, ties by lowest index — deterministic for the
+        // single-threaded simulator). Scanning one candidate victim at
+        // a time keeps the common case O(one queue) instead of
+        // pre-counting every peer's stealable items under the lock.
         if self.steal {
             let mut order: Vec<usize> =
                 (0..self.workers).filter(|&w| w != worker).collect();
@@ -241,12 +317,16 @@ impl ShardRouter {
                 if st.queues[v].is_empty() {
                     break;
                 }
-                let mut chosen: Vec<SessionId> = Vec::new();
+                let mut chosen: Vec<SessionKey> = Vec::new();
                 for it in st.queues[v].iter() {
-                    if st.bound.contains_key(&it.session) || chosen.contains(&it.session) {
+                    let key = (it.model, it.session);
+                    if st.bound.contains_key(&key)
+                        || !self.resident_on(it.model, worker)
+                        || chosen.contains(&key)
+                    {
                         continue;
                     }
-                    chosen.push(it.session);
+                    chosen.push(key);
                     if chosen.len() >= max_items {
                         break;
                     }
@@ -257,15 +337,20 @@ impl ShardRouter {
                 let mut items = Vec::new();
                 let mut keep = VecDeque::with_capacity(st.queues[v].len());
                 for it in st.queues[v].drain(..) {
-                    if chosen.contains(&it.session) {
+                    if chosen.contains(&(it.model, it.session)) {
                         items.push(it);
                     } else {
                         keep.push_back(it);
                     }
                 }
                 st.queues[v] = keep;
-                for &s in &chosen {
-                    st.bound.insert(s, worker);
+                for &key in &chosen {
+                    st.bound.insert(key, worker);
+                    let m = key.0 as usize;
+                    if st.stolen_by_model.len() <= m {
+                        st.stolen_by_model.resize(m + 1, 0);
+                    }
+                    st.stolen_by_model[m] += 1;
                 }
                 st.steal_events[worker] += 1;
                 st.stolen_sessions[worker] += chosen.len();
@@ -281,9 +366,9 @@ impl ShardRouter {
     }
 
     /// Block until `worker` plausibly has something to do: its own
-    /// queue is non-empty, a peer holds a stealable session (when
-    /// stealing is enabled), or ingest closed. May wake spuriously —
-    /// callers re-[`Self::poll`] in a loop.
+    /// queue is non-empty, a peer holds a stealable resident-here
+    /// session (when stealing is enabled), or ingest closed. May wake
+    /// spuriously — callers re-[`Self::poll`] in a loop.
     pub fn wait_for_work(&self, worker: usize) {
         assert!(worker < self.workers, "worker index");
         let mut st = self.state.lock().expect("router lock");
@@ -293,7 +378,11 @@ impl ShardRouter {
             }
             if self.steal {
                 let stealable = st.queues.iter().enumerate().any(|(w, q)| {
-                    w != worker && q.iter().any(|it| !st.bound.contains_key(&it.session))
+                    w != worker
+                        && q.iter().any(|it| {
+                            !st.bound.contains_key(&(it.model, it.session))
+                                && self.resident_on(it.model, worker)
+                        })
                 });
                 if stealable {
                     return;
@@ -303,21 +392,21 @@ impl ShardRouter {
         }
     }
 
-    /// Session ids with items currently queued for `worker`,
-    /// deduplicated. The budget-eviction path protects these: their
-    /// next chunk is already in flight, so dropping their state would
-    /// reset the stream mid-flight (see
+    /// `(model, session)` keys with items currently queued for
+    /// `worker`, deduplicated. The budget-eviction path protects
+    /// these: their next chunk is already in flight, so dropping their
+    /// state would reset the stream mid-flight (see
     /// [`ContinuousScheduler::enforce_session_budget`]).
     ///
     /// [`ContinuousScheduler::enforce_session_budget`]:
     ///     super::scheduler::ContinuousScheduler::enforce_session_budget
-    pub fn queued_sessions(&self, worker: usize) -> Vec<SessionId> {
+    pub fn queued_sessions(&self, worker: usize) -> Vec<SessionKey> {
         let st = self.state.lock().expect("router lock");
-        let mut ids: Vec<SessionId> =
-            st.queues[worker].iter().map(|it| it.session).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        ids
+        let mut keys: Vec<SessionKey> =
+            st.queues[worker].iter().map(|it| (it.model, it.session)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
     }
 
     /// Current depth of every ingest queue (backlog snapshot).
@@ -332,10 +421,15 @@ impl ShardRouter {
         st.queues.iter().all(|q| q.is_empty())
     }
 
-    /// The worker `session` is bound to, if any worker has drained or
-    /// stolen one of its chunks yet.
-    pub fn owner(&self, session: SessionId) -> Option<usize> {
-        self.state.lock().expect("router lock").bound.get(&session).copied()
+    /// The worker a `(model, session)` stream is bound to, if any
+    /// worker has drained or stolen one of its chunks yet.
+    pub fn owner(&self, model: ModelId, session: SessionId) -> Option<usize> {
+        self.state
+            .lock()
+            .expect("router lock")
+            .bound
+            .get(&(model, session))
+            .copied()
     }
 
     /// Steal invocations per worker (as thief).
@@ -346,6 +440,16 @@ impl ShardRouter {
     /// Sessions stolen per worker (as thief).
     pub fn stolen_sessions(&self) -> Vec<usize> {
         self.state.lock().expect("router lock").stolen_sessions.clone()
+    }
+
+    /// Sessions stolen per model. Returns at least `n_models` entries
+    /// (models with no steals report 0).
+    pub fn stolen_by_model(&self, n_models: usize) -> Vec<usize> {
+        let mut v = self.state.lock().expect("router lock").stolen_by_model.clone();
+        if v.len() < n_models {
+            v.resize(n_models, 0);
+        }
+        v
     }
 
     /// Items re-queued because their binding changed while queued
@@ -362,7 +466,11 @@ mod tests {
     use std::time::Instant;
 
     fn item(session: SessionId, tok: usize) -> StreamItem {
-        StreamItem { session, tokens: vec![tok], submitted: Instant::now() }
+        StreamItem { model: 0, session, tokens: vec![tok], submitted: Instant::now() }
+    }
+
+    fn item_m(model: ModelId, session: SessionId, tok: usize) -> StreamItem {
+        StreamItem { model, session, tokens: vec![tok], submitted: Instant::now() }
     }
 
     #[test]
@@ -387,6 +495,20 @@ mod tests {
     }
 
     #[test]
+    fn model_mixing_moves_homes_but_preserves_model_zero() {
+        // Model 0 keeps the historical single-model hash; other models
+        // land elsewhere often enough to spread load.
+        let mut moved = 0;
+        for id in 0..1000u64 {
+            assert_eq!(shard_home_model(0, id, 4), shard_home(id, 4));
+            if shard_home_model(1, id, 4) != shard_home(id, 4) {
+                moved += 1;
+            }
+        }
+        assert!(moved > 500, "model mixing too weak: {moved}/1000");
+    }
+
+    #[test]
     fn single_worker_takes_all() {
         let r = Router::new(1);
         assert_eq!(r.route(123), 0);
@@ -399,13 +521,13 @@ mod tests {
         let id = (0..).find(|&i| shard_home(i, 4) == 2).unwrap();
         router.submit(item(id, 1));
         assert_eq!(router.backlogs()[2], 1);
-        assert_eq!(router.owner(id), None);
+        assert_eq!(router.owner(0, id), None);
         // Worker 2 drains it and becomes the binding.
         match router.poll(2, 8) {
             ShardPoll::Items(v) => assert_eq!(v.len(), 1),
             other => panic!("expected Items, got {other:?}"),
         }
-        assert_eq!(router.owner(id), Some(2));
+        assert_eq!(router.owner(0, id), Some(2));
         // The next chunk follows the binding, not the hash.
         router.submit(item(id, 2));
         assert_eq!(router.backlogs()[2], 1);
@@ -436,12 +558,13 @@ mod tests {
             }
             other => panic!("expected Stolen, got {other:?}"),
         }
-        assert_eq!(router.owner(hot[0]), Some(1));
-        assert_eq!(router.owner(hot[1]), Some(1));
-        assert_eq!(router.owner(hot[2]), None);
+        assert_eq!(router.owner(0, hot[0]), Some(1));
+        assert_eq!(router.owner(0, hot[1]), Some(1));
+        assert_eq!(router.owner(0, hot[2]), None);
         assert_eq!(router.backlogs(), vec![1, 0]);
         assert_eq!(router.stolen_sessions(), vec![0, 2]);
         assert_eq!(router.steal_events(), vec![0, 1]);
+        assert_eq!(router.stolen_by_model(1), vec![2]);
 
         // Future chunks of a stolen session follow the thief.
         router.submit(item(hot[0], 3));
@@ -493,6 +616,71 @@ mod tests {
             ShardPoll::Closed => {}
             other => panic!("expected Closed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn residency_restricts_homes_and_steals() {
+        // Model 0 lives only on worker 0, model 1 on workers 1 and 2.
+        let router =
+            ShardRouter::with_residency(3, true, vec![vec![0], vec![1, 2]]);
+        for id in 0..20u64 {
+            router.submit(item_m(0, id, 1));
+            assert!(router.resident_on(0, 0));
+            assert!(!router.resident_on(0, 1));
+            assert_eq!(router.home_of(0, id), 0, "model 0 must home on worker 0");
+            let h1 = router.home_of(1, id);
+            assert!(h1 == 1 || h1 == 2, "model 1 must home on worker 1 or 2");
+        }
+        assert_eq!(router.backlogs()[0], 20);
+        // Workers 1 and 2 are idle but must not steal model 0: its
+        // weights are not resident there.
+        for thief in [1usize, 2] {
+            match router.poll(thief, 8) {
+                ShardPoll::Empty => {}
+                other => panic!("worker {thief}: expected Empty, got {other:?}"),
+            }
+        }
+        assert_eq!(router.stolen_by_model(2), vec![0, 0]);
+        // Model-1 backlog on worker 1 *is* stealable by worker 2.
+        let id1 = (0..).find(|&i| router.home_of(1, i) == 1).unwrap();
+        router.submit(item_m(1, id1, 1));
+        match router.poll(2, 8) {
+            ShardPoll::Stolen { items, victim } => {
+                assert_eq!(victim, 1);
+                assert_eq!(items.len(), 1);
+                assert_eq!(items[0].model, 1);
+            }
+            other => panic!("expected Stolen, got {other:?}"),
+        }
+        assert_eq!(router.owner(1, id1), Some(2));
+        assert_eq!(router.stolen_by_model(2), vec![0, 1]);
+    }
+
+    #[test]
+    fn same_session_id_under_two_models_binds_independently() {
+        let router = ShardRouter::new(2, true);
+        // Force both streams onto worker 0's queue via stealing-free
+        // drain by worker 0 for model 0 only.
+        let id = (0..).find(|&i| shard_home(i, 2) == 0).unwrap();
+        router.submit(item_m(0, id, 1));
+        let h = router.home_of(1, id);
+        router.submit(item_m(1, id, 1));
+        match router.poll(0, 1) {
+            ShardPoll::Items(v) => {
+                assert_eq!(v.len(), 1);
+                assert_eq!(v[0].model, 0);
+            }
+            other => panic!("expected Items, got {other:?}"),
+        }
+        assert_eq!(router.owner(0, id), Some(0));
+        // The model-1 stream is a different key: still unbound (or
+        // bound elsewhere once its home drains it).
+        assert_eq!(router.owner(1, id), None);
+        match router.poll(h, 1) {
+            ShardPoll::Items(v) => assert_eq!(v[0].model, 1),
+            other => panic!("expected Items, got {other:?}"),
+        }
+        assert_eq!(router.owner(1, id), Some(h));
     }
 
     #[test]

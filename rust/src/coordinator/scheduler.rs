@@ -1,41 +1,54 @@
 //! Continuous batching: the lane scheduler that keeps the batched
-//! int8 path saturated under streaming arrivals.
+//! int8 path saturated under streaming arrivals — now with one
+//! persistent wave **per resident model**.
 //!
 //! PR 1's coordinator packed *waves*: every lane of a batch started and
 //! (modulo prefix truncation) ended together, so occupancy collapsed
 //! whenever sessions arrived mid-wave or finished at different lengths.
-//! This scheduler runs one *persistent* wave whose lanes turn over
+//! This scheduler runs persistent waves whose lanes turn over
 //! independently:
 //!
 //! * between token positions, pending sessions are admitted into free
 //!   lanes ([`ContinuousScheduler::admit_ready`] →
 //!   [`CharLmEngine::admit_lane`]);
 //! * every [`ContinuousScheduler::step`] advances all live lanes one
-//!   token position with a single batched step;
+//!   token position with one batched step per model wave;
 //! * lanes whose items are exhausted are scattered back to their
 //!   sessions and compacted out
 //!   ([`CharLmEngine::compact_lanes`]), so live lanes stay a dense
 //!   prefix and the GEMM never touches dead rows.
 //!
-//! Scheduling invariants (locked down by
-//! `rust/tests/continuous_batching.rs` and
-//! `rust/tests/sharded_serving.rs`):
+//! With the model registry, a worker hosts one [`LmBatchState`] wave
+//! per resident model: **lanes never mix models** (a wave's GEMMs run
+//! one model's packed weights), the `max_lanes` budget is shared
+//! across waves, and when free lanes are scarce admission splits them
+//! across models **weighted by per-model backlog** (proportional
+//! largest-remainder shares, deterministic, FIFO within each model).
+//! With one resident model all of this degenerates to exactly the
+//! single-wave scheduler of PRs 2–4.
 //!
-//! 1. at most one lane per session at any time (a stream's state must
-//!    advance in arrival order);
-//! 2. the batch width always equals the live lane count;
-//! 3. every session's output is bit-exact with running it alone on the
-//!    sequential `step` path — admission order, lane moves, and
-//!    compaction never touch the numerics.
+//! Scheduling invariants (locked down by
+//! `rust/tests/continuous_batching.rs`, `rust/tests/sharded_serving.rs`
+//! and `rust/tests/multi_model.rs`):
+//!
+//! 1. at most one lane per `(model, session)` stream at any time (a
+//!    stream's state must advance in arrival order);
+//! 2. each wave's batch width always equals its live lane count, and a
+//!    wave only ever holds lanes of its own model;
+//! 3. every stream's output is bit-exact with running it alone on the
+//!    sequential `step` path of its model — admission order, lane
+//!    moves, cross-model interleaving, and compaction never touch the
+//!    numerics.
 //!
 //! The scheduler is deliberately free of threads and wall-clock
 //! decisions: the serving worker drives it from a [`ShardRouter`],
 //! [`simulate_trace`] drives one instance from a virtual clock, and
-//! [`simulate_shard_trace`] drives a whole worker pool (with work
-//! stealing) the same way — so tests and benches get deterministic,
-//! replayable schedules.
+//! [`simulate_shard_trace`] / [`simulate_multi_shard_trace`] drive a
+//! whole worker pool (with work stealing) the same way — so tests and
+//! benches get deterministic, replayable schedules.
 //!
 //! [`ShardRouter`]: super::router::ShardRouter
+//! [`LmBatchState`]: crate::model::lm::LmBatchState
 //! [`CharLmEngine::admit_lane`]: crate::model::lm::CharLmEngine::admit_lane
 //! [`CharLmEngine::compact_lanes`]: crate::model::lm::CharLmEngine::compact_lanes
 
@@ -44,8 +57,9 @@ use std::time::Instant;
 
 use crate::model::lm::{nll_bits, CharLmEngine, LmBatchState};
 use crate::workload::synth::RequestTrace;
+use super::registry::{ModelId, ModelRegistry};
 use super::router::{ShardPoll, ShardRouter};
-use super::session::{SessionId, SessionManager};
+use super::session::{SessionId, SessionKey, SessionManager};
 
 /// Which scheduling discipline the coordinator runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,11 +81,15 @@ impl SchedulerMode {
     }
 }
 
-/// One unit of work: a request's token chunk for a session.
+/// One unit of work: a request's token chunk for a stream.
 #[derive(Debug)]
 pub struct StreamItem {
+    /// The model this chunk executes under (the registry id; 0 in a
+    /// single-model deployment).
+    pub model: ModelId,
     /// The stream this chunk belongs to (scheduling is sticky per
-    /// session: chunks apply to one evolving state, in order).
+    /// `(model, session)`: chunks apply to one evolving state, in
+    /// order).
     pub session: SessionId,
     /// The token chunk to feed through the model.
     pub tokens: Vec<usize>,
@@ -82,6 +100,8 @@ pub struct StreamItem {
 /// Completion record for one finished item.
 #[derive(Debug, Clone)]
 pub struct StreamDone {
+    /// The model the finished chunk executed under.
+    pub model: ModelId,
     /// The stream the finished chunk belonged to.
     pub session: SessionId,
     /// Tokens executed for this item.
@@ -92,7 +112,7 @@ pub struct StreamDone {
     pub latency_ms: f64,
 }
 
-/// One live lane of the persistent wave.
+/// One live lane of a model's persistent wave.
 struct Lane {
     session: SessionId,
     tokens: Vec<usize>,
@@ -103,10 +123,19 @@ struct Lane {
     submitted: Instant,
 }
 
-/// Counters the scheduler keeps about its own behaviour.
+/// One model's persistent wave on a worker: its batch state plus the
+/// live lane bookkeeping. Lanes never mix models.
+struct ModelWave {
+    bs: LmBatchState,
+    lanes: Vec<Lane>,
+}
+
+/// Counters the scheduler keeps about its own behaviour (kept both in
+/// aggregate and per model).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SchedulerStats {
-    /// Batched step invocations (one per token position of the wave).
+    /// Batched step invocations (one per token position per model
+    /// wave — each is one pass of that model's GEMMs).
     pub batched_steps: usize,
     /// Lane-steps executed (= tokens through the batched path).
     pub lane_steps: usize,
@@ -116,7 +145,8 @@ pub struct SchedulerStats {
     /// padding contract trades for tail-free full-tile kernels — kept
     /// separate so `mean_occupancy` stays an honest live-lane metric.
     pub padded_lane_steps: usize,
-    /// Widest live batch observed.
+    /// Widest live batch observed (total live lanes for the aggregate
+    /// stats; per-wave width for the per-model stats).
     pub peak_lanes: usize,
     /// Lane turnover: admissions into the wave.
     pub admissions: usize,
@@ -126,6 +156,10 @@ pub struct SchedulerStats {
     pub admission_wait_ms: f64,
     /// Sessions evicted by [`ContinuousScheduler::enforce_session_budget`].
     pub evictions: usize,
+    /// Sessions evicted by [`ContinuousScheduler::enforce_idle_budget`]
+    /// (the idle-age policy; reported separately from the count-budget
+    /// evictions).
+    pub idle_evictions: usize,
 }
 
 impl SchedulerStats {
@@ -168,78 +202,219 @@ impl SchedulerStats {
             self.lane_steps as f64 / self.padded_lane_steps as f64
         }
     }
+
+    fn absorb(&mut self, other: &SchedulerStats) {
+        self.batched_steps += other.batched_steps;
+        self.lane_steps += other.lane_steps;
+        self.padded_lane_steps += other.padded_lane_steps;
+        self.peak_lanes = self.peak_lanes.max(other.peak_lanes);
+        self.admissions += other.admissions;
+        self.retirements += other.retirements;
+        self.admission_wait_ms += other.admission_wait_ms;
+        self.evictions += other.evictions;
+        self.idle_evictions += other.idle_evictions;
+    }
 }
 
-/// The continuous-batching lane scheduler for one worker.
+/// The continuous-batching lane scheduler for one worker: one
+/// persistent wave per resident model, a shared lane budget, and one
+/// session table spanning all of them.
 pub struct ContinuousScheduler<'a> {
-    engine: &'a CharLmEngine,
+    /// Engines by [`ModelId`]; `None` where the model is not resident
+    /// on this worker.
+    engines: Vec<Option<&'a CharLmEngine>>,
     sessions: SessionManager,
-    bs: LmBatchState,
-    lanes: Vec<Lane>,
+    /// Waves parallel to `engines` (`Some` exactly where resident).
+    waves: Vec<Option<ModelWave>>,
     pending: VecDeque<StreamItem>,
     done: Vec<StreamDone>,
     toks: Vec<usize>,
     max_lanes: usize,
     mode: SchedulerMode,
     stats: SchedulerStats,
+    model_stats: Vec<SchedulerStats>,
 }
 
 impl<'a> ContinuousScheduler<'a> {
-    /// Continuous-mode scheduler with at most `max_lanes` live lanes.
+    /// Continuous-mode single-model scheduler with at most `max_lanes`
+    /// live lanes (the model gets id 0).
     pub fn new(engine: &'a CharLmEngine, max_lanes: usize) -> Self {
         Self::with_mode(engine, max_lanes, SchedulerMode::Continuous)
     }
 
-    /// A scheduler with an explicit [`SchedulerMode`] (the wave mode is
-    /// the PR 1 baseline kept for A/B runs).
+    /// A single-model scheduler with an explicit [`SchedulerMode`] (the
+    /// wave mode is the PR 1 baseline kept for A/B runs).
     pub fn with_mode(
         engine: &'a CharLmEngine,
         max_lanes: usize,
         mode: SchedulerMode,
     ) -> Self {
+        Self::multi(vec![Some(engine)], max_lanes, mode)
+    }
+
+    /// A multi-model scheduler: `engines[m]` is model `m`'s engine
+    /// instance, `None` where the model is not resident on this worker.
+    /// The `max_lanes` budget is shared across every resident model's
+    /// wave. A worker with no resident model at all is legal (narrow
+    /// residency policies leave such workers idle): it simply never
+    /// admits work.
+    pub fn multi(
+        engines: Vec<Option<&'a CharLmEngine>>,
+        max_lanes: usize,
+        mode: SchedulerMode,
+    ) -> Self {
         assert!(max_lanes >= 1, "need at least one lane");
+        let waves = engines
+            .iter()
+            .map(|e| {
+                e.map(|engine| ModelWave { bs: engine.new_batch_state(0), lanes: Vec::new() })
+            })
+            .collect();
+        let n = engines.len();
         ContinuousScheduler {
-            engine,
+            engines,
             sessions: SessionManager::new(),
-            bs: engine.new_batch_state(0),
-            lanes: Vec::new(),
+            waves,
             pending: VecDeque::new(),
             done: Vec::new(),
             toks: Vec::new(),
             max_lanes,
             mode,
             stats: SchedulerStats::default(),
+            model_stats: vec![SchedulerStats::default(); n],
         }
     }
 
-    /// Enqueue an item for admission (FIFO per session).
+    /// Enqueue an item for admission (FIFO per stream). The item's
+    /// model must be resident on this worker.
     pub fn offer(&mut self, item: StreamItem) {
+        assert!(
+            self.engines
+                .get(item.model as usize)
+                .map(|e| e.is_some())
+                .unwrap_or(false),
+            "model {} not resident on this worker",
+            item.model
+        );
         self.pending.push_back(item);
     }
 
     /// Move pending items into free lanes: at most `max_lanes` live
-    /// lanes, at most one lane per session, earliest pending item per
-    /// session first. In wave mode admission only happens into an empty
-    /// batch. Returns how many lanes were admitted.
+    /// lanes across all waves, at most one lane per `(model, session)`
+    /// stream, earliest pending item per stream first. When free lanes
+    /// are scarce they are split across models in proportion to their
+    /// pending backlog (largest-remainder rounding, ties to the lower
+    /// model id — deterministic), then filled FIFO within each model.
+    /// In wave mode admission only happens into an empty scheduler.
+    /// Returns how many lanes were admitted.
     pub fn admit_ready(&mut self) -> usize {
-        if self.mode == SchedulerMode::Wave && !self.lanes.is_empty() {
+        let live = self.live_lanes();
+        if self.mode == SchedulerMode::Wave && live > 0 {
             return 0;
         }
-        let engine = self.engine;
+        let free = self.max_lanes.saturating_sub(live);
+        if free == 0 || self.pending.is_empty() {
+            self.stats.peak_lanes = self.stats.peak_lanes.max(live);
+            return 0;
+        }
+
+        // Backlog-weighted lane quotas across models: when free lanes
+        // are scarcer than the total backlog, each model gets its
+        // proportional share (largest-remainder rounding, leftover
+        // lanes to the largest remainders, ties to the lower model id
+        // — deterministic). A single resident model degenerates to
+        // `quota = min(free, backlog)`, i.e. plain FIFO.
+        //
+        // Backlog counts only *admittable* work — one per distinct
+        // pending stream that is not already holding a lane, skipping
+        // zero-token items. Raw queue depth would hand quota to a
+        // model whose queued chunks can only wait (all behind one live
+        // lane) while another model's admittable streams starve behind
+        // a zero quota.
+        let n = self.engines.len();
+        let mut backlog = vec![0usize; n];
+        let mut has_empty = false;
+        let mut seen: Vec<SessionKey> = Vec::with_capacity(self.pending.len());
+        for item in &self.pending {
+            if item.tokens.is_empty() {
+                has_empty = true;
+                continue;
+            }
+            let key = (item.model, item.session);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let m = item.model as usize;
+            let laned = self.waves[m]
+                .as_ref()
+                .is_some_and(|w| w.lanes.iter().any(|l| l.session == item.session));
+            if !laned {
+                backlog[m] += 1;
+            }
+        }
+        let total: usize = backlog.iter().sum();
+        let mut quota = vec![0usize; n];
+        if total <= free {
+            quota.copy_from_slice(&backlog);
+        } else {
+            let mut assigned = 0usize;
+            let mut remainders: Vec<(usize, usize)> = Vec::with_capacity(n);
+            for m in 0..n {
+                quota[m] = free * backlog[m] / total;
+                assigned += quota[m];
+                remainders.push((free * backlog[m] % total, m));
+            }
+            remainders.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut leftover = free - assigned;
+            for &(_, m) in &remainders {
+                if leftover == 0 {
+                    break;
+                }
+                if quota[m] < backlog[m] {
+                    quota[m] += 1;
+                    leftover -= 1;
+                }
+            }
+        }
+
         let mut admitted = 0;
         let mut i = 0;
-        while self.lanes.len() < self.max_lanes && i < self.pending.len() {
+        while i < self.pending.len() && (has_empty || quota.iter().any(|&q| q > 0)) {
+            let model = self.pending[i].model;
+            let m = model as usize;
+            let is_empty = self.pending[i].tokens.is_empty();
+            if !is_empty && quota[m] == 0 {
+                i += 1;
+                continue;
+            }
             let sess = self.pending[i].session;
-            if self.lanes.iter().any(|l| l.session == sess) {
-                // A lane for this session is live; its next chunk must
+            if is_empty
+                && self
+                    .pending
+                    .iter()
+                    .take(i)
+                    .any(|p| p.model == model && p.session == sess)
+            {
+                // FIFO per stream: items before index `i` were skipped
+                // this pass, so an empty chunk behind an unadmitted
+                // chunk of its own stream must not complete first.
+                i += 1;
+                continue;
+            }
+            let wave = self.waves[m].as_ref().expect("resident wave");
+            if wave.lanes.iter().any(|l| l.session == sess) {
+                // A lane for this stream is live; its next chunk must
                 // wait so the stream's state advances in order.
                 i += 1;
                 continue;
             }
             let item = self.pending.remove(i).expect("index in bounds");
             if item.tokens.is_empty() {
-                // Nothing to execute: complete immediately.
+                // Nothing to execute: complete immediately (consumes no
+                // lane and no quota).
                 self.done.push(StreamDone {
+                    model: item.model,
                     session: item.session,
                     tokens: 0,
                     nll_bits: 0.0,
@@ -247,98 +422,156 @@ impl<'a> ContinuousScheduler<'a> {
                 });
                 continue;
             }
+            quota[m] -= 1;
+            let wait_ms = item.submitted.elapsed().as_secs_f64() * 1e3;
             self.stats.admissions += 1;
-            self.stats.admission_wait_ms +=
-                item.submitted.elapsed().as_secs_f64() * 1e3;
+            self.stats.admission_wait_ms += wait_ms;
+            self.model_stats[m].admissions += 1;
+            self.model_stats[m].admission_wait_ms += wait_ms;
+            let engine = self.engines[m].expect("resident engine");
+            let wave = self.waves[m].as_mut().expect("resident wave");
             let lane = {
-                let state = &self.sessions.get_or_create(item.session, engine).state;
-                engine.admit_lane(state, &mut self.bs)
+                let state =
+                    &self.sessions.get_or_create(item.model, item.session, engine).state;
+                engine.admit_lane(state, &mut wave.bs)
             };
-            debug_assert_eq!(lane, self.lanes.len());
-            self.lanes.push(Lane {
+            debug_assert_eq!(lane, wave.lanes.len());
+            wave.lanes.push(Lane {
                 session: item.session,
                 tokens: item.tokens,
                 pos: 0,
                 nll: 0.0,
                 submitted: item.submitted,
             });
+            self.model_stats[m].peak_lanes =
+                self.model_stats[m].peak_lanes.max(wave.lanes.len());
             admitted += 1;
         }
-        self.stats.peak_lanes = self.stats.peak_lanes.max(self.lanes.len());
+        self.stats.peak_lanes = self.stats.peak_lanes.max(self.live_lanes());
         admitted
     }
 
-    /// Advance every live lane one token position with a single batched
-    /// step, then scatter finished lanes back to their sessions and
-    /// compact them out. No-op when no lane is live.
+    /// Advance every live lane one token position — one batched step
+    /// per model wave with live lanes — then scatter finished lanes
+    /// back to their sessions and compact them out. Advances the
+    /// session table's logical activity clock by one tick. No-op when
+    /// no lane is live anywhere.
     pub fn step(&mut self) {
-        if self.lanes.is_empty() {
+        if self.live_lanes() == 0 {
             return;
         }
-        debug_assert_eq!(self.bs.batch(), self.lanes.len());
-        let engine = self.engine;
-        self.toks.clear();
-        self.toks.extend(self.lanes.iter().map(|l| l.tokens[l.pos]));
-        engine.step_tokens(&self.toks, &mut self.bs);
-        self.stats.batched_steps += 1;
-        self.stats.lane_steps += self.lanes.len();
-        self.stats.padded_lane_steps += self.bs.padded_batch();
-        for (lane, l) in self.lanes.iter_mut().enumerate() {
-            if let Some(&next) = l.tokens.get(l.pos + 1) {
-                l.nll += nll_bits(self.bs.logits.row(lane), next);
+        self.sessions.tick();
+        for m in 0..self.waves.len() {
+            let Some(wave) = self.waves[m].as_mut() else { continue };
+            if wave.lanes.is_empty() {
+                continue;
             }
-            l.pos += 1;
-        }
-        if self.lanes.iter().any(|l| l.pos >= l.tokens.len()) {
-            let mut keep = Vec::with_capacity(self.lanes.len());
-            for (lane, l) in self.lanes.iter().enumerate() {
-                let finished = l.pos >= l.tokens.len();
-                keep.push(!finished);
-                if finished {
-                    let session = self.sessions.get_or_create(l.session, engine);
-                    engine.scatter_session(&self.bs, &mut session.state, lane);
-                    session.tokens_seen += l.tokens.len();
-                    session.nll_bits += l.nll;
-                    self.stats.retirements += 1;
-                    self.done.push(StreamDone {
-                        session: l.session,
-                        tokens: l.tokens.len(),
-                        nll_bits: l.nll,
-                        latency_ms: l.submitted.elapsed().as_secs_f64() * 1e3,
-                    });
+            let engine = self.engines[m].expect("resident engine");
+            debug_assert_eq!(wave.bs.batch(), wave.lanes.len());
+            self.toks.clear();
+            self.toks.extend(wave.lanes.iter().map(|l| l.tokens[l.pos]));
+            engine.step_tokens(&self.toks, &mut wave.bs);
+            self.stats.batched_steps += 1;
+            self.stats.lane_steps += wave.lanes.len();
+            self.stats.padded_lane_steps += wave.bs.padded_batch();
+            self.model_stats[m].batched_steps += 1;
+            self.model_stats[m].lane_steps += wave.lanes.len();
+            self.model_stats[m].padded_lane_steps += wave.bs.padded_batch();
+            for (lane, l) in wave.lanes.iter_mut().enumerate() {
+                if let Some(&next) = l.tokens.get(l.pos + 1) {
+                    l.nll += nll_bits(wave.bs.logits.row(lane), next);
                 }
+                l.pos += 1;
             }
-            engine.compact_lanes(&mut self.bs, &keep);
-            let mut it = keep.into_iter();
-            self.lanes.retain(|_| it.next().unwrap());
+            if wave.lanes.iter().any(|l| l.pos >= l.tokens.len()) {
+                let mut keep = Vec::with_capacity(wave.lanes.len());
+                for (lane, l) in wave.lanes.iter().enumerate() {
+                    let finished = l.pos >= l.tokens.len();
+                    keep.push(!finished);
+                    if finished {
+                        let session =
+                            self.sessions.get_or_create(m as ModelId, l.session, engine);
+                        engine.scatter_session(&wave.bs, &mut session.state, lane);
+                        session.tokens_seen += l.tokens.len();
+                        session.nll_bits += l.nll;
+                        self.stats.retirements += 1;
+                        self.model_stats[m].retirements += 1;
+                        self.done.push(StreamDone {
+                            model: m as ModelId,
+                            session: l.session,
+                            tokens: l.tokens.len(),
+                            nll_bits: l.nll,
+                            latency_ms: l.submitted.elapsed().as_secs_f64() * 1e3,
+                        });
+                    }
+                }
+                engine.compact_lanes(&mut wave.bs, &keep);
+                let mut it = keep.into_iter();
+                wave.lanes.retain(|_| it.next().unwrap());
+            }
         }
+    }
+
+    /// The protection set for eviction: streams holding a lane, streams
+    /// with pending chunks, plus `also_protected`.
+    fn protected_keys(&self, also_protected: &[SessionKey]) -> Vec<SessionKey> {
+        let mut protected: Vec<SessionKey> = Vec::new();
+        for (m, wave) in self.waves.iter().enumerate() {
+            if let Some(wave) = wave {
+                protected.extend(wave.lanes.iter().map(|l| (m as ModelId, l.session)));
+            }
+        }
+        protected.extend(self.pending.iter().map(|p| (p.model, p.session)));
+        protected.extend_from_slice(also_protected);
+        protected
     }
 
     /// Enforce a resident-session memory budget: evict the
     /// longest-seen *idle* sessions until at most `keep_at_most`
-    /// remain. Sessions currently holding a lane, sessions with
-    /// pending chunks, and the ids in `also_protected` are never
-    /// evicted — callers pass the sessions whose next chunk is already
-    /// queued at the ingest layer ([`ShardRouter::queued_sessions`]),
-    /// so a stream with any in-flight work is never reset. The count
-    /// can therefore stay above the budget while the wave is wide.
+    /// remain (across every model). Streams currently holding a lane,
+    /// streams with pending chunks, and the keys in `also_protected`
+    /// are never evicted — callers pass the streams whose next chunk is
+    /// already queued at the ingest layer
+    /// ([`ShardRouter::queued_sessions`]), so a stream with any
+    /// in-flight work is never reset. The count can therefore stay
+    /// above the budget while the waves are wide.
     ///
     /// Evicting a truly idle session *is* a stream reset: if a chunk
     /// for it arrives later, it restarts from zero state. Returns the
-    /// evicted ids — a deterministic pure function of the session
+    /// evicted keys — a deterministic pure function of the session
     /// table and the protected sets (see
     /// [`SessionManager::evict_longest_protected`]).
     pub fn enforce_session_budget(
         &mut self,
         keep_at_most: usize,
-        also_protected: &[SessionId],
-    ) -> Vec<SessionId> {
-        let mut protected: Vec<SessionId> =
-            self.lanes.iter().map(|l| l.session).collect();
-        protected.extend(self.pending.iter().map(|p| p.session));
-        protected.extend_from_slice(also_protected);
+        also_protected: &[SessionKey],
+    ) -> Vec<SessionKey> {
+        let protected = self.protected_keys(also_protected);
         let evicted = self.sessions.evict_longest_protected(keep_at_most, &protected);
         self.stats.evictions += evicted.len();
+        for &(m, _) in &evicted {
+            self.model_stats[m as usize].evictions += 1;
+        }
+        evicted
+    }
+
+    /// Enforce the idle-age policy: evict every unprotected session
+    /// idle for more than `max_idle` scheduler ticks (one tick = one
+    /// [`Self::step`] with live work; a session's clock resets at
+    /// admission and retirement). Protection rules match
+    /// [`Self::enforce_session_budget`]. Returns the evicted keys in
+    /// deterministic order (see [`SessionManager::evict_idle_protected`]).
+    pub fn enforce_idle_budget(
+        &mut self,
+        max_idle: u64,
+        also_protected: &[SessionKey],
+    ) -> Vec<SessionKey> {
+        let protected = self.protected_keys(also_protected);
+        let evicted = self.sessions.evict_idle_protected(max_idle, &protected);
+        self.stats.idle_evictions += evicted.len();
+        for &(m, _) in &evicted {
+            self.model_stats[m as usize].idle_evictions += 1;
+        }
         evicted
     }
 
@@ -350,12 +583,22 @@ impl<'a> ContinuousScheduler<'a> {
     /// True while anything is live or waiting (including buffered
     /// completions not yet drained).
     pub fn has_live_work(&self) -> bool {
-        !self.lanes.is_empty() || !self.pending.is_empty() || !self.done.is_empty()
+        self.live_lanes() > 0 || !self.pending.is_empty() || !self.done.is_empty()
     }
 
-    /// Number of live lanes in the wave.
+    /// Number of live lanes across every model wave.
     pub fn live_lanes(&self) -> usize {
-        self.lanes.len()
+        self.waves.iter().flatten().map(|w| w.lanes.len()).sum()
+    }
+
+    /// Number of live lanes in one model's wave (0 for non-resident
+    /// models).
+    pub fn live_lanes_model(&self, model: ModelId) -> usize {
+        self.waves
+            .get(model as usize)
+            .and_then(|w| w.as_ref())
+            .map(|w| w.lanes.len())
+            .unwrap_or(0)
     }
 
     /// Number of items queued for admission.
@@ -363,15 +606,38 @@ impl<'a> ContinuousScheduler<'a> {
         self.pending.len()
     }
 
-    /// Current width of the underlying batch state (must always equal
+    /// Total width of the underlying batch states (must always equal
     /// [`Self::live_lanes`] — an invariant the test suite checks).
     pub fn batch_width(&self) -> usize {
-        self.bs.batch()
+        self.waves.iter().flatten().map(|w| w.bs.batch()).sum()
     }
 
-    /// Session ids of the live lanes, in lane order.
+    /// Width of one model's batch state (must equal
+    /// [`Self::live_lanes_model`]).
+    pub fn batch_width_model(&self, model: ModelId) -> usize {
+        self.waves
+            .get(model as usize)
+            .and_then(|w| w.as_ref())
+            .map(|w| w.bs.batch())
+            .unwrap_or(0)
+    }
+
+    /// Session ids of the live lanes, wave order then lane order (the
+    /// single-model view; see [`Self::lane_model_sessions`]).
     pub fn lane_sessions(&self) -> Vec<SessionId> {
-        self.lanes.iter().map(|l| l.session).collect()
+        self.lane_model_sessions().into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// `(model, session)` keys of the live lanes, wave order then lane
+    /// order.
+    pub fn lane_model_sessions(&self) -> Vec<SessionKey> {
+        let mut out = Vec::new();
+        for (m, wave) in self.waves.iter().enumerate() {
+            if let Some(wave) = wave {
+                out.extend(wave.lanes.iter().map(|l| (m as ModelId, l.session)));
+            }
+        }
+        out
     }
 
     /// The scheduling discipline this scheduler runs.
@@ -379,9 +645,20 @@ impl<'a> ContinuousScheduler<'a> {
         self.mode
     }
 
-    /// Snapshot of the scheduler's behaviour counters.
+    /// Snapshot of the scheduler's aggregate behaviour counters.
     pub fn stats(&self) -> SchedulerStats {
         self.stats
+    }
+
+    /// Per-model behaviour counters, indexed by [`ModelId`]
+    /// (non-resident models report zeros).
+    pub fn model_stats(&self) -> &[SchedulerStats] {
+        &self.model_stats
+    }
+
+    /// Number of model slots this scheduler was built with.
+    pub fn n_models(&self) -> usize {
+        self.engines.len()
     }
 
     /// The worker's session table (persistent stream states).
@@ -396,6 +673,9 @@ impl<'a> ContinuousScheduler<'a> {
 /// arrival. No threads, no wall clock — the same trace, mode, and tick
 /// always produce the same schedule, so occupancy comparisons and
 /// bit-exactness assertions are replayable.
+///
+/// Single-model: every request in the trace must carry model 0 (use
+/// [`simulate_multi_shard_trace`] for mixed-model traces).
 ///
 /// Returns the scheduler (for stats and final session states) and all
 /// completions in completion order.
@@ -415,6 +695,7 @@ pub fn simulate_trace<'a>(
         while next < trace.requests.len() && trace.requests[next].arrival_ms <= now_ms {
             let r = &trace.requests[next];
             sched.offer(StreamItem {
+                model: r.model,
                 session: r.id,
                 tokens: r.tokens.clone(),
                 submitted: Instant::now(),
@@ -439,12 +720,13 @@ pub fn simulate_trace<'a>(
 }
 
 /// Configuration of one multi-worker shard pool (threaded server and
-/// virtual-time simulator share this shape).
+/// virtual-time simulators share this shape).
 #[derive(Debug, Clone)]
 pub struct ShardConfig {
-    /// Worker (shard) count; each worker owns one persistent wave.
+    /// Worker (shard) count; each worker owns one persistent wave per
+    /// resident model.
     pub workers: usize,
-    /// Maximum live lanes per worker wave.
+    /// Maximum live lanes per worker, shared across its model waves.
     pub max_lanes: usize,
     /// Scheduling discipline of every worker.
     pub mode: SchedulerMode,
@@ -454,6 +736,10 @@ pub struct ShardConfig {
     /// Per-worker cap on resident sessions (`None` = unbounded); see
     /// [`ContinuousScheduler::enforce_session_budget`].
     pub session_budget: Option<usize>,
+    /// Evict sessions idle for more than this many scheduler ticks
+    /// (`None` = never); see
+    /// [`ContinuousScheduler::enforce_idle_budget`].
+    pub evict_idle_after: Option<u64>,
     /// Virtual milliseconds one batched step consumes in simulation.
     pub tick_ms: f64,
 }
@@ -466,12 +752,13 @@ impl Default for ShardConfig {
             mode: SchedulerMode::Continuous,
             steal: true,
             session_budget: None,
+            evict_idle_after: None,
             tick_ms: 1.0,
         }
     }
 }
 
-/// What one [`simulate_shard_trace`] run reports.
+/// What one shard-pool simulation reports.
 #[derive(Debug, Clone)]
 pub struct ShardSimReport {
     /// Worker count the pool ran with.
@@ -481,16 +768,24 @@ pub struct ShardSimReport {
     pub completions: Vec<StreamDone>,
     /// Per-worker scheduler counters.
     pub worker_stats: Vec<SchedulerStats>,
+    /// Per-model scheduler counters aggregated across workers (indexed
+    /// by [`ModelId`]; a single-model run reports one entry).
+    pub per_model: Vec<SchedulerStats>,
     /// Steal invocations per worker (as thief).
     pub steal_events: Vec<usize>,
     /// Sessions stolen per worker (as thief).
     pub stolen_sessions: Vec<usize>,
+    /// Sessions stolen per model.
+    pub stolen_by_model: Vec<usize>,
     /// Virtual ticks in which at least one worker stepped — the
     /// makespan of the replay.
     pub ticks: usize,
-    /// Sessions evicted per worker under the session budget, in
+    /// Streams evicted per worker under the session-count budget, in
     /// eviction order.
-    pub evicted: Vec<Vec<SessionId>>,
+    pub evicted: Vec<Vec<SessionKey>>,
+    /// Streams evicted per worker under the idle-age policy, in
+    /// eviction order.
+    pub idle_evicted: Vec<Vec<SessionKey>>,
 }
 
 impl ShardSimReport {
@@ -517,22 +812,27 @@ impl ShardSimReport {
         self.stolen_sessions.iter().sum()
     }
 
-    /// Total sessions evicted under the session budget.
+    /// Total sessions evicted under the session-count budget.
     pub fn total_evicted(&self) -> usize {
         self.evicted.iter().map(|e| e.len()).sum()
     }
+
+    /// Total sessions evicted under the idle-age policy.
+    pub fn total_idle_evicted(&self) -> usize {
+        self.idle_evicted.iter().map(|e| e.len()).sum()
+    }
 }
 
-/// Deterministic virtual-time replay of a [`RequestTrace`] through a
-/// whole sharded worker pool: `cfg.workers` schedulers fed by one
-/// [`ShardRouter`], all driven from a single thread on a virtual clock
-/// (one batched step per worker per tick). Each tick, workers ingest in
-/// index order — draining their own queue first, then stealing whole
-/// unbound sessions from the most-backlogged peer — then every worker
-/// with live lanes steps once. Identical inputs always produce
-/// identical schedules, steal decisions, and completions, so the
-/// sharded-serving suite can assert bit-exactness and occupancy wins
-/// reproducibly.
+/// Deterministic virtual-time replay of a single-model [`RequestTrace`]
+/// through a whole sharded worker pool: `cfg.workers` schedulers fed by
+/// one [`ShardRouter`], all driven from a single thread on a virtual
+/// clock (one batched step per worker per tick). Each tick, workers
+/// ingest in index order — draining their own queue first, then
+/// stealing whole unbound sessions from the most-backlogged peer — then
+/// every worker with live lanes steps once. Identical inputs always
+/// produce identical schedules, steal decisions, and completions, so
+/// the sharded-serving suite can assert bit-exactness and occupancy
+/// wins reproducibly.
 ///
 /// Returns the schedulers (for final session states) and the report.
 pub fn simulate_shard_trace<'a>(
@@ -540,14 +840,41 @@ pub fn simulate_shard_trace<'a>(
     trace: &RequestTrace,
     cfg: &ShardConfig,
 ) -> (Vec<ContinuousScheduler<'a>>, ShardSimReport) {
+    let engines = std::slice::from_ref(engine);
+    let residency = vec![(0..cfg.workers).collect::<Vec<usize>>()];
+    simulate_multi_shard_trace(engines, &residency, trace, cfg)
+}
+
+/// [`simulate_shard_trace`] generalized to the model registry: one
+/// engine instance per model (index = [`ModelId`]; a single instance
+/// can serve every simulated worker — the replay is single-threaded),
+/// plus the per-model resident worker sets the router should respect
+/// (the shape [`ModelRegistry::residency`] produces). Every worker
+/// hosts one wave per model resident on it; stealing only moves a
+/// session to workers holding its model.
+pub fn simulate_multi_shard_trace<'a>(
+    engines: &'a [CharLmEngine],
+    residency: &[Vec<usize>],
+    trace: &RequestTrace,
+    cfg: &ShardConfig,
+) -> (Vec<ContinuousScheduler<'a>>, ShardSimReport) {
     assert!(cfg.tick_ms > 0.0);
     assert!(cfg.workers > 0);
-    let router = ShardRouter::new(cfg.workers, cfg.steal);
+    assert_eq!(engines.len(), residency.len(), "one residency set per model");
+    let router = ShardRouter::with_residency(cfg.workers, cfg.steal, residency.to_vec());
     let mut scheds: Vec<ContinuousScheduler<'a>> = (0..cfg.workers)
-        .map(|_| ContinuousScheduler::with_mode(engine, cfg.max_lanes, cfg.mode))
+        .map(|w| {
+            let per_worker: Vec<Option<&CharLmEngine>> = engines
+                .iter()
+                .enumerate()
+                .map(|(m, e)| residency[m].contains(&w).then_some(e))
+                .collect();
+            ContinuousScheduler::multi(per_worker, cfg.max_lanes, cfg.mode)
+        })
         .collect();
     let mut completions = Vec::new();
-    let mut evicted: Vec<Vec<SessionId>> = vec![Vec::new(); cfg.workers];
+    let mut evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
+    let mut idle_evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
     let mut steal_storm_guard = 0usize;
     let mut next = 0usize;
     let mut now_ms = 0f64;
@@ -557,6 +884,7 @@ pub fn simulate_shard_trace<'a>(
         while next < trace.requests.len() && trace.requests[next].arrival_ms <= now_ms {
             let r = &trace.requests[next];
             router.submit(StreamItem {
+                model: r.model,
                 session: r.id,
                 tokens: r.tokens.clone(),
                 submitted: Instant::now(),
@@ -591,10 +919,15 @@ pub fn simulate_shard_trace<'a>(
                 sched.step();
                 stepped = true;
             }
-            if let Some(budget) = cfg.session_budget {
-                evicted[w].extend(
-                    sched.enforce_session_budget(budget, &router.queued_sessions(w)),
-                );
+            if cfg.session_budget.is_some() || cfg.evict_idle_after.is_some() {
+                let queued = router.queued_sessions(w);
+                if let Some(budget) = cfg.session_budget {
+                    evicted[w].extend(sched.enforce_session_budget(budget, &queued));
+                }
+                if let Some(max_idle) = cfg.evict_idle_after {
+                    idle_evicted[w]
+                        .extend(sched.enforce_idle_budget(max_idle, &queued));
+                }
             }
             completions.append(&mut sched.take_completed());
         }
@@ -614,16 +947,40 @@ pub fn simulate_shard_trace<'a>(
             assert!(steal_storm_guard < 1_000_000, "shard simulation failed to drain");
         }
     }
+    let mut per_model = vec![SchedulerStats::default(); engines.len()];
+    for sched in &scheds {
+        for (m, st) in sched.model_stats().iter().enumerate() {
+            per_model[m].absorb(st);
+        }
+    }
     let report = ShardSimReport {
         workers: cfg.workers,
         completions,
         worker_stats: scheds.iter().map(|s| s.stats()).collect(),
+        per_model,
         steal_events: router.steal_events(),
         stolen_sessions: router.stolen_sessions(),
+        stolen_by_model: router.stolen_by_model(engines.len()),
         ticks,
         evicted,
+        idle_evicted,
     };
     (scheds, report)
+}
+
+/// Convenience wrapper: simulate a mixed-model trace straight from a
+/// [`ModelRegistry`] (builds one engine instance per model and the
+/// residency map for `cfg.workers`).
+pub fn simulate_registry_trace(
+    registry: &ModelRegistry<'_>,
+    trace: &RequestTrace,
+    cfg: &ShardConfig,
+) -> ShardSimReport {
+    let engines = registry.instantiate_all();
+    let residency = registry.residency(cfg.workers);
+    let (_scheds, report) =
+        simulate_multi_shard_trace(&engines, &residency, trace, cfg);
+    report
 }
 
 #[cfg(test)]
@@ -644,7 +1001,11 @@ mod tests {
     }
 
     fn item(session: SessionId, tokens: Vec<usize>) -> StreamItem {
-        StreamItem { session, tokens, submitted: Instant::now() }
+        StreamItem { model: 0, session, tokens, submitted: Instant::now() }
+    }
+
+    fn item_m(model: ModelId, session: SessionId, tokens: Vec<usize>) -> StreamItem {
+        StreamItem { model, session, tokens, submitted: Instant::now() }
     }
 
     #[test]
@@ -746,7 +1107,7 @@ mod tests {
         assert_eq!(sched.lane_sessions(), vec![3, 4]);
         // Budget 0: only the idle sessions (1, 2) may go.
         let evicted = sched.enforce_session_budget(0, &[]);
-        assert_eq!(evicted, vec![2, 1], "longest-first, ties by id desc");
+        assert_eq!(evicted, vec![(0, 2), (0, 1)], "longest-first, ties by id desc");
         assert!(sched.sessions().get(3).is_some());
         assert!(sched.sessions().get(4).is_some());
         assert_eq!(sched.stats().evictions, 2);
@@ -777,8 +1138,159 @@ mod tests {
         }
         // Session 1 is the longest idle stream but its next chunk is
         // "in flight" upstream: only 2 may be evicted.
-        let evicted = sched.enforce_session_budget(0, &[1]);
-        assert_eq!(evicted, vec![2]);
+        let evicted = sched.enforce_session_budget(0, &[(0, 1)]);
+        assert_eq!(evicted, vec![(0, 2)]);
         assert!(sched.sessions().get(1).is_some());
+    }
+
+    #[test]
+    fn idle_budget_ages_out_retired_sessions_only() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 1);
+        // Session 1 retires early, session 2 keeps stepping.
+        sched.offer(item(1, vec![1; 2]));
+        sched.offer(item(2, vec![2; 12]));
+        let mut guard = 0;
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+            let evicted = sched.enforce_idle_budget(4, &[]);
+            // Session 2 is live (or just retired, hence active) the
+            // whole run: only 1 may ever age out.
+            for (m, id) in evicted {
+                assert_eq!((m, id), (0, 1), "only the idle session may age out");
+            }
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert!(sched.sessions().get(1).is_none(), "session 1 must have aged out");
+        assert!(sched.sessions().get(2).is_some());
+        assert_eq!(sched.stats().idle_evictions, 1);
+        assert_eq!(sched.stats().evictions, 0);
+    }
+
+    #[test]
+    fn waves_never_mix_models_and_share_the_lane_budget() {
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let e1 = lm.engine(StackEngine::Hybrid, None, QuantizeOptions::default());
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0), Some(&e1)], 4, SchedulerMode::Continuous);
+        for s in 0..3u64 {
+            sched.offer(item_m(0, s, vec![1; 6]));
+            sched.offer(item_m(1, 100 + s, vec![2; 6]));
+        }
+        let mut guard = 0;
+        while sched.has_live_work() {
+            sched.admit_ready();
+            // Lane budget shared across waves; per-wave widths honest.
+            assert!(sched.live_lanes() <= 4);
+            assert_eq!(
+                sched.live_lanes(),
+                sched.live_lanes_model(0) + sched.live_lanes_model(1)
+            );
+            assert_eq!(sched.batch_width_model(0), sched.live_lanes_model(0));
+            assert_eq!(sched.batch_width_model(1), sched.live_lanes_model(1));
+            // Lanes grouped per model, no cross-model keys.
+            for (m, s) in sched.lane_model_sessions() {
+                assert_eq!(m == 1, s >= 100, "lane in the wrong model wave");
+            }
+            sched.step();
+            sched.take_completed();
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert_eq!(sched.stats().retirements, 6);
+        assert_eq!(sched.model_stats()[0].retirements, 3);
+        assert_eq!(sched.model_stats()[1].retirements, 3);
+        // 6 tokens x 3 sessions per model.
+        assert_eq!(sched.model_stats()[0].lane_steps, 18);
+        assert_eq!(sched.model_stats()[1].lane_steps, 18);
+    }
+
+    #[test]
+    fn admission_splits_scarce_lanes_by_backlog() {
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let e1 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0), Some(&e1)], 4, SchedulerMode::Continuous);
+        // Backlog 3:1 across models, 4 free lanes: the whole backlog
+        // fits, so model 0 gets three lanes and model 1 one.
+        for s in 0..3u64 {
+            sched.offer(item_m(0, s, vec![1; 4]));
+        }
+        sched.offer(item_m(1, 9, vec![2; 4]));
+        assert_eq!(sched.admit_ready(), 4);
+        assert_eq!(sched.live_lanes_model(0), 3);
+        assert_eq!(sched.live_lanes_model(1), 1);
+
+        // Scarcer still: 6 pending of model 0, 2 of model 1, but only
+        // 4 lanes total — the proportional split is 3:1 (4·6/8 : 4·2/8),
+        // so the smaller model is never starved by a dominant backlog.
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0), Some(&e1)], 4, SchedulerMode::Continuous);
+        for s in 0..6u64 {
+            sched.offer(item_m(0, 10 + s, vec![1; 4]));
+        }
+        for s in 0..2u64 {
+            sched.offer(item_m(1, 20 + s, vec![2; 4]));
+        }
+        assert_eq!(sched.admit_ready(), 4);
+        assert_eq!(sched.live_lanes_model(0), 3);
+        assert_eq!(sched.live_lanes_model(1), 1);
+    }
+
+    #[test]
+    fn blocked_chunks_do_not_hoard_admission_quota() {
+        // Model 0's queue is deep — but every queued chunk belongs to
+        // the one session already holding a lane, so none of it is
+        // admittable. The free lane must go to model 1's idle streams
+        // (raw queue depth would give model 0 the whole quota and
+        // starve model 1 until the live chunk retires).
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let e1 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0), Some(&e1)], 2, SchedulerMode::Continuous);
+        sched.offer(item_m(0, 7, vec![1; 8]));
+        assert_eq!(sched.admit_ready(), 1);
+        for _ in 0..3 {
+            sched.offer(item_m(0, 7, vec![2; 4])); // chunks behind the live lane
+        }
+        sched.offer(item_m(1, 100, vec![3; 4]));
+        sched.offer(item_m(1, 101, vec![3; 4]));
+        assert_eq!(sched.admit_ready(), 1, "the free lane must not sit empty");
+        assert_eq!(sched.live_lanes_model(0), 1);
+        assert_eq!(sched.live_lanes_model(1), 1);
+        assert_eq!(sched.lane_model_sessions(), vec![(0, 7), (1, 100)]);
+    }
+
+    #[test]
+    fn multi_shard_simulation_is_deterministic() {
+        let lm = tiny_lm();
+        let engines =
+            vec![
+                lm.engine(StackEngine::Float, None, QuantizeOptions::default()),
+                lm.engine(StackEngine::Hybrid, None, QuantizeOptions::default()),
+            ];
+        let residency = vec![vec![0, 1], vec![0, 1]];
+        let mut trace = RequestTrace::generate(20, 900.0, 8, VOCAB, 51);
+        trace.assign_models(|id| (id % 2) as ModelId);
+        let cfg = ShardConfig { workers: 2, max_lanes: 4, ..ShardConfig::default() };
+        let (_s1, r1) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+        let (_s2, r2) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+        assert_eq!(r1.completions.len(), 20);
+        assert_eq!(r1.ticks, r2.ticks);
+        assert_eq!(r1.stolen_by_model, r2.stolen_by_model);
+        for (a, b) in r1.completions.iter().zip(&r2.completions) {
+            assert_eq!((a.model, a.session), (b.model, b.session));
+            assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
+        }
+        // Per-model counters cover the whole trace.
+        let tokens: usize = trace.requests.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(r1.per_model.iter().map(|s| s.lane_steps).sum::<usize>(), tokens);
     }
 }

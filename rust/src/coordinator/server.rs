@@ -1,25 +1,34 @@
 //! The streaming serving loop: a sharded worker pool with work
-//! stealing, each worker owning an engine instance, its sessions, and
-//! one persistent continuously-batched wave; open-loop trace replay
-//! with end-to-end latency accounting.
+//! stealing, each worker owning engine instances for its resident
+//! models, its sessions, and one persistent continuously-batched wave
+//! per model; open-loop trace replay with end-to-end latency
+//! accounting.
 //!
 //! Execution is batch-major and *continuously batched*: each worker
-//! runs one persistent wave through a [`ContinuousScheduler`] — newly
+//! runs its persistent waves through a [`ContinuousScheduler`] — newly
 //! arrived sessions are admitted into free lanes between token
-//! positions, every step advances all live lanes through a single
-//! batched stack step (one int8 GEMM per gate instead of per-session
-//! matvecs), and lanes whose items finish are scattered back to their
-//! sessions and compacted out so the GEMM only ever touches live rows.
+//! positions, every step advances all live lanes of a model through a
+//! single batched stack step (one int8 GEMM per gate instead of
+//! per-session matvecs), and lanes whose items finish are scattered
+//! back to their sessions and compacted out so the GEMM only ever
+//! touches live rows. Lanes never mix models; the per-worker lane
+//! budget is shared across resident models by backlog.
 //!
-//! Ingest is sharded: the driver hash-routes each request's session to
-//! a home queue on the shared [`ShardRouter`]; workers drain their own
-//! queue between token positions, and a worker that runs dry *steals*
-//! whole unbound sessions from the most-backlogged peer, so occupancy
-//! survives skewed session routing. A worker only ingests up to its
-//! free lane capacity, which deliberately leaves overload in the shared
-//! queue where peers can take it. The PR 1 wave-at-a-time discipline is
-//! kept as [`SchedulerMode::Wave`] for A/B comparison, and
-//! `steal: false` reproduces static sticky routing.
+//! Ingest is sharded: the driver hash-routes each request's
+//! `(model, session)` stream to a home queue on the shared
+//! [`ShardRouter`] (among the model's resident workers); workers drain
+//! their own queue between token positions, and a worker that runs dry
+//! *steals* whole unbound sessions of models it hosts from the most
+//! backlogged peer, so occupancy survives skewed session routing. A
+//! worker only ingests up to its free lane capacity, which deliberately
+//! leaves overload in the shared queue where peers can take it. The
+//! PR 1 wave-at-a-time discipline is kept as [`SchedulerMode::Wave`]
+//! for A/B comparison, and `steal: false` reproduces static sticky
+//! routing.
+//!
+//! A [`Server`] binds either one model ([`Server::new`]) or a whole
+//! [`ModelRegistry`] ([`Server::with_registry`]) to the pool; the
+//! single-model constructor is just a one-entry registry.
 
 use std::sync::mpsc::{channel, Sender};
 use std::time::Instant;
@@ -28,29 +37,33 @@ use anyhow::Result;
 
 use crate::eval::metrics::LatencyStats;
 use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
-use crate::model::lm::CharLm;
+use crate::model::lm::{CharLm, CharLmEngine};
 use crate::workload::synth::RequestTrace;
 use super::batcher::BatchPolicy;
-use super::metrics::{ServingReport, WorkerLoad};
+use super::metrics::{ModelLoad, ServingReport, WorkerLoad};
+use super::registry::{ModelId, ModelRegistry, ModelSpec, Residency};
 use super::router::{ShardPoll, ShardRouter};
 use super::scheduler::{ContinuousScheduler, SchedulerMode, SchedulerStats, StreamItem};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Worker (shard) count; each worker owns one persistent wave.
+    /// Worker (shard) count; each worker owns one persistent wave per
+    /// resident model.
     pub workers: usize,
     /// Batch policy. Only `max_batch` is consulted by the server: it
-    /// bounds the live lanes per worker wave (and how many items one
-    /// ingest pull may take). `max_wait` is a [`Batcher`] dial with no
-    /// effect on this path — sharded ingest is non-blocking between
-    /// token positions.
+    /// bounds the live lanes per worker (shared across that worker's
+    /// model waves, and how many items one ingest pull may take).
+    /// `max_wait` is a [`Batcher`] dial with no effect on this path —
+    /// sharded ingest is non-blocking between token positions.
     ///
     /// [`Batcher`]: super::batcher::Batcher
     pub batch: BatchPolicy,
-    /// Execution engine for every worker.
+    /// Execution engine for the single-model constructor
+    /// ([`Server::new`]); registry deployments carry an engine per
+    /// model instead.
     pub engine: StackEngine,
-    /// Quantization options used to build the engine.
+    /// Quantization options for the single-model constructor.
     pub opts: QuantizeOptions,
     /// Scheduling discipline (continuous batching by default).
     pub mode: SchedulerMode,
@@ -61,6 +74,11 @@ pub struct ServerConfig {
     /// longest-seen idle sessions are evicted between token positions;
     /// sessions holding or awaiting a lane are never evicted.
     pub session_budget: Option<usize>,
+    /// Evict sessions idle for more than this many batched token
+    /// positions (`None` = never) — the idle-age twin of
+    /// `session_budget`, matching real memory pressure for stream
+    /// state.
+    pub evict_idle_after: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +91,7 @@ impl Default for ServerConfig {
             mode: SchedulerMode::Continuous,
             steal: true,
             session_budget: None,
+            evict_idle_after: None,
         }
     }
 }
@@ -90,54 +109,98 @@ struct WorkerSummary {
     batches: usize,
     items: usize,
     stats: SchedulerStats,
+    model_stats: Vec<SchedulerStats>,
+    /// Resident sessions per model at worker exit.
+    model_sessions: Vec<usize>,
 }
 
-/// The server: binds a model + engine choice to a worker pool.
+/// The server: binds a model registry to a worker pool. The
+/// single-model constructor wraps the model into a one-entry registry,
+/// so both deployments run the identical pool.
 pub struct Server<'a> {
-    lm: &'a CharLm,
-    stats: Option<&'a [CalibrationStats]>,
+    registry: ModelRegistry<'a>,
     /// The pool configuration the server runs with.
     pub config: ServerConfig,
 }
 
 impl<'a> Server<'a> {
-    /// Bind a model (and, for the integer engine, its calibration
-    /// stats) to a pool configuration.
+    /// Bind one model (and, for the integer engine, its calibration
+    /// stats) to a pool configuration. Panics with "integer engine
+    /// needs calibration stats" when they are missing.
     pub fn new(
         lm: &'a CharLm,
         stats: Option<&'a [CalibrationStats]>,
         config: ServerConfig,
     ) -> Self {
-        if config.engine == StackEngine::Integer {
-            assert!(stats.is_some(), "integer engine needs calibration stats");
-        }
-        Server { lm, stats, config }
+        let mut registry = ModelRegistry::new();
+        registry.register(ModelSpec {
+            name: "default".into(),
+            lm,
+            engine: config.engine,
+            stats,
+            opts: config.opts,
+            residency: Residency::All,
+        });
+        Server { registry, config }
+    }
+
+    /// Bind a whole model registry to a pool configuration. Requests
+    /// are tagged with [`ModelId`]s; each worker instantiates engines
+    /// for the models resident on it and runs one wave per model.
+    pub fn with_registry(registry: ModelRegistry<'a>, config: ServerConfig) -> Self {
+        assert!(!registry.is_empty(), "registry must hold at least one model");
+        Server { registry, config }
+    }
+
+    /// The registry this server serves.
+    pub fn registry(&self) -> &ModelRegistry<'a> {
+        &self.registry
     }
 
     /// Replay a trace open-loop (arrival times compressed by
-    /// `speedup`), return the serving report.
+    /// `speedup`), return the serving report. Fails cleanly if the
+    /// trace names a model the registry does not hold (submitting such
+    /// a request mid-replay would otherwise panic the driver thread
+    /// while workers wait for close).
     pub fn run_trace(&self, trace: &RequestTrace, speedup: f64) -> Result<ServingReport> {
-        let router = ShardRouter::new(self.config.workers, self.config.steal);
+        let workers = self.config.workers;
+        let n_models = self.registry.len();
+        for req in &trace.requests {
+            anyhow::ensure!(
+                (req.model as usize) < n_models,
+                "request for session {} names model {} but only {} model(s) are registered",
+                req.id,
+                req.model,
+                n_models
+            );
+        }
+        let residency = self.registry.residency(workers);
+        let router = ShardRouter::with_residency(workers, self.config.steal, residency.clone());
         let (done_tx, done_rx) = channel::<Completion>();
-        let engine_label = self.config.engine.label();
+        let engine_label = if n_models == 1 {
+            self.registry.engine_kind(0).label()
+        } else {
+            "multi"
+        };
 
         let wall_start = Instant::now();
         let summaries: Vec<WorkerSummary> = std::thread::scope(|scope| {
             let router = &router;
+            let registry = &self.registry;
             let mut handles = Vec::new();
-            for w in 0..self.config.workers {
+            for w in 0..workers {
                 let done: Sender<Completion> = done_tx.clone();
-                let lm = self.lm;
-                let stats = self.stats;
-                let engine_kind = self.config.engine;
-                let opts = self.config.opts;
                 let mode = self.config.mode;
                 let max_lanes = self.config.batch.max_batch;
                 let session_budget = self.config.session_budget;
+                let evict_idle_after = self.config.evict_idle_after;
                 handles.push(scope.spawn(move || {
-                    let engine = lm.engine(engine_kind, stats, opts);
+                    let engines: Vec<Option<CharLmEngine>> =
+                        registry.instantiate(w, workers);
+                    let engine_refs: Vec<Option<&CharLmEngine>> =
+                        engines.iter().map(|e| e.as_ref()).collect();
                     let mut sched =
-                        ContinuousScheduler::with_mode(&engine, max_lanes, mode);
+                        ContinuousScheduler::multi(engine_refs, max_lanes, mode);
                     let mut compute_secs = 0f64;
                     let mut batches = 0usize;
                     let mut items = 0usize;
@@ -180,11 +243,16 @@ impl<'a> Server<'a> {
                         sched.admit_ready();
                         sched.step();
                         compute_secs += t0.elapsed().as_secs_f64();
-                        if let Some(budget) = session_budget {
-                            sched.enforce_session_budget(
-                                budget,
-                                &router.queued_sessions(w),
-                            );
+                        if session_budget.is_some() || evict_idle_after.is_some() {
+                            // One router-lock acquisition serves both
+                            // eviction policies.
+                            let queued = router.queued_sessions(w);
+                            if let Some(budget) = session_budget {
+                                sched.enforce_session_budget(budget, &queued);
+                            }
+                            if let Some(max_idle) = evict_idle_after {
+                                sched.enforce_idle_budget(max_idle, &queued);
+                            }
                         }
                         for c in sched.take_completed() {
                             let _ = done.send(Completion {
@@ -194,11 +262,16 @@ impl<'a> Server<'a> {
                             });
                         }
                     }
+                    let model_sessions = (0..registry.len())
+                        .map(|m| sched.sessions().len_model(m as ModelId))
+                        .collect();
                     WorkerSummary {
                         compute_secs,
                         batches,
                         items,
                         stats: sched.stats(),
+                        model_stats: sched.model_stats().to_vec(),
+                        model_sessions,
                     }
                 }));
             }
@@ -214,6 +287,7 @@ impl<'a> Server<'a> {
                     std::thread::sleep(target - now);
                 }
                 router.submit(StreamItem {
+                    model: req.model,
                     session: req.id,
                     tokens: req.tokens.clone(),
                     submitted: Instant::now(),
@@ -236,6 +310,7 @@ impl<'a> Server<'a> {
         }
         let steal_events = router.steal_events();
         let stolen_sessions = router.stolen_sessions();
+        let stolen_by_model = router.stolen_by_model(n_models);
         let per_worker: Vec<WorkerLoad> = summaries
             .iter()
             .enumerate()
@@ -250,6 +325,47 @@ impl<'a> Server<'a> {
                 steal_events: steal_events[i],
                 stolen_sessions: stolen_sessions[i],
                 evictions: s.stats.evictions,
+                idle_evictions: s.stats.idle_evictions,
+            })
+            .collect();
+        let per_model: Vec<ModelLoad> = (0..n_models)
+            .map(|m| {
+                let mid = m as ModelId;
+                let mut agg = SchedulerStats::default();
+                let mut resident_sessions = 0usize;
+                for s in &summaries {
+                    agg.batched_steps += s.model_stats[m].batched_steps;
+                    agg.lane_steps += s.model_stats[m].lane_steps;
+                    agg.padded_lane_steps += s.model_stats[m].padded_lane_steps;
+                    agg.peak_lanes = agg.peak_lanes.max(s.model_stats[m].peak_lanes);
+                    agg.admissions += s.model_stats[m].admissions;
+                    agg.retirements += s.model_stats[m].retirements;
+                    agg.evictions += s.model_stats[m].evictions;
+                    agg.idle_evictions += s.model_stats[m].idle_evictions;
+                    resident_sessions += s.model_sessions[m];
+                }
+                let resident_workers = residency[m].len();
+                let weight_bytes = self.registry.weight_bytes(mid);
+                ModelLoad {
+                    model: mid,
+                    name: self.registry.name(mid).to_string(),
+                    engine: self.registry.engine_kind(mid).label(),
+                    resident_workers,
+                    weight_bytes,
+                    resident_weight_bytes: weight_bytes * resident_workers,
+                    resident_sessions,
+                    resident_state_bytes: resident_sessions
+                        * self.registry.state_bytes(mid),
+                    batched_steps: agg.batched_steps,
+                    lane_steps: agg.lane_steps,
+                    padded_lane_steps: agg.padded_lane_steps,
+                    peak_lanes: agg.peak_lanes,
+                    admissions: agg.admissions,
+                    retirements: agg.retirements,
+                    steals: stolen_by_model[m],
+                    evictions: agg.evictions,
+                    idle_evictions: agg.idle_evictions,
+                }
             })
             .collect();
         let compute_secs: f64 = summaries.iter().map(|s| s.compute_secs).sum();
@@ -267,16 +383,19 @@ impl<'a> Server<'a> {
         let admission_wait_ms: f64 =
             summaries.iter().map(|s| s.stats.admission_wait_ms).sum();
         let evictions: usize = summaries.iter().map(|s| s.stats.evictions).sum();
+        let idle_evictions: usize =
+            summaries.iter().map(|s| s.stats.idle_evictions).sum();
 
         Ok(ServingReport {
             engine: engine_label,
             mode: self.config.mode.label(),
+            models: n_models,
             requests,
             tokens,
             wall_secs,
             compute_secs,
             latency,
-            workers: self.config.workers,
+            workers,
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
             batched_steps,
             lane_steps,
@@ -291,7 +410,10 @@ impl<'a> Server<'a> {
             },
             steals: stolen_sessions.iter().sum(),
             evictions,
+            idle_evictions,
+            resident_weight_bytes: self.registry.total_resident_weight_bytes(workers),
             per_worker,
+            per_model,
         })
     }
 }
@@ -334,10 +456,8 @@ mod tests {
                     workers: 2,
                     batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
                     engine,
-                    opts: QuantizeOptions::default(),
                     mode,
-                    steal: true,
-                    session_budget: None,
+                    ..ServerConfig::default()
                 };
                 let server = Server::new(&lm, Some(&stats), config);
                 let report = server.run_trace(&trace, 1000.0).unwrap();
@@ -349,6 +469,10 @@ mod tests {
                     "physical width below live width"
                 );
                 assert_eq!(report.per_worker.len(), 2);
+                assert_eq!(report.models, 1);
+                assert_eq!(report.per_model.len(), 1);
+                assert_eq!(report.per_model[0].lane_steps, report.lane_steps);
+                assert!(report.resident_weight_bytes > 0);
                 assert!(report.latency.percentile(50.0) >= 0.0);
                 assert!(report.throughput() > 0.0);
                 assert!(report.compute_secs > 0.0);
@@ -384,6 +508,62 @@ mod tests {
         assert_eq!(report.steals, 0);
         assert_eq!(report.per_worker.len(), 1);
         assert_eq!(report.per_worker[0].lane_steps, report.lane_steps);
+    }
+
+    #[test]
+    fn registry_server_serves_mixed_models() {
+        let lm_a = tiny_lm();
+        let lm_b = {
+            let mut rng = Pcg32::seeded(77);
+            let spec = LstmSpec::plain(VOCAB, 16);
+            let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+            let mut out_w = Matrix::<f32>::zeros(VOCAB, 16);
+            rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+            CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden: 16, depth: 1 }
+        };
+        let mut registry = ModelRegistry::new();
+        registry.register(ModelSpec {
+            name: "a".into(),
+            lm: &lm_a,
+            engine: StackEngine::Float,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        registry.register(ModelSpec {
+            name: "b".into(),
+            lm: &lm_b,
+            engine: StackEngine::Hybrid,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        let mut trace = RequestTrace::generate(20, 2000.0, 8, VOCAB, 9);
+        trace.assign_models(|id| (id % 2) as ModelId);
+        let server = Server::with_registry(
+            registry,
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..ServerConfig::default()
+            },
+        );
+        let report = server.run_trace(&trace, 1000.0).unwrap();
+        assert_eq!(report.requests, 20);
+        assert_eq!(report.tokens, trace.total_tokens());
+        assert_eq!(report.models, 2);
+        assert_eq!(report.engine, "multi");
+        assert_eq!(report.per_model.len(), 2);
+        // Per-model lane-steps partition the total.
+        assert_eq!(
+            report.per_model.iter().map(|m| m.lane_steps).sum::<usize>(),
+            report.lane_steps
+        );
+        for m in &report.per_model {
+            assert!(m.lane_steps > 0, "model {} never executed", m.model);
+            assert!(m.resident_weight_bytes >= m.weight_bytes);
+            assert_eq!(m.resident_workers, 2);
+        }
     }
 
     #[test]

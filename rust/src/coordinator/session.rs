@@ -1,17 +1,32 @@
 //! Per-stream sessions: the persistent LSTM state that makes RNN
 //! serving stateful (and quantization "numerically challenging" — the
 //! state carries quantization error across invocations).
+//!
+//! With the model registry, a stream is identified by a
+//! [`SessionKey`] = `(model, session)` pair: the same session id under
+//! two models is two independent streams with two independent states.
+//! The table also carries a **logical activity clock** (ticked once per
+//! batched token position by the scheduler) so sessions can be aged out
+//! by idle *time*, not just stream length.
 
 use std::collections::HashMap;
 
 use crate::model::lm::{CharLmEngine, LmState};
+use super::registry::ModelId;
 
-/// Identifier of one stream; routing and session tables key on it.
+/// Identifier of one stream within a model; routing and session tables
+/// key on it together with the [`ModelId`].
 pub type SessionId = u64;
+
+/// Full identity of a stream: the model it runs under plus its session
+/// id. Binding, eviction, and protection sets all operate on this key.
+pub type SessionKey = (ModelId, SessionId);
 
 /// One live stream.
 pub struct Session {
-    /// The stream's id.
+    /// The model this stream runs under.
+    pub model: ModelId,
+    /// The stream's id (unique within its model).
     pub id: SessionId,
     /// The persistent recurrent state (cell/hidden per layer plus the
     /// last hidden/logits scratch).
@@ -20,12 +35,27 @@ pub struct Session {
     pub tokens_seen: usize,
     /// Accumulated negative log2-likelihood (quality accounting).
     pub nll_bits: f64,
+    /// Logical-clock value of the last admission or retirement touching
+    /// this stream (see [`SessionManager::tick`]).
+    pub last_active: u64,
 }
 
 impl Session {
     /// A fresh session with the engine's zero state.
-    pub fn new(id: SessionId, engine: &CharLmEngine) -> Self {
-        Session { id, state: engine.new_state(), tokens_seen: 0, nll_bits: 0.0 }
+    pub fn new(model: ModelId, id: SessionId, engine: &CharLmEngine) -> Self {
+        Session {
+            model,
+            id,
+            state: engine.new_state(),
+            tokens_seen: 0,
+            nll_bits: 0.0,
+            last_active: 0,
+        }
+    }
+
+    /// The session's full `(model, session)` key.
+    pub fn key(&self) -> SessionKey {
+        (self.model, self.id)
     }
 
     /// Mean bits-per-char over the stream so far.
@@ -37,12 +67,13 @@ impl Session {
     }
 }
 
-/// Session table for one worker.
+/// Session table for one worker, spanning every model resident there.
 #[derive(Default)]
 pub struct SessionManager {
-    sessions: HashMap<SessionId, Session>,
+    sessions: HashMap<SessionKey, Session>,
     created: u64,
     evicted: u64,
+    clock: u64,
 }
 
 impl SessionManager {
@@ -51,33 +82,65 @@ impl SessionManager {
         Self::default()
     }
 
-    /// Get or create the session (sticky: a given id always lives on
-    /// the worker the router chose for it).
-    pub fn get_or_create(&mut self, id: SessionId, engine: &CharLmEngine) -> &mut Session {
-        if !self.sessions.contains_key(&id) {
-            self.created += 1;
-            self.sessions.insert(id, Session::new(id, engine));
-        }
-        self.sessions.get_mut(&id).unwrap()
+    /// Advance the logical activity clock one tick (the scheduler calls
+    /// this once per batched token position) and return the new value.
+    pub fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
     }
 
-    /// Look up a session without creating it.
+    /// Current logical-clock value.
+    pub fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Get or create the session (sticky: a given `(model, id)` always
+    /// lives on the worker the router chose for it). Marks the session
+    /// active at the current clock.
+    pub fn get_or_create(
+        &mut self,
+        model: ModelId,
+        id: SessionId,
+        engine: &CharLmEngine,
+    ) -> &mut Session {
+        let key = (model, id);
+        if !self.sessions.contains_key(&key) {
+            self.created += 1;
+            self.sessions.insert(key, Session::new(model, id, engine));
+        }
+        let s = self.sessions.get_mut(&key).unwrap();
+        s.last_active = self.clock;
+        s
+    }
+
+    /// Look up a model-0 session without creating it (single-model
+    /// convenience; see [`Self::get_model`]).
     pub fn get(&self, id: SessionId) -> Option<&Session> {
-        self.sessions.get(&id)
+        self.get_model(0, id)
+    }
+
+    /// Look up a session of a specific model without creating it.
+    pub fn get_model(&self, model: ModelId, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&(model, id))
     }
 
     /// Remove one session, returning it (counts as an eviction).
-    pub fn remove(&mut self, id: SessionId) -> Option<Session> {
-        let s = self.sessions.remove(&id);
+    pub fn remove(&mut self, model: ModelId, id: SessionId) -> Option<Session> {
+        let s = self.sessions.remove(&(model, id));
         if s.is_some() {
             self.evicted += 1;
         }
         s
     }
 
-    /// Number of resident sessions.
+    /// Number of resident sessions across all models.
     pub fn len(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Number of resident sessions of one model.
+    pub fn len_model(&self, model: ModelId) -> usize {
+        self.sessions.values().filter(|s| s.model == model).count()
     }
 
     /// True when no session is resident.
@@ -95,45 +158,74 @@ impl SessionManager {
         self.evicted
     }
 
-    /// Evict sessions idle beyond a token-count budget (memory
-    /// pressure control; state is the dominant per-stream cost).
-    /// Returns how many sessions were evicted.
+    /// Evict sessions beyond a count budget (memory pressure control;
+    /// state is the dominant per-stream cost). Returns how many
+    /// sessions were evicted.
     pub fn evict_longest(&mut self, keep_at_most: usize) -> usize {
         self.evict_longest_protected(keep_at_most, &[]).len()
     }
 
     /// Evict the longest-seen sessions until at most `keep_at_most`
-    /// remain, never touching ids in `protected` (the serving loop
+    /// remain, never touching keys in `protected` (the serving loop
     /// passes the sessions currently holding a lane or queued for one —
-    /// their state is live in the wave and must not be dropped). The
+    /// their state is live in a wave and must not be dropped). The
     /// resident count can therefore stay above the budget while many
     /// lanes are live.
     ///
     /// Eviction order is a pure function of the table contents: sort by
-    /// `(tokens_seen, id)` descending, so ties break by id and repeated
-    /// runs evict identical sets — no hash-iteration nondeterminism.
-    /// Returns the evicted ids in eviction order.
+    /// `(tokens_seen, model, id)` descending, so ties break by key and
+    /// repeated runs evict identical sets — no hash-iteration
+    /// nondeterminism. Returns the evicted keys in eviction order.
     pub fn evict_longest_protected(
         &mut self,
         keep_at_most: usize,
-        protected: &[SessionId],
-    ) -> Vec<SessionId> {
+        protected: &[SessionKey],
+    ) -> Vec<SessionKey> {
         if self.sessions.len() <= keep_at_most {
             return Vec::new();
         }
-        let mut ids: Vec<(usize, SessionId)> = self
+        let mut keys: Vec<(usize, ModelId, SessionId)> = self
             .sessions
             .values()
-            .filter(|s| !protected.contains(&s.id))
-            .map(|s| (s.tokens_seen, s.id))
+            .filter(|s| !protected.contains(&s.key()))
+            .map(|s| (s.tokens_seen, s.model, s.id))
             .collect();
-        ids.sort_unstable_by(|a, b| b.cmp(a));
+        keys.sort_unstable_by(|a, b| b.cmp(a));
         let over = self.sessions.len() - keep_at_most;
-        let mut out = Vec::with_capacity(over.min(ids.len()));
-        for &(_, id) in ids.iter().take(over) {
-            self.sessions.remove(&id);
+        let mut out = Vec::with_capacity(over.min(keys.len()));
+        for &(_, model, id) in keys.iter().take(over) {
+            self.sessions.remove(&(model, id));
             self.evicted += 1;
-            out.push(id);
+            out.push((model, id));
+        }
+        out
+    }
+
+    /// Evict every session idle for *more than* `max_idle` clock ticks
+    /// (the idle-age policy: `now - last_active > max_idle`), never
+    /// touching keys in `protected`. Oldest activity goes first, ties
+    /// broken by `(model, id)` ascending — like the length-based path,
+    /// a pure function of the table contents. Returns the evicted keys
+    /// in eviction order.
+    pub fn evict_idle_protected(
+        &mut self,
+        max_idle: u64,
+        protected: &[SessionKey],
+    ) -> Vec<SessionKey> {
+        let now = self.clock;
+        let mut victims: Vec<(u64, ModelId, SessionId)> = self
+            .sessions
+            .values()
+            .filter(|s| !protected.contains(&s.key()))
+            .filter(|s| now.saturating_sub(s.last_active) > max_idle)
+            .map(|s| (s.last_active, s.model, s.id))
+            .collect();
+        victims.sort_unstable();
+        let mut out = Vec::with_capacity(victims.len());
+        for &(_, model, id) in &victims {
+            self.sessions.remove(&(model, id));
+            self.evicted += 1;
+            out.push((model, id));
         }
         out
     }
@@ -170,17 +262,31 @@ mod tests {
         let mut mgr = SessionManager::new();
         assert!(mgr.is_empty());
         {
-            let s = mgr.get_or_create(42, &engine);
+            let s = mgr.get_or_create(0, 42, &engine);
             assert_eq!(s.id, 42);
             s.tokens_seen = 10;
         }
-        // Sticky: same id returns the same state.
-        assert_eq!(mgr.get_or_create(42, &engine).tokens_seen, 10);
+        // Sticky: same key returns the same state.
+        assert_eq!(mgr.get_or_create(0, 42, &engine).tokens_seen, 10);
         assert_eq!(mgr.len(), 1);
         assert_eq!(mgr.created(), 1);
-        assert!(mgr.remove(42).is_some());
-        assert!(mgr.remove(42).is_none());
+        assert!(mgr.remove(0, 42).is_some());
+        assert!(mgr.remove(0, 42).is_none());
         assert_eq!(mgr.evicted(), 1);
+    }
+
+    #[test]
+    fn same_id_under_two_models_is_two_streams() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(0, 7, &engine).tokens_seen = 5;
+        mgr.get_or_create(1, 7, &engine).tokens_seen = 9;
+        assert_eq!(mgr.len(), 2);
+        assert_eq!(mgr.len_model(0), 1);
+        assert_eq!(mgr.len_model(1), 1);
+        assert_eq!(mgr.get_model(0, 7).unwrap().tokens_seen, 5);
+        assert_eq!(mgr.get_model(1, 7).unwrap().tokens_seen, 9);
     }
 
     #[test]
@@ -188,7 +294,7 @@ mod tests {
         let lm = tiny_lm();
         let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
         let mut mgr = SessionManager::new();
-        let s = mgr.get_or_create(1, &engine);
+        let s = mgr.get_or_create(0, 1, &engine);
         engine.step_token(3, &mut s.state);
         let logits_after_one = s.state.logits.clone();
         engine.step_token(3, &mut s.state);
@@ -198,15 +304,15 @@ mod tests {
 
     #[test]
     fn eviction_order_is_deterministic_on_ties() {
-        // Equal stream lengths: the (tokens_seen, id) sort breaks ties
-        // by id descending, so eviction is a pure function of the table
-        // contents — no hash-iteration nondeterminism.
+        // Equal stream lengths: the (tokens_seen, model, id) sort breaks
+        // ties by key descending, so eviction is a pure function of the
+        // table contents — no hash-iteration nondeterminism.
         let lm = tiny_lm();
         let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
         for _ in 0..2 {
             let mut mgr = SessionManager::new();
             for id in 0..10u64 {
-                mgr.get_or_create(id, &engine).tokens_seen = 5;
+                mgr.get_or_create(0, id, &engine).tokens_seen = 5;
             }
             assert_eq!(mgr.evict_longest(7), 3);
             // Highest ids evicted first on ties.
@@ -225,14 +331,14 @@ mod tests {
         let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
         let mut mgr = SessionManager::new();
         for id in 0..10u64 {
-            let s = mgr.get_or_create(id, &engine);
+            let s = mgr.get_or_create(0, id, &engine);
             s.tokens_seen = id as usize * 100;
         }
         let evicted = mgr.evict_longest(6);
         assert_eq!(evicted, 4);
         assert_eq!(mgr.len(), 6);
         // The longest streams (ids 6..9) are gone.
-        assert!(mgr.get_or_create(0, &engine).tokens_seen == 0);
+        assert!(mgr.get_or_create(0, 0, &engine).tokens_seen == 0);
     }
 
     #[test]
@@ -241,19 +347,60 @@ mod tests {
         let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
         let mut mgr = SessionManager::new();
         for id in 0..6u64 {
-            mgr.get_or_create(id, &engine).tokens_seen = id as usize * 10;
+            mgr.get_or_create(0, id, &engine).tokens_seen = id as usize * 10;
         }
         // Protect the two longest: eviction must fall through to the
         // next-longest unprotected sessions.
-        let evicted = mgr.evict_longest_protected(2, &[5, 4]);
-        assert_eq!(evicted, vec![3, 2, 1, 0]);
+        let evicted = mgr.evict_longest_protected(2, &[(0, 5), (0, 4)]);
+        assert_eq!(evicted, vec![(0, 3), (0, 2), (0, 1), (0, 0)]);
         assert_eq!(mgr.len(), 2);
         assert!(mgr.get(5).is_some());
         assert!(mgr.get(4).is_some());
         // With everything protected, nothing is evicted even over
         // budget.
-        let evicted = mgr.evict_longest_protected(0, &[5, 4]);
+        let evicted = mgr.evict_longest_protected(0, &[(0, 5), (0, 4)]);
         assert!(evicted.is_empty());
         assert_eq!(mgr.len(), 2);
+    }
+
+    #[test]
+    fn idle_eviction_ages_out_by_activity_clock() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(0, 1, &engine); // active at t=0
+        mgr.tick();
+        mgr.tick();
+        mgr.get_or_create(0, 2, &engine); // active at t=2
+        mgr.tick(); // now = 3: idle ages are 3 and 1
+        // Threshold 2: only session 1 (idle 3 > 2) goes.
+        assert_eq!(mgr.evict_idle_protected(2, &[]), vec![(0, 1)]);
+        assert!(mgr.get(2).is_some());
+        // Threshold 0: session 2 (idle 1 > 0) goes too.
+        assert_eq!(mgr.evict_idle_protected(0, &[]), vec![(0, 2)]);
+        assert!(mgr.is_empty());
+        assert_eq!(mgr.evicted(), 2);
+    }
+
+    #[test]
+    fn idle_eviction_respects_protection_and_order() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(0, 3, &engine);
+        mgr.get_or_create(1, 3, &engine);
+        mgr.tick();
+        mgr.get_or_create(0, 9, &engine);
+        for _ in 0..5 {
+            mgr.tick();
+        }
+        // Oldest first; ties by (model, id) ascending. (1, 3) is
+        // protected (e.g. a chunk is queued upstream) and survives.
+        let evicted = mgr.evict_idle_protected(1, &[(1, 3)]);
+        assert_eq!(evicted, vec![(0, 3), (0, 9)]);
+        assert!(mgr.get_model(1, 3).is_some());
+        // Touching a session resets its idle age.
+        mgr.get_or_create(1, 3, &engine);
+        assert!(mgr.evict_idle_protected(0, &[]).is_empty());
     }
 }

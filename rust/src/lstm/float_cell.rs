@@ -280,7 +280,9 @@ impl FloatLstm {
 
     /// Batch-major gate pre-activation: the same math as
     /// [`Self::gate_pre`] applied lane-by-lane (bit-exact), with the two
-    /// matmuls batched through [`gemm_f32`].
+    /// matmuls batched through [`gemm_f32`]. The optional calibration
+    /// observer sees each lane's raw matmul output row (the same values
+    /// the sequential tap reports, lane by lane).
     fn gate_pre_batch(
         &self,
         g: Gate,
@@ -289,6 +291,7 @@ impl FloatLstm {
         c_for_peephole: &Matrix<f32>,
         pre: &mut Matrix<f32>,
         tmp: &mut Matrix<f32>,
+        observe: &mut Option<&mut dyn FnMut(Tap, &[f32])>,
     ) {
         let spec = self.spec();
         let gw = self.weights.gate(g);
@@ -307,6 +310,11 @@ impl FloatLstm {
                 {
                     *p += pw * cv;
                 }
+            }
+        }
+        if let Some(obs) = observe {
+            for b in 0..x.rows {
+                obs(Tap::GateMatmul(g), pre.row(b));
             }
         }
         if spec.flags.layer_norm {
@@ -330,6 +338,24 @@ impl FloatLstm {
     /// advances lane `b` of `state`, bit-exactly equal to running
     /// [`Self::step`] on each lane independently.
     pub fn step_batch(&self, x: &Matrix<f32>, state: &mut FloatBatchState) {
+        self.step_batch_traced(x, state, None);
+    }
+
+    /// [`Self::step_batch`] with an optional calibration tap observer —
+    /// the batched substrate of [`CalibrationStats::collect`]: the
+    /// observer sees the same tensors as the sequential
+    /// [`Self::step_traced`] taps, one row per lane (the multiset of
+    /// observed values over a calibration run is identical, so min/max
+    /// ranges match the sequential collector bit for bit).
+    ///
+    /// [`CalibrationStats::collect`]:
+    ///     super::quantize::CalibrationStats::collect
+    pub fn step_batch_traced(
+        &self,
+        x: &Matrix<f32>,
+        state: &mut FloatBatchState,
+        mut observe: Option<&mut dyn FnMut(Tap, &[f32])>,
+    ) {
         let spec = *self.spec();
         let batch = x.rows;
         assert_eq!(x.cols, spec.n_input);
@@ -340,10 +366,10 @@ impl FloatLstm {
         let BatchScratch { pre, tmp, m } = &mut *s;
         let [pre_i, pre_f, pre_z, pre_o] = pre;
 
-        self.gate_pre_batch(Gate::Forget, x, &state.h, &state.c, pre_f, tmp);
-        self.gate_pre_batch(Gate::Update, x, &state.h, &state.c, pre_z, tmp);
+        self.gate_pre_batch(Gate::Forget, x, &state.h, &state.c, pre_f, tmp, &mut observe);
+        self.gate_pre_batch(Gate::Update, x, &state.h, &state.c, pre_z, tmp, &mut observe);
         if spec.has_input_gate() {
-            self.gate_pre_batch(Gate::Input, x, &state.h, &state.c, pre_i, tmp);
+            self.gate_pre_batch(Gate::Input, x, &state.h, &state.c, pre_i, tmp, &mut observe);
         }
 
         // Elementwise parts run over the flat `[batch * n_cell]` buffers
@@ -357,11 +383,16 @@ impl FloatLstm {
         }
 
         // Output gate peephole reads the *new* cell state (eq 5).
-        self.gate_pre_batch(Gate::Output, x, &state.h, &state.c, pre_o, tmp);
+        self.gate_pre_batch(Gate::Output, x, &state.h, &state.c, pre_o, tmp, &mut observe);
 
         for (j, mv) in m.data.iter_mut().enumerate() {
             let o = sigmoid(pre_o.data[j]);
             *mv = o * state.c.data[j].tanh();
+        }
+        if let Some(obs) = &mut observe {
+            for b in 0..batch {
+                obs(Tap::Hidden, m.row(b));
+            }
         }
 
         if spec.flags.projection {

@@ -10,7 +10,7 @@ use crate::quant::recipe::Gate;
 use crate::sparse::SparseMatrixI8;
 use crate::tensor::qmatmul::fold_zero_point;
 use crate::tensor::Matrix;
-use super::float_cell::{FloatLstm, FloatState, Tap};
+use super::float_cell::{FloatBatchState, FloatLstm, FloatState, Tap};
 use super::integer_cell::{
     IntegerGate, IntegerLstm, IntegerProjection, WeightMat,
 };
@@ -35,9 +35,72 @@ pub struct CalibrationStats {
 impl CalibrationStats {
     /// Run the float model over a calibration set, recording ranges.
     ///
+    /// Drives the **batched** float path: the calibration set becomes
+    /// lanes of one `step_batch_traced` wave (sorted longest-first so
+    /// the live set stays a dense prefix that shrinks as shorter
+    /// sequences finish), so collection costs one GEMM per gate per
+    /// token position instead of per-sequence matvecs. Because the
+    /// batched step is bit-exact with the sequential one and min/max
+    /// observation is order-insensitive, the observed ranges are
+    /// identical to [`Self::collect_sequential`] — pinned by the
+    /// `batched_collect_matches_sequential` test.
+    ///
     /// The paper finds ~100 utterances suffice (§5); the E9 experiment
     /// sweeps this.
     pub fn collect(float: &FloatLstm, sequences: &[Vec<Vec<f32>>]) -> Self {
+        let mut stats =
+            CalibrationStats { sequences: sequences.len(), ..Default::default() };
+        // Longest sequences first: at every time step the still-running
+        // sequences are a prefix of the lane order.
+        let mut order: Vec<usize> = (0..sequences.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(sequences[i].len()));
+        let mut live = order.len();
+        while live > 0 && sequences[order[live - 1]].is_empty() {
+            live -= 1;
+        }
+        if live == 0 {
+            return stats;
+        }
+        let n_input = float.spec().n_input;
+        let mut state = FloatBatchState::zeros(float.spec(), live);
+        let mut x = Matrix::<f32>::zeros(live, n_input);
+        let mut t = 0usize;
+        while live > 0 {
+            // Retire lanes whose sequences ended (suffix of the order).
+            let mut still = live;
+            while still > 0 && sequences[order[still - 1]].len() <= t {
+                still -= 1;
+            }
+            if still < live {
+                state.truncate(still);
+                live = still;
+                if live == 0 {
+                    break;
+                }
+            }
+            x.resize(live, n_input);
+            for (lane, &si) in order[..live].iter().enumerate() {
+                x.row_mut(lane).copy_from_slice(&sequences[si][t]);
+            }
+            stats.x.observe_slice(&x.data);
+            let CalibrationStats { m, gate_out, .. } = &mut stats;
+            let mut observe = |tap: Tap, v: &[f32]| match tap {
+                Tap::GateMatmul(g) => gate_out[gate_index(g)].observe_slice(v),
+                Tap::Hidden => m.observe_slice(v),
+            };
+            float.step_batch_traced(&x, &mut state, Some(&mut observe));
+            stats.h.observe_slice(&state.h.data);
+            stats.c.observe_slice(&state.c.data);
+            t += 1;
+        }
+        stats
+    }
+
+    /// The sequential reference collector: one `step_traced` per token
+    /// per sequence. Kept as the oracle the batched [`Self::collect`]
+    /// is pinned against (identical ranges), and for embedders that
+    /// want per-sequence streaming collection.
+    pub fn collect_sequential(float: &FloatLstm, sequences: &[Vec<Vec<f32>>]) -> Self {
         let mut stats = CalibrationStats::default();
         for seq in sequences {
             let mut state = FloatState::zeros(float.spec());
@@ -227,5 +290,96 @@ fn sparsify(m: Matrix<i8>, sparse: bool) -> WeightMat {
         WeightMat::Sparse(SparseMatrixI8::from_dense(&m))
     } else {
         WeightMat::dense(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::observer::MinMaxObserver;
+    use crate::quant::recipe::VariantFlags;
+    use crate::lstm::spec::LstmSpec;
+    use crate::util::Pcg32;
+
+    fn ragged_seqs(rng: &mut Pcg32, lens: &[usize], dim: usize) -> Vec<Vec<Vec<f32>>> {
+        lens.iter()
+            .map(|&t| {
+                (0..t)
+                    .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn assert_observer_eq(a: &MinMaxObserver, b: &MinMaxObserver, what: &str) {
+        assert_eq!(a.count, b.count, "{what}: observation count");
+        if a.count == 0 {
+            return;
+        }
+        assert_eq!(a.min.to_bits(), b.min.to_bits(), "{what}: min");
+        assert_eq!(a.max.to_bits(), b.max.to_bits(), "{what}: max");
+    }
+
+    /// The satellite's pin: the batched collector observes exactly the
+    /// ranges the sequential one does — on ragged lengths (lane
+    /// retirement mid-run), empty sequences, and every gate-touching
+    /// variant (peephole adds the cell tap path, LN is downstream of
+    /// the observed tensor, projection activates the `m` observer).
+    #[test]
+    fn batched_collect_matches_sequential() {
+        let variants = [
+            VariantFlags::plain(),
+            VariantFlags { peephole: true, ..VariantFlags::plain() },
+            VariantFlags { layer_norm: true, ..VariantFlags::plain() },
+            VariantFlags { projection: true, peephole: true, ..VariantFlags::plain() },
+        ];
+        for (vi, flags) in variants.into_iter().enumerate() {
+            let mut rng = Pcg32::seeded(900 + vi as u64);
+            let mut spec = LstmSpec::plain(10, 24);
+            spec.flags = flags;
+            if flags.projection {
+                spec.n_output = 16;
+            }
+            let weights = crate::lstm::spec::LstmWeights::random(spec, &mut rng);
+            let float = FloatLstm::new(weights);
+            let seqs = ragged_seqs(&mut rng, &[7, 19, 0, 3, 19, 1, 12], 10);
+
+            let batched = CalibrationStats::collect(&float, &seqs);
+            let sequential = CalibrationStats::collect_sequential(&float, &seqs);
+
+            let ctx = format!("variant {flags:?}");
+            assert_eq!(batched.sequences, sequential.sequences, "{ctx}");
+            assert_observer_eq(&batched.x, &sequential.x, &format!("{ctx}: x"));
+            assert_observer_eq(&batched.h, &sequential.h, &format!("{ctx}: h"));
+            assert_observer_eq(&batched.m, &sequential.m, &format!("{ctx}: m"));
+            assert_observer_eq(&batched.c, &sequential.c, &format!("{ctx}: c"));
+            for (g, (a, b)) in batched.gate_out.iter().zip(&sequential.gate_out).enumerate()
+            {
+                assert_observer_eq(a, b, &format!("{ctx}: gate {g}"));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_collect_handles_degenerate_sets() {
+        let mut rng = Pcg32::seeded(901);
+        let spec = LstmSpec::plain(6, 8);
+        let weights = crate::lstm::spec::LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(weights);
+        // Empty set.
+        let empty = CalibrationStats::collect(&float, &[]);
+        assert_eq!(empty.sequences, 0);
+        assert_eq!(empty.x.count, 0);
+        // All-empty sequences.
+        let hollow = CalibrationStats::collect(&float, &[Vec::new(), Vec::new()]);
+        assert_eq!(hollow.sequences, 2);
+        assert_eq!(hollow.x.count, 0);
+        // A single one-step sequence still produces stats identical to
+        // the sequential path.
+        let one = ragged_seqs(&mut rng, &[1], 6);
+        let a = CalibrationStats::collect(&float, &one);
+        let b = CalibrationStats::collect_sequential(&float, &one);
+        assert_eq!(a.x.count, b.x.count);
+        assert_eq!(a.c.max_abs().to_bits(), b.c.max_abs().to_bits());
     }
 }

@@ -339,6 +339,22 @@ impl LstmStack {
         dst
     }
 
+    /// Bytes of one stream's recurrent state under this engine (the
+    /// per-session memory cost: int16 cell + int8 hidden for the
+    /// integer engine, f32 pairs otherwise).
+    pub fn state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .zip(&self.specs)
+            .map(|(l, spec)| match l {
+                LayerEngine::Float(_) | LayerEngine::Hybrid(_) => {
+                    (spec.n_cell + spec.n_output) * 4
+                }
+                LayerEngine::Integer(_) => spec.n_cell * 2 + spec.n_output,
+            })
+            .sum()
+    }
+
     /// Weight bytes under this engine (Table 1 size column).
     pub fn weight_bytes(&self) -> usize {
         self.layers

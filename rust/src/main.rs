@@ -12,7 +12,10 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use iqrnn::coordinator::{BatchPolicy, SchedulerMode, Server, ServerConfig};
+use iqrnn::coordinator::{
+    BatchPolicy, ModelRegistry, ModelSpec, Residency, SchedulerMode, Server,
+    ServerConfig,
+};
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::CharLm;
 use iqrnn::quant::recipe::{Gate, LstmRecipe, TensorRole, VariantFlags};
@@ -62,7 +65,8 @@ fn run(args: &[String]) -> Result<()> {
                  \n\
                  serve  --engine float|hybrid|integer  --requests N  --workers N\n\
                  \u{20}       --rate R (req/s)  --batch B  --mode continuous|wave\n\
-                 \u{20}       --no-steal  --session-budget N  --artifacts DIR\n\
+                 \u{20}       --no-steal  --session-budget N  --evict-idle-after N\n\
+                 \u{20}       --models N  --replicas R  --artifacts DIR\n\
                  eval   --artifacts DIR   (Table-1-style quality comparison)\n\
                  recipe [--ln] [--proj] [--peephole] [--cifg]   (print Table 2)\n\
                  info   --artifacts DIR"
@@ -87,6 +91,17 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     let session_budget = flag(args, "--session-budget")
         .map(|v| v.parse::<usize>())
         .transpose()?;
+    let evict_idle_after = flag(args, "--evict-idle-after")
+        .map(|v| v.parse::<u64>())
+        .transpose()?;
+    let models: usize = flag(args, "--models").unwrap_or_else(|| "1".into()).parse()?;
+    if models == 0 {
+        bail!("--models must be at least 1");
+    }
+    let replicas = flag(args, "--replicas").map(|v| v.parse::<usize>()).transpose()?;
+    if replicas == Some(0) {
+        bail!("--replicas must be at least 1");
+    }
 
     let lm = CharLm::load(artifacts)
         .with_context(|| format!("loading model from `{artifacts}` (run `make artifacts`)"))?;
@@ -94,32 +109,58 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     let calib = calibration_sequences(&corpus, 100, 64, 11)?;
     let stats = lm.calibrate(&calib);
 
-    let trace = RequestTrace::generate(requests, rate, 60, iqrnn::model::lm::VOCAB, 17);
+    let mut trace = RequestTrace::generate(requests, rate, 60, iqrnn::model::lm::VOCAB, 17);
+    if models > 1 {
+        trace.assign_models(|id| (id % models as u64) as iqrnn::coordinator::ModelId);
+    }
     println!(
         "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, \
-         engine={}, mode={}, steal={}",
+         engine={}, mode={}, steal={}, models={models}{}",
         trace.total_tokens(),
         engine.label(),
         mode.label(),
         if steal { "on" } else { "off" },
-    );
-    let server = Server::new(
-        &lm,
-        Some(&stats),
-        ServerConfig {
-            workers,
-            batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
-            engine,
-            opts: QuantizeOptions::default(),
-            mode,
-            steal,
-            session_budget,
+        match replicas {
+            Some(r) => format!(", replicas={r}"),
+            None => String::new(),
         },
     );
+    let config = ServerConfig {
+        workers,
+        batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
+        engine,
+        opts: QuantizeOptions::default(),
+        mode,
+        steal,
+        session_budget,
+        evict_idle_after,
+    };
+    // One loaded artifact served as N registered variants (shared float
+    // master weights, independent engines/sessions/waves): the serving
+    // shape of per-locale heads or A/B recipes without needing N
+    // artifact sets on disk.
+    let mut registry = ModelRegistry::new();
+    for m in 0..models {
+        registry.register(ModelSpec {
+            name: format!("model{m}"),
+            lm: &lm,
+            engine,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: match replicas {
+                Some(r) => Residency::Count(r),
+                None => Residency::All,
+            },
+        });
+    }
+    let server = Server::with_registry(registry, config);
     let report = server.run_trace(&trace, 1.0)?;
     report.print();
     if workers > 1 {
         report.print_workers();
+    }
+    if models > 1 {
+        report.print_models();
     }
     Ok(())
 }

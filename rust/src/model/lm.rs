@@ -438,6 +438,15 @@ impl CharLmEngine {
         total / (tokens.len() - 1) as f64
     }
 
+    /// Bytes of one stream's persistent state under this engine: the
+    /// recurrent layer states plus the hidden/logits scratch an
+    /// [`LmState`] carries. The registry multiplies this by resident
+    /// session counts for the per-model memory accounting (state is
+    /// the second resident cost after packed weights).
+    pub fn state_bytes(&self) -> usize {
+        self.stack.state_bytes() + (self.stack.n_output() + VOCAB) * 4
+    }
+
     /// Weight bytes (stack + head) for the Table-1 size column.
     pub fn weight_bytes(&self) -> usize {
         let head = match &self.head {

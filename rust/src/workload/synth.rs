@@ -1,14 +1,20 @@
 //! Synthetic streaming request traces for the serving experiments
 //! (E4/E10): Poisson arrivals of variable-length utterances, shaped
 //! like the paper's speech traffic (VoiceSearch-like short requests,
-//! occasional YouTube-like long streams).
+//! occasional YouTube-like long streams) — optionally spread over
+//! several registered models (the multi-model serving experiments).
 
+use crate::coordinator::registry::ModelId;
 use crate::util::Pcg32;
 
 /// One request in a trace.
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
     pub id: u64,
+    /// The registry model this request's stream runs under (0 in
+    /// single-model traces). All chunks of one session must carry the
+    /// same model — a stream's state lives under exactly one model.
+    pub model: ModelId,
     /// Arrival offset from trace start, in milliseconds.
     pub arrival_ms: f64,
     /// Token sequence to stream through the model.
@@ -43,7 +49,7 @@ impl RequestTrace {
             let base = if long { mean_len * 4 } else { mean_len };
             let len = (base as f64 * (0.5 + rng.next_f64())).round().max(2.0) as usize;
             let tokens = (0..len).map(|_| rng.below(vocab as u32) as usize).collect();
-            requests.push(TraceRequest { id: id as u64, arrival_ms: t_ms, tokens });
+            requests.push(TraceRequest { id: id as u64, model: 0, arrival_ms: t_ms, tokens });
         }
         RequestTrace { requests }
     }
@@ -72,7 +78,7 @@ impl RequestTrace {
                 let base = if long { mean_len * 4 } else { mean_len };
                 let len = (base as f64 * (0.5 + rng.next_f64())).round().max(2.0) as usize;
                 let tokens = (0..len).map(|_| rng.below(vocab as u32) as usize).collect();
-                requests.push(TraceRequest { id, arrival_ms: t_ms, tokens });
+                requests.push(TraceRequest { id, model: 0, arrival_ms: t_ms, tokens });
                 id += 1;
             }
         }
@@ -93,6 +99,7 @@ impl RequestTrace {
         let requests = (0..count)
             .map(|i| TraceRequest {
                 id: i as u64,
+                model: 0,
                 arrival_ms: i as f64 * gap_ms,
                 tokens: (0..len).map(|_| rng.below(vocab as u32) as usize).collect(),
             })
@@ -124,6 +131,55 @@ impl RequestTrace {
             });
             req.id = new;
         }
+    }
+
+    /// Tag every request with a model chosen from its *session id*
+    /// (`f(id)`), so all chunks of one session land on the same model —
+    /// the invariant multi-model serving requires. Deterministic: the
+    /// assignment depends only on the ids and the function.
+    pub fn assign_models(&mut self, mut f: impl FnMut(u64) -> ModelId) {
+        for req in &mut self.requests {
+            req.model = f(req.id);
+        }
+    }
+
+    /// Poisson trace spread round-robin over `n_models` models
+    /// (session id modulo model count): the standard mixed-model
+    /// workload of the multi-model serving experiments.
+    pub fn generate_multi(
+        count: usize,
+        rate_per_s: f64,
+        mean_len: usize,
+        vocab: usize,
+        n_models: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_models >= 1);
+        let mut trace = Self::generate(count, rate_per_s, mean_len, vocab, seed);
+        trace.assign_models(|id| (id % n_models as u64) as ModelId);
+        trace
+    }
+
+    /// The sub-trace of one model, arrival order preserved — the input
+    /// for that model's single-model reference run in the
+    /// bit-exactness tests.
+    pub fn filter_model(&self, model: ModelId) -> RequestTrace {
+        RequestTrace {
+            requests: self
+                .requests
+                .iter()
+                .filter(|r| r.model == model)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Distinct models appearing in the trace, ascending.
+    pub fn models(&self) -> Vec<ModelId> {
+        let mut ms: Vec<ModelId> = self.requests.iter().map(|r| r.model).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
     }
 
     pub fn total_tokens(&self) -> usize {
@@ -202,6 +258,29 @@ mod tests {
         for (a, b) in trace.requests.iter().zip(&again.requests) {
             assert_eq!(a.id, b.id);
         }
+    }
+
+    #[test]
+    fn multi_model_traces_tag_sessions_consistently() {
+        let mut trace = RequestTrace::generate_multi(30, 200.0, 10, 96, 3, 12);
+        // Give one session several chunks, then re-tag: chunks of a
+        // session must share a model.
+        trace.requests[9].id = trace.requests[4].id;
+        trace.requests[21].id = trace.requests[4].id;
+        trace.assign_models(|id| (id % 3) as ModelId);
+        assert_eq!(trace.requests[9].model, trace.requests[4].model);
+        assert_eq!(trace.requests[21].model, trace.requests[4].model);
+        assert_eq!(trace.models(), vec![0, 1, 2]);
+        // Per-model sub-traces partition the trace and keep order.
+        let total: usize =
+            (0..3).map(|m| trace.filter_model(m).requests.len()).sum();
+        assert_eq!(total, trace.requests.len());
+        let sub = trace.filter_model(1);
+        assert!(sub.requests.iter().all(|r| r.model == 1));
+        assert!(sub.requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        // Deterministic.
+        let again = RequestTrace::generate_multi(30, 200.0, 10, 96, 3, 12);
+        assert_eq!(again.requests[7].model, trace.requests[7].model);
     }
 
     #[test]

@@ -47,7 +47,7 @@ fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
 }
 
 fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
-    StreamItem { session, tokens, submitted: Instant::now() }
+    StreamItem { model: 0, session, tokens, submitted: Instant::now() }
 }
 
 /// Sequential oracle: run a session's chunks alone on the per-token

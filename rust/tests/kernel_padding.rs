@@ -44,7 +44,7 @@ fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
 }
 
 fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
-    StreamItem { session, tokens, submitted: Instant::now() }
+    StreamItem { model: 0, session, tokens, submitted: Instant::now() }
 }
 
 /// Acceptance criterion of the register-tiling refactor: drive the

@@ -1,0 +1,501 @@
+//! Multi-model serving suite: the scheduler/router/registry contract
+//! of serving several quantized model variants over one worker pool.
+//!
+//! What is locked down:
+//!
+//! * **Per-model bit-exactness** — on mixed 2–3 model traces, every
+//!   stream's final state and nll accounting equals running it alone on
+//!   its own model's sequential `step_token` path (all three engines,
+//!   plus a mixed-engine registry).
+//! * **No cross-model lane mixing** — a wave only ever holds lanes of
+//!   its own model, per-wave batch widths stay honest, and the shared
+//!   lane budget is respected.
+//! * **Steal-only-where-resident** — an idle worker never steals a
+//!   session whose model's weights it does not hold.
+//! * **Registry eviction determinism** — the session-count budget and
+//!   the idle-age policy evict identical `(model, session)` streams on
+//!   identical runs, and never a stream that is live or queued.
+//! * **Per-model reporting** — the threaded server's `ServingReport`
+//!   breaks out per-model occupancy, steals, evictions, and resident
+//!   weight bytes.
+//!
+//! Everything except the server test runs on the deterministic
+//! virtual-time multi-model shard simulator (no threads), so failures
+//! are replayable.
+
+use std::time::{Duration, Instant};
+
+use iqrnn::coordinator::{
+    simulate_multi_shard_trace, BatchPolicy, ContinuousScheduler, ModelId,
+    ModelRegistry, ModelSpec, Residency, SchedulerMode, Server, ServerConfig,
+    StreamItem,
+};
+use iqrnn::lstm::{CalibrationStats, LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+fn tiny_lm(seed: u64, hidden: usize, depth: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(seed);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+fn calib(lm: &CharLm, seed: u64) -> Vec<CalibrationStats> {
+    let mut rng = Pcg32::seeded(seed);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+/// Three distinct model variants (different weights and widths).
+fn three_lms() -> Vec<CharLm> {
+    vec![tiny_lm(501, 20, 2), tiny_lm(502, 16, 1), tiny_lm(503, 24, 1)]
+}
+
+/// Sequential oracle: run a stream's chunks alone on the per-token
+/// path of its own model, mirroring the scheduler's nll grouping.
+fn sequential_reference(
+    engine: &CharLmEngine,
+    chunks: &[Vec<usize>],
+) -> (LmState, f64, usize) {
+    let mut state = engine.new_state();
+    let mut total_nll = 0f64;
+    let mut tokens = 0usize;
+    for chunk in chunks {
+        let mut chunk_nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                chunk_nll += nll_bits(&state.logits, next);
+            }
+        }
+        total_nll += chunk_nll;
+        tokens += chunk.len();
+    }
+    (state, total_nll, tokens)
+}
+
+fn chunks_of(trace: &RequestTrace, model: ModelId, session: u64) -> Vec<Vec<usize>> {
+    trace
+        .requests
+        .iter()
+        .filter(|r| r.model == model && r.id == session)
+        .map(|r| r.tokens.clone())
+        .collect()
+}
+
+fn stream_keys(trace: &RequestTrace) -> Vec<(ModelId, u64)> {
+    let mut keys: Vec<(ModelId, u64)> =
+        trace.requests.iter().map(|r| (r.model, r.id)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// Find the one worker holding `(model, session)`, assert it is exactly
+/// one, and check the stream against its model's sequential oracle
+/// bit-for-bit.
+fn assert_stream_bit_exact(
+    scheds: &[ContinuousScheduler],
+    trace: &RequestTrace,
+    model: ModelId,
+    session: u64,
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let holders: Vec<usize> = scheds
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.sessions().get_model(model, session).is_some())
+        .map(|(w, _)| w)
+        .collect();
+    assert_eq!(
+        holders.len(),
+        1,
+        "{ctx}: stream ({model}, {session}) resident on workers {holders:?}"
+    );
+    let s = scheds[holders[0]].sessions().get_model(model, session).unwrap();
+    let chunks = chunks_of(trace, model, session);
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: ({model}, {session}) tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: ({model}, {session}) hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: ({model}, {session}) logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: ({model}, {session}) nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+fn all_resident(n_models: usize, workers: usize) -> Vec<Vec<usize>> {
+    (0..n_models).map(|_| (0..workers).collect()).collect()
+}
+
+#[test]
+fn mixed_model_traces_bit_exact_on_all_engines() {
+    let lms = three_lms();
+    let stats: Vec<_> = lms.iter().enumerate().map(|(i, lm)| calib(lm, 600 + i as u64)).collect();
+    for engine_kind in StackEngine::ALL {
+        let engines: Vec<CharLmEngine> = lms
+            .iter()
+            .zip(&stats)
+            .map(|(lm, st)| lm.engine(engine_kind, Some(st), QuantizeOptions::default()))
+            .collect();
+        for n_models in [2usize, 3] {
+            let trace =
+                RequestTrace::generate_multi(24, 900.0, 10, VOCAB, n_models, 61);
+            let residency = all_resident(n_models, 3);
+            let cfg = iqrnn::coordinator::ShardConfig {
+                workers: 3,
+                max_lanes: 4,
+                ..Default::default()
+            };
+            let (scheds, rep) = simulate_multi_shard_trace(
+                &engines[..n_models],
+                &residency,
+                &trace,
+                &cfg,
+            );
+            let ctx = format!("{engine_kind:?}/{n_models} models");
+            assert_eq!(rep.completions.len(), trace.requests.len(), "{ctx}");
+            // Per-model lane-steps partition the executed tokens.
+            for m in 0..n_models {
+                assert_eq!(
+                    rep.per_model[m].lane_steps,
+                    trace.filter_model(m as ModelId).total_tokens(),
+                    "{ctx}: model {m} lane-steps"
+                );
+            }
+            for (model, session) in stream_keys(&trace) {
+                assert_stream_bit_exact(
+                    &scheds,
+                    &trace,
+                    model,
+                    session,
+                    &engines[model as usize],
+                    &ctx,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_engine_registry_is_bit_exact() {
+    // The registry's real shape: one integer production model, one
+    // hybrid A/B, one float oracle — on one pool, one trace.
+    let lms = three_lms();
+    let stats: Vec<_> = lms.iter().enumerate().map(|(i, lm)| calib(lm, 650 + i as u64)).collect();
+    let kinds = [StackEngine::Integer, StackEngine::Hybrid, StackEngine::Float];
+    let engines: Vec<CharLmEngine> = lms
+        .iter()
+        .zip(&stats)
+        .zip(kinds)
+        .map(|((lm, st), k)| lm.engine(k, Some(st), QuantizeOptions::default()))
+        .collect();
+    let trace = RequestTrace::generate_multi(30, 1100.0, 9, VOCAB, 3, 62);
+    let cfg = iqrnn::coordinator::ShardConfig {
+        workers: 2,
+        max_lanes: 6,
+        ..Default::default()
+    };
+    let (scheds, rep) =
+        simulate_multi_shard_trace(&engines, &all_resident(3, 2), &trace, &cfg);
+    assert_eq!(rep.completions.len(), 30);
+    for (model, session) in stream_keys(&trace) {
+        assert_stream_bit_exact(
+            &scheds,
+            &trace,
+            model,
+            session,
+            &engines[model as usize],
+            "mixed-engine",
+        );
+    }
+}
+
+#[test]
+fn lanes_never_mix_models_under_churn() {
+    let lms = three_lms();
+    let e0 = lms[0].engine(StackEngine::Float, None, QuantizeOptions::default());
+    let e1 = lms[1].engine(StackEngine::Float, None, QuantizeOptions::default());
+    let e2 = lms[2].engine(StackEngine::Float, None, QuantizeOptions::default());
+    let mut sched = ContinuousScheduler::multi(
+        vec![Some(&e0), Some(&e1), Some(&e2)],
+        5,
+        SchedulerMode::Continuous,
+    );
+    let mut rng = Pcg32::seeded(63);
+    // Interleaved ragged offers across three models.
+    for i in 0..12u64 {
+        let model = (i % 3) as ModelId;
+        let len = 3 + (rng.below(9) as usize);
+        let tokens = (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect();
+        sched.offer(StreamItem { model, session: i, tokens, submitted: Instant::now() });
+    }
+    let mut guard = 0;
+    while sched.has_live_work() {
+        sched.admit_ready();
+        // Shared budget, per-model honesty.
+        assert!(sched.live_lanes() <= 5);
+        let mut per_model = [0usize; 3];
+        let keys = sched.lane_model_sessions();
+        for &(m, s) in &keys {
+            per_model[m as usize] += 1;
+            // Session tagging is the model assignment: id % 3.
+            assert_eq!(s % 3, m as u64, "lane ({m}, {s}) in the wrong model's wave");
+        }
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), keys.len(), "stream double-occupied: {keys:?}");
+        for m in 0..3u32 {
+            assert_eq!(sched.live_lanes_model(m), per_model[m as usize]);
+            assert_eq!(sched.batch_width_model(m), per_model[m as usize]);
+        }
+        assert_eq!(sched.batch_width(), sched.live_lanes());
+        sched.step();
+        sched.take_completed();
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    assert_eq!(sched.stats().retirements, 12);
+    for m in 0..3usize {
+        assert_eq!(sched.model_stats()[m].retirements, 4);
+    }
+}
+
+#[test]
+fn steals_only_move_sessions_where_the_model_is_resident() {
+    let lms = three_lms();
+    let stats0 = calib(&lms[0], 700);
+    let stats1 = calib(&lms[1], 701);
+    let engines = vec![
+        lms[0].engine(StackEngine::Integer, Some(&stats0), QuantizeOptions::default()),
+        lms[1].engine(StackEngine::Integer, Some(&stats1), QuantizeOptions::default()),
+    ];
+    // Model 0 pinned to worker 0; model 1 replicated on workers 1, 2.
+    let residency = vec![vec![0], vec![1, 2]];
+    // A burst of model-0 sessions (all necessarily homed on worker 0)
+    // plus a handful of model-1 sessions.
+    let mut trace = RequestTrace::generate(30, 4000.0, 8, VOCAB, 64);
+    trace.assign_models(|id| if id < 24 { 0 } else { 1 });
+    let cfg = iqrnn::coordinator::ShardConfig {
+        workers: 3,
+        max_lanes: 3,
+        ..Default::default()
+    };
+    let (scheds, rep) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+    assert_eq!(rep.completions.len(), 30);
+    // The model-0 backlog on worker 0 towers over everything, but its
+    // weights live nowhere else: not one of its sessions may move.
+    assert_eq!(rep.stolen_by_model[0], 0, "model 0 stolen despite single residency");
+    assert_eq!(scheds[1].model_stats()[0].lane_steps, 0, "worker 1 ran model 0");
+    assert_eq!(scheds[2].model_stats()[0].lane_steps, 0, "worker 2 ran model 0");
+    assert_eq!(
+        scheds[0].model_stats()[0].lane_steps,
+        trace.filter_model(0).total_tokens(),
+        "worker 0 must execute every model-0 token"
+    );
+    // Numerics survive the skew either way.
+    for (model, session) in stream_keys(&trace) {
+        assert_stream_bit_exact(
+            &scheds,
+            &trace,
+            model,
+            session,
+            &engines[model as usize],
+            "residency",
+        );
+    }
+}
+
+#[test]
+fn registry_eviction_is_deterministic_and_spares_live_streams() {
+    let lms = three_lms();
+    let engines = vec![
+        lms[0].engine(StackEngine::Float, None, QuantizeOptions::default()),
+        lms[1].engine(StackEngine::Float, None, QuantizeOptions::default()),
+    ];
+    let residency = all_resident(2, 2);
+    let trace = RequestTrace::generate_multi(36, 1400.0, 10, VOCAB, 2, 65);
+    let cfg = iqrnn::coordinator::ShardConfig {
+        workers: 2,
+        max_lanes: 4,
+        session_budget: Some(3),
+        ..Default::default()
+    };
+    let (scheds, r1) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+    let (_s2, r2) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+    // Identical eviction streams — `(model, session)` keys and order.
+    assert_eq!(r1.evicted, r2.evicted);
+    assert!(r1.total_evicted() > 0, "budget must bite");
+    assert_eq!(r1.completions.len(), 36);
+    // Per-model eviction accounting adds up.
+    let by_model: usize = r1.per_model.iter().map(|s| s.evictions).sum();
+    assert_eq!(by_model, r1.total_evicted());
+    for (w, s) in scheds.iter().enumerate() {
+        assert_eq!(s.live_lanes(), 0);
+        assert!(
+            s.sessions().len() <= 3,
+            "worker {w}: {} resident over budget",
+            s.sessions().len()
+        );
+    }
+}
+
+#[test]
+fn idle_age_eviction_is_deterministic_and_never_resets_inflight_streams() {
+    let lms = three_lms();
+    let engines =
+        vec![lms[0].engine(StackEngine::Float, None, QuantizeOptions::default())];
+    let residency = all_resident(1, 1);
+    // Session 1 streams two chunks far apart in arrival; an idle-age
+    // policy tight enough to bite must still never reset it while its
+    // second chunk is queued (router-queue protection), so its nll
+    // stays bit-exact across the gap.
+    let mut rng = Pcg32::seeded(66);
+    let mk = |n: usize, rng: &mut Pcg32| -> Vec<usize> {
+        (0..n).map(|_| rng.below(VOCAB as u32) as usize).collect()
+    };
+    let s_chunks: Vec<Vec<usize>> = (0..2).map(|_| mk(6, &mut rng)).collect();
+    let filler = mk(40, &mut rng);
+    let trace = RequestTrace {
+        requests: vec![
+            iqrnn::workload::synth::TraceRequest {
+                id: 1,
+                model: 0,
+                arrival_ms: 0.0,
+                tokens: s_chunks[0].clone(),
+            },
+            iqrnn::workload::synth::TraceRequest {
+                id: 2,
+                model: 0,
+                arrival_ms: 0.0,
+                tokens: filler,
+            },
+            iqrnn::workload::synth::TraceRequest {
+                id: 1,
+                model: 0,
+                arrival_ms: 0.0,
+                tokens: s_chunks[1].clone(),
+            },
+        ],
+    };
+    let cfg = iqrnn::coordinator::ShardConfig {
+        workers: 1,
+        max_lanes: 2,
+        evict_idle_after: Some(2),
+        ..Default::default()
+    };
+    let (_scheds, r1) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+    let (_s2, r2) = simulate_multi_shard_trace(&engines, &residency, &trace, &cfg);
+    assert_eq!(r1.idle_evicted, r2.idle_evicted, "idle eviction must be deterministic");
+    assert_eq!(r1.completions.len(), 3);
+
+    // Oracle: session 1's per-chunk nll with state carried across.
+    let mut state = engines[0].new_state();
+    let mut chunk_nlls = Vec::new();
+    for chunk in &s_chunks {
+        let mut nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engines[0].step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                nll += nll_bits(&state.logits, next);
+            }
+        }
+        chunk_nlls.push(nll);
+    }
+    let got: Vec<f64> = r1
+        .completions
+        .iter()
+        .filter(|c| c.session == 1)
+        .map(|c| c.nll_bits)
+        .collect();
+    assert_eq!(got.len(), 2);
+    for (g, r) in got.iter().zip(&chunk_nlls) {
+        assert_eq!(g.to_bits(), r.to_bits(), "idle eviction reset an in-flight stream");
+    }
+    // The policy did fire on truly idle sessions by the end of the
+    // run (session 1 retires long before the 40-token filler ends).
+    assert!(r1.total_idle_evicted() > 0, "idle-age policy never fired");
+}
+
+#[test]
+fn server_report_breaks_out_models() {
+    let lms = three_lms();
+    let stats0 = calib(&lms[0], 710);
+    let mut registry = ModelRegistry::new();
+    registry.register(ModelSpec {
+        name: "prod-int".into(),
+        lm: &lms[0],
+        engine: StackEngine::Integer,
+        stats: Some(&stats0),
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    registry.register(ModelSpec {
+        name: "ab-hybrid".into(),
+        lm: &lms[1],
+        engine: StackEngine::Hybrid,
+        stats: None,
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    let expected_weight_bytes: Vec<usize> =
+        (0..2).map(|m| registry.weight_bytes(m)).collect();
+    let trace = RequestTrace::generate_multi(24, 2000.0, 10, VOCAB, 2, 67);
+    let server = Server::with_registry(
+        registry,
+        ServerConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..ServerConfig::default()
+        },
+    );
+    let report = server.run_trace(&trace, 1000.0).unwrap();
+    assert_eq!(report.requests, 24);
+    assert_eq!(report.tokens, trace.total_tokens());
+    assert_eq!(report.models, 2);
+    assert_eq!(report.per_model.len(), 2);
+    for (m, load) in report.per_model.iter().enumerate() {
+        // Occupancy accounting: this model executed exactly its share
+        // of the trace.
+        assert_eq!(
+            load.lane_steps,
+            trace.filter_model(m as ModelId).total_tokens(),
+            "model {m} lane-steps"
+        );
+        assert!(load.batched_steps > 0);
+        assert!(load.mean_occupancy() >= 1.0 - 1e-9);
+        assert_eq!(load.admissions, load.retirements);
+        // Memory accounting: replica bytes × resident workers.
+        assert_eq!(load.weight_bytes, expected_weight_bytes[m]);
+        assert_eq!(load.resident_workers, 2);
+        assert_eq!(load.resident_weight_bytes, expected_weight_bytes[m] * 2);
+        // No budgets configured: no evictions of either kind.
+        assert_eq!(load.evictions, 0);
+        assert_eq!(load.idle_evictions, 0);
+    }
+    assert_eq!(
+        report.resident_weight_bytes,
+        (expected_weight_bytes[0] + expected_weight_bytes[1]) * 2
+    );
+    assert_eq!(
+        report.per_model.iter().map(|m| m.lane_steps).sum::<usize>(),
+        report.lane_steps
+    );
+    // Names and engines surface for the operator.
+    assert_eq!(report.per_model[0].name, "prod-int");
+    assert_eq!(report.per_model[0].engine, "Integer");
+    assert_eq!(report.per_model[1].engine, "Hybrid");
+    assert_eq!(report.engine, "multi");
+}

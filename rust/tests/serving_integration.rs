@@ -37,8 +37,7 @@ fn serving_under_load_completes_everything() {
             engine: StackEngine::Integer,
             opts: QuantizeOptions::default(),
             mode,
-            steal: true,
-            session_budget: None,
+            ..ServerConfig::default()
         };
         let server = Server::new(&lm, Some(&stats), config);
         let report = server.run_trace(&trace, 100.0).unwrap();
@@ -72,7 +71,7 @@ fn skewed_routing_completes_with_and_without_stealing() {
             opts: QuantizeOptions::default(),
             mode: SchedulerMode::Continuous,
             steal,
-            session_budget: None,
+            ..ServerConfig::default()
         };
         let server = Server::new(&lm, Some(&stats), config);
         let report = server.run_trace(&trace, 200.0).unwrap();
@@ -104,8 +103,8 @@ fn session_budget_under_load_loses_nothing() {
         engine: StackEngine::Integer,
         opts: QuantizeOptions::default(),
         mode: SchedulerMode::Continuous,
-        steal: true,
         session_budget: Some(3),
+        ..ServerConfig::default()
     };
     let server = Server::new(&lm, Some(&stats), config);
     let report = server.run_trace(&trace, 500.0).unwrap();

@@ -145,10 +145,7 @@ fn multi_worker_bit_exact_on_all_engines_and_traces() {
             let cfg = ShardConfig {
                 workers: 3,
                 max_lanes: 4,
-                mode: SchedulerMode::Continuous,
-                steal: true,
-                session_budget: None,
-                tick_ms: 1.0,
+                ..ShardConfig::default()
             };
             let (scheds, rep) = simulate_shard_trace(&engine, trace, &cfg);
             let ctx = format!("{name}/{engine_kind:?}");
@@ -175,9 +172,7 @@ fn wave_mode_shard_pool_is_bit_exact_too() {
         workers: 2,
         max_lanes: 4,
         mode: SchedulerMode::Wave,
-        steal: true,
-        session_budget: None,
-        tick_ms: 1.0,
+        ..ShardConfig::default()
     };
     let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
     assert_eq!(rep.completions.len(), 18);
@@ -200,10 +195,7 @@ fn one_worker_reproduces_the_single_worker_simulator() {
         let cfg = ShardConfig {
             workers: 1,
             max_lanes: 6,
-            mode: SchedulerMode::Continuous,
-            steal: true,
-            session_budget: None,
-            tick_ms: 1.0,
+            ..ShardConfig::default()
         };
         let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
         assert_eq!(rep.total_stolen(), 0, "{engine_kind:?}: nothing to steal");
@@ -241,10 +233,8 @@ fn sharded_simulation_is_deterministic() {
     let cfg = ShardConfig {
         workers: 4,
         max_lanes: 4,
-        mode: SchedulerMode::Continuous,
-        steal: true,
         session_budget: Some(4),
-        tick_ms: 1.0,
+        ..ShardConfig::default()
     };
     let (_s1, r1) = simulate_shard_trace(&engine, &trace, &cfg);
     let (_s2, r2) = simulate_shard_trace(&engine, &trace, &cfg);
@@ -278,10 +268,8 @@ fn stealing_strictly_beats_no_stealing_on_skewed_routing() {
     let cfg = |steal: bool| ShardConfig {
         workers: 4,
         max_lanes: 4,
-        mode: SchedulerMode::Continuous,
         steal,
-        session_budget: None,
-        tick_ms: 1.0,
+        ..ShardConfig::default()
     };
     let (scheds_on, with_steal) = simulate_shard_trace(&engine, &trace, &cfg(true));
     let (scheds_off, without) = simulate_shard_trace(&engine, &trace, &cfg(false));
@@ -329,10 +317,7 @@ fn steal_storm_burst_drains_and_stays_bit_exact() {
     let cfg = ShardConfig {
         workers: 6,
         max_lanes: 3,
-        mode: SchedulerMode::Continuous,
-        steal: true,
-        session_budget: None,
-        tick_ms: 1.0,
+        ..ShardConfig::default()
     };
     let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
     assert_eq!(rep.completions.len(), trace.requests.len());
@@ -363,6 +348,7 @@ fn multi_chunk_sessions_never_split_across_workers() {
         for c in 0..3 {
             requests.push(TraceRequest {
                 id,
+                model: 0,
                 arrival_ms: (i as f64) * 2.0 + (c as f64) * 7.0,
                 tokens: random_tokens(&mut rng, 6 + (c * 3 + i) % 9),
             });
@@ -375,10 +361,7 @@ fn multi_chunk_sessions_never_split_across_workers() {
         let cfg = ShardConfig {
             workers: 3,
             max_lanes: 2,
-            mode: SchedulerMode::Continuous,
-            steal: true,
-            session_budget: None,
-            tick_ms: 1.0,
+            ..ShardConfig::default()
         };
         let (scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
         assert_eq!(rep.completions.len(), trace.requests.len(), "{engine_kind:?}");
@@ -404,10 +387,8 @@ fn eviction_is_deterministic_across_worker_counts_and_spares_live_lanes() {
         let cfg = ShardConfig {
             workers,
             max_lanes: 4,
-            mode: SchedulerMode::Continuous,
-            steal: true,
             session_budget: Some(3),
-            tick_ms: 1.0,
+            ..ShardConfig::default()
         };
         let (scheds, r1) = simulate_shard_trace(&engine, &trace, &cfg);
         let (_s2, r2) = simulate_shard_trace(&engine, &trace, &cfg);
@@ -443,18 +424,16 @@ fn budget_never_resets_a_session_with_a_queued_chunk() {
     let a_tokens = random_tokens(&mut rng, 30);
     let trace = RequestTrace {
         requests: vec![
-            TraceRequest { id: 1, arrival_ms: 0.0, tokens: s_chunks[0].clone() },
-            TraceRequest { id: 2, arrival_ms: 0.0, tokens: a_tokens },
-            TraceRequest { id: 1, arrival_ms: 0.0, tokens: s_chunks[1].clone() },
+            TraceRequest { id: 1, model: 0, arrival_ms: 0.0, tokens: s_chunks[0].clone() },
+            TraceRequest { id: 2, model: 0, arrival_ms: 0.0, tokens: a_tokens },
+            TraceRequest { id: 1, model: 0, arrival_ms: 0.0, tokens: s_chunks[1].clone() },
         ],
     };
     let cfg = ShardConfig {
         workers: 1,
         max_lanes: 2,
-        mode: SchedulerMode::Continuous,
-        steal: true,
         session_budget: Some(1),
-        tick_ms: 1.0,
+        ..ShardConfig::default()
     };
     let (_scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
     assert_eq!(rep.completions.len(), 3);
@@ -494,6 +473,7 @@ fn budget_never_evicts_a_session_holding_a_lane_driven_manually() {
     let mut rng = Pcg32::seeded(42);
     for id in 0..9u64 {
         sched.offer(StreamItem {
+            model: 0,
             session: id,
             tokens: random_tokens(&mut rng, 4 + (id as usize % 5)),
             submitted: Instant::now(),
@@ -505,7 +485,7 @@ fn budget_never_evicts_a_session_holding_a_lane_driven_manually() {
         sched.step();
         let live = sched.lane_sessions();
         let evicted = sched.enforce_session_budget(1, &[]);
-        for id in &evicted {
+        for (_, id) in &evicted {
             assert!(!live.contains(id), "evicted live session {id}");
         }
         sched.take_completed();
