@@ -459,6 +459,100 @@ fn main() {
         }
     }
 
+    // Block-sparse kernel sweep: the batched block-sparse GEMM vs the
+    // dense packed GEMM vs the old per-lane scalar CSR fallback (what
+    // `WeightMat::Sparse` executed before the block kernel), at the
+    // paper-relevant sparsity levels. Block-structured pruning in the
+    // kernel's own MR × K_BLOCK tile shape, so element sparsity is
+    // what the kernel actually skips. Runs in quick mode too so CI
+    // emits the artifact on every PR. Emits BENCH_sparse.json.
+    {
+        use iqrnn::quant::quantize_symmetric_i8;
+        use iqrnn::sparse::{prune_block_structured, BlockSparseI8, SparseMatrixI8};
+        use iqrnn::tensor::PackedWeightsI8;
+
+        let (rows, cols) = if quick { (64usize, 64usize) } else { (256usize, 256usize) };
+        let batch = 8usize;
+        let reps = if quick { 3 } else { 11 };
+        let inner = if quick { 20usize } else { 200 };
+        println!("\n== block-sparse kernel sweep ({rows}x{cols}, batch {batch}) ==");
+        println!(
+            "{:<10} {:>14} {:>14} {:>14} {:>9} {:>9}",
+            "sparsity", "dense tok/s", "bsr tok/s", "csr tok/s", "bsr/csr", "bsr/dense"
+        );
+        let mut entries: Vec<String> = Vec::new();
+        for &sparsity in &[0.5f64, 0.75, 0.9] {
+            let mut wf = Matrix::<f32>::zeros(rows, cols);
+            rng.fill_uniform_f32(&mut wf.data, -1.0, 1.0);
+            prune_block_structured(&mut wf, sparsity);
+            let (w, _q) = quantize_symmetric_i8(&wf);
+            let packed = PackedWeightsI8::pack(w.clone());
+            let bsr = BlockSparseI8::from_dense(&w);
+            let csr = SparseMatrixI8::from_dense(&w);
+            let mut x = Matrix::<i8>::zeros(batch, cols);
+            for v in &mut x.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let mut out = Matrix::<i32>::zeros(batch, rows);
+            let t_dense = bench(1, reps, || {
+                for _ in 0..inner {
+                    packed.gemm(&x, &[], &mut out);
+                }
+                out.at(0, 0)
+            })
+            .median_secs();
+            let t_bsr = bench(1, reps, || {
+                for _ in 0..inner {
+                    bsr.gemm(&x, &[], &mut out);
+                }
+                out.at(0, 0)
+            })
+            .median_secs();
+            // The pre-block-kernel serving fallback: one scalar CSR
+            // matvec per live lane.
+            let t_csr = bench(1, reps, || {
+                for _ in 0..inner {
+                    for b in 0..batch {
+                        let or = &mut out.data[b * rows..(b + 1) * rows];
+                        csr.matvec_i32(x.row(b), &[], or);
+                    }
+                }
+                out.at(0, 0)
+            })
+            .median_secs();
+            let toks = (batch * inner) as f64;
+            let (d_tps, b_tps, c_tps) = (toks / t_dense, toks / t_bsr, toks / t_csr);
+            println!(
+                "{:<10} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>8.2}x",
+                format!("{:.0}%", sparsity * 100.0),
+                d_tps,
+                b_tps,
+                c_tps,
+                b_tps / c_tps,
+                b_tps / d_tps
+            );
+            entries.push(format!(
+                "    {{\"sparsity\": {:.2}, \"block_density\": {:.4}, \
+                 \"dense_tokens_per_sec\": {:.1}, \"bsr_tokens_per_sec\": {:.1}, \
+                 \"csr_per_lane_tokens_per_sec\": {:.1}}}",
+                sparsity,
+                bsr.block_density(),
+                d_tps,
+                b_tps,
+                c_tps
+            ));
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"sparse_sweep\",\n  \"config\": {{\"rows\": {rows}, \
+             \"cols\": {cols}, \"batch\": {batch}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_sparse.json", &json) {
+            Ok(()) => println!("wrote BENCH_sparse.json"),
+            Err(e) => eprintln!("could not write BENCH_sparse.json: {e}"),
+        }
+    }
+
     // §6 ablation: folded vs unfolded zero-point handling in the gate
     // matmul inner loop.
     println!("\n== §6 ablation: zero-point folding in the int8 matvec ==");

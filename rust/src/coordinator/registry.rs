@@ -96,10 +96,11 @@ impl<'a> ModelRegistry<'a> {
     /// integer engine requires calibration stats) and to record the
     /// packed weight and per-stream state footprints for the memory
     /// accounting. The probe is a deliberate trade-off: exact byte
-    /// accounting needs the built engine (CSR sizes under
-    /// `sparse_weights` depend on the actual weight values, not just
-    /// the spec), and registration happens once per variant at load
-    /// time, never on the serving path.
+    /// accounting needs the built engine (block-sparse sizes under
+    /// `sparse_weights` depend on which weight tiles pruning zeroed,
+    /// not just the spec — a 90%-pruned model registers a fraction of
+    /// its dense footprint), and registration happens once per variant
+    /// at load time, never on the serving path.
     pub fn register(&mut self, spec: ModelSpec<'a>) -> ModelId {
         if spec.engine == StackEngine::Integer {
             assert!(spec.stats.is_some(), "integer engine needs calibration stats");

@@ -22,27 +22,35 @@ use crate::fixedpoint::Rescale;
 use crate::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use crate::quant::params::AsymmetricQuant;
 use crate::quant::recipe::Gate;
-use crate::sparse::SparseMatrixI8;
+use crate::sparse::BlockSparseI8;
 use crate::tensor::qmatmul::PackedWeightsI8;
 use crate::tensor::Matrix;
 use super::layernorm::IntegerLayerNorm;
 use super::spec::{gate_index, LstmSpec};
 
-/// Dense or CSR weight matrix (the sparse rows of Table 1).
+/// Dense or block-sparse weight matrix (the sparse rows of Table 1).
 ///
-/// Dense weights are held pre-packed ([`PackedWeightsI8`]): packing
-/// happens once, at quantization time, so the batched step never packs
-/// or hits scalar remainder tails.
+/// Dense weights are held pre-packed ([`PackedWeightsI8`]); pruned
+/// weights are re-blocked into the same MR × K_BLOCK tile geometry
+/// ([`BlockSparseI8`]) with all-zero blocks dropped. Either way the
+/// conversion happens once, at quantization time, so the batched step
+/// never packs, gathers, or hits scalar remainder tails.
 #[derive(Debug, Clone)]
 pub enum WeightMat {
     Dense(PackedWeightsI8),
-    Sparse(SparseMatrixI8),
+    Sparse(BlockSparseI8),
 }
 
 impl WeightMat {
     /// Wrap a dense int8 matrix, packing it for the tiled batched GEMM.
     pub fn dense(m: Matrix<i8>) -> Self {
         WeightMat::Dense(PackedWeightsI8::pack(m))
+    }
+
+    /// Wrap a pruned int8 matrix, re-blocking it into the block-sparse
+    /// execution format (all-zero MR × K_BLOCK tiles dropped).
+    pub fn sparse(m: Matrix<i8>) -> Self {
+        WeightMat::Sparse(BlockSparseI8::from_dense(&m))
     }
 
     pub fn rows(&self) -> usize {
@@ -69,21 +77,15 @@ impl WeightMat {
     }
 
     /// Batched `out[b,r] = bias[r] + Σ_c w[r,c] x[b,c]`: dense weights
-    /// go through the packed register-tiled GEMM (no scalar tails for
-    /// any batch or depth), CSR weights fall back to per-lane matvec
-    /// (both bit-exact with [`Self::matvec`] per lane).
+    /// go through the packed register-tiled GEMM, block-sparse weights
+    /// through the block-list variant of the same kernel — both run
+    /// zero scalar tails for any batch or depth and are bit-exact with
+    /// [`Self::matvec`] per lane.
     #[inline]
     pub fn matmul_batch(&self, x: &Matrix<i8>, bias: &[i32], out: &mut Matrix<i32>) {
         match self {
             WeightMat::Dense(m) => m.gemm(x, bias, out),
-            WeightMat::Sparse(s) => {
-                debug_assert_eq!(out.cols, s.rows);
-                debug_assert_eq!(out.rows, x.rows);
-                for b in 0..x.rows {
-                    let or = &mut out.data[b * s.rows..(b + 1) * s.rows];
-                    s.matvec_i32(x.row(b), bias, or);
-                }
-            }
+            WeightMat::Sparse(s) => s.gemm(x, bias, out),
         }
     }
 

@@ -7,7 +7,6 @@ use crate::fixedpoint::Rescale;
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::params::{AsymmetricQuant, SymmetricQuant};
 use crate::quant::recipe::Gate;
-use crate::sparse::SparseMatrixI8;
 use crate::tensor::qmatmul::fold_zero_point;
 use crate::tensor::Matrix;
 use super::float_cell::{FloatBatchState, FloatLstm, FloatState, Tap};
@@ -136,7 +135,9 @@ impl CalibrationStats {
 /// Quantizer options.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QuantizeOptions {
-    /// Store gate weight matrices as CSR (for pruned models).
+    /// Store gate/projection/head weight matrices block-sparse (for
+    /// pruned models): all-zero MR × K_BLOCK tiles dropped, kept tiles
+    /// executed by the batched block-list kernel.
     pub sparse_weights: bool,
     /// E5 ablation: integer LN without the `s'` factor.
     pub naive_layernorm: bool,
@@ -282,12 +283,13 @@ fn quantize_weight(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
     (dense, q)
 }
 
-/// Choose the storage form after folding: CSR for pruned models,
-/// otherwise the packed register-tiled form — packing happens here, at
+/// Choose the storage form after folding: block-sparse (all-zero
+/// MR × K_BLOCK tiles dropped) for pruned models, otherwise the packed
+/// register-tiled form — either conversion happens here, at
 /// quantization time, never on the step path.
 fn sparsify(m: Matrix<i8>, sparse: bool) -> WeightMat {
     if sparse {
-        WeightMat::Sparse(SparseMatrixI8::from_dense(&m))
+        WeightMat::sparse(m)
     } else {
         WeightMat::dense(m)
     }

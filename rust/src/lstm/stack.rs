@@ -113,6 +113,16 @@ impl StackWeights {
     /// Collect calibration statistics for every layer by running the
     /// float stack over the calibration sequences (§4): layer `l`'s
     /// input is layer `l-1`'s float output.
+    ///
+    /// Both the range collection *and* the inter-layer output
+    /// generation drive the batched float path with the same
+    /// lane-packing discipline (longest sequences first so the live
+    /// set stays a dense prefix, finished lanes retired by truncation)
+    /// — one GEMM wave per layer instead of per-sequence matvecs.
+    /// Because the batched step is bit-exact with the sequential one
+    /// per lane, the produced ranges are identical to
+    /// [`Self::calibrate_sequential`], which the
+    /// `batched_calibrate_matches_sequential` test pins.
     pub fn calibrate(&self, sequences: &[Vec<Vec<f32>>]) -> Vec<CalibrationStats> {
         let floats: Vec<FloatLstm> =
             self.layers.iter().map(|w| FloatLstm::new(w.clone())).collect();
@@ -120,8 +130,27 @@ impl StackWeights {
             (0..floats.len()).map(|_| CalibrationStats::default()).collect();
         let mut current: Vec<Vec<Vec<f32>>> = sequences.to_vec();
         for (l, f) in floats.iter().enumerate() {
-            let stats = CalibrationStats::collect(f, &current);
+            per_layer[l] = CalibrationStats::collect(f, &current);
             // Produce this layer's outputs as the next layer's inputs.
+            if l + 1 < floats.len() {
+                current = run_layer_batched(f, &current);
+            }
+        }
+        per_layer
+    }
+
+    /// The sequential oracle for [`Self::calibrate`]: per-sequence
+    /// `run_sequence` everywhere. Kept as the reference the batched
+    /// collector is pinned against (identical ranges, bit-exact
+    /// inter-layer activations).
+    pub fn calibrate_sequential(&self, sequences: &[Vec<Vec<f32>>]) -> Vec<CalibrationStats> {
+        let floats: Vec<FloatLstm> =
+            self.layers.iter().map(|w| FloatLstm::new(w.clone())).collect();
+        let mut per_layer: Vec<CalibrationStats> =
+            (0..floats.len()).map(|_| CalibrationStats::default()).collect();
+        let mut current: Vec<Vec<Vec<f32>>> = sequences.to_vec();
+        for (l, f) in floats.iter().enumerate() {
+            per_layer[l] = CalibrationStats::collect_sequential(f, &current);
             if l + 1 < floats.len() {
                 current = current
                     .iter()
@@ -131,10 +160,56 @@ impl StackWeights {
                     })
                     .collect();
             }
-            per_layer[l] = stats;
         }
         per_layer
     }
+}
+
+/// Run every (ragged) sequence through one float layer with the batched
+/// step, returning per-sequence output sequences in the caller's order.
+/// Lane packing is identical to [`CalibrationStats::collect`]: longest
+/// first, finished lanes retired by truncating the dense prefix. Each
+/// lane's trajectory is bit-exact with sequential `run_sequence`.
+fn run_layer_batched(f: &FloatLstm, sequences: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+    let mut outs: Vec<Vec<Vec<f32>>> =
+        sequences.iter().map(|s| Vec::with_capacity(s.len())).collect();
+    let mut order: Vec<usize> = (0..sequences.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(sequences[i].len()));
+    let mut live = order.len();
+    while live > 0 && sequences[order[live - 1]].is_empty() {
+        live -= 1;
+    }
+    if live == 0 {
+        return outs;
+    }
+    let n_input = f.spec().n_input;
+    let mut state = FloatBatchState::zeros(f.spec(), live);
+    let mut x = Matrix::<f32>::zeros(live, n_input);
+    let mut t = 0usize;
+    while live > 0 {
+        // Retire lanes whose sequences ended (suffix of the order).
+        let mut still = live;
+        while still > 0 && sequences[order[still - 1]].len() <= t {
+            still -= 1;
+        }
+        if still < live {
+            state.truncate(still);
+            live = still;
+            if live == 0 {
+                break;
+            }
+        }
+        x.resize(live, n_input);
+        for (lane, &si) in order[..live].iter().enumerate() {
+            x.row_mut(lane).copy_from_slice(&sequences[si][t]);
+        }
+        f.step_batch(&x, &mut state);
+        for (lane, &si) in order[..live].iter().enumerate() {
+            outs[si].push(state.h.row(lane).to_vec());
+        }
+        t += 1;
+    }
+    outs
 }
 
 impl LstmStack {
@@ -674,6 +749,45 @@ mod tests {
     }
 
     #[test]
+    fn batched_calibrate_matches_sequential() {
+        use crate::quant::observer::MinMaxObserver;
+        fn assert_obs_eq(a: &MinMaxObserver, b: &MinMaxObserver, what: &str) {
+            assert_eq!(a.count, b.count, "{what} count");
+            if a.count > 0 {
+                assert_eq!(a.min.to_bits(), b.min.to_bits(), "{what} min");
+                assert_eq!(a.max.to_bits(), b.max.to_bits(), "{what} max");
+            }
+        }
+        let mut rng = Pcg32::seeded(21);
+        let spec = LstmSpec::plain(10, 24);
+        let weights = StackWeights::random(10, spec, 3, &mut rng);
+        // Ragged lengths, ties, and an empty sequence: the adversarial
+        // lane-packing cases.
+        let lens = [13usize, 5, 0, 9, 13, 1, 7];
+        let calib: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&t| {
+                (0..t)
+                    .map(|_| (0..10).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let batched = weights.calibrate(&calib);
+        let sequential = weights.calibrate_sequential(&calib);
+        assert_eq!(batched.len(), sequential.len());
+        for (l, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+            assert_eq!(b.sequences, s.sequences, "layer {l} sequences");
+            assert_obs_eq(&b.x, &s.x, &format!("layer {l} x"));
+            assert_obs_eq(&b.h, &s.h, &format!("layer {l} h"));
+            assert_obs_eq(&b.m, &s.m, &format!("layer {l} m"));
+            assert_obs_eq(&b.c, &s.c, &format!("layer {l} c"));
+            for (g, (bo, so)) in b.gate_out.iter().zip(&s.gate_out).enumerate() {
+                assert_obs_eq(bo, so, &format!("layer {l} gate {g}"));
+            }
+        }
+    }
+
+    #[test]
     fn sparse_integer_stack_runs() {
         let mut rng = Pcg32::seeded(12);
         let spec = LstmSpec::plain(10, 24);
@@ -694,8 +808,8 @@ mod tests {
         let mut s2 = dense.zero_state();
         let o1 = integer.run_sequence(&seq, &mut s1);
         let o2 = dense.run_sequence(&seq, &mut s2);
-        // CSR vs dense execution of the same quantized weights must be
-        // bit-identical.
+        // Block-sparse vs dense execution of the same quantized weights
+        // must be bit-identical.
         assert_eq!(o1, o2);
     }
 }

@@ -8,11 +8,11 @@ use anyhow::{ensure, Context, Result};
 
 use crate::lstm::{
     BatchLayerState, CalibrationStats, LayerState, LstmSpec, LstmStack,
-    LstmWeights, QuantizeOptions, StackEngine, StackWeights,
+    LstmWeights, QuantizeOptions, StackEngine, StackWeights, WeightMat,
 };
 use crate::quant::params::SymmetricQuant;
 use crate::quant::quantize_symmetric_i8;
-use crate::tensor::{gemm_f32, matvec_f32, pad_lanes, Matrix, PackedWeightsI8};
+use crate::tensor::{gemm_f32, matvec_f32, pad_lanes, Matrix};
 use super::weights::TensorFile;
 
 /// Character vocabulary shared with `python/compile/model.py`.
@@ -44,11 +44,12 @@ pub struct CharLm {
 /// The head under a given engine: float weights or quantized int8.
 enum HeadEngine {
     Float,
-    /// int8 symmetric weights (pre-packed for the tiled batched GEMM);
+    /// int8 symmetric weights — pre-packed for the tiled batched GEMM,
+    /// or block-sparse when the model is pruned (`sparse_weights`);
     /// input h is requantized from f32 with the static head input
     /// scale; accumulator dequantized to float logits.
     Integer {
-        w_q: PackedWeightsI8,
+        w_q: WeightMat,
         w_scale: f64,
     },
 }
@@ -182,10 +183,12 @@ impl CharLm {
             StackEngine::Float | StackEngine::Hybrid => HeadEngine::Float,
             StackEngine::Integer => {
                 let (w_q, q) = quantize_symmetric_i8(&self.out_w);
-                HeadEngine::Integer {
-                    w_q: PackedWeightsI8::pack(w_q),
-                    w_scale: q.scale,
-                }
+                let w_q = if opts.sparse_weights {
+                    WeightMat::sparse(w_q)
+                } else {
+                    WeightMat::dense(w_q)
+                };
+                HeadEngine::Integer { w_q, w_scale: q.scale }
             }
         };
         CharLmEngine {
@@ -411,7 +414,7 @@ impl CharLmEngine {
                 for (q, &v) in qh.data.iter_mut().zip(h.data.iter()) {
                     *q = hq.quantize_i8(f64::from(v));
                 }
-                w_q.gemm(qh, &[], acc);
+                w_q.matmul_batch(qh, &[], acc);
                 let k = (w_scale * s_h) as f32;
                 for (l, &a) in logits.data.iter_mut().zip(acc.data.iter()) {
                     *l = a as f32 * k;

@@ -1,0 +1,452 @@
+//! Block-sparse int8 storage in the packed kernel's own geometry, so
+//! pruned weights ride the register-tiled batched serving path instead
+//! of falling back to per-lane scalar matvecs.
+//!
+//! [`BlockSparseI8`] re-blocks a dense int8 matrix at quantization time
+//! into the exact tiles [`PackedWeightsI8`] executes: panels of
+//! [`MR`]-output-row × [`K_BLOCK`]-byte blocks, zero-padded at the row
+//! and K edges, keeping only blocks with at least one non-zero. Each
+//! stored block is one 32-byte AVX2 load per row — the batched kernel
+//! does a sign-extend + `pmaddwd` 4-row × [`LANE_TILE`]-lane FMA per
+//! block, identical to the dense panel kernel except that the `kb` loop
+//! walks the panel's stored-block list instead of `0..k_blocks`.
+//!
+//! Why BSR and not CSR here: at int8, CSR costs 3 bytes per non-zero
+//! (1B value + 2B column index) plus pointer overhead, so it only
+//! shrinks the model below ~33% density — and its gather-indexed inner
+//! loop defeats SIMD entirely. BSR keeps the dense kernel's streaming
+//! loads (indices amortize to 2 bytes per *128-byte block*) and skips
+//! work at block granularity, which is what structured pruning
+//! ([`prune_block_structured`]) produces.
+//!
+//! Bit-exactness: integer accumulation is associative and commutative,
+//! and every skipped block is all-zero, so any block order and any
+//! tiling produce the same int32 sums as the per-lane CSR matvec and
+//! the dense kernels — the property `rust/tests/sparse_serving.rs`
+//! pins across shapes, sparsities, and live-lane counts. Remainders
+//! follow the packed kernel's padding contract exactly (K tails staged,
+//! missing lanes re-pointed at the last live row, pad rows skipped at
+//! writeback), so the batched path records **zero** scalar-tail MACs in
+//! the debug [`tail_audit`] counter.
+//!
+//! [`PackedWeightsI8`]: crate::tensor::PackedWeightsI8
+//! [`tail_audit`]: crate::tensor::qmatmul::tail_audit
+//! [`prune_block_structured`]: super::prune::prune_block_structured
+
+use crate::tensor::qmatmul::{bias_at, K_BLOCK, MR};
+#[cfg(target_arch = "x86_64")]
+use crate::tensor::qmatmul::{hsum_epi32, widen_i8, LANE_TILE};
+use crate::tensor::Matrix;
+#[cfg(target_arch = "x86_64")]
+use crate::util::avx2_enabled;
+
+/// Bytes in one stored block: [`MR`] rows × [`K_BLOCK`] columns.
+pub const BLOCK_BYTES: usize = MR * K_BLOCK;
+
+/// Block-sparse int8 matrix in the packed panel geometry.
+///
+/// Panel `p` covers output rows `p*MR .. p*MR+MR`; its stored blocks
+/// are listed in ascending `kb` (K-block index) order. Within a block,
+/// row `q`'s [`K_BLOCK`] bytes sit at `q * K_BLOCK` — the same
+/// sub-layout as a [`PackedWeightsI8`] panel chunk, zero-padded past
+/// the logical row/column extents.
+///
+/// [`PackedWeightsI8`]: crate::tensor::PackedWeightsI8
+#[derive(Debug, Clone)]
+pub struct BlockSparseI8 {
+    /// Logical row count (output features).
+    pub rows: usize,
+    /// Logical column count (the K / reduction dimension).
+    pub cols: usize,
+    /// Stored-block start offsets per panel, length `ceil(rows/MR)+1`.
+    pub panel_ptr: Vec<u32>,
+    /// K-block index (`kb`) of each stored block, ascending per panel.
+    pub block_kb: Vec<u16>,
+    /// Stored blocks, [`BLOCK_BYTES`] each, zero-padded.
+    pub blocks: Vec<i8>,
+}
+
+impl BlockSparseI8 {
+    /// Re-block a dense int8 matrix, dropping all-zero MR×K_BLOCK
+    /// tiles. Pad rows/columns (past `rows`/`cols`) are stored as
+    /// zero inside kept blocks, exactly like the dense panel packing.
+    pub fn from_dense(w: &Matrix<i8>) -> Self {
+        let k_blocks = w.cols.div_ceil(K_BLOCK);
+        assert!(k_blocks <= u16::MAX as usize + 1, "K blocks exceed u16 index");
+        let n_panels = w.rows.div_ceil(MR);
+        let mut panel_ptr = Vec::with_capacity(n_panels + 1);
+        let mut block_kb = Vec::new();
+        let mut blocks = Vec::new();
+        panel_ptr.push(0u32);
+        let mut staged = [0i8; BLOCK_BYTES];
+        for p in 0..n_panels {
+            for kb in 0..k_blocks {
+                staged.fill(0);
+                let mut any = false;
+                let k0 = kb * K_BLOCK;
+                let kn = (w.cols - k0).min(K_BLOCK);
+                for q in 0..MR {
+                    let r = p * MR + q;
+                    if r >= w.rows {
+                        break;
+                    }
+                    let src = &w.row(r)[k0..k0 + kn];
+                    if src.iter().any(|&v| v != 0) {
+                        any = true;
+                    }
+                    staged[q * K_BLOCK..q * K_BLOCK + kn].copy_from_slice(src);
+                }
+                if any {
+                    block_kb.push(kb as u16);
+                    blocks.extend_from_slice(&staged);
+                }
+            }
+            panel_ptr.push(block_kb.len() as u32);
+        }
+        BlockSparseI8 { rows: w.rows, cols: w.cols, panel_ptr, block_kb, blocks }
+    }
+
+    /// Stored blocks.
+    pub fn block_count(&self) -> usize {
+        self.block_kb.len()
+    }
+
+    /// Stored non-zero values (explicit zeros inside kept blocks are
+    /// not counted — this is the effective-FLOP numerator's complement).
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Fraction of the dense block grid that is stored (1.0 = every
+    /// block kept). The batched kernel's work scales with this, not
+    /// with element-level sparsity.
+    pub fn block_density(&self) -> f64 {
+        let total = self.rows.div_ceil(MR) * self.cols.div_ceil(K_BLOCK);
+        if total == 0 {
+            return 0.0;
+        }
+        self.block_count() as f64 / total as f64
+    }
+
+    /// Storage bytes: block payload (1B/entry) + per-block kb index
+    /// (2B) + panel pointers (4B). This is the resident size the
+    /// registry and `ServingReport` account for pruned models.
+    pub fn storage_bytes(&self) -> usize {
+        self.blocks.len() + 2 * self.block_kb.len() + 4 * self.panel_ptr.len()
+    }
+
+    /// Sparse `out[r] = folded_bias[r] + Σ w[r,c] x[c]` over stored
+    /// blocks — the sequential path and the scalar reference the
+    /// batched kernel is bit-exact with. `folded_bias` is either empty
+    /// or covers every row (a short slice panics, never reads zeros).
+    pub fn matvec_i32(&self, x: &[i8], folded_bias: &[i32], out: &mut [i32]) {
+        assert_eq!(self.cols, x.len());
+        assert_eq!(self.rows, out.len());
+        debug_assert!(folded_bias.is_empty() || folded_bias.len() == self.rows);
+        let n_panels = self.rows.div_ceil(MR);
+        for p in 0..n_panels {
+            let start = self.panel_ptr[p] as usize;
+            let end = self.panel_ptr[p + 1] as usize;
+            let prow = p * MR;
+            let rows_here = (self.rows - prow).min(MR);
+            for q in 0..rows_here {
+                let mut acc = 0i32;
+                for bi in start..end {
+                    let k0 = self.block_kb[bi] as usize * K_BLOCK;
+                    let kn = (self.cols - k0).min(K_BLOCK);
+                    let blk = &self.blocks[bi * BLOCK_BYTES + q * K_BLOCK..][..kn];
+                    for (w, &xv) in blk.iter().zip(&x[k0..k0 + kn]) {
+                        acc += i32::from(*w) * i32::from(xv);
+                    }
+                }
+                out[prow + q] = acc + bias_at(folded_bias, prow + q);
+            }
+        }
+    }
+
+    /// Batched block-sparse GEMM: `x` is `[batch, cols]` row-major
+    /// activations, `out` is `[batch, rows]` with
+    /// `out[b,r] = folded_bias[r] + Σ_c w[r,c] * x[b,c]`.
+    ///
+    /// On AVX2 this runs the block-list panel kernel — full 32-wide
+    /// `pmaddwd` multiply-adds per stored block, zero scalar-tail
+    /// iterations for any `batch` and any shape. Without AVX2, or
+    /// under `PALLAS_FORCE_SCALAR`, it runs [`Self::matvec_i32`] per
+    /// lane. Either way the result is bit-exact with the per-lane CSR
+    /// matvec over the same weights.
+    pub fn gemm(&self, x: &Matrix<i8>, folded_bias: &[i32], out: &mut Matrix<i32>) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!(out.rows, x.rows);
+        assert_eq!(out.cols, self.rows);
+        debug_assert!(folded_bias.is_empty() || folded_bias.len() == self.rows);
+        if x.rows == 0 || self.rows == 0 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_enabled() {
+                // SAFETY: feature checked at runtime.
+                unsafe { self.gemm_avx2(x, folded_bias, out) };
+                return;
+            }
+        }
+        for b in 0..x.rows {
+            let or = &mut out.data[b * self.rows..(b + 1) * self.rows];
+            self.matvec_i32(x.row(b), folded_bias, or);
+        }
+    }
+
+    /// The block-list panel kernel: per lane tile (4 activation rows),
+    /// per panel (4 weight rows), each row's accumulators walk the
+    /// panel's *stored* blocks — each 32-byte weight block is
+    /// sign-extended once and `pmaddwd`-accumulated four times. The
+    /// padding contract is the dense kernel's: a ragged last K block is
+    /// read from the staged tail buffer (block zero-padding annihilates
+    /// the slack), missing tile lanes re-point at the last live row,
+    /// and pad rows are skipped at writeback.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_avx2(&self, x: &Matrix<i8>, folded_bias: &[i32], out: &mut Matrix<i32>) {
+        use std::arch::x86_64::*;
+        let rows = self.rows;
+        let cols = self.cols;
+        let k_tail = cols % K_BLOCK;
+        let full_blocks = cols / K_BLOCK;
+        let n_panels = rows.div_ceil(MR);
+
+        // Staging for the ragged K tail, shared with the dense kernel's
+        // scheme: the last 32-byte block of each lane is copied here so
+        // SIMD loads never run off the row.
+        let mut tails = [[0i8; K_BLOCK]; LANE_TILE];
+
+        let mut b = 0usize;
+        while b < x.rows {
+            let live = (x.rows - b).min(LANE_TILE);
+            // A partial tile re-points its missing lanes at the tile's
+            // last live row: computed redundantly, never written back.
+            let lanes: [&[i8]; LANE_TILE] =
+                std::array::from_fn(|l| x.row(b + l.min(live - 1)));
+            if k_tail != 0 {
+                for (t, lane) in tails.iter_mut().zip(lanes.iter()) {
+                    t[..k_tail].copy_from_slice(&lane[full_blocks * K_BLOCK..]);
+                }
+            }
+            for p in 0..n_panels {
+                let start = self.panel_ptr[p] as usize;
+                let end = self.panel_ptr[p + 1] as usize;
+                let prow = p * MR;
+                let rows_here = (rows - prow).min(MR);
+                for q in 0..rows_here {
+                    let mut acc = [_mm256_setzero_si256(); LANE_TILE];
+                    for bi in start..end {
+                        let kb = *self.block_kb.get_unchecked(bi) as usize;
+                        let wv = _mm256_loadu_si256(
+                            self.blocks.as_ptr().add(bi * BLOCK_BYTES + q * K_BLOCK)
+                                as *const __m256i,
+                        );
+                        let (w_lo, w_hi) = widen_i8(wv);
+                        let staged = k_tail != 0 && kb == full_blocks;
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            let xp = if staged {
+                                tails[l].as_ptr()
+                            } else {
+                                lanes[l].as_ptr().add(kb * K_BLOCK)
+                            };
+                            let xv = _mm256_loadu_si256(xp as *const __m256i);
+                            let (x_lo, x_hi) = widen_i8(xv);
+                            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_lo, x_lo));
+                            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_hi, x_hi));
+                        }
+                    }
+                    let bias = bias_at(folded_bias, prow + q);
+                    for (l, a) in acc.iter().enumerate().take(live) {
+                        out.data[(b + l) * rows + prow + q] = hsum_epi32(*a) + bias;
+                    }
+                }
+            }
+            b += live;
+        }
+    }
+
+    /// Decompress back to dense (tests).
+    pub fn to_dense(&self) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(self.rows, self.cols);
+        let n_panels = self.rows.div_ceil(MR);
+        for p in 0..n_panels {
+            for bi in self.panel_ptr[p] as usize..self.panel_ptr[p + 1] as usize {
+                let k0 = self.block_kb[bi] as usize * K_BLOCK;
+                let kn = (self.cols - k0).min(K_BLOCK);
+                for q in 0..MR {
+                    let r = p * MR + q;
+                    if r >= self.rows {
+                        break;
+                    }
+                    w.row_mut(r)[k0..k0 + kn]
+                        .copy_from_slice(&self.blocks[bi * BLOCK_BYTES + q * K_BLOCK..][..kn]);
+                }
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::SparseMatrixI8;
+    use crate::tensor::qmatmul::{matvec_i8_i32, tail_audit};
+    use crate::util::{proptest, Pcg32};
+
+    fn random_sparse_dense(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(rows, cols);
+        for v in &mut w.data {
+            if rng.next_f64() < density {
+                *v = rng.range_i32(-127, 127) as i8;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn roundtrip_dense_bsr_dense() {
+        proptest::check("bsr-roundtrip", |rng| {
+            let rows = 1 + rng.below(40) as usize;
+            let cols = 1 + rng.below(80) as usize;
+            let density = [0.0, 0.1, 0.5, 1.0][rng.below(4) as usize];
+            let w = random_sparse_dense(rng, rows, cols, density);
+            let s = BlockSparseI8::from_dense(&w);
+            assert_eq!(s.to_dense(), w);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_dense_and_csr() {
+        proptest::check("bsr-matvec", |rng| {
+            let rows = 1 + rng.below(40) as usize;
+            let cols = 1 + rng.below(80) as usize;
+            let density = [0.05, 0.25, 0.5][rng.below(3) as usize];
+            let w = random_sparse_dense(rng, rows, cols, density);
+            let x: Vec<i8> =
+                (0..cols).map(|_| rng.range_i32(-128, 127) as i8).collect();
+            let bias: Vec<i32> =
+                (0..rows).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let s = BlockSparseI8::from_dense(&w);
+            let csr = SparseMatrixI8::from_dense(&w);
+            let mut dense_out = vec![0i32; rows];
+            let mut bsr_out = vec![0i32; rows];
+            let mut csr_out = vec![0i32; rows];
+            matvec_i8_i32(&w, &x, &bias, &mut dense_out);
+            s.matvec_i32(&x, &bias, &mut bsr_out);
+            csr.matvec_i32(&x, &bias, &mut csr_out);
+            assert_eq!(bsr_out, dense_out);
+            assert_eq!(bsr_out, csr_out);
+        });
+    }
+
+    #[test]
+    fn gemm_matches_matvec_per_lane() {
+        proptest::check("bsr-gemm-eq-matvec", |rng| {
+            let rows = 1 + rng.below(70) as usize;
+            let cols = 1 + rng.below(100) as usize;
+            let batch = 1 + rng.below(9) as usize;
+            let density = [0.05, 0.25, 0.5][rng.below(3) as usize];
+            let w = random_sparse_dense(rng, rows, cols, density);
+            let s = BlockSparseI8::from_dense(&w);
+            let mut x = Matrix::<i8>::zeros(batch, cols);
+            for v in &mut x.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let bias: Vec<i32> =
+                (0..rows).map(|_| rng.range_i32(-100_000, 100_000)).collect();
+            let mut out = Matrix::<i32>::zeros(batch, rows);
+            s.gemm(&x, &bias, &mut out);
+            for b in 0..batch {
+                let mut single = vec![0i32; rows];
+                s.matvec_i32(x.row(b), &bias, &mut single);
+                assert_eq!(out.row(b), &single[..], "lane {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_runs_tail_free() {
+        // Ragged everything: rows 33, cols 47, odd batches. The block
+        // kernel must never record scalar-tail work. (Release builds
+        // compile the counter out; the CI debug jobs carry the check.)
+        let mut rng = Pcg32::seeded(311);
+        let w = random_sparse_dense(&mut rng, 33, 47, 0.3);
+        let s = BlockSparseI8::from_dense(&w);
+        tail_audit::reset();
+        for &batch in &[1usize, 3, 5, 7, 8] {
+            let mut x = Matrix::<i8>::zeros(batch, 47);
+            for v in &mut x.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let mut out = Matrix::<i32>::zeros(batch, 33);
+            s.gemm(&x, &[], &mut out);
+        }
+        assert_eq!(tail_audit::count(), 0, "block-sparse kernel recorded tails");
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_bias_slice_panics() {
+        let mut w = Matrix::<i8>::zeros(3, 4);
+        w.set(2, 1, 7);
+        let s = BlockSparseI8::from_dense(&w);
+        let x = vec![1i8; 4];
+        let mut out = vec![0i32; 3];
+        s.matvec_i32(&x, &[5, 6], &mut out);
+    }
+
+    #[test]
+    fn empty_blocks_are_dropped() {
+        // One non-zero in an otherwise zero 8x64 matrix: exactly one
+        // block survives, and rows in empty panels still get their bias.
+        let mut w = Matrix::<i8>::zeros(8, 64);
+        w.set(5, 40, 3);
+        let s = BlockSparseI8::from_dense(&w);
+        assert_eq!(s.block_count(), 1);
+        assert_eq!(s.nnz(), 1);
+        let x = vec![2i8; 64];
+        let bias: Vec<i32> = (0..8).map(|r| r as i32 * 10).collect();
+        let mut out = vec![0i32; 8];
+        s.matvec_i32(&x, &bias, &mut out);
+        for (r, &o) in out.iter().enumerate() {
+            let want = if r == 5 { 6 + 50 } else { r as i32 * 10 };
+            assert_eq!(o, want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_at_structured_sparsity() {
+        // 128x128 with 3/4 of the blocks zeroed: BSR must come in well
+        // under the dense byte count (CSR would not at this density).
+        let mut rng = Pcg32::seeded(313);
+        let mut w = random_sparse_dense(&mut rng, 128, 128, 1.0);
+        let k_blocks = 128usize.div_ceil(K_BLOCK);
+        for p in 0..128 / MR {
+            for kb in 0..k_blocks {
+                if (p + kb) % 4 != 0 {
+                    for q in 0..MR {
+                        let r = p * MR + q;
+                        let k0 = kb * K_BLOCK;
+                        w.row_mut(r)[k0..(k0 + K_BLOCK).min(128)].fill(0);
+                    }
+                }
+            }
+        }
+        let s = BlockSparseI8::from_dense(&w);
+        assert!(s.block_density() < 0.3, "density {}", s.block_density());
+        assert!(
+            s.storage_bytes() < 128 * 128 / 2,
+            "bsr bytes {} vs dense {}",
+            s.storage_bytes(),
+            128 * 128
+        );
+        assert_eq!(
+            s.storage_bytes(),
+            s.block_count() * (BLOCK_BYTES + 2) + 4 * (128 / MR + 1)
+        );
+    }
+}

@@ -2,6 +2,7 @@
 //! integer matvec kernel and byte-size accounting (the Table 1 size
 //! column for the sparse rows).
 
+use crate::tensor::qmatmul::bias_at;
 use crate::tensor::Matrix;
 
 /// CSR int8 matrix: per-row column indices + values.
@@ -46,9 +47,14 @@ impl SparseMatrixI8 {
     }
 
     /// Sparse `out[r] = folded_bias[r] + Σ w[r,c] x[c]` over non-zeros.
+    ///
+    /// `folded_bias` is either empty (no bias) or covers every row — a
+    /// short non-empty slice is a caller bug and panics instead of
+    /// silently reading zeros, same contract as the dense kernels.
     pub fn matvec_i32(&self, x: &[i8], folded_bias: &[i32], out: &mut [i32]) {
         assert_eq!(self.cols, x.len());
         assert_eq!(self.rows, out.len());
+        debug_assert!(folded_bias.is_empty() || folded_bias.len() == self.rows);
         for r in 0..self.rows {
             let start = self.row_ptr[r] as usize;
             let end = self.row_ptr[r + 1] as usize;
@@ -57,7 +63,7 @@ impl SparseMatrixI8 {
                 acc += i32::from(self.values[i])
                     * i32::from(x[self.col_idx[i] as usize]);
             }
-            out[r] = acc + folded_bias.get(r).copied().unwrap_or(0);
+            out[r] = acc + bias_at(folded_bias, r);
         }
     }
 
@@ -134,6 +140,19 @@ mod tests {
             s.storage_bytes(),
             s.nnz() * 3 + 4 * (128 + 1)
         );
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_bias_slice_panics() {
+        // A non-empty bias shorter than `rows` used to be silently
+        // zero-extended by `.get(r).unwrap_or(0)`; it must panic.
+        let mut w = Matrix::<i8>::zeros(3, 4);
+        w.set(1, 0, 5);
+        let s = SparseMatrixI8::from_dense(&w);
+        let x = vec![1i8; 4];
+        let mut out = vec![0i32; 3];
+        s.matvec_i32(&x, &[7, 8], &mut out);
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! Sparsity support for the Table 1 "Sparse LSTM" / "Sparse CIFG" rows.
 //!
 //! The paper evaluates 50%-sparse production models. We reproduce the
-//! mechanism: magnitude pruning to a target sparsity ([`prune`]) and a
-//! compressed block-row storage with a sparse int8 kernel ([`csr`]) so
-//! the size *and* speed implications of sparsity are measurable.
+//! mechanism end to end: magnitude and structured pruning to a target
+//! sparsity ([`prune`]), compressed row storage with a reference sparse
+//! int8 matvec ([`csr`]), and a block-sparse execution format in the
+//! packed kernel's tile geometry ([`bsr`]) so pruned models ride the
+//! same register-tiled batched serving path as dense ones — the size
+//! *and* speed implications of sparsity are both measurable.
 
+pub mod bsr;
 pub mod csr;
 pub mod prune;
 
+pub use bsr::BlockSparseI8;
 pub use csr::SparseMatrixI8;
-pub use prune::{prune_magnitude, sparsity_of};
+pub use prune::{prune_block_structured, prune_magnitude, sparsity_of};

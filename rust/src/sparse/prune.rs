@@ -4,6 +4,7 @@
 //! reproduce the standard magnitude criterion, optionally in blocks of
 //! 4 along the row (the shape ARM/TFLite sparse kernels exploit).
 
+use crate::tensor::qmatmul::{K_BLOCK, MR};
 use crate::tensor::Matrix;
 
 /// Zero the smallest-|w| `sparsity` fraction of entries (per-matrix
@@ -50,6 +51,52 @@ pub fn prune_magnitude_block4(w: &mut Matrix<f32>, sparsity: f64) {
     for &(_, b) in norms.iter().take(k) {
         for v in &mut w.data[b * 4..b * 4 + 4] {
             *v = 0.0;
+        }
+    }
+}
+
+/// Structured (block-granular) magnitude pruning in the execution
+/// kernel's own tile shape: rank [`MR`]-row × [`K_BLOCK`]-column tiles
+/// by L1 norm and zero the smallest `sparsity` fraction *of tiles*.
+///
+/// This is the pruning criterion that the block-sparse kernel
+/// ([`crate::sparse::BlockSparseI8`]) actually converts into skipped
+/// work: element-level magnitude pruning scatters zeros through blocks
+/// that must still be stored and multiplied, whereas a zeroed tile here
+/// is a dropped block there, so element sparsity ≈ block sparsity ≈
+/// kernel speedup. Ragged edge tiles (fewer than `MR` rows or `K_BLOCK`
+/// columns) participate with their live entries only.
+pub fn prune_block_structured(w: &mut Matrix<f32>, sparsity: f64) {
+    assert!((0.0..=1.0).contains(&sparsity));
+    if sparsity == 0.0 || w.is_empty() {
+        return;
+    }
+    let row_tiles = w.rows.div_ceil(MR);
+    let col_tiles = w.cols.div_ceil(K_BLOCK);
+    let n_tiles = row_tiles * col_tiles;
+    let mut norms: Vec<(f32, usize)> = Vec::with_capacity(n_tiles);
+    for p in 0..row_tiles {
+        for kb in 0..col_tiles {
+            let mut s = 0.0f32;
+            let k0 = kb * K_BLOCK;
+            let kn = (w.cols - k0).min(K_BLOCK);
+            for q in 0..MR.min(w.rows - p * MR) {
+                s += w.row(p * MR + q)[k0..k0 + kn]
+                    .iter()
+                    .map(|v| v.abs())
+                    .sum::<f32>();
+            }
+            norms.push((s, p * col_tiles + kb));
+        }
+    }
+    norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let k = ((n_tiles as f64) * sparsity).round() as usize;
+    for &(_, t) in norms.iter().take(k) {
+        let (p, kb) = (t / col_tiles, t % col_tiles);
+        let k0 = kb * K_BLOCK;
+        let kn = (w.cols - k0).min(K_BLOCK);
+        for q in 0..MR.min(w.rows - p * MR) {
+            w.row_mut(p * MR + q)[k0..k0 + kn].fill(0.0);
         }
     }
 }
@@ -116,6 +163,43 @@ mod tests {
             let zeros = blk.iter().filter(|v| **v == 0.0).count();
             assert!(zeros == 0 || zeros == 4, "partial block {blk:?}");
         }
+    }
+
+    #[test]
+    fn structured_prune_zeroes_whole_tiles() {
+        // 64x96 divides evenly into 16x3 MR×K_BLOCK tiles; at 0.75 the
+        // element sparsity must match the tile sparsity exactly and
+        // every tile must be uniformly dead or alive.
+        let mut w = random_matrix(5, 64, 96);
+        prune_block_structured(&mut w, 0.75);
+        let s = sparsity_of(&w);
+        assert!((s - 0.75).abs() < 0.01, "sparsity {s}");
+        for p in 0..64 / MR {
+            for kb in 0..96 / K_BLOCK {
+                let mut zeros = 0;
+                for q in 0..MR {
+                    let k0 = kb * K_BLOCK;
+                    zeros += w.row(p * MR + q)[k0..k0 + K_BLOCK]
+                        .iter()
+                        .filter(|v| **v == 0.0)
+                        .count();
+                }
+                assert!(
+                    zeros == 0 || zeros == MR * K_BLOCK,
+                    "partial tile ({p},{kb}): {zeros} zeros"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structured_prune_handles_ragged_edges() {
+        // 33x47: ragged in both dimensions. Must not panic, and must
+        // prune roughly the requested fraction of tiles.
+        let mut w = random_matrix(6, 33, 47);
+        prune_block_structured(&mut w, 0.5);
+        let s = sparsity_of(&w);
+        assert!(s > 0.3 && s < 0.7, "sparsity {s}");
     }
 
     #[test]

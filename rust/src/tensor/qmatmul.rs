@@ -107,11 +107,12 @@ pub mod tail_audit {
     }
 }
 
-/// Bias lookup shared by every kernel: an empty slice means "no bias";
-/// a *short* non-empty slice is a caller bug — debug-asserted here, and
-/// the direct index still panics (never silently zeroes) in release.
+/// Bias lookup shared by every kernel (dense *and* sparse): an empty
+/// slice means "no bias"; a *short* non-empty slice is a caller bug —
+/// debug-asserted here, and the direct index still panics (never
+/// silently zeroes) in release.
 #[inline]
-fn bias_at(folded_bias: &[i32], r: usize) -> i32 {
+pub(crate) fn bias_at(folded_bias: &[i32], r: usize) -> i32 {
     if folded_bias.is_empty() {
         0
     } else {
@@ -167,7 +168,7 @@ fn dot_i8_scalar(row: &[i8], x: &[i8]) -> i32 {
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
-unsafe fn hsum_epi32(acc: std::arch::x86_64::__m256i) -> i32 {
+pub(crate) unsafe fn hsum_epi32(acc: std::arch::x86_64::__m256i) -> i32 {
     use std::arch::x86_64::*;
     let hi128 = _mm256_extracti128_si256(acc, 1);
     let lo128 = _mm256_castsi256_si128(acc);
@@ -181,7 +182,7 @@ unsafe fn hsum_epi32(acc: std::arch::x86_64::__m256i) -> i32 {
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
-unsafe fn widen_i8(
+pub(crate) unsafe fn widen_i8(
     v: std::arch::x86_64::__m256i,
 ) -> (std::arch::x86_64::__m256i, std::arch::x86_64::__m256i) {
     use std::arch::x86_64::*;

@@ -30,7 +30,22 @@ fn ragged_lm(hidden: usize) -> CharLm {
     CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
 }
 
-fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
+/// The same ragged LM with every weight matrix block-structure pruned,
+/// so the integer engine's gate/projection/head matmuls run the batched
+/// block-sparse kernel instead of the dense packed one.
+fn ragged_pruned_lm(hidden: usize, sparsity: f64) -> CharLm {
+    let mut lm = ragged_lm(hidden);
+    for layer in &mut lm.stack_weights.layers {
+        for g in layer.gates.iter_mut().flatten() {
+            iqrnn::sparse::prune_block_structured(&mut g.w, sparsity);
+            iqrnn::sparse::prune_block_structured(&mut g.r, sparsity);
+        }
+    }
+    iqrnn::sparse::prune_block_structured(&mut lm.out_w, sparsity);
+    lm
+}
+
+fn build_engine_opts(lm: &CharLm, kind: StackEngine, opts: QuantizeOptions) -> CharLmEngine {
     let stats = if kind == StackEngine::Integer {
         let mut rng = Pcg32::seeded(98);
         let calib: Vec<Vec<usize>> = (0..4)
@@ -40,7 +55,11 @@ fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
     } else {
         None
     };
-    lm.engine(kind, stats.as_deref(), QuantizeOptions::default())
+    lm.engine(kind, stats.as_deref(), opts)
+}
+
+fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
+    build_engine_opts(lm, kind, QuantizeOptions::default())
 }
 
 fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
@@ -159,6 +178,64 @@ fn poisoned_pad_lanes_never_change_live_lanes() {
             for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} lane {lane} logits");
             }
+        }
+    }
+}
+
+/// The poisoned-pad-lane contract extends to block-sparse weights: a
+/// pruned integer model's batched step runs the block-list kernel, and
+/// garbage in the pad lanes must still never leak into a live lane's
+/// bits. (The block kernel computes pad lanes redundantly via the
+/// last-live-row re-pointing, exactly like the dense kernel — this
+/// pins that the writeback masking holds for the sparse path too.)
+#[test]
+fn poisoned_pad_lanes_never_change_live_lanes_sparse() {
+    let lm = ragged_pruned_lm(33, 0.75);
+    let opts = QuantizeOptions { sparse_weights: true, naive_layernorm: false };
+    let engine = build_engine_opts(&lm, StackEngine::Integer, opts);
+    let streams: Vec<Vec<usize>> = (0..3)
+        .map(|s| (0..12).map(|t| (7 * s + 3 * t + 1) % VOCAB).collect())
+        .collect();
+
+    // Sequential reference.
+    let mut seq: Vec<LmState> = (0..3).map(|_| engine.new_state()).collect();
+    for (s, toks) in seq.iter_mut().zip(&streams) {
+        for &t in toks {
+            engine.step_token(t, s);
+        }
+    }
+
+    // Batched: 3 live lanes -> 1 pad lane, poisoned before stepping.
+    let mut bs = engine.new_batch_state(0);
+    for _ in 0..3 {
+        let fresh = engine.new_state();
+        engine.admit_lane(&fresh, &mut bs);
+    }
+    assert_eq!(bs.padded_batch(), 4);
+    for layer in &mut bs.layers {
+        if let BatchLayerState::Integer(st) = layer {
+            for r in 3..st.c.rows {
+                st.c.row_mut(r).fill(i16::MAX);
+                st.h.row_mut(r).fill(-77);
+            }
+        }
+    }
+    for r in 3..bs.h.rows {
+        bs.h.row_mut(r).fill(f32::MAX);
+        bs.logits.row_mut(r).fill(f32::MIN);
+    }
+    for t in 0..12 {
+        let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+        engine.step_tokens(&toks, &mut bs);
+    }
+    for lane in 0..3 {
+        let mut got = engine.new_state();
+        engine.scatter_session(&bs, &mut got, lane);
+        for (a, b) in got.h.iter().zip(&seq[lane].h) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sparse lane {lane} h");
+        }
+        for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sparse lane {lane} logits");
         }
     }
 }

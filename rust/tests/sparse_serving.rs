@@ -1,0 +1,313 @@
+//! Pruned models on the tiled serving path, locked down end to end.
+//!
+//! PR 1–4 gave dense weights a register-tiled, padding-aware batched
+//! kernel; this suite pins the contract that block-sparse (pruned)
+//! weights ride the *same* path with the same guarantees:
+//!
+//! * the batched block-sparse GEMM is bit-exact with the per-lane CSR
+//!   matvec (and with the dense kernel) on every shape, sparsity, and
+//!   live-lane count — scalar and AVX2, so the CI kernel matrix proves
+//!   both legs;
+//! * the batched pruned-model step path executes zero scalar-tail MACs
+//!   (debug `tail_audit`);
+//! * batched serving of a pruned model is bit-exact with the
+//!   sequential per-token path on all three engines;
+//! * a pruned model runs through the full sharded-serving simulator
+//!   with bit-exact per-session nll accounting;
+//! * the registry's resident-byte accounting reflects the block-sparse
+//!   compression win.
+
+use std::time::Instant;
+
+use iqrnn::coordinator::{
+    simulate_shard_trace, ContinuousScheduler, ModelRegistry, ModelSpec,
+    Residency, SchedulerMode, ShardConfig, StreamItem,
+};
+use iqrnn::lstm::{
+    CalibrationStats, LstmSpec, QuantizeOptions, StackEngine, StackWeights,
+};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::sparse::{prune_block_structured, BlockSparseI8, SparseMatrixI8};
+use iqrnn::tensor::qmatmul::tail_audit;
+use iqrnn::tensor::Matrix;
+use iqrnn::util::{proptest, Pcg32};
+use iqrnn::workload::synth::RequestTrace;
+
+fn random_sparse_i8(rng: &mut Pcg32, rows: usize, cols: usize, sparsity: f64) -> Matrix<i8> {
+    let mut w = Matrix::<i8>::zeros(rows, cols);
+    for v in &mut w.data {
+        if rng.next_f64() >= sparsity {
+            *v = rng.range_i32(-127, 127) as i8;
+        }
+    }
+    w
+}
+
+/// A tiny LM whose every weight matrix is block-structure pruned to
+/// `sparsity` before quantization, with a deliberately ragged hidden
+/// width (33 = 32 + 1: worst-case K and row remainders everywhere).
+fn pruned_lm(hidden: usize, depth: usize, sparsity: f64) -> CharLm {
+    let mut rng = Pcg32::seeded(421);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let mut stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    for layer in &mut stack_weights.layers {
+        for g in layer.gates.iter_mut().flatten() {
+            prune_block_structured(&mut g.w, sparsity);
+            prune_block_structured(&mut g.r, sparsity);
+        }
+    }
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    prune_block_structured(&mut out_w, sparsity);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+fn calib(lm: &CharLm) -> Vec<CalibrationStats> {
+    let mut rng = Pcg32::seeded(422);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+fn sparse_opts() -> QuantizeOptions {
+    QuantizeOptions { sparse_weights: true, naive_layernorm: false }
+}
+
+fn sparse_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
+    let stats = if kind == StackEngine::Integer { Some(calib(lm)) } else { None };
+    lm.engine(kind, stats.as_deref(), sparse_opts())
+}
+
+/// The tentpole equivalence, property-tested: on random shapes,
+/// batches, and sparsities, the batched block-sparse kernel must equal
+/// the per-lane CSR matvec bit for bit. Runs against whichever kernel
+/// leg the environment selects (AVX2 or `PALLAS_FORCE_SCALAR`), and CI
+/// runs both.
+#[test]
+fn bsr_gemm_matches_per_lane_csr_matvec_property() {
+    proptest::check("bsr-vs-csr-batched", |rng| {
+        let rows = 1 + rng.below(80) as usize;
+        let cols = 1 + rng.below(120) as usize;
+        let batch = 1 + rng.below(9) as usize;
+        let sparsity = [0.0, 0.5, 0.75, 0.9][rng.below(4) as usize];
+        let w = random_sparse_i8(rng, rows, cols, sparsity);
+        let bsr = BlockSparseI8::from_dense(&w);
+        let csr = SparseMatrixI8::from_dense(&w);
+        let mut x = Matrix::<i8>::zeros(batch, cols);
+        for v in &mut x.data {
+            *v = rng.range_i32(-128, 127) as i8;
+        }
+        let bias: Vec<i32> =
+            (0..rows).map(|_| rng.range_i32(-100_000, 100_000)).collect();
+        let mut out = Matrix::<i32>::zeros(batch, rows);
+        bsr.gemm(&x, &bias, &mut out);
+        let mut lane = vec![0i32; rows];
+        for b in 0..batch {
+            csr.matvec_i32(x.row(b), &bias, &mut lane);
+            assert_eq!(
+                out.row(b),
+                &lane[..],
+                "lane {b} of {rows}x{cols} batch {batch} sparsity {sparsity}"
+            );
+        }
+    });
+}
+
+/// The same equivalence on a pinned worst-case grid: every row/K/lane
+/// remainder class at every target sparsity level.
+#[test]
+fn bsr_gemm_matches_csr_on_pinned_ragged_shapes() {
+    let mut rng = Pcg32::seeded(500);
+    for &sparsity in &[0.0, 0.5, 0.75, 0.9] {
+        for &rows in &[1usize, 31, 33, 100] {
+            for &cols in &[1usize, 31, 32, 33, 100] {
+                let w = random_sparse_i8(&mut rng, rows, cols, sparsity);
+                let bsr = BlockSparseI8::from_dense(&w);
+                let csr = SparseMatrixI8::from_dense(&w);
+                for &batch in &[1usize, 3, 5, 7] {
+                    let mut x = Matrix::<i8>::zeros(batch, cols);
+                    for v in &mut x.data {
+                        *v = rng.range_i32(-128, 127) as i8;
+                    }
+                    let mut out = Matrix::<i32>::zeros(batch, rows);
+                    bsr.gemm(&x, &[], &mut out);
+                    let mut lane = vec![0i32; rows];
+                    for b in 0..batch {
+                        csr.matvec_i32(x.row(b), &[], &mut lane);
+                        assert_eq!(
+                            out.row(b),
+                            &lane[..],
+                            "{rows}x{cols} batch {batch} lane {b} sparsity {sparsity}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Batched serving of a pruned model is bit-exact with the sequential
+/// per-token path, across engines × sparsity levels × ragged live-lane
+/// counts. (For Float/Hybrid the pruning only changes the weights; for
+/// Integer it switches every gate, projection, and head matmul onto the
+/// block-sparse kernel.)
+#[test]
+fn pruned_batched_serving_matches_sequential() {
+    for &sparsity in &[0.5, 0.75, 0.9] {
+        let lm = pruned_lm(33, 1, sparsity);
+        for kind in StackEngine::ALL {
+            let engine = sparse_engine(&lm, kind);
+            for &live in &[1usize, 3, 5] {
+                let streams: Vec<Vec<usize>> = (0..live)
+                    .map(|s| (0..10).map(|t| (7 * s + 3 * t + 1) % VOCAB).collect())
+                    .collect();
+
+                let mut seq: Vec<LmState> =
+                    (0..live).map(|_| engine.new_state()).collect();
+                for (s, toks) in seq.iter_mut().zip(&streams) {
+                    for &t in toks {
+                        engine.step_token(t, s);
+                    }
+                }
+
+                let mut bs = engine.new_batch_state(0);
+                for _ in 0..live {
+                    let fresh = engine.new_state();
+                    engine.admit_lane(&fresh, &mut bs);
+                }
+                for t in 0..10 {
+                    let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+                    engine.step_tokens(&toks, &mut bs);
+                }
+                for lane in 0..live {
+                    let mut got = engine.new_state();
+                    engine.scatter_session(&bs, &mut got, lane);
+                    let ctx = format!("{kind:?} sparsity {sparsity} live {live} lane {lane}");
+                    for (a, b) in got.h.iter().zip(&seq[lane].h) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{ctx} h");
+                    }
+                    for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{ctx} logits");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The tail-audit contract extends to pruned weights: drive the batched
+/// block-sparse integer path through every awkward live-lane count and
+/// assert zero scalar-tail MACs. (Release builds compile the counter
+/// out; the CI debug jobs carry the real check.)
+#[test]
+fn pruned_batched_serving_path_is_tail_free() {
+    let lm = pruned_lm(33, 1, 0.75);
+    let engine = sparse_engine(&lm, StackEngine::Integer);
+    let mut sched = ContinuousScheduler::new(&engine, 7);
+    tail_audit::reset();
+    for s in 0..7u64 {
+        sched.offer(StreamItem {
+            model: 0,
+            session: s,
+            tokens: vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize],
+            submitted: Instant::now(),
+        });
+    }
+    let mut widths = std::collections::HashSet::new();
+    while sched.has_live_work() {
+        sched.admit_ready();
+        widths.insert(sched.live_lanes());
+        sched.step();
+        sched.take_completed();
+    }
+    assert_eq!(
+        tail_audit::count(),
+        0,
+        "batched block-sparse step path executed scalar-tail iterations"
+    );
+    assert!(widths.contains(&7) && widths.contains(&3) && widths.contains(&1));
+}
+
+/// End-to-end: a pruned integer model through the sharded-serving
+/// simulator, with every completed session's nll bit-exact against the
+/// sequential oracle.
+#[test]
+fn pruned_model_runs_sharded_serving_bit_exact() {
+    let lm = pruned_lm(24, 2, 0.75);
+    let engine = sparse_engine(&lm, StackEngine::Integer);
+    let trace = RequestTrace::generate_staggered(9, 4.0, 18, VOCAB, 31);
+    let cfg = ShardConfig {
+        workers: 2,
+        max_lanes: 4,
+        mode: SchedulerMode::Continuous,
+        ..Default::default()
+    };
+    let (_scheds, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+    assert_eq!(rep.completions.len(), trace.requests.len());
+    for r in &trace.requests {
+        let done: Vec<_> =
+            rep.completions.iter().filter(|d| d.session == r.id).collect();
+        assert_eq!(done.len(), 1, "session {}", r.id);
+        assert_eq!(done[0].tokens, r.tokens.len(), "session {}", r.id);
+
+        // Sequential oracle with the scheduler's nll grouping.
+        let mut state = engine.new_state();
+        let mut ref_nll = 0f64;
+        for (t, &tok) in r.tokens.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = r.tokens.get(t + 1) {
+                ref_nll += nll_bits(&state.logits, next);
+            }
+        }
+        assert_eq!(
+            done[0].nll_bits.to_bits(),
+            ref_nll.to_bits(),
+            "session {} nll {} vs {}",
+            r.id,
+            done[0].nll_bits,
+            ref_nll
+        );
+    }
+}
+
+/// The residency satellite: block-sparse storage shrinks the engine's
+/// weight bytes, and the registry's resident-byte accounting (which
+/// feeds `ServingReport`) sees the compressed size, not the dense one.
+#[test]
+fn registry_accounts_block_sparse_bytes() {
+    let lm_dense = pruned_lm(32, 1, 0.0);
+    let lm_sparse = pruned_lm(32, 1, 0.9);
+    let stats_dense = calib(&lm_dense);
+    let stats_sparse = calib(&lm_sparse);
+
+    let mut registry = ModelRegistry::new();
+    let dense_id = registry.register(ModelSpec {
+        name: "dense".into(),
+        lm: &lm_dense,
+        engine: StackEngine::Integer,
+        stats: Some(&stats_dense),
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    let sparse_id = registry.register(ModelSpec {
+        name: "sparse90".into(),
+        lm: &lm_sparse,
+        engine: StackEngine::Integer,
+        stats: Some(&stats_sparse),
+        opts: sparse_opts(),
+        residency: Residency::All,
+    });
+    let dense_bytes = registry.weight_bytes(dense_id);
+    let sparse_bytes = registry.weight_bytes(sparse_id);
+    // 90% of the blocks are gone; even with BSR's index overhead the
+    // resident footprint must be well under half the dense model's.
+    assert!(
+        sparse_bytes * 2 < dense_bytes,
+        "sparse {sparse_bytes} vs dense {dense_bytes}"
+    );
+
+    // And the engine agrees with the registry (same accounting path).
+    let engine = lm_sparse.engine(StackEngine::Integer, Some(&stats_sparse), sparse_opts());
+    assert_eq!(engine.weight_bytes(), sparse_bytes);
+}
