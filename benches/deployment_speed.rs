@@ -457,6 +457,119 @@ fn main() {
             Ok(()) => println!("wrote BENCH_multimodel.json"),
             Err(e) => eprintln!("could not write BENCH_multimodel.json: {e}"),
         }
+
+        // Network serving sweep: the same pool behind the loopback TCP
+        // front, measured on the wall clock — first-token and per-token
+        // latency percentiles as a streaming client would see them.
+        // Unlike the virtual-time sweeps above these numbers are NOT
+        // deterministic (threads + sockets), which is exactly the
+        // point: this is the deployed-latency view the integer-only
+        // serving line evaluates on. Runs in quick mode too; emits
+        // BENCH_net.json.
+        {
+            use iqrnn::coordinator::{
+                BatchPolicy, Frame, NetClient, NetConfig, NetServer, NetShutdown,
+                Server, ServerConfig,
+            };
+            use std::time::Duration;
+
+            let net_trace = if quick {
+                RequestTrace::generate(24, 500.0, 16, VOCAB, 41)
+            } else {
+                RequestTrace::generate(120, 800.0, 48, VOCAB, 41)
+            };
+            let worker_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+            println!("\n== network serving sweep (loopback TCP, Integer) ==");
+            println!(
+                "{:<8} {:>12} {:>10} {:>10} {:>12} {:>10}",
+                "workers", "tokens/sec", "ft p50", "ft p99", "per-tok p50", "e2e p99"
+            );
+            let mut entries: Vec<String> = Vec::new();
+            for &workers in worker_sweep {
+                let server = Server::new(
+                    &lm,
+                    Some(&stats),
+                    ServerConfig {
+                        workers,
+                        batch: BatchPolicy {
+                            max_batch: 8,
+                            max_wait: Duration::from_millis(2),
+                        },
+                        engine: StackEngine::Integer,
+                        ..ServerConfig::default()
+                    },
+                );
+                let net = NetServer::bind(
+                    &server,
+                    NetConfig {
+                        max_inflight_per_model: Some(net_trace.requests.len()),
+                        ..NetConfig::default()
+                    },
+                )
+                .expect("bind loopback");
+                let addr = net.local_addr().expect("local addr");
+                let stop = NetShutdown::new();
+                let report = std::thread::scope(|s| {
+                    let handle = s.spawn(|| net.serve(&stop).expect("serve"));
+                    let mut client = NetClient::connect(addr).expect("connect");
+                    for req in &net_trace.requests {
+                        client.send(req.model, req.id, &req.tokens).expect("send");
+                    }
+                    client.finish().expect("half-close");
+                    let streamed = client
+                        .read_to_bye()
+                        .expect("read streams")
+                        .iter()
+                        .filter(|f| matches!(f, Frame::Token { .. }))
+                        .count();
+                    assert_eq!(streamed, net_trace.total_tokens(), "tokens lost");
+                    stop.shutdown();
+                    handle.join().expect("serve thread")
+                });
+                let sv = &report.serving;
+                println!(
+                    "{:<8} {:>12.0} {:>8.2}ms {:>8.2}ms {:>10.3}ms {:>8.2}ms",
+                    workers,
+                    sv.throughput(),
+                    sv.first_token_latency.percentile(50.0),
+                    sv.first_token_latency.percentile(99.0),
+                    sv.per_token_latency.percentile(50.0),
+                    sv.latency.percentile(99.0),
+                );
+                entries.push(format!(
+                    "    {{\"workers\": {}, \"requests\": {}, \"tokens\": {}, \
+                     \"wall_secs\": {:.4}, \"tokens_per_sec\": {:.1}, \
+                     \"first_token_p50_ms\": {:.3}, \"first_token_p95_ms\": {:.3}, \
+                     \"first_token_p99_ms\": {:.3}, \"per_token_p50_ms\": {:.4}, \
+                     \"per_token_p95_ms\": {:.4}, \"e2e_p50_ms\": {:.3}, \
+                     \"e2e_p99_ms\": {:.3}, \"busy_rejections\": {}}}",
+                    workers,
+                    sv.requests,
+                    sv.tokens,
+                    sv.wall_secs,
+                    sv.throughput(),
+                    sv.first_token_latency.percentile(50.0),
+                    sv.first_token_latency.percentile(95.0),
+                    sv.first_token_latency.percentile(99.0),
+                    sv.per_token_latency.percentile(50.0),
+                    sv.per_token_latency.percentile(95.0),
+                    sv.latency.percentile(50.0),
+                    sv.latency.percentile(99.0),
+                    report.busy_rejections
+                ));
+            }
+            let json = format!(
+                "{{\n  \"bench\": \"net_sweep\",\n  \"config\": {{\"hidden\": {hidden}, \
+                 \"depth\": 1, \"max_lanes\": 8, \"requests\": {}, \"transport\": \
+                 \"loopback-tcp\"}},\n  \"results\": [\n{}\n  ]\n}}\n",
+                net_trace.requests.len(),
+                entries.join(",\n")
+            );
+            match std::fs::write("BENCH_net.json", &json) {
+                Ok(()) => println!("wrote BENCH_net.json"),
+                Err(e) => eprintln!("could not write BENCH_net.json: {e}"),
+            }
+        }
     }
 
     // Block-sparse kernel sweep: the batched block-sparse GEMM vs the

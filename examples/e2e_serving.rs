@@ -15,8 +15,8 @@
 use std::time::Duration;
 
 use iqrnn::coordinator::{
-    shard_home, BatchPolicy, ModelRegistry, ModelSpec, Residency, SchedulerMode,
-    Server, ServerConfig,
+    shard_home, BatchPolicy, Frame, ModelRegistry, ModelSpec, NetClient, NetConfig,
+    NetServer, NetShutdown, Residency, SchedulerMode, Server, ServerConfig,
 };
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{CharLm, VOCAB};
@@ -178,6 +178,62 @@ fn main() -> anyhow::Result<()> {
         let report = server.run_trace(&mixed, 4.0)?;
         report.print();
         report.print_models();
+    }
+
+    // --- Network serving: loopback TCP front (wall-clock) ------------
+    // The same pool behind a real socket: frames in, token streams
+    // out, with Busy backpressure and graceful drain. Wall-clock
+    // first-token / per-token latencies appear on the report's second
+    // line; the loopback tests pin the streams bit-identical to the
+    // shard simulator.
+    println!("\n== network serving: loopback TCP front (Integer) ==");
+    {
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+                engine: StackEngine::Integer,
+                opts: QuantizeOptions::default(),
+                ..ServerConfig::default()
+            },
+        );
+        let net_trace = RequestTrace::generate(60, 500.0, 40, VOCAB, 31);
+        let net = NetServer::bind(
+            &server,
+            NetConfig {
+                max_inflight_per_model: Some(net_trace.requests.len()),
+                ..NetConfig::default()
+            },
+        )?;
+        let addr = net.local_addr()?;
+        let stop = NetShutdown::new();
+        let report = std::thread::scope(|s| -> anyhow::Result<_> {
+            let handle = s.spawn(|| net.serve(&stop));
+            let mut client = NetClient::connect(addr)?;
+            let mut streamed = 0usize;
+            for req in &net_trace.requests {
+                client.send(req.model, req.id, &req.tokens)?;
+            }
+            client.finish()?;
+            for frame in client.read_to_bye()? {
+                if matches!(frame, Frame::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+            println!(
+                "  loopback client on {addr}: {} requests, {streamed} tokens streamed",
+                net_trace.requests.len()
+            );
+            stop.shutdown();
+            handle.join().expect("serve thread")
+        })?;
+        println!(
+            "  connections={} refused={} busy={}",
+            report.connections, report.refused_connects, report.busy_rejections
+        );
+        report.serving.print();
     }
 
     let speedup_float = reports[0].compute_secs / reports[2].compute_secs;

@@ -143,8 +143,19 @@ pub struct ServingReport {
     pub wall_secs: f64,
     /// Total model-execution time across workers (excludes queueing).
     pub compute_secs: f64,
-    /// End-to-end request latency distribution.
+    /// End-to-end request latency distribution, **wall-clock**
+    /// (submission → completion). The virtual-step schedule metrics
+    /// (`batched_steps`, occupancy, admissions) are a separate clock
+    /// and never feed these histograms.
     pub latency: LatencyStats,
+    /// Wall-clock submission → first-executed-token latency
+    /// distribution (the "time to first token" a streaming client
+    /// observes; empty items contribute their completion latency).
+    pub first_token_latency: LatencyStats,
+    /// Wall-clock per-token latency distribution: for each completed
+    /// item with ≥ 2 tokens, `(e2e − first_token) / (tokens − 1)` —
+    /// the steady-state token cadence after the first token landed.
+    pub per_token_latency: LatencyStats,
     /// Worker (shard) count the run used.
     pub workers: usize,
     /// Mean items per *ingest* (router pull that yielded items). In
@@ -251,6 +262,19 @@ impl ServingReport {
             self.steals,
             self.evictions,
             self.idle_evictions,
+        );
+        // Second line: the wall-clock latency histograms next to the
+        // virtual-step counters above — two clocks, never one field.
+        println!(
+            "    wall-clock: first-token p50/p95/p99={:.1}/{:.1}/{:.1}ms \
+             per-token p50/p95/p99={:.3}/{:.3}/{:.3}ms e2e p95={:.1}ms",
+            self.first_token_latency.percentile(50.0),
+            self.first_token_latency.percentile(95.0),
+            self.first_token_latency.percentile(99.0),
+            self.per_token_latency.percentile(50.0),
+            self.per_token_latency.percentile(95.0),
+            self.per_token_latency.percentile(99.0),
+            self.latency.percentile(95.0),
         );
     }
 

@@ -29,6 +29,10 @@
 //! * [`server`] — the worker pool: per-resident-model engine
 //!   instances, one session table, and one persistent wave per model
 //!   per worker; open-loop trace replay with latency accounting;
+//! * [`net`] — the wall-clock TCP front: a `std::net`
+//!   thread-per-connection streaming server over the same pool, with
+//!   a length-prefixed frame protocol, bounded admission (`Busy`
+//!   backpressure), and graceful drain;
 //! * [`metrics`] — counters + the RT-factor / latency / occupancy /
 //!   steal reports, with per-worker and per-model breakdowns.
 //!
@@ -39,6 +43,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod registry;
 pub mod router;
 pub mod scheduler;
@@ -47,12 +52,16 @@ pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Poll};
 pub use metrics::{ModelLoad, ServingReport, WorkerLoad};
+pub use net::{
+    read_frame, write_frame, Frame, NetClient, NetConfig, NetReport, NetServer,
+    NetShutdown,
+};
 pub use registry::{ModelId, ModelRegistry, ModelSpec, Residency};
 pub use router::{shard_home, shard_home_model, Router, ShardPoll, ShardRouter};
 pub use scheduler::{
     simulate_multi_shard_trace, simulate_registry_trace, simulate_shard_trace,
     simulate_trace, ContinuousScheduler, SchedulerMode, SchedulerStats, ShardConfig,
-    ShardSimReport, StreamDone, StreamItem,
+    ShardSimReport, StreamDone, StreamItem, TokenEvent,
 };
 pub use server::{Server, ServerConfig};
 pub use session::{Session, SessionId, SessionKey, SessionManager};

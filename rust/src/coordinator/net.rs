@@ -1,0 +1,830 @@
+//! The wall-clock TCP serving front: a `std::net` streaming server in
+//! front of the sharded worker pool, with explicit backpressure and
+//! graceful drain.
+//!
+//! Everything below the socket is the exact machinery trace replay
+//! uses — the same [`ShardRouter`], the same worker loop
+//! (`server::run_worker`), the same continuous batcher — so a
+//! loopback client observes token streams *bit-identical* to
+//! [`simulate_shard_trace`](super::scheduler::simulate_shard_trace)
+//! on the same requests (locked down by `rust/tests/net_serving.rs`). No async runtime: an acceptor thread
+//! polls a non-blocking listener, each connection gets one reader and
+//! one writer thread, and a single dispatcher thread fans worker
+//! events out to connection writers.
+//!
+//! ## Wire protocol
+//!
+//! Every frame is `[u32 len (LE)] [u8 kind] [payload]`, where `len`
+//! counts the kind byte plus the payload. Integers are little-endian;
+//! floats are IEEE-754 bit patterns. Kinds:
+//!
+//! | kind | name | payload | direction |
+//! |------|------|---------|-----------|
+//! | 0x01 | `Request` | model u32, session u64, n u32, n × token u32 | client → server |
+//! | 0x11 | `Token` | model u32, session u64, pos u32, pred u32 | server → client |
+//! | 0x12 | `Done` | model u32, session u64, tokens u32, nll_bits f64, wall_ms f64, first_token_wall_ms f64 | server → client |
+//! | 0x13 | `Busy` | model u32, session u64 | server → client |
+//! | 0x14 | `Bye` | (empty) | server → client |
+//!
+//! A client streams `Request` frames (one per chunk), then half-closes
+//! its write side; the server streams back one `Token` frame per
+//! executed position and one `Done` per finished chunk, and terminates
+//! every connection with `Bye`.
+//!
+//! ## Backpressure
+//!
+//! Admission is bounded, never queued unboundedly: each model has a
+//! budget of distinct in-flight sessions
+//! ([`NetConfig::max_inflight_per_model`], default `workers ×
+//! max_batch` — the pool's whole lane capacity). A `Request` that
+//! would exceed the budget, reuse a session already in flight, name an
+//! unregistered model, or arrive during drain is answered with an
+//! explicit `Busy` frame and **not** enqueued; nothing is silently
+//! dropped. Admitted requests are registered (route + in-flight count)
+//! *before* they are submitted to the router, so no token event can
+//! outrun its route and drain can never observe a half-admitted
+//! session.
+//!
+//! ## Graceful drain
+//!
+//! On shutdown ([`NetShutdown::shutdown`] or
+//! [`NetConfig::drain_after`]) the server stops admitting (`Busy` for
+//! in-flight connections, immediate `Bye` for late connects), waits
+//! for every in-flight session to finish, closes the router, joins the
+//! workers, and closes every stream with a terminal `Bye`.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::ServingReport;
+use super::router::ShardRouter;
+use super::scheduler::StreamItem;
+use super::server::{run_worker, CompletionAgg, Server, WorkerCfg, WorkerEvent};
+use super::session::SessionKey;
+
+/// Hard cap on one frame's `len` field (kind byte + payload): a
+/// defensive bound so a corrupt or hostile length prefix cannot ask
+/// the server to allocate gigabytes.
+pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
+
+const KIND_REQUEST: u8 = 0x01;
+const KIND_TOKEN: u8 = 0x11;
+const KIND_DONE: u8 = 0x12;
+const KIND_BUSY: u8 = 0x13;
+const KIND_BYE: u8 = 0x14;
+
+/// One protocol frame (see the module docs for the wire layout).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: one chunk of a stream.
+    Request {
+        /// Registry id of the model this stream runs on.
+        model: u32,
+        /// Client-chosen stream id (sticky state key together with
+        /// `model`).
+        session: u64,
+        /// The chunk's token ids.
+        tokens: Vec<u32>,
+    },
+    /// Server → client: one executed token position of a live stream.
+    Token {
+        /// Registry id of the stream's model.
+        model: u32,
+        /// The stream id.
+        session: u64,
+        /// Position within the chunk (0-based, contiguous).
+        pos: u32,
+        /// Deterministic argmax over the logits row at this position
+        /// (first maximum wins) — the field the loopback tests compare
+        /// bit-for-bit against the simulator's token tap.
+        pred: u32,
+    },
+    /// Server → client: one finished chunk.
+    Done {
+        /// Registry id of the stream's model.
+        model: u32,
+        /// The stream id.
+        session: u64,
+        /// Tokens the chunk executed.
+        tokens: u32,
+        /// Total negative log-likelihood of the chunk, in bits.
+        nll_bits: f64,
+        /// Submission → completion wall-clock latency (ms).
+        wall_ms: f64,
+        /// Submission → first executed token wall-clock latency (ms).
+        first_token_wall_ms: f64,
+    },
+    /// Server → client: the request was refused by backpressure (model
+    /// budget exhausted, session already in flight, unknown model, or
+    /// the server is draining). Nothing was enqueued; retry later.
+    Busy {
+        /// Registry id the refused request named.
+        model: u32,
+        /// The refused stream id.
+        session: u64,
+    },
+    /// Server → client: terminal frame; the server closes the
+    /// connection after sending it.
+    Bye,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], at: usize) -> io::Result<u32> {
+    let b: [u8; 4] = buf
+        .get(at..at + 4)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "short frame"))?
+        .try_into()
+        .unwrap();
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64(buf: &[u8], at: usize) -> io::Result<u64> {
+    let b: [u8; 8] = buf
+        .get(at..at + 8)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "short frame"))?
+        .try_into()
+        .unwrap();
+    Ok(u64::from_le_bytes(b))
+}
+
+fn get_f64(buf: &[u8], at: usize) -> io::Result<f64> {
+    Ok(f64::from_bits(get_u64(buf, at)?))
+}
+
+impl Frame {
+    /// Encode the whole wire frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Request { model, session, tokens } => {
+                body.push(KIND_REQUEST);
+                put_u32(&mut body, *model);
+                put_u64(&mut body, *session);
+                put_u32(&mut body, tokens.len() as u32);
+                for &t in tokens {
+                    put_u32(&mut body, t);
+                }
+            }
+            Frame::Token { model, session, pos, pred } => {
+                body.push(KIND_TOKEN);
+                put_u32(&mut body, *model);
+                put_u64(&mut body, *session);
+                put_u32(&mut body, *pos);
+                put_u32(&mut body, *pred);
+            }
+            Frame::Done { model, session, tokens, nll_bits, wall_ms, first_token_wall_ms } => {
+                body.push(KIND_DONE);
+                put_u32(&mut body, *model);
+                put_u64(&mut body, *session);
+                put_u32(&mut body, *tokens);
+                put_f64(&mut body, *nll_bits);
+                put_f64(&mut body, *wall_ms);
+                put_f64(&mut body, *first_token_wall_ms);
+            }
+            Frame::Busy { model, session } => {
+                body.push(KIND_BUSY);
+                put_u32(&mut body, *model);
+                put_u64(&mut body, *session);
+            }
+            Frame::Bye => body.push(KIND_BYE),
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame body (`kind` byte already split off).
+    fn decode(kind: u8, p: &[u8]) -> io::Result<Frame> {
+        match kind {
+            KIND_REQUEST => {
+                let model = get_u32(p, 0)?;
+                let session = get_u64(p, 4)?;
+                let n = get_u32(p, 12)? as usize;
+                if p.len() != 16 + 4 * n {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "request frame length mismatch",
+                    ));
+                }
+                let mut tokens = Vec::with_capacity(n);
+                for i in 0..n {
+                    tokens.push(get_u32(p, 16 + 4 * i)?);
+                }
+                Ok(Frame::Request { model, session, tokens })
+            }
+            KIND_TOKEN => Ok(Frame::Token {
+                model: get_u32(p, 0)?,
+                session: get_u64(p, 4)?,
+                pos: get_u32(p, 12)?,
+                pred: get_u32(p, 16)?,
+            }),
+            KIND_DONE => Ok(Frame::Done {
+                model: get_u32(p, 0)?,
+                session: get_u64(p, 4)?,
+                tokens: get_u32(p, 12)?,
+                nll_bits: get_f64(p, 16)?,
+                wall_ms: get_f64(p, 24)?,
+                first_token_wall_ms: get_f64(p, 32)?,
+            }),
+            KIND_BUSY => {
+                Ok(Frame::Busy { model: get_u32(p, 0)?, session: get_u64(p, 4)? })
+            }
+            KIND_BYE => Ok(Frame::Bye),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown frame kind 0x{other:02x}"),
+            )),
+        }
+    }
+}
+
+/// Write one frame to `w` (no flush policy beyond the write itself;
+/// `TcpStream` writes are unbuffered).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+/// Read one frame from `r`, blocking. Returns `Ok(None)` on a clean
+/// EOF at a frame boundary; EOF inside a frame is an error.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    match r.read(&mut len_buf[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(e),
+    }
+    r.read_exact(&mut len_buf[1..])?;
+    let len = u32::from_le_bytes(len_buf);
+    read_body(r, len)
+}
+
+fn read_body(r: &mut impl Read, len: u32) -> io::Result<Option<Frame>> {
+    if len == 0 || len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} out of range"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Frame::decode(body[0], &body[1..]).map(Some)
+}
+
+/// Read one frame from a stream whose read timeout is set, surviving
+/// timeouts mid-frame: a `WouldBlock`/`TimedOut` polls `closing` and
+/// resumes the partial read, so timeout polling can never tear a
+/// frame. Returns `Ok(None)` on clean EOF **or** when `closing` was
+/// raised.
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    closing: &AtomicBool,
+) -> io::Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame header",
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if closing.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} out of range"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    let mut got = 0usize;
+    while got < body.len() {
+        match stream.read(&mut body[got..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame body",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if closing.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Frame::decode(body[0], &body[1..]).map(Some)
+}
+
+/// Network front configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Address to bind (`"127.0.0.1:0"` by default — loopback, OS-
+    /// assigned port; read the bound port back with
+    /// [`NetServer::local_addr`]).
+    pub listen: String,
+    /// Per-model cap on distinct in-flight sessions; a `Request`
+    /// beyond it gets [`Frame::Busy`]. `None` defaults to `workers ×
+    /// max_batch` — the pool's whole lane capacity, so admitted work
+    /// never queues more than one wave deep per worker.
+    pub max_inflight_per_model: Option<usize>,
+    /// Begin graceful drain after this long, even without a
+    /// [`NetShutdown::shutdown`] call (`None` = serve until told).
+    pub drain_after: Option<Duration>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".into(),
+            max_inflight_per_model: None,
+            drain_after: None,
+        }
+    }
+}
+
+/// Shutdown handle for [`NetServer::serve`]: cloneable, raisable from
+/// any thread (a ctrl-c handler, a test, a timer).
+#[derive(Debug, Clone, Default)]
+pub struct NetShutdown(Arc<AtomicBool>);
+
+impl NetShutdown {
+    /// A fresh, un-raised handle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request graceful drain.
+    pub fn shutdown(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether drain has been requested.
+    pub fn is_shutdown(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// What one serving run of the network front reports.
+#[derive(Debug)]
+pub struct NetReport {
+    /// The pool's serving report — same shape and clocks as trace
+    /// replay, assembled from the same worker summaries.
+    pub serving: ServingReport,
+    /// Connections accepted and served.
+    pub connections: usize,
+    /// Late connects answered with an immediate [`Frame::Bye`] during
+    /// drain.
+    pub refused_connects: usize,
+    /// Requests answered with [`Frame::Busy`] by backpressure.
+    pub busy_rejections: usize,
+}
+
+/// Per-session route: which connection's writer gets this stream's
+/// frames.
+struct RouteEntry {
+    tx: Sender<Frame>,
+}
+
+/// Everything the reader threads and the dispatcher share, under one
+/// lock.
+struct NetState {
+    /// `(model, session)` → the owning connection's writer. Present
+    /// exactly while the session is in flight (registered before
+    /// submit, removed at `Done`).
+    routes: HashMap<SessionKey, RouteEntry>,
+    /// Distinct in-flight sessions per model (indexed by `ModelId`).
+    inflight: Vec<usize>,
+    /// Raised at drain start: no further admissions.
+    draining: bool,
+    /// Requests refused with `Busy`.
+    busy_rejections: usize,
+}
+
+/// The TCP front bound to a [`Server`]'s pool.
+pub struct NetServer<'s, 'a> {
+    server: &'s Server<'a>,
+    cfg: NetConfig,
+    listener: TcpListener,
+}
+
+impl<'s, 'a> NetServer<'s, 'a> {
+    /// Bind the listener (no serving yet).
+    pub fn bind(server: &'s Server<'a>, cfg: NetConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        Ok(NetServer { server, cfg, listener })
+    }
+
+    /// The bound address (with the OS-assigned port resolved).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `stop` is raised (or [`NetConfig::drain_after`]
+    /// elapses), then drain gracefully and return the report. Blocks
+    /// the calling thread; workers, per-connection readers/writers,
+    /// and the dispatcher run on scoped threads.
+    pub fn serve(&self, stop: &NetShutdown) -> Result<NetReport> {
+        let server = self.server;
+        let workers = server.config.workers;
+        let n_models = server.registry().len();
+        let residency = server.registry().residency(workers);
+        let router =
+            ShardRouter::with_residency(workers, server.config.steal, residency.clone());
+        let budget = self
+            .cfg
+            .max_inflight_per_model
+            .unwrap_or(workers * server.config.batch.max_batch)
+            .max(1);
+        let state = Mutex::new(NetState {
+            routes: HashMap::new(),
+            inflight: vec![0; n_models],
+            draining: false,
+            busy_rejections: 0,
+        });
+        // Raised after the pool has fully drained: readers on still-
+        // open connections exit, which lets their writers send `Bye`.
+        let closing = AtomicBool::new(false);
+        let (ev_tx, ev_rx) = channel::<WorkerEvent>();
+        let wcfg = WorkerCfg {
+            max_lanes: server.config.batch.max_batch,
+            mode: server.config.mode,
+            session_budget: server.config.session_budget,
+            evict_idle_after: server.config.evict_idle_after,
+            // The token tap is what the front streams to clients.
+            record_tokens: true,
+        };
+        self.listener.set_nonblocking(true)?;
+
+        let wall_start = Instant::now();
+        let mut connections = 0usize;
+        let mut refused_connects = 0usize;
+        let (summaries, agg) = std::thread::scope(|scope| -> Result<_> {
+            let router = &router;
+            let state = &state;
+            let closing = &closing;
+            let registry = server.registry();
+            let wcfg = &wcfg;
+            let mut worker_handles = Vec::new();
+            for w in 0..workers {
+                let events = ev_tx.clone();
+                worker_handles.push(scope.spawn(move || {
+                    run_worker(registry, router, w, workers, wcfg, &events)
+                }));
+            }
+            drop(ev_tx);
+
+            // Dispatcher: the single consumer of worker events. Routes
+            // token/done frames to the owning connection's writer and
+            // aggregates wall-clock completion latencies. Exits when
+            // every worker has exited (channel disconnects).
+            let dispatcher = scope.spawn(move || {
+                let mut agg = CompletionAgg::new();
+                for ev in ev_rx.iter() {
+                    match ev {
+                        WorkerEvent::Token(t) => {
+                            let st = state.lock().expect("net state lock");
+                            if let Some(route) = st.routes.get(&(t.model, t.session)) {
+                                let _ = route.tx.send(Frame::Token {
+                                    model: t.model,
+                                    session: t.session,
+                                    pos: t.pos as u32,
+                                    pred: t.pred as u32,
+                                });
+                            }
+                        }
+                        WorkerEvent::Done(d) => {
+                            agg.record(&d);
+                            let mut st = state.lock().expect("net state lock");
+                            if let Some(route) =
+                                st.routes.remove(&(d.model, d.session))
+                            {
+                                st.inflight[d.model as usize] -= 1;
+                                let _ = route.tx.send(Frame::Done {
+                                    model: d.model,
+                                    session: d.session,
+                                    tokens: d.tokens as u32,
+                                    nll_bits: d.nll_bits,
+                                    wall_ms: d.wall_ms,
+                                    first_token_wall_ms: d.first_token_wall_ms,
+                                });
+                            }
+                        }
+                    }
+                }
+                agg
+            });
+
+            // Accept loop: non-blocking accept + 1 ms sleep poll, until
+            // shutdown is requested. A fatal accept error must NOT
+            // return here — the workers are parked on the router and
+            // the scope would block forever joining them; it breaks
+            // into the normal drain instead and surfaces after
+            // teardown.
+            let deadline = self.cfg.drain_after.map(|d| wall_start + d);
+            let mut accept_err: Option<io::Error> = None;
+            loop {
+                if stop.is_shutdown()
+                    || deadline.map_or(false, |t| Instant::now() >= t)
+                {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        connections += 1;
+                        spawn_connection(
+                            scope, stream, router, state, closing, n_models, budget,
+                        );
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(e) => {
+                        accept_err = Some(e);
+                        break;
+                    }
+                }
+            }
+
+            // Graceful drain: stop admitting, answer late connects with
+            // an immediate Bye, and wait for every in-flight session to
+            // finish. Admission increments `inflight` before the state
+            // lock drops and submits after, so `inflight == 0` here
+            // really means no admitted work remains anywhere — closing
+            // the router below can never race a submit.
+            state.lock().expect("net state lock").draining = true;
+            loop {
+                let idle = {
+                    let st = state.lock().expect("net state lock");
+                    st.inflight.iter().sum::<usize>() == 0
+                };
+                if idle {
+                    break;
+                }
+                if let Ok((mut s, _peer)) = self.listener.accept() {
+                    refused_connects += 1;
+                    let _ = write_frame(&mut s, &Frame::Bye);
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            router.close();
+            let summaries: Vec<_> = worker_handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect();
+            // Workers gone → all event senders dropped → dispatcher
+            // drains the channel and exits.
+            let agg = dispatcher.join().expect("dispatcher panicked");
+            // Tell the per-connection readers to wind down; their
+            // writers then emit the terminal Bye and close the socket.
+            closing.store(true, Ordering::Relaxed);
+            if let Some(e) = accept_err {
+                return Err(e.into());
+            }
+            Ok((summaries, agg))
+        })?;
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+
+        let busy_rejections = state.lock().expect("net state lock").busy_rejections;
+        Ok(NetReport {
+            serving: server.assemble_report(&summaries, &router, &residency, wall_secs, agg),
+            connections,
+            refused_connects,
+            busy_rejections,
+        })
+    }
+}
+
+/// Spawn the reader + writer pair for one accepted connection.
+fn spawn_connection<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    stream: TcpStream,
+    router: &'scope ShardRouter,
+    state: &'scope Mutex<NetState>,
+    closing: &'scope AtomicBool,
+    n_models: usize,
+    budget: usize,
+) {
+    let (tx, rx) = channel::<Frame>();
+    let write_half = stream.try_clone();
+
+    // Writer: drains the connection's frame queue; when every sender
+    // is gone (reader exited and all of the connection's sessions
+    // completed), sends the terminal Bye and closes the socket — which
+    // also unblocks a reader still parked in a blocking read.
+    if let Ok(mut ws) = write_half {
+        scope.spawn(move || {
+            for frame in rx.iter() {
+                if write_frame(&mut ws, &frame).is_err() {
+                    break; // client went away; drain silently
+                }
+            }
+            let _ = write_frame(&mut ws, &Frame::Bye);
+            let _ = ws.shutdown(Shutdown::Both);
+        });
+    }
+
+    // Reader: parses Request frames and runs admission. A short read
+    // timeout keeps it responsive to `closing` without tearing frames
+    // (the interruptible reader resumes partial reads across
+    // timeouts).
+    scope.spawn(move || {
+        let mut stream = stream;
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+        loop {
+            match read_frame_interruptible(&mut stream, closing) {
+                Ok(Some(Frame::Request { model, session, tokens })) => {
+                    let admitted = {
+                        let mut st = state.lock().expect("net state lock");
+                        let key: SessionKey = (model, session);
+                        let ok = !st.draining
+                            && (model as usize) < n_models
+                            && !st.routes.contains_key(&key)
+                            && st.inflight[model as usize] < budget;
+                        if ok {
+                            // Route + count registered before the lock
+                            // drops and before submit: the dispatcher
+                            // can immediately route this stream's
+                            // tokens, and drain sees the session the
+                            // instant it is admitted.
+                            st.routes
+                                .insert(key, RouteEntry { tx: tx.clone() });
+                            st.inflight[model as usize] += 1;
+                        } else {
+                            st.busy_rejections += 1;
+                        }
+                        ok
+                    };
+                    if admitted {
+                        router.submit(StreamItem {
+                            model,
+                            session,
+                            tokens: tokens.into_iter().map(|t| t as usize).collect(),
+                            submitted: Instant::now(),
+                        });
+                    } else {
+                        let _ = tx.send(Frame::Busy { model, session });
+                    }
+                }
+                // A client sending server-side frames is a protocol
+                // violation; clean EOF and raised `closing` both end
+                // the read loop normally.
+                Ok(Some(_)) | Ok(None) | Err(_) => break,
+            }
+        }
+        // Dropping `tx` lets the writer finish once the connection's
+        // in-flight sessions (which hold their own clones) complete.
+        drop(tx);
+    });
+}
+
+/// A minimal blocking client for the frame protocol — what the
+/// loopback tests, the e2e example, and the bench sweep drive.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect to a listening [`NetServer`].
+    pub fn connect(addr: SocketAddr) -> io::Result<Self> {
+        Ok(NetClient { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Send one `Request` chunk.
+    pub fn send(&mut self, model: u32, session: u64, tokens: &[usize]) -> io::Result<()> {
+        let frame = Frame::Request {
+            model,
+            session,
+            tokens: tokens.iter().map(|&t| t as u32).collect(),
+        };
+        write_frame(&mut self.stream, &frame)
+    }
+
+    /// Half-close the write side: no more requests, keep reading the
+    /// response stream until `Bye`/EOF.
+    pub fn finish(&mut self) -> io::Result<()> {
+        self.stream.shutdown(Shutdown::Write)
+    }
+
+    /// Read the next server frame (`None` on EOF).
+    pub fn read_frame(&mut self) -> io::Result<Option<Frame>> {
+        read_frame(&mut self.stream)
+    }
+
+    /// Read frames until `Bye` or EOF, returning everything before the
+    /// terminal frame.
+    pub fn read_to_bye(&mut self) -> io::Result<Vec<Frame>> {
+        let mut out = Vec::new();
+        while let Some(f) = self.read_frame()? {
+            if f == Frame::Bye {
+                break;
+            }
+            out.push(f);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_through_encode_decode() {
+        let frames = vec![
+            Frame::Request { model: 3, session: 0xDEAD_BEEF_u64, tokens: vec![0, 7, 41] },
+            Frame::Request { model: 0, session: 1, tokens: vec![] },
+            Frame::Token { model: 1, session: 9, pos: 4, pred: 17 },
+            Frame::Done {
+                model: 2,
+                session: 5,
+                tokens: 12,
+                nll_bits: 34.5,
+                wall_ms: 1.25,
+                first_token_wall_ms: 0.5,
+            },
+            Frame::Busy { model: 1, session: 2 },
+            Frame::Bye,
+        ];
+        for f in &frames {
+            let wire = f.encode();
+            let mut cursor = io::Cursor::new(&wire);
+            let back = read_frame(&mut cursor).unwrap().expect("frame");
+            assert_eq!(&back, f, "round trip changed the frame");
+            // And the stream position consumed exactly one frame.
+            assert_eq!(cursor.position() as usize, wire.len());
+        }
+        // Frames survive concatenation on one stream.
+        let wire: Vec<u8> = frames.iter().flat_map(|f| f.encode()).collect();
+        let mut cursor = io::Cursor::new(&wire);
+        for f in &frames {
+            assert_eq!(read_frame(&mut cursor).unwrap().as_ref(), Some(f));
+        }
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF after frames");
+    }
+
+    #[test]
+    fn oversized_and_zero_length_frames_are_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        wire.push(KIND_BYE);
+        assert!(read_frame(&mut io::Cursor::new(&wire)).is_err());
+        let wire = 0u32.to_le_bytes().to_vec();
+        assert!(read_frame(&mut io::Cursor::new(&wire)).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let wire = Frame::Busy { model: 1, session: 2 }.encode();
+        let cut = &wire[..wire.len() - 3];
+        assert!(read_frame(&mut io::Cursor::new(cut)).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.push(0x7F);
+        assert!(read_frame(&mut io::Cursor::new(&wire)).is_err());
+    }
+}

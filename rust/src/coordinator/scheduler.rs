@@ -98,6 +98,13 @@ pub struct StreamItem {
 }
 
 /// Completion record for one finished item.
+///
+/// Both latency fields are **wall-clock** milliseconds (measured from
+/// [`StreamItem::submitted`]). Inside the virtual-time simulators they
+/// are real elapsed time of the replay, *not* virtual ticks — schedule
+/// metrics (steps, occupancy, makespan) live in [`SchedulerStats`] and
+/// [`ShardSimReport::ticks`]; the two clocks are never mixed in one
+/// field.
 #[derive(Debug, Clone)]
 pub struct StreamDone {
     /// The model the finished chunk executed under.
@@ -108,8 +115,31 @@ pub struct StreamDone {
     pub tokens: usize,
     /// Total next-char negative log2-likelihood over the item.
     pub nll_bits: f64,
-    /// Submission→completion latency in milliseconds.
-    pub latency_ms: f64,
+    /// Submission→completion wall-clock latency in milliseconds
+    /// (formerly the ambiguously named `latency_ms`).
+    pub wall_ms: f64,
+    /// Submission→first-executed-token wall-clock latency in
+    /// milliseconds (equals `wall_ms` for empty items, which execute
+    /// nothing).
+    pub first_token_wall_ms: f64,
+}
+
+/// One executed token position of one stream — emitted by the
+/// scheduler when token recording is on
+/// ([`ContinuousScheduler::set_record_tokens`]), so a streaming
+/// front-end can forward per-token predictions as they happen and
+/// tests can compare token streams bit-exactly across serving paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// The model that executed the position.
+    pub model: ModelId,
+    /// The stream the position belongs to.
+    pub session: SessionId,
+    /// Position within the item's token chunk (0-based).
+    pub pos: usize,
+    /// Greedy next-token prediction at this position: the first
+    /// maximum of the logits row (deterministic tie-break).
+    pub pred: usize,
 }
 
 /// One live lane of a model's persistent wave.
@@ -121,6 +151,9 @@ struct Lane {
     /// Accumulated nll over this item (token order, f64).
     nll: f64,
     submitted: Instant,
+    /// Wall-clock submission→first-token latency, stamped when the
+    /// lane executes its first position (`None` until then).
+    first_ms: Option<f64>,
 }
 
 /// One model's persistent wave on a worker: its batch state plus the
@@ -233,6 +266,26 @@ pub struct ContinuousScheduler<'a> {
     mode: SchedulerMode,
     stats: SchedulerStats,
     model_stats: Vec<SchedulerStats>,
+    /// When true, [`Self::step`] records one [`TokenEvent`] per
+    /// executed lane position (off by default — simulators and trace
+    /// replay don't pay for the argmax unless they ask).
+    record_tokens: bool,
+    token_events: Vec<TokenEvent>,
+}
+
+/// First maximum of a logits row — the deterministic greedy decode
+/// used for streamed per-token predictions (strictly-greater compare,
+/// so ties resolve to the lowest index on every engine and path).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
 }
 
 impl<'a> ContinuousScheduler<'a> {
@@ -282,7 +335,20 @@ impl<'a> ContinuousScheduler<'a> {
             mode,
             stats: SchedulerStats::default(),
             model_stats: vec![SchedulerStats::default(); n],
+            record_tokens: false,
+            token_events: Vec::new(),
         }
+    }
+
+    /// Turn per-token event recording on or off (see [`TokenEvent`]).
+    pub fn set_record_tokens(&mut self, record: bool) {
+        self.record_tokens = record;
+    }
+
+    /// Drain the recorded token events (empty unless
+    /// [`Self::set_record_tokens`] enabled recording).
+    pub fn take_token_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.token_events)
     }
 
     /// Enqueue an item for admission (FIFO per stream). The item's
@@ -413,12 +479,14 @@ impl<'a> ContinuousScheduler<'a> {
             if item.tokens.is_empty() {
                 // Nothing to execute: complete immediately (consumes no
                 // lane and no quota).
+                let wall_ms = item.submitted.elapsed().as_secs_f64() * 1e3;
                 self.done.push(StreamDone {
                     model: item.model,
                     session: item.session,
                     tokens: 0,
                     nll_bits: 0.0,
-                    latency_ms: item.submitted.elapsed().as_secs_f64() * 1e3,
+                    wall_ms,
+                    first_token_wall_ms: wall_ms,
                 });
                 continue;
             }
@@ -442,6 +510,7 @@ impl<'a> ContinuousScheduler<'a> {
                 pos: 0,
                 nll: 0.0,
                 submitted: item.submitted,
+                first_ms: None,
             });
             self.model_stats[m].peak_lanes =
                 self.model_stats[m].peak_lanes.max(wave.lanes.len());
@@ -478,6 +547,17 @@ impl<'a> ContinuousScheduler<'a> {
             self.model_stats[m].lane_steps += wave.lanes.len();
             self.model_stats[m].padded_lane_steps += wave.bs.padded_batch();
             for (lane, l) in wave.lanes.iter_mut().enumerate() {
+                if l.first_ms.is_none() {
+                    l.first_ms = Some(l.submitted.elapsed().as_secs_f64() * 1e3);
+                }
+                if self.record_tokens {
+                    self.token_events.push(TokenEvent {
+                        model: m as ModelId,
+                        session: l.session,
+                        pos: l.pos,
+                        pred: argmax(wave.bs.logits.row(lane)),
+                    });
+                }
                 if let Some(&next) = l.tokens.get(l.pos + 1) {
                     l.nll += nll_bits(wave.bs.logits.row(lane), next);
                 }
@@ -496,12 +576,14 @@ impl<'a> ContinuousScheduler<'a> {
                         session.nll_bits += l.nll;
                         self.stats.retirements += 1;
                         self.model_stats[m].retirements += 1;
+                        let wall_ms = l.submitted.elapsed().as_secs_f64() * 1e3;
                         self.done.push(StreamDone {
                             model: m as ModelId,
                             session: l.session,
                             tokens: l.tokens.len(),
                             nll_bits: l.nll,
-                            latency_ms: l.submitted.elapsed().as_secs_f64() * 1e3,
+                            wall_ms,
+                            first_token_wall_ms: l.first_ms.unwrap_or(wall_ms),
                         });
                     }
                 }
@@ -592,13 +674,18 @@ impl<'a> ContinuousScheduler<'a> {
     }
 
     /// Number of live lanes in one model's wave (0 for non-resident
-    /// models).
+    /// models). Panics on a [`ModelId`] the scheduler was never built
+    /// with — an out-of-range id is a caller bug, not an idle model,
+    /// and silently reporting 0 for it would hide broken registry
+    /// wiring (the same defect class as the short-bias `unwrap_or(0)`
+    /// fixed in `qmatmul::bias_at`).
     pub fn live_lanes_model(&self, model: ModelId) -> usize {
-        self.waves
-            .get(model as usize)
-            .and_then(|w| w.as_ref())
-            .map(|w| w.lanes.len())
-            .unwrap_or(0)
+        debug_assert!(
+            (model as usize) < self.waves.len(),
+            "model {model} out of range: scheduler holds {} model slot(s)",
+            self.waves.len()
+        );
+        self.waves[model as usize].as_ref().map_or(0, |w| w.lanes.len())
     }
 
     /// Number of items queued for admission.
@@ -613,13 +700,16 @@ impl<'a> ContinuousScheduler<'a> {
     }
 
     /// Width of one model's batch state (must equal
-    /// [`Self::live_lanes_model`]).
+    /// [`Self::live_lanes_model`]; 0 for non-resident models). Like
+    /// [`Self::live_lanes_model`], panics on an out-of-range
+    /// [`ModelId`] instead of silently defaulting to 0.
     pub fn batch_width_model(&self, model: ModelId) -> usize {
-        self.waves
-            .get(model as usize)
-            .and_then(|w| w.as_ref())
-            .map(|w| w.bs.batch())
-            .unwrap_or(0)
+        debug_assert!(
+            (model as usize) < self.waves.len(),
+            "model {model} out of range: scheduler holds {} model slot(s)",
+            self.waves.len()
+        );
+        self.waves[model as usize].as_ref().map_or(0, |w| w.bs.batch())
     }
 
     /// Session ids of the live lanes, wave order then lane order (the
@@ -742,6 +832,10 @@ pub struct ShardConfig {
     pub evict_idle_after: Option<u64>,
     /// Virtual milliseconds one batched step consumes in simulation.
     pub tick_ms: f64,
+    /// Record one [`TokenEvent`] per executed lane position (off by
+    /// default; the correctness oracle the network front-end's
+    /// loopback tests compare against).
+    pub record_tokens: bool,
 }
 
 impl Default for ShardConfig {
@@ -754,6 +848,7 @@ impl Default for ShardConfig {
             session_budget: None,
             evict_idle_after: None,
             tick_ms: 1.0,
+            record_tokens: false,
         }
     }
 }
@@ -786,6 +881,9 @@ pub struct ShardSimReport {
     /// Streams evicted per worker under the idle-age policy, in
     /// eviction order.
     pub idle_evicted: Vec<Vec<SessionKey>>,
+    /// Per-token events in execution order (worker index order within
+    /// one tick); empty unless [`ShardConfig::record_tokens`] was set.
+    pub token_events: Vec<TokenEvent>,
 }
 
 impl ShardSimReport {
@@ -869,10 +967,14 @@ pub fn simulate_multi_shard_trace<'a>(
                 .enumerate()
                 .map(|(m, e)| residency[m].contains(&w).then_some(e))
                 .collect();
-            ContinuousScheduler::multi(per_worker, cfg.max_lanes, cfg.mode)
+            let mut sched =
+                ContinuousScheduler::multi(per_worker, cfg.max_lanes, cfg.mode);
+            sched.set_record_tokens(cfg.record_tokens);
+            sched
         })
         .collect();
     let mut completions = Vec::new();
+    let mut token_events = Vec::new();
     let mut evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
     let mut idle_evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
     let mut steal_storm_guard = 0usize;
@@ -929,6 +1031,7 @@ pub fn simulate_multi_shard_trace<'a>(
                         .extend(sched.enforce_idle_budget(max_idle, &queued));
                 }
             }
+            token_events.append(&mut sched.take_token_events());
             completions.append(&mut sched.take_completed());
         }
         if stepped {
@@ -964,6 +1067,7 @@ pub fn simulate_multi_shard_trace<'a>(
         ticks,
         evicted,
         idle_evicted,
+        token_events,
     };
     (scheds, report)
 }
@@ -1292,5 +1396,116 @@ mod tests {
         // Per-model counters cover the whole trace.
         let tokens: usize = trace.requests.iter().map(|r| r.tokens.len()).sum();
         assert_eq!(r1.per_model.iter().map(|s| s.lane_steps).sum::<usize>(), tokens);
+    }
+
+    #[test]
+    #[should_panic]
+    fn live_lanes_model_panics_on_out_of_range_model() {
+        // Two model slots: asking about model 7 is a caller bug and
+        // must panic, never silently report "0 live lanes".
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let sched =
+            ContinuousScheduler::multi(vec![Some(&e0), None], 2, SchedulerMode::Continuous);
+        let _ = sched.live_lanes_model(7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_width_model_panics_on_out_of_range_model() {
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let sched =
+            ContinuousScheduler::multi(vec![Some(&e0), None], 2, SchedulerMode::Continuous);
+        let _ = sched.batch_width_model(7);
+    }
+
+    #[test]
+    fn non_resident_model_still_reports_zero_lanes() {
+        // The fix must not change the legitimate `None → 0` mapping: an
+        // in-range model that simply is not resident on this worker has
+        // zero lanes and zero width, without panicking.
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let sched =
+            ContinuousScheduler::multi(vec![Some(&e0), None], 2, SchedulerMode::Continuous);
+        assert_eq!(sched.live_lanes_model(1), 0);
+        assert_eq!(sched.batch_width_model(1), 0);
+    }
+
+    #[test]
+    fn idle_budget_boundary_exact_age_survives() {
+        // Pin the documented boundary of `--evict-idle-after N`: a
+        // session idle for exactly N ticks survives; N+1 evicts ("idle
+        // for *more than* N").
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 1);
+        // Session 1 retires after 2 steps; session 2 then keeps the
+        // scheduler ticking one step at a time.
+        sched.offer(item(1, vec![1; 2]));
+        sched.admit_ready();
+        sched.step();
+        sched.step();
+        sched.take_completed();
+        assert_eq!(sched.live_lanes(), 0);
+        // Session 1 was last active at its retirement tick. Tick the
+        // clock exactly N=3 more times via session 2's steps.
+        sched.offer(item(2, vec![2; 3]));
+        sched.admit_ready();
+        for _ in 0..3 {
+            sched.step();
+        }
+        sched.take_completed();
+        // Idle age == 3: must survive a threshold of 3 …
+        assert!(sched.enforce_idle_budget(3, &[]).is_empty());
+        assert!(sched.sessions().get(1).is_some());
+        // … and age 4 (one more tick) must evict under the same
+        // threshold.
+        sched.offer(item(3, vec![3; 1]));
+        sched.admit_ready();
+        sched.step();
+        sched.take_completed();
+        assert_eq!(sched.enforce_idle_budget(3, &[]), vec![(0, 1)]);
+        assert!(sched.sessions().get(1).is_none());
+        assert_eq!(sched.stats().idle_evictions, 1);
+    }
+
+    #[test]
+    fn token_events_off_by_default_and_deterministic_when_on() {
+        let lm = tiny_lm();
+        let seqs: Vec<Vec<usize>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let oh: Vec<_> =
+            seqs.iter().map(|s| crate::model::lm::one_hot_seq(s)).collect();
+        let stats = lm.stack_weights.calibrate(&oh);
+        let engine =
+            lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+        let trace = RequestTrace::generate(8, 600.0, 10, VOCAB, 13);
+        let run = |record: bool| {
+            let cfg = ShardConfig {
+                workers: 2,
+                max_lanes: 4,
+                record_tokens: record,
+                ..ShardConfig::default()
+            };
+            let (_s, rep) = simulate_shard_trace(&engine, &trace, &cfg);
+            rep
+        };
+        assert!(run(false).token_events.is_empty(), "tap must be off by default");
+        let r1 = run(true);
+        let r2 = run(true);
+        let tokens: usize = trace.requests.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(r1.token_events.len(), tokens, "one event per executed position");
+        assert_eq!(r1.token_events, r2.token_events, "tap must be deterministic");
+        // Per-stream positions are contiguous from 0 (chunk order).
+        for req in &trace.requests {
+            let positions: Vec<usize> = r1
+                .token_events
+                .iter()
+                .filter(|e| e.session == req.id)
+                .map(|e| e.pos)
+                .collect();
+            assert_eq!(positions, (0..req.tokens.len()).collect::<Vec<_>>());
+        }
     }
 }

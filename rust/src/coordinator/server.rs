@@ -43,7 +43,10 @@ use super::batcher::BatchPolicy;
 use super::metrics::{ModelLoad, ServingReport, WorkerLoad};
 use super::registry::{ModelId, ModelRegistry, ModelSpec, Residency};
 use super::router::{ShardPoll, ShardRouter};
-use super::scheduler::{ContinuousScheduler, SchedulerMode, SchedulerStats, StreamItem};
+use super::scheduler::{
+    ContinuousScheduler, SchedulerMode, SchedulerStats, StreamDone, StreamItem,
+    TokenEvent,
+};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -96,22 +99,172 @@ impl Default for ServerConfig {
     }
 }
 
-/// Completion record sent back to the driver.
-struct Completion {
-    latency_ms: f64,
-    tokens: usize,
-    nll_bits_total: f64,
+/// What a serving worker emits while running: per-token events (only
+/// when the token tap is on — the network front streams them to
+/// clients) and item completions. The old `Completion` record with its
+/// ambiguous `latency_ms` is gone: completions travel as the
+/// scheduler's own [`StreamDone`], whose `wall_ms` /
+/// `first_token_wall_ms` names make the clock explicit.
+pub(crate) enum WorkerEvent {
+    /// One executed token position of a live stream.
+    Token(TokenEvent),
+    /// One finished item.
+    Done(StreamDone),
+}
+
+/// The per-worker knobs [`run_worker`] needs — the scheduler-facing
+/// subset of [`ServerConfig`] plus the token tap.
+pub(crate) struct WorkerCfg {
+    pub(crate) max_lanes: usize,
+    pub(crate) mode: SchedulerMode,
+    pub(crate) session_budget: Option<usize>,
+    pub(crate) evict_idle_after: Option<u64>,
+    pub(crate) record_tokens: bool,
 }
 
 /// Per-worker execution summary.
-struct WorkerSummary {
-    compute_secs: f64,
-    batches: usize,
-    items: usize,
-    stats: SchedulerStats,
-    model_stats: Vec<SchedulerStats>,
+pub(crate) struct WorkerSummary {
+    pub(crate) compute_secs: f64,
+    pub(crate) batches: usize,
+    pub(crate) items: usize,
+    pub(crate) stats: SchedulerStats,
+    pub(crate) model_stats: Vec<SchedulerStats>,
     /// Resident sessions per model at worker exit.
-    model_sessions: Vec<usize>,
+    pub(crate) model_sessions: Vec<usize>,
+}
+
+/// Wall-clock completion aggregation shared by trace replay and the
+/// network front-end: the end-to-end, first-token, and per-token
+/// latency histograms plus the token/request/nll totals.
+pub(crate) struct CompletionAgg {
+    pub(crate) latency: LatencyStats,
+    pub(crate) first_token: LatencyStats,
+    pub(crate) per_token: LatencyStats,
+    pub(crate) tokens: usize,
+    pub(crate) requests: usize,
+}
+
+impl CompletionAgg {
+    pub(crate) fn new() -> Self {
+        CompletionAgg {
+            latency: LatencyStats::new(),
+            first_token: LatencyStats::new(),
+            per_token: LatencyStats::new(),
+            tokens: 0,
+            requests: 0,
+        }
+    }
+
+    pub(crate) fn record(&mut self, d: &StreamDone) {
+        self.latency.record(d.wall_ms);
+        self.first_token.record(d.first_token_wall_ms);
+        if d.tokens > 1 {
+            // Steady-state cadence after the first token landed.
+            self.per_token
+                .record((d.wall_ms - d.first_token_wall_ms) / (d.tokens - 1) as f64);
+        }
+        self.tokens += d.tokens;
+        self.requests += 1;
+    }
+}
+
+/// The worker loop shared by trace replay ([`Server::run_trace`]) and
+/// the network front-end ([`super::net`]): poll the router up to the
+/// free lane capacity, admit, step, enforce budgets, and emit events
+/// until the router is closed and drained.
+pub(crate) fn run_worker(
+    registry: &ModelRegistry<'_>,
+    router: &ShardRouter,
+    w: usize,
+    workers: usize,
+    cfg: &WorkerCfg,
+    events: &Sender<WorkerEvent>,
+) -> WorkerSummary {
+    let engines: Vec<Option<CharLmEngine>> = registry.instantiate(w, workers);
+    let engine_refs: Vec<Option<&CharLmEngine>> =
+        engines.iter().map(|e| e.as_ref()).collect();
+    let mut sched = ContinuousScheduler::multi(engine_refs, cfg.max_lanes, cfg.mode);
+    sched.set_record_tokens(cfg.record_tokens);
+    let mut compute_secs = 0f64;
+    let mut batches = 0usize;
+    let mut items = 0usize;
+    // Sticky shutdown flag. A worker whose lanes are full at close time
+    // has `capacity == 0` and skips the poll entirely, so `Closed`
+    // cannot be observed that iteration; when the flag was re-armed to
+    // `false` every iteration, shutdown additionally required
+    // re-observing the router in the *same* iteration the last lane
+    // drained. That never hangs (full lanes imply live work, every
+    // step retires work, and an emptied scheduler polls again next
+    // iteration) — but exit correctness shouldn't lean on that
+    // re-observation; once `Closed` is seen it stays seen. Pinned by
+    // `close_with_full_lanes_drains_cleanly`.
+    let mut closed = false;
+    loop {
+        // Ingest up to the free lane capacity: backlog beyond it stays
+        // in the shared queue, where an idle peer can steal it.
+        let capacity =
+            cfg.max_lanes.saturating_sub(sched.live_lanes() + sched.pending_len());
+        if capacity > 0 {
+            match router.poll(w, capacity) {
+                ShardPoll::Items(new) | ShardPoll::Stolen { items: new, .. } => {
+                    batches += 1;
+                    for item in new {
+                        items += 1;
+                        sched.offer(item);
+                    }
+                }
+                ShardPoll::Empty => {
+                    if !sched.has_live_work() {
+                        // Fully idle: block until there is something to
+                        // drain, steal, or shut down for.
+                        router.wait_for_work(w);
+                        continue;
+                    }
+                }
+                ShardPoll::Closed => closed = true,
+            }
+        }
+        if !sched.has_live_work() {
+            if closed {
+                break;
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        sched.admit_ready();
+        sched.step();
+        compute_secs += t0.elapsed().as_secs_f64();
+        if cfg.session_budget.is_some() || cfg.evict_idle_after.is_some() {
+            // One router-lock acquisition serves both eviction
+            // policies.
+            let queued = router.queued_sessions(w);
+            if let Some(budget) = cfg.session_budget {
+                sched.enforce_session_budget(budget, &queued);
+            }
+            if let Some(max_idle) = cfg.evict_idle_after {
+                sched.enforce_idle_budget(max_idle, &queued);
+            }
+        }
+        // Tokens before completions: a stream's Done must never
+        // overtake its own token events at the receiver.
+        for t in sched.take_token_events() {
+            let _ = events.send(WorkerEvent::Token(t));
+        }
+        for c in sched.take_completed() {
+            let _ = events.send(WorkerEvent::Done(c));
+        }
+    }
+    let model_sessions = (0..registry.len())
+        .map(|m| sched.sessions().len_model(m as ModelId))
+        .collect();
+    WorkerSummary {
+        compute_secs,
+        batches,
+        items,
+        stats: sched.stats(),
+        model_stats: sched.model_stats().to_vec(),
+        model_sessions,
+    }
 }
 
 /// The server: binds a model registry to a worker pool. The
@@ -176,106 +329,28 @@ impl<'a> Server<'a> {
         }
         let residency = self.registry.residency(workers);
         let router = ShardRouter::with_residency(workers, self.config.steal, residency.clone());
-        let (done_tx, done_rx) = channel::<Completion>();
-        let engine_label = if n_models == 1 {
-            self.registry.engine_kind(0).label()
-        } else {
-            "multi"
+        let (ev_tx, ev_rx) = channel::<WorkerEvent>();
+        let wcfg = WorkerCfg {
+            max_lanes: self.config.batch.max_batch,
+            mode: self.config.mode,
+            session_budget: self.config.session_budget,
+            evict_idle_after: self.config.evict_idle_after,
+            record_tokens: false,
         };
 
         let wall_start = Instant::now();
         let summaries: Vec<WorkerSummary> = std::thread::scope(|scope| {
             let router = &router;
             let registry = &self.registry;
+            let wcfg = &wcfg;
             let mut handles = Vec::new();
             for w in 0..workers {
-                let done: Sender<Completion> = done_tx.clone();
-                let mode = self.config.mode;
-                let max_lanes = self.config.batch.max_batch;
-                let session_budget = self.config.session_budget;
-                let evict_idle_after = self.config.evict_idle_after;
+                let events: Sender<WorkerEvent> = ev_tx.clone();
                 handles.push(scope.spawn(move || {
-                    let engines: Vec<Option<CharLmEngine>> =
-                        registry.instantiate(w, workers);
-                    let engine_refs: Vec<Option<&CharLmEngine>> =
-                        engines.iter().map(|e| e.as_ref()).collect();
-                    let mut sched =
-                        ContinuousScheduler::multi(engine_refs, max_lanes, mode);
-                    let mut compute_secs = 0f64;
-                    let mut batches = 0usize;
-                    let mut items = 0usize;
-                    loop {
-                        // Ingest up to the free lane capacity: backlog
-                        // beyond it stays in the shared queue, where an
-                        // idle peer can steal it.
-                        let capacity = max_lanes
-                            .saturating_sub(sched.live_lanes() + sched.pending_len());
-                        let mut closed = false;
-                        if capacity > 0 {
-                            match router.poll(w, capacity) {
-                                ShardPoll::Items(new)
-                                | ShardPoll::Stolen { items: new, .. } => {
-                                    batches += 1;
-                                    for item in new {
-                                        items += 1;
-                                        sched.offer(item);
-                                    }
-                                }
-                                ShardPoll::Empty => {
-                                    if !sched.has_live_work() {
-                                        // Fully idle: block until there
-                                        // is something to drain, steal,
-                                        // or shut down for.
-                                        router.wait_for_work(w);
-                                        continue;
-                                    }
-                                }
-                                ShardPoll::Closed => closed = true,
-                            }
-                        }
-                        if !sched.has_live_work() {
-                            if closed {
-                                break;
-                            }
-                            continue;
-                        }
-                        let t0 = Instant::now();
-                        sched.admit_ready();
-                        sched.step();
-                        compute_secs += t0.elapsed().as_secs_f64();
-                        if session_budget.is_some() || evict_idle_after.is_some() {
-                            // One router-lock acquisition serves both
-                            // eviction policies.
-                            let queued = router.queued_sessions(w);
-                            if let Some(budget) = session_budget {
-                                sched.enforce_session_budget(budget, &queued);
-                            }
-                            if let Some(max_idle) = evict_idle_after {
-                                sched.enforce_idle_budget(max_idle, &queued);
-                            }
-                        }
-                        for c in sched.take_completed() {
-                            let _ = done.send(Completion {
-                                latency_ms: c.latency_ms,
-                                tokens: c.tokens,
-                                nll_bits_total: c.nll_bits,
-                            });
-                        }
-                    }
-                    let model_sessions = (0..registry.len())
-                        .map(|m| sched.sessions().len_model(m as ModelId))
-                        .collect();
-                    WorkerSummary {
-                        compute_secs,
-                        batches,
-                        items,
-                        stats: sched.stats(),
-                        model_stats: sched.model_stats().to_vec(),
-                        model_sessions,
-                    }
+                    run_worker(registry, router, w, workers, wcfg, &events)
                 }));
             }
-            drop(done_tx);
+            drop(ev_tx);
 
             // Open-loop submission on the driver thread.
             let t0 = Instant::now();
@@ -298,16 +373,34 @@ impl<'a> Server<'a> {
         });
         let wall_secs = wall_start.elapsed().as_secs_f64();
 
-        let mut latency = LatencyStats::new();
-        let mut tokens = 0usize;
-        let mut requests = 0usize;
-        let mut _total_nll = 0f64;
-        for c in done_rx.iter() {
-            latency.record(c.latency_ms);
-            tokens += c.tokens;
-            requests += 1;
-            _total_nll += c.nll_bits_total;
+        let mut agg = CompletionAgg::new();
+        for ev in ev_rx.iter() {
+            if let WorkerEvent::Done(d) = ev {
+                agg.record(&d);
+            }
         }
+        Ok(self.assemble_report(&summaries, &router, &residency, wall_secs, agg))
+    }
+
+    /// Assemble the [`ServingReport`] out of the worker summaries, the
+    /// router's steal counters, and the wall-clock completion
+    /// aggregation — shared by [`Self::run_trace`] and the network
+    /// front-end ([`super::net`]).
+    pub(crate) fn assemble_report(
+        &self,
+        summaries: &[WorkerSummary],
+        router: &ShardRouter,
+        residency: &[Vec<usize>],
+        wall_secs: f64,
+        agg: CompletionAgg,
+    ) -> ServingReport {
+        let workers = self.config.workers;
+        let n_models = self.registry.len();
+        let engine_label = if n_models == 1 {
+            self.registry.engine_kind(0).label()
+        } else {
+            "multi"
+        };
         let steal_events = router.steal_events();
         let stolen_sessions = router.stolen_sessions();
         let stolen_by_model = router.stolen_by_model(n_models);
@@ -333,7 +426,7 @@ impl<'a> Server<'a> {
                 let mid = m as ModelId;
                 let mut agg = SchedulerStats::default();
                 let mut resident_sessions = 0usize;
-                for s in &summaries {
+                for s in summaries {
                     agg.batched_steps += s.model_stats[m].batched_steps;
                     agg.lane_steps += s.model_stats[m].lane_steps;
                     agg.padded_lane_steps += s.model_stats[m].padded_lane_steps;
@@ -386,15 +479,17 @@ impl<'a> Server<'a> {
         let idle_evictions: usize =
             summaries.iter().map(|s| s.stats.idle_evictions).sum();
 
-        Ok(ServingReport {
+        ServingReport {
             engine: engine_label,
             mode: self.config.mode.label(),
             models: n_models,
-            requests,
-            tokens,
+            requests: agg.requests,
+            tokens: agg.tokens,
             wall_secs,
             compute_secs,
-            latency,
+            latency: agg.latency,
+            first_token_latency: agg.first_token,
+            per_token_latency: agg.per_token,
             workers,
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
             batched_steps,
@@ -414,7 +509,7 @@ impl<'a> Server<'a> {
             resident_weight_bytes: self.registry.total_resident_weight_bytes(workers),
             per_worker,
             per_model,
-        })
+        }
     }
 }
 
@@ -563,6 +658,58 @@ mod tests {
             assert!(m.lane_steps > 0, "model {} never executed", m.model);
             assert!(m.resident_weight_bytes >= m.weight_bytes);
             assert_eq!(m.resident_workers, 2);
+        }
+    }
+
+    #[test]
+    fn close_with_full_lanes_drains_cleanly() {
+        // Satellite-3 regression: submit everything at once at an
+        // extreme speedup so `router.close()` lands while every lane is
+        // occupied (`max_batch` is far below the backlog). Workers then
+        // have `capacity == 0` and skip the poll on the very iteration
+        // the router closes; with a non-sticky `closed` flag, exit
+        // correctness leaned on re-observing `Closed` in the same
+        // iteration the last lane drained. The run must still complete
+        // every request and terminate.
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        let trace = RequestTrace::generate(32, 1_000_000.0, 10, VOCAB, 13);
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+                ..ServerConfig::default()
+            },
+        );
+        let report = server.run_trace(&trace, 1e9).unwrap();
+        assert_eq!(report.requests, 32);
+        assert_eq!(report.tokens, trace.total_tokens());
+        assert_eq!(report.lane_retirements, report.lane_admissions);
+    }
+
+    #[test]
+    fn report_populates_wall_clock_histograms() {
+        // The two-clock split: every completed request lands in the
+        // end-to-end and first-token histograms, and multi-token
+        // requests land in the per-token cadence histogram.
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        let trace = RequestTrace::generate(8, 2000.0, 6, VOCAB, 21);
+        let server = Server::new(&lm, Some(&stats), ServerConfig::default());
+        let report = server.run_trace(&trace, 1000.0).unwrap();
+        assert_eq!(report.latency.count(), 8);
+        assert_eq!(report.first_token_latency.count(), 8);
+        assert!(report.per_token_latency.count() > 0);
+        for p in [50.0, 95.0, 99.0] {
+            assert!(report.first_token_latency.percentile(p) >= 0.0);
+            assert!(report.per_token_latency.percentile(p) >= 0.0);
+            // First token cannot land after the end of the stream.
+            assert!(
+                report.first_token_latency.percentile(p)
+                    <= report.latency.percentile(p) + 1e-9
+            );
         }
     }
 

@@ -383,6 +383,27 @@ mod tests {
     }
 
     #[test]
+    fn idle_eviction_boundary_exact_age_survives() {
+        // The documented `--evict-idle-after N` contract (docs/
+        // SERVING.md): evict sessions idle for *more than* N ticks.
+        // Pin the exact boundary: idle age == N survives, N+1 evicts.
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(0, 1, &engine); // active at t=0
+        for _ in 0..4 {
+            mgr.tick();
+        }
+        // now = 4, idle age exactly 4: threshold 4 keeps it …
+        assert!(mgr.evict_idle_protected(4, &[]).is_empty());
+        assert!(mgr.get(1).is_some());
+        // … and one more tick (age 5 > 4) evicts it.
+        mgr.tick();
+        assert_eq!(mgr.evict_idle_protected(4, &[]), vec![(0, 1)]);
+        assert!(mgr.get(1).is_none());
+    }
+
+    #[test]
     fn idle_eviction_respects_protection_and_order() {
         let lm = tiny_lm();
         let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());

@@ -13,8 +13,8 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use iqrnn::coordinator::{
-    BatchPolicy, ModelRegistry, ModelSpec, Residency, SchedulerMode, Server,
-    ServerConfig,
+    BatchPolicy, ModelRegistry, ModelSpec, NetConfig, NetServer, NetShutdown, Residency,
+    SchedulerMode, Server, ServerConfig,
 };
 use iqrnn::lstm::{QuantizeOptions, StackEngine};
 use iqrnn::model::lm::CharLm;
@@ -67,6 +67,8 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}       --rate R (req/s)  --batch B  --mode continuous|wave\n\
                  \u{20}       --no-steal  --session-budget N  --evict-idle-after N\n\
                  \u{20}       --models N  --replicas R  --artifacts DIR\n\
+                 \u{20}       --listen ADDR (TCP front instead of trace replay)\n\
+                 \u{20}       --drain-after S  --max-inflight N (with --listen)\n\
                  eval   --artifacts DIR   (Table-1-style quality comparison)\n\
                  recipe [--ln] [--proj] [--peephole] [--cifg]   (print Table 2)\n\
                  info   --artifacts DIR"
@@ -109,22 +111,25 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     let calib = calibration_sequences(&corpus, 100, 64, 11)?;
     let stats = lm.calibrate(&calib);
 
+    let listen = flag(args, "--listen");
     let mut trace = RequestTrace::generate(requests, rate, 60, iqrnn::model::lm::VOCAB, 17);
     if models > 1 {
         trace.assign_models(|id| (id % models as u64) as iqrnn::coordinator::ModelId);
     }
-    println!(
-        "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, \
-         engine={}, mode={}, steal={}, models={models}{}",
-        trace.total_tokens(),
-        engine.label(),
-        mode.label(),
-        if steal { "on" } else { "off" },
-        match replicas {
-            Some(r) => format!(", replicas={r}"),
-            None => String::new(),
-        },
-    );
+    if listen.is_none() {
+        println!(
+            "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, \
+             engine={}, mode={}, steal={}, models={models}{}",
+            trace.total_tokens(),
+            engine.label(),
+            mode.label(),
+            if steal { "on" } else { "off" },
+            match replicas {
+                Some(r) => format!(", replicas={r}"),
+                None => String::new(),
+            },
+        );
+    }
     let config = ServerConfig {
         workers,
         batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
@@ -154,6 +159,38 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
         });
     }
     let server = Server::with_registry(registry, config);
+
+    // `--listen` swaps trace replay for the wall-clock TCP front: real
+    // clients, Busy backpressure, graceful drain. Without
+    // `--drain-after` the server runs until the process is killed.
+    if let Some(listen) = listen {
+        let drain_after = flag(args, "--drain-after")
+            .map(|v| v.parse::<f64>())
+            .transpose()?
+            .map(Duration::from_secs_f64);
+        let max_inflight = flag(args, "--max-inflight")
+            .map(|v| v.parse::<usize>())
+            .transpose()?;
+        let net = NetServer::bind(
+            &server,
+            NetConfig { listen, max_inflight_per_model: max_inflight, drain_after },
+        )?;
+        println!("listening on {}", net.local_addr()?);
+        let report = net.serve(&NetShutdown::new())?;
+        println!(
+            "net: connections={} refused={} busy={}",
+            report.connections, report.refused_connects, report.busy_rejections
+        );
+        report.serving.print();
+        if workers > 1 {
+            report.serving.print_workers();
+        }
+        if models > 1 {
+            report.serving.print_models();
+        }
+        return Ok(());
+    }
+
     let report = server.run_trace(&trace, 1.0)?;
     report.print();
     if workers > 1 {

@@ -1,0 +1,365 @@
+//! Loopback TCP serving suite: the network front against the
+//! deterministic shard simulator as correctness oracle.
+//!
+//! What is locked down:
+//!
+//! * **Bit-exactness** — a loopback client streaming a trace through
+//!   `NetServer` receives, per stream, exactly the `(pos, pred)` token
+//!   sequence and the bit-identical `nll_bits` that
+//!   `simulate_shard_trace` / `simulate_multi_shard_trace` record for
+//!   the same trace (all engines; mixed multi-model registry).
+//! * **Backpressure** — a request beyond the per-model in-flight
+//!   budget is answered with an explicit `Busy` frame, nothing is
+//!   silently dropped, and the same session succeeds on retry after
+//!   capacity frees up.
+//! * **Graceful drain** — raising shutdown lets every in-flight
+//!   stream finish (all tokens + `Done` + terminal `Bye`), while late
+//!   connects are refused with an immediate `Bye` and never served.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use iqrnn::coordinator::{
+    simulate_multi_shard_trace, simulate_shard_trace, BatchPolicy, Frame, ModelRegistry,
+    ModelSpec, NetClient, NetConfig, NetServer, NetShutdown, Residency, SchedulerMode,
+    Server, ServerConfig, ShardConfig,
+};
+use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{CharLm, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+fn tiny_lm(seed: u64, hidden: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(seed);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+}
+
+fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+    let mut rng = Pcg32::seeded(991);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+/// Per-stream `(pos, pred)` sequences plus per-stream nll, keyed by
+/// `(model, session)`.
+type Streams = BTreeMap<(u32, u64), (Vec<(u32, u32)>, Option<f64>)>;
+
+/// Stream every trace request through one loopback connection (no
+/// pacing — bit-exactness is schedule-independent) and collect the
+/// response streams.
+fn drive_loopback(server: &Server<'_>, trace: &RequestTrace) -> (Streams, usize) {
+    let net = NetServer::bind(
+        server,
+        NetConfig {
+            // Budget above the trace size: this test is about
+            // bit-exactness, not backpressure.
+            max_inflight_per_model: Some(trace.requests.len() + 8),
+            ..NetConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = net.local_addr().expect("local addr");
+    let stop = NetShutdown::new();
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| net.serve(&stop).expect("serve"));
+        let mut client = NetClient::connect(addr).expect("connect");
+        for req in &trace.requests {
+            client.send(req.model, req.id, &req.tokens).expect("send");
+        }
+        client.finish().expect("half-close");
+        let frames = client.read_to_bye().expect("read streams");
+        stop.shutdown();
+        let report = handle.join().expect("serve thread");
+        assert_eq!(report.busy_rejections, 0, "bit-exact run must not see Busy");
+        assert_eq!(report.connections, 1);
+        assert_eq!(report.serving.requests, trace.requests.len());
+        assert_eq!(report.serving.tokens, trace.total_tokens());
+        // The wall-clock histograms are populated on the net path too.
+        assert_eq!(report.serving.latency.count(), trace.requests.len());
+        assert_eq!(report.serving.first_token_latency.count(), trace.requests.len());
+        let mut streams: Streams = BTreeMap::new();
+        for f in frames {
+            match f {
+                Frame::Token { model, session, pos, pred } => {
+                    streams.entry((model, session)).or_default().0.push((pos, pred));
+                }
+                Frame::Done { model, session, nll_bits, .. } => {
+                    let entry = streams.entry((model, session)).or_default();
+                    assert!(entry.1.is_none(), "double Done for {model}/{session}");
+                    entry.1 = Some(nll_bits);
+                }
+                Frame::Busy { model, session } => {
+                    panic!("unexpected Busy for {model}/{session}")
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        (streams, report.serving.requests)
+    })
+}
+
+/// The simulator's view of the same trace, same pool shape.
+fn simulated_streams(
+    engines: &[iqrnn::model::lm::CharLmEngine],
+    residency: &[Vec<usize>],
+    trace: &RequestTrace,
+    workers: usize,
+    max_lanes: usize,
+) -> Streams {
+    let cfg = ShardConfig {
+        workers,
+        max_lanes,
+        mode: SchedulerMode::Continuous,
+        steal: true,
+        session_budget: None,
+        evict_idle_after: None,
+        tick_ms: 1.0,
+        record_tokens: true,
+    };
+    let (_scheds, report) = simulate_multi_shard_trace(engines, residency, trace, &cfg);
+    let mut streams: Streams = BTreeMap::new();
+    for t in &report.token_events {
+        streams
+            .entry((t.model, t.session))
+            .or_default()
+            .0
+            .push((t.pos as u32, t.pred as u32));
+    }
+    for d in &report.completions {
+        streams.entry((d.model, d.session)).or_default().1 = Some(d.nll_bits);
+    }
+    streams
+}
+
+fn assert_streams_match(net: &Streams, sim: &Streams) {
+    assert_eq!(net.len(), sim.len(), "stream count differs");
+    for (key, (net_toks, net_nll)) in net {
+        let (sim_toks, sim_nll) = sim.get(key).unwrap_or_else(|| {
+            panic!("stream {key:?} missing from simulator run")
+        });
+        assert_eq!(net_toks, sim_toks, "token stream differs for {key:?}");
+        let (a, b) = (net_nll.expect("net Done"), sim_nll.expect("sim Done"));
+        assert_eq!(a.to_bits(), b.to_bits(), "nll differs for {key:?}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn loopback_token_streams_are_bit_identical_to_simulator_across_engines() {
+    let lm = tiny_lm(4321, 16);
+    let stats = calib(&lm);
+    let trace = RequestTrace::generate(18, 900.0, 9, VOCAB, 51);
+    for engine_kind in StackEngine::ALL {
+        let config = ServerConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            engine: engine_kind,
+            mode: SchedulerMode::Continuous,
+            ..ServerConfig::default()
+        };
+        let server = Server::new(&lm, Some(&stats), config);
+        let (net_streams, served) = drive_loopback(&server, &trace);
+        assert_eq!(served, 18, "{engine_kind:?}");
+
+        let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let cfg = ShardConfig {
+            workers: 2,
+            max_lanes: 4,
+            record_tokens: true,
+            ..ShardConfig::default()
+        };
+        let (_scheds, sim) = simulate_shard_trace(&engine, &trace, &cfg);
+        let mut sim_streams: Streams = BTreeMap::new();
+        for t in &sim.token_events {
+            sim_streams
+                .entry((t.model, t.session))
+                .or_default()
+                .0
+                .push((t.pos as u32, t.pred as u32));
+        }
+        for d in &sim.completions {
+            sim_streams.entry((d.model, d.session)).or_default().1 = Some(d.nll_bits);
+        }
+        assert_streams_match(&net_streams, &sim_streams);
+    }
+}
+
+#[test]
+fn mixed_multi_model_loopback_matches_multi_shard_simulator() {
+    // Two models on different engines, interleaved sessions — the
+    // acceptance-criterion run.
+    let lm_a = tiny_lm(4321, 16);
+    let lm_b = tiny_lm(8765, 24);
+    let stats_a = calib(&lm_a);
+    let workers = 2usize;
+    let max_lanes = 4usize;
+
+    let mut registry = ModelRegistry::new();
+    registry.register(ModelSpec {
+        name: "int".into(),
+        lm: &lm_a,
+        engine: StackEngine::Integer,
+        stats: Some(&stats_a),
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    registry.register(ModelSpec {
+        name: "float".into(),
+        lm: &lm_b,
+        engine: StackEngine::Float,
+        stats: None,
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    let mut trace = RequestTrace::generate(24, 900.0, 8, VOCAB, 73);
+    trace.assign_models(|id| (id % 2) as u32);
+
+    let config = ServerConfig {
+        workers,
+        batch: BatchPolicy { max_batch: max_lanes, max_wait: Duration::from_millis(1) },
+        ..ServerConfig::default()
+    };
+    let server = Server::with_registry(registry, config);
+    let (net_streams, served) = drive_loopback(&server, &trace);
+    assert_eq!(served, 24);
+
+    let engines = vec![
+        lm_a.engine(StackEngine::Integer, Some(&stats_a), QuantizeOptions::default()),
+        lm_b.engine(StackEngine::Float, None, QuantizeOptions::default()),
+    ];
+    let residency: Vec<Vec<usize>> = vec![(0..workers).collect(), (0..workers).collect()];
+    let sim_streams = simulated_streams(&engines, &residency, &trace, workers, max_lanes);
+    assert_streams_match(&net_streams, &sim_streams);
+    // Both models actually ran.
+    assert!(net_streams.keys().any(|&(m, _)| m == 0));
+    assert!(net_streams.keys().any(|&(m, _)| m == 1));
+}
+
+#[test]
+fn over_budget_requests_get_busy_and_nothing_is_dropped() {
+    let lm = tiny_lm(4321, 16);
+    let stats = calib(&lm);
+    let server = Server::new(
+        &lm,
+        Some(&stats),
+        ServerConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            ..ServerConfig::default()
+        },
+    );
+    let net = NetServer::bind(
+        &server,
+        NetConfig { max_inflight_per_model: Some(1), ..NetConfig::default() },
+    )
+    .expect("bind");
+    let addr = net.local_addr().expect("addr");
+    let stop = NetShutdown::new();
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| net.serve(&stop).expect("serve"));
+        let mut client = NetClient::connect(addr).expect("connect");
+        // A is long enough to still be in flight when B (already in the
+        // socket buffer) is read: B must bounce off the budget of 1.
+        let long: Vec<usize> = (0..2000).map(|i| i % VOCAB).collect();
+        client.send(0, 1, &long).expect("send A");
+        client.send(0, 2, &[1, 2, 3]).expect("send B");
+        let mut a_tokens = 0usize;
+        let mut busy: Vec<u64> = Vec::new();
+        let mut a_done = false;
+        while !a_done {
+            match client.read_frame().expect("read").expect("stream open") {
+                Frame::Token { session: 1, .. } => a_tokens += 1,
+                Frame::Done { session: 1, tokens, .. } => {
+                    assert_eq!(tokens as usize, long.len());
+                    a_done = true;
+                }
+                Frame::Busy { session, .. } => busy.push(session),
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(a_tokens, long.len(), "A lost tokens");
+        assert_eq!(busy, vec![2], "B must be refused with Busy, exactly once");
+        // Capacity is free again: the refused session retries and is
+        // served in full — refusal dropped nothing permanently.
+        client.send(0, 2, &[1, 2, 3]).expect("retry B");
+        client.finish().expect("half-close");
+        let frames = client.read_to_bye().expect("read B stream");
+        let b_tokens =
+            frames.iter().filter(|f| matches!(f, Frame::Token { session: 2, .. })).count();
+        assert_eq!(b_tokens, 3, "retried B must stream all tokens");
+        assert!(
+            frames
+                .iter()
+                .any(|f| matches!(f, Frame::Done { session: 2, tokens: 3, .. })),
+            "retried B must complete"
+        );
+        stop.shutdown();
+        let report = handle.join().expect("serve thread");
+        assert_eq!(report.busy_rejections, 1);
+        assert_eq!(report.serving.requests, 2, "A and retried B completed");
+        assert_eq!(report.serving.tokens, long.len() + 3);
+    });
+}
+
+#[test]
+fn graceful_drain_finishes_inflight_and_refuses_late_connects() {
+    let lm = tiny_lm(4321, 16);
+    let stats = calib(&lm);
+    let server = Server::new(
+        &lm,
+        Some(&stats),
+        ServerConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            ..ServerConfig::default()
+        },
+    );
+    let net = NetServer::bind(&server, NetConfig::default()).expect("bind");
+    let addr = net.local_addr().expect("addr");
+    let stop = NetShutdown::new();
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| net.serve(&stop).expect("serve"));
+        let mut client = NetClient::connect(addr).expect("connect");
+        // Long enough that drain is still waiting when the late
+        // connect arrives.
+        let long: Vec<usize> = (0..50_000).map(|i| (i * 7) % VOCAB).collect();
+        client.send(0, 9, &long).expect("send");
+        client.finish().expect("half-close");
+        // Wait for the stream to start, then raise shutdown mid-flight.
+        let first = client.read_frame().expect("read").expect("open");
+        assert!(matches!(first, Frame::Token { session: 9, pos: 0, .. }));
+        stop.shutdown();
+        std::thread::sleep(Duration::from_millis(20));
+
+        // Late connect during drain: answered with an immediate Bye
+        // (or torn down), never served.
+        let mut late = NetClient::connect(addr).expect("late connect");
+        let _ = late.send(0, 10, &[1, 2, 3]);
+        match late.read_frame() {
+            Ok(Some(Frame::Bye)) | Ok(None) | Err(_) => {}
+            Ok(Some(other)) => panic!("late connect was served: {other:?}"),
+        }
+
+        // The in-flight stream still completes in full.
+        let frames = client.read_to_bye().expect("drain stream");
+        let tokens =
+            frames.iter().filter(|f| matches!(f, Frame::Token { session: 9, .. })).count();
+        assert_eq!(tokens + 1, long.len(), "in-flight stream lost tokens in drain");
+        assert!(
+            frames.iter().any(
+                |f| matches!(f, Frame::Done { session: 9, tokens, .. } if *tokens as usize == long.len())
+            ),
+            "in-flight stream must complete during drain"
+        );
+        let report = handle.join().expect("serve thread");
+        assert_eq!(report.serving.requests, 1);
+        assert_eq!(report.refused_connects, 1, "late connect must be counted");
+        assert_eq!(report.busy_rejections, 0);
+    });
+}
