@@ -458,6 +458,128 @@ fn main() {
             Err(e) => eprintln!("could not write BENCH_multimodel.json: {e}"),
         }
 
+        // Hibernation sweep: the same deterministic replay under a
+        // tightening per-worker byte budget. `enforce_state_budget`
+        // spills the coldest idle sessions into the cold tier between
+        // token positions and admission restores them transparently, so
+        // tightening the budget trades spill/restore traffic (and
+        // replay throughput) for a bounded resident-state peak — while
+        // the token stream stays bit-identical to the unbounded run.
+        // Swept for both spill codecs (exact f32 image vs per-vector
+        // int8). Emits BENCH_hibernate.json.
+        println!("\n== hibernation sweep (byte-budgeted cold tier, Integer) ==");
+        println!(
+            "{:<10} {:<6} {:>12} {:>8} {:>9} {:>11} {:>11}",
+            "budget", "codec", "tokens/sec", "spills", "restores", "peak bytes", "cold bytes"
+        );
+        let sb = engine.state_bytes();
+        let mut hib_trace = if quick {
+            RequestTrace::generate(24, 500.0, 12, VOCAB, 17)
+        } else {
+            RequestTrace::generate(96, 900.0, 32, VOCAB, 17)
+        };
+        // Fold the unique request ids onto a smaller session id space
+        // so sessions span several chunks — a returning session is what
+        // turns a spill into a restore (not just a parked state).
+        let streams: u64 = if quick { 8 } else { 24 };
+        for r in &mut hib_trace.requests {
+            r.id %= streams;
+        }
+        let hib_lanes = 4usize;
+        let budgets: &[(&str, Option<usize>)] = &[
+            ("unbounded", None),
+            ("16x", Some(16 * sb)),
+            ("8x", Some(8 * sb)),
+            ("4x", Some(4 * sb)),
+        ];
+        let mut baseline: Option<Vec<String>> = None;
+        let mut entries: Vec<String> = Vec::new();
+        for &(label, budget) in budgets {
+            for quantized in [false, true] {
+                if budget.is_none() && quantized {
+                    continue; // nothing spills: the codec is irrelevant
+                }
+                let cfg = ShardConfig {
+                    workers: 2,
+                    max_lanes: hib_lanes,
+                    state_budget: budget,
+                    spill_quantized: quantized,
+                    ..ShardConfig::default()
+                };
+                let t0 = std::time::Instant::now();
+                let (scheds, rep) = simulate_shard_trace(&engine, &hib_trace, &cfg);
+                let secs = t0.elapsed().as_secs_f64();
+                assert_eq!(rep.completions.len(), hib_trace.requests.len());
+                // The integer engine's token stream is bit-identical
+                // under every budget and either codec: spills only park
+                // idle sessions and restores precede re-admission.
+                let tuples: Vec<String> = rep
+                    .completions
+                    .iter()
+                    .map(|d| {
+                        format!(
+                            "{}:{}:{}:{}",
+                            d.model,
+                            d.session,
+                            d.tokens,
+                            d.nll_bits.to_bits()
+                        )
+                    })
+                    .collect();
+                match &baseline {
+                    None => baseline = Some(tuples),
+                    Some(base) => {
+                        assert_eq!(base, &tuples, "byte budget changed the token stream")
+                    }
+                }
+                let tps = rep.lane_steps() as f64 / secs;
+                let peak = rep
+                    .worker_stats
+                    .iter()
+                    .map(|st| st.peak_resident_state_bytes)
+                    .max()
+                    .unwrap_or(0);
+                let cold: usize = scheds.iter().map(|s| s.hibernated_state_bytes()).sum();
+                let codec = if quantized { "int8" } else { "exact" };
+                println!(
+                    "{:<10} {:<6} {:>12.0} {:>8} {:>9} {:>11} {:>11}",
+                    label,
+                    codec,
+                    tps,
+                    rep.total_spilled(),
+                    rep.total_restored(),
+                    peak,
+                    cold
+                );
+                entries.push(format!(
+                    "    {{\"budget\": \"{}\", \"budget_bytes\": {}, \"codec\": \"{}\", \
+                     \"tokens_per_sec\": {:.1}, \"spills\": {}, \"restores\": {}, \
+                     \"peak_resident_bytes\": {}, \"final_cold_bytes\": {}, \"ticks\": {}}}",
+                    label,
+                    budget.map(|b| b as i64).unwrap_or(-1),
+                    codec,
+                    tps,
+                    rep.total_spilled(),
+                    rep.total_restored(),
+                    peak,
+                    cold,
+                    rep.ticks
+                ));
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"hibernate_sweep\",\n  \"config\": {{\"hidden\": {hidden}, \
+             \"depth\": 1, \"workers\": 2, \"max_lanes\": {hib_lanes}, \
+             \"state_bytes\": {sb}, \"requests\": {}, \"streams\": {streams}}},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            hib_trace.requests.len(),
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_hibernate.json", &json) {
+            Ok(()) => println!("wrote BENCH_hibernate.json"),
+            Err(e) => eprintln!("could not write BENCH_hibernate.json: {e}"),
+        }
+
         // Network serving sweep: the same pool behind the loopback TCP
         // front, measured on the wall clock — first-token and per-token
         // latency percentiles as a streaming client would see them.

@@ -1,0 +1,480 @@
+//! Session-state hibernation: the compact cold tier idle streams spill
+//! into when a worker's resident-state **byte** budget is exceeded.
+//!
+//! LSTM serving state is tiny and self-contained — h/c per layer plus
+//! the last hidden/logits scratch, no KV-cache growth — so a hibernated
+//! stream is just a few hundred bytes. The scheduler spills
+//! coldest-first (by the session table's logical activity clock) and
+//! restores transparently before lane admission, so the lane machinery
+//! never sees a hibernated session.
+//!
+//! Two codecs ([`SpillCodec`]):
+//!
+//! * **Exact** (default) — a little-endian byte image of the state.
+//!   `f32::to_le_bytes`/`from_le_bytes` round-trip every bit pattern,
+//!   so spill → restore is bit-exact by construction and a
+//!   spilled-and-restored stream produces the identical token stream
+//!   to one that never spilled (pinned across all three engines by
+//!   `rust/tests/hibernation.rs`).
+//! * **Int8** (`--spill-quantized`) — every f32 vector stored as int8
+//!   with one per-vector symmetric scale, the paper's affine
+//!   activation scheme applied to hibernated h/c. Roughly 4× smaller
+//!   and *lossy* for float vectors; the loss is measured honestly
+//!   (per-vector error bounds and a bits/char delta in
+//!   `rust/tests/numerics_edge.rs`), never silent. Integer-engine
+//!   layer states are already ≤16-bit and stay exact, so the integer
+//!   engine remains bit-exact even under this codec.
+
+use std::collections::HashMap;
+
+use crate::lstm::{FloatState, IntegerState, LayerState, StackEngine};
+use crate::model::lm::{CharLmEngine, LmState, VOCAB};
+use super::registry::ModelId;
+use super::session::{Session, SessionKey};
+
+/// How hibernated state is encoded in the cold tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillCodec {
+    /// Exact little-endian byte image — restore is bit-exact.
+    Exact,
+    /// Per-vector symmetric int8 for every f32 vector (lossy for the
+    /// float/hybrid engines, exact for integer layer states).
+    Int8,
+}
+
+impl SpillCodec {
+    /// Human-readable codec name for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpillCodec::Exact => "exact",
+            SpillCodec::Int8 => "int8",
+        }
+    }
+}
+
+/// Per-vector symmetric int8 quantization: `scale = max|v| / 127`,
+/// `q = round(v / scale)` clamped to ±127 (an all-zero vector gets
+/// scale 0 and quantizes exactly). The worst-case per-element
+/// reconstruction error is `scale / 2` plus f32 rounding — the bound
+/// `numerics_edge.rs` pins on adversarial h/c vectors.
+pub fn quantize_vec_i8(v: &[f32]) -> (f32, Vec<i8>) {
+    let max_abs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        return (0.0, vec![0; v.len()]);
+    }
+    let scale = max_abs / 127.0;
+    let q = v
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (scale, q)
+}
+
+/// Inverse of [`quantize_vec_i8`]: `v ≈ q * scale`.
+pub fn dequantize_vec_i8(scale: f32, q: &[i8]) -> Vec<f32> {
+    q.iter().map(|&x| f32::from(x) * scale).collect()
+}
+
+fn push_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(bytes: &[u8], off: &mut usize, n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(f32::from_le_bytes([
+            bytes[*off],
+            bytes[*off + 1],
+            bytes[*off + 2],
+            bytes[*off + 3],
+        ]));
+        *off += 4;
+    }
+    v
+}
+
+fn push_quantized(out: &mut Vec<u8>, v: &[f32]) {
+    let (scale, q) = quantize_vec_i8(v);
+    out.extend_from_slice(&scale.to_le_bytes());
+    for x in q {
+        out.push(x as u8);
+    }
+}
+
+fn read_quantized(bytes: &[u8], off: &mut usize, n: usize) -> Vec<f32> {
+    let scale = f32::from_le_bytes([
+        bytes[*off],
+        bytes[*off + 1],
+        bytes[*off + 2],
+        bytes[*off + 3],
+    ]);
+    *off += 4;
+    let q: Vec<i8> = bytes[*off..*off + n].iter().map(|&b| b as i8).collect();
+    *off += n;
+    dequantize_vec_i8(scale, &q)
+}
+
+fn push_integer_layer(out: &mut Vec<u8>, st: &IntegerState) {
+    for v in &st.c {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &st.h {
+        out.push(*v as u8);
+    }
+}
+
+fn read_integer_layer(bytes: &[u8], off: &mut usize, n_cell: usize, n_output: usize) -> IntegerState {
+    let mut c = Vec::with_capacity(n_cell);
+    for _ in 0..n_cell {
+        c.push(i16::from_le_bytes([bytes[*off], bytes[*off + 1]]));
+        *off += 2;
+    }
+    let mut h = Vec::with_capacity(n_output);
+    for _ in 0..n_output {
+        h.push(bytes[*off] as i8);
+        *off += 1;
+    }
+    IntegerState { c, h }
+}
+
+/// Serialize a session's full [`LmState`] under `codec`. The exact
+/// codec delegates the recurrent layers to
+/// [`crate::lstm::LstmStack::export_lane`] and appends the
+/// hidden/logits scratch as raw f32 bytes; the int8 codec stores every
+/// f32 vector as `[scale f32][int8 …]` and integer layer states
+/// verbatim.
+pub fn encode_state(engine: &CharLmEngine, state: &LmState, codec: SpillCodec) -> Vec<u8> {
+    let mut out = Vec::new();
+    match codec {
+        SpillCodec::Exact => {
+            engine.stack.export_lane(&state.layers, &mut out);
+            push_f32s(&mut out, &state.h);
+            push_f32s(&mut out, &state.logits);
+        }
+        SpillCodec::Int8 => {
+            for st in &state.layers {
+                match st {
+                    LayerState::Float(st) => {
+                        push_quantized(&mut out, &st.c);
+                        push_quantized(&mut out, &st.h);
+                    }
+                    LayerState::Integer(st) => push_integer_layer(&mut out, st),
+                }
+            }
+            push_quantized(&mut out, &state.h);
+            push_quantized(&mut out, &state.logits);
+        }
+    }
+    out
+}
+
+/// Rebuild an [`LmState`] from bytes produced by [`encode_state`] with
+/// the same engine and codec. Exact-codec bytes reproduce the original
+/// state bit for bit.
+pub fn decode_state(engine: &CharLmEngine, bytes: &[u8], codec: SpillCodec) -> LmState {
+    let n_output = engine.stack.n_output();
+    match codec {
+        SpillCodec::Exact => {
+            let sb = engine.stack.state_bytes();
+            let layers = engine.stack.import_lane(&bytes[..sb]);
+            let mut off = sb;
+            let h = read_f32s(bytes, &mut off, n_output);
+            let logits = read_f32s(bytes, &mut off, VOCAB);
+            assert_eq!(off, bytes.len(), "trailing hibernated bytes");
+            LmState { layers, h, logits }
+        }
+        SpillCodec::Int8 => {
+            let integer = engine.stack.engine() == StackEngine::Integer;
+            let mut off = 0usize;
+            let mut layers = Vec::with_capacity(engine.stack.depth());
+            for spec in engine.stack.specs() {
+                if integer {
+                    layers.push(LayerState::Integer(read_integer_layer(
+                        bytes,
+                        &mut off,
+                        spec.n_cell,
+                        spec.n_output,
+                    )));
+                } else {
+                    let c = read_quantized(bytes, &mut off, spec.n_cell);
+                    let h = read_quantized(bytes, &mut off, spec.n_output);
+                    layers.push(LayerState::Float(FloatState { c, h }));
+                }
+            }
+            let h = read_quantized(bytes, &mut off, n_output);
+            let logits = read_quantized(bytes, &mut off, VOCAB);
+            assert_eq!(off, bytes.len(), "trailing hibernated bytes");
+            LmState { layers, h, logits }
+        }
+    }
+}
+
+/// One hibernated stream: its encoded state plus the scalar session
+/// metadata, which always survives exactly (only the state vectors are
+/// subject to the codec).
+struct HibernatedSession {
+    bytes: Vec<u8>,
+    tokens_seen: usize,
+    nll_bits: f64,
+    last_active: u64,
+}
+
+/// One worker's cold tier: hibernated sessions keyed like the hot
+/// session table, with byte accounting and spill/restore counters.
+pub struct ColdTier {
+    store: HashMap<SessionKey, HibernatedSession>,
+    codec: SpillCodec,
+    bytes: usize,
+    spills: u64,
+    restores: u64,
+}
+
+impl ColdTier {
+    /// An empty cold tier using `codec` for every spill.
+    pub fn new(codec: SpillCodec) -> Self {
+        ColdTier {
+            store: HashMap::new(),
+            codec,
+            bytes: 0,
+            spills: 0,
+            restores: 0,
+        }
+    }
+
+    /// The codec this tier encodes with.
+    pub fn codec(&self) -> SpillCodec {
+        self.codec
+    }
+
+    /// Hibernate one session: encode its state and take ownership. The
+    /// caller must have removed it from the hot table (via
+    /// `SessionManager::take`) first.
+    pub fn spill(&mut self, engine: &CharLmEngine, session: Session) {
+        let key = session.key();
+        debug_assert!(!self.store.contains_key(&key), "double spill of {key:?}");
+        let bytes = encode_state(engine, &session.state, self.codec);
+        self.bytes += bytes.len();
+        self.spills += 1;
+        self.store.insert(
+            key,
+            HibernatedSession {
+                bytes,
+                tokens_seen: session.tokens_seen,
+                nll_bits: session.nll_bits,
+                last_active: session.last_active,
+            },
+        );
+    }
+
+    /// Wake one session: decode its state and remove it from the tier.
+    /// Returns `None` when the key is not hibernated (the common case —
+    /// most arriving chunks belong to hot sessions).
+    pub fn restore(&mut self, key: SessionKey, engine: &CharLmEngine) -> Option<Session> {
+        let h = self.store.remove(&key)?;
+        self.bytes -= h.bytes.len();
+        self.restores += 1;
+        Some(Session {
+            model: key.0,
+            id: key.1,
+            state: decode_state(engine, &h.bytes, self.codec),
+            tokens_seen: h.tokens_seen,
+            nll_bits: h.nll_bits,
+            last_active: h.last_active,
+        })
+    }
+
+    /// True when `key` is hibernated here.
+    pub fn contains(&self, key: SessionKey) -> bool {
+        self.store.contains_key(&key)
+    }
+
+    /// Hibernated session count.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// True when nothing is hibernated.
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Total encoded bytes held in the tier.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Hibernated session count for one model.
+    pub fn len_model(&self, model: ModelId) -> usize {
+        self.store.keys().filter(|(m, _)| *m == model).count()
+    }
+
+    /// Encoded bytes held for one model.
+    pub fn bytes_model(&self, model: ModelId) -> usize {
+        self.store
+            .iter()
+            .filter(|((m, _), _)| *m == model)
+            .map(|(_, h)| h.bytes.len())
+            .sum()
+    }
+
+    /// All hibernated keys, sorted — deterministic drain order for
+    /// `restore_all`-style sweeps.
+    pub fn keys(&self) -> Vec<SessionKey> {
+        let mut keys: Vec<SessionKey> = self.store.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Spill events since construction.
+    pub fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    /// Restore events since construction.
+    pub fn restores(&self) -> u64 {
+        self.restores
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::{LstmSpec, QuantizeOptions, StackWeights};
+    use crate::model::lm::CharLm;
+    use crate::tensor::Matrix;
+    use crate::util::Pcg32;
+
+    fn tiny_lm(depth: usize) -> CharLm {
+        let mut rng = Pcg32::seeded(71);
+        let spec = LstmSpec::plain(VOCAB, 12);
+        let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, 12);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm {
+            stack_weights,
+            out_w,
+            out_b: vec![0.0; VOCAB],
+            hidden: 12,
+            depth,
+        }
+    }
+
+    fn calib(lm: &CharLm) -> Vec<crate::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(72);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+
+    fn assert_states_bit_eq(a: &LmState, b: &LmState) {
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            match (la, lb) {
+                (LayerState::Float(x), LayerState::Float(y)) => {
+                    for (u, v) in x.c.iter().zip(&y.c) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                    for (u, v) in x.h.iter().zip(&y.h) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                }
+                (LayerState::Integer(x), LayerState::Integer(y)) => {
+                    assert_eq!(x.c, y.c);
+                    assert_eq!(x.h, y.h);
+                }
+                _ => panic!("layer variant mismatch"),
+            }
+        }
+        for (u, v) in a.h.iter().zip(&b.h) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        for (u, v) in a.logits.iter().zip(&b.logits) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn exact_codec_roundtrips_bit_exact_across_engines() {
+        let lm = tiny_lm(2);
+        let stats = calib(&lm);
+        for kind in StackEngine::ALL {
+            let engine = lm.engine(kind, Some(&stats), QuantizeOptions::default());
+            let mut state = engine.new_state();
+            for t in [3usize, 40, 7, 90, 1] {
+                engine.step_token(t, &mut state);
+            }
+            let bytes = encode_state(&engine, &state, SpillCodec::Exact);
+            assert_eq!(bytes.len(), engine.state_bytes(), "{}", kind.label());
+            let restored = decode_state(&engine, &bytes, SpillCodec::Exact);
+            assert_states_bit_eq(&state, &restored);
+        }
+    }
+
+    #[test]
+    fn int8_codec_is_exact_for_integer_engine_layers() {
+        let lm = tiny_lm(2);
+        let stats = calib(&lm);
+        let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+        let mut state = engine.new_state();
+        for t in [5usize, 61, 13, 88] {
+            engine.step_token(t, &mut state);
+        }
+        let bytes = encode_state(&engine, &state, SpillCodec::Int8);
+        let restored = decode_state(&engine, &bytes, SpillCodec::Int8);
+        // The recurrent layers are already integer and survive exactly
+        // — future steps are bit-identical even under the lossy codec.
+        for (la, lb) in state.layers.iter().zip(&restored.layers) {
+            match (la, lb) {
+                (LayerState::Integer(x), LayerState::Integer(y)) => {
+                    assert_eq!(x.c, y.c);
+                    assert_eq!(x.h, y.h);
+                }
+                _ => panic!("expected integer layers"),
+            }
+        }
+        // And the int8 image is smaller than the exact one.
+        assert!(bytes.len() < encode_state(&engine, &state, SpillCodec::Exact).len());
+    }
+
+    #[test]
+    fn cold_tier_accounts_bytes_and_counters() {
+        let lm = tiny_lm(1);
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut tier = ColdTier::new(SpillCodec::Exact);
+        assert!(tier.is_empty());
+        for id in 0..3u64 {
+            let mut s = Session::new(0, id, &engine);
+            engine.step_token(id as usize + 1, &mut s.state);
+            s.tokens_seen = 1;
+            tier.spill(&engine, s);
+        }
+        assert_eq!(tier.len(), 3);
+        assert_eq!(tier.len_model(0), 3);
+        assert_eq!(tier.bytes(), 3 * engine.state_bytes());
+        assert_eq!(tier.bytes_model(0), tier.bytes());
+        assert_eq!(tier.spills(), 3);
+        assert_eq!(tier.keys(), vec![(0, 0), (0, 1), (0, 2)]);
+        assert!(tier.contains((0, 1)));
+        let s = tier.restore((0, 1), &engine).expect("hibernated");
+        assert_eq!(s.tokens_seen, 1);
+        assert_eq!(tier.restores(), 1);
+        assert_eq!(tier.len(), 2);
+        assert_eq!(tier.bytes(), 2 * engine.state_bytes());
+        assert!(tier.restore((0, 1), &engine).is_none());
+        assert_eq!(tier.restores(), 1, "missed restore does not count");
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_is_bounded() {
+        let mut rng = Pcg32::seeded(9);
+        let mut v = vec![0f32; 64];
+        rng.fill_uniform_f32(&mut v, -0.9, 0.9);
+        let (scale, q) = quantize_vec_i8(&v);
+        let back = dequantize_vec_i8(scale, &q);
+        for (a, b) in v.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.5 * scale + 1e-6, "{a} vs {b} (scale {scale})");
+        }
+    }
+}

@@ -35,6 +35,14 @@ pub struct WorkerLoad {
     pub evictions: usize,
     /// Sessions the idle-age policy evicted on this worker.
     pub idle_evictions: usize,
+    /// Sessions hibernated into this worker's cold tier by the
+    /// resident-state byte budget (lossless, unlike an eviction).
+    pub spills: usize,
+    /// Sessions restored out of this worker's cold tier.
+    pub restores: usize,
+    /// Largest resident-state byte total this worker observed (sampled
+    /// after budget enforcement, so it never exceeds the byte budget).
+    pub peak_resident_state_bytes: usize,
 }
 
 impl WorkerLoad {
@@ -77,12 +85,20 @@ pub struct ModelLoad {
     /// (`weight_bytes * resident_workers`) — the dominant memory cost
     /// the registry's residency policy trades against occupancy.
     pub resident_weight_bytes: usize,
-    /// Sessions of this model resident at the end of the run, across
-    /// all workers.
+    /// Sessions of this model resident (hot) at the end of the run,
+    /// across all workers. Hibernated sessions are counted separately
+    /// in [`Self::hibernated_sessions`].
     pub resident_sessions: usize,
     /// Bytes of resident per-stream state at the end of the run
-    /// (`resident_sessions` × per-stream state size).
+    /// (`resident_sessions` × per-stream state size) — a live number:
+    /// hibernated sessions' bytes leave this total.
     pub resident_state_bytes: usize,
+    /// Sessions of this model hibernated in cold tiers at the end of
+    /// the run, across all workers.
+    pub hibernated_sessions: usize,
+    /// Serialized bytes the hibernated sessions occupy (exact-codec
+    /// images equal the hot state size; int8 images are ~4x smaller).
+    pub hibernated_state_bytes: usize,
     /// Batched step invocations on this model's waves.
     pub batched_steps: usize,
     /// Lane-steps (tokens) executed for this model.
@@ -101,6 +117,10 @@ pub struct ModelLoad {
     pub evictions: usize,
     /// Sessions of this model evicted by the idle-age policy.
     pub idle_evictions: usize,
+    /// Sessions of this model hibernated by the byte budget.
+    pub spills: usize,
+    /// Sessions of this model restored from cold tiers.
+    pub restores: usize,
 }
 
 impl ModelLoad {
@@ -192,6 +212,21 @@ pub struct ServingReport {
     pub evictions: usize,
     /// Sessions evicted under the idle-age policy across all workers.
     pub idle_evictions: usize,
+    /// Sessions hibernated under the resident-state byte budget across
+    /// all workers (lossless — the stream resumes from its restored
+    /// state, unlike an eviction).
+    pub spills: usize,
+    /// Sessions restored from cold tiers across all workers.
+    pub restores: usize,
+    /// Bytes of hot per-stream state resident at the end of the run
+    /// across all workers (hibernated sessions excluded).
+    pub resident_state_bytes: usize,
+    /// Serialized bytes held by the cold tiers at the end of the run.
+    pub hibernated_state_bytes: usize,
+    /// Largest post-enforcement resident-state byte total any single
+    /// worker observed — the quantity the `--session-budget` byte
+    /// budget bounds.
+    pub peak_resident_state_bytes: usize,
     /// Packed weight bytes resident across the pool (every model ×
     /// its resident worker count).
     pub resident_weight_bytes: usize,
@@ -276,6 +311,20 @@ impl ServingReport {
             self.per_token_latency.percentile(99.0),
             self.latency.percentile(95.0),
         );
+        // Third line: the state-memory closed loop — only printed when
+        // hibernation did anything (or holds anything), so single-model
+        // runs without a byte budget keep their two-line report.
+        if self.spills > 0 || self.restores > 0 || self.hibernated_state_bytes > 0 {
+            println!(
+                "    state-mem: resident={}B hibernated={}B peak={}B \
+                 spills={} restores={}",
+                self.resident_state_bytes,
+                self.hibernated_state_bytes,
+                self.peak_resident_state_bytes,
+                self.spills,
+                self.restores,
+            );
+        }
     }
 
     /// Print one line per worker: occupancy, turnover, and steals —
@@ -284,7 +333,8 @@ impl ServingReport {
         for w in &self.per_worker {
             println!(
                 "    worker {:<2} steps={:<6} lanes={:<7} occ={:.2} pad={:.2} peak={} \
-                 adm={} ret={} stole={} evict={} evictI={}",
+                 adm={} ret={} stole={} evict={} evictI={} spills={} restores={} \
+                 peakStateB={}",
                 w.worker,
                 w.batched_steps,
                 w.lane_steps,
@@ -296,6 +346,9 @@ impl ServingReport {
                 w.stolen_sessions,
                 w.evictions,
                 w.idle_evictions,
+                w.spills,
+                w.restores,
+                w.peak_resident_state_bytes,
             );
         }
     }
@@ -308,7 +361,8 @@ impl ServingReport {
             println!(
                 "    model {:<2} {:<12} {:<8} workers={:<2} weights={:<9}B \
                  ({}B resident) lanes={:<7} occ={:.2} peak={} steals={} evict={} \
-                 evictI={} sessions={} ({}B state)",
+                 evictI={} sessions={} ({}B state) cold={} ({}B, spills={} \
+                 restores={})",
                 m.model,
                 m.name,
                 m.engine,
@@ -323,6 +377,10 @@ impl ServingReport {
                 m.idle_evictions,
                 m.resident_sessions,
                 m.resident_state_bytes,
+                m.hibernated_sessions,
+                m.hibernated_state_bytes,
+                m.spills,
+                m.restores,
             );
         }
     }

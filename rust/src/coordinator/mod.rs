@@ -14,6 +14,10 @@
 //! * [`session`] — per-stream persistent LSTM state (keyed by
 //!   `(model, session)`) with lifecycle, budget-driven eviction, and
 //!   idle-age aging;
+//! * [`hibernate`] — the byte-budgeted cold tier: idle sessions' state
+//!   serialized exactly (or int8-quantized behind `--spill-quantized`),
+//!   spilled coldest-first when a worker's resident-state byte budget
+//!   is exceeded, restored transparently before lane admission;
 //! * [`router`] — hash-homed session placement over sharded ingest
 //!   queues (among each model's resident workers), with work stealing
 //!   of untouched sessions so occupancy survives skewed routing;
@@ -42,6 +46,7 @@
 #![deny(missing_docs)]
 
 pub mod batcher;
+pub mod hibernate;
 pub mod metrics;
 pub mod net;
 pub mod registry;
@@ -51,6 +56,10 @@ pub mod server;
 pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Poll};
+pub use hibernate::{
+    decode_state, dequantize_vec_i8, encode_state, quantize_vec_i8, ColdTier,
+    SpillCodec,
+};
 pub use metrics::{ModelLoad, ServingReport, WorkerLoad};
 pub use net::{
     read_frame, write_frame, Frame, NetClient, NetConfig, NetReport, NetServer,

@@ -490,6 +490,8 @@ impl<'s, 'a> NetServer<'s, 'a> {
             mode: server.config.mode,
             session_budget: server.config.session_budget,
             evict_idle_after: server.config.evict_idle_after,
+            state_budget: server.config.state_budget,
+            spill_quantized: server.config.spill_quantized,
             // The token tap is what the front streams to clients.
             record_tokens: true,
         };

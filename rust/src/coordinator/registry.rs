@@ -224,6 +224,16 @@ impl<'a> ModelRegistry<'a> {
             .collect()
     }
 
+    /// The largest per-stream state footprint across registered models
+    /// — the number to size the `--session-budget` byte budget with: a
+    /// worker's lane-holding and pending sessions never hibernate, so
+    /// the budget must cover at least
+    /// `max_lanes * max_state_bytes()` for the resident-state bound to
+    /// be enforceable on every worker.
+    pub fn max_state_bytes(&self) -> usize {
+        self.models.iter().map(|r| r.state_bytes).max().unwrap_or(0)
+    }
+
     /// Total packed weight bytes resident across the pool: each
     /// model's replica size times its resident worker count — the
     /// number the "weights are the dominant resident cost" trade-off
@@ -282,6 +292,10 @@ mod tests {
         assert_eq!(reg.engine_kind(0), StackEngine::Float);
         assert!(reg.weight_bytes(0) > 0);
         assert!(reg.state_bytes(0) > 0);
+        assert_eq!(
+            reg.max_state_bytes(),
+            reg.state_bytes(0).max(reg.state_bytes(1))
+        );
         // Hybrid packs int8 weights: smaller than the float replica of
         // a wider model.
         assert!(reg.weight_bytes(1) < reg.weight_bytes(0) * 4);

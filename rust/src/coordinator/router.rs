@@ -204,13 +204,22 @@ impl ShardRouter {
 
     /// Whether `model` is resident on `worker` under this router's
     /// residency map (always true without one).
+    ///
+    /// `model` must be registered in the residency map: asking about an
+    /// unregistered model is a wiring bug (the caller is holding a
+    /// [`ModelId`] the registry never issued), not a "not resident"
+    /// answer, so it panics rather than silently reporting `false`.
     pub fn resident_on(&self, model: ModelId, worker: usize) -> bool {
         match &self.residency {
             None => true,
-            Some(res) => res
-                .get(model as usize)
-                .map(|ws| ws.contains(&worker))
-                .unwrap_or(false),
+            Some(res) => {
+                debug_assert!(
+                    (model as usize) < res.len(),
+                    "model {model} out of range: residency map covers {} model(s)",
+                    res.len()
+                );
+                res[model as usize].contains(&worker)
+            }
         }
     }
 
@@ -654,6 +663,27 @@ mod tests {
         }
         assert_eq!(router.owner(1, id1), Some(2));
         assert_eq!(router.stolen_by_model(2), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn resident_on_panics_for_unregistered_model() {
+        // Two registered models: asking about model 5 is a wiring bug,
+        // not a "not resident" answer.
+        let router =
+            ShardRouter::with_residency(3, true, vec![vec![0], vec![1, 2]]);
+        let _ = router.resident_on(5, 0);
+    }
+
+    #[test]
+    fn resident_on_in_range_false_is_a_legitimate_answer() {
+        let router =
+            ShardRouter::with_residency(3, true, vec![vec![0], vec![1, 2]]);
+        assert!(router.resident_on(1, 2));
+        assert!(!router.resident_on(1, 0), "registered but not on worker 0");
+        // Without a residency map every model is everywhere.
+        let open = ShardRouter::new(2, true);
+        assert!(open.resident_on(9, 1));
     }
 
     #[test]

@@ -57,6 +57,7 @@ use std::time::Instant;
 
 use crate::model::lm::{nll_bits, CharLmEngine, LmBatchState};
 use crate::workload::synth::RequestTrace;
+use super::hibernate::{ColdTier, SpillCodec};
 use super::registry::{ModelId, ModelRegistry};
 use super::router::{ShardPoll, ShardRouter};
 use super::session::{SessionId, SessionKey, SessionManager};
@@ -193,6 +194,19 @@ pub struct SchedulerStats {
     /// (the idle-age policy; reported separately from the count-budget
     /// evictions).
     pub idle_evictions: usize,
+    /// Sessions hibernated into the cold tier by
+    /// [`ContinuousScheduler::enforce_state_budget`] (unlike an
+    /// eviction, a spill is lossless — the stream resumes from its
+    /// restored state).
+    pub spills: usize,
+    /// Sessions restored from the cold tier (transparently before lane
+    /// admission, or by [`ContinuousScheduler::restore_all`]).
+    pub restores: usize,
+    /// Largest resident-state byte total observed by
+    /// [`ContinuousScheduler::sample_resident_peak`] — sampled after
+    /// budget enforcement each tick, so `peak <= budget` is the byte
+    /// invariant `rust/tests/hibernation.rs` asserts.
+    pub peak_resident_state_bytes: usize,
 }
 
 impl SchedulerStats {
@@ -246,6 +260,10 @@ impl SchedulerStats {
         self.admission_wait_ms += other.admission_wait_ms;
         self.evictions += other.evictions;
         self.idle_evictions += other.idle_evictions;
+        self.spills += other.spills;
+        self.restores += other.restores;
+        self.peak_resident_state_bytes =
+            self.peak_resident_state_bytes.max(other.peak_resident_state_bytes);
     }
 }
 
@@ -271,6 +289,13 @@ pub struct ContinuousScheduler<'a> {
     /// replay don't pay for the argmax unless they ask).
     record_tokens: bool,
     token_events: Vec<TokenEvent>,
+    /// Hibernated sessions (see [`super::hibernate`]): spilled out of
+    /// the hot table by [`Self::enforce_state_budget`], restored
+    /// transparently before lane admission.
+    cold: ColdTier,
+    /// Per-model session state bytes (`engine.state_bytes()`; 0 for
+    /// non-resident models) — the prices the byte accounting uses.
+    state_bytes: Vec<usize>,
 }
 
 /// First maximum of a logits row — the deterministic greedy decode
@@ -324,6 +349,10 @@ impl<'a> ContinuousScheduler<'a> {
             })
             .collect();
         let n = engines.len();
+        let state_bytes = engines
+            .iter()
+            .map(|e| e.map_or(0, |e| e.state_bytes()))
+            .collect();
         ContinuousScheduler {
             engines,
             sessions: SessionManager::new(),
@@ -337,6 +366,8 @@ impl<'a> ContinuousScheduler<'a> {
             model_stats: vec![SchedulerStats::default(); n],
             record_tokens: false,
             token_events: Vec::new(),
+            cold: ColdTier::new(SpillCodec::Exact),
+            state_bytes,
         }
     }
 
@@ -351,14 +382,29 @@ impl<'a> ContinuousScheduler<'a> {
         std::mem::take(&mut self.token_events)
     }
 
+    /// Select the hibernation codec (exact by default; int8 behind
+    /// `--spill-quantized`). Must be called before anything spills —
+    /// the cold tier cannot re-encode what it already holds.
+    pub fn set_spill_codec(&mut self, codec: SpillCodec) {
+        assert!(self.cold.is_empty(), "cannot change codec with sessions hibernated");
+        self.cold = ColdTier::new(codec);
+    }
+
     /// Enqueue an item for admission (FIFO per stream). The item's
-    /// model must be resident on this worker.
+    /// model must be resident on this worker. An out-of-range
+    /// [`ModelId`] is a routing/registry wiring bug, not an absent
+    /// model, and panics rather than being folded into the
+    /// "non-resident" message (the silent-default contract of
+    /// [`Self::live_lanes_model`]).
     pub fn offer(&mut self, item: StreamItem) {
+        debug_assert!(
+            (item.model as usize) < self.engines.len(),
+            "model {} out of range: scheduler holds {} model slot(s)",
+            item.model,
+            self.engines.len()
+        );
         assert!(
-            self.engines
-                .get(item.model as usize)
-                .map(|e| e.is_some())
-                .unwrap_or(false),
+            self.engines[item.model as usize].is_some(),
             "model {} not resident on this worker",
             item.model
         );
@@ -497,6 +543,18 @@ impl<'a> ContinuousScheduler<'a> {
             self.model_stats[m].admissions += 1;
             self.model_stats[m].admission_wait_ms += wait_ms;
             let engine = self.engines[m].expect("resident engine");
+            // Restore-before-admit: if this stream hibernated, wake it
+            // into the hot table first, so the lane machinery below
+            // (and every test of it) never sees a hibernated session.
+            if self.cold.contains((item.model, item.session)) {
+                let s = self
+                    .cold
+                    .restore((item.model, item.session), engine)
+                    .expect("contained key restores");
+                self.sessions.insert(s);
+                self.stats.restores += 1;
+                self.model_stats[m].restores += 1;
+            }
             let wave = self.waves[m].as_mut().expect("resident wave");
             let lane = {
                 let state =
@@ -655,6 +713,93 @@ impl<'a> ContinuousScheduler<'a> {
             self.model_stats[m as usize].idle_evictions += 1;
         }
         evicted
+    }
+
+    /// Bytes of session state resident in the hot table right now
+    /// (per-model session counts × that model's
+    /// [`CharLmEngine::state_bytes`] — the live number the registry's
+    /// static accounting becomes under hibernation).
+    pub fn resident_state_bytes(&self) -> usize {
+        self.state_bytes
+            .iter()
+            .enumerate()
+            .map(|(m, &b)| self.sessions.len_model(m as ModelId) * b)
+            .sum()
+    }
+
+    /// Bytes held by the cold tier (encoded hibernated state).
+    pub fn hibernated_state_bytes(&self) -> usize {
+        self.cold.bytes()
+    }
+
+    /// The cold tier (hibernated-session counts, bytes, and codec).
+    pub fn cold(&self) -> &ColdTier {
+        &self.cold
+    }
+
+    /// Record the current resident-state byte total into
+    /// [`SchedulerStats::peak_resident_state_bytes`]. The serving loop
+    /// and the simulators call this *after* budget enforcement each
+    /// tick, so the recorded peak is the post-enforcement quantity the
+    /// byte-budget invariant is asserted on.
+    pub fn sample_resident_peak(&mut self) {
+        let bytes = self.resident_state_bytes();
+        self.stats.peak_resident_state_bytes =
+            self.stats.peak_resident_state_bytes.max(bytes);
+    }
+
+    /// Enforce a resident-state **byte** budget: hibernate the coldest
+    /// idle sessions (by the `last_active` clock, ties by key — see
+    /// [`SessionManager::coldest_first`]) until at most `budget` bytes
+    /// of state remain resident. Streams holding a lane or with
+    /// pending chunks are never spilled — but unlike eviction, streams
+    /// whose next chunk is queued at the ingest layer need no
+    /// protection here: a spill is lossless, and the chunk's admission
+    /// restores the state transparently. The protected set is
+    /// therefore bounded by `max_lanes`, so with `budget >= max_lanes ×
+    /// state_bytes` the post-enforcement resident total never exceeds
+    /// the budget. `budget = 0` spills everything idle — the
+    /// forced-spill churn mode of the hibernation suite.
+    ///
+    /// Returns the spilled keys — a deterministic pure function of the
+    /// session table and the live/pending sets.
+    pub fn enforce_state_budget(&mut self, budget: usize) -> Vec<SessionKey> {
+        let mut resident = self.resident_state_bytes();
+        if resident <= budget {
+            return Vec::new();
+        }
+        let protected = self.protected_keys(&[]);
+        let order = self.sessions.coldest_first(&protected);
+        let mut spilled = Vec::new();
+        for key in order {
+            if resident <= budget {
+                break;
+            }
+            let s = self.sessions.take(key.0, key.1).expect("listed session resident");
+            let engine = self.engines[key.0 as usize].expect("resident engine");
+            resident -= self.state_bytes[key.0 as usize];
+            self.cold.spill(engine, s);
+            self.stats.spills += 1;
+            self.model_stats[key.0 as usize].spills += 1;
+            spilled.push(key);
+        }
+        spilled
+    }
+
+    /// Wake every hibernated session back into the hot table
+    /// (deterministic key order). Test/drain convenience — steady-state
+    /// serving restores on demand via admission. Returns how many
+    /// sessions were restored.
+    pub fn restore_all(&mut self) -> usize {
+        let keys = self.cold.keys();
+        for key in &keys {
+            let engine = self.engines[key.0 as usize].expect("resident engine");
+            let s = self.cold.restore(*key, engine).expect("listed key restores");
+            self.sessions.insert(s);
+            self.stats.restores += 1;
+            self.model_stats[key.0 as usize].restores += 1;
+        }
+        keys.len()
     }
 
     /// Drain the completion buffer.
@@ -830,6 +975,19 @@ pub struct ShardConfig {
     /// (`None` = never); see
     /// [`ContinuousScheduler::enforce_idle_budget`].
     pub evict_idle_after: Option<u64>,
+    /// Per-worker resident-state **byte** budget (`None` = unbounded):
+    /// hibernate coldest-first into the cold tier when exceeded; see
+    /// [`ContinuousScheduler::enforce_state_budget`]. This is what the
+    /// CLI's `--session-budget` now sets.
+    pub state_budget: Option<usize>,
+    /// Encode hibernated state int8 with per-vector scales instead of
+    /// exact f32 bytes (`--spill-quantized`; lossy for float-engine
+    /// state — see [`super::hibernate::SpillCodec`]).
+    pub spill_quantized: bool,
+    /// Test/chaos mode: every `k` ticks, spill *everything* idle
+    /// (`enforce_state_budget(0)`) so churn suites can drive maximal
+    /// spill/restore traffic deterministically (`None` = off).
+    pub force_spill_every: Option<u64>,
     /// Virtual milliseconds one batched step consumes in simulation.
     pub tick_ms: f64,
     /// Record one [`TokenEvent`] per executed lane position (off by
@@ -847,6 +1005,9 @@ impl Default for ShardConfig {
             steal: true,
             session_budget: None,
             evict_idle_after: None,
+            state_budget: None,
+            spill_quantized: false,
+            force_spill_every: None,
             tick_ms: 1.0,
             record_tokens: false,
         }
@@ -881,6 +1042,10 @@ pub struct ShardSimReport {
     /// Streams evicted per worker under the idle-age policy, in
     /// eviction order.
     pub idle_evicted: Vec<Vec<SessionKey>>,
+    /// Streams hibernated per worker (byte budget or forced-spill), in
+    /// spill order. A stream can appear repeatedly — every spill event
+    /// is recorded, matching [`SchedulerStats::spills`].
+    pub spilled: Vec<Vec<SessionKey>>,
     /// Per-token events in execution order (worker index order within
     /// one tick); empty unless [`ShardConfig::record_tokens`] was set.
     pub token_events: Vec<TokenEvent>,
@@ -918,6 +1083,16 @@ impl ShardSimReport {
     /// Total sessions evicted under the idle-age policy.
     pub fn total_idle_evicted(&self) -> usize {
         self.idle_evicted.iter().map(|e| e.len()).sum()
+    }
+
+    /// Total spill events across the pool.
+    pub fn total_spilled(&self) -> usize {
+        self.spilled.iter().map(|e| e.len()).sum()
+    }
+
+    /// Total restore events across the pool.
+    pub fn total_restored(&self) -> usize {
+        self.worker_stats.iter().map(|s| s.restores).sum()
     }
 }
 
@@ -970,6 +1145,9 @@ pub fn simulate_multi_shard_trace<'a>(
             let mut sched =
                 ContinuousScheduler::multi(per_worker, cfg.max_lanes, cfg.mode);
             sched.set_record_tokens(cfg.record_tokens);
+            if cfg.spill_quantized {
+                sched.set_spill_codec(SpillCodec::Int8);
+            }
             sched
         })
         .collect();
@@ -977,6 +1155,7 @@ pub fn simulate_multi_shard_trace<'a>(
     let mut token_events = Vec::new();
     let mut evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
     let mut idle_evicted: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
+    let mut spilled: Vec<Vec<SessionKey>> = vec![Vec::new(); cfg.workers];
     let mut steal_storm_guard = 0usize;
     let mut next = 0usize;
     let mut now_ms = 0f64;
@@ -1031,6 +1210,19 @@ pub fn simulate_multi_shard_trace<'a>(
                         .extend(sched.enforce_idle_budget(max_idle, &queued));
                 }
             }
+            // Hibernation enforcement: the forced-spill churn mode
+            // first (spill everything idle every k-th tick), then the
+            // byte budget; the peak sample after both, so the recorded
+            // peak is the post-enforcement invariant quantity.
+            if let Some(every) = cfg.force_spill_every {
+                if every > 0 && (ticks as u64 + 1) % every == 0 {
+                    spilled[w].extend(sched.enforce_state_budget(0));
+                }
+            }
+            if let Some(budget) = cfg.state_budget {
+                spilled[w].extend(sched.enforce_state_budget(budget));
+            }
+            sched.sample_resident_peak();
             token_events.append(&mut sched.take_token_events());
             completions.append(&mut sched.take_completed());
         }
@@ -1067,6 +1259,7 @@ pub fn simulate_multi_shard_trace<'a>(
         ticks,
         evicted,
         idle_evicted,
+        spilled,
         token_events,
     };
     (scheds, report)
@@ -1469,6 +1662,125 @@ mod tests {
         assert_eq!(sched.enforce_idle_budget(3, &[]), vec![(0, 1)]);
         assert!(sched.sessions().get(1).is_none());
         assert_eq!(sched.stats().idle_evictions, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn offer_panics_on_out_of_range_model() {
+        // One model slot: offering model 7 is a routing wiring bug and
+        // must panic, never be silently mistaken for "non-resident".
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0)], 2, SchedulerMode::Continuous);
+        sched.offer(item_m(7, 1, vec![1; 2]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn offer_panics_on_non_resident_model() {
+        // In-range but not resident here: still a panic (the router
+        // must never deliver a non-resident model's chunk), with the
+        // descriptive message in both debug and release builds.
+        let lm = tiny_lm();
+        let e0 = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched =
+            ContinuousScheduler::multi(vec![Some(&e0), None], 2, SchedulerMode::Continuous);
+        sched.offer(item_m(1, 1, vec![1; 2]));
+    }
+
+    #[test]
+    fn state_budget_spills_coldest_and_restores_on_admission() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let per = engine.state_bytes();
+        let mut sched = ContinuousScheduler::new(&engine, 2);
+        // Retire three sessions at staggered activity times.
+        for (id, len) in [(1u64, 4usize), (2, 4), (3, 4)] {
+            sched.offer(item(id, vec![1; len]));
+            while sched.has_live_work() {
+                sched.admit_ready();
+                sched.step();
+                sched.take_completed();
+            }
+        }
+        assert_eq!(sched.resident_state_bytes(), 3 * per);
+        // Budget for one resident session: the two coldest spill.
+        let spilled = sched.enforce_state_budget(per);
+        assert_eq!(spilled, vec![(0, 1), (0, 2)], "coldest-first by last_active");
+        assert_eq!(sched.resident_state_bytes(), per);
+        assert_eq!(sched.hibernated_state_bytes(), 2 * per);
+        assert_eq!(sched.stats().spills, 2);
+        assert_eq!(sched.sessions().evicted(), 0, "a spill is not an eviction");
+        // Idempotent under the budget.
+        assert!(sched.enforce_state_budget(per).is_empty());
+        // The next chunk for a hibernated stream restores transparently
+        // on admission and the stream history is intact.
+        assert!(sched.sessions().get(1).is_none(), "session 1 must be hibernated");
+        sched.offer(item(1, vec![2; 3]));
+        sched.admit_ready();
+        assert_eq!(sched.stats().restores, 1);
+        let s = sched.sessions().get(1).expect("restored");
+        assert_eq!(s.tokens_seen, 4);
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+        }
+        assert_eq!(sched.sessions().get(1).unwrap().tokens_seen, 7);
+        // restore_all wakes the remaining one.
+        assert_eq!(sched.restore_all(), 1);
+        assert!(sched.cold().is_empty());
+        assert_eq!(sched.stats().restores, 2);
+        assert_eq!(sched.resident_state_bytes(), 3 * per);
+    }
+
+    #[test]
+    fn state_budget_never_spills_live_or_pending_streams() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut sched = ContinuousScheduler::new(&engine, 1);
+        sched.offer(item(1, vec![1; 6]));
+        sched.offer(item(2, vec![2; 6]));
+        sched.admit_ready();
+        sched.step();
+        // Session 1 holds the lane; 2 is pending. Budget 0 must spill
+        // neither (there is nothing idle).
+        assert!(sched.enforce_state_budget(0).is_empty());
+        assert_eq!(sched.lane_sessions(), vec![1]);
+        while sched.has_live_work() {
+            sched.admit_ready();
+            sched.step();
+            sched.take_completed();
+        }
+        assert_eq!(sched.sessions().get(1).unwrap().tokens_seen, 6);
+        assert_eq!(sched.sessions().get(2).unwrap().tokens_seen, 6);
+    }
+
+    #[test]
+    fn forced_spill_churn_in_simulation_is_bit_exact() {
+        // Chaos mode: every tick, everything idle spills; every
+        // follow-up chunk restores. Completions must match the
+        // no-hibernation run bit for bit (exact codec).
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut trace = RequestTrace::generate(18, 700.0, 8, VOCAB, 29);
+        // Fold onto 6 streams so sessions span several chunks.
+        for r in &mut trace.requests {
+            r.id %= 6;
+        }
+        let base = ShardConfig { workers: 2, max_lanes: 3, ..ShardConfig::default() };
+        let churn =
+            ShardConfig { force_spill_every: Some(1), ..base.clone() };
+        let (_s0, r0) = simulate_shard_trace(&engine, &trace, &base);
+        let (_s1, r1) = simulate_shard_trace(&engine, &trace, &churn);
+        assert!(r1.total_spilled() > 0, "churn mode must actually spill");
+        assert!(r1.total_restored() > 0, "follow-up chunks must restore");
+        assert_eq!(r0.completions.len(), r1.completions.len());
+        for (a, b) in r0.completions.iter().zip(&r1.completions) {
+            assert_eq!((a.model, a.session, a.tokens), (b.model, b.session, b.tokens));
+            assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
 use crate::model::lm::{CharLm, CharLmEngine};
 use crate::workload::synth::RequestTrace;
 use super::batcher::BatchPolicy;
+use super::hibernate::SpillCodec;
 use super::metrics::{ModelLoad, ServingReport, WorkerLoad};
 use super::registry::{ModelId, ModelRegistry, ModelSpec, Residency};
 use super::router::{ShardPoll, ShardRouter};
@@ -82,6 +83,20 @@ pub struct ServerConfig {
     /// `session_budget`, matching real memory pressure for stream
     /// state.
     pub evict_idle_after: Option<u64>,
+    /// Per-worker **byte** budget on resident session state (`None` =
+    /// unbounded) — the `--session-budget` CLI flag. When resident
+    /// state exceeds it, the coldest idle sessions hibernate into the
+    /// worker's cold tier (lossless, restored transparently before
+    /// their next lane admission); sessions holding or awaiting a lane
+    /// never spill, so the budget must cover
+    /// `max_lanes × state_bytes` of the largest resident model.
+    pub state_budget: Option<usize>,
+    /// Serialize hibernated state int8-quantized (per-vector scales,
+    /// ~4x smaller) instead of exact — the `--spill-quantized` flag.
+    /// Exact spills are bit-exact on restore; quantized spills trade a
+    /// measured accuracy delta (see `rust/tests/numerics_edge.rs`) for
+    /// the smaller cold tier.
+    pub spill_quantized: bool,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +110,8 @@ impl Default for ServerConfig {
             steal: true,
             session_budget: None,
             evict_idle_after: None,
+            state_budget: None,
+            spill_quantized: false,
         }
     }
 }
@@ -119,6 +136,8 @@ pub(crate) struct WorkerCfg {
     pub(crate) mode: SchedulerMode,
     pub(crate) session_budget: Option<usize>,
     pub(crate) evict_idle_after: Option<u64>,
+    pub(crate) state_budget: Option<usize>,
+    pub(crate) spill_quantized: bool,
     pub(crate) record_tokens: bool,
 }
 
@@ -129,8 +148,12 @@ pub(crate) struct WorkerSummary {
     pub(crate) items: usize,
     pub(crate) stats: SchedulerStats,
     pub(crate) model_stats: Vec<SchedulerStats>,
-    /// Resident sessions per model at worker exit.
+    /// Resident (hot) sessions per model at worker exit.
     pub(crate) model_sessions: Vec<usize>,
+    /// Hibernated sessions per model at worker exit.
+    pub(crate) model_hibernated: Vec<usize>,
+    /// Serialized cold-tier bytes per model at worker exit.
+    pub(crate) model_hibernated_bytes: Vec<usize>,
 }
 
 /// Wall-clock completion aggregation shared by trace replay and the
@@ -185,6 +208,9 @@ pub(crate) fn run_worker(
         engines.iter().map(|e| e.as_ref()).collect();
     let mut sched = ContinuousScheduler::multi(engine_refs, cfg.max_lanes, cfg.mode);
     sched.set_record_tokens(cfg.record_tokens);
+    if cfg.spill_quantized {
+        sched.set_spill_codec(SpillCodec::Int8);
+    }
     let mut compute_secs = 0f64;
     let mut batches = 0usize;
     let mut items = 0usize;
@@ -245,6 +271,10 @@ pub(crate) fn run_worker(
                 sched.enforce_idle_budget(max_idle, &queued);
             }
         }
+        if let Some(budget) = cfg.state_budget {
+            sched.enforce_state_budget(budget);
+        }
+        sched.sample_resident_peak();
         // Tokens before completions: a stream's Done must never
         // overtake its own token events at the receiver.
         for t in sched.take_token_events() {
@@ -257,6 +287,12 @@ pub(crate) fn run_worker(
     let model_sessions = (0..registry.len())
         .map(|m| sched.sessions().len_model(m as ModelId))
         .collect();
+    let model_hibernated = (0..registry.len())
+        .map(|m| sched.cold().len_model(m as ModelId))
+        .collect();
+    let model_hibernated_bytes = (0..registry.len())
+        .map(|m| sched.cold().bytes_model(m as ModelId))
+        .collect();
     WorkerSummary {
         compute_secs,
         batches,
@@ -264,6 +300,8 @@ pub(crate) fn run_worker(
         stats: sched.stats(),
         model_stats: sched.model_stats().to_vec(),
         model_sessions,
+        model_hibernated,
+        model_hibernated_bytes,
     }
 }
 
@@ -335,6 +373,8 @@ impl<'a> Server<'a> {
             mode: self.config.mode,
             session_budget: self.config.session_budget,
             evict_idle_after: self.config.evict_idle_after,
+            state_budget: self.config.state_budget,
+            spill_quantized: self.config.spill_quantized,
             record_tokens: false,
         };
 
@@ -419,6 +459,9 @@ impl<'a> Server<'a> {
                 stolen_sessions: stolen_sessions[i],
                 evictions: s.stats.evictions,
                 idle_evictions: s.stats.idle_evictions,
+                spills: s.stats.spills,
+                restores: s.stats.restores,
+                peak_resident_state_bytes: s.stats.peak_resident_state_bytes,
             })
             .collect();
         let per_model: Vec<ModelLoad> = (0..n_models)
@@ -426,6 +469,8 @@ impl<'a> Server<'a> {
                 let mid = m as ModelId;
                 let mut agg = SchedulerStats::default();
                 let mut resident_sessions = 0usize;
+                let mut hibernated_sessions = 0usize;
+                let mut hibernated_state_bytes = 0usize;
                 for s in summaries {
                     agg.batched_steps += s.model_stats[m].batched_steps;
                     agg.lane_steps += s.model_stats[m].lane_steps;
@@ -435,7 +480,11 @@ impl<'a> Server<'a> {
                     agg.retirements += s.model_stats[m].retirements;
                     agg.evictions += s.model_stats[m].evictions;
                     agg.idle_evictions += s.model_stats[m].idle_evictions;
+                    agg.spills += s.model_stats[m].spills;
+                    agg.restores += s.model_stats[m].restores;
                     resident_sessions += s.model_sessions[m];
+                    hibernated_sessions += s.model_hibernated[m];
+                    hibernated_state_bytes += s.model_hibernated_bytes[m];
                 }
                 let resident_workers = residency[m].len();
                 let weight_bytes = self.registry.weight_bytes(mid);
@@ -449,6 +498,8 @@ impl<'a> Server<'a> {
                     resident_sessions,
                     resident_state_bytes: resident_sessions
                         * self.registry.state_bytes(mid),
+                    hibernated_sessions,
+                    hibernated_state_bytes,
                     batched_steps: agg.batched_steps,
                     lane_steps: agg.lane_steps,
                     padded_lane_steps: agg.padded_lane_steps,
@@ -458,6 +509,8 @@ impl<'a> Server<'a> {
                     steals: stolen_by_model[m],
                     evictions: agg.evictions,
                     idle_evictions: agg.idle_evictions,
+                    spills: agg.spills,
+                    restores: agg.restores,
                 }
             })
             .collect();
@@ -478,6 +531,17 @@ impl<'a> Server<'a> {
         let evictions: usize = summaries.iter().map(|s| s.stats.evictions).sum();
         let idle_evictions: usize =
             summaries.iter().map(|s| s.stats.idle_evictions).sum();
+        let spills: usize = summaries.iter().map(|s| s.stats.spills).sum();
+        let restores: usize = summaries.iter().map(|s| s.stats.restores).sum();
+        let peak_resident_state_bytes: usize = summaries
+            .iter()
+            .map(|s| s.stats.peak_resident_state_bytes)
+            .max()
+            .unwrap_or(0);
+        let resident_state_bytes: usize =
+            per_model.iter().map(|m| m.resident_state_bytes).sum();
+        let hibernated_state_bytes: usize =
+            per_model.iter().map(|m| m.hibernated_state_bytes).sum();
 
         ServingReport {
             engine: engine_label,
@@ -506,6 +570,11 @@ impl<'a> Server<'a> {
             steals: stolen_sessions.iter().sum(),
             evictions,
             idle_evictions,
+            spills,
+            restores,
+            resident_state_bytes,
+            hibernated_state_bytes,
+            peak_resident_state_bytes,
             resident_weight_bytes: self.registry.total_resident_weight_bytes(workers),
             per_worker,
             per_model,
@@ -711,6 +780,44 @@ mod tests {
                     <= report.latency.percentile(p) + 1e-9
             );
         }
+    }
+
+    #[test]
+    fn state_budget_hibernates_and_report_accounts_bytes() {
+        let lm = tiny_lm();
+        let stats = calib(&lm);
+        // 24 distinct sessions against a budget of 4 sessions' state:
+        // hibernation must engage on both workers.
+        let trace = RequestTrace::generate(24, 1_000_000.0, 8, VOCAB, 17);
+        let server_probe = Server::new(&lm, Some(&stats), ServerConfig::default());
+        let sb = server_probe.registry().state_bytes(0);
+        let budget = 4 * sb;
+        let server = Server::new(
+            &lm,
+            Some(&stats),
+            ServerConfig {
+                workers: 2,
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                state_budget: Some(budget),
+                ..ServerConfig::default()
+            },
+        );
+        let report = server.run_trace(&trace, 1e9).unwrap();
+        assert_eq!(report.requests, 24);
+        assert!(report.spills > 0, "budget pressure must spill");
+        assert!(report.peak_resident_state_bytes <= budget);
+        for w in &report.per_worker {
+            assert!(w.peak_resident_state_bytes <= budget, "worker {}", w.worker);
+        }
+        // Cold-tier population is exactly the unrestored spills, and
+        // the byte totals are live: hot + cold partition the sessions.
+        let m = &report.per_model[0];
+        assert_eq!(m.hibernated_sessions, report.spills - report.restores);
+        assert_eq!(m.resident_sessions + m.hibernated_sessions, 24);
+        assert_eq!(report.resident_state_bytes, m.resident_sessions * sb);
+        // Exact codec: each cold image is exactly the hot state size.
+        assert_eq!(report.hibernated_state_bytes, m.hibernated_sessions * sb);
+        assert!(report.evictions == 0, "spills must not count as evictions");
     }
 
     #[test]

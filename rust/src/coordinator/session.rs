@@ -133,6 +133,37 @@ impl SessionManager {
         s
     }
 
+    /// Remove one session *without* counting it as an eviction — the
+    /// hibernation spill path: the stream is not dropped, its state
+    /// moves to the cold tier and comes back via [`Self::insert`].
+    pub fn take(&mut self, model: ModelId, id: SessionId) -> Option<Session> {
+        self.sessions.remove(&(model, id))
+    }
+
+    /// Re-insert a previously [`Self::take`]n session *without*
+    /// counting a creation — the hibernation restore path. The session
+    /// keeps its own `last_active`; the next `get_or_create` touch
+    /// refreshes it.
+    pub fn insert(&mut self, s: Session) {
+        self.sessions.insert(s.key(), s);
+    }
+
+    /// Resident keys coldest-first: sorted by `(last_active, model,
+    /// id)` ascending, skipping keys in `protected` — the spill order
+    /// of the byte-budget enforcement. Like the eviction paths, a pure
+    /// function of the table contents (no hash-iteration
+    /// nondeterminism).
+    pub fn coldest_first(&self, protected: &[SessionKey]) -> Vec<SessionKey> {
+        let mut keys: Vec<(u64, ModelId, SessionId)> = self
+            .sessions
+            .values()
+            .filter(|s| !protected.contains(&s.key()))
+            .map(|s| (s.last_active, s.model, s.id))
+            .collect();
+        keys.sort_unstable();
+        keys.into_iter().map(|(_, m, i)| (m, i)).collect()
+    }
+
     /// Number of resident sessions across all models.
     pub fn len(&self) -> usize {
         self.sessions.len()
@@ -401,6 +432,35 @@ mod tests {
         mgr.tick();
         assert_eq!(mgr.evict_idle_protected(4, &[]), vec![(0, 1)]);
         assert!(mgr.get(1).is_none());
+    }
+
+    #[test]
+    fn take_and_insert_do_not_count_as_churn() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(0, 4, &engine).tokens_seen = 11;
+        let s = mgr.take(0, 4).expect("resident");
+        assert_eq!(mgr.evicted(), 0, "take is not an eviction");
+        assert!(mgr.take(0, 4).is_none());
+        mgr.insert(s);
+        assert_eq!(mgr.created(), 1, "insert is not a creation");
+        assert_eq!(mgr.get(4).unwrap().tokens_seen, 11);
+    }
+
+    #[test]
+    fn coldest_first_orders_by_activity_then_key() {
+        let lm = tiny_lm();
+        let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+        let mut mgr = SessionManager::new();
+        mgr.get_or_create(1, 2, &engine); // t=0
+        mgr.get_or_create(0, 9, &engine); // t=0
+        mgr.tick();
+        mgr.get_or_create(0, 1, &engine); // t=1
+        // Oldest activity first; ties break (model, id) ascending.
+        assert_eq!(mgr.coldest_first(&[]), vec![(0, 9), (1, 2), (0, 1)]);
+        // Protection removes a key without disturbing the order.
+        assert_eq!(mgr.coldest_first(&[(0, 9)]), vec![(1, 2), (0, 1)]);
     }
 
     #[test]

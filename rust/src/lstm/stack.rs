@@ -430,6 +430,96 @@ impl LstmStack {
             .sum()
     }
 
+    /// Serialize one stream's per-layer recurrent state into `out` as
+    /// little-endian bytes — the exact hibernation codec. Exactly
+    /// [`Self::state_bytes`] bytes are appended: per layer, `c` then
+    /// `h`, f32 via `to_le_bytes` for float/hybrid layers and raw
+    /// i16/i8 for integer layers. No variant tags are stored: the
+    /// engine determines every layer's representation, so
+    /// [`Self::import_lane`] reconstructs the same variants. Because
+    /// `f32::to_le_bytes`/`from_le_bytes` round-trip every bit pattern
+    /// (including subnormals and signed zeros), export → import is
+    /// bit-exact by construction.
+    pub fn export_lane(&self, states: &[LayerState], out: &mut Vec<u8>) {
+        assert_eq!(states.len(), self.layers.len(), "state/stack depth mismatch");
+        for (idx, state) in states.iter().enumerate() {
+            let spec = &self.specs[idx];
+            match state {
+                LayerState::Float(st) => {
+                    assert_eq!(st.c.len(), spec.n_cell);
+                    assert_eq!(st.h.len(), spec.n_output);
+                    for v in &st.c {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                    for v in &st.h {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                LayerState::Integer(st) => {
+                    assert_eq!(st.c.len(), spec.n_cell);
+                    assert_eq!(st.h.len(), spec.n_output);
+                    for v in &st.c {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                    for v in &st.h {
+                        out.push(*v as u8);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rebuild per-layer states from bytes produced by
+    /// [`Self::export_lane`] on a stack with the same engine and specs.
+    /// `bytes` must be exactly [`Self::state_bytes`] long.
+    pub fn import_lane(&self, bytes: &[u8]) -> Vec<LayerState> {
+        assert_eq!(bytes.len(), self.state_bytes(), "hibernated state length mismatch");
+        let mut off = 0usize;
+        let mut states = Vec::with_capacity(self.layers.len());
+        for (layer, spec) in self.layers.iter().zip(&self.specs) {
+            match layer {
+                LayerEngine::Float(_) | LayerEngine::Hybrid(_) => {
+                    let mut c = Vec::with_capacity(spec.n_cell);
+                    for _ in 0..spec.n_cell {
+                        c.push(f32::from_le_bytes([
+                            bytes[off],
+                            bytes[off + 1],
+                            bytes[off + 2],
+                            bytes[off + 3],
+                        ]));
+                        off += 4;
+                    }
+                    let mut h = Vec::with_capacity(spec.n_output);
+                    for _ in 0..spec.n_output {
+                        h.push(f32::from_le_bytes([
+                            bytes[off],
+                            bytes[off + 1],
+                            bytes[off + 2],
+                            bytes[off + 3],
+                        ]));
+                        off += 4;
+                    }
+                    states.push(LayerState::Float(FloatState { c, h }));
+                }
+                LayerEngine::Integer(_) => {
+                    let mut c = Vec::with_capacity(spec.n_cell);
+                    for _ in 0..spec.n_cell {
+                        c.push(i16::from_le_bytes([bytes[off], bytes[off + 1]]));
+                        off += 2;
+                    }
+                    let mut h = Vec::with_capacity(spec.n_output);
+                    for _ in 0..spec.n_output {
+                        h.push(bytes[off] as i8);
+                        off += 1;
+                    }
+                    states.push(LayerState::Integer(IntegerState { c, h }));
+                }
+            }
+        }
+        debug_assert_eq!(off, bytes.len());
+        states
+    }
+
     /// Weight bytes under this engine (Table 1 size column).
     pub fn weight_bytes(&self) -> usize {
         self.layers
@@ -783,6 +873,35 @@ mod tests {
             assert_obs_eq(&b.c, &s.c, &format!("layer {l} c"));
             for (g, (bo, so)) in b.gate_out.iter().zip(&s.gate_out).enumerate() {
                 assert_obs_eq(bo, so, &format!("layer {l} gate {g}"));
+            }
+        }
+    }
+
+    #[test]
+    fn export_import_lane_roundtrips_bit_exact_mid_sequence() {
+        let (weights, stats) = build_stack(VariantFlags::plain(), 2, 17);
+        for engine in StackEngine::ALL {
+            let stack = LstmStack::build(
+                &weights,
+                engine,
+                Some(&stats),
+                Default::default(),
+            );
+            let mut rng = Pcg32::seeded(18);
+            let seq = make_seqs(&mut rng, 1, 20, 10).pop().unwrap();
+            let mut live = stack.zero_state();
+            // Warm the state, then round-trip it through the byte codec.
+            stack.run_sequence(&seq[..10], &mut live);
+            let mut bytes = Vec::new();
+            stack.export_lane(&live, &mut bytes);
+            assert_eq!(bytes.len(), stack.state_bytes(), "{}", engine.label());
+            let mut restored = stack.import_lane(&bytes);
+            // Both copies must produce identical bits for the rest of
+            // the sequence.
+            let a = stack.run_sequence(&seq[10..], &mut live);
+            let b = stack.run_sequence(&seq[10..], &mut restored);
+            for (va, vb) in a.iter().flatten().zip(b.iter().flatten()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "{}", engine.label());
             }
         }
     }

@@ -65,7 +65,10 @@ fn run(args: &[String]) -> Result<()> {
                  \n\
                  serve  --engine float|hybrid|integer  --requests N  --workers N\n\
                  \u{20}       --rate R (req/s)  --batch B  --mode continuous|wave\n\
-                 \u{20}       --no-steal  --session-budget N  --evict-idle-after N\n\
+                 \u{20}       --no-steal  --session-budget BYTES (per-worker resident\n\
+                 \u{20}       state; coldest idle sessions hibernate over budget)\n\
+                 \u{20}       --spill-quantized (int8 cold tier, ~4x smaller)\n\
+                 \u{20}       --evict-idle-after N\n\
                  \u{20}       --models N  --replicas R  --artifacts DIR\n\
                  \u{20}       --listen ADDR (TCP front instead of trace replay)\n\
                  \u{20}       --drain-after S  --max-inflight N (with --listen)\n\
@@ -90,9 +93,14 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
         other => bail!("unknown scheduler mode `{other}` (continuous|wave)"),
     };
     let steal = !args.iter().any(|a| a == "--no-steal");
-    let session_budget = flag(args, "--session-budget")
+    // `--session-budget` is a real per-worker BYTE budget on resident
+    // session state (it was a session count before hibernation
+    // existed): over budget, the coldest idle sessions hibernate into
+    // the cold tier and restore transparently on their next chunk.
+    let state_budget = flag(args, "--session-budget")
         .map(|v| v.parse::<usize>())
         .transpose()?;
+    let spill_quantized = args.iter().any(|a| a == "--spill-quantized");
     let evict_idle_after = flag(args, "--evict-idle-after")
         .map(|v| v.parse::<u64>())
         .transpose()?;
@@ -137,8 +145,10 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
         opts: QuantizeOptions::default(),
         mode,
         steal,
-        session_budget,
+        session_budget: None,
         evict_idle_after,
+        state_budget,
+        spill_quantized,
     };
     // One loaded artifact served as N registered variants (shared float
     // master weights, independent engines/sessions/waves): the serving
@@ -157,6 +167,21 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
                 None => Residency::All,
             },
         });
+    }
+    if let Some(b) = state_budget {
+        // Lane-holding and pending sessions never hibernate, so a
+        // budget below one full wave of the largest model is
+        // unenforceable — reject it up front instead of silently
+        // running over.
+        let floor = batch * registry.max_state_bytes();
+        if b < floor {
+            bail!(
+                "--session-budget {b} bytes is below the enforceable floor of \
+                 {floor} bytes (batch {batch} x largest per-stream state \
+                 {} bytes)",
+                registry.max_state_bytes()
+            );
+        }
     }
     let server = Server::with_registry(registry, config);
 

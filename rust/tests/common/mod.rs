@@ -1,0 +1,295 @@
+//! Shared test-support layer for the serving integration suites.
+//!
+//! Every builder here used to be copy-pasted (with per-suite seeds)
+//! across `continuous_batching.rs`, `sharded_serving.rs`,
+//! `multi_model.rs`, `sparse_serving.rs`, `kernel_padding.rs`, and
+//! `net_serving.rs`. The seeds stay per-suite — callers pass them in —
+//! so extracting the builders changes no generated weights, traces, or
+//! calibration stats. Each suite pins that with a golden test comparing
+//! a private copy of its original inline builder against these, bit for
+//! bit.
+//!
+//! Not every suite uses every helper, hence the file-wide dead_code
+//! allow (each integration-test binary compiles its own copy).
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use iqrnn::coordinator::{ContinuousScheduler, ModelId, StreamItem};
+use iqrnn::lstm::{CalibrationStats, LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
+use iqrnn::tensor::Matrix;
+use iqrnn::util::Pcg32;
+use iqrnn::workload::synth::RequestTrace;
+
+/// A tiny random char-LM: the standard fixture. The seed drives every
+/// weight (stack first, then the output head — consume order matters
+/// for bit-exact reproduction of the historical per-suite builders).
+pub fn tiny_lm(seed: u64, hidden: usize, depth: usize) -> CharLm {
+    let mut rng = Pcg32::seeded(seed);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+}
+
+/// Calibration stats from 4 random 24-token sequences — the shape every
+/// suite used, parameterized by the suite's calibration seed.
+pub fn calib(lm: &CharLm, seed: u64) -> Vec<CalibrationStats> {
+    let mut rng = Pcg32::seeded(seed);
+    let seqs: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    lm.calibrate(&seqs)
+}
+
+/// `len` uniform tokens from the caller's rng.
+pub fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
+    (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect()
+}
+
+/// A model-0 stream chunk.
+pub fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
+    StreamItem { model: 0, session, tokens, submitted: Instant::now() }
+}
+
+/// A stream chunk tagged with an explicit model.
+pub fn item_m(model: ModelId, session: u64, tokens: Vec<usize>) -> StreamItem {
+    StreamItem { model, session, tokens, submitted: Instant::now() }
+}
+
+/// Sequential oracle: run a session's chunks alone on the per-token
+/// path, mirroring the scheduler's nll grouping (per-chunk accumulator
+/// folded into the total, so the f64 sums are bit-identical too).
+pub fn sequential_reference(
+    engine: &CharLmEngine,
+    chunks: &[Vec<usize>],
+) -> (LmState, f64, usize) {
+    let mut state = engine.new_state();
+    let mut total_nll = 0f64;
+    let mut tokens = 0usize;
+    for chunk in chunks {
+        let mut chunk_nll = 0f64;
+        for (t, &tok) in chunk.iter().enumerate() {
+            engine.step_token(tok, &mut state);
+            if let Some(&next) = chunk.get(t + 1) {
+                chunk_nll += nll_bits(&state.logits, next);
+            }
+        }
+        total_nll += chunk_nll;
+        tokens += chunk.len();
+    }
+    (state, total_nll, tokens)
+}
+
+/// The session's chunk sequence, in arrival order, from a model-0 trace.
+pub fn chunks_of(trace: &RequestTrace, session: u64) -> Vec<Vec<usize>> {
+    trace
+        .requests
+        .iter()
+        .filter(|r| r.id == session)
+        .map(|r| r.tokens.clone())
+        .collect()
+}
+
+/// The stream's chunk sequence, in arrival order, from a multi-model
+/// trace.
+pub fn chunks_of_model(
+    trace: &RequestTrace,
+    model: ModelId,
+    session: u64,
+) -> Vec<Vec<usize>> {
+    trace
+        .requests
+        .iter()
+        .filter(|r| r.model == model && r.id == session)
+        .map(|r| r.tokens.clone())
+        .collect()
+}
+
+/// Sorted, deduplicated session ids of a trace.
+pub fn session_ids(trace: &RequestTrace) -> Vec<u64> {
+    let mut ids: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+/// Sorted, deduplicated `(model, session)` keys of a trace.
+pub fn stream_keys(trace: &RequestTrace) -> Vec<(ModelId, u64)> {
+    let mut keys: Vec<(ModelId, u64)> =
+        trace.requests.iter().map(|r| (r.model, r.id)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// Assert a scheduler-produced session equals the sequential oracle
+/// bit-for-bit.
+pub fn assert_session_bit_exact(
+    sched: &ContinuousScheduler,
+    session: u64,
+    chunks: &[Vec<usize>],
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let s = sched
+        .sessions()
+        .get(session)
+        .unwrap_or_else(|| panic!("{ctx}: session {session} missing"));
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: session {session} nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+/// Find the one worker holding `session`, assert it is exactly one,
+/// and check the session against the sequential oracle bit-for-bit.
+pub fn assert_shard_session_bit_exact(
+    scheds: &[ContinuousScheduler],
+    trace: &RequestTrace,
+    session: u64,
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let holders: Vec<usize> = scheds
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.sessions().get(session).is_some())
+        .map(|(w, _)| w)
+        .collect();
+    assert_eq!(
+        holders.len(),
+        1,
+        "{ctx}: session {session} resident on workers {holders:?} (must be exactly one)"
+    );
+    let s = scheds[holders[0]].sessions().get(session).unwrap();
+    let chunks = chunks_of(trace, session);
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: session {session} nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+/// Find the one worker holding `(model, session)`, assert it is exactly
+/// one, and check the stream against its model's sequential oracle
+/// bit-for-bit.
+pub fn assert_stream_bit_exact(
+    scheds: &[ContinuousScheduler],
+    trace: &RequestTrace,
+    model: ModelId,
+    session: u64,
+    engine: &CharLmEngine,
+    ctx: &str,
+) {
+    let holders: Vec<usize> = scheds
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.sessions().get_model(model, session).is_some())
+        .map(|(w, _)| w)
+        .collect();
+    assert_eq!(
+        holders.len(),
+        1,
+        "{ctx}: stream ({model}, {session}) resident on workers {holders:?}"
+    );
+    let s = scheds[holders[0]].sessions().get_model(model, session).unwrap();
+    let chunks = chunks_of_model(trace, model, session);
+    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
+    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: ({model}, {session}) tokens");
+    assert_eq!(s.state.h, ref_state.h, "{ctx}: ({model}, {session}) hidden");
+    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: ({model}, {session}) logits");
+    assert_eq!(
+        s.nll_bits.to_bits(),
+        ref_nll.to_bits(),
+        "{ctx}: ({model}, {session}) nll ({} vs {})",
+        s.nll_bits,
+        ref_nll
+    );
+}
+
+/// A residency map placing every model on every worker.
+pub fn all_resident(n_models: usize, workers: usize) -> Vec<Vec<usize>> {
+    (0..n_models).map(|_| (0..workers).collect()).collect()
+}
+
+/// Golden-pin support: assert two LMs are the same model bit-for-bit —
+/// structurally on the public fields, and functionally by stepping a
+/// pinned token sequence through both (covering the stack weights,
+/// which have no public equality surface).
+pub fn assert_lms_bit_identical(a: &CharLm, b: &CharLm, ctx: &str) {
+    assert_eq!(a.hidden, b.hidden, "{ctx}: hidden");
+    assert_eq!(a.depth, b.depth, "{ctx}: depth");
+    assert_eq!(a.out_b, b.out_b, "{ctx}: out_b");
+    assert_eq!(a.out_w.data.len(), b.out_w.data.len(), "{ctx}: out_w shape");
+    for (i, (x, y)) in a.out_w.data.iter().zip(&b.out_w.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: out_w[{i}]");
+    }
+    let ea = a.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let eb = b.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    let tokens = random_tokens(&mut rng, 32);
+    let (sa, nll_a, _) = sequential_reference(&ea, &[tokens.clone()]);
+    let (sb, nll_b, _) = sequential_reference(&eb, &[tokens]);
+    for (x, y) in sa.h.iter().zip(&sb.h) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: hidden state diverged");
+    }
+    for (x, y) in sa.logits.iter().zip(&sb.logits) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logits diverged");
+    }
+    assert_eq!(nll_a.to_bits(), nll_b.to_bits(), "{ctx}: nll diverged");
+}
+
+/// Golden-pin support: assert an Integer engine built from `(lm, stats)`
+/// produces bit-identical states to one built from `(lm, golden_stats)`
+/// on a pinned sequence — the functional equality surface for
+/// `CalibrationStats`.
+pub fn assert_calibrations_equivalent(
+    lm: &CharLm,
+    stats: &[CalibrationStats],
+    golden: &[CalibrationStats],
+    ctx: &str,
+) {
+    let ea = lm.engine(StackEngine::Integer, Some(stats), QuantizeOptions::default());
+    let eb = lm.engine(StackEngine::Integer, Some(golden), QuantizeOptions::default());
+    let mut rng = Pcg32::seeded(0xBEEF);
+    let tokens = random_tokens(&mut rng, 32);
+    let (sa, nll_a, _) = sequential_reference(&ea, &[tokens.clone()]);
+    let (sb, nll_b, _) = sequential_reference(&eb, &[tokens]);
+    for (x, y) in sa.logits.iter().zip(&sb.logits) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: calibrated logits diverged");
+    }
+    assert_eq!(nll_a.to_bits(), nll_b.to_bits(), "{ctx}: calibrated nll diverged");
+}
+
+/// Golden-pin support: assert two traces are identical field-for-field,
+/// then hand back the first — used by each suite to pin one generated
+/// trace (same generator, same seed, same requests forever).
+pub fn assert_traces_identical(a: &RequestTrace, b: &RequestTrace, ctx: &str) {
+    assert_eq!(a.requests.len(), b.requests.len(), "{ctx}: request count");
+    for (i, (x, y)) in a.requests.iter().zip(&b.requests).enumerate() {
+        assert_eq!(x.id, y.id, "{ctx}: request {i} id");
+        assert_eq!(x.model, y.model, "{ctx}: request {i} model");
+        assert_eq!(
+            x.arrival_ms.to_bits(),
+            y.arrival_ms.to_bits(),
+            "{ctx}: request {i} arrival"
+        );
+        assert_eq!(x.tokens, y.tokens, "{ctx}: request {i} tokens");
+    }
+}

@@ -12,92 +12,33 @@
 //!
 //! All tests are seeded and thread-free (the scheduler is driven
 //! directly or through the virtual-time simulator), so failures are
-//! replayable.
+//! replayable. Fixtures come from the shared `common` module with this
+//! suite's historical seeds (1234 weights / 1235 calibration), pinned
+//! by `common_builders_match_suite_golden`.
 
-use std::time::Instant;
+mod common;
 
-use iqrnn::coordinator::{
-    simulate_trace, ContinuousScheduler, SchedulerMode, StreamItem,
+use common::{
+    assert_session_bit_exact, calib as calib_seeded, item, random_tokens,
+    tiny_lm as tiny_lm_seeded,
 };
-use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
-use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
-use iqrnn::tensor::Matrix;
+use iqrnn::coordinator::{
+    simulate_trace, ContinuousScheduler, SchedulerMode,
+};
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::{CharLm, CharLmEngine, VOCAB};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
 
+const WEIGHT_SEED: u64 = 1234;
+const CALIB_SEED: u64 = 1235;
+
 fn tiny_lm(hidden: usize, depth: usize) -> CharLm {
-    let mut rng = Pcg32::seeded(1234);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+    tiny_lm_seeded(WEIGHT_SEED, hidden, depth)
 }
 
 fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
-    let mut rng = Pcg32::seeded(1235);
-    let seqs: Vec<Vec<usize>> = (0..4)
-        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-        .collect();
-    lm.calibrate(&seqs)
-}
-
-fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
-    (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect()
-}
-
-fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
-    StreamItem { model: 0, session, tokens, submitted: Instant::now() }
-}
-
-/// Sequential oracle: run a session's chunks alone on the per-token
-/// path, mirroring the scheduler's nll grouping (per-chunk accumulator
-/// folded into the total, so the f64 sums are bit-identical too).
-fn sequential_reference(
-    engine: &CharLmEngine,
-    chunks: &[Vec<usize>],
-) -> (LmState, f64, usize) {
-    let mut state = engine.new_state();
-    let mut total_nll = 0f64;
-    let mut tokens = 0usize;
-    for chunk in chunks {
-        let mut chunk_nll = 0f64;
-        for (t, &tok) in chunk.iter().enumerate() {
-            engine.step_token(tok, &mut state);
-            if let Some(&next) = chunk.get(t + 1) {
-                chunk_nll += nll_bits(&state.logits, next);
-            }
-        }
-        total_nll += chunk_nll;
-        tokens += chunk.len();
-    }
-    (state, total_nll, tokens)
-}
-
-/// Assert a scheduler-produced session equals the sequential oracle
-/// bit-for-bit.
-fn assert_session_bit_exact(
-    sched: &ContinuousScheduler,
-    session: u64,
-    chunks: &[Vec<usize>],
-    engine: &CharLmEngine,
-    ctx: &str,
-) {
-    let s = sched
-        .sessions()
-        .get(session)
-        .unwrap_or_else(|| panic!("{ctx}: session {session} missing"));
-    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, chunks);
-    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
-    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
-    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
-    assert_eq!(
-        s.nll_bits.to_bits(),
-        ref_nll.to_bits(),
-        "{ctx}: session {session} nll ({} vs {})",
-        s.nll_bits,
-        ref_nll
-    );
+    calib_seeded(lm, CALIB_SEED)
 }
 
 /// Drive a scheduler over step-indexed arrivals, checking the lane
@@ -133,6 +74,49 @@ fn drive<'e>(
         assert!(step < 1_000_000, "{ctx}: scheduler failed to drain");
     }
     sched
+}
+
+/// Golden pin for the `common` extraction: a private copy of this
+/// suite's original inline builders must match the shared ones bit for
+/// bit, and the suite's canonical generated trace is deterministic.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_tiny_lm(hidden: usize, depth: usize) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        use iqrnn::tensor::Matrix;
+        let mut rng = Pcg32::seeded(1234);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+    }
+    fn golden_calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(1235);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    for (hidden, depth) in [(20usize, 2usize), (16, 1)] {
+        let golden = golden_tiny_lm(hidden, depth);
+        let shared = tiny_lm(hidden, depth);
+        let ctx = format!("continuous_batching {hidden}x{depth}");
+        common::assert_lms_bit_identical(&golden, &shared, &ctx);
+        common::assert_calibrations_equivalent(
+            &shared,
+            &calib(&shared),
+            &golden_calib(&golden),
+            &ctx,
+        );
+    }
+    // Pin this suite's canonical generated trace: same generator, same
+    // seed, same requests forever.
+    let a = RequestTrace::generate(30, 700.0, 14, VOCAB, 13);
+    let b = RequestTrace::generate(30, 700.0, 14, VOCAB, 13);
+    common::assert_traces_identical(&a, &b, "continuous_batching trace 13");
+    assert_eq!(a.requests.len(), 30);
+    assert!(a.requests.iter().all(|r| r.tokens.iter().all(|&t| t < VOCAB)));
 }
 
 #[test]

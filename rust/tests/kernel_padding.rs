@@ -8,26 +8,29 @@
 //! debug-build tail counter), plus the two contracts the padding leans
 //! on: pad lanes never change a live lane's bits, and the scheduler's
 //! occupancy metrics report live and padded widths separately.
+//!
+//! Fixtures come from the shared `common` module with this suite's
+//! historical seeds (97 weights / 98 calibration), pinned by
+//! `common_builders_match_suite_golden`.
 
-use iqrnn::coordinator::{simulate_trace, ContinuousScheduler, SchedulerMode, StreamItem};
-use iqrnn::lstm::{BatchLayerState, LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+mod common;
+
+use iqrnn::coordinator::{simulate_trace, ContinuousScheduler, SchedulerMode};
+use iqrnn::lstm::{BatchLayerState, QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{CharLm, CharLmEngine, LmState, VOCAB};
 use iqrnn::tensor::qmatmul::tail_audit;
-use iqrnn::tensor::{pad_lanes, Matrix, LANE_TILE};
+use iqrnn::tensor::{pad_lanes, LANE_TILE};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
-use std::time::Instant;
+
+const WEIGHT_SEED: u64 = 97;
+const CALIB_SEED: u64 = 98;
 
 /// A tiny LM with a deliberately ragged hidden width: 33 = 32 + 1 puts
 /// every recurrent GEMM (K = 33) and the head GEMM (K = 33, rows = 96)
 /// on the worst-case remainder shapes.
 fn ragged_lm(hidden: usize) -> CharLm {
-    let mut rng = Pcg32::seeded(97);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+    common::tiny_lm(WEIGHT_SEED, hidden, 1)
 }
 
 /// The same ragged LM with every weight matrix block-structure pruned,
@@ -47,11 +50,7 @@ fn ragged_pruned_lm(hidden: usize, sparsity: f64) -> CharLm {
 
 fn build_engine_opts(lm: &CharLm, kind: StackEngine, opts: QuantizeOptions) -> CharLmEngine {
     let stats = if kind == StackEngine::Integer {
-        let mut rng = Pcg32::seeded(98);
-        let calib: Vec<Vec<usize>> = (0..4)
-            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-            .collect();
-        Some(lm.calibrate(&calib))
+        Some(common::calib(lm, CALIB_SEED))
     } else {
         None
     };
@@ -62,8 +61,41 @@ fn build_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
     build_engine_opts(lm, kind, QuantizeOptions::default())
 }
 
-fn item(session: u64, tokens: Vec<usize>) -> StreamItem {
-    StreamItem { model: 0, session, tokens, submitted: Instant::now() }
+/// Golden pin for the `common` extraction: a private copy of this
+/// suite's original inline builders must match the shared ones bit for
+/// bit, and the suite's canonical generated trace is deterministic.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_ragged_lm(hidden: usize) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        use iqrnn::tensor::Matrix;
+        let mut rng = Pcg32::seeded(97);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+    }
+    fn golden_calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(98);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    let golden = golden_ragged_lm(33);
+    let shared = ragged_lm(33);
+    common::assert_lms_bit_identical(&golden, &shared, "kernel_padding 33");
+    common::assert_calibrations_equivalent(
+        &shared,
+        &common::calib(&shared, CALIB_SEED),
+        &golden_calib(&golden),
+        "kernel_padding",
+    );
+    let a = RequestTrace::generate_staggered(11, 5.0, 18, VOCAB, 29);
+    let b = RequestTrace::generate_staggered(11, 5.0, 18, VOCAB, 29);
+    common::assert_traces_identical(&a, &b, "kernel_padding trace 29");
+    assert_eq!(a.requests.len(), 11);
 }
 
 /// Acceptance criterion of the register-tiling refactor: drive the
@@ -80,7 +112,7 @@ fn batched_integer_serving_path_is_tail_free() {
     tail_audit::reset();
     // Staggered lengths so the live width sweeps 7 -> 1 as lanes retire.
     for s in 0..7u64 {
-        sched.offer(item(s, vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize]));
+        sched.offer(common::item(s, vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize]));
     }
     let mut widths = std::collections::HashSet::new();
     while sched.has_live_work() {

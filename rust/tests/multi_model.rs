@@ -21,122 +21,68 @@
 //!
 //! Everything except the server test runs on the deterministic
 //! virtual-time multi-model shard simulator (no threads), so failures
-//! are replayable.
+//! are replayable. Fixtures come from the shared `common` module (this
+//! suite's builders were already seed-parameterized; the golden test
+//! pins the extraction).
 
-use std::time::{Duration, Instant};
+mod common;
 
+use std::time::Duration;
+
+use common::{all_resident, assert_stream_bit_exact, calib, item_m, stream_keys, tiny_lm};
 use iqrnn::coordinator::{
     simulate_multi_shard_trace, BatchPolicy, ContinuousScheduler, ModelId,
     ModelRegistry, ModelSpec, Residency, SchedulerMode, Server, ServerConfig,
-    StreamItem,
 };
-use iqrnn::lstm::{CalibrationStats, LstmSpec, QuantizeOptions, StackEngine, StackWeights};
-use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
-use iqrnn::tensor::Matrix;
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, VOCAB};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
-
-fn tiny_lm(seed: u64, hidden: usize, depth: usize) -> CharLm {
-    let mut rng = Pcg32::seeded(seed);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
-}
-
-fn calib(lm: &CharLm, seed: u64) -> Vec<CalibrationStats> {
-    let mut rng = Pcg32::seeded(seed);
-    let seqs: Vec<Vec<usize>> = (0..4)
-        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-        .collect();
-    lm.calibrate(&seqs)
-}
 
 /// Three distinct model variants (different weights and widths).
 fn three_lms() -> Vec<CharLm> {
     vec![tiny_lm(501, 20, 2), tiny_lm(502, 16, 1), tiny_lm(503, 24, 1)]
 }
 
-/// Sequential oracle: run a stream's chunks alone on the per-token
-/// path of its own model, mirroring the scheduler's nll grouping.
-fn sequential_reference(
-    engine: &CharLmEngine,
-    chunks: &[Vec<usize>],
-) -> (LmState, f64, usize) {
-    let mut state = engine.new_state();
-    let mut total_nll = 0f64;
-    let mut tokens = 0usize;
-    for chunk in chunks {
-        let mut chunk_nll = 0f64;
-        for (t, &tok) in chunk.iter().enumerate() {
-            engine.step_token(tok, &mut state);
-            if let Some(&next) = chunk.get(t + 1) {
-                chunk_nll += nll_bits(&state.logits, next);
-            }
-        }
-        total_nll += chunk_nll;
-        tokens += chunk.len();
+/// Golden pin for the `common` extraction: this suite's builders were
+/// already `(seed, hidden, depth)`-parameterized, so the pin keeps a
+/// private copy of the original and checks the shared module against it
+/// bit for bit, plus the canonical generated multi-model trace.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_tiny_lm(seed: u64, hidden: usize, depth: usize) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        use iqrnn::tensor::Matrix;
+        let mut rng = Pcg32::seeded(seed);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
     }
-    (state, total_nll, tokens)
-}
-
-fn chunks_of(trace: &RequestTrace, model: ModelId, session: u64) -> Vec<Vec<usize>> {
-    trace
-        .requests
-        .iter()
-        .filter(|r| r.model == model && r.id == session)
-        .map(|r| r.tokens.clone())
-        .collect()
-}
-
-fn stream_keys(trace: &RequestTrace) -> Vec<(ModelId, u64)> {
-    let mut keys: Vec<(ModelId, u64)> =
-        trace.requests.iter().map(|r| (r.model, r.id)).collect();
-    keys.sort_unstable();
-    keys.dedup();
-    keys
-}
-
-/// Find the one worker holding `(model, session)`, assert it is exactly
-/// one, and check the stream against its model's sequential oracle
-/// bit-for-bit.
-fn assert_stream_bit_exact(
-    scheds: &[ContinuousScheduler],
-    trace: &RequestTrace,
-    model: ModelId,
-    session: u64,
-    engine: &CharLmEngine,
-    ctx: &str,
-) {
-    let holders: Vec<usize> = scheds
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| s.sessions().get_model(model, session).is_some())
-        .map(|(w, _)| w)
-        .collect();
-    assert_eq!(
-        holders.len(),
-        1,
-        "{ctx}: stream ({model}, {session}) resident on workers {holders:?}"
-    );
-    let s = scheds[holders[0]].sessions().get_model(model, session).unwrap();
-    let chunks = chunks_of(trace, model, session);
-    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
-    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: ({model}, {session}) tokens");
-    assert_eq!(s.state.h, ref_state.h, "{ctx}: ({model}, {session}) hidden");
-    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: ({model}, {session}) logits");
-    assert_eq!(
-        s.nll_bits.to_bits(),
-        ref_nll.to_bits(),
-        "{ctx}: ({model}, {session}) nll ({} vs {})",
-        s.nll_bits,
-        ref_nll
-    );
-}
-
-fn all_resident(n_models: usize, workers: usize) -> Vec<Vec<usize>> {
-    (0..n_models).map(|_| (0..workers).collect()).collect()
+    fn golden_calib(lm: &CharLm, seed: u64) -> Vec<iqrnn::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(seed);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    for (seed, hidden, depth) in [(501u64, 20usize, 2usize), (502, 16, 1), (503, 24, 1)] {
+        let golden = golden_tiny_lm(seed, hidden, depth);
+        let shared = tiny_lm(seed, hidden, depth);
+        let ctx = format!("multi_model seed {seed}");
+        common::assert_lms_bit_identical(&golden, &shared, &ctx);
+        common::assert_calibrations_equivalent(
+            &shared,
+            &calib(&shared, 600),
+            &golden_calib(&golden, 600),
+            &ctx,
+        );
+    }
+    let a = RequestTrace::generate_multi(24, 900.0, 10, VOCAB, 2, 61);
+    let b = RequestTrace::generate_multi(24, 900.0, 10, VOCAB, 2, 61);
+    common::assert_traces_identical(&a, &b, "multi_model trace 61");
+    assert!(a.requests.iter().any(|r| r.model == 1), "trace must mix models");
 }
 
 #[test]
@@ -239,7 +185,7 @@ fn lanes_never_mix_models_under_churn() {
         let model = (i % 3) as ModelId;
         let len = 3 + (rng.below(9) as usize);
         let tokens = (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect();
-        sched.offer(StreamItem { model, session: i, tokens, submitted: Instant::now() });
+        sched.offer(item_m(model, i, tokens));
     }
     let mut guard = 0;
     while sched.has_live_work() {

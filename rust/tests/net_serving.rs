@@ -15,6 +15,12 @@
 //! * **Graceful drain** — raising shutdown lets every in-flight
 //!   stream finish (all tokens + `Done` + terminal `Bye`), while late
 //!   connects are refused with an immediate `Bye` and never served.
+//!
+//! Fixtures come from the shared `common` module with this suite's
+//! historical seeds (4321/8765 weights / 991 calibration), pinned by
+//! `common_builders_match_suite_golden`.
+
+mod common;
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -24,27 +30,60 @@ use iqrnn::coordinator::{
     ModelSpec, NetClient, NetConfig, NetServer, NetShutdown, Residency, SchedulerMode,
     Server, ServerConfig, ShardConfig,
 };
-use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
+use iqrnn::lstm::QuantizeOptions;
+use iqrnn::lstm::StackEngine;
 use iqrnn::model::lm::{CharLm, VOCAB};
-use iqrnn::tensor::Matrix;
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
 
+const CALIB_SEED: u64 = 991;
+
 fn tiny_lm(seed: u64, hidden: usize) -> CharLm {
-    let mut rng = Pcg32::seeded(seed);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+    common::tiny_lm(seed, hidden, 1)
 }
 
 fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
-    let mut rng = Pcg32::seeded(991);
-    let seqs: Vec<Vec<usize>> = (0..4)
-        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-        .collect();
-    lm.calibrate(&seqs)
+    common::calib(lm, CALIB_SEED)
+}
+
+/// Golden pin for the `common` extraction: a private copy of this
+/// suite's original inline builders must match the shared ones bit for
+/// bit, and the suite's canonical generated trace is deterministic.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_tiny_lm(seed: u64, hidden: usize) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        use iqrnn::tensor::Matrix;
+        let mut rng = Pcg32::seeded(seed);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 }
+    }
+    fn golden_calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(991);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    for (seed, hidden) in [(4321u64, 16usize), (8765, 24)] {
+        let golden = golden_tiny_lm(seed, hidden);
+        let shared = tiny_lm(seed, hidden);
+        let ctx = format!("net_serving seed {seed}");
+        common::assert_lms_bit_identical(&golden, &shared, &ctx);
+        common::assert_calibrations_equivalent(
+            &shared,
+            &calib(&shared),
+            &golden_calib(&golden),
+            &ctx,
+        );
+    }
+    let a = RequestTrace::generate(18, 900.0, 9, VOCAB, 51);
+    let b = RequestTrace::generate(18, 900.0, 9, VOCAB, 51);
+    common::assert_traces_identical(&a, &b, "net_serving trace 51");
+    assert_eq!(a.requests.len(), 18);
 }
 
 /// Per-stream `(pos, pred)` sequences plus per-stream nll, keyed by
@@ -118,10 +157,8 @@ fn simulated_streams(
         max_lanes,
         mode: SchedulerMode::Continuous,
         steal: true,
-        session_budget: None,
-        evict_idle_after: None,
-        tick_ms: 1.0,
         record_tokens: true,
+        ..ShardConfig::default()
     };
     let (_scheds, report) = simulate_multi_shard_trace(engines, residency, trace, &cfg);
     let mut streams: Streams = BTreeMap::new();

@@ -8,7 +8,17 @@
 //! §3.2.1 budget: with ≤8-bit activations the approximation error must
 //! stay below one 8-bit LSB (2^-8), and the gemmlowp-style kernels are
 //! in fact accurate to a few Q0.15 LSBs.
+//!
+//! The final section pins the numerics of the hibernation spill codecs
+//! (`coordinator::hibernate`): per-vector int8 round-trip error bounds
+//! on adversarial state vectors, and the measured bits/char cost of
+//! `--spill-quantized` against an explicit tolerance.
 
+mod common;
+
+use iqrnn::coordinator::{
+    decode_state, dequantize_vec_i8, encode_state, quantize_vec_i8, SpillCodec,
+};
 use iqrnn::fixedpoint::mul::{
     rounding_divide_by_pot_i64, rounding_half_sum, saturate_i32_to_i16,
     saturate_i32_to_i8, saturate_i64_to_i32,
@@ -18,7 +28,10 @@ use iqrnn::fixedpoint::{
     saturating_rounding_doubling_high_mul, saturating_rounding_multiply_by_pot,
     Rescale,
 };
+use iqrnn::lstm::{LayerState, QuantizeOptions, StackEngine};
+use iqrnn::model::lm::{nll_bits, CharLmEngine, LmState};
 use iqrnn::nonlin::{sigmoid_q15, tanh_q15};
+use iqrnn::util::Pcg32;
 
 // ---------------------------------------------------------------- mul
 
@@ -265,4 +278,201 @@ fn activation_symmetries_at_the_rails() {
     let s_min = i32::from(sigmoid_q15(i16::MIN, 3));
     assert!((s_min - 11).abs() <= 2, "σ(i16::MIN) = {s_min} LSBs");
     assert_eq!(tanh_q15(0, 3), 0);
+}
+
+// ------------------------------------------------- hibernation codecs
+
+/// Per-vector int8 bound: worst-case reconstruction error is half a
+/// quantization step (`scale / 2`, `scale = max|v| / 127`) plus f32
+/// rounding slack.
+fn assert_vec_close_i8(orig: &[f32], recon: &[f32], ctx: &str) {
+    let max_abs = orig.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let bound = 0.5 * (max_abs / 127.0) + 1e-6;
+    assert_eq!(orig.len(), recon.len(), "{ctx}: length");
+    for (i, (&a, &b)) in orig.iter().zip(recon).enumerate() {
+        assert!(
+            (a - b).abs() <= bound,
+            "{ctx}[{i}]: |{a} - {b}| = {} over bound {bound}",
+            (a - b).abs()
+        );
+    }
+}
+
+#[test]
+fn int8_state_codec_survives_adversarial_vectors() {
+    // All-zero: the zero-guard path — scale 0, reconstruction exactly
+    // zero, no division by zero.
+    let (scale, q) = quantize_vec_i8(&[0.0; 16]);
+    assert_eq!(scale, 0.0);
+    assert!(q.iter().all(|&x| x == 0));
+    assert!(dequantize_vec_i8(scale, &q).iter().all(|&x| x == 0.0));
+
+    // Single spike: the spike pins the scale, lands on 127 exactly,
+    // and the zero floor stays exactly zero.
+    let mut spike = vec![0.0f32; 32];
+    spike[7] = 0.75;
+    let (scale, q) = quantize_vec_i8(&spike);
+    assert_eq!(q[7], 127);
+    assert!(q.iter().enumerate().all(|(i, &x)| i == 7 || x == 0));
+    let recon = dequantize_vec_i8(scale, &q);
+    assert!((recon[7] - 0.75).abs() <= 1e-6, "spike recon {}", recon[7]);
+    assert_vec_close_i8(&spike, &recon, "spike");
+
+    // Saturated rails: every element at ±1 maps to ±127 and back with
+    // only f32 rounding error, signs intact.
+    let rails: Vec<f32> =
+        (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let (scale, q) = quantize_vec_i8(&rails);
+    assert!(q.iter().all(|&x| x == 127 || x == -127));
+    let recon = dequantize_vec_i8(scale, &q);
+    for (a, b) in rails.iter().zip(&recon) {
+        assert!((a - b).abs() <= 1e-6);
+        assert_eq!(a.signum(), b.signum());
+    }
+
+    // Wide dynamic range: values under half a step collapse to zero —
+    // but never drift beyond the half-step bound — while the extremes
+    // hold the rails.
+    let wide = vec![2.0f32, 1e-4, -1e-4, 0.5, -0.25, 3e-3, 0.0, -2.0];
+    let (scale, q) = quantize_vec_i8(&wide);
+    let recon = dequantize_vec_i8(scale, &q);
+    assert_eq!(q[0], 127);
+    assert_eq!(q[7], -127);
+    assert_eq!(recon[1], 0.0, "sub-half-step value must collapse to zero");
+    assert_vec_close_i8(&wide, &recon, "wide");
+
+    // Random vectors: the generic half-step bound holds element-wise.
+    let mut rng = Pcg32::seeded(9003);
+    for case in 0..50 {
+        let v: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 0.8)).collect();
+        let (scale, q) = quantize_vec_i8(&v);
+        assert_vec_close_i8(
+            &v,
+            &dequantize_vec_i8(scale, &q),
+            &format!("random {case}"),
+        );
+    }
+}
+
+#[test]
+fn state_codecs_bound_error_on_a_warmed_state() {
+    // Round-trip a genuinely warmed float-engine LmState through both
+    // codecs: the exact codec must reproduce every vector bit for bit,
+    // the int8 codec must stay inside the per-vector half-step bound
+    // on every stored vector while shrinking the image.
+    let lm = common::tiny_lm(9001, 20, 2);
+    let engine = lm.engine(StackEngine::Float, None, QuantizeOptions::default());
+    let mut rng = Pcg32::seeded(9002);
+    let tokens = common::random_tokens(&mut rng, 48);
+    let mut state = engine.new_state();
+    for &t in &tokens {
+        engine.step_token(t, &mut state);
+    }
+    let exact = decode_state(
+        &engine,
+        &encode_state(&engine, &state, SpillCodec::Exact),
+        SpillCodec::Exact,
+    );
+    for (a, b) in state.h.iter().zip(&exact.h) {
+        assert_eq!(a.to_bits(), b.to_bits(), "exact h");
+    }
+    for (a, b) in state.logits.iter().zip(&exact.logits) {
+        assert_eq!(a.to_bits(), b.to_bits(), "exact logits");
+    }
+    for (l, (sa, sb)) in state.layers.iter().zip(&exact.layers).enumerate() {
+        let (LayerState::Float(fa), LayerState::Float(fb)) = (sa, sb) else {
+            panic!("float engine must carry float layer state");
+        };
+        for (a, b) in fa.c.iter().zip(&fb.c) {
+            assert_eq!(a.to_bits(), b.to_bits(), "exact c, layer {l}");
+        }
+        for (a, b) in fa.h.iter().zip(&fb.h) {
+            assert_eq!(a.to_bits(), b.to_bits(), "exact h, layer {l}");
+        }
+    }
+    let coded = encode_state(&engine, &state, SpillCodec::Int8);
+    assert!(
+        2 * coded.len() < engine.state_bytes(),
+        "int8 image ({} B) must be well under half the exact image ({} B)",
+        coded.len(),
+        engine.state_bytes()
+    );
+    let lossy = decode_state(&engine, &coded, SpillCodec::Int8);
+    assert_vec_close_i8(&state.h, &lossy.h, "int8 h");
+    assert_vec_close_i8(&state.logits, &lossy.logits, "int8 logits");
+    for (l, (sa, sb)) in state.layers.iter().zip(&lossy.layers).enumerate() {
+        let (LayerState::Float(fa), LayerState::Float(fb)) = (sa, sb) else {
+            panic!("float engine must carry float layer state");
+        };
+        assert_vec_close_i8(&fa.c, &fb.c, &format!("int8 c, layer {l}"));
+        assert_vec_close_i8(&fa.h, &fb.h, &format!("int8 h, layer {l}"));
+    }
+}
+
+#[test]
+fn spill_quantized_bits_per_char_delta_is_bounded() {
+    // The honest-loss measurement `--spill-quantized` ships with:
+    // hibernate a stream mid-sequence through each codec and measure
+    // the bits/char delta of the continuation against the
+    // never-spilled run. Exact must cost zero bits on every engine;
+    // int8 must cost zero on the integer engine (its layer states are
+    // stored verbatim) and at most 0.2 bits/char on the lossy ones.
+    let lm = common::tiny_lm(9001, 20, 2);
+    let stats = common::calib(&lm, 9005);
+    let mut rng = Pcg32::seeded(9006);
+    let tokens = common::random_tokens(&mut rng, 120);
+    let split = 60usize;
+    let run_tail = |engine: &CharLmEngine, mut state: LmState| -> f64 {
+        let mut nll = 0f64;
+        for (i, &t) in tokens[split..].iter().enumerate() {
+            engine.step_token(t, &mut state);
+            if let Some(&next) = tokens.get(split + i + 1) {
+                nll += nll_bits(&state.logits, next);
+            }
+        }
+        nll
+    };
+    for engine_kind in StackEngine::ALL {
+        let engine =
+            lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+        let mut live = engine.new_state();
+        for &t in &tokens[..split] {
+            engine.step_token(t, &mut live);
+        }
+        // The exact codec doubles as a bit-exact snapshot, so each
+        // continuation starts from the identical warmed state.
+        let exact_copy = decode_state(
+            &engine,
+            &encode_state(&engine, &live, SpillCodec::Exact),
+            SpillCodec::Exact,
+        );
+        let int8_copy = decode_state(
+            &engine,
+            &encode_state(&engine, &live, SpillCodec::Int8),
+            SpillCodec::Int8,
+        );
+        let base = run_tail(&engine, live);
+        let exact_nll = run_tail(&engine, exact_copy);
+        let int8_nll = run_tail(&engine, int8_copy);
+        let label = engine_kind.label();
+        assert_eq!(
+            base.to_bits(),
+            exact_nll.to_bits(),
+            "{label}: exact codec must cost zero bits"
+        );
+        let chars = (tokens.len() - split - 1) as f64;
+        let delta = (int8_nll - base).abs() / chars;
+        if engine_kind == StackEngine::Integer {
+            assert_eq!(
+                base.to_bits(),
+                int8_nll.to_bits(),
+                "integer engine must stay bit-exact under the int8 codec"
+            );
+        } else {
+            assert!(
+                delta <= 0.2,
+                "{label}: {delta} bits/char over the 0.2 budget"
+            );
+        }
+    }
 }

@@ -18,115 +18,73 @@
 //!   drops a session that holds or awaits a lane.
 //!
 //! Everything runs on the deterministic virtual-time shard simulator
-//! (no threads), so failures are replayable.
+//! (no threads), so failures are replayable. Fixtures come from the
+//! shared `common` module with this suite's historical seeds (4321
+//! weights / 4322 calibration), pinned by
+//! `common_builders_match_suite_golden`.
 
-use std::time::Instant;
+mod common;
 
+use common::{
+    assert_shard_session_bit_exact, calib as calib_seeded, random_tokens, session_ids,
+    tiny_lm as tiny_lm_seeded,
+};
 use iqrnn::coordinator::{
     shard_home, simulate_shard_trace, simulate_trace, ContinuousScheduler,
     SchedulerMode, ShardConfig, StreamItem,
 };
-use iqrnn::lstm::{LstmSpec, QuantizeOptions, StackEngine, StackWeights};
-use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
-use iqrnn::tensor::Matrix;
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::{nll_bits, CharLm, VOCAB};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::{RequestTrace, TraceRequest};
+use std::time::Instant;
+
+const WEIGHT_SEED: u64 = 4321;
+const CALIB_SEED: u64 = 4322;
 
 fn tiny_lm(hidden: usize, depth: usize) -> CharLm {
-    let mut rng = Pcg32::seeded(4321);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+    tiny_lm_seeded(WEIGHT_SEED, hidden, depth)
 }
 
 fn calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
-    let mut rng = Pcg32::seeded(4322);
-    let seqs: Vec<Vec<usize>> = (0..4)
-        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-        .collect();
-    lm.calibrate(&seqs)
+    calib_seeded(lm, CALIB_SEED)
 }
 
-fn random_tokens(rng: &mut Pcg32, len: usize) -> Vec<usize> {
-    (0..len).map(|_| rng.below(VOCAB as u32) as usize).collect()
-}
-
-/// Sequential oracle: run a session's chunks alone on the per-token
-/// path, mirroring the scheduler's nll grouping (per-chunk accumulator
-/// folded into the total, so the f64 sums are bit-identical too).
-fn sequential_reference(
-    engine: &CharLmEngine,
-    chunks: &[Vec<usize>],
-) -> (LmState, f64, usize) {
-    let mut state = engine.new_state();
-    let mut total_nll = 0f64;
-    let mut tokens = 0usize;
-    for chunk in chunks {
-        let mut chunk_nll = 0f64;
-        for (t, &tok) in chunk.iter().enumerate() {
-            engine.step_token(tok, &mut state);
-            if let Some(&next) = chunk.get(t + 1) {
-                chunk_nll += nll_bits(&state.logits, next);
-            }
-        }
-        total_nll += chunk_nll;
-        tokens += chunk.len();
+/// Golden pin for the `common` extraction: a private copy of this
+/// suite's original inline builders must match the shared ones bit for
+/// bit, and the suite's canonical generated trace is deterministic.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_tiny_lm(hidden: usize, depth: usize) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        use iqrnn::tensor::Matrix;
+        let mut rng = Pcg32::seeded(4321);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
     }
-    (state, total_nll, tokens)
-}
-
-/// The session's chunk sequence, in arrival order, from a trace.
-fn chunks_of(trace: &RequestTrace, session: u64) -> Vec<Vec<usize>> {
-    trace
-        .requests
-        .iter()
-        .filter(|r| r.id == session)
-        .map(|r| r.tokens.clone())
-        .collect()
-}
-
-/// Find the one worker holding `session`, assert it is exactly one,
-/// and check the session against the sequential oracle bit-for-bit.
-fn assert_shard_session_bit_exact(
-    scheds: &[ContinuousScheduler],
-    trace: &RequestTrace,
-    session: u64,
-    engine: &CharLmEngine,
-    ctx: &str,
-) {
-    let holders: Vec<usize> = scheds
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| s.sessions().get(session).is_some())
-        .map(|(w, _)| w)
-        .collect();
-    assert_eq!(
-        holders.len(),
-        1,
-        "{ctx}: session {session} resident on workers {holders:?} (must be exactly one)"
+    fn golden_calib(lm: &CharLm) -> Vec<iqrnn::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(4322);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    let golden = golden_tiny_lm(20, 2);
+    let shared = tiny_lm(20, 2);
+    common::assert_lms_bit_identical(&golden, &shared, "sharded_serving 20x2");
+    common::assert_calibrations_equivalent(
+        &shared,
+        &calib(&shared),
+        &golden_calib(&golden),
+        "sharded_serving",
     );
-    let s = scheds[holders[0]].sessions().get(session).unwrap();
-    let chunks = chunks_of(trace, session);
-    let (ref_state, ref_nll, ref_tokens) = sequential_reference(engine, &chunks);
-    assert_eq!(s.tokens_seen, ref_tokens, "{ctx}: session {session} tokens");
-    assert_eq!(s.state.h, ref_state.h, "{ctx}: session {session} hidden");
-    assert_eq!(s.state.logits, ref_state.logits, "{ctx}: session {session} logits");
-    assert_eq!(
-        s.nll_bits.to_bits(),
-        ref_nll.to_bits(),
-        "{ctx}: session {session} nll ({} vs {})",
-        s.nll_bits,
-        ref_nll
-    );
-}
-
-fn session_ids(trace: &RequestTrace) -> Vec<u64> {
-    let mut ids: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
-    ids.sort_unstable();
-    ids.dedup();
-    ids
+    let a = RequestTrace::generate(24, 900.0, 10, VOCAB, 31);
+    let b = RequestTrace::generate(24, 900.0, 10, VOCAB, 31);
+    common::assert_traces_identical(&a, &b, "sharded_serving trace 31");
+    assert_eq!(a.requests.len(), 24);
 }
 
 #[test]

@@ -16,22 +16,28 @@
 //!   with bit-exact per-session nll accounting;
 //! * the registry's resident-byte accounting reflects the block-sparse
 //!   compression win.
+//!
+//! The base LM and calibration fixtures come from the shared `common`
+//! module with this suite's historical seeds (421 weights / 422
+//! calibration); pruning layers on top deterministically, pinned by
+//! `common_builders_match_suite_golden`.
 
-use std::time::Instant;
+mod common;
 
 use iqrnn::coordinator::{
     simulate_shard_trace, ContinuousScheduler, ModelRegistry, ModelSpec,
-    Residency, SchedulerMode, ShardConfig, StreamItem,
+    Residency, SchedulerMode, ShardConfig,
 };
-use iqrnn::lstm::{
-    CalibrationStats, LstmSpec, QuantizeOptions, StackEngine, StackWeights,
-};
+use iqrnn::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
 use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, LmState, VOCAB};
 use iqrnn::sparse::{prune_block_structured, BlockSparseI8, SparseMatrixI8};
 use iqrnn::tensor::qmatmul::tail_audit;
 use iqrnn::tensor::Matrix;
 use iqrnn::util::{proptest, Pcg32};
 use iqrnn::workload::synth::RequestTrace;
+
+const WEIGHT_SEED: u64 = 421;
+const CALIB_SEED: u64 = 422;
 
 fn random_sparse_i8(rng: &mut Pcg32, rows: usize, cols: usize, sparsity: f64) -> Matrix<i8> {
     let mut w = Matrix::<i8>::zeros(rows, cols);
@@ -46,28 +52,22 @@ fn random_sparse_i8(rng: &mut Pcg32, rows: usize, cols: usize, sparsity: f64) ->
 /// A tiny LM whose every weight matrix is block-structure pruned to
 /// `sparsity` before quantization, with a deliberately ragged hidden
 /// width (33 = 32 + 1: worst-case K and row remainders everywhere).
+/// Pruning consumes no randomness, so layering it on the shared builder
+/// reproduces the historical weights bit for bit.
 fn pruned_lm(hidden: usize, depth: usize, sparsity: f64) -> CharLm {
-    let mut rng = Pcg32::seeded(421);
-    let spec = LstmSpec::plain(VOCAB, hidden);
-    let mut stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
-    for layer in &mut stack_weights.layers {
+    let mut lm = common::tiny_lm(WEIGHT_SEED, hidden, depth);
+    for layer in &mut lm.stack_weights.layers {
         for g in layer.gates.iter_mut().flatten() {
             prune_block_structured(&mut g.w, sparsity);
             prune_block_structured(&mut g.r, sparsity);
         }
     }
-    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
-    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
-    prune_block_structured(&mut out_w, sparsity);
-    CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+    prune_block_structured(&mut lm.out_w, sparsity);
+    lm
 }
 
 fn calib(lm: &CharLm) -> Vec<CalibrationStats> {
-    let mut rng = Pcg32::seeded(422);
-    let seqs: Vec<Vec<usize>> = (0..4)
-        .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
-        .collect();
-    lm.calibrate(&seqs)
+    common::calib(lm, CALIB_SEED)
 }
 
 fn sparse_opts() -> QuantizeOptions {
@@ -77,6 +77,53 @@ fn sparse_opts() -> QuantizeOptions {
 fn sparse_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
     let stats = if kind == StackEngine::Integer { Some(calib(lm)) } else { None };
     lm.engine(kind, stats.as_deref(), sparse_opts())
+}
+
+/// Golden pin for the `common` extraction: a private copy of this
+/// suite's original inline `pruned_lm` (which built the base model and
+/// interleaved pruning itself) must match the composition over the
+/// shared builder bit for bit, plus the canonical generated trace.
+#[test]
+fn common_builders_match_suite_golden() {
+    fn golden_pruned_lm(hidden: usize, depth: usize, sparsity: f64) -> CharLm {
+        use iqrnn::lstm::{LstmSpec, StackWeights};
+        let mut rng = Pcg32::seeded(421);
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let mut stack_weights = StackWeights::random(VOCAB, spec, depth, &mut rng);
+        for layer in &mut stack_weights.layers {
+            for g in layer.gates.iter_mut().flatten() {
+                prune_block_structured(&mut g.w, sparsity);
+                prune_block_structured(&mut g.r, sparsity);
+            }
+        }
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        prune_block_structured(&mut out_w, sparsity);
+        CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth }
+    }
+    fn golden_calib(lm: &CharLm) -> Vec<CalibrationStats> {
+        let mut rng = Pcg32::seeded(422);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+    for &sparsity in &[0.0, 0.75] {
+        let golden = golden_pruned_lm(33, 1, sparsity);
+        let shared = pruned_lm(33, 1, sparsity);
+        let ctx = format!("sparse_serving sparsity {sparsity}");
+        common::assert_lms_bit_identical(&golden, &shared, &ctx);
+        common::assert_calibrations_equivalent(
+            &shared,
+            &calib(&shared),
+            &golden_calib(&golden),
+            &ctx,
+        );
+    }
+    let a = RequestTrace::generate_staggered(9, 4.0, 18, VOCAB, 31);
+    let b = RequestTrace::generate_staggered(9, 4.0, 18, VOCAB, 31);
+    common::assert_traces_identical(&a, &b, "sparse_serving trace 31");
+    assert_eq!(a.requests.len(), 9);
 }
 
 /// The tentpole equivalence, property-tested: on random shapes,
@@ -207,12 +254,7 @@ fn pruned_batched_serving_path_is_tail_free() {
     let mut sched = ContinuousScheduler::new(&engine, 7);
     tail_audit::reset();
     for s in 0..7u64 {
-        sched.offer(StreamItem {
-            model: 0,
-            session: s,
-            tokens: vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize],
-            submitted: Instant::now(),
-        });
+        sched.offer(common::item(s, vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize]));
     }
     let mut widths = std::collections::HashSet::new();
     while sched.has_live_work() {
