@@ -245,7 +245,7 @@ fn sparsity_sweep() {
         let stats = lm.calibrate(&calib);
         let opts = QuantizeOptions {
             sparse_weights: sparsity > 0.0,
-            naive_layernorm: false,
+            ..Default::default()
         };
         let engine = lm.engine(StackEngine::Integer, Some(&stats), opts);
 

@@ -788,6 +788,142 @@ fn main() {
         }
     }
 
+    // Int4 nibble-weight sweep: the dense int8 panel kernel vs the
+    // nibble-packed int4 kernel at matched shapes (throughput + packed
+    // bytes), then the Table-1-style accuracy view — float vs integer
+    // int8 vs integer int4 bits/char with the weight footprint each
+    // pays. Runs in quick mode too so CI emits the artifact on every
+    // PR. Emits BENCH_int4.json.
+    {
+        use iqrnn::lstm::WeightBits;
+        use iqrnn::quant::{quantize_symmetric_i4, quantize_symmetric_i8};
+        use iqrnn::tensor::{PackedWeightsI4, PackedWeightsI8};
+
+        let batch = 8usize;
+        let reps = if quick { 3 } else { 11 };
+        let inner = if quick { 20usize } else { 200 };
+        let shapes: &[(usize, usize)] =
+            if quick { &[(64, 64)] } else { &[(256, 256), (512, 512)] };
+        println!("\n== int4 nibble kernel sweep (batch {batch}) ==");
+        println!(
+            "{:<10} {:>14} {:>14} {:>9} {:>11} {:>11}",
+            "shape", "int8 tok/s", "int4 tok/s", "int4/int8", "int8 bytes", "int4 bytes"
+        );
+        let mut kernel_entries: Vec<String> = Vec::new();
+        for &(rows, cols) in shapes {
+            let mut wf = Matrix::<f32>::zeros(rows, cols);
+            rng.fill_uniform_f32(&mut wf.data, -1.0, 1.0);
+            let (w8, _) = quantize_symmetric_i8(&wf);
+            let (w4, _) = quantize_symmetric_i4(&wf);
+            let packed8 = PackedWeightsI8::pack(w8);
+            let packed4 = PackedWeightsI4::pack(&w4);
+            let mut x = Matrix::<i8>::zeros(batch, cols);
+            for v in &mut x.data {
+                *v = rng.range_i32(-128, 127) as i8;
+            }
+            let mut out = Matrix::<i32>::zeros(batch, rows);
+            let t8 = bench(1, reps, || {
+                for _ in 0..inner {
+                    packed8.gemm(&x, &[], &mut out);
+                }
+                out.at(0, 0)
+            })
+            .median_secs();
+            let t4 = bench(1, reps, || {
+                for _ in 0..inner {
+                    packed4.gemm(&x, &[], &mut out);
+                }
+                out.at(0, 0)
+            })
+            .median_secs();
+            let toks = (batch * inner) as f64;
+            let (tps8, tps4) = (toks / t8, toks / t4);
+            println!(
+                "{:<10} {:>14.0} {:>14.0} {:>8.2}x {:>11} {:>11}",
+                format!("{rows}x{cols}"),
+                tps8,
+                tps4,
+                tps4 / tps8,
+                packed8.storage_bytes(),
+                packed4.storage_bytes()
+            );
+            kernel_entries.push(format!(
+                "    {{\"rows\": {}, \"cols\": {}, \"int8_tokens_per_sec\": {:.1}, \
+                 \"int4_tokens_per_sec\": {:.1}, \"int8_bytes\": {}, \"int4_bytes\": {}}}",
+                rows,
+                cols,
+                tps8,
+                tps4,
+                packed8.storage_bytes(),
+                packed4.storage_bytes()
+            ));
+        }
+
+        // Table-1-style accuracy: same model, same calibration, weight
+        // bits swept. Synthetic weights and text, so the absolute
+        // bits/char is not a corpus number — the tracked quantity is
+        // the int4-vs-int8 delta at the halved footprint.
+        let mut rng4 = Pcg32::seeded(23);
+        let hidden = if quick { 40usize } else { 96 };
+        let spec = LstmSpec::plain(VOCAB, hidden);
+        let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng4);
+        let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+        rng4.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+        let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 };
+        let calib: Vec<Vec<usize>> = (0..if quick { 3 } else { 6 })
+            .map(|_| (0..48).map(|_| rng4.below(VOCAB as u32) as usize).collect())
+            .collect();
+        let stats = lm.calibrate(&calib);
+        let eval: Vec<Vec<usize>> = (0..if quick { 4 } else { 12 })
+            .map(|_| (0..64).map(|_| rng4.below(VOCAB as u32) as usize).collect())
+            .collect();
+        println!("\n== int4 accuracy/size (Table-1 style, {hidden}h synthetic) ==");
+        println!("{:<10} {:<6} {:>10} {:>12}", "engine", "bits", "bits/char", "weight bytes");
+        let mut model_entries: Vec<String> = Vec::new();
+        let rows: &[(StackEngine, WeightBits)] = &[
+            (StackEngine::Float, WeightBits::Int8),
+            (StackEngine::Integer, WeightBits::Int8),
+            (StackEngine::Integer, WeightBits::Int4),
+        ];
+        for &(engine_kind, bits) in rows {
+            let opts = QuantizeOptions { weight_bits: bits, ..Default::default() };
+            let e = lm.engine(engine_kind, Some(&stats), opts);
+            let bpc: f64 = eval.iter().map(|s| e.bits_per_char(s)).sum::<f64>()
+                / eval.len() as f64;
+            let label = if engine_kind == StackEngine::Float {
+                "fp32".to_string()
+            } else {
+                bits.label().to_string()
+            };
+            println!(
+                "{:<10} {:<6} {:>10.4} {:>12}",
+                engine_kind.label(),
+                label,
+                bpc,
+                e.weight_bytes()
+            );
+            model_entries.push(format!(
+                "    {{\"engine\": \"{}\", \"weight_bits\": \"{}\", \
+                 \"bits_per_char\": {:.4}, \"weight_bytes\": {}}}",
+                engine_kind.label(),
+                label,
+                bpc,
+                e.weight_bytes()
+            ));
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"int4_sweep\",\n  \"config\": {{\"batch\": {batch}, \
+             \"hidden\": {hidden}, \"depth\": 1}},\n  \"kernel\": [\n{}\n  ],\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            kernel_entries.join(",\n"),
+            model_entries.join(",\n")
+        );
+        match std::fs::write("BENCH_int4.json", &json) {
+            Ok(()) => println!("wrote BENCH_int4.json"),
+            Err(e) => eprintln!("could not write BENCH_int4.json: {e}"),
+        }
+    }
+
     // §6 ablation: folded vs unfolded zero-point handling in the gate
     // matmul inner loop.
     println!("\n== §6 ablation: zero-point folding in the int8 matvec ==");

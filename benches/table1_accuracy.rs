@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         for engine in StackEngine::ALL {
             let opts = QuantizeOptions {
                 sparse_weights: sparsity > 0.0 && engine == StackEngine::Integer,
-                naive_layernorm: false,
+                ..Default::default()
             };
             let e = lm.engine(engine, Some(&stats), opts);
             let size_mb = e.weight_bytes() as f64 / 1e6;

@@ -77,6 +77,9 @@ pub struct ModelLoad {
     pub name: String,
     /// Engine label ("Float"/"Hybrid"/"Integer").
     pub engine: &'static str,
+    /// Weight bit-width label ("int8"/"int4") — int4 after a
+    /// byte-pressure demotion or an explicit `--weight-bits 4`.
+    pub weight_bits: &'static str,
     /// Workers holding this model's weights.
     pub resident_workers: usize,
     /// Packed weight bytes of one replica.
@@ -359,13 +362,14 @@ impl ServingReport {
     pub fn print_models(&self) {
         for m in &self.per_model {
             println!(
-                "    model {:<2} {:<12} {:<8} workers={:<2} weights={:<9}B \
+                "    model {:<2} {:<12} {:<8} {:<5} workers={:<2} weights={:<9}B \
                  ({}B resident) lanes={:<7} occ={:.2} peak={} steals={} evict={} \
                  evictI={} sessions={} ({}B state) cold={} ({}B, spills={} \
                  restores={})",
                 m.model,
                 m.name,
                 m.engine,
+                m.weight_bits,
                 m.resident_workers,
                 m.weight_bytes,
                 m.resident_weight_bytes,

@@ -32,7 +32,7 @@
 //! [`LmBatchState`]: crate::model::lm::LmBatchState
 //! [`ServingReport`]: super::metrics::ServingReport
 
-use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
+use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine, WeightBits};
 use crate::model::lm::{CharLm, CharLmEngine};
 
 /// Identifier of a registered model: the dense index assigned by
@@ -230,8 +230,17 @@ impl<'a> ModelRegistry<'a> {
     /// the budget must cover at least
     /// `max_lanes * max_state_bytes()` for the resident-state bound to
     /// be enforceable on every worker.
+    ///
+    /// Panics on an empty registry: a zero budget floor would silently
+    /// disable the resident-state bound, so an unregistered pool is a
+    /// configuration bug, not a zero.
     pub fn max_state_bytes(&self) -> usize {
-        self.models.iter().map(|r| r.state_bytes).max().unwrap_or(0)
+        assert!(
+            !self.models.is_empty(),
+            "max_state_bytes on an empty registry: register models before \
+             sizing the session budget"
+        );
+        self.models.iter().map(|r| r.state_bytes).max().expect("non-empty")
     }
 
     /// Total packed weight bytes resident across the pool: each
@@ -245,6 +254,85 @@ impl<'a> ModelRegistry<'a> {
                     * self.resident_workers(m as ModelId, workers).len()
             })
             .sum()
+    }
+
+    /// Weight bit-width of a model's quantization recipe.
+    pub fn weight_bits(&self, model: ModelId) -> WeightBits {
+        self.models[model as usize].spec.opts.weight_bits
+    }
+
+    /// Whether [`Self::demote_to_int4`] can re-pack this model: the
+    /// engine must actually quantize weights (hybrid or integer —
+    /// weight bits are a no-op for the float engine), the model must
+    /// not be block-sparse (the BSR kernel is int8-only), and it must
+    /// still be at int8.
+    pub fn can_demote_to_int4(&self, model: ModelId) -> bool {
+        let spec = &self.models[model as usize].spec;
+        spec.engine != StackEngine::Float
+            && !spec.opts.sparse_weights
+            && spec.opts.weight_bits == WeightBits::Int8
+    }
+
+    /// Re-pack one registered model's weights to int4 nibble panels —
+    /// the byte-pressure relief valve that runs *before* eviction:
+    /// halving a cold model's resident weights keeps it servable
+    /// everywhere it was resident, where eviction would force a
+    /// cold-start re-quantization on the next request.
+    ///
+    /// Re-probes the engine under the demoted recipe and refreshes the
+    /// byte accounting. Pre-serving only: the registry is shared
+    /// immutably across worker threads once serving starts, so demotion
+    /// happens at load/planning time (`&mut self` enforces this).
+    ///
+    /// Panics when the model is not demotable ([`Self::can_demote_to_int4`])
+    /// — silently leaving a float or sparse model at full size would
+    /// defeat the budget arithmetic the caller is doing.
+    pub fn demote_to_int4(&mut self, model: ModelId) {
+        assert!(
+            self.can_demote_to_int4(model),
+            "model {model} ({}) is not demotable to int4: engine={:?} sparse={} bits={}",
+            self.name(model),
+            self.engine_kind(model),
+            self.models[model as usize].spec.opts.sparse_weights,
+            self.weight_bits(model).label(),
+        );
+        let r = &mut self.models[model as usize];
+        r.spec.opts.weight_bits = WeightBits::Int4;
+        let probe = r.spec.lm.engine(r.spec.engine, r.spec.stats, r.spec.opts);
+        r.weight_bytes = probe.weight_bytes();
+        r.state_bytes = probe.state_bytes();
+    }
+
+    /// Demote cold models to int4 until the pool-wide resident weight
+    /// bytes fit `budget_bytes`, coldest first: fewest resident workers
+    /// is the coldness proxy (a model pinned to one worker is the tail
+    /// of the popularity curve), ties broken by largest resident
+    /// footprint (biggest relief per demotion), then by id for
+    /// determinism. Returns the demoted ids in demotion order; stops
+    /// early once the budget fits or no demotable model remains — the
+    /// caller decides whether a still-over-budget registry escalates to
+    /// eviction.
+    pub fn enforce_weight_budget(
+        &mut self,
+        budget_bytes: usize,
+        workers: usize,
+    ) -> Vec<ModelId> {
+        let mut demoted = Vec::new();
+        while self.total_resident_weight_bytes(workers) > budget_bytes {
+            let mut candidates: Vec<(usize, usize, ModelId)> = (0..self.models.len())
+                .filter(|&m| self.can_demote_to_int4(m as ModelId))
+                .map(|m| {
+                    let replicas = self.resident_workers(m as ModelId, workers).len();
+                    (replicas, self.weight_bytes(m as ModelId) * replicas, m as ModelId)
+                })
+                .collect();
+            candidates
+                .sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2)));
+            let Some(&(_, _, pick)) = candidates.first() else { break };
+            self.demote_to_int4(pick);
+            demoted.push(pick);
+        }
+        demoted
     }
 }
 
@@ -379,5 +467,105 @@ mod tests {
             opts: QuantizeOptions::default(),
             residency: Residency::All,
         });
+    }
+
+    fn calib(lm: &CharLm, seed: u64) -> Vec<crate::lstm::CalibrationStats> {
+        let mut rng = Pcg32::seeded(seed);
+        let seqs: Vec<Vec<usize>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(VOCAB as u32) as usize).collect())
+            .collect();
+        lm.calibrate(&seqs)
+    }
+
+    #[test]
+    fn demotion_halves_integer_model_bytes() {
+        let a = tiny_lm(6, 32);
+        let stats = calib(&a, 7);
+        let mut reg = ModelRegistry::new();
+        let id = reg.register(ModelSpec {
+            name: "demotable".into(),
+            lm: &a,
+            engine: StackEngine::Integer,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        let before = reg.weight_bytes(id);
+        assert!(reg.can_demote_to_int4(id));
+        assert_eq!(reg.weight_bits(id), WeightBits::Int8);
+        reg.demote_to_int4(id);
+        assert_eq!(reg.weight_bits(id), WeightBits::Int4);
+        let after = reg.weight_bytes(id);
+        // Acceptance bar: int4 residency at most 55% of the int8 packing.
+        assert!(
+            after as f64 <= before as f64 * 0.55,
+            "int4 {after}B vs int8 {before}B"
+        );
+        // Demotion changes weights, not per-stream state.
+        assert!(reg.state_bytes(id) > 0);
+        // Once at int4 a second demotion is a caller bug.
+        assert!(!reg.can_demote_to_int4(id));
+    }
+
+    #[test]
+    #[should_panic(expected = "not demotable to int4")]
+    fn demoting_float_model_panics() {
+        let a = tiny_lm(8, 16);
+        let mut reg = ModelRegistry::new();
+        let id = reg.register(ModelSpec {
+            name: "float".into(),
+            lm: &a,
+            engine: StackEngine::Float,
+            stats: None,
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        reg.demote_to_int4(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty registry")]
+    fn max_state_bytes_on_empty_registry_panics() {
+        ModelRegistry::new().max_state_bytes();
+    }
+
+    #[test]
+    fn weight_budget_demotes_coldest_first_and_stops_when_fit() {
+        let a = tiny_lm(9, 32);
+        let stats = calib(&a, 10);
+        let mut reg = ModelRegistry::new();
+        // Hot: resident everywhere. Cold: pinned to one worker.
+        let hot = reg.register(ModelSpec {
+            name: "hot".into(),
+            lm: &a,
+            engine: StackEngine::Integer,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: Residency::All,
+        });
+        let cold = reg.register(ModelSpec {
+            name: "cold".into(),
+            lm: &a,
+            engine: StackEngine::Integer,
+            stats: Some(&stats),
+            opts: QuantizeOptions::default(),
+            residency: Residency::Count(1),
+        });
+        let workers = 4;
+        let total = reg.total_resident_weight_bytes(workers);
+        // A budget just below the current total: demoting the cold
+        // model alone must satisfy it, and the hot model must be left
+        // untouched.
+        let budget = total - reg.weight_bytes(cold) / 4;
+        let demoted = reg.enforce_weight_budget(budget, workers);
+        assert_eq!(demoted, vec![cold]);
+        assert_eq!(reg.weight_bits(cold), WeightBits::Int4);
+        assert_eq!(reg.weight_bits(hot), WeightBits::Int8);
+        assert!(reg.total_resident_weight_bytes(workers) <= budget);
+        // An impossible budget demotes everything demotable, then
+        // stops rather than looping.
+        let demoted = reg.enforce_weight_budget(0, workers);
+        assert_eq!(demoted, vec![hot]);
+        assert!(reg.total_resident_weight_bytes(workers) > 0);
     }
 }

@@ -492,6 +492,7 @@ impl<'a> Server<'a> {
                     model: mid,
                     name: self.registry.name(mid).to_string(),
                     engine: self.registry.engine_kind(mid).label(),
+                    weight_bits: self.registry.weight_bits(mid).label(),
                     resident_workers,
                     weight_bytes,
                     resident_weight_bytes: weight_bytes * resident_workers,

@@ -12,21 +12,23 @@
 
 use crate::quant::params::SymmetricQuant;
 use crate::quant::recipe::Gate;
-use crate::quant::quantize_symmetric_i8;
-use crate::tensor::qmatmul::PackedWeightsI8;
+use crate::quant::{quantize_symmetric_i4, quantize_symmetric_i8};
 use crate::tensor::Matrix;
 use super::float_cell::{FloatBatchState, FloatState};
+use super::integer_cell::WeightMat;
 use super::layernorm::layernorm_f32;
+use super::quantize::WeightBits;
 use super::spec::{gate_index, LstmSpec, LstmWeights};
 
-/// One gate's quantized weights, pre-packed at build time for the
-/// register-tiled batched GEMM (the sequential matvec path reads the
-/// retained row-major form).
+/// One gate's quantized weights, packed at build time into the storage
+/// form the register-tiled batched GEMM executes — int8 panels by
+/// default, nibble-packed int4 panels under [`WeightBits::Int4`] (the
+/// sequential matvec path reads the same storage).
 #[derive(Debug, Clone)]
 struct HybridGate {
-    w: PackedWeightsI8,
+    w: WeightMat,
     w_scale: f64,
-    r: PackedWeightsI8,
+    r: WeightMat,
     r_scale: f64,
     bias: Vec<f32>,
     peephole: Option<Vec<f32>>,
@@ -38,7 +40,7 @@ struct HybridGate {
 pub struct HybridLstm {
     pub spec: LstmSpec,
     gates: [Option<HybridGate>; 4],
-    w_proj: Option<(PackedWeightsI8, f64)>,
+    w_proj: Option<(WeightMat, f64)>,
     b_proj: Option<Vec<f32>>,
     scratch: std::cell::RefCell<Scratch>,
     batch_scratch: std::cell::RefCell<BatchScratch>,
@@ -121,19 +123,44 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// Quantize one float weight matrix into the hybrid storage form at
+/// the requested bit width.
+fn hybrid_quantize(w: &Matrix<f32>, bits: WeightBits) -> (WeightMat, f64) {
+    match bits {
+        WeightBits::Int8 => {
+            let (q, s) = quantize_symmetric_i8(w);
+            (WeightMat::dense(q), s.scale)
+        }
+        WeightBits::Int4 => {
+            let (q, s) = quantize_symmetric_i4(w);
+            (WeightMat::int4(&q), s.scale)
+        }
+    }
+}
+
 impl HybridLstm {
-    /// Quantize float master weights into the hybrid form.
+    /// Quantize float master weights into the hybrid form (int8
+    /// weights, the Table-1 middle column).
     pub fn from_weights(weights: &LstmWeights) -> Self {
+        Self::from_weights_bits(weights, WeightBits::Int8)
+    }
+
+    /// Quantize float master weights into the hybrid form at an
+    /// explicit weight bit width: [`WeightBits::Int4`] nibble-packs the
+    /// gate/projection matrices (half the resident bytes) with the
+    /// symmetric `max(|T|)/7` scale; activations stay dynamically
+    /// quantized int8 either way.
+    pub fn from_weights_bits(weights: &LstmWeights, bits: WeightBits) -> Self {
         let spec = weights.spec;
         let mk = |g: Gate| -> Option<HybridGate> {
             weights.gate_opt(g).map(|gw| {
-                let (w, wq) = quantize_symmetric_i8(&gw.w);
-                let (r, rq) = quantize_symmetric_i8(&gw.r);
+                let (w, w_scale) = hybrid_quantize(&gw.w, bits);
+                let (r, r_scale) = hybrid_quantize(&gw.r, bits);
                 HybridGate {
-                    w: PackedWeightsI8::pack(w),
-                    w_scale: wq.scale,
-                    r: PackedWeightsI8::pack(r),
-                    r_scale: rq.scale,
+                    w,
+                    w_scale,
+                    r,
+                    r_scale,
                     bias: gw.bias.clone(),
                     peephole: gw.peephole.clone(),
                     ln_weight: gw.ln_weight.clone(),
@@ -141,10 +168,7 @@ impl HybridLstm {
             })
         };
         let gates = [mk(Gate::Input), mk(Gate::Forget), mk(Gate::Update), mk(Gate::Output)];
-        let w_proj = weights.w_proj.as_ref().map(|w| {
-            let (q, s) = quantize_symmetric_i8(w);
-            (PackedWeightsI8::pack(q), s.scale)
-        });
+        let w_proj = weights.w_proj.as_ref().map(|w| hybrid_quantize(w, bits));
         let scratch = Scratch {
             qx: vec![0; spec.n_input],
             qh: vec![0; spec.n_output],
@@ -307,14 +331,14 @@ impl HybridLstm {
                 continue;
             }
             let hg = self.gate(g);
-            hg.w.gemm(qx, &[], acc_cell);
+            hg.w.matmul_batch(qx, &[], acc_cell);
             for b in 0..batch {
                 let kx = (hg.w_scale * sx[b]) as f32;
                 for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
                     *o = a as f32 * kx;
                 }
             }
-            hg.r.gemm(qh, &[], acc_cell);
+            hg.r.matmul_batch(qh, &[], acc_cell);
             for b in 0..batch {
                 let kh = (hg.r_scale * sh[b]) as f32;
                 for (o, &a) in pre[idx].row_mut(b).iter_mut().zip(acc_cell.row(b)) {
@@ -376,7 +400,7 @@ impl HybridLstm {
                 let sm = dynamic_quantize(m.row(b), qm.row_mut(b));
                 sx[b] = sm; // reuse the lane-scale scratch for `m`
             }
-            w_proj.gemm(qm, &[], acc_out);
+            w_proj.matmul_batch(qm, &[], acc_out);
             for b in 0..batch {
                 let k = (wp_scale * sx[b]) as f32;
                 for (h, &a) in state.h.row_mut(b).iter_mut().zip(acc_out.row(b)) {
@@ -481,5 +505,49 @@ mod tests {
         let float_bytes = w.param_count() * 4;
         let ratio = float_bytes as f64 / hybrid.weight_bytes() as f64;
         assert!(ratio > 3.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn int4_tracks_float_with_looser_tolerance() {
+        // The int4 hybrid trades accuracy for bytes: it must still
+        // track the float reference, just with a wider envelope than
+        // the int8 engine's 0.05.
+        let mut rng = Pcg32::seeded(1235);
+        let spec = LstmSpec::plain(12, 24);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = crate::lstm::float_cell::FloatLstm::new(w.clone());
+        let hybrid = HybridLstm::from_weights_bits(&w, WeightBits::Int4);
+        let mut fs = FloatState::zeros(&spec);
+        let mut hs = FloatState::zeros(&spec);
+        let xs: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..12).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let fo = float.run_sequence(&xs, &mut fs);
+        let ho = hybrid.run_sequence(&xs, &mut hs);
+        let mut worst = 0f64;
+        for (a, b) in fo.iter().zip(&ho) {
+            for (&x, &y) in a.iter().zip(b) {
+                worst = worst.max(f64::from((x - y).abs()));
+            }
+        }
+        assert!(worst < 0.5, "int4 worst output divergence {worst}");
+    }
+
+    #[test]
+    fn int4_weight_bytes_at_most_55_percent_of_int8() {
+        let mut rng = Pcg32::seeded(6);
+        let spec = LstmSpec::plain(128, 256);
+        let w = LstmWeights::random(spec, &mut rng);
+        let int8 = HybridLstm::from_weights(&w);
+        let int4 = HybridLstm::from_weights_bits(&w, WeightBits::Int4);
+        let ratio = int4.weight_bytes() as f64 / int8.weight_bytes() as f64;
+        assert!(ratio <= 0.55, "int4/int8 byte ratio {ratio}");
+        // And float/int4 lands near 8x.
+        let float_bytes = w.param_count() * 4;
+        assert!(
+            float_bytes as f64 / int4.weight_bytes() as f64 > 6.0,
+            "float/int4 ratio {}",
+            float_bytes as f64 / int4.weight_bytes() as f64
+        );
     }
 }

@@ -23,22 +23,26 @@ use crate::nonlin::{sigmoid_q15_slice, tanh_q15_slice};
 use crate::quant::params::AsymmetricQuant;
 use crate::quant::recipe::Gate;
 use crate::sparse::BlockSparseI8;
-use crate::tensor::qmatmul::PackedWeightsI8;
+use crate::tensor::qmatmul::{PackedWeightsI4, PackedWeightsI8};
 use crate::tensor::Matrix;
 use super::layernorm::IntegerLayerNorm;
 use super::spec::{gate_index, LstmSpec};
 
-/// Dense or block-sparse weight matrix (the sparse rows of Table 1).
+/// Dense, block-sparse, or nibble-packed weight matrix (the sparse and
+/// sub-8-bit rows of Table 1).
 ///
-/// Dense weights are held pre-packed ([`PackedWeightsI8`]); pruned
+/// Dense int8 weights are held pre-packed ([`PackedWeightsI8`]); pruned
 /// weights are re-blocked into the same MR × K_BLOCK tile geometry
-/// ([`BlockSparseI8`]) with all-zero blocks dropped. Either way the
-/// conversion happens once, at quantization time, so the batched step
-/// never packs, gathers, or hits scalar remainder tails.
+/// ([`BlockSparseI8`]) with all-zero blocks dropped; int4 weights are
+/// nibble-packed into the same panel geometry at half the bytes
+/// ([`PackedWeightsI4`]) and unpacked to i8 in-register by the GEMM.
+/// Every conversion happens once, at quantization time, so the batched
+/// step never packs, gathers, or hits scalar remainder tails.
 #[derive(Debug, Clone)]
 pub enum WeightMat {
     Dense(PackedWeightsI8),
     Sparse(BlockSparseI8),
+    Int4(PackedWeightsI4),
 }
 
 impl WeightMat {
@@ -53,10 +57,19 @@ impl WeightMat {
         WeightMat::Sparse(BlockSparseI8::from_dense(&m))
     }
 
+    /// Wrap an int4-range matrix (every value in `-8..=7`, which the
+    /// symmetric −7..7 quantization rule guarantees), nibble-packing it
+    /// into the half-width panel format. Values outside the int4 range
+    /// panic at pack time.
+    pub fn int4(m: &Matrix<i8>) -> Self {
+        WeightMat::Int4(PackedWeightsI4::pack(m))
+    }
+
     pub fn rows(&self) -> usize {
         match self {
             WeightMat::Dense(m) => m.rows(),
             WeightMat::Sparse(s) => s.rows,
+            WeightMat::Int4(m) => m.rows(),
         }
     }
 
@@ -64,6 +77,7 @@ impl WeightMat {
         match self {
             WeightMat::Dense(m) => m.cols(),
             WeightMat::Sparse(s) => s.cols,
+            WeightMat::Int4(m) => m.cols(),
         }
     }
 
@@ -73,12 +87,14 @@ impl WeightMat {
         match self {
             WeightMat::Dense(m) => m.matvec(x, bias, out),
             WeightMat::Sparse(s) => s.matvec_i32(x, bias, out),
+            WeightMat::Int4(m) => m.matvec(x, bias, out),
         }
     }
 
     /// Batched `out[b,r] = bias[r] + Σ_c w[r,c] x[b,c]`: dense weights
     /// go through the packed register-tiled GEMM, block-sparse weights
-    /// through the block-list variant of the same kernel — both run
+    /// through the block-list variant, int4 weights through the
+    /// nibble-unpacking variant of the same kernel — all three run
     /// zero scalar tails for any batch or depth and are bit-exact with
     /// [`Self::matvec`] per lane.
     #[inline]
@@ -86,15 +102,18 @@ impl WeightMat {
         match self {
             WeightMat::Dense(m) => m.gemm(x, bias, out),
             WeightMat::Sparse(s) => s.gemm(x, bias, out),
+            WeightMat::Int4(m) => m.gemm(x, bias, out),
         }
     }
 
     /// Storage bytes of the weight data (logical — the dense packing
-    /// copy is an execution detail, not model size).
+    /// copy is an execution detail, not model size; int4 counts its
+    /// nibble bytes, half the int8 figure).
     pub fn storage_bytes(&self) -> usize {
         match self {
             WeightMat::Dense(m) => m.storage_bytes(),
             WeightMat::Sparse(s) => s.storage_bytes(),
+            WeightMat::Int4(m) => m.storage_bytes(),
         }
     }
 }
@@ -811,7 +830,9 @@ impl IntegerLstm {
 mod tests {
     use super::*;
     use crate::lstm::float_cell::{FloatLstm, FloatState};
-    use crate::lstm::quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
+    use crate::lstm::quantize::{
+        quantize_lstm, CalibrationStats, QuantizeOptions, WeightBits,
+    };
     use crate::lstm::spec::LstmWeights;
     use crate::quant::recipe::VariantFlags;
     use crate::sparse::prune_magnitude;
@@ -827,9 +848,16 @@ mod tests {
             .collect()
     }
 
-    /// Calibrate + quantize + compare against float on held-out data.
-    /// Returns the mean absolute output divergence.
-    fn divergence(flags: VariantFlags, sparse: bool, seed: u64) -> f64 {
+    /// Calibrate + quantize with explicit options + compare against
+    /// float on held-out data. Returns the mean absolute output
+    /// divergence. `prune` magnitude-prunes the gate weights first
+    /// (the sparse-storage scenario).
+    fn divergence_opts(
+        flags: VariantFlags,
+        prune: bool,
+        opts: QuantizeOptions,
+        seed: u64,
+    ) -> f64 {
         let mut rng = Pcg32::seeded(seed);
         let mut spec = crate::lstm::spec::LstmSpec::plain(12, 32);
         spec.flags = flags;
@@ -837,7 +865,7 @@ mod tests {
             spec.n_output = 20;
         }
         let mut w = LstmWeights::random(spec, &mut rng);
-        if sparse {
+        if prune {
             for g in w.gates.iter_mut().flatten() {
                 prune_magnitude(&mut g.w, 0.5);
                 prune_magnitude(&mut g.r, 0.5);
@@ -846,11 +874,7 @@ mod tests {
         let float = FloatLstm::new(w.clone());
         let calib = make_seqs(&mut rng, 8, 24, 12);
         let stats = CalibrationStats::collect(&float, &calib);
-        let integer = quantize_lstm(
-            &w,
-            &stats,
-            QuantizeOptions { sparse_weights: sparse, naive_layernorm: false },
-        );
+        let integer = quantize_lstm(&w, &stats, opts);
 
         let eval = make_seqs(&mut rng, 4, 32, 12);
         let mut total = 0f64;
@@ -868,6 +892,16 @@ mod tests {
             }
         }
         total / count as f64
+    }
+
+    /// The int8 shorthand the pre-int4 tests use.
+    fn divergence(flags: VariantFlags, sparse: bool, seed: u64) -> f64 {
+        divergence_opts(
+            flags,
+            sparse,
+            QuantizeOptions { sparse_weights: sparse, ..Default::default() },
+            seed,
+        )
     }
 
     #[test]
@@ -898,6 +932,65 @@ mod tests {
                 assert!(d < 0.04, "{flags:?}: mean divergence {d}");
             }
         }
+    }
+
+    #[test]
+    fn integer_tracks_float_int4_weights() {
+        // Int4 weights cost accuracy (16x coarser grid) but must stay
+        // in the same ballpark, not diverge — the bench tracks the
+        // exact bits/char delta, this pins "still works".
+        let opts = QuantizeOptions {
+            weight_bits: WeightBits::Int4,
+            ..Default::default()
+        };
+        let d = divergence_opts(VariantFlags::plain(), false, opts, 505);
+        assert!(d < 0.3, "int4 mean divergence {d}");
+        let mut flags = VariantFlags::plain();
+        flags.projection = true;
+        let d = divergence_opts(flags, false, opts, 506);
+        assert!(d < 0.3, "int4 projection mean divergence {d}");
+    }
+
+    #[test]
+    fn int4_weight_bytes_at_most_55_percent_of_int8() {
+        // The acceptance bound, at the whole-cell level (biases and
+        // scales stay full width; the weight matrices halve).
+        let mut rng = Pcg32::seeded(89);
+        let spec = crate::lstm::spec::LstmSpec::plain(128, 128);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 2, 8, 128);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let int8 = quantize_lstm(&w, &stats, QuantizeOptions::default());
+        let int4 = quantize_lstm(
+            &w,
+            &stats,
+            QuantizeOptions { weight_bits: WeightBits::Int4, ..Default::default() },
+        );
+        let ratio = int4.weight_bytes() as f64 / int8.weight_bytes() as f64;
+        assert!(ratio <= 0.55, "int4/int8 byte ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn sparse_plus_int4_panics() {
+        // The mutually-exclusive combination must refuse loudly, never
+        // silently pick one format.
+        let mut rng = Pcg32::seeded(90);
+        let spec = crate::lstm::spec::LstmSpec::plain(6, 8);
+        let w = LstmWeights::random(spec, &mut rng);
+        let float = FloatLstm::new(w.clone());
+        let calib = make_seqs(&mut rng, 2, 4, 6);
+        let stats = CalibrationStats::collect(&float, &calib);
+        let _ = quantize_lstm(
+            &w,
+            &stats,
+            QuantizeOptions {
+                sparse_weights: true,
+                weight_bits: WeightBits::Int4,
+                ..Default::default()
+            },
+        );
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub use bidirectional::BiLstm;
 pub use float_cell::{FloatBatchState, FloatLstm, FloatState, Tap};
 pub use hybrid_cell::HybridLstm;
 pub use integer_cell::{IntegerBatchState, IntegerLstm, IntegerState, WeightMat};
-pub use quantize::{quantize_lstm, CalibrationStats, QuantizeOptions};
+pub use quantize::{quantize_lstm, CalibrationStats, QuantizeOptions, WeightBits};
 pub use spec::{GateWeights, LstmSpec, LstmWeights};
 pub use stack::{BatchLayerState, LayerState, LstmStack, StackEngine, StackWeights};

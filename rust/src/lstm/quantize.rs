@@ -132,15 +132,48 @@ impl CalibrationStats {
     }
 }
 
+/// Weight bit width of the quantized storage formats.
+///
+/// The activation path is unchanged either way — only the stored
+/// weights (gates, projection, LM head) and their scales differ. See
+/// `docs/QUANTIZATION.md` for the byte layouts and when to pick which.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightBits {
+    /// Paper-exact Table-2 weights: symmetric int8, scale
+    /// `max(|T|)/127`, one byte per weight.
+    #[default]
+    Int8,
+    /// Sub-8-bit mode: symmetric int4, scale `max(|T|)/7`, two weights
+    /// nibble-packed per byte and unpacked to i8 in-register by the
+    /// GEMM. Halves resident weight bytes; costs some accuracy
+    /// (tracked per topology in `BENCH_int4.json`).
+    Int4,
+}
+
+impl WeightBits {
+    /// Report/CLI label ("int8" / "int4").
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightBits::Int8 => "int8",
+            WeightBits::Int4 => "int4",
+        }
+    }
+}
+
 /// Quantizer options.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QuantizeOptions {
     /// Store gate/projection/head weight matrices block-sparse (for
     /// pruned models): all-zero MR × K_BLOCK tiles dropped, kept tiles
-    /// executed by the batched block-list kernel.
+    /// executed by the batched block-list kernel. Mutually exclusive
+    /// with [`WeightBits::Int4`] (the block kernel stores int8 blocks)
+    /// — the combination panics at quantization time, never silently
+    /// picks one.
     pub sparse_weights: bool,
     /// E5 ablation: integer LN without the `s'` factor.
     pub naive_layernorm: bool,
+    /// Stored weight precision (int8 default; int4 halves residency).
+    pub weight_bits: WeightBits,
 }
 
 /// Build the integer cell from float weights + calibration statistics,
@@ -152,6 +185,11 @@ pub fn quantize_lstm(
 ) -> IntegerLstm {
     let spec = weights.spec;
     assert!(stats.sequences > 0, "calibration stats are empty");
+    assert!(
+        !(opts.sparse_weights && opts.weight_bits == WeightBits::Int4),
+        "sparse_weights and int4 weight_bits are mutually exclusive \
+         (the block-sparse kernel stores int8 blocks)"
+    );
 
     // Activation quantizers (Table 2 rows x, h, m): range/255 asymmetric.
     let (x_min, x_max) = stats.x.range();
@@ -175,8 +213,8 @@ pub fn quantize_lstm(
 
     let mk_gate = |g: Gate| -> Option<IntegerGate> {
         let gw = weights.gate_opt(g)?;
-        let (w_q, w_s) = quantize_weight(&gw.w);
-        let (r_q, r_s) = quantize_weight(&gw.r);
+        let (w_q, w_s) = quantize_weight(&gw.w, opts.weight_bits);
+        let (r_q, r_s) = quantize_weight(&gw.r, opts.weight_bits);
 
         let gate_scale = if spec.flags.layer_norm {
             let max = stats.gate_out[gate_index(g)].max_abs().max(1e-6);
@@ -234,8 +272,8 @@ pub fn quantize_lstm(
         });
 
         Some(IntegerGate {
-            w: sparsify(w_q, opts.sparse_weights),
-            r: sparsify(r_q, opts.sparse_weights),
+            w: store_weight(w_q, opts),
+            r: store_weight(r_q, opts),
             w_bias,
             r_bias,
             eff_x,
@@ -254,7 +292,7 @@ pub fn quantize_lstm(
 
     // Projection (§3.2.8).
     let proj = weights.w_proj.as_ref().map(|w| {
-        let (w_q, w_s) = quantize_weight(w);
+        let (w_q, w_s) = quantize_weight(w, opts.weight_bits);
         let s_bias = w_s.scale * hidden_q.scale;
         let mut bias = fold_zero_point(&w_q, &[], hidden_q.folding_zp());
         if let Some(b) = &weights.b_proj {
@@ -264,7 +302,7 @@ pub fn quantize_lstm(
             }
         }
         IntegerProjection {
-            w: sparsify(w_q, opts.sparse_weights),
+            w: store_weight(w_q, opts),
             bias,
             eff: Rescale::from_scale(s_bias / output_q.scale),
         }
@@ -275,23 +313,38 @@ pub fn quantize_lstm(
     )
 }
 
-/// Symmetric int8 weight quantization, kept dense (row-major) until the
-/// biases are folded and the storage form is chosen.
-fn quantize_weight(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
-    let q = SymmetricQuant::for_weights_i8(f64::from(w.max_abs()));
-    let dense = w.map(|v| q.quantize_i8(f64::from(v)));
-    (dense, q)
+/// Symmetric weight quantization at the requested bit width, kept
+/// dense (row-major `Matrix<i8>`; int4 values occupy `-7..=7`) until
+/// the biases are folded and the storage form is chosen — zero-point
+/// folding reads plain i8 rows either way.
+fn quantize_weight(w: &Matrix<f32>, bits: WeightBits) -> (Matrix<i8>, SymmetricQuant) {
+    match bits {
+        WeightBits::Int8 => {
+            let q = SymmetricQuant::for_weights_i8(f64::from(w.max_abs()));
+            (w.map(|v| q.quantize_i8(f64::from(v))), q)
+        }
+        WeightBits::Int4 => {
+            let q = SymmetricQuant::for_weights_i4(f64::from(w.max_abs()));
+            (w.map(|v| q.quantize_i4(f64::from(v))), q)
+        }
+    }
 }
 
 /// Choose the storage form after folding: block-sparse (all-zero
-/// MR × K_BLOCK tiles dropped) for pruned models, otherwise the packed
-/// register-tiled form — either conversion happens here, at
-/// quantization time, never on the step path.
-fn sparsify(m: Matrix<i8>, sparse: bool) -> WeightMat {
-    if sparse {
-        WeightMat::sparse(m)
-    } else {
-        WeightMat::dense(m)
+/// MR × K_BLOCK tiles dropped) for pruned models, nibble-packed panels
+/// for int4, otherwise the packed register-tiled int8 form — every
+/// conversion happens here, at quantization time, never on the step
+/// path. The sparse+int4 combination panics (the block-sparse kernel
+/// stores int8 blocks); it is never silently coerced to either format.
+fn store_weight(m: Matrix<i8>, opts: QuantizeOptions) -> WeightMat {
+    match (opts.weight_bits, opts.sparse_weights) {
+        (WeightBits::Int8, true) => WeightMat::sparse(m),
+        (WeightBits::Int8, false) => WeightMat::dense(m),
+        (WeightBits::Int4, false) => WeightMat::int4(&m),
+        (WeightBits::Int4, true) => panic!(
+            "sparse_weights and int4 weight_bits are mutually exclusive \
+             (the block-sparse kernel stores int8 blocks)"
+        ),
     }
 }
 

@@ -228,7 +228,9 @@ impl LstmStack {
             .enumerate()
             .map(|(i, w)| match engine {
                 StackEngine::Float => LayerEngine::Float(FloatLstm::new(w.clone())),
-                StackEngine::Hybrid => LayerEngine::Hybrid(HybridLstm::from_weights(w)),
+                StackEngine::Hybrid => {
+                    LayerEngine::Hybrid(HybridLstm::from_weights_bits(w, opts.weight_bits))
+                }
                 StackEngine::Integer => {
                     let st = &stats.expect("integer engine needs calibration stats")[i];
                     LayerEngine::Integer(Box::new(quantize_lstm(w, st, opts)))
@@ -919,7 +921,7 @@ mod tests {
         }
         let calib = make_seqs(&mut rng, 4, 12, 10);
         let stats = weights.calibrate(&calib);
-        let opts = QuantizeOptions { sparse_weights: true, naive_layernorm: false };
+        let opts = QuantizeOptions { sparse_weights: true, ..Default::default() };
         let integer = LstmStack::build(&weights, StackEngine::Integer, Some(&stats), opts);
         let dense = LstmStack::build(&weights, StackEngine::Integer, Some(&stats), Default::default());
         let seq = make_seqs(&mut rng, 1, 12, 10).pop().unwrap();

@@ -16,7 +16,7 @@ use iqrnn::coordinator::{
     BatchPolicy, ModelRegistry, ModelSpec, NetConfig, NetServer, NetShutdown, Residency,
     SchedulerMode, Server, ServerConfig,
 };
-use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::lstm::{QuantizeOptions, StackEngine, WeightBits};
 use iqrnn::model::lm::CharLm;
 use iqrnn::quant::recipe::{Gate, LstmRecipe, TensorRole, VariantFlags};
 use iqrnn::workload::corpus::{calibration_sequences, load_eval_sets};
@@ -70,6 +70,9 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}       --spill-quantized (int8 cold tier, ~4x smaller)\n\
                  \u{20}       --evict-idle-after N\n\
                  \u{20}       --models N  --replicas R  --artifacts DIR\n\
+                 \u{20}       --weight-bits 8|4 (int4 nibble-packed weights: ~2x\n\
+                 \u{20}       smaller residency)  --weight-budget BYTES (demote\n\
+                 \u{20}       coldest models to int4 until resident weights fit)\n\
                  \u{20}       --listen ADDR (TCP front instead of trace replay)\n\
                  \u{20}       --drain-after S  --max-inflight N (with --listen)\n\
                  eval   --artifacts DIR   (Table-1-style quality comparison)\n\
@@ -112,6 +115,17 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     if replicas == Some(0) {
         bail!("--replicas must be at least 1");
     }
+    let weight_bits = match flag(args, "--weight-bits").unwrap_or_else(|| "8".into()).as_str() {
+        "8" => WeightBits::Int8,
+        "4" => WeightBits::Int4,
+        other => bail!("unknown weight bits `{other}` (8|4)"),
+    };
+    // Pool-wide resident weight budget: models over it are demoted to
+    // int4 (coldest first) before serving starts — the pre-eviction
+    // relief valve.
+    let weight_budget = flag(args, "--weight-budget")
+        .map(|v| v.parse::<usize>())
+        .transpose()?;
 
     let lm = CharLm::load(artifacts)
         .with_context(|| format!("loading model from `{artifacts}` (run `make artifacts`)"))?;
@@ -127,22 +141,24 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     if listen.is_none() {
         println!(
             "serving {requests} requests ({} tokens) at {rate} req/s on {workers} workers, \
-             engine={}, mode={}, steal={}, models={models}{}",
+             engine={}, mode={}, steal={}, models={models}, weights={}{}",
             trace.total_tokens(),
             engine.label(),
             mode.label(),
             if steal { "on" } else { "off" },
+            weight_bits.label(),
             match replicas {
                 Some(r) => format!(", replicas={r}"),
                 None => String::new(),
             },
         );
     }
+    let opts = QuantizeOptions { weight_bits, ..Default::default() };
     let config = ServerConfig {
         workers,
         batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
         engine,
-        opts: QuantizeOptions::default(),
+        opts,
         mode,
         steal,
         session_budget: None,
@@ -161,12 +177,30 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
             lm: &lm,
             engine,
             stats: Some(&stats),
-            opts: QuantizeOptions::default(),
+            opts,
             residency: match replicas {
                 Some(r) => Residency::Count(r),
                 None => Residency::All,
             },
         });
+    }
+    if let Some(budget) = weight_budget {
+        let demoted = registry.enforce_weight_budget(budget, workers);
+        for &m in &demoted {
+            println!(
+                "weight budget: demoted {} to int4 ({} bytes/replica)",
+                registry.name(m),
+                registry.weight_bytes(m)
+            );
+        }
+        let resident = registry.total_resident_weight_bytes(workers);
+        if resident > budget {
+            bail!(
+                "--weight-budget {budget} bytes unreachable: {resident} bytes \
+                 still resident after demoting every eligible model — lower \
+                 --replicas or --models"
+            );
+        }
     }
     if let Some(b) = state_budget {
         // Lane-holding and pending sessions never hibernate, so a

@@ -8,10 +8,11 @@ use anyhow::{ensure, Context, Result};
 
 use crate::lstm::{
     BatchLayerState, CalibrationStats, LayerState, LstmSpec, LstmStack,
-    LstmWeights, QuantizeOptions, StackEngine, StackWeights, WeightMat,
+    LstmWeights, QuantizeOptions, StackEngine, StackWeights, WeightBits,
+    WeightMat,
 };
 use crate::quant::params::SymmetricQuant;
-use crate::quant::quantize_symmetric_i8;
+use crate::quant::{quantize_symmetric_i4, quantize_symmetric_i8};
 use crate::tensor::{gemm_f32, matvec_f32, pad_lanes, Matrix};
 use super::weights::TensorFile;
 
@@ -181,15 +182,25 @@ impl CharLm {
         let stack = LstmStack::build(&self.stack_weights, engine, stats, opts);
         let head = match engine {
             StackEngine::Float | StackEngine::Hybrid => HeadEngine::Float,
-            StackEngine::Integer => {
-                let (w_q, q) = quantize_symmetric_i8(&self.out_w);
-                let w_q = if opts.sparse_weights {
-                    WeightMat::sparse(w_q)
-                } else {
-                    WeightMat::dense(w_q)
-                };
-                HeadEngine::Integer { w_q, w_scale: q.scale }
-            }
+            StackEngine::Integer => match opts.weight_bits {
+                WeightBits::Int4 => {
+                    assert!(
+                        !opts.sparse_weights,
+                        "sparse_weights and int4 weights are mutually exclusive"
+                    );
+                    let (w_q, q) = quantize_symmetric_i4(&self.out_w);
+                    HeadEngine::Integer { w_q: WeightMat::int4(&w_q), w_scale: q.scale }
+                }
+                WeightBits::Int8 => {
+                    let (w_q, q) = quantize_symmetric_i8(&self.out_w);
+                    let w_q = if opts.sparse_weights {
+                        WeightMat::sparse(w_q)
+                    } else {
+                        WeightMat::dense(w_q)
+                    };
+                    HeadEngine::Integer { w_q, w_scale: q.scale }
+                }
+            },
         };
         CharLmEngine {
             stack,

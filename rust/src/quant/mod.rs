@@ -8,7 +8,7 @@ pub mod recipe;
 
 pub use observer::MinMaxObserver;
 pub use params::{
-    quantize_asymmetric_i8, quantize_symmetric_i16, quantize_symmetric_i8,
-    AsymmetricQuant, SymmetricQuant,
+    quantize_asymmetric_i8, quantize_symmetric_i16, quantize_symmetric_i4,
+    quantize_symmetric_i8, AsymmetricQuant, SymmetricQuant,
 };
 pub use recipe::{LstmRecipe, TensorRole};

@@ -3,6 +3,9 @@
 //! * weights `W`, `R`: **symmetric** int8, scale `max(|T|)/127`,
 //!   values in `[-127, 127]` (note: -128 is excluded so the product
 //!   with an int8 activation fits the int16 SIMD lanes);
+//! * int4 weight mode: the same symmetric rule at `max(|T|)/7`, values
+//!   in `[-7, 7]` (−8 excluded so the range is symmetric and unpack
+//!   needs no offset fixup — see `docs/QUANTIZATION.md`);
 //! * peephole `P`, layer-norm `L`: **symmetric** int16, scale
 //!   `max(|T|)/32767`;
 //! * activations `x`, `h`, hidden `m`: **asymmetric** int8, scale
@@ -25,6 +28,15 @@ impl SymmetricQuant {
         SymmetricQuant { scale: max_abs / 127.0 }
     }
 
+    /// int4 weight rule (sub-8-bit mode): `scale = max(|T|)/7`, the
+    /// Table-2 symmetric rule with the int4 quantized range. −8 is
+    /// excluded (like −128 at int8) so the stored nibble range is
+    /// symmetric and the kernel's sign-extend needs no offset fixup.
+    pub fn for_weights_i4(max_abs: f64) -> Self {
+        let max_abs = if max_abs > 0.0 { max_abs } else { 1.0 };
+        SymmetricQuant { scale: max_abs / 7.0 }
+    }
+
     /// int16 rule from Table 2 (peephole, layer norm): `max(|T|)/32767`.
     pub fn for_weights_i16(max_abs: f64) -> Self {
         let max_abs = if max_abs > 0.0 { max_abs } else { 1.0 };
@@ -38,6 +50,12 @@ impl SymmetricQuant {
 
     pub fn quantize_i8(&self, v: f64) -> i8 {
         (v / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    /// Quantize into the symmetric int4 range `[-7, 7]` (stored in an
+    /// `i8`; nibble packing happens at weight-pack time).
+    pub fn quantize_i4(&self, v: f64) -> i8 {
+        (v / self.scale).round().clamp(-7.0, 7.0) as i8
     }
 
     pub fn quantize_i16(&self, v: f64) -> i16 {
@@ -106,6 +124,15 @@ pub fn quantize_symmetric_i8(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
     (w.map(|v| q.quantize_i8(f64::from(v))), q)
 }
 
+/// Quantize a float matrix symmetrically into the int4 range `[-7, 7]`
+/// (weights, sub-8-bit mode). The values stay in a `Matrix<i8>` so
+/// zero-point folding runs unchanged; nibble packing happens when the
+/// storage form is chosen.
+pub fn quantize_symmetric_i4(w: &Matrix<f32>) -> (Matrix<i8>, SymmetricQuant) {
+    let q = SymmetricQuant::for_weights_i4(f64::from(w.max_abs()));
+    (w.map(|v| q.quantize_i4(f64::from(v))), q)
+}
+
 /// Quantize a float vector symmetrically to int16 (peephole / LN).
 pub fn quantize_symmetric_i16(v: &[f32]) -> (Vec<i16>, SymmetricQuant) {
     let max_abs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
@@ -132,6 +159,26 @@ mod tests {
         assert_eq!(q.quantize_i8(-2.54), -127);
         assert_eq!(q.quantize_i8(-99.0), -127); // clamps, never -128
         assert_eq!(q.quantize_i8(0.0), 0);
+    }
+
+    #[test]
+    fn symmetric_i4_rule() {
+        let q = SymmetricQuant::for_weights_i4(1.4);
+        assert!((q.scale - 0.2).abs() < 1e-9);
+        assert_eq!(q.quantize_i4(1.4), 7);
+        assert_eq!(q.quantize_i4(-1.4), -7);
+        assert_eq!(q.quantize_i4(-99.0), -7); // clamps, never -8
+        assert_eq!(q.quantize_i4(0.0), 0);
+        // Degenerate all-zero tensor still gets a usable scale.
+        assert_eq!(SymmetricQuant::for_weights_i4(0.0).scale, 1.0 / 7.0);
+    }
+
+    #[test]
+    fn matrix_quantization_i4() {
+        let w = Matrix::from_vec(1, 4, vec![0.5f32, -1.0, 0.25, 1.0]);
+        let (qw, q) = quantize_symmetric_i4(&w);
+        assert_eq!(qw.data, vec![4, -7, 2, 7]);
+        assert!((q.scale - 1.0 / 7.0).abs() < 1e-9);
     }
 
     #[test]

@@ -35,6 +35,17 @@
 //! blocked kernel still executes in [`tail_audit`], which is how the
 //! test suite proves the batched serving path runs tail-free for any
 //! live-lane count and any `n_cell`.
+//!
+//! # Int4 nibble panels
+//!
+//! [`PackedWeightsI4`] is the same panel geometry at half the bytes:
+//! weights are quantized to the symmetric range −7..7 (so the stored
+//! nibble is plain 4-bit two's complement and unpack is shift/mask +
+//! sign-extend, no offset fixup), nibble-packed two-per-byte at pack
+//! time, and unpacked to i8 **in-register** inside the GEMM — the
+//! `pmaddwd` FMA and the whole padding contract above are unchanged.
+//! See `docs/QUANTIZATION.md` for the byte-level layout of both panel
+//! formats.
 
 use super::dense::Matrix;
 #[cfg(target_arch = "x86_64")]
@@ -443,6 +454,330 @@ impl PackedWeightsI8 {
     }
 }
 
+/// Two's-complement encode of an int4 weight into its storage nibble.
+/// The value must already be in the representable range `-8..=7`
+/// (quantization clamps to the symmetric −7..7); anything wider is a
+/// caller bug and panics — nibble wraparound would silently corrupt
+/// the model.
+#[inline]
+fn nibble_of_i4(v: i8) -> u8 {
+    assert!(
+        (-8..=7).contains(&v),
+        "int4 pack: weight {v} outside the representable range -8..=7"
+    );
+    (v as u8) & 0x0F
+}
+
+/// Sign-extend a storage nibble (already masked to 4 bits) back to the
+/// signed int4 value: `(n ^ 8) - 8` maps `0..=7 -> 0..=7` and
+/// `8..=15 -> -8..=-1`. The SIMD kernel runs the identical xor/sub on
+/// 32 bytes at once.
+#[inline]
+fn i4_from_nibble(n: u8) -> i32 {
+    debug_assert!(n < 16);
+    i32::from(n ^ 8) - 8
+}
+
+/// int4 weight matrix, nibble-packed for the register-tiled batched
+/// GEMM — [`PackedWeightsI8`]'s panel geometry at half the bytes.
+///
+/// Two storage forms, both built **once** at pack time:
+///
+/// * **Row-major nibbles** (`packed_rows`) — `ceil(cols/2)` bytes per
+///   row; byte `k` of row `r` packs `w[r, 2k]` in its low nibble and
+///   `w[r, 2k+1]` in its high nibble (an odd `cols` leaves the last
+///   high nibble zero). This is the *only* copy counted by
+///   [`Self::storage_bytes`] and the copy the sequential matvec and
+///   scalar oracle read — there is no retained byte-per-weight matrix,
+///   so resident weight memory genuinely halves.
+/// * **K-major panels** (`panels`, AVX2 processes only) — the dense
+///   kernel's `panels[p][kb][q]` layout with each [`K_BLOCK`]-column
+///   chunk packed into `K_BLOCK/2 = 16` bytes: byte `j` holds
+///   `w[k0 + j]` (low nibble) and `w[k0 + 16 + j]` (high nibble).
+///   That split is chosen so one `vpand`/`vpsrlw`+`vpand` pair on the
+///   16-byte load yields the 32 weights *in K order* across the two
+///   128-bit halves of a `ymm` register — after the xor/sub
+///   sign-extend, the unchanged [`widen_i8`] + `pmaddwd` flow of the
+///   int8 kernel runs on it verbatim.
+///
+/// Padding follows the int8 panel contract exactly (rows past `rows`
+/// and K past `cols` are zero nibbles, which decode to zero weights),
+/// so the batched kernel absorbs every K/lane/row remainder with zero
+/// scalar-tail multiply-accumulates — the same [`tail_audit`] proof
+/// covers it.
+#[derive(Debug, Clone)]
+pub struct PackedWeightsI4 {
+    rows: usize,
+    cols: usize,
+    /// Row-major nibble storage: `rows * ceil(cols/2)` bytes.
+    packed_rows: Vec<u8>,
+    /// `ceil(rows/MR)` panels × `ceil(cols/K_BLOCK)` K blocks × MR rows
+    /// × `K_BLOCK/2` bytes, zero-padded; empty when the AVX2 kernel can
+    /// never run in this process.
+    panels: Vec<u8>,
+    k_blocks: usize,
+}
+
+impl PackedWeightsI4 {
+    /// Nibble-pack a dense int4-range matrix (every value in `-8..=7`,
+    /// which symmetric −7..7 quantization guarantees; a wider value
+    /// panics). Like [`PackedWeightsI8::pack`], the K-major panel copy
+    /// is built only when the AVX2 kernel can actually run, so
+    /// forced-scalar configurations do not pay double weight memory.
+    pub fn pack(dense: &Matrix<i8>) -> Self {
+        let rows = dense.rows;
+        let cols = dense.cols;
+        let row_bytes = cols.div_ceil(2);
+        let k_blocks = cols.div_ceil(K_BLOCK);
+        let mut packed_rows = vec![0u8; rows * row_bytes];
+        for r in 0..rows {
+            let src = dense.row(r);
+            let dst = &mut packed_rows[r * row_bytes..(r + 1) * row_bytes];
+            for (k, byte) in dst.iter_mut().enumerate() {
+                let lo = nibble_of_i4(src[2 * k]);
+                let hi = if 2 * k + 1 < cols { nibble_of_i4(src[2 * k + 1]) } else { 0 };
+                *byte = lo | (hi << 4);
+            }
+        }
+        let mut panels = Vec::new();
+        if crate::util::avx2_enabled() {
+            const NIB: usize = K_BLOCK / 2;
+            let n_panels = rows.div_ceil(MR);
+            panels = vec![0u8; n_panels * k_blocks * MR * NIB];
+            for p in 0..n_panels {
+                for kb in 0..k_blocks {
+                    for q in 0..MR {
+                        let r = p * MR + q;
+                        if r >= rows {
+                            continue; // padding rows stay zero nibbles
+                        }
+                        let src = dense.row(r);
+                        let k0 = kb * K_BLOCK;
+                        let base = ((p * k_blocks + kb) * MR + q) * NIB;
+                        for j in 0..NIB {
+                            let lo_k = k0 + j;
+                            let hi_k = k0 + NIB + j;
+                            let lo = if lo_k < cols { nibble_of_i4(src[lo_k]) } else { 0 };
+                            let hi = if hi_k < cols { nibble_of_i4(src[hi_k]) } else { 0 };
+                            panels[base + j] = lo | (hi << 4);
+                        }
+                    }
+                }
+            }
+        }
+        PackedWeightsI4 { rows, cols, packed_rows, panels, k_blocks }
+    }
+
+    /// Logical row count (output features).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical column count (the K / reduction dimension).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Logical weight bytes: `rows * ceil(cols/2)` — half the int8
+    /// packing (plus at most one pad nibble per row). This is the
+    /// number the registry's residency accounting and Table-1 size
+    /// columns report; the AVX2 panel copy is an uncounted execution
+    /// copy, exactly like the int8 panels.
+    pub fn storage_bytes(&self) -> usize {
+        self.packed_rows.len()
+    }
+
+    /// Decode one row's nibbles into `out` (`cols` values).
+    fn unpack_row(&self, r: usize, out: &mut [i8]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let row_bytes = self.cols.div_ceil(2);
+        let src = &self.packed_rows[r * row_bytes..(r + 1) * row_bytes];
+        for (c, o) in out.iter_mut().enumerate() {
+            let byte = src[c / 2];
+            let nib = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            *o = i4_from_nibble(nib) as i8;
+        }
+    }
+
+    /// Decode back to a dense int8 matrix (tests, re-quantization).
+    pub fn to_dense(&self) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row_bytes = self.cols.div_ceil(2);
+            let src = &self.packed_rows[r * row_bytes..(r + 1) * row_bytes];
+            for c in 0..self.cols {
+                let byte = src[c / 2];
+                let nib = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                w.set(r, c, i4_from_nibble(nib) as i8);
+            }
+        }
+        w
+    }
+
+    /// Sequential matrix-vector product over the row-major nibbles —
+    /// bit-exact with [`Self::gemm`] per lane (integer accumulation is
+    /// associative, and every decoded pad nibble is zero).
+    pub fn matvec(&self, x: &[i8], folded_bias: &[i32], out: &mut [i32]) {
+        assert_eq!(self.cols, x.len());
+        assert_eq!(self.rows, out.len());
+        debug_assert!(folded_bias.is_empty() || folded_bias.len() == self.rows);
+        let row_bytes = self.cols.div_ceil(2);
+        let pairs = self.cols / 2;
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = &self.packed_rows[r * row_bytes..(r + 1) * row_bytes];
+            let mut acc = 0i32;
+            for k in 0..pairs {
+                let byte = row[k];
+                acc += i4_from_nibble(byte & 0x0F) * i32::from(x[2 * k]);
+                acc += i4_from_nibble(byte >> 4) * i32::from(x[2 * k + 1]);
+            }
+            if self.cols % 2 == 1 {
+                acc += i4_from_nibble(row[pairs] & 0x0F) * i32::from(x[self.cols - 1]);
+            }
+            *o = acc + bias_at(folded_bias, r);
+        }
+    }
+
+    /// Register-tiled batched GEMM over nibble-packed weights: `x` is
+    /// `[batch, cols]` row-major activations, `out` is `[batch, rows]`
+    /// with `out[b,r] = folded_bias[r] + Σ_c w[r,c] * x[b,c]`.
+    ///
+    /// On AVX2 this runs the padded panel kernel with the in-register
+    /// nibble unpack — zero scalar-tail iterations for any `batch` and
+    /// any shape, same contract as [`PackedWeightsI8::gemm`]. Without
+    /// AVX2, or under `PALLAS_FORCE_SCALAR`, a scalar oracle decodes
+    /// each row once and reuses the int8 scalar dot product. Either way
+    /// the result is bit-exact with per-lane [`Self::matvec`].
+    pub fn gemm(&self, x: &Matrix<i8>, folded_bias: &[i32], out: &mut Matrix<i32>) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!(out.rows, x.rows);
+        assert_eq!(out.cols, self.rows);
+        debug_assert!(folded_bias.is_empty() || folded_bias.len() == self.rows);
+        if x.rows == 0 || self.rows == 0 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_enabled() {
+                // SAFETY: feature checked at runtime.
+                unsafe { self.gemm_avx2(x, folded_bias, out) };
+                return;
+            }
+        }
+        self.gemm_scalar(x, folded_bias, out);
+    }
+
+    /// Scalar reference oracle, mirroring `gemm_i8_i32_scalar`'s
+    /// 4-lane-per-row-pass structure: each weight row is nibble-decoded
+    /// once per lane block and dotted against up to 4 activation lanes.
+    fn gemm_scalar(&self, x: &Matrix<i8>, folded_bias: &[i32], out: &mut Matrix<i32>) {
+        let mut wrow = vec![0i8; self.cols];
+        let mut b = 0usize;
+        while b < x.rows {
+            let bn = (x.rows - b).min(4);
+            for r in 0..self.rows {
+                self.unpack_row(r, &mut wrow);
+                let bias = bias_at(folded_bias, r);
+                for i in 0..bn {
+                    out.data[(b + i) * self.rows + r] =
+                        dot_i8_scalar(&wrow, x.row(b + i)) + bias;
+                }
+            }
+            b += bn;
+        }
+    }
+
+    /// The nibble panel kernel. Identical loop structure and padding
+    /// contract to the int8 [`PackedWeightsI8`] kernel — staged ragged
+    /// K tails, missing lanes re-pointed at the last live row, pad rows
+    /// skipped at writeback — except the weight load is 16 bytes, not
+    /// 32, and is expanded in-register:
+    ///
+    /// 1. `vpand` extracts the low nibbles (K positions `k0..k0+16`),
+    /// 2. `vpsrlw` + `vpand` extracts the high nibbles (`k0+16..k0+32`;
+    ///    the mask strips the bits `vpsrlw` drags across byte lanes),
+    /// 3. the two `xmm` halves concatenate into one K-ordered `ymm`,
+    /// 4. `xor 0x08` / `sub 0x08` per byte sign-extends 4→8 bits,
+    ///
+    /// after which the sign-extended weights feed the *unchanged*
+    /// [`widen_i8`] + `pmaddwd` + `paddd` FMA of the int8 kernel.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_avx2(
+        &self,
+        x: &Matrix<i8>,
+        folded_bias: &[i32],
+        out: &mut Matrix<i32>,
+    ) {
+        use std::arch::x86_64::*;
+        const NIB: usize = K_BLOCK / 2;
+        let rows = self.rows;
+        let cols = self.cols;
+        let k_blocks = self.k_blocks;
+        let k_tail = cols % K_BLOCK;
+        let full_blocks = cols / K_BLOCK;
+        let panel_stride = k_blocks * MR * NIB;
+        let n_panels = rows.div_ceil(MR);
+        let nib_mask = _mm_set1_epi8(0x0F);
+        let sign_bias = _mm256_set1_epi8(8);
+
+        // Staged ragged K tails, exactly the int8 kernel's scheme.
+        let mut tails = [[0i8; K_BLOCK]; LANE_TILE];
+
+        let mut b = 0usize;
+        while b < x.rows {
+            let live = (x.rows - b).min(LANE_TILE);
+            // A partial tile re-points its missing lanes at the tile's
+            // last live row: computed redundantly, never written back.
+            let lanes: [&[i8]; LANE_TILE] =
+                std::array::from_fn(|l| x.row(b + l.min(live - 1)));
+            if k_tail != 0 {
+                for (t, lane) in tails.iter_mut().zip(lanes.iter()) {
+                    t[..k_tail].copy_from_slice(&lane[full_blocks * K_BLOCK..]);
+                }
+            }
+            for p in 0..n_panels {
+                let panel = self.panels.as_ptr().add(p * panel_stride);
+                let prow = p * MR;
+                let rows_here = (rows - prow).min(MR);
+                for q in 0..rows_here {
+                    let mut acc = [_mm256_setzero_si256(); LANE_TILE];
+                    for kb in 0..k_blocks {
+                        let pv = _mm_loadu_si128(
+                            panel.add((kb * MR + q) * NIB) as *const __m128i,
+                        );
+                        let lo = _mm_and_si128(pv, nib_mask);
+                        let hi = _mm_and_si128(_mm_srli_epi16::<4>(pv), nib_mask);
+                        let unsigned = _mm256_set_m128i(hi, lo);
+                        let wv = _mm256_sub_epi8(
+                            _mm256_xor_si256(unsigned, sign_bias),
+                            sign_bias,
+                        );
+                        let (w_lo, w_hi) = widen_i8(wv);
+                        let staged = k_tail != 0 && kb == full_blocks;
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            let xp = if staged {
+                                tails[l].as_ptr()
+                            } else {
+                                lanes[l].as_ptr().add(kb * K_BLOCK)
+                            };
+                            let xv = _mm256_loadu_si256(xp as *const __m256i);
+                            let (x_lo, x_hi) = widen_i8(xv);
+                            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_lo, x_lo));
+                            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(w_hi, x_hi));
+                        }
+                    }
+                    let bias = bias_at(folded_bias, prow + q);
+                    for (l, a) in acc.iter().enumerate().take(live) {
+                        out.data[(b + l) * rows + prow + q] = hsum_epi32(*a) + bias;
+                    }
+                }
+            }
+            b += live;
+        }
+    }
+}
+
 /// Blocked int8 × int8 → int32 GEMM over an *unpacked* weight matrix.
 ///
 /// `x` is `[batch, cols]` row-major activations, `out` is `[batch,
@@ -816,6 +1151,168 @@ mod tests {
         let mut out = vec![0i32; 1];
         matvec_i8_i32(&w, &x, &[], &mut out);
         assert_eq!(out[0], 127 * 128 * cols as i32);
+    }
+
+    fn random_w4(rng: &mut Pcg32, rows: usize, cols: usize) -> Matrix<i8> {
+        let mut w = Matrix::<i8>::zeros(rows, cols);
+        for v in &mut w.data {
+            *v = rng.range_i32(-8, 7) as i8;
+        }
+        w
+    }
+
+    #[test]
+    fn int4_roundtrip_every_nibble_pattern() {
+        // One row holding every signed nibble value, at both even and
+        // odd positions, across odd and even column counts: the packed
+        // bytes must decode back bit-exactly (including -8, the one
+        // value quantization never emits but the format represents).
+        for &cols in &[16usize, 17, 31, 32, 33] {
+            let mut w = Matrix::<i8>::zeros(3, cols);
+            for c in 0..cols {
+                w.set(0, c, ((c % 16) as i8) - 8);
+                w.set(1, c, 7 - ((c % 16) as i8));
+                w.set(2, c, if c % 2 == 0 { -8 } else { 7 });
+            }
+            let packed = PackedWeightsI4::pack(&w);
+            assert_eq!(packed.to_dense(), w, "cols={cols}");
+            assert_eq!(packed.storage_bytes(), 3 * cols.div_ceil(2));
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip_property() {
+        proptest::check("int4-pack-roundtrip", |rng| {
+            let rows = 1 + rng.below(40) as usize;
+            let cols = 1 + rng.below(80) as usize;
+            let w = random_w4(rng, rows, cols);
+            let packed = PackedWeightsI4::pack(&w);
+            assert_eq!(packed.to_dense(), w);
+            assert_eq!(packed.rows(), rows);
+            assert_eq!(packed.cols(), cols);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn int4_pack_out_of_range_panics() {
+        // A weight outside -8..=7 must panic at pack time, never wrap
+        // into a different nibble.
+        let w = Matrix::from_vec(1, 2, vec![3i8, 9]);
+        let _ = PackedWeightsI4::pack(&w);
+    }
+
+    #[test]
+    fn int4_packed_matches_scalar_on_pinned_ragged_shapes() {
+        // The int4 acceptance grid, mirroring the int8 one: the
+        // dispatched kernel (AVX2 nibble panels when available, the
+        // nibble-decoding scalar oracle under PALLAS_FORCE_SCALAR) must
+        // be bit-exact with the independent int8 scalar reference over
+        // the decoded weights — single rows, 32±1 depths, odd batches.
+        let mut rng = Pcg32::seeded(67);
+        for &rows in &[1usize, 31, 33, 100] {
+            for &cols in &[1usize, 31, 32, 33, 100] {
+                for &batch in &[1usize, 3, 5, 7] {
+                    let w = random_w4(&mut rng, rows, cols);
+                    let packed = PackedWeightsI4::pack(&w);
+                    let x = random_batch(&mut rng, batch, cols);
+                    let bias: Vec<i32> =
+                        (0..rows).map(|_| rng.range_i32(-100_000, 100_000)).collect();
+                    let mut got = Matrix::<i32>::zeros(batch, rows);
+                    let mut want = Matrix::<i32>::zeros(batch, rows);
+                    packed.gemm(&x, &bias, &mut got);
+                    gemm_i8_i32_scalar(&w, &x, &bias, &mut want);
+                    assert_eq!(
+                        got.data, want.data,
+                        "rows={rows} cols={cols} batch={batch}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int4_gemm_matches_matvec_property() {
+        proptest::check("int4-gemm-eq-matvec", |rng| {
+            let rows = 1 + rng.below(70) as usize;
+            let cols = 1 + rng.below(100) as usize;
+            let batch = 1 + rng.below(9) as usize;
+            let w = random_w4(rng, rows, cols);
+            let packed = PackedWeightsI4::pack(&w);
+            let x = random_batch(rng, batch, cols);
+            let bias: Vec<i32> =
+                (0..rows).map(|_| rng.range_i32(-100_000, 100_000)).collect();
+            let mut out = Matrix::<i32>::zeros(batch, rows);
+            packed.gemm(&x, &bias, &mut out);
+            for b in 0..batch {
+                let mut single = vec![0i32; rows];
+                packed.matvec(x.row(b), &bias, &mut single);
+                assert_eq!(out.row(b), &single[..], "lane {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn int4_extreme_magnitudes() {
+        // Worst-case int4 accumulation across ragged shapes: all-(-8)
+        // weights against all-(-128) activations.
+        for &(rows, cols) in &[(5usize, 33usize), (4, 32), (7, 95), (1, 1)] {
+            let w = Matrix::from_vec(rows, cols, vec![-8i8; rows * cols]);
+            let packed = PackedWeightsI4::pack(&w);
+            let x = Matrix::from_vec(3, cols, vec![-128i8; 3 * cols]);
+            let mut out = Matrix::<i32>::zeros(3, rows);
+            packed.gemm(&x, &[], &mut out);
+            for &v in &out.data {
+                assert_eq!(v, 8 * 128 * cols as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_kernel_runs_tail_free() {
+        // Same proof as the int8 packed kernel: the nibble panel kernel
+        // must never record scalar-tail work, however ragged the shape.
+        let mut rng = Pcg32::seeded(89);
+        let w = random_w4(&mut rng, 33, 47);
+        let packed = PackedWeightsI4::pack(&w);
+        // Positive control first: the unpacked AVX2 kernel on the same
+        // ragged shape does record tails.
+        if crate::util::avx2_enabled() && cfg!(debug_assertions) {
+            let x = random_batch(&mut rng, 5, 47);
+            let mut out = Matrix::<i32>::zeros(5, 33);
+            tail_audit::reset();
+            gemm_i8_i32(&w, &x, &[], &mut out);
+            assert!(
+                tail_audit::count() > 0,
+                "unpacked kernel should record K/lane tails on 5x47"
+            );
+        }
+        tail_audit::reset();
+        for &batch in &[1usize, 3, 5, 7, 8] {
+            let xb = random_batch(&mut rng, batch, 47);
+            let mut ob = Matrix::<i32>::zeros(batch, 33);
+            packed.gemm(&xb, &[], &mut ob);
+        }
+        assert_eq!(tail_audit::count(), 0, "int4 kernel recorded scalar tails");
+    }
+
+    #[test]
+    fn int4_storage_is_half_of_int8() {
+        // The acceptance bound: nibble packing must come in at <= 55%
+        // of the int8 byte count even at odd K (one pad nibble/row).
+        for &(rows, cols) in &[(33usize, 47usize), (128, 512), (4, 32), (5, 11)] {
+            let w = random_w4(&mut Pcg32::seeded(91), rows, cols);
+            let p4 = PackedWeightsI4::pack(&w);
+            let p8 = PackedWeightsI8::pack(w);
+            assert!(
+                (p4.storage_bytes() as f64) <= 0.55 * p8.storage_bytes() as f64,
+                "{}x{}: int4 {}B vs int8 {}B",
+                rows,
+                cols,
+                p4.storage_bytes(),
+                p8.storage_bytes()
+            );
+        }
     }
 
     #[test]

@@ -126,7 +126,7 @@ fn integer_step_batch_bit_exact_all_variants() {
                     let stats = CalibrationStats::collect(&float, &calib);
                     let opts = QuantizeOptions {
                         sparse_weights: sparse,
-                        naive_layernorm: false,
+                        ..Default::default()
                     };
                     let cell = quantize_lstm(&w, &stats, opts);
                     let batch = 1 + rng.below(5) as usize;

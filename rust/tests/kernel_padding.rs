@@ -16,7 +16,7 @@
 mod common;
 
 use iqrnn::coordinator::{simulate_trace, ContinuousScheduler, SchedulerMode};
-use iqrnn::lstm::{BatchLayerState, QuantizeOptions, StackEngine};
+use iqrnn::lstm::{BatchLayerState, QuantizeOptions, StackEngine, WeightBits};
 use iqrnn::model::lm::{CharLm, CharLmEngine, LmState, VOCAB};
 use iqrnn::tensor::qmatmul::tail_audit;
 use iqrnn::tensor::{pad_lanes, LANE_TILE};
@@ -223,7 +223,7 @@ fn poisoned_pad_lanes_never_change_live_lanes() {
 #[test]
 fn poisoned_pad_lanes_never_change_live_lanes_sparse() {
     let lm = ragged_pruned_lm(33, 0.75);
-    let opts = QuantizeOptions { sparse_weights: true, naive_layernorm: false };
+    let opts = QuantizeOptions { sparse_weights: true, ..Default::default() };
     let engine = build_engine_opts(&lm, StackEngine::Integer, opts);
     let streams: Vec<Vec<usize>> = (0..3)
         .map(|s| (0..12).map(|t| (7 * s + 3 * t + 1) % VOCAB).collect())
@@ -268,6 +268,102 @@ fn poisoned_pad_lanes_never_change_live_lanes_sparse() {
         }
         for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
             assert_eq!(a.to_bits(), b.to_bits(), "sparse lane {lane} logits");
+        }
+    }
+}
+
+/// The tail-free contract extends to int4 nibble-packed weights: the
+/// integer engine under `--weight-bits 4` runs every gate, projection,
+/// and head GEMM through the nibble-panel kernel, which inherits the
+/// same padding contract — zero scalar-tail multiply-accumulate
+/// iterations at any live width on a ragged `n_cell`.
+#[test]
+fn batched_int4_serving_path_is_tail_free() {
+    let lm = ragged_lm(33);
+    let opts = QuantizeOptions { weight_bits: WeightBits::Int4, ..Default::default() };
+    let engine = build_engine_opts(&lm, StackEngine::Integer, opts);
+    let mut sched = ContinuousScheduler::new(&engine, 7);
+    tail_audit::reset();
+    for s in 0..7u64 {
+        sched.offer(common::item(s, vec![(s as usize * 11) % VOCAB; 4 + 3 * s as usize]));
+    }
+    let mut widths = std::collections::HashSet::new();
+    while sched.has_live_work() {
+        sched.admit_ready();
+        widths.insert(sched.live_lanes());
+        sched.step();
+        sched.take_completed();
+    }
+    assert_eq!(
+        tail_audit::count(),
+        0,
+        "batched int4 step path executed scalar-tail iterations"
+    );
+    assert!(widths.contains(&7) && widths.contains(&3) && widths.contains(&1));
+}
+
+/// Pad-lane poison can't leak through the int4 kernel either: the
+/// integer and hybrid engines at 4-bit weights must scatter live lanes
+/// bit-identical to their own sequential execution with garbage in
+/// every pad lane.
+#[test]
+fn poisoned_pad_lanes_never_change_live_lanes_int4() {
+    let lm = ragged_lm(20);
+    let opts = QuantizeOptions { weight_bits: WeightBits::Int4, ..Default::default() };
+    for kind in [StackEngine::Integer, StackEngine::Hybrid] {
+        let engine = build_engine_opts(&lm, kind, opts);
+        let streams: Vec<Vec<usize>> = (0..3)
+            .map(|s| (0..12).map(|t| (7 * s + 3 * t + 1) % VOCAB).collect())
+            .collect();
+
+        // Sequential reference (same int4 engine, per-token path).
+        let mut seq: Vec<LmState> = (0..3).map(|_| engine.new_state()).collect();
+        for (s, toks) in seq.iter_mut().zip(&streams) {
+            for &t in toks {
+                engine.step_token(t, s);
+            }
+        }
+
+        // Batched: 3 live lanes -> 1 pad lane, poisoned before stepping.
+        let mut bs = engine.new_batch_state(0);
+        for _ in 0..3 {
+            let fresh = engine.new_state();
+            engine.admit_lane(&fresh, &mut bs);
+        }
+        assert_eq!(bs.padded_batch(), 4, "{kind:?}");
+        for layer in &mut bs.layers {
+            match layer {
+                BatchLayerState::Float(st) => {
+                    for r in 3..st.c.rows {
+                        st.c.row_mut(r).fill(1e6);
+                        st.h.row_mut(r).fill(-1e6);
+                    }
+                }
+                BatchLayerState::Integer(st) => {
+                    for r in 3..st.c.rows {
+                        st.c.row_mut(r).fill(i16::MAX);
+                        st.h.row_mut(r).fill(-77);
+                    }
+                }
+            }
+        }
+        for r in 3..bs.h.rows {
+            bs.h.row_mut(r).fill(f32::MAX);
+            bs.logits.row_mut(r).fill(f32::MIN);
+        }
+        for t in 0..12 {
+            let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+            engine.step_tokens(&toks, &mut bs);
+        }
+        for lane in 0..3 {
+            let mut got = engine.new_state();
+            engine.scatter_session(&bs, &mut got, lane);
+            for (a, b) in got.h.iter().zip(&seq[lane].h) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} int4 lane {lane} h");
+            }
+            for (a, b) in got.logits.iter().zip(&seq[lane].logits) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} int4 lane {lane} logits");
+            }
         }
     }
 }

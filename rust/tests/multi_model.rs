@@ -34,7 +34,7 @@ use iqrnn::coordinator::{
     simulate_multi_shard_trace, BatchPolicy, ContinuousScheduler, ModelId,
     ModelRegistry, ModelSpec, Residency, SchedulerMode, Server, ServerConfig,
 };
-use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::lstm::{QuantizeOptions, StackEngine, WeightBits};
 use iqrnn::model::lm::{nll_bits, CharLm, CharLmEngine, VOCAB};
 use iqrnn::util::Pcg32;
 use iqrnn::workload::synth::RequestTrace;
@@ -164,6 +164,76 @@ fn mixed_engine_registry_is_bit_exact() {
             session,
             &engines[model as usize],
             "mixed-engine",
+        );
+    }
+}
+
+/// End-to-end int4 demotion: a registry under byte pressure demotes its
+/// cold model to nibble-packed weights, the demoted engine serves a
+/// mixed trace through the shard simulator, and every stream is still
+/// bit-exact against the demoted model's own sequential path — while
+/// the registry's residency accounting reflects the halved footprint.
+#[test]
+fn demoted_model_serves_self_consistent_streams_at_half_residency() {
+    let lms = three_lms();
+    let stats: Vec<_> =
+        lms.iter().enumerate().map(|(i, lm)| calib(lm, 700 + i as u64)).collect();
+    let workers = 2;
+    let mut registry = ModelRegistry::new();
+    // Hot: resident on both workers. Cold: pinned to one — the
+    // demotion candidate under the coldest-first policy.
+    registry.register(ModelSpec {
+        name: "hot".into(),
+        lm: &lms[0],
+        engine: StackEngine::Integer,
+        stats: Some(&stats[0]),
+        opts: QuantizeOptions::default(),
+        residency: Residency::All,
+    });
+    registry.register(ModelSpec {
+        name: "cold".into(),
+        lm: &lms[1],
+        engine: StackEngine::Integer,
+        stats: Some(&stats[1]),
+        opts: QuantizeOptions::default(),
+        residency: Residency::Count(1),
+    });
+    let cold_before = registry.weight_bytes(1);
+    let total = registry.total_resident_weight_bytes(workers);
+    let demoted = registry.enforce_weight_budget(total - cold_before / 4, workers);
+    assert_eq!(demoted, vec![1], "cold model demotes first");
+    assert_eq!(registry.weight_bits(1), WeightBits::Int4);
+    assert_eq!(registry.weight_bits(0), WeightBits::Int8);
+    assert!(
+        registry.weight_bytes(1) as f64 <= cold_before as f64 * 0.55,
+        "demoted residency {}B vs int8 {}B",
+        registry.weight_bytes(1),
+        cold_before
+    );
+
+    // Serve a mixed trace with the demoted registry's engines.
+    let engines = registry.instantiate_all();
+    let trace = RequestTrace::generate_multi(24, 900.0, 10, VOCAB, 2, 63);
+    let cfg = iqrnn::coordinator::ShardConfig {
+        workers,
+        max_lanes: 4,
+        ..Default::default()
+    };
+    let (scheds, rep) = simulate_multi_shard_trace(
+        &engines,
+        &registry.residency(workers),
+        &trace,
+        &cfg,
+    );
+    assert_eq!(rep.completions.len(), trace.requests.len());
+    for (model, session) in stream_keys(&trace) {
+        assert_stream_bit_exact(
+            &scheds,
+            &trace,
+            model,
+            session,
+            &engines[model as usize],
+            "int4-demoted",
         );
     }
 }

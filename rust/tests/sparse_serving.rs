@@ -71,7 +71,7 @@ fn calib(lm: &CharLm) -> Vec<CalibrationStats> {
 }
 
 fn sparse_opts() -> QuantizeOptions {
-    QuantizeOptions { sparse_weights: true, naive_layernorm: false }
+    QuantizeOptions { sparse_weights: true, ..Default::default() }
 }
 
 fn sparse_engine(lm: &CharLm, kind: StackEngine) -> CharLmEngine {
