@@ -8,7 +8,10 @@
 //! * E6 — the §3.1.1 accumulator safe-depth table;
 //! * batching-policy sweep on the serving stack;
 //! * dense vs block-sparse serving sweep at 50/75/90% sparsity
-//!   (tokens/s, effective-FLOP speedup, retained bits/char).
+//!   (tokens/s, effective-FLOP speedup, retained bits/char), with the
+//!   computed effective-FLOP column cross-checked against measured
+//!   MACs from the kernel counters (divergence >1% is flagged);
+//! * int8 vs int4 measured-MAC attribution by format.
 //!
 //! Run: `cargo bench --bench ablations`.
 
@@ -190,9 +193,15 @@ fn batching_sweep() {
 /// MR × K_BLOCK tiles), quantize with block-sparse storage, and report
 /// batched throughput, effective-FLOP speedup (dense MACs / surviving
 /// MACs), and retained accuracy (bits/char vs the dense model).
+///
+/// Since PR 10 the effective-FLOP column is cross-checked against the
+/// kernel counters: one counted replay of the batched loop measures
+/// the MACs the GEMMs actually executed, and any >1% divergence
+/// between the computed ratio and the measured one is flagged.
 fn sparsity_sweep() {
     use iqrnn::model::lm::nll_bits;
     use iqrnn::sparse::{prune_block_structured, sparsity_of};
+    use iqrnn::tensor::kernel_counters;
     use iqrnn::util::timer::bench;
 
     println!("== dense vs block-sparse serving (integer engine) ==\n");
@@ -235,11 +244,12 @@ fn sparsity_sweep() {
     let steps = 48usize;
 
     println!(
-        "{:<10} {:>12} {:>10} {:>10} {:>11} {:>10}",
-        "sparsity", "tok/s (b8)", "vs dense", "eff-FLOP", "bits/char", "Δ bpc"
+        "{:<10} {:>12} {:>10} {:>10} {:>10} {:>10} {:>11} {:>10}",
+        "sparsity", "tok/s (b8)", "vs dense", "eff-FLOP", "meas MMAC", "meas eff", "bits/char", "Δ bpc"
     );
     let mut dense_tps = 0f64;
     let mut dense_bpc = 0f64;
+    let mut dense_macs = 0u64;
     for &sparsity in &[0.0f64, 0.5, 0.75, 0.9] {
         let (lm, measured) = make_lm(sparsity);
         let stats = lm.calibrate(&calib);
@@ -268,6 +278,28 @@ fn sparsity_sweep() {
         .median_secs();
         let tps = (batch * steps) as f64 / secs;
 
+        // Measured MACs: one counted replay of the same batched loop
+        // through the kernel counters. The dense pass records logical
+        // dims via the int8 GEMM; sparse passes record executed MACs
+        // (stored blocks only) via the BSR kernel.
+        kernel_counters::reset();
+        {
+            let mut bs = engine.new_batch_state(0);
+            for _ in 0..batch {
+                let fresh = engine.new_state();
+                engine.admit_lane(&fresh, &mut bs);
+            }
+            for t in 0..steps {
+                let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+                engine.step_tokens(&toks, &mut bs);
+            }
+        }
+        let macs = kernel_counters::take();
+        assert!(
+            !macs.is_empty(),
+            "counted replay recorded no GEMMs — kernel counters broken"
+        );
+
         // Accuracy: next-char bits on a fixed eval stream.
         let mut st = engine.new_state();
         let mut nll = 0f64;
@@ -281,22 +313,98 @@ fn sparsity_sweep() {
         if sparsity == 0.0 {
             dense_tps = tps;
             dense_bpc = bpc;
+            dense_macs = macs.total_macs();
         }
         let eff_flop = if measured < 1.0 { 1.0 / (1.0 - measured) } else { f64::INFINITY };
+        let meas_eff = dense_macs as f64 / macs.total_macs() as f64;
+        // The computed ratio assumes the kernel skips exactly the
+        // pruned tile fraction; the counters say what it actually did.
+        let flag = if (meas_eff / eff_flop - 1.0).abs() > 0.01 { " (>1% off computed!)" } else { "" };
         println!(
-            "{:<10} {:>12.0} {:>9.2}x {:>9.2}x {:>11.3} {:>+10.3}",
+            "{:<10} {:>12.0} {:>9.2}x {:>9.2}x {:>10.2} {:>9.2}x {:>11.3} {:>+10.3}{flag}",
             format!("{:.0}%", sparsity * 100.0),
             tps,
             tps / dense_tps,
             eff_flop,
+            macs.total_macs() as f64 / 1e6,
+            meas_eff,
             bpc,
             bpc - dense_bpc
         );
     }
     println!(
         "\n  eff-FLOP = dense MACs / surviving MACs (block-structured, so the \
-         kernel skips exactly this fraction);\n  Δ bpc is the accuracy cost of \
-         pruning on this random-weight proxy model.\n"
+         kernel skips exactly this fraction);\n  meas MMAC / meas eff = the \
+         kernel counters' measured MACs for the same loop and the speedup they \
+         imply — divergence >1% from the computed column is flagged;\n  Δ bpc \
+         is the accuracy cost of pruning on this random-weight proxy model.\n"
+    );
+}
+
+/// Int8 vs int4 measured-MAC attribution: the same batched loop run
+/// under both weight formats must execute the same *logical* MACs —
+/// the counters just attribute them to a different format column.
+/// Any >1% divergence between the two totals means a kernel is doing
+/// (or counting) work the other is not, and gets flagged loudly.
+fn format_attribution() {
+    use iqrnn::lstm::WeightBits;
+    use iqrnn::tensor::kernel_counters;
+
+    println!("== int8 vs int4: measured MACs by format ==\n");
+    let hidden = 64usize;
+    let mut rng = Pcg32::seeded(41);
+    let spec = LstmSpec::plain(VOCAB, hidden);
+    let stack_weights = StackWeights::random(VOCAB, spec, 1, &mut rng);
+    let mut out_w = Matrix::<f32>::zeros(VOCAB, hidden);
+    rng.fill_uniform_f32(&mut out_w.data, -0.3, 0.3);
+    let lm = CharLm { stack_weights, out_w, out_b: vec![0.0; VOCAB], hidden, depth: 1 };
+    let calib: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..32).map(|_| rng.below(VOCAB as u32) as usize).collect())
+        .collect();
+    let stats = lm.calibrate(&calib);
+    let batch = 8usize;
+    let steps = 48usize;
+    let streams: Vec<Vec<usize>> = (0..batch)
+        .map(|s| (0..steps).map(|t| (5 * s + 3 * t + 1) % VOCAB).collect())
+        .collect();
+
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>12} {:>12}",
+        "format", "gemm i8", "MMAC i8", "gemm i4", "MMAC i4", "total MMAC"
+    );
+    let mut totals = Vec::new();
+    for (label, bits) in [("int8", WeightBits::Int8), ("int4", WeightBits::Int4)] {
+        let opts = QuantizeOptions { weight_bits: bits, ..Default::default() };
+        let engine = lm.engine(StackEngine::Integer, Some(&stats), opts);
+        kernel_counters::reset();
+        let mut bs = engine.new_batch_state(0);
+        for _ in 0..batch {
+            let fresh = engine.new_state();
+            engine.admit_lane(&fresh, &mut bs);
+        }
+        for t in 0..steps {
+            let toks: Vec<usize> = streams.iter().map(|s| s[t]).collect();
+            engine.step_tokens(&toks, &mut bs);
+        }
+        let macs = kernel_counters::take();
+        println!(
+            "{:<8} {:>10} {:>12.2} {:>10} {:>12.2} {:>12.2}",
+            label,
+            macs.gemm_i8,
+            macs.macs_i8 as f64 / 1e6,
+            macs.gemm_i4,
+            macs.macs_i4 as f64 / 1e6,
+            macs.total_macs() as f64 / 1e6
+        );
+        totals.push(macs);
+    }
+    let (i8_run, i4_run) = (&totals[0], &totals[1]);
+    assert_eq!(i8_run.macs_i4, 0, "int8 run must not touch the int4 kernel");
+    assert!(i4_run.gemm_i4 > 0, "int4 run never hit the int4 kernel");
+    let ratio = i4_run.total_macs() as f64 / i8_run.total_macs() as f64;
+    let flag = if (ratio - 1.0).abs() > 0.01 { "  <-- >1% DIVERGENCE" } else { "" };
+    println!(
+        "\n  int4/int8 logical-MAC ratio: {ratio:.4} (same schedule, so 1.0000 expected){flag}\n"
     );
 }
 
@@ -306,5 +414,6 @@ fn main() {
     overflow_table();
     batching_sweep();
     sparsity_sweep();
+    format_attribution();
     println!("ablations OK");
 }

@@ -7,8 +7,9 @@
 //! Run: `cargo bench --bench deployment_speed`.
 
 use iqrnn::coordinator::{
-    shard_home, simulate_multi_shard_trace, simulate_shard_trace, simulate_trace,
-    ModelId, SchedulerMode, ShardConfig,
+    chrome_trace_string, jsonl_string, shard_home, simulate_multi_shard_trace,
+    simulate_shard_trace, simulate_trace, ModelId, SchedulerMode, ShardConfig,
+    TraceConfig, TraceLevel,
 };
 use iqrnn::eval::metrics::RtFactor;
 use iqrnn::lstm::{
@@ -578,6 +579,118 @@ fn main() {
         match std::fs::write("BENCH_hibernate.json", &json) {
             Ok(()) => println!("wrote BENCH_hibernate.json"),
             Err(e) => eprintln!("could not write BENCH_hibernate.json: {e}"),
+        }
+
+        // Trace-overhead sweep: the observability cost contract. The
+        // same deterministic replay at every trace level — the token
+        // stream must be bit-identical across levels (tracing never
+        // perturbs the schedule) and the Counters level must cost no
+        // more than 5% throughput over Off. The Full run's event log is
+        // written out as the sample Chrome-trace + JSONL artifacts CI
+        // uploads next to the BENCH_*.json series. Emits
+        // BENCH_trace.json, TRACE_shard.json, TRACE_shard.jsonl.
+        println!("\n== trace overhead sweep (2 workers, 8 lanes, Integer) ==");
+        println!(
+            "{:<10} {:>12} {:>9} {:>9}",
+            "level", "tokens/sec", "events", "stage n"
+        );
+        let tr_trace = if quick {
+            RequestTrace::generate(24, 500.0, 12, VOCAB, 19)
+        } else {
+            RequestTrace::generate(96, 900.0, 32, VOCAB, 19)
+        };
+        let tr_reps = if quick { 3 } else { 5 };
+        let mut level_secs: Vec<f64> = Vec::new();
+        let mut entries: Vec<String> = Vec::new();
+        let mut baseline: Option<Vec<String>> = None;
+        let mut full_events = Vec::new();
+        for level in TraceLevel::ALL {
+            let cfg = ShardConfig {
+                workers: 2,
+                max_lanes: 8,
+                trace: TraceConfig { level, ..TraceConfig::default() },
+                ..ShardConfig::default()
+            };
+            let mut best = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..tr_reps {
+                let t0 = std::time::Instant::now();
+                let (_scheds, rep) = simulate_shard_trace(&engine, &tr_trace, &cfg);
+                best = best.min(t0.elapsed().as_secs_f64());
+                assert_eq!(rep.completions.len(), tr_trace.requests.len());
+                last = Some(rep);
+            }
+            let rep = last.expect("at least one rep");
+            let tuples: Vec<String> = rep
+                .completions
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{}:{}:{}:{}",
+                        d.model,
+                        d.session,
+                        d.tokens,
+                        d.nll_bits.to_bits()
+                    )
+                })
+                .collect();
+            match &baseline {
+                None => baseline = Some(tuples),
+                Some(base) => assert_eq!(
+                    base,
+                    &tuples,
+                    "trace level {} changed the token stream",
+                    level.label()
+                ),
+            }
+            let tps = rep.lane_steps() as f64 / best;
+            println!(
+                "{:<10} {:>12.0} {:>9} {:>9}",
+                level.label(),
+                tps,
+                rep.trace_events.len(),
+                rep.stage.execute.count()
+            );
+            entries.push(format!(
+                "    {{\"level\": \"{}\", \"tokens_per_sec\": {:.1}, \"events\": {}, \
+                 \"ticks\": {}}}",
+                level.label(),
+                tps,
+                rep.trace_events.len(),
+                rep.ticks
+            ));
+            if level == TraceLevel::Full {
+                full_events = rep.trace_events;
+            }
+            level_secs.push(best);
+        }
+        // The cost contract: Counters within 5% of Off. The 2 ms
+        // absolute floor keeps the quick run's tiny timings from
+        // flaking the assert on scheduler jitter.
+        let (o_min, c_min) = (level_secs[0], level_secs[1]);
+        assert!(
+            c_min <= o_min * 1.05 + 0.002,
+            "Counters tracing overhead above 5%: off {o_min:.4}s vs counters {c_min:.4}s"
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"trace_overhead\",\n  \"config\": {{\"workers\": 2, \
+             \"max_lanes\": 8, \"requests\": {}, \"reps\": {tr_reps}}},\n  \
+             \"counters_overhead_vs_off\": {:.4},\n  \"results\": [\n{}\n  ]\n}}\n",
+            tr_trace.requests.len(),
+            c_min / o_min,
+            entries.join(",\n")
+        );
+        match std::fs::write("BENCH_trace.json", &json) {
+            Ok(()) => println!("wrote BENCH_trace.json"),
+            Err(e) => eprintln!("could not write BENCH_trace.json: {e}"),
+        }
+        match std::fs::write("TRACE_shard.json", chrome_trace_string(&full_events)) {
+            Ok(()) => println!("wrote TRACE_shard.json ({} events)", full_events.len()),
+            Err(e) => eprintln!("could not write TRACE_shard.json: {e}"),
+        }
+        match std::fs::write("TRACE_shard.jsonl", jsonl_string(&full_events)) {
+            Ok(()) => println!("wrote TRACE_shard.jsonl"),
+            Err(e) => eprintln!("could not write TRACE_shard.jsonl: {e}"),
         }
 
         // Network serving sweep: the same pool behind the loopback TCP

@@ -250,12 +250,15 @@ impl ColdTier {
 
     /// Hibernate one session: encode its state and take ownership. The
     /// caller must have removed it from the hot table (via
-    /// `SessionManager::take`) first.
-    pub fn spill(&mut self, engine: &CharLmEngine, session: Session) {
+    /// `SessionManager::take`) first. Returns the encoded byte size
+    /// (what the tier now holds for this session — the `arg` of the
+    /// trace subsystem's `Spill` events).
+    pub fn spill(&mut self, engine: &CharLmEngine, session: Session) -> usize {
         let key = session.key();
         debug_assert!(!self.store.contains_key(&key), "double spill of {key:?}");
         let bytes = encode_state(engine, &session.state, self.codec);
-        self.bytes += bytes.len();
+        let n = bytes.len();
+        self.bytes += n;
         self.spills += 1;
         self.store.insert(
             key,
@@ -266,6 +269,7 @@ impl ColdTier {
                 last_active: session.last_active,
             },
         );
+        n
     }
 
     /// Wake one session: decode its state and remove it from the tier.

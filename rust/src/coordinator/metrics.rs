@@ -4,7 +4,9 @@
 //! per-model breakdown of a registry deployment.
 
 use crate::eval::metrics::{LatencyStats, RtFactor};
+use crate::tensor::qmatmul::kernel_counters::KernelCounters;
 use super::registry::ModelId;
+use super::trace::{StageLatencies, TraceEvent};
 
 /// Per-worker load breakdown of one serving run: how much of the work
 /// each shard executed, how wide its waves ran, and how much work it
@@ -124,6 +126,10 @@ pub struct ModelLoad {
     pub spills: usize,
     /// Sessions of this model restored from cold tiers.
     pub restores: usize,
+    /// Measured GEMM invocations and MAC counts for this model's
+    /// steps, by weight format (zero unless the run traced at
+    /// `counters` or above).
+    pub kernels: KernelCounters,
 }
 
 impl ModelLoad {
@@ -239,6 +245,20 @@ pub struct ServingReport {
     /// Per-model breakdown (occupancy, steals, evictions, memory),
     /// indexed by [`ModelId`].
     pub per_model: Vec<ModelLoad>,
+    /// Per-stage wall-clock duration histograms (admission wait,
+    /// batched execute, spill/restore), merged across workers — where
+    /// a token's latency went, beside the end-to-end histograms above.
+    /// Empty unless the run traced at `counters` or above.
+    pub stage: StageLatencies,
+    /// Measured GEMM invocations and MAC counts by weight format,
+    /// summed across workers (zero unless the run traced at `counters`
+    /// or above).
+    pub kernels: KernelCounters,
+    /// The merged lifecycle event log, `(step, worker)`-ordered; empty
+    /// unless the run traced at `full`. Export with
+    /// [`super::trace::jsonl_string`] /
+    /// [`super::trace::chrome_trace_string`].
+    pub trace_events: Vec<TraceEvent>,
 }
 
 impl ServingReport {
@@ -275,11 +295,12 @@ impl ServingReport {
         RtFactor::from_tokens(self.compute_secs / self.workers as f64, self.tokens)
     }
 
-    /// Print the one-line summary of the run.
+    /// Print the one-line summary of the run. Empty histograms print
+    /// `-`, never a plausible-looking 0.
     pub fn print(&self) {
         println!(
             "  {:<8} {:<10} models={:<2} reqs={:<5} tokens={:<7} wall={:>7.2}s \
-             tput={:>9.0} tok/s RT={:.4} p50={:.1}ms p99={:.1}ms batch={:.2} occ={:.2} \
+             tput={:>9.0} tok/s RT={:.4} p50={}ms p99={}ms batch={:.2} occ={:.2} \
              pad={:.2} peak={} adm={} wait={:.2}ms steals={} evict={} evictI={}",
             self.engine,
             self.mode,
@@ -289,8 +310,8 @@ impl ServingReport {
             self.wall_secs,
             self.throughput(),
             self.rt_factor().value(),
-            self.latency.percentile(50.0),
-            self.latency.percentile(99.0),
+            self.latency.fmt_percentile(50.0, 1),
+            self.latency.fmt_percentile(99.0, 1),
             self.mean_batch,
             self.mean_occupancy(),
             self.padded_occupancy(),
@@ -304,16 +325,48 @@ impl ServingReport {
         // Second line: the wall-clock latency histograms next to the
         // virtual-step counters above — two clocks, never one field.
         println!(
-            "    wall-clock: first-token p50/p95/p99={:.1}/{:.1}/{:.1}ms \
-             per-token p50/p95/p99={:.3}/{:.3}/{:.3}ms e2e p95={:.1}ms",
-            self.first_token_latency.percentile(50.0),
-            self.first_token_latency.percentile(95.0),
-            self.first_token_latency.percentile(99.0),
-            self.per_token_latency.percentile(50.0),
-            self.per_token_latency.percentile(95.0),
-            self.per_token_latency.percentile(99.0),
-            self.latency.percentile(95.0),
+            "    wall-clock: first-token p50/p95/p99={}/{}/{}ms \
+             per-token p50/p95/p99={}/{}/{}ms e2e p95={}ms",
+            self.first_token_latency.fmt_percentile(50.0, 1),
+            self.first_token_latency.fmt_percentile(95.0, 1),
+            self.first_token_latency.fmt_percentile(99.0, 1),
+            self.per_token_latency.fmt_percentile(50.0, 3),
+            self.per_token_latency.fmt_percentile(95.0, 3),
+            self.per_token_latency.fmt_percentile(99.0, 3),
+            self.latency.fmt_percentile(95.0, 1),
         );
+        // Stage attribution (trace level `counters`+): where the time
+        // above went.
+        if !self.stage.is_empty() {
+            println!(
+                "    stages: admission-wait p50/p99={}/{}ms ({} samples) \
+                 execute p50/p99={}/{}ms ({} steps) spill-restore p50/p99={}/{}ms \
+                 ({} events)",
+                self.stage.admission_wait.fmt_percentile(50.0, 2),
+                self.stage.admission_wait.fmt_percentile(99.0, 2),
+                self.stage.admission_wait.count(),
+                self.stage.execute.fmt_percentile(50.0, 3),
+                self.stage.execute.fmt_percentile(99.0, 3),
+                self.stage.execute.count(),
+                self.stage.spill_restore.fmt_percentile(50.0, 3),
+                self.stage.spill_restore.fmt_percentile(99.0, 3),
+                self.stage.spill_restore.count(),
+            );
+        }
+        // Measured kernel work by format (trace level `counters`+).
+        if !self.kernels.is_empty() {
+            println!(
+                "    kernels: gemms={} macs={} (i8 {}/{} i4 {}/{} bsr {}/{})",
+                self.kernels.total_gemms(),
+                self.kernels.total_macs(),
+                self.kernels.gemm_i8,
+                self.kernels.macs_i8,
+                self.kernels.gemm_i4,
+                self.kernels.macs_i4,
+                self.kernels.gemm_bsr,
+                self.kernels.macs_bsr,
+            );
+        }
         // Third line: the state-memory closed loop — only printed when
         // hibernation did anything (or holds anything), so single-model
         // runs without a byte budget keep their two-line report.
@@ -386,6 +439,19 @@ impl ServingReport {
                 m.spills,
                 m.restores,
             );
+            if !m.kernels.is_empty() {
+                println!(
+                    "      kernels: gemms={} macs={} (i8 {}/{} i4 {}/{} bsr {}/{})",
+                    m.kernels.total_gemms(),
+                    m.kernels.total_macs(),
+                    m.kernels.gemm_i8,
+                    m.kernels.macs_i8,
+                    m.kernels.gemm_i4,
+                    m.kernels.macs_i4,
+                    m.kernels.gemm_bsr,
+                    m.kernels.macs_bsr,
+                );
+            }
         }
     }
 }

@@ -37,6 +37,11 @@
 //!   thread-per-connection streaming server over the same pool, with
 //!   a length-prefixed frame protocol, bounded admission (`Busy`
 //!   backpressure), and graceful drain;
+//! * [`trace`] — structured observability: a bounded per-worker
+//!   lifecycle event ring behind an Off/Counters/Full level, merged
+//!   into one deterministic virtual-step-ordered log, with per-stage
+//!   duration histograms and Chrome-trace / JSONL export (tracing
+//!   never perturbs schedules or token values);
 //! * [`metrics`] — counters + the RT-factor / latency / occupancy /
 //!   steal reports, with per-worker and per-model breakdowns.
 //!
@@ -54,6 +59,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod trace;
 
 pub use batcher::{BatchPolicy, Batcher, Poll};
 pub use hibernate::{
@@ -74,3 +80,7 @@ pub use scheduler::{
 };
 pub use server::{Server, ServerConfig};
 pub use session::{Session, SessionId, SessionKey, SessionManager};
+pub use trace::{
+    chrome_trace_string, jsonl_string, merge_events, EventKind, StageLatencies,
+    TraceConfig, TraceEvent, TraceLevel, TraceRing,
+};

@@ -21,15 +21,29 @@
 //! | kind | name | payload | direction |
 //! |------|------|---------|-----------|
 //! | 0x01 | `Request` | model u32, session u64, n u32, n × token u32 | client → server |
+//! | 0x02 | `Stats` | sub-kind u8 (`0` = Prometheus text snapshot) | client → server |
 //! | 0x11 | `Token` | model u32, session u64, pos u32, pred u32 | server → client |
 //! | 0x12 | `Done` | model u32, session u64, tokens u32, nll_bits f64, wall_ms f64, first_token_wall_ms f64 | server → client |
 //! | 0x13 | `Busy` | model u32, session u64 | server → client |
 //! | 0x14 | `Bye` | (empty) | server → client |
+//! | 0x15 | `StatsText` | UTF-8 metrics text | server → client |
 //!
 //! A client streams `Request` frames (one per chunk), then half-closes
 //! its write side; the server streams back one `Token` frame per
 //! executed position and one `Done` per finished chunk, and terminates
 //! every connection with `Bye`.
+//!
+//! ## Live metrics
+//!
+//! A `Stats` frame (sub-kind 0) may arrive on any connection at any
+//! time — including a dedicated polling connection that never submits
+//! work — and is answered with one `StatsText` frame carrying a
+//! Prometheus-style text snapshot of the live counters (per-model
+//! tokens, completed requests, in-flight sessions; busy rejections,
+//! connections, uptime). Unknown sub-kinds are a decode error, not a
+//! silent default (`unknown_stats_subkind_is_rejected_not_defaulted`).
+//! Stats polling stays answerable during drain; it never touches
+//! admission.
 //!
 //! ## Backpressure
 //!
@@ -68,6 +82,7 @@ use super::router::ShardRouter;
 use super::scheduler::StreamItem;
 use super::server::{run_worker, CompletionAgg, Server, WorkerCfg, WorkerEvent};
 use super::session::SessionKey;
+use super::trace::{merge_events, EventKind, TraceConfig, TraceEvent, TraceLevel};
 
 /// Hard cap on one frame's `len` field (kind byte + payload): a
 /// defensive bound so a corrupt or hostile length prefix cannot ask
@@ -75,10 +90,16 @@ use super::session::SessionKey;
 pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
 
 const KIND_REQUEST: u8 = 0x01;
+const KIND_STATS: u8 = 0x02;
 const KIND_TOKEN: u8 = 0x11;
 const KIND_DONE: u8 = 0x12;
 const KIND_BUSY: u8 = 0x13;
 const KIND_BYE: u8 = 0x14;
+const KIND_STATS_TEXT: u8 = 0x15;
+
+/// The only `Stats` sub-kind defined so far: a Prometheus text
+/// snapshot. Any other sub-kind byte is a decode error.
+const STATS_PROMETHEUS: u8 = 0;
 
 /// One protocol frame (see the module docs for the wire layout).
 #[derive(Debug, Clone, PartialEq)]
@@ -129,6 +150,16 @@ pub enum Frame {
         model: u32,
         /// The refused stream id.
         session: u64,
+    },
+    /// Client → server: poll the live metrics (sub-kind 0, the only
+    /// one defined — a Prometheus text snapshot). Answered with one
+    /// [`Frame::StatsText`]; never touches admission.
+    Stats,
+    /// Server → client: the answer to a [`Frame::Stats`] poll — a
+    /// Prometheus-style text snapshot of the live serving counters.
+    StatsText {
+        /// The metrics exposition text (UTF-8).
+        text: String,
     },
     /// Server → client: terminal frame; the server closes the
     /// connection after sending it.
@@ -204,6 +235,14 @@ impl Frame {
                 put_u32(&mut body, *model);
                 put_u64(&mut body, *session);
             }
+            Frame::Stats => {
+                body.push(KIND_STATS);
+                body.push(STATS_PROMETHEUS);
+            }
+            Frame::StatsText { text } => {
+                body.push(KIND_STATS_TEXT);
+                body.extend_from_slice(text.as_bytes());
+            }
             Frame::Bye => body.push(KIND_BYE),
         }
         let mut out = Vec::with_capacity(4 + body.len());
@@ -248,6 +287,24 @@ impl Frame {
             KIND_BUSY => {
                 Ok(Frame::Busy { model: get_u32(p, 0)?, session: get_u64(p, 4)? })
             }
+            KIND_STATS => match p {
+                [STATS_PROMETHEUS] => Ok(Frame::Stats),
+                [other] => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unknown stats sub-kind {other}"),
+                )),
+                _ => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "stats frame length mismatch",
+                )),
+            },
+            KIND_STATS_TEXT => match String::from_utf8(p.to_vec()) {
+                Ok(text) => Ok(Frame::StatsText { text }),
+                Err(_) => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "stats text is not utf-8",
+                )),
+            },
             KIND_BYE => Ok(Frame::Bye),
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
@@ -438,6 +495,49 @@ struct NetState {
     draining: bool,
     /// Requests refused with `Busy`.
     busy_rejections: usize,
+    /// Executed token positions per model (dispatcher-updated at each
+    /// `Token` event) — the `iqrnn_tokens_total` counter.
+    tokens_by_model: Vec<usize>,
+    /// Completed requests per model (dispatcher-updated at `Done`).
+    requests_by_model: Vec<usize>,
+    /// Connections accepted and served so far.
+    connections: usize,
+    /// `Busy` lifecycle events recorded at trace level `full`, bounded
+    /// by the trace ring capacity. The front has no virtual step, so
+    /// these carry `step == 0` and `worker == u32::MAX` and are merged
+    /// into the report's event log after the pool drains.
+    busy_events: Vec<TraceEvent>,
+}
+
+/// Render the Prometheus-style text snapshot a [`Frame::Stats`] poll
+/// is answered with. Counters are monotone within one serve run;
+/// gauges are instantaneous.
+fn prometheus_text(st: &NetState, names: &[String], uptime_secs: f64) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str("# TYPE iqrnn_tokens_total counter\n");
+    for (m, name) in names.iter().enumerate() {
+        let _ = writeln!(out, "iqrnn_tokens_total{{model=\"{name}\"}} {}", st.tokens_by_model[m]);
+    }
+    out.push_str("# TYPE iqrnn_requests_completed_total counter\n");
+    for (m, name) in names.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "iqrnn_requests_completed_total{{model=\"{name}\"}} {}",
+            st.requests_by_model[m]
+        );
+    }
+    out.push_str("# TYPE iqrnn_inflight_sessions gauge\n");
+    for (m, name) in names.iter().enumerate() {
+        let _ = writeln!(out, "iqrnn_inflight_sessions{{model=\"{name}\"}} {}", st.inflight[m]);
+    }
+    out.push_str("# TYPE iqrnn_busy_rejections_total counter\n");
+    let _ = writeln!(out, "iqrnn_busy_rejections_total {}", st.busy_rejections);
+    out.push_str("# TYPE iqrnn_connections_total counter\n");
+    let _ = writeln!(out, "iqrnn_connections_total {}", st.connections);
+    out.push_str("# TYPE iqrnn_uptime_seconds gauge\n");
+    let _ = writeln!(out, "iqrnn_uptime_seconds {uptime_secs:.3}");
+    out
 }
 
 /// The TCP front bound to a [`Server`]'s pool.
@@ -480,7 +580,12 @@ impl<'s, 'a> NetServer<'s, 'a> {
             inflight: vec![0; n_models],
             draining: false,
             busy_rejections: 0,
+            tokens_by_model: vec![0; n_models],
+            requests_by_model: vec![0; n_models],
+            connections: 0,
+            busy_events: Vec::new(),
         });
+        let model_names = server.registry().names();
         // Raised after the pool has fully drained: readers on still-
         // open connections exit, which lets their writers send `Bye`.
         let closing = AtomicBool::new(false);
@@ -494,6 +599,7 @@ impl<'s, 'a> NetServer<'s, 'a> {
             spill_quantized: server.config.spill_quantized,
             // The token tap is what the front streams to clients.
             record_tokens: true,
+            trace: server.config.trace,
         };
         self.listener.set_nonblocking(true)?;
 
@@ -506,6 +612,7 @@ impl<'s, 'a> NetServer<'s, 'a> {
             let closing = &closing;
             let registry = server.registry();
             let wcfg = &wcfg;
+            let model_names = &model_names;
             let mut worker_handles = Vec::new();
             for w in 0..workers {
                 let events = ev_tx.clone();
@@ -524,7 +631,8 @@ impl<'s, 'a> NetServer<'s, 'a> {
                 for ev in ev_rx.iter() {
                     match ev {
                         WorkerEvent::Token(t) => {
-                            let st = state.lock().expect("net state lock");
+                            let mut st = state.lock().expect("net state lock");
+                            st.tokens_by_model[t.model as usize] += 1;
                             if let Some(route) = st.routes.get(&(t.model, t.session)) {
                                 let _ = route.tx.send(Frame::Token {
                                     model: t.model,
@@ -537,6 +645,7 @@ impl<'s, 'a> NetServer<'s, 'a> {
                         WorkerEvent::Done(d) => {
                             agg.record(&d);
                             let mut st = state.lock().expect("net state lock");
+                            st.requests_by_model[d.model as usize] += 1;
                             if let Some(route) =
                                 st.routes.remove(&(d.model, d.session))
                             {
@@ -573,8 +682,10 @@ impl<'s, 'a> NetServer<'s, 'a> {
                 match self.listener.accept() {
                     Ok((stream, _peer)) => {
                         connections += 1;
+                        state.lock().expect("net state lock").connections += 1;
                         spawn_connection(
                             scope, stream, router, state, closing, n_models, budget,
+                            model_names, wall_start, server.config.trace,
                         );
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -627,17 +738,24 @@ impl<'s, 'a> NetServer<'s, 'a> {
         })?;
         let wall_secs = wall_start.elapsed().as_secs_f64();
 
-        let busy_rejections = state.lock().expect("net state lock").busy_rejections;
-        Ok(NetReport {
-            serving: server.assemble_report(&summaries, &router, &residency, wall_secs, agg),
-            connections,
-            refused_connects,
-            busy_rejections,
-        })
+        let (busy_rejections, busy_events) = {
+            let mut st = state.lock().expect("net state lock");
+            (st.busy_rejections, std::mem::take(&mut st.busy_events))
+        };
+        let mut serving =
+            server.assemble_report(&summaries, &router, &residency, wall_secs, agg);
+        if !busy_events.is_empty() {
+            // Fold the front's Busy events (worker `u32::MAX`, step 0)
+            // into the workers' merged event log.
+            let worker_events = std::mem::take(&mut serving.trace_events);
+            serving.trace_events = merge_events(vec![worker_events, busy_events]);
+        }
+        Ok(NetReport { serving, connections, refused_connects, busy_rejections })
     }
 }
 
 /// Spawn the reader + writer pair for one accepted connection.
+#[allow(clippy::too_many_arguments)]
 fn spawn_connection<'scope>(
     scope: &'scope std::thread::Scope<'scope, '_>,
     stream: TcpStream,
@@ -646,6 +764,9 @@ fn spawn_connection<'scope>(
     closing: &'scope AtomicBool,
     n_models: usize,
     budget: usize,
+    model_names: &'scope [String],
+    wall_start: Instant,
+    trace: TraceConfig,
 ) {
     let (tx, rx) = channel::<Frame>();
     let write_half = stream.try_clone();
@@ -694,6 +815,20 @@ fn spawn_connection<'scope>(
                             st.inflight[model as usize] += 1;
                         } else {
                             st.busy_rejections += 1;
+                            if trace.level >= TraceLevel::Full
+                                && st.busy_events.len() < trace.capacity
+                            {
+                                st.busy_events.push(TraceEvent {
+                                    step: 0,
+                                    wall_us: wall_start.elapsed().as_micros() as u64,
+                                    dur_us: 0,
+                                    worker: u32::MAX,
+                                    model,
+                                    session,
+                                    arg: 0,
+                                    kind: EventKind::Busy,
+                                });
+                            }
                         }
                         ok
                     };
@@ -707,6 +842,20 @@ fn spawn_connection<'scope>(
                     } else {
                         let _ = tx.send(Frame::Busy { model, session });
                     }
+                }
+                Ok(Some(Frame::Stats)) => {
+                    // Metrics poll: snapshot under the state lock,
+                    // answer through the connection's writer. Stays
+                    // answerable during drain.
+                    let text = {
+                        let st = state.lock().expect("net state lock");
+                        prometheus_text(
+                            &st,
+                            model_names,
+                            wall_start.elapsed().as_secs_f64(),
+                        )
+                    };
+                    let _ = tx.send(Frame::StatsText { text });
                 }
                 // A client sending server-side frames is a protocol
                 // violation; clean EOF and raised `closing` both end
@@ -753,6 +902,24 @@ impl NetClient {
         read_frame(&mut self.stream)
     }
 
+    /// Poll the server's live metrics: send one [`Frame::Stats`] and
+    /// block for the [`Frame::StatsText`] answer. Other frames
+    /// arriving on this connection in the meantime (tokens of live
+    /// streams) are skipped, so prefer a dedicated polling connection
+    /// when the full stream matters.
+    pub fn stats(&mut self) -> io::Result<String> {
+        write_frame(&mut self.stream, &Frame::Stats)?;
+        while let Some(f) = self.read_frame()? {
+            if let Frame::StatsText { text } = f {
+                return Ok(text);
+            }
+        }
+        Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "connection closed before StatsText",
+        ))
+    }
+
     /// Read frames until `Bye` or EOF, returning everything before the
     /// terminal frame.
     pub fn read_to_bye(&mut self) -> io::Result<Vec<Frame>> {
@@ -786,6 +953,8 @@ mod tests {
                 first_token_wall_ms: 0.5,
             },
             Frame::Busy { model: 1, session: 2 },
+            Frame::Stats,
+            Frame::StatsText { text: "iqrnn_connections_total 1\n".into() },
             Frame::Bye,
         ];
         for f in &frames {
@@ -827,6 +996,24 @@ mod tests {
         let mut wire = Vec::new();
         wire.extend_from_slice(&1u32.to_le_bytes());
         wire.push(0x7F);
+        assert!(read_frame(&mut io::Cursor::new(&wire)).is_err());
+    }
+
+    #[test]
+    fn unknown_stats_subkind_is_rejected_not_defaulted() {
+        // A sub-kind the server does not know must be a decode error,
+        // never silently treated as "Prometheus".
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&2u32.to_le_bytes());
+        wire.push(KIND_STATS);
+        wire.push(9);
+        let err = read_frame(&mut io::Cursor::new(&wire)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("sub-kind"), "got: {err}");
+        // A stats frame with no sub-kind byte at all is also an error.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.push(KIND_STATS);
         assert!(read_frame(&mut io::Cursor::new(&wire)).is_err());
     }
 }

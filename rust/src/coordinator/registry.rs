@@ -136,6 +136,12 @@ impl<'a> ModelRegistry<'a> {
         &self.models[model as usize].spec.name
     }
 
+    /// All model names in [`ModelId`] order — the label set the live
+    /// metrics snapshot ([`super::net`]) is keyed by.
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|r| r.spec.name.clone()).collect()
+    }
+
     /// Engine kind of a model.
     pub fn engine_kind(&self, model: ModelId) -> StackEngine {
         self.models[model as usize].spec.engine

@@ -56,11 +56,13 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::model::lm::{nll_bits, CharLmEngine, LmBatchState};
+use crate::tensor::qmatmul::kernel_counters::{self, KernelCounters};
 use crate::workload::synth::RequestTrace;
 use super::hibernate::{ColdTier, SpillCodec};
 use super::registry::{ModelId, ModelRegistry};
 use super::router::{ShardPoll, ShardRouter};
 use super::session::{SessionId, SessionKey, SessionManager};
+use super::trace::{EventKind, StageLatencies, TraceConfig, TraceEvent, TraceLevel, TraceRing};
 
 /// Which scheduling discipline the coordinator runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -207,6 +209,12 @@ pub struct SchedulerStats {
     /// budget enforcement each tick, so `peak <= budget` is the byte
     /// invariant `rust/tests/hibernation.rs` asserts.
     pub peak_resident_state_bytes: usize,
+    /// Measured GEMM invocations and MAC counts by weight format,
+    /// folded from the kernel-level counters
+    /// ([`crate::tensor::qmatmul::kernel_counters`]) around each
+    /// batched step. Zero unless the scheduler runs at
+    /// [`TraceLevel::Counters`] or above.
+    pub kernels: KernelCounters,
 }
 
 impl SchedulerStats {
@@ -264,6 +272,7 @@ impl SchedulerStats {
         self.restores += other.restores;
         self.peak_resident_state_bytes =
             self.peak_resident_state_bytes.max(other.peak_resident_state_bytes);
+        self.kernels.add(&other.kernels);
     }
 }
 
@@ -296,6 +305,13 @@ pub struct ContinuousScheduler<'a> {
     /// Per-model session state bytes (`engine.state_bytes()`; 0 for
     /// non-resident models) — the prices the byte accounting uses.
     state_bytes: Vec<usize>,
+    /// The observability ring (see [`super::trace`]): every lifecycle
+    /// transition is emitted here at [`TraceLevel::Full`]; a no-op
+    /// below that. Never consulted by any scheduling decision.
+    trace: TraceRing,
+    /// Per-stage wall-clock duration histograms, accumulated at
+    /// [`TraceLevel::Counters`] and above.
+    stage: StageLatencies,
 }
 
 /// First maximum of a logits row — the deterministic greedy decode
@@ -368,7 +384,66 @@ impl<'a> ContinuousScheduler<'a> {
             token_events: Vec::new(),
             cold: ColdTier::new(SpillCodec::Exact),
             state_bytes,
+            trace: TraceRing::new(TraceConfig::default(), 0),
+            stage: StageLatencies::default(),
         }
+    }
+
+    /// Configure observability for this scheduler: the recording level
+    /// and the worker index stamped onto emitted events. Replaces the
+    /// ring, so call before any work runs (events emitted earlier are
+    /// discarded).
+    pub fn set_trace(&mut self, config: TraceConfig, worker: u32) {
+        self.trace = TraceRing::new(config, worker);
+        self.stage = StageLatencies::default();
+    }
+
+    /// The recording level this scheduler runs at.
+    pub fn trace_level(&self) -> TraceLevel {
+        self.trace.level()
+    }
+
+    /// Set the virtual-step clock stamped onto subsequent trace events
+    /// (the simulators call this with their tick counter; the threaded
+    /// server with its per-worker loop iteration).
+    pub fn set_trace_step(&mut self, step: u64) {
+        self.trace.set_step(step);
+    }
+
+    /// Emit one trace event on this scheduler's ring on behalf of the
+    /// driving loop (e.g. the simulator's `Steal` events, which happen
+    /// at the router, outside the scheduler proper). No-op below
+    /// [`TraceLevel::Full`], like every emission.
+    pub fn trace_event(
+        &mut self,
+        kind: EventKind,
+        model: ModelId,
+        session: SessionId,
+        arg: u64,
+    ) {
+        self.trace.emit(kind, model, session, arg);
+    }
+
+    /// Drain the recorded trace events (emission order; empty below
+    /// [`TraceLevel::Full`]).
+    pub fn take_trace_events(&mut self) -> Vec<TraceEvent> {
+        self.trace.take()
+    }
+
+    /// Events dropped to the ring's capacity bound so far.
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace.dropped()
+    }
+
+    /// The per-stage duration histograms accumulated so far (all empty
+    /// below [`TraceLevel::Counters`]).
+    pub fn stage_latencies(&self) -> &StageLatencies {
+        &self.stage
+    }
+
+    /// Take the per-stage duration histograms, leaving empty ones.
+    pub fn take_stage_latencies(&mut self) -> StageLatencies {
+        std::mem::take(&mut self.stage)
     }
 
     /// Turn per-token event recording on or off (see [`TokenEvent`]).
@@ -524,7 +599,11 @@ impl<'a> ContinuousScheduler<'a> {
             let item = self.pending.remove(i).expect("index in bounds");
             if item.tokens.is_empty() {
                 // Nothing to execute: complete immediately (consumes no
-                // lane and no quota).
+                // lane and no quota). The lifecycle log still pairs an
+                // Admit with a Done, so every Admit has exactly one
+                // completion regardless of chunk length.
+                self.trace.emit(EventKind::Admit, item.model, item.session, 0);
+                self.trace.emit(EventKind::Done, item.model, item.session, 0);
                 let wall_ms = item.submitted.elapsed().as_secs_f64() * 1e3;
                 self.done.push(StreamDone {
                     model: item.model,
@@ -542,24 +621,46 @@ impl<'a> ContinuousScheduler<'a> {
             self.stats.admission_wait_ms += wait_ms;
             self.model_stats[m].admissions += 1;
             self.model_stats[m].admission_wait_ms += wait_ms;
+            if self.trace.level() >= TraceLevel::Counters {
+                self.stage.admission_wait.record(wait_ms);
+            }
+            self.trace.emit(
+                EventKind::Admit,
+                item.model,
+                item.session,
+                item.tokens.len() as u64,
+            );
             let engine = self.engines[m].expect("resident engine");
             // Restore-before-admit: if this stream hibernated, wake it
             // into the hot table first, so the lane machinery below
             // (and every test of it) never sees a hibernated session.
             if self.cold.contains((item.model, item.session)) {
+                let t0 =
+                    (self.trace.level() >= TraceLevel::Counters).then(Instant::now);
                 let s = self
                     .cold
                     .restore((item.model, item.session), engine)
                     .expect("contained key restores");
                 self.sessions.insert(s);
+                if let Some(t0) = t0 {
+                    self.stage.spill_restore.record(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                self.trace.emit(EventKind::Restore, item.model, item.session, 0);
                 self.stats.restores += 1;
                 self.model_stats[m].restores += 1;
             }
             let wave = self.waves[m].as_mut().expect("resident wave");
             let lane = {
-                let state =
-                    &self.sessions.get_or_create(item.model, item.session, engine).state;
-                engine.admit_lane(state, &mut wave.bs)
+                let session =
+                    self.sessions.get_or_create(item.model, item.session, engine);
+                if session.tokens_seen == 0 {
+                    // `get_or_create` only ever creates at admission,
+                    // and a session retires its first lane with
+                    // `tokens_seen > 0` — so zero here means the state
+                    // was materialized just now: the stream's bind.
+                    self.trace.emit(EventKind::Bind, item.model, item.session, 0);
+                }
+                engine.admit_lane(&session.state, &mut wave.bs)
             };
             debug_assert_eq!(lane, wave.lanes.len());
             wave.lanes.push(Lane {
@@ -588,6 +689,10 @@ impl<'a> ContinuousScheduler<'a> {
             return;
         }
         self.sessions.tick();
+        // Timing and counter folding are read *around* the batched
+        // step, never inside any scheduling decision — the
+        // tracing-never-perturbs-schedules invariant.
+        let timed = self.trace.level() >= TraceLevel::Counters;
         for m in 0..self.waves.len() {
             let Some(wave) = self.waves[m].as_mut() else { continue };
             if wave.lanes.is_empty() {
@@ -597,7 +702,25 @@ impl<'a> ContinuousScheduler<'a> {
             debug_assert_eq!(wave.bs.batch(), wave.lanes.len());
             self.toks.clear();
             self.toks.extend(wave.lanes.iter().map(|l| l.tokens[l.pos]));
+            if timed {
+                kernel_counters::reset();
+            }
+            let t0 = timed.then(Instant::now);
             engine.step_tokens(&self.toks, &mut wave.bs);
+            if let Some(t0) = t0 {
+                let us = t0.elapsed().as_micros() as u64;
+                let k = kernel_counters::take();
+                self.stats.kernels.add(&k);
+                self.model_stats[m].kernels.add(&k);
+                self.stage.execute.record(us as f64 / 1e3);
+                self.trace.emit_dur(
+                    EventKind::StepBatch,
+                    m as ModelId,
+                    0,
+                    wave.lanes.len() as u64,
+                    us,
+                );
+            }
             self.stats.batched_steps += 1;
             self.stats.lane_steps += wave.lanes.len();
             self.stats.padded_lane_steps += wave.bs.padded_batch();
@@ -607,6 +730,12 @@ impl<'a> ContinuousScheduler<'a> {
             for (lane, l) in wave.lanes.iter_mut().enumerate() {
                 if l.first_ms.is_none() {
                     l.first_ms = Some(l.submitted.elapsed().as_secs_f64() * 1e3);
+                    self.trace.emit(
+                        EventKind::FirstToken,
+                        m as ModelId,
+                        l.session,
+                        l.pos as u64,
+                    );
                 }
                 if self.record_tokens {
                     self.token_events.push(TokenEvent {
@@ -634,6 +763,12 @@ impl<'a> ContinuousScheduler<'a> {
                         session.nll_bits += l.nll;
                         self.stats.retirements += 1;
                         self.model_stats[m].retirements += 1;
+                        self.trace.emit(
+                            EventKind::Done,
+                            m as ModelId,
+                            l.session,
+                            l.tokens.len() as u64,
+                        );
                         let wall_ms = l.submitted.elapsed().as_secs_f64() * 1e3;
                         self.done.push(StreamDone {
                             model: m as ModelId,
@@ -689,8 +824,9 @@ impl<'a> ContinuousScheduler<'a> {
         let protected = self.protected_keys(also_protected);
         let evicted = self.sessions.evict_longest_protected(keep_at_most, &protected);
         self.stats.evictions += evicted.len();
-        for &(m, _) in &evicted {
+        for &(m, s) in &evicted {
             self.model_stats[m as usize].evictions += 1;
+            self.trace.emit(EventKind::Evict, m, s, 0);
         }
         evicted
     }
@@ -709,8 +845,9 @@ impl<'a> ContinuousScheduler<'a> {
         let protected = self.protected_keys(also_protected);
         let evicted = self.sessions.evict_idle_protected(max_idle, &protected);
         self.stats.idle_evictions += evicted.len();
-        for &(m, _) in &evicted {
+        for &(m, s) in &evicted {
             self.model_stats[m as usize].idle_evictions += 1;
+            self.trace.emit(EventKind::Evict, m, s, 1);
         }
         evicted
     }
@@ -770,6 +907,7 @@ impl<'a> ContinuousScheduler<'a> {
         }
         let protected = self.protected_keys(&[]);
         let order = self.sessions.coldest_first(&protected);
+        let timed = self.trace.level() >= TraceLevel::Counters;
         let mut spilled = Vec::new();
         for key in order {
             if resident <= budget {
@@ -778,7 +916,12 @@ impl<'a> ContinuousScheduler<'a> {
             let s = self.sessions.take(key.0, key.1).expect("listed session resident");
             let engine = self.engines[key.0 as usize].expect("resident engine");
             resident -= self.state_bytes[key.0 as usize];
-            self.cold.spill(engine, s);
+            let t0 = timed.then(Instant::now);
+            let encoded = self.cold.spill(engine, s);
+            if let Some(t0) = t0 {
+                self.stage.spill_restore.record(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            self.trace.emit(EventKind::Spill, key.0, key.1, encoded as u64);
             self.stats.spills += 1;
             self.model_stats[key.0 as usize].spills += 1;
             spilled.push(key);
@@ -796,6 +939,7 @@ impl<'a> ContinuousScheduler<'a> {
             let engine = self.engines[key.0 as usize].expect("resident engine");
             let s = self.cold.restore(*key, engine).expect("listed key restores");
             self.sessions.insert(s);
+            self.trace.emit(EventKind::Restore, key.0, key.1, 0);
             self.stats.restores += 1;
             self.model_stats[key.0 as usize].restores += 1;
         }
@@ -994,6 +1138,10 @@ pub struct ShardConfig {
     /// default; the correctness oracle the network front-end's
     /// loopback tests compare against).
     pub record_tokens: bool,
+    /// Observability level and ring capacity for every worker (off by
+    /// default; never changes token values or schedules — the
+    /// invariant `rust/tests/trace_observability.rs` pins).
+    pub trace: TraceConfig,
 }
 
 impl Default for ShardConfig {
@@ -1010,6 +1158,7 @@ impl Default for ShardConfig {
             force_spill_every: None,
             tick_ms: 1.0,
             record_tokens: false,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -1049,6 +1198,16 @@ pub struct ShardSimReport {
     /// Per-token events in execution order (worker index order within
     /// one tick); empty unless [`ShardConfig::record_tokens`] was set.
     pub token_events: Vec<TokenEvent>,
+    /// The merged lifecycle event log, ordered by `(tick, worker)`
+    /// with each worker's emission order preserved; empty below
+    /// [`TraceLevel::Full`]. The virtual-clock fields are a pure
+    /// function of the simulated schedule, so
+    /// [`super::trace::jsonl_string`] over this log is byte-stable
+    /// across reruns of the same trace.
+    pub trace_events: Vec<TraceEvent>,
+    /// Pool-merged per-stage duration histograms (empty below
+    /// [`TraceLevel::Counters`]).
+    pub stage: StageLatencies,
 }
 
 impl ShardSimReport {
@@ -1145,6 +1304,7 @@ pub fn simulate_multi_shard_trace<'a>(
             let mut sched =
                 ContinuousScheduler::multi(per_worker, cfg.max_lanes, cfg.mode);
             sched.set_record_tokens(cfg.record_tokens);
+            sched.set_trace(cfg.trace, w as u32);
             if cfg.spill_quantized {
                 sched.set_spill_codec(SpillCodec::Int8);
             }
@@ -1178,13 +1338,35 @@ pub fn simulate_multi_shard_trace<'a>(
         }
         // Ingest + admit, worker index order (deterministic).
         for (w, sched) in scheds.iter_mut().enumerate() {
+            // Stamp the virtual clock onto this tick's trace events —
+            // the deterministic `step` field the JSONL log orders by.
+            sched.set_trace_step(ticks as u64);
             let capacity = cfg
                 .max_lanes
                 .saturating_sub(sched.live_lanes() + sched.pending_len());
             if capacity > 0 {
                 match router.poll(w, capacity) {
-                    ShardPoll::Items(new) | ShardPoll::Stolen { items: new, .. } => {
+                    ShardPoll::Items(new) => {
                         for item in new {
+                            sched.offer(item);
+                        }
+                    }
+                    ShardPoll::Stolen { items: new, victim } => {
+                        // One Steal event per stolen session (a steal
+                        // moves whole sessions; their queued chunks
+                        // arrive together).
+                        let mut stolen: Vec<SessionKey> = Vec::new();
+                        for item in new {
+                            let key = (item.model, item.session);
+                            if !stolen.contains(&key) {
+                                stolen.push(key);
+                                sched.trace_event(
+                                    EventKind::Steal,
+                                    item.model,
+                                    item.session,
+                                    victim as u64,
+                                );
+                            }
                             sched.offer(item);
                         }
                     }
@@ -1248,6 +1430,13 @@ pub fn simulate_multi_shard_trace<'a>(
             per_model[m].absorb(st);
         }
     }
+    let trace_events = super::trace::merge_events(
+        scheds.iter_mut().map(|s| s.take_trace_events()).collect(),
+    );
+    let mut stage = StageLatencies::default();
+    for sched in &scheds {
+        stage.merge(sched.stage_latencies());
+    }
     let report = ShardSimReport {
         workers: cfg.workers,
         completions,
@@ -1261,6 +1450,8 @@ pub fn simulate_multi_shard_trace<'a>(
         idle_evicted,
         spilled,
         token_events,
+        trace_events,
+        stage,
     };
     (scheds, report)
 }
@@ -1819,5 +2010,48 @@ mod tests {
                 .collect();
             assert_eq!(positions, (0..req.tokens.len()).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn trace_off_by_default_and_lifecycle_complete_when_full() {
+        let lm = tiny_lm();
+        // Integer engine: its batched steps run the int8 GEMMs, so the
+        // folded kernel counters must be nonzero at Counters+.
+        let seqs: Vec<Vec<usize>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let oh: Vec<_> =
+            seqs.iter().map(|s| crate::model::lm::one_hot_seq(s)).collect();
+        let stats = lm.stack_weights.calibrate(&oh);
+        let engine =
+            lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+        let trace = RequestTrace::generate(10, 600.0, 8, VOCAB, 17);
+        let base = ShardConfig { workers: 2, max_lanes: 4, ..ShardConfig::default() };
+        let (_s, off) = simulate_shard_trace(&engine, &trace, &base);
+        assert!(off.trace_events.is_empty(), "trace must be off by default");
+        assert!(off.stage.is_empty());
+        assert!(off.worker_stats.iter().all(|s| s.kernels.is_empty()));
+
+        let full = ShardConfig { trace: TraceConfig::full(), ..base.clone() };
+        let (scheds, rep) = simulate_shard_trace(&engine, &trace, &full);
+        assert!(scheds.iter().all(|s| s.trace_dropped() == 0));
+        let count =
+            |k: EventKind| rep.trace_events.iter().filter(|e| e.kind == k).count();
+        // Every chunk admission pairs with exactly one Done.
+        assert_eq!(count(EventKind::Admit), trace.requests.len());
+        assert_eq!(count(EventKind::Done), trace.requests.len());
+        assert!(count(EventKind::StepBatch) > 0);
+        assert!(count(EventKind::FirstToken) > 0);
+        // Counters flow at Full too, and the schedule is untouched.
+        assert!(!rep.stage.is_empty());
+        assert!(rep.worker_stats.iter().any(|s| !s.kernels.is_empty()));
+        assert_eq!(rep.completions.len(), off.completions.len());
+        for (a, b) in rep.completions.iter().zip(&off.completions) {
+            assert_eq!((a.model, a.session, a.tokens), (b.model, b.session, b.tokens));
+            assert_eq!(a.nll_bits.to_bits(), b.nll_bits.to_bits());
+        }
+        // The merged log is step-ordered.
+        assert!(rep
+            .trace_events
+            .windows(2)
+            .all(|w| w[0].step <= w[1].step));
     }
 }

@@ -38,6 +38,7 @@ use anyhow::Result;
 use crate::eval::metrics::LatencyStats;
 use crate::lstm::{CalibrationStats, QuantizeOptions, StackEngine};
 use crate::model::lm::{CharLm, CharLmEngine};
+use crate::tensor::qmatmul::kernel_counters::KernelCounters;
 use crate::workload::synth::RequestTrace;
 use super::batcher::BatchPolicy;
 use super::hibernate::SpillCodec;
@@ -48,6 +49,8 @@ use super::scheduler::{
     ContinuousScheduler, SchedulerMode, SchedulerStats, StreamDone, StreamItem,
     TokenEvent,
 };
+use super::session::SessionKey;
+use super::trace::{merge_events, EventKind, StageLatencies, TraceConfig, TraceEvent};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -97,6 +100,10 @@ pub struct ServerConfig {
     /// measured accuracy delta (see `rust/tests/numerics_edge.rs`) for
     /// the smaller cold tier.
     pub spill_quantized: bool,
+    /// Observability level and per-worker ring capacity (the `--trace`
+    /// flag; off by default). Tracing never changes token values or
+    /// schedules at any level.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServerConfig {
@@ -112,6 +119,7 @@ impl Default for ServerConfig {
             evict_idle_after: None,
             state_budget: None,
             spill_quantized: false,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -139,6 +147,7 @@ pub(crate) struct WorkerCfg {
     pub(crate) state_budget: Option<usize>,
     pub(crate) spill_quantized: bool,
     pub(crate) record_tokens: bool,
+    pub(crate) trace: TraceConfig,
 }
 
 /// Per-worker execution summary.
@@ -154,6 +163,12 @@ pub(crate) struct WorkerSummary {
     pub(crate) model_hibernated: Vec<usize>,
     /// Serialized cold-tier bytes per model at worker exit.
     pub(crate) model_hibernated_bytes: Vec<usize>,
+    /// Per-stage duration histograms (empty below trace `counters`).
+    pub(crate) stage: StageLatencies,
+    /// This worker's lifecycle events (empty below trace `full`). The
+    /// `step` field is the worker's own loop iteration counter — a
+    /// worker-local clock, unlike the simulators' shared tick.
+    pub(crate) trace_events: Vec<TraceEvent>,
 }
 
 /// Wall-clock completion aggregation shared by trace replay and the
@@ -208,12 +223,18 @@ pub(crate) fn run_worker(
         engines.iter().map(|e| e.as_ref()).collect();
     let mut sched = ContinuousScheduler::multi(engine_refs, cfg.max_lanes, cfg.mode);
     sched.set_record_tokens(cfg.record_tokens);
+    sched.set_trace(cfg.trace, w as u32);
     if cfg.spill_quantized {
         sched.set_spill_codec(SpillCodec::Int8);
     }
     let mut compute_secs = 0f64;
     let mut batches = 0usize;
     let mut items = 0usize;
+    // The worker's virtual clock for trace events: its own loop
+    // iteration counter. Unlike the simulators there is no shared tick,
+    // so cross-worker event order within a step is only meaningful
+    // per-worker.
+    let mut tstep = 0u64;
     // Sticky shutdown flag. A worker whose lanes are full at close time
     // has `capacity == 0` and skips the poll entirely, so `Closed`
     // cannot be observed that iteration; when the flag was re-armed to
@@ -226,16 +247,38 @@ pub(crate) fn run_worker(
     // `close_with_full_lanes_drains_cleanly`.
     let mut closed = false;
     loop {
+        sched.set_trace_step(tstep);
+        tstep += 1;
         // Ingest up to the free lane capacity: backlog beyond it stays
         // in the shared queue, where an idle peer can steal it.
         let capacity =
             cfg.max_lanes.saturating_sub(sched.live_lanes() + sched.pending_len());
         if capacity > 0 {
             match router.poll(w, capacity) {
-                ShardPoll::Items(new) | ShardPoll::Stolen { items: new, .. } => {
+                ShardPoll::Items(new) => {
                     batches += 1;
                     for item in new {
                         items += 1;
+                        sched.offer(item);
+                    }
+                }
+                ShardPoll::Stolen { items: new, victim } => {
+                    batches += 1;
+                    // One Steal event per distinct stolen session, not
+                    // per item, mirroring the simulators.
+                    let mut stolen: Vec<SessionKey> = Vec::new();
+                    for item in new {
+                        items += 1;
+                        let key = (item.model, item.session);
+                        if !stolen.contains(&key) {
+                            stolen.push(key);
+                            sched.trace_event(
+                                EventKind::Steal,
+                                key.0,
+                                key.1,
+                                victim as u64,
+                            );
+                        }
                         sched.offer(item);
                     }
                 }
@@ -293,6 +336,8 @@ pub(crate) fn run_worker(
     let model_hibernated_bytes = (0..registry.len())
         .map(|m| sched.cold().bytes_model(m as ModelId))
         .collect();
+    let stage = sched.take_stage_latencies();
+    let trace_events = sched.take_trace_events();
     WorkerSummary {
         compute_secs,
         batches,
@@ -302,6 +347,8 @@ pub(crate) fn run_worker(
         model_sessions,
         model_hibernated,
         model_hibernated_bytes,
+        stage,
+        trace_events,
     }
 }
 
@@ -376,6 +423,7 @@ impl<'a> Server<'a> {
             state_budget: self.config.state_budget,
             spill_quantized: self.config.spill_quantized,
             record_tokens: false,
+            trace: self.config.trace,
         };
 
         let wall_start = Instant::now();
@@ -482,6 +530,7 @@ impl<'a> Server<'a> {
                     agg.idle_evictions += s.model_stats[m].idle_evictions;
                     agg.spills += s.model_stats[m].spills;
                     agg.restores += s.model_stats[m].restores;
+                    agg.kernels.add(&s.model_stats[m].kernels);
                     resident_sessions += s.model_sessions[m];
                     hibernated_sessions += s.model_hibernated[m];
                     hibernated_state_bytes += s.model_hibernated_bytes[m];
@@ -512,6 +561,7 @@ impl<'a> Server<'a> {
                     idle_evictions: agg.idle_evictions,
                     spills: agg.spills,
                     restores: agg.restores,
+                    kernels: agg.kernels,
                 }
             })
             .collect();
@@ -543,6 +593,14 @@ impl<'a> Server<'a> {
             per_model.iter().map(|m| m.resident_state_bytes).sum();
         let hibernated_state_bytes: usize =
             per_model.iter().map(|m| m.hibernated_state_bytes).sum();
+        let mut stage = StageLatencies::default();
+        let mut kernels = KernelCounters::default();
+        for s in summaries {
+            stage.merge(&s.stage);
+            kernels.add(&s.stats.kernels);
+        }
+        let trace_events =
+            merge_events(summaries.iter().map(|s| s.trace_events.clone()).collect());
 
         ServingReport {
             engine: engine_label,
@@ -579,6 +637,9 @@ impl<'a> Server<'a> {
             resident_weight_bytes: self.registry.total_resident_weight_bytes(workers),
             per_worker,
             per_model,
+            stage,
+            kernels,
+            trace_events,
         }
     }
 }

@@ -1,0 +1,555 @@
+//! Structured event tracing for the serving stack: a bounded,
+//! lock-cheap per-worker event ring every coordinator stage emits
+//! into, merged at drain time into one deterministic event log.
+//!
+//! Three levels ([`TraceLevel`]):
+//!
+//! * `Off` — nothing is recorded; the hot path pays only one enum
+//!   compare per would-be emission.
+//! * `Counters` — per-stage duration histograms ([`StageLatencies`])
+//!   and the kernel GEMM/MAC counters
+//!   ([`crate::tensor::qmatmul::kernel_counters`]) are accumulated,
+//!   but no per-event ring.
+//! * `Full` — everything in `Counters` plus one [`TraceEvent`] per
+//!   lifecycle transition in the per-worker [`TraceRing`].
+//!
+//! The cardinal invariant (pinned by
+//! `rust/tests/trace_observability.rs`): **tracing never perturbs the
+//! schedule**. Events and timings are taken *after* every scheduling
+//! decision; no branch of the scheduler, router, or kernels consults
+//! the trace state. `simulate_shard_trace` therefore emits
+//! bit-identical token streams and completions at every level.
+//!
+//! Two clocks, two export formats (the DESIGN.md §8 discipline):
+//!
+//! * [`jsonl_string`] serializes the **virtual clock** only — `step`
+//!   (the simulator tick / worker loop iteration), worker, model,
+//!   session, kind, arg. Reruns of the same simulated trace produce
+//!   byte-identical JSONL.
+//! * [`chrome_trace_string`] serializes the **wall clock**
+//!   (`wall_us`/`dur_us` since the worker's trace epoch) in the
+//!   Chrome trace-viewer format, for `chrome://tracing` / Perfetto.
+//!   Wall timestamps are real elapsed time and differ across reruns —
+//!   byte-stability is never claimed for this surface.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::eval::metrics::LatencyStats;
+use super::registry::ModelId;
+use super::session::SessionId;
+
+/// How much the trace subsystem records (ordered: each level includes
+/// everything below it, so `level >= TraceLevel::Counters` gates the
+/// timing/counter work and `== Full` gates event emission).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Record nothing (the default — zero observability overhead).
+    #[default]
+    Off,
+    /// Accumulate stage-duration histograms and kernel counters, no
+    /// event ring.
+    Counters,
+    /// Counters plus one [`TraceEvent`] per lifecycle transition.
+    Full,
+}
+
+impl TraceLevel {
+    /// Every level, in severity order (CLI/help listings).
+    pub const ALL: [TraceLevel; 3] =
+        [TraceLevel::Off, TraceLevel::Counters, TraceLevel::Full];
+
+    /// Short name used by the CLI and bench JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Counters => "counters",
+            TraceLevel::Full => "full",
+        }
+    }
+
+    /// Parse a CLI spelling. Unknown levels are an `Err` so the CLI
+    /// bails loudly instead of silently defaulting to `Off` (the
+    /// silent-default contract).
+    pub fn parse(s: &str) -> Result<TraceLevel, String> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "counters" => Ok(TraceLevel::Counters),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(format!(
+                "unknown trace level '{other}': expected off | counters | full"
+            )),
+        }
+    }
+
+    /// The level at numeric index `i` (0 = `Off`, 1 = `Counters`, 2 =
+    /// `Full`) — the wire/config encoding. Panics on an out-of-range
+    /// index: a level that does not exist is a caller bug, never
+    /// "trace off".
+    pub fn from_index(i: u8) -> TraceLevel {
+        match i {
+            0 => TraceLevel::Off,
+            1 => TraceLevel::Counters,
+            2 => TraceLevel::Full,
+            other => panic!("trace level index {other} out of range (0..=2)"),
+        }
+    }
+}
+
+/// Trace configuration carried by `ShardConfig` / `ServerConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Recording level (off by default).
+    pub level: TraceLevel,
+    /// Per-worker event ring capacity at [`TraceLevel::Full`]. When a
+    /// worker emits more events than this, the *oldest* are dropped
+    /// and counted ([`TraceRing::dropped`]) — the ring never grows
+    /// unbounded and never blocks the scheduling loop.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { level: TraceLevel::Off, capacity: 1 << 16 }
+    }
+}
+
+impl TraceConfig {
+    /// A `Full`-level config with the default ring capacity.
+    pub fn full() -> Self {
+        TraceConfig { level: TraceLevel::Full, ..TraceConfig::default() }
+    }
+
+    /// A `Counters`-level config.
+    pub fn counters() -> Self {
+        TraceConfig { level: TraceLevel::Counters, ..TraceConfig::default() }
+    }
+}
+
+/// What happened — one lifecycle transition of the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// An item was admitted into a lane (`arg` = chunk length in
+    /// tokens; emitted with a paired immediate `Done` for empty
+    /// items, which execute nothing).
+    Admit,
+    /// A stream's state was materialized for the first time on this
+    /// worker (at most one per `(model, session)` per worker).
+    Bind,
+    /// This worker stole the session from a backlogged peer (`arg` =
+    /// victim worker index).
+    Steal,
+    /// One batched step of one model wave (`arg` = live lanes;
+    /// `dur_us` = wall duration of the batched GEMM pass).
+    StepBatch,
+    /// A session hibernated into the cold tier (`arg` = encoded
+    /// bytes).
+    Spill,
+    /// A session was restored out of the cold tier.
+    Restore,
+    /// A session was evicted (`arg` = 0 for the session-count budget,
+    /// 1 for the idle-age policy). Unlike a spill, an eviction resets
+    /// the stream.
+    Evict,
+    /// A model was demoted to int4 under the weight budget (`arg` =
+    /// weight bytes after demotion; emitted by the CLI driver, worker
+    /// index `u32::MAX`).
+    Demote,
+    /// A lane executed its stream's first token position (`arg` =
+    /// position within the chunk, always 0).
+    FirstToken,
+    /// An item finished and was retired from its lane (`arg` = chunk
+    /// length in tokens).
+    Done,
+    /// The network front rejected a request with `Busy` backpressure
+    /// (worker index `u32::MAX` — the rejection happens before any
+    /// worker is involved).
+    Busy,
+}
+
+impl EventKind {
+    /// Stable lower-snake name used in both export formats.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Bind => "bind",
+            EventKind::Steal => "steal",
+            EventKind::StepBatch => "step_batch",
+            EventKind::Spill => "spill",
+            EventKind::Restore => "restore",
+            EventKind::Evict => "evict",
+            EventKind::Demote => "demote",
+            EventKind::FirstToken => "first_token",
+            EventKind::Done => "done",
+            EventKind::Busy => "busy",
+        }
+    }
+}
+
+/// One recorded lifecycle transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual step at emission: the simulator tick
+    /// (`simulate_shard_trace`) or the worker loop iteration (threaded
+    /// server) — the deterministic clock the JSONL log orders by.
+    pub step: u64,
+    /// Microseconds since the worker's trace epoch (**wall clock** —
+    /// feeds the Chrome trace only, never the JSONL log).
+    pub wall_us: u64,
+    /// Wall-clock duration in microseconds (nonzero only for
+    /// [`EventKind::StepBatch`]).
+    pub dur_us: u64,
+    /// Emitting worker index (`u32::MAX` for front-of-pool events:
+    /// `Busy` rejections and CLI `Demote`).
+    pub worker: u32,
+    /// Model the event concerns.
+    pub model: ModelId,
+    /// Session the event concerns (0 where not applicable, e.g.
+    /// [`EventKind::StepBatch`]).
+    pub session: SessionId,
+    /// Kind-specific argument (see [`EventKind`] docs).
+    pub arg: u64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Bounded per-worker event ring. Single-owner (each scheduler owns
+/// its ring — no locks anywhere near the scheduling loop); overflow
+/// drops the oldest events and counts them instead of growing or
+/// blocking.
+#[derive(Debug)]
+pub struct TraceRing {
+    level: TraceLevel,
+    capacity: usize,
+    worker: u32,
+    step: u64,
+    epoch: Instant,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring for one worker. `capacity` must be nonzero at
+    /// [`TraceLevel::Full`] (a zero-capacity full-level ring could
+    /// only drop, which is a config bug, not a quiet no-op).
+    pub fn new(config: TraceConfig, worker: u32) -> Self {
+        assert!(
+            config.level != TraceLevel::Full || config.capacity > 0,
+            "trace ring capacity must be nonzero at level full"
+        );
+        TraceRing {
+            level: config.level,
+            capacity: config.capacity,
+            worker,
+            step: 0,
+            epoch: Instant::now(),
+            events: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// The recording level this ring was built with.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Set the virtual-step clock stamped onto subsequent events.
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Record one event (no-op below [`TraceLevel::Full`]).
+    pub fn emit(&mut self, kind: EventKind, model: ModelId, session: SessionId, arg: u64) {
+        self.emit_dur(kind, model, session, arg, 0);
+    }
+
+    /// Record one event with an explicit wall-clock duration.
+    pub fn emit_dur(
+        &mut self,
+        kind: EventKind,
+        model: ModelId,
+        session: SessionId,
+        arg: u64,
+        dur_us: u64,
+    ) {
+        if self.level != TraceLevel::Full {
+            return;
+        }
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent {
+            step: self.step,
+            wall_us: self.epoch.elapsed().as_micros() as u64,
+            dur_us,
+            worker: self.worker,
+            model,
+            session,
+            arg,
+            kind,
+        });
+    }
+
+    /// Drain the recorded events (emission order).
+    pub fn take(&mut self) -> Vec<TraceEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Events dropped to the capacity bound so far. Nonzero means the
+    /// log is a *suffix* of the run — reported, never silent.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Merge per-worker event streams into one deterministic log: ordered
+/// by `(step, worker)` with each worker's own emission order preserved
+/// within a step (stable sort). Wall timestamps are carried along but
+/// never consulted — the merged order is a pure function of the
+/// virtual-clock fields, which is what makes the JSONL export
+/// byte-stable across reruns.
+pub fn merge_events(streams: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = streams.into_iter().flatten().collect();
+    all.sort_by_key(|e| (e.step, e.worker));
+    all
+}
+
+/// Serialize events as one JSON object per line, **virtual-clock
+/// fields only** (`step`, `worker`, `model`, `session`, `kind`,
+/// `arg`). Identical simulated runs produce byte-identical output —
+/// the determinism surface `rust/tests/trace_observability.rs` pins.
+pub fn jsonl_string(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&format!(
+            "{{\"step\":{},\"worker\":{},\"model\":{},\"session\":{},\"kind\":\"{}\",\"arg\":{}}}\n",
+            e.step,
+            e.worker,
+            e.model,
+            e.session,
+            e.kind.label(),
+            e.arg,
+        ));
+    }
+    out
+}
+
+/// Serialize events in the Chrome trace-viewer JSON format (open in
+/// `chrome://tracing` or <https://ui.perfetto.dev>): **wall-clock**
+/// microseconds since the worker's trace epoch, one thread row per
+/// worker. [`EventKind::StepBatch`] renders as a complete (`"X"`)
+/// slice with its duration; everything else as a thread-scoped
+/// instant (`"i"`).
+pub fn chrome_trace_string(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        let sep = if i + 1 == events.len() { "" } else { "," };
+        if e.kind == EventKind::StepBatch {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\
+                 \"args\":{{\"step\":{},\"model\":{},\"lanes\":{}}}}}{}\n",
+                e.kind.label(),
+                e.wall_us,
+                e.dur_us.max(1),
+                e.worker,
+                e.step,
+                e.model,
+                e.arg,
+                sep,
+            ));
+        } else {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"ts\":{},\"pid\":0,\"tid\":{},\"s\":\"t\",\
+                 \"args\":{{\"step\":{},\"model\":{},\"session\":{},\"arg\":{}}}}}{}\n",
+                e.kind.label(),
+                e.wall_us,
+                e.worker,
+                e.step,
+                e.model,
+                e.session,
+                e.arg,
+                sep,
+            ));
+        }
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Per-stage duration histograms accumulated at
+/// [`TraceLevel::Counters`] and above — where a token's wall-clock
+/// time went, beside the end-to-end histograms the report already
+/// carries. All three are **wall-clock** milliseconds (the two-clock
+/// discipline: virtual-step schedule counters live in
+/// `SchedulerStats`, never here).
+#[derive(Debug, Clone, Default)]
+pub struct StageLatencies {
+    /// Submission → lane-admission wait, one sample per admitted
+    /// chunk (the queue time; the mean of these is
+    /// `mean_admission_ms`).
+    pub admission_wait: LatencyStats,
+    /// Duration of one batched step of one model wave (the GEMM
+    /// pass), one sample per `StepBatch`.
+    pub execute: LatencyStats,
+    /// Duration of one cold-tier spill or restore (state encode /
+    /// decode + table move), one sample per event.
+    pub spill_restore: LatencyStats,
+}
+
+impl StageLatencies {
+    /// Fold another worker's stage histograms into this one.
+    /// Order-independent: percentiles are computed over the sorted
+    /// union of samples, so any merge order yields identical stats
+    /// (pinned by a unit test in `eval::metrics`).
+    pub fn merge(&mut self, other: &StageLatencies) {
+        self.admission_wait.merge(&other.admission_wait);
+        self.execute.merge(&other.execute);
+        self.spill_restore.merge(&other.spill_restore);
+    }
+
+    /// True when no stage recorded any sample (trace level `Off`).
+    pub fn is_empty(&self) -> bool {
+        self.admission_wait.count() == 0
+            && self.execute.count() == 0
+            && self.spill_restore.count() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(step: u64, worker: u32, kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            step,
+            wall_us: 999, // wall clock must never affect merge order or JSONL bytes
+            dur_us: 0,
+            worker,
+            model: 0,
+            session: 7,
+            arg: 3,
+            kind,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut ring =
+            TraceRing::new(TraceConfig { level: TraceLevel::Full, capacity: 3 }, 0);
+        for i in 0..5u64 {
+            ring.set_step(i);
+            ring.emit(EventKind::Admit, 0, i, 0);
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let steps: Vec<u64> = ring.take().iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![2, 3, 4], "oldest events must be the ones dropped");
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn levels_below_full_emit_nothing() {
+        for level in [TraceLevel::Off, TraceLevel::Counters] {
+            let mut ring = TraceRing::new(TraceConfig { level, capacity: 8 }, 0);
+            ring.emit(EventKind::Admit, 0, 1, 0);
+            assert!(ring.is_empty(), "{level:?} must not record events");
+        }
+    }
+
+    #[test]
+    fn merge_orders_by_step_then_worker_preserving_emission_order() {
+        // Worker 1 emitted (step 0: admit, bind) and (step 2: done);
+        // worker 0 emitted (step 1: admit). Wall timestamps are
+        // deliberately identical garbage.
+        let w1 = vec![
+            ev(0, 1, EventKind::Admit),
+            ev(0, 1, EventKind::Bind),
+            ev(2, 1, EventKind::Done),
+        ];
+        let w0 = vec![ev(1, 0, EventKind::Admit)];
+        let merged = merge_events(vec![w1, w0]);
+        let order: Vec<(u64, u32, &str)> =
+            merged.iter().map(|e| (e.step, e.worker, e.kind.label())).collect();
+        assert_eq!(
+            order,
+            vec![(0, 1, "admit"), (0, 1, "bind"), (1, 0, "admit"), (2, 1, "done")]
+        );
+    }
+
+    #[test]
+    fn jsonl_is_a_pure_function_of_virtual_fields() {
+        let mut a = ev(4, 2, EventKind::Spill);
+        let mut b = a;
+        // Different wall clocks, identical virtual fields: identical
+        // bytes.
+        a.wall_us = 1;
+        b.wall_us = 123_456;
+        assert_eq!(jsonl_string(&[a]), jsonl_string(&[b]));
+        assert_eq!(
+            jsonl_string(&[a]),
+            "{\"step\":4,\"worker\":2,\"model\":0,\"session\":7,\"kind\":\"spill\",\"arg\":3}\n"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_renders_slices_and_instants() {
+        let mut step = ev(1, 0, EventKind::StepBatch);
+        step.dur_us = 42;
+        let out = chrome_trace_string(&[step, ev(1, 0, EventKind::Done)]);
+        assert!(out.starts_with("{\"traceEvents\":["));
+        assert!(out.contains("\"ph\":\"X\""), "StepBatch must be a slice");
+        assert!(out.contains("\"dur\":42"));
+        assert!(out.contains("\"ph\":\"i\""), "Done must be an instant");
+        assert!(out.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn level_parse_round_trips_and_orders() {
+        for level in TraceLevel::ALL {
+            assert_eq!(TraceLevel::parse(level.label()), Ok(level));
+        }
+        assert!(TraceLevel::parse("verbose").is_err());
+        assert!(TraceLevel::Off < TraceLevel::Counters);
+        assert!(TraceLevel::Counters < TraceLevel::Full);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_level_index_panics() {
+        let _ = TraceLevel::from_index(3);
+    }
+
+    #[test]
+    fn stage_latencies_merge_is_order_independent() {
+        let mut a = StageLatencies::default();
+        let mut b = StageLatencies::default();
+        for v in [5.0, 1.0, 9.0] {
+            a.execute.record(v);
+        }
+        for v in [2.0, 8.0] {
+            b.execute.record(v);
+        }
+        let mut ab = StageLatencies::default();
+        ab.merge(&a);
+        ab.merge(&b);
+        let mut ba = StageLatencies::default();
+        ba.merge(&b);
+        ba.merge(&a);
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(ab.execute.percentile(p), ba.execute.percentile(p));
+        }
+        assert!(StageLatencies::default().is_empty());
+        assert!(!ab.is_empty());
+    }
+}

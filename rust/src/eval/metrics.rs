@@ -75,6 +75,34 @@ impl LatencyStats {
     pub fn max(&self) -> f64 {
         self.samples_ms.iter().fold(f64::NAN, |m, &v| if m.is_nan() { v } else { m.max(v) })
     }
+
+    /// Fold another histogram's samples into this one. Percentiles are
+    /// computed over the sorted union of raw samples, so merging is
+    /// order-independent: any permutation of worker merge order yields
+    /// identical p50/p95/p99 (pinned by `merge_is_order_independent`).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
+
+    /// Render a percentile for a report line: `-` when the histogram
+    /// is empty (a missing measurement must never print as a plausible
+    /// `0.0`), otherwise the value with `decimals` fraction digits.
+    pub fn fmt_percentile(&self, p: f64, decimals: usize) -> String {
+        if self.samples_ms.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.*}", decimals, self.percentile(p))
+        }
+    }
+
+    /// Render the mean the same way (`-` when empty).
+    pub fn fmt_mean(&self, decimals: usize) -> String {
+        if self.samples_ms.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.*}", decimals, self.mean())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +134,55 @@ mod tests {
         let l = LatencyStats::new();
         assert!(l.percentile(50.0).is_nan());
         assert!(l.mean().is_nan());
+    }
+
+    #[test]
+    fn empty_latency_formats_as_dash_not_zero() {
+        let l = LatencyStats::new();
+        assert_eq!(l.fmt_percentile(50.0, 1), "-");
+        assert_eq!(l.fmt_percentile(99.0, 3), "-");
+        assert_eq!(l.fmt_mean(2), "-");
+        let mut one = LatencyStats::new();
+        one.record(1.25);
+        assert_eq!(one.fmt_percentile(50.0, 2), "1.25");
+        assert_eq!(one.fmt_mean(1), "1.2");
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        // Three workers' histograms with deliberately interleaved
+        // values; every permutation of merge order must pin identical
+        // percentiles.
+        let mut workers = Vec::new();
+        for seed in 0..3u64 {
+            let mut l = LatencyStats::new();
+            for i in 0..40u64 {
+                // Cheap deterministic scatter, no RNG dependency.
+                l.record(((seed * 40 + i) * 7919 % 1000) as f64 / 10.0);
+            }
+            workers.push(l);
+        }
+        let perms: [[usize; 3]; 6] = [
+            [0, 1, 2],
+            [0, 2, 1],
+            [1, 0, 2],
+            [1, 2, 0],
+            [2, 0, 1],
+            [2, 1, 0],
+        ];
+        let mut reference: Option<(f64, f64, f64)> = None;
+        for perm in perms {
+            let mut merged = LatencyStats::new();
+            for &w in &perm {
+                merged.merge(&workers[w]);
+            }
+            assert_eq!(merged.count(), 120);
+            let got =
+                (merged.percentile(50.0), merged.percentile(95.0), merged.percentile(99.0));
+            match reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(got, want, "merge order {perm:?} diverged"),
+            }
+        }
     }
 }

@@ -13,8 +13,9 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use iqrnn::coordinator::{
-    BatchPolicy, ModelRegistry, ModelSpec, NetConfig, NetServer, NetShutdown, Residency,
-    SchedulerMode, Server, ServerConfig,
+    chrome_trace_string, jsonl_string, merge_events, BatchPolicy, EventKind,
+    ModelRegistry, ModelSpec, NetConfig, NetServer, NetShutdown, Residency,
+    SchedulerMode, Server, ServerConfig, TraceConfig, TraceEvent, TraceLevel,
 };
 use iqrnn::lstm::{QuantizeOptions, StackEngine, WeightBits};
 use iqrnn::model::lm::CharLm;
@@ -73,8 +74,13 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}       --weight-bits 8|4 (int4 nibble-packed weights: ~2x\n\
                  \u{20}       smaller residency)  --weight-budget BYTES (demote\n\
                  \u{20}       coldest models to int4 until resident weights fit)\n\
-                 \u{20}       --listen ADDR (TCP front instead of trace replay)\n\
+                 \u{20}       --listen ADDR (TCP front instead of trace replay;\n\
+                 \u{20}       answers live Stats polls — see docs/SERVING.md §9)\n\
                  \u{20}       --drain-after S  --max-inflight N (with --listen)\n\
+                 \u{20}       --trace off|counters|full (stage timing, kernel\n\
+                 \u{20}       counters, lifecycle event log; off by default)\n\
+                 \u{20}       --trace-out FILE (write Chrome trace JSON to FILE and\n\
+                 \u{20}       a JSONL event log beside it; implies --trace full)\n\
                  eval   --artifacts DIR   (Table-1-style quality comparison)\n\
                  recipe [--ln] [--proj] [--peephole] [--cifg]   (print Table 2)\n\
                  info   --artifacts DIR"
@@ -126,6 +132,27 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     let weight_budget = flag(args, "--weight-budget")
         .map(|v| v.parse::<usize>())
         .transpose()?;
+    // Observability: `--trace` picks the level (unknown spellings bail,
+    // never default to off); `--trace-out` implies `full` because the
+    // exports are rendered from the event ring.
+    let mut trace_level = match flag(args, "--trace") {
+        Some(s) => TraceLevel::parse(&s).map_err(anyhow::Error::msg)?,
+        None => TraceLevel::Off,
+    };
+    let trace_out = flag(args, "--trace-out");
+    if trace_out.is_some() {
+        trace_level = TraceLevel::Full;
+    }
+    let trace_cfg = TraceConfig { level: trace_level, ..Default::default() };
+    // Probe both export paths up front: an unwritable --trace-out must
+    // fail before the serving run, not lose the trace after it.
+    let trace_jsonl = trace_out.as_ref().map(|p| jsonl_sibling(p));
+    if let (Some(p), Some(j)) = (&trace_out, &trace_jsonl) {
+        for path in [p, j] {
+            std::fs::write(path, "")
+                .with_context(|| format!("--trace-out: cannot write `{path}`"))?;
+        }
+    }
 
     let lm = CharLm::load(artifacts)
         .with_context(|| format!("loading model from `{artifacts}` (run `make artifacts`)"))?;
@@ -165,6 +192,7 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
         evict_idle_after,
         state_budget,
         spill_quantized,
+        trace: trace_cfg,
     };
     // One loaded artifact served as N registered variants (shared float
     // master weights, independent engines/sessions/waves): the serving
@@ -184,6 +212,11 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
             },
         });
     }
+    // Lifecycle events that happen before the pool exists (weight-
+    // budget demotions) are synthesized here and merged into the
+    // exported log: worker `u32::MAX`, step 0, like the net front's
+    // Busy events.
+    let mut pre_events: Vec<TraceEvent> = Vec::new();
     if let Some(budget) = weight_budget {
         let demoted = registry.enforce_weight_budget(budget, workers);
         for &m in &demoted {
@@ -192,6 +225,18 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
                 registry.name(m),
                 registry.weight_bytes(m)
             );
+            if trace_level >= TraceLevel::Full {
+                pre_events.push(TraceEvent {
+                    step: 0,
+                    wall_us: 0,
+                    dur_us: 0,
+                    worker: u32::MAX,
+                    model: m,
+                    session: 0,
+                    arg: registry.weight_bytes(m) as u64,
+                    kind: EventKind::Demote,
+                });
+            }
         }
         let resident = registry.total_resident_weight_bytes(workers);
         if resident > budget {
@@ -247,6 +292,7 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
         if models > 1 {
             report.serving.print_models();
         }
+        write_trace_exports(&trace_out, &trace_jsonl, pre_events, &report.serving)?;
         return Ok(());
     }
 
@@ -258,6 +304,40 @@ fn serve(args: &[String], artifacts: &str) -> Result<()> {
     if models > 1 {
         report.print_models();
     }
+    write_trace_exports(&trace_out, &trace_jsonl, pre_events, &report)?;
+    Ok(())
+}
+
+/// The JSONL export path beside a `--trace-out FILE`: `.json` swaps to
+/// `.jsonl`, anything else appends `.jsonl`.
+fn jsonl_sibling(path: &str) -> String {
+    match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{path}.jsonl"),
+    }
+}
+
+/// Write the two `--trace-out` artifacts: Chrome trace-viewer JSON
+/// (wall clock) and the JSONL event log (virtual clock only — byte-
+/// stable across reruns of the same workload).
+fn write_trace_exports(
+    trace_out: &Option<String>,
+    trace_jsonl: &Option<String>,
+    pre_events: Vec<iqrnn::coordinator::TraceEvent>,
+    report: &iqrnn::coordinator::ServingReport,
+) -> Result<()> {
+    let (Some(path), Some(jsonl_path)) = (trace_out, trace_jsonl) else {
+        return Ok(());
+    };
+    let events = merge_events(vec![pre_events, report.trace_events.clone()]);
+    std::fs::write(path, chrome_trace_string(&events))
+        .with_context(|| format!("writing chrome trace `{path}`"))?;
+    std::fs::write(jsonl_path, jsonl_string(&events))
+        .with_context(|| format!("writing jsonl event log `{jsonl_path}`"))?;
+    println!(
+        "trace: {} events -> {path} (chrome://tracing) + {jsonl_path} (jsonl)",
+        events.len()
+    );
     Ok(())
 }
 

@@ -182,6 +182,11 @@ impl BlockSparseI8 {
         if x.rows == 0 || self.rows == 0 {
             return;
         }
+        // Executed MACs: stored blocks only — the measured counterpart
+        // of the bench's computed effective-FLOP number.
+        crate::tensor::qmatmul::kernel_counters::record_bsr(
+            (x.rows * self.block_count() * MR * K_BLOCK) as u64,
+        );
         #[cfg(target_arch = "x86_64")]
         {
             if avx2_enabled() {

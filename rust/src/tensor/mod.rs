@@ -12,6 +12,6 @@ pub mod qmatmul;
 pub use dense::Matrix;
 pub use matmul::{gemm_f32, matmul_f32, matvec_f32};
 pub use qmatmul::{
-    fold_zero_point, gemm_i8_i32, matvec_i8_i32, pad_lanes, PackedWeightsI4,
-    PackedWeightsI8, K_BLOCK, LANE_TILE,
+    fold_zero_point, gemm_i8_i32, kernel_counters, kernel_counters::KernelCounters,
+    matvec_i8_i32, pad_lanes, PackedWeightsI4, PackedWeightsI8, K_BLOCK, LANE_TILE,
 };

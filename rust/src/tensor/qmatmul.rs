@@ -118,6 +118,136 @@ pub mod tail_audit {
     }
 }
 
+/// Per-format GEMM invocation and MAC counters, live in release builds.
+///
+/// Same shape as [`tail_audit`] — a thread-local `Cell`, so the hot
+/// path pays two register-width loads and one store per *GEMM call*
+/// (not per MAC; counts are computed from the shapes) and no
+/// synchronization ever. Unlike `tail_audit` this is **not** compiled
+/// out in release: the serving report's effective-FLOP attribution and
+/// the `ablations.rs` measured-MAC columns come from here, and those
+/// claims are only worth making on release-mode kernels.
+///
+/// Dense int8/int4 counts are *logical* MACs (`batch × rows × cols` —
+/// zero-padding work is part of the format's cost and is included).
+/// The BSR count is *executed* MACs (`batch × stored_blocks × MR ×
+/// K_BLOCK`), which is exactly what makes the dense-vs-sparse
+/// comparison in the bench a measurement instead of arithmetic.
+///
+/// Consumers must bracket a measurement with [`reset`] / [`take`]:
+/// counters accumulate per thread, so unpaired reads attribute earlier
+/// unrelated GEMMs (e.g. another scheduler on the same test thread) to
+/// the wrong measurement.
+pub mod kernel_counters {
+    use std::cell::Cell;
+
+    /// GEMM invocations and multiply-accumulate counts by weight
+    /// format.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct KernelCounters {
+        /// Dense int8 packed-panel GEMM calls.
+        pub gemm_i8: u64,
+        /// Logical MACs through the dense int8 GEMM.
+        pub macs_i8: u64,
+        /// Int4 nibble-panel GEMM calls.
+        pub gemm_i4: u64,
+        /// Logical MACs through the int4 GEMM.
+        pub macs_i4: u64,
+        /// Block-sparse (BSR) GEMM calls.
+        pub gemm_bsr: u64,
+        /// Executed MACs through the BSR GEMM (stored blocks only).
+        pub macs_bsr: u64,
+    }
+
+    impl KernelCounters {
+        /// Accumulate another snapshot into this one.
+        pub fn add(&mut self, other: &KernelCounters) {
+            self.gemm_i8 += other.gemm_i8;
+            self.macs_i8 += other.macs_i8;
+            self.gemm_i4 += other.gemm_i4;
+            self.macs_i4 += other.macs_i4;
+            self.gemm_bsr += other.gemm_bsr;
+            self.macs_bsr += other.macs_bsr;
+        }
+
+        /// Total GEMM invocations across formats.
+        pub fn total_gemms(&self) -> u64 {
+            self.gemm_i8 + self.gemm_i4 + self.gemm_bsr
+        }
+
+        /// Total MACs across formats.
+        pub fn total_macs(&self) -> u64 {
+            self.macs_i8 + self.macs_i4 + self.macs_bsr
+        }
+
+        /// True when nothing was recorded.
+        pub fn is_empty(&self) -> bool {
+            self.total_gemms() == 0
+        }
+    }
+
+    thread_local! {
+        static COUNTERS: Cell<KernelCounters> =
+            const { Cell::new(KernelCounters {
+                gemm_i8: 0,
+                macs_i8: 0,
+                gemm_i4: 0,
+                macs_i4: 0,
+                gemm_bsr: 0,
+                macs_bsr: 0,
+            }) };
+    }
+
+    /// Record one dense int8 GEMM of `macs` logical MACs.
+    #[inline]
+    pub(crate) fn record_i8(macs: u64) {
+        COUNTERS.with(|c| {
+            let mut k = c.get();
+            k.gemm_i8 += 1;
+            k.macs_i8 += macs;
+            c.set(k);
+        });
+    }
+
+    /// Record one int4 GEMM of `macs` logical MACs.
+    #[inline]
+    pub(crate) fn record_i4(macs: u64) {
+        COUNTERS.with(|c| {
+            let mut k = c.get();
+            k.gemm_i4 += 1;
+            k.macs_i4 += macs;
+            c.set(k);
+        });
+    }
+
+    /// Record one BSR GEMM of `macs` executed MACs.
+    #[inline]
+    pub(crate) fn record_bsr(macs: u64) {
+        COUNTERS.with(|c| {
+            let mut k = c.get();
+            k.gemm_bsr += 1;
+            k.macs_bsr += macs;
+            c.set(k);
+        });
+    }
+
+    /// Zero the calling thread's counters (start of a measurement).
+    pub fn reset() {
+        COUNTERS.with(|c| c.set(KernelCounters::default()));
+    }
+
+    /// Read and zero the calling thread's counters (end of a
+    /// measurement).
+    pub fn take() -> KernelCounters {
+        COUNTERS.with(|c| c.replace(KernelCounters::default()))
+    }
+
+    /// Read the calling thread's counters without resetting.
+    pub fn snapshot() -> KernelCounters {
+        COUNTERS.with(|c| c.get())
+    }
+}
+
 /// Bias lookup shared by every kernel (dense *and* sparse): an empty
 /// slice means "no bias"; a *short* non-empty slice is a caller bug —
 /// debug-asserted here, and the direct index still panics (never
@@ -368,6 +498,7 @@ impl PackedWeightsI8 {
         if x.rows == 0 || self.dense.rows == 0 {
             return;
         }
+        kernel_counters::record_i8((x.rows * self.dense.rows * self.dense.cols) as u64);
         #[cfg(target_arch = "x86_64")]
         {
             if avx2_enabled() {
@@ -656,6 +787,7 @@ impl PackedWeightsI4 {
         if x.rows == 0 || self.rows == 0 {
             return;
         }
+        kernel_counters::record_i4((x.rows * self.rows * self.cols) as u64);
         #[cfg(target_arch = "x86_64")]
         {
             if avx2_enabled() {

@@ -15,6 +15,9 @@
 //! * **Graceful drain** — raising shutdown lets every in-flight
 //!   stream finish (all tokens + `Done` + terminal `Bye`), while late
 //!   connects are refused with an immediate `Bye` and never served.
+//! * **Live metrics** — a `Stats` frame on a live server is answered
+//!   with a Prometheus text snapshot carrying non-empty per-model
+//!   counters, and the full-level trace rides the net path.
 //!
 //! Fixtures come from the shared `common` module with this suite's
 //! historical seeds (4321/8765 weights / 991 calibration), pinned by
@@ -28,7 +31,7 @@ use std::time::Duration;
 use iqrnn::coordinator::{
     simulate_multi_shard_trace, simulate_shard_trace, BatchPolicy, Frame, ModelRegistry,
     ModelSpec, NetClient, NetConfig, NetServer, NetShutdown, Residency, SchedulerMode,
-    Server, ServerConfig, ShardConfig,
+    Server, ServerConfig, ShardConfig, TraceConfig,
 };
 use iqrnn::lstm::QuantizeOptions;
 use iqrnn::lstm::StackEngine;
@@ -341,6 +344,68 @@ fn over_budget_requests_get_busy_and_nothing_is_dropped() {
         assert_eq!(report.busy_rejections, 1);
         assert_eq!(report.serving.requests, 2, "A and retried B completed");
         assert_eq!(report.serving.tokens, long.len() + 3);
+    });
+}
+
+#[test]
+fn live_stats_frame_returns_prometheus_snapshot_with_per_model_counters() {
+    let lm = tiny_lm(4321, 16);
+    let stats = calib(&lm);
+    let server = Server::new(
+        &lm,
+        Some(&stats),
+        ServerConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            trace: TraceConfig::full(),
+            ..ServerConfig::default()
+        },
+    );
+    let net = NetServer::bind(&server, NetConfig::default()).expect("bind");
+    let addr = net.local_addr().expect("addr");
+    let stop = NetShutdown::new();
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| net.serve(&stop).expect("serve"));
+        // Run one stream to completion so the counters are non-zero.
+        // The dispatcher counts each token before forwarding it, so by
+        // the time the client has seen `Done` the snapshot is settled.
+        let mut client = NetClient::connect(addr).expect("connect");
+        client.send(0, 1, &[1, 2, 3, 4, 5]).expect("send");
+        client.finish().expect("half-close");
+        let frames = client.read_to_bye().expect("stream");
+        assert!(frames.iter().any(|f| matches!(f, Frame::Done { session: 1, .. })));
+
+        // Poll the *live* process on a fresh connection — the
+        // acceptance-criterion interaction.
+        let mut poller = NetClient::connect(addr).expect("stats connect");
+        let text = poller.stats().expect("stats round trip");
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("iqrnn_tokens_total{model=\"default\"}"))
+            .unwrap_or_else(|| panic!("no per-model tokens line in:\n{text}"));
+        let count: usize =
+            line.rsplit(' ').next().unwrap().parse().expect("counter value");
+        assert_eq!(count, 5, "tokens_total must count executed positions");
+        assert!(
+            text.contains("iqrnn_requests_completed_total{model=\"default\"} 1"),
+            "snapshot:\n{text}"
+        );
+        assert!(
+            text.contains("iqrnn_inflight_sessions{model=\"default\"} 0"),
+            "snapshot:\n{text}"
+        );
+        assert!(text.contains("iqrnn_connections_total 2"), "snapshot:\n{text}");
+        assert!(text.contains("iqrnn_uptime_seconds "), "snapshot:\n{text}");
+        // The connection stays usable: a second poll is answered too.
+        let again = poller.stats().expect("second poll");
+        assert!(again.contains("iqrnn_tokens_total"));
+
+        stop.shutdown();
+        let report = handle.join().expect("serve thread");
+        assert_eq!(report.serving.tokens, 5);
+        // The full-level trace rode along on the net path.
+        assert!(!report.serving.trace_events.is_empty(), "net trace events");
+        assert!(!report.serving.stage.is_empty(), "net stage histograms");
     });
 }
 

@@ -1,0 +1,193 @@
+//! Observability suite: the `coordinator::trace` subsystem against the
+//! deterministic shard simulator.
+//!
+//! What is locked down:
+//!
+//! * **Tracing never perturbs the schedule** — token streams and
+//!   completions are bit-identical across `TraceConfig::{Off,
+//!   Counters, Full}` on all three engines (the PR's key invariant).
+//! * **JSONL byte-determinism** — the virtual-clock event log of two
+//!   reruns of the same workload renders to byte-identical JSONL
+//!   (wall-clock fields never leak into it).
+//! * **Lifecycle completeness** — every `Admit` is matched by exactly
+//!   one `Done`; `Evict`/`Spill`/`Restore` event counts equal the
+//!   scheduler counters and the per-worker spill lists.
+//!
+//! The live `Stats`-frame round trip lives in `net_serving.rs` beside
+//! the rest of the wire-protocol suite.
+
+mod common;
+
+use iqrnn::coordinator::{
+    jsonl_string, simulate_shard_trace, EventKind, ShardConfig, TraceConfig, TraceEvent,
+};
+use iqrnn::lstm::{QuantizeOptions, StackEngine};
+use iqrnn::model::lm::VOCAB;
+use iqrnn::workload::synth::RequestTrace;
+
+const WEIGHT_SEED: u64 = 2468;
+const CALIB_SEED: u64 = 1357;
+
+fn count(events: &[TraceEvent], kind: EventKind) -> usize {
+    events.iter().filter(|e| e.kind == kind).count()
+}
+
+/// One deterministic simulator run; the trace and pool shape are shared
+/// by every test so levels/reruns differ in nothing but the config.
+fn run(
+    engine_kind: StackEngine,
+    trace_cfg: TraceConfig,
+    force_spill_every: Option<u64>,
+) -> iqrnn::coordinator::ShardSimReport {
+    let lm = common::tiny_lm(WEIGHT_SEED, 16, 1);
+    let stats = common::calib(&lm, CALIB_SEED);
+    let engine = lm.engine(engine_kind, Some(&stats), QuantizeOptions::default());
+    let trace = RequestTrace::generate(16, 700.0, 7, VOCAB, 29);
+    let cfg = ShardConfig {
+        workers: 2,
+        max_lanes: 4,
+        record_tokens: true,
+        trace: trace_cfg,
+        force_spill_every,
+        ..ShardConfig::default()
+    };
+    let (_scheds, report) = simulate_shard_trace(&engine, &trace, &cfg);
+    report
+}
+
+/// The schedule-observable outcome of a run, as comparable strings:
+/// every completion (with the nll as exact bits) and every token event.
+fn outcome(report: &iqrnn::coordinator::ShardSimReport) -> Vec<String> {
+    let mut out: Vec<String> = report
+        .completions
+        .iter()
+        .map(|d| {
+            format!("done:{}:{}:{}:{}", d.model, d.session, d.tokens, d.nll_bits.to_bits())
+        })
+        .collect();
+    out.extend(
+        report
+            .token_events
+            .iter()
+            .map(|t| format!("tok:{}:{}:{}:{}", t.model, t.session, t.pos, t.pred)),
+    );
+    out
+}
+
+#[test]
+fn token_streams_are_bit_identical_across_trace_levels_on_all_engines() {
+    for engine_kind in StackEngine::ALL {
+        let off = run(engine_kind, TraceConfig::default(), None);
+        let counters = run(engine_kind, TraceConfig::counters(), None);
+        let full = run(engine_kind, TraceConfig::full(), None);
+        let baseline = outcome(&off);
+        assert!(!baseline.is_empty(), "{engine_kind:?}: empty baseline run");
+        assert_eq!(
+            baseline,
+            outcome(&counters),
+            "{engine_kind:?}: Counters level changed the schedule"
+        );
+        assert_eq!(
+            baseline,
+            outcome(&full),
+            "{engine_kind:?}: Full level changed the schedule"
+        );
+        // The levels really were different runs, not three Off runs.
+        assert!(off.trace_events.is_empty() && off.stage.is_empty());
+        assert!(counters.trace_events.is_empty() && !counters.stage.is_empty());
+        assert!(!full.trace_events.is_empty() && !full.stage.is_empty());
+    }
+}
+
+#[test]
+fn jsonl_event_log_is_byte_stable_across_reruns() {
+    let a = run(StackEngine::Integer, TraceConfig::full(), Some(3));
+    let b = run(StackEngine::Integer, TraceConfig::full(), Some(3));
+    let ja = jsonl_string(&a.trace_events);
+    let jb = jsonl_string(&b.trace_events);
+    assert!(!ja.is_empty(), "full-level run produced no JSONL");
+    assert_eq!(ja.as_bytes(), jb.as_bytes(), "JSONL differs across reruns");
+    // Every line is one virtual-clock event object; no wall-clock
+    // field may leak into the byte-stable export.
+    for line in ja.lines() {
+        assert!(line.starts_with("{\"step\":"), "bad JSONL line: {line}");
+        assert!(!line.contains("wall"), "wall-clock field leaked: {line}");
+        assert!(line.ends_with('}'), "unterminated JSONL line: {line}");
+    }
+    assert_eq!(ja.lines().count(), a.trace_events.len());
+}
+
+#[test]
+fn lifecycle_events_are_complete_and_match_scheduler_counters() {
+    let report = run(StackEngine::Integer, TraceConfig::full(), Some(3));
+    let ev = &report.trace_events;
+
+    // Chunk lifecycle: every admitted chunk retires exactly once
+    // (evictions only take idle sessions, never lane-holding ones, so
+    // they cannot swallow an in-flight chunk's Done).
+    assert_eq!(count(ev, EventKind::Admit), count(ev, EventKind::Done));
+    assert_eq!(count(ev, EventKind::Admit), 16, "one Admit per trace request");
+
+    // Spill/restore churn (forced every 3 ticks) matches both the
+    // scheduler counters and the per-worker spill lists.
+    let spills: usize = report.worker_stats.iter().map(|s| s.spills).sum();
+    let restores: usize = report.worker_stats.iter().map(|s| s.restores).sum();
+    let spilled_listed: usize = report.spilled.iter().map(|w| w.len()).sum();
+    assert!(spills > 0, "forced spilling produced no spills");
+    assert_eq!(count(ev, EventKind::Spill), spills, "Spill events vs counter");
+    assert_eq!(count(ev, EventKind::Spill), spilled_listed, "Spill events vs list");
+    assert_eq!(count(ev, EventKind::Restore), restores, "Restore events vs counter");
+
+    // Eviction events match the counters (zero here — no budgets set).
+    let evictions: usize = report
+        .worker_stats
+        .iter()
+        .map(|s| s.evictions + s.idle_evictions)
+        .sum();
+    assert_eq!(count(ev, EventKind::Evict), evictions);
+
+    // Each spilled chunk's Spill carries the encoded byte size.
+    assert!(
+        ev.iter().filter(|e| e.kind == EventKind::Spill).all(|e| e.arg > 0),
+        "Spill events must carry the encoded byte size in arg"
+    );
+
+    // Every stream saw its first token.
+    assert!(count(ev, EventKind::FirstToken) > 0);
+    // The merged log is ordered by (step, worker).
+    for w in ev.windows(2) {
+        assert!(
+            (w[0].step, w[0].worker) <= (w[1].step, w[1].worker),
+            "merged log out of order: {:?} then {:?}",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn eviction_events_match_eviction_counters_under_budget() {
+    let lm = common::tiny_lm(WEIGHT_SEED, 16, 1);
+    let stats = common::calib(&lm, CALIB_SEED);
+    let engine = lm.engine(StackEngine::Integer, Some(&stats), QuantizeOptions::default());
+    let trace = RequestTrace::generate(16, 700.0, 7, VOCAB, 29);
+    let cfg = ShardConfig {
+        workers: 2,
+        max_lanes: 4,
+        session_budget: Some(2),
+        trace: TraceConfig::full(),
+        ..ShardConfig::default()
+    };
+    let (_scheds, report) = simulate_shard_trace(&engine, &trace, &cfg);
+    let evictions: usize = report
+        .worker_stats
+        .iter()
+        .map(|s| s.evictions + s.idle_evictions)
+        .sum();
+    let listed: usize =
+        report.evicted.iter().map(|w| w.len()).sum::<usize>()
+            + report.idle_evicted.iter().map(|w| w.len()).sum::<usize>();
+    assert!(evictions > 0, "budget of 2 sessions must evict under 16 streams");
+    assert_eq!(count(&report.trace_events, EventKind::Evict), evictions);
+    assert_eq!(evictions, listed);
+}
